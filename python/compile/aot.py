@@ -1,0 +1,135 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all shape-monomorphic, lowered with return_tuple=True):
+
+  fp_mlp_b{B}.hlo.txt        — FP reference MLP forward
+  xint_mlp_b{B}_w{X}t{T}.hlo.txt — layer-sync expanded MLP (Eq. 4)
+  basis_mlp_b{B}_w{X}.hlo.txt    — one Theorem-2 basis slice
+  quantize_act_b{B}_x{X}.hlo.txt — activation quantizer
+  xint_gemm_k{K}t{T}.hlo.txt     — standalone expanded GEMM (perf bench)
+
+Run: `python -m compile.aot --out-dir ../artifacts` (from python/).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import quantize, xint_matmul
+
+# canonical MLP geometry shared with the Rust coordinator (runtime reads
+# the manifest, so changing these here propagates)
+DIN, HIDDEN, CLASSES = 256, 64, 10
+BATCHES = (1, 8, 32)
+BITS = 4
+W_TERMS = 2
+A_TERMS = 3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text)} chars)")
+    return name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    f32 = jnp.float32
+    manifest = {
+        "din": DIN,
+        "hidden": HIDDEN,
+        "classes": CLASSES,
+        "bits": BITS,
+        "w_terms": W_TERMS,
+        "a_terms": A_TERMS,
+        "batches": list(BATCHES),
+        "artifacts": {},
+    }
+
+    for b in BATCHES:
+        # FP reference
+        x = jax.ShapeDtypeStruct((b, DIN), f32)
+        w1 = jax.ShapeDtypeStruct((HIDDEN, DIN), f32)
+        b1 = jax.ShapeDtypeStruct((HIDDEN,), f32)
+        w2 = jax.ShapeDtypeStruct((CLASSES, HIDDEN), f32)
+        b2 = jax.ShapeDtypeStruct((CLASSES,), f32)
+        lowered = lower_fn(model.fp_mlp, (x, w1, b1, w2, b2))
+        manifest["artifacts"][f"fp_mlp_b{b}"] = write(
+            args.out_dir, f"fp_mlp_b{b}.hlo.txt", to_hlo_text(lowered)
+        )
+
+        # layer-sync expanded MLP
+        shapes = model.mlp_shapes(b, DIN, HIDDEN, CLASSES, W_TERMS)
+        fn = functools.partial(model.xint_mlp, bits=BITS, a_terms=A_TERMS)
+        lowered = lower_fn(fn, tuple(shapes.values()))
+        manifest["artifacts"][f"xint_mlp_b{b}"] = write(
+            args.out_dir, f"xint_mlp_b{b}_w{BITS}t{A_TERMS}.hlo.txt", to_hlo_text(lowered)
+        )
+
+        # one basis slice (single plane per layer)
+        basis_shapes = model.mlp_shapes(b, DIN, HIDDEN, CLASSES, 1)
+        fn = functools.partial(model.basis_mlp, bits=BITS)
+        lowered = lower_fn(fn, tuple(basis_shapes.values()))
+        manifest["artifacts"][f"basis_mlp_b{b}"] = write(
+            args.out_dir, f"basis_mlp_b{b}_w{BITS}.hlo.txt", to_hlo_text(lowered)
+        )
+
+        # activation quantizer
+        fn = functools.partial(quantize.quantize_act, bits=8)
+        lowered = lower_fn(
+            fn, (jax.ShapeDtypeStruct((b, DIN), f32), jax.ShapeDtypeStruct((1,), f32))
+        )
+        manifest["artifacts"][f"quantize_act_b{b}"] = write(
+            args.out_dir, f"quantize_act_b{b}_x8.hlo.txt", to_hlo_text(lowered)
+        )
+
+    # standalone expanded GEMM for the perf bench (k=2, t=3, 64×256×64)
+    k, t, n, o, kd = W_TERMS, A_TERMS, 64, 64, 256
+    lowered = lower_fn(
+        xint_matmul.xint_gemm,
+        (
+            jax.ShapeDtypeStruct((k, o, kd), f32),
+            jax.ShapeDtypeStruct((k,), f32),
+            jax.ShapeDtypeStruct((t, n, kd), f32),
+            jax.ShapeDtypeStruct((t,), f32),
+        ),
+    )
+    manifest["artifacts"]["xint_gemm"] = write(
+        args.out_dir, f"xint_gemm_k{k}t{t}.hlo.txt", to_hlo_text(lowered)
+    )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

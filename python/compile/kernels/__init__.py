@@ -1,0 +1,1 @@
+from . import expand, quantize, ref, xint_matmul  # noqa: F401

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: residual series decomposition (Theorem 1).
+
+The §4 parallel closed form makes every plane independent given the
+scales, so the kernel parallelizes over the *term* axis: grid step `k`
+computes `plane_k = round(M/s_k) - 2^X · round(M/s_{k-1})` for its VMEM
+tile. On TPU each grid step is a VPU-only elementwise pass over a
+(block_rows × 128) tile; no MXU involvement.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see DESIGN.md §6); the BlockSpec structure is still the
+TPU schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expand_kernel(m_ref, scales_ref, out_ref, *, levels: float):
+    """One (term, row-tile) grid step."""
+    k = pl.program_id(0)
+    m = m_ref[...]
+    s_k = scales_ref[k]
+    s_prev = jnp.where(k > 0, scales_ref[jnp.maximum(k - 1, 0)], 0.0)
+    q_k = jnp.where(s_k > 0, jnp.round(m / jnp.maximum(s_k, 1e-30)), 0.0)
+    q_prev = jnp.where(
+        s_prev > 0, jnp.round(m / jnp.maximum(s_prev, 1e-30)), 0.0
+    )
+    out_ref[0, ...] = q_k - levels * q_prev
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "terms", "block_rows"))
+def series_expand(m, scales, *, bits: int, terms: int, block_rows: int = 128):
+    """Decompose `m` (R, C) into `terms` INT(bits) planes given the
+    precomputed scale schedule (terms,). Returns planes (terms, R, C).
+
+    VMEM budget per step: one (block_rows, C) input tile + one output
+    tile ≈ 2·block_rows·C·4 B — 128×512 f32 tiles = 512 KiB, well under
+    the 16 MiB VMEM envelope.
+    """
+    r, c = m.shape
+    levels = float(2**bits)
+    rows = min(block_rows, r)
+    grid = (terms, pl.cdiv(r, rows))
+    return pl.pallas_call(
+        functools.partial(_expand_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, c), lambda k, i: (i, 0)),
+            pl.BlockSpec((terms,), lambda k, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, c), lambda k, i: (k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((terms, r, c), m.dtype),
+        interpret=True,
+    )(m, scales)
+
+
+def expand_with_scales(m, *, bits: int, terms: int):
+    """Convenience: compute the scale schedule then run the kernel."""
+    from . import ref
+
+    max_abs = jnp.max(jnp.abs(m))
+    scales = jnp.array(ref.series_scales(max_abs, bits, terms), dtype=m.dtype)
+    planes = series_expand(m, scales, bits=bits, terms=terms)
+    return planes, scales

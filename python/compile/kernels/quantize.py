@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: one-step activation fake-quantization.
+
+Serve-time activation quantization for the plain-PTQ path and the 8-bit
+first/last layers. Scalar scale comes in as an operand so the compiled
+artifact is reusable across batches (scales are recomputed host-side or
+by the expand kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, scale_ref, out_ref, *, half: float):
+    x = x_ref[...]
+    s = jnp.maximum(scale_ref[0], 1e-30)
+    q = jnp.clip(jnp.round(x / s), -half, half - 1.0)
+    out_ref[...] = q * s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows"))
+def quantize_act(x, scale, *, bits: int, block_rows: int = 128):
+    """Fake-quantize x (R, C) at `bits` with a scalar scale (1,)."""
+    r, c = x.shape
+    rows = min(block_rows, r)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, half=float(2 ** (bits - 1))),
+        grid=(pl.cdiv(r, rows),),
+        in_specs=[
+            pl.BlockSpec((rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=True,
+    )(x, scale)
+
+
+def quantize_act_auto(x, *, bits: int):
+    """Compute the symmetric scale then quantize (matches ref oracle)."""
+    half = 2.0 ** (bits - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / half
+    return quantize_act(x, scale[None], bits=bits)

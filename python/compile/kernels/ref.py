@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel — the pytest ground truth.
+
+These implement Theorem 1 (residual series expansion), Eq. 3 (expanded
+GEMM) and the activation quantizer exactly as the paper states them, with
+no kernel-level tiling tricks, so the Pallas implementations can be
+validated by `assert_allclose`.
+"""
+
+import jax.numpy as jnp
+
+
+def series_scales(max_abs, bits: int, terms: int):
+    """Geometric scale schedule: scale_1 = max|M| / 2^{X-1},
+    scale_{i+1} = scale_i / 2^X (Theorem 1's scale law)."""
+    half = 2.0 ** (bits - 1)
+    levels = 2.0**bits
+    s1 = max_abs / half
+    return [s1 / levels**i for i in range(terms)]
+
+
+def series_expand_ref(m, bits: int, terms: int):
+    """Reference Theorem-1 expansion (non-saturating symmetric,
+    per-tensor). Returns (planes[terms, ...], scales[terms]).
+
+    Uses the §4 parallel closed form
+      plane_k = round(m / s_k) - 2^X * round(m / s_{k-1}).
+    """
+    max_abs = jnp.max(jnp.abs(m))
+    scales = series_scales(max_abs, bits, terms)
+    levels = 2.0**bits
+    planes = []
+    prev_q = jnp.zeros_like(m)
+    for s in scales:
+        q = jnp.where(s > 0, jnp.round(m / jnp.maximum(s, 1e-30)), 0.0)
+        planes.append(q - levels * prev_q)
+        prev_q = q
+    return jnp.stack(planes), jnp.array(scales, dtype=m.dtype)
+
+
+def series_reconstruct_ref(planes, scales):
+    """Σ scale_i · plane_i."""
+    return jnp.tensordot(scales, planes, axes=1)
+
+
+def xint_gemm_ref(w_planes, w_scales, a_planes, a_scales):
+    """Eq. 3: WA = Σ_{i,j} s_wi s_aj W̃_i Ã_j for
+    w_planes (k, O, K), a_planes (t, N, K) → (N, O).
+
+    The reference evaluates the k·t grid of integer matmuls explicitly.
+    """
+    k = w_planes.shape[0]
+    t = a_planes.shape[0]
+    n, o = a_planes.shape[1], w_planes.shape[1]
+    out = jnp.zeros((n, o), dtype=jnp.float32)
+    for i in range(k):
+        for j in range(t):
+            out = out + w_scales[i] * a_scales[j] * (a_planes[j] @ w_planes[i].T)
+    return out
+
+
+def quantize_act_ref(x, bits: int):
+    """One-step symmetric fake quantization (the runtime activation path
+    of plain PTQ; the serve-time quantizer artifact mirrors this)."""
+    half = 2.0 ** (bits - 1)
+    max_abs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    scale = max_abs / half
+    q = jnp.clip(jnp.round(x / scale), -half, half - 1)
+    return q * scale
+
+
+def xint_linear_ref(x, w, bits: int, w_terms: int, a_terms: int):
+    """Full expanded linear layer y = x Wᵀ via Theorem 1 + Eq. 3."""
+    w_planes, w_scales = series_expand_ref(w, bits, w_terms)
+    a_planes, a_scales = series_expand_ref(x, bits, a_terms)
+    return xint_gemm_ref(w_planes, w_scales, a_planes, a_scales)

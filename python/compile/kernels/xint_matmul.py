@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: the stacked xINT GEMM (Eq. 3).
+
+`WA = Σ_{i,j} s_wi s_aj W̃_i Ã_j` re-associated for the MXU: the (i, j)
+term grid is the two *outermost* Pallas grid axes, so each grid step
+performs exactly one (bm, bk)×(bk, bn) tile matmul with a scalar scale
+and accumulates into a VMEM scratch accumulator — the TPU analogue of
+dispatching k·t independent low-bit matmuls to INT units (DESIGN.md §3,
+Hardware-Adaptation).
+
+Basis planes are integer-valued and bounded by 2^{X-1}, hence exactly
+representable in bf16 for X ≤ 8; on a real TPU the same schedule feeds
+the MXU int8 path. Under interpret=True we keep f32 for CPU numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(w_ref, a_ref, ws_ref, as_ref, out_ref, *, k_terms, t_terms):
+    """Grid: (i=w_term, j=a_term). One scaled tile matmul per step."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # zero the accumulator on the first term pair
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0]  # (O, K) plane i
+    a = a_ref[0]  # (N, K) plane j
+    scale = ws_ref[i] * as_ref[j]
+    # MXU-shaped contraction with f32 accumulation
+    out_ref[...] += scale * jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def xint_gemm(w_planes, w_scales, a_planes, a_scales):
+    """Expanded GEMM: w_planes (k, O, K), a_planes (t, N, K) → (N, O).
+
+    The full plane pair is one VMEM tile here (models are small); for
+    larger shapes the BlockSpecs gain an inner (m, n, k) tiling — the
+    grid order keeps the accumulator resident either way.
+    """
+    k_terms, o, kdim = w_planes.shape
+    t_terms, n, _ = a_planes.shape
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_terms=k_terms, t_terms=t_terms),
+        grid=(k_terms, t_terms),
+        in_specs=[
+            pl.BlockSpec((1, o, kdim), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n, kdim), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((k_terms,), lambda i, j: (0,)),
+            pl.BlockSpec((t_terms,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, o), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, o), jnp.float32),
+        interpret=True,
+    )(w_planes, a_planes, w_scales, a_scales)
+
+
+def _nsy_kernel(m_ref, out_ref):
+    """Rank-1 M_nsy product: row sums (the §4 `(M·1ᵀ)·1` trick, O(n²))."""
+    out_ref[...] = jnp.sum(m_ref[...], axis=1, keepdims=True)
+
+
+@jax.jit
+def nsy_rank1(m):
+    """Row-sum kernel used by the asymmetric zero-point terms. VPU-only."""
+    r, c = m.shape
+    return pl.pallas_call(
+        _nsy_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((r, c), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((r, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), m.dtype),
+        interpret=True,
+    )(m)

@@ -1,0 +1,77 @@
+"""L2: JAX model graphs built on the L1 kernels.
+
+Two families are lowered to HLO artifacts:
+
+* `fp_mlp` / `xint_mlp` — a 2-layer MLP classifier whose hidden matmuls
+  run through the Pallas xINT GEMM (Eq. 3/4). Weights arrive pre-expanded
+  (planes + scales) from the Rust coordinator; activations are expanded
+  in-graph by the Pallas expand kernel.
+* `basis_mlp` — ONE basis-model slice `model_{i,j}` of Theorem 2: same
+  topology, but the weight input is a single INT plane and the activation
+  expansion index is baked in. The Rust coordinator launches t·k of these
+  in parallel and AbelianAdd-reduces their outputs.
+
+All functions are shape-monomorphic at lowering time (AOT), so `aot.py`
+exports one artifact per (batch, config) variant.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import expand, ref, xint_matmul
+
+
+def fp_mlp(x, w1, b1, w2, b2):
+    """Reference FP MLP: x (N, D) → logits (N, C)."""
+    h = jnp.maximum(x @ w1.T + b1, 0.0)
+    return (h @ w2.T + b2,)
+
+
+def _xint_linear(x, w_planes, w_scales, *, bits: int, a_terms: int):
+    """Expanded linear layer: activations expanded in-graph (Pallas),
+    weights pre-expanded host-side."""
+    a_planes, a_scales = expand.expand_with_scales(x, bits=bits, terms=a_terms)
+    return xint_matmul.xint_gemm(w_planes, w_scales, a_planes, a_scales)
+
+
+def xint_mlp(x, w1_planes, w1_scales, b1, w2_planes, w2_scales, b2, *, bits: int, a_terms: int):
+    """Series-expanded MLP (layer-sync mode, Eq. 4 per layer)."""
+    h = _xint_linear(x, w1_planes, w1_scales, bits=bits, a_terms=a_terms)
+    h = jnp.maximum(h + b1, 0.0)
+    y = _xint_linear(h, w2_planes, w2_scales, bits=bits, a_terms=a_terms)
+    return (y + b2,)
+
+
+def basis_mlp(x, w1_plane, w1_scale, b1, w2_plane, w2_scale, b2, *, bits: int):
+    """One Theorem-2 basis model `model_i`: every layer uses a single INT
+    weight plane (term i); activations quantized at one step in-graph.
+    Non-matmul pieces (bias, ReLU) are carried whole — the coordinator
+    divides them by the basis count via AbelianMul before reduction.
+    """
+    a_planes, a_scales = expand.expand_with_scales(x, bits=bits, terms=1)
+    h = xint_matmul.xint_gemm(w1_plane, w1_scale, a_planes, a_scales)
+    h = jnp.maximum(h + b1, 0.0)
+    a2_planes, a2_scales = expand.expand_with_scales(h, bits=bits, terms=1)
+    y = xint_matmul.xint_gemm(w2_plane, w2_scale, a2_planes, a2_scales)
+    return (y + b2,)
+
+
+def expand_weights_host(w, *, bits: int, terms: int):
+    """Host-side Theorem-1 weight expansion used when exporting weights
+    alongside artifacts (mirrors the Rust ExpandedWeight)."""
+    planes, scales = ref.series_expand_ref(jnp.asarray(w), bits, terms)
+    return planes, scales
+
+
+def mlp_shapes(batch: int, din: int, hidden: int, classes: int, w_terms: int):
+    """ShapeDtypeStructs for AOT lowering of the xint_mlp entry point."""
+    f32 = jnp.float32
+    return dict(
+        x=jax.ShapeDtypeStruct((batch, din), f32),
+        w1_planes=jax.ShapeDtypeStruct((w_terms, hidden, din), f32),
+        w1_scales=jax.ShapeDtypeStruct((w_terms,), f32),
+        b1=jax.ShapeDtypeStruct((hidden,), f32),
+        w2_planes=jax.ShapeDtypeStruct((w_terms, classes, hidden), f32),
+        w2_scales=jax.ShapeDtypeStruct((w_terms,), f32),
+        b2=jax.ShapeDtypeStruct((classes,), f32),
+    )

@@ -1,0 +1,131 @@
+"""Property tests for the series-expansion algebra (DESIGN.md §7
+invariants, python side) — hypothesis sweeps over shapes, bit-widths,
+scales and term counts.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+SETTLE = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+@settings(**SETTLE)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    terms=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+    magnitude=st.sampled_from([1e-2, 1.0, 1e2]),
+)
+def test_invariant1_reconstruction_bound(bits, terms, seed, magnitude):
+    """‖M − Σ sᵢM̃ᵢ‖∞ ≤ s_n/2 (+ float floor)."""
+    m = rand((8, 16), seed, magnitude)
+    planes, scales = ref.series_expand_ref(m, bits, terms)
+    recon = ref.series_reconstruct_ref(planes, scales)
+    err = float(jnp.max(jnp.abs(m - recon)))
+    bound = float(scales[-1]) / 2 + 16 * np.finfo(np.float32).eps * magnitude
+    assert err <= bound, (err, bound)
+
+
+@settings(**SETTLE)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_invariant2_scale_law_powers_of_two(bits, seed):
+    """sᵢ = 2^X · sᵢ₊₁ exactly."""
+    m = rand((4, 4), seed)
+    _, scales = ref.series_expand_ref(m, bits, 4)
+    s = np.asarray(scales, dtype=np.float64)
+    for i in range(1, len(s)):
+        assert s[i - 1] == s[i] * 2**bits
+
+
+@settings(**SETTLE)
+@given(
+    k=st.integers(1, 3),
+    t=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_invariant3_gemm_residual_bound(k, t, seed):
+    """Expanded GEMM error ≤ analytic propagation of the two residuals."""
+    bits = 4
+    x = rand((4, 16), seed)
+    w = rand((6, 16), seed + 1, 0.3)
+    wp, ws = ref.series_expand_ref(w, bits, k)
+    ap, as_ = ref.series_expand_ref(x, bits, t)
+    y = ref.xint_gemm_ref(wp, ws, ap, as_)
+    fp = x @ w.T
+    # |x wᵀ − x̂ ŵᵀ| ≤ |x||w−ŵ| + |w̃||x−x̂| elementwise bound summed over K
+    rw = float(ws[-1]) / 2
+    ra = float(as_[-1]) / 2
+    kdim = 16
+    bound = kdim * (
+        float(jnp.max(jnp.abs(x))) * rw
+        + (float(jnp.max(jnp.abs(w))) + rw) * ra
+    ) + 1e-4
+    err = float(jnp.max(jnp.abs(fp - y)))
+    assert err <= bound, (err, bound)
+
+
+@settings(**SETTLE)
+@given(seed=st.integers(0, 2**16))
+def test_invariant4_additivity_of_expansions(seed):
+    """Eq. 5/6 at the tensor level: recon(A) + recon(B) == recon over the
+    sum when expanded jointly to convergence (linearity of the limit)."""
+    a = rand((4, 8), seed)
+    b = rand((4, 8), seed + 1)
+    pa, sa = ref.series_expand_ref(a, 8, 4)
+    pb, sb = ref.series_expand_ref(b, 8, 4)
+    lhs = ref.series_reconstruct_ref(pa, sa) + ref.series_reconstruct_ref(pb, sb)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(a + b), atol=1e-4)
+
+
+@settings(**SETTLE)
+@given(bits=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_invariant5_exponential_rate(bits, seed):
+    """Residual after n terms ≤ scale₁ / 2^{X(n−1)} / 2."""
+    m = rand((8, 8), seed)
+    for n in (1, 2, 3):
+        planes, scales = ref.series_expand_ref(m, bits, n)
+        err = float(jnp.max(jnp.abs(m - ref.series_reconstruct_ref(planes, scales))))
+        analytic = float(scales[0]) / 2 ** (bits * (n - 1)) / 2 + 1e-6
+        assert err <= analytic, (n, err, analytic)
+
+
+@settings(**SETTLE)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([2, 4, 8]))
+def test_invariant6_parallel_equals_sequential(seed, bits):
+    """§4 closed form == greedy residual recursion."""
+    m = rand((64,), seed)
+    planes, scales = ref.series_expand_ref(m, bits, 3)
+    # In exact arithmetic the closed form equals the greedy recursion
+    # elementwise. In f32 the closed form's quotient m/s_i grows as
+    # 2^{X·i} and exhausts the mantissa (8-bit × 3 terms = 24 bits), and a
+    # rounding tie at term i shifts term i+1 by a full 2^X — but the sum
+    # TELESCOPES identically either way. So the robust statement of the
+    # invariant is: the greedy recursion's reconstruction and the closed
+    # form's reconstruction agree within the Theorem-1 bound.
+    resid = np.asarray(m, dtype=np.float32)
+    seq_recon = np.zeros_like(resid)
+    for i in range(3):
+        s = np.float32(scales[i])
+        q = np.round(resid / s)
+        seq_recon = seq_recon + q * s
+        resid = (resid - q * s).astype(np.float32)
+    closed_recon = np.asarray(ref.series_reconstruct_ref(planes, scales))
+    bound = float(scales[-1]) + 32 * np.finfo(np.float32).eps * float(jnp.max(jnp.abs(m)))
+    assert np.max(np.abs(seq_recon - closed_recon)) <= bound
+    # and for shallow quotients (bits ≤ 4) the planes agree elementwise ±1
+    if bits <= 4:
+        resid2 = np.asarray(m, dtype=np.float32)
+        for i in range(3):
+            s = np.float32(scales[i])
+            q = np.round(resid2 / s)
+            assert np.max(np.abs(q - np.asarray(planes[i]))) <= 1.0
+            resid2 = (resid2 - q * s).astype(np.float32)

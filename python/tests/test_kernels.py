@@ -1,0 +1,167 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/bit-widths/term counts; every property pins the
+kernel to the `ref.py` oracle via assert_allclose and checks the paper's
+invariants (integer planes, scale law, exponential convergence).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import expand, quantize, ref, xint_matmul
+
+SETTLE = dict(max_examples=20, deadline=None)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- expand
+
+
+@settings(**SETTLE)
+@given(
+    rows=st.integers(1, 48),
+    cols=st.integers(1, 64),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    terms=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_expand_kernel_matches_ref(rows, cols, bits, terms, seed):
+    m = rand((rows, cols), seed)
+    planes, scales = expand.expand_with_scales(m, bits=bits, terms=terms)
+    ref_planes, ref_scales = ref.series_expand_ref(m, bits, terms)
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(ref_scales), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(planes), np.asarray(ref_planes), atol=0)
+
+
+@settings(**SETTLE)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    terms=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_expand_planes_are_bounded_integers(bits, terms, seed):
+    m = rand((16, 32), seed, scale=3.0)
+    planes, _ = expand.expand_with_scales(m, bits=bits, terms=terms)
+    p = np.asarray(planes)
+    assert np.all(p == np.round(p)), "planes must be integer-valued"
+    assert np.max(np.abs(p)) <= 2 ** (bits - 1), "planes exceed INT(X) range"
+
+
+@settings(**SETTLE)
+@given(bits=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_expand_reconstruction_converges_exponentially(bits, seed):
+    m = rand((8, 24), seed)
+    errs = []
+    for terms in range(1, 5):
+        planes, scales = expand.expand_with_scales(m, bits=bits, terms=terms)
+        recon = ref.series_reconstruct_ref(planes, scales)
+        errs.append(float(jnp.max(jnp.abs(m - recon))))
+    for a, b in zip(errs, errs[1:]):
+        # each INT(X) term shrinks the residual by ≥ 2^{X-1}
+        assert b <= a / 2 ** (bits - 1) + 1e-7, errs
+
+
+def test_expand_scale_law_is_exact():
+    m = rand((4, 4), 7)
+    _, scales = expand.expand_with_scales(m, bits=4, terms=4)
+    s = np.asarray(scales)
+    for i in range(1, len(s)):
+        np.testing.assert_allclose(s[i - 1], s[i] * 16.0, rtol=1e-6)
+
+
+def test_expand_zero_tensor():
+    m = jnp.zeros((4, 8))
+    planes, scales = expand.expand_with_scales(m, bits=4, terms=3)
+    assert np.all(np.asarray(planes) == 0)
+    assert np.all(np.asarray(scales) == 0)
+
+
+# ------------------------------------------------------------- xint gemm
+
+
+@settings(**SETTLE)
+@given(
+    k=st.integers(1, 3),
+    t=st.integers(1, 4),
+    n=st.integers(1, 16),
+    o=st.integers(1, 16),
+    kd=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_kernel_matches_ref(k, t, n, o, kd, seed):
+    rng = np.random.default_rng(seed)
+    w_planes = jnp.asarray(rng.integers(-8, 9, (k, o, kd)).astype(np.float32))
+    a_planes = jnp.asarray(rng.integers(-8, 9, (t, n, kd)).astype(np.float32))
+    w_scales = jnp.asarray(rng.uniform(0.01, 1.0, (k,)).astype(np.float32))
+    a_scales = jnp.asarray(rng.uniform(0.01, 1.0, (t,)).astype(np.float32))
+    got = xint_matmul.xint_gemm(w_planes, w_scales, a_planes, a_scales)
+    want = ref.xint_gemm_ref(w_planes, w_scales, a_planes, a_scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-5)
+
+
+@settings(**SETTLE)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 8]))
+def test_expanded_linear_converges_to_fp(seed, bits):
+    x = rand((8, 32), seed)
+    w = rand((12, 32), seed + 1, scale=0.3)
+    fp = np.asarray(x @ w.T)
+    errs = []
+    for terms in (1, 3):
+        y = ref.xint_linear_ref(x, w, bits, 2, terms)
+        errs.append(np.linalg.norm(fp - np.asarray(y)) / np.linalg.norm(fp))
+    assert errs[1] < errs[0], errs
+
+
+def test_nsy_rank1_is_row_sum():
+    m = rand((8, 16), 3)
+    got = xint_matmul.nsy_rank1(m)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(jnp.sum(m, axis=1, keepdims=True)), rtol=1e-6
+    )
+
+
+# ------------------------------------------------------------- quantize
+
+
+@settings(**SETTLE)
+@given(
+    rows=st.integers(1, 32),
+    cols=st.integers(1, 64),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_quantize_kernel_matches_ref(rows, cols, bits, seed):
+    x = rand((rows, cols), seed, scale=2.0)
+    got = quantize.quantize_act_auto(x, bits=bits)
+    want = ref.quantize_act_ref(x, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_quantize_error_bounded_by_step():
+    x = rand((16, 16), 5, scale=1.5)
+    bits = 4
+    y = quantize.quantize_act_auto(x, bits=bits)
+    step = float(jnp.max(jnp.abs(x))) / 2 ** (bits - 1)
+    # one extra step of slack for the asymmetric clamp at +half-1
+    assert float(jnp.max(jnp.abs(x - y))) <= step * 1.01
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantize_output_on_grid(bits):
+    # exact idempotence doesn't hold (the +half-1 clamp can shrink the max
+    # and thus the rescale), but outputs must lie on the scale grid
+    x = rand((8, 8), 9)
+    y = np.asarray(quantize.quantize_act_auto(x, bits=bits))
+    step = float(jnp.max(jnp.abs(x))) / 2 ** (bits - 1)
+    k = y / step
+    np.testing.assert_allclose(k, np.round(k), atol=1e-4)
+    # and a second pass moves values by at most one (new) step
+    y2 = np.asarray(quantize.quantize_act_auto(jnp.asarray(y), bits=bits))
+    assert np.max(np.abs(y - y2)) <= step * 1.01

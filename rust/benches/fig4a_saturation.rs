@@ -1,0 +1,50 @@
+//! Figure 4a — saturation ablation: Laplace-clipped vs non-saturating
+//! basis quantizers across four models.
+//!
+//! Substitution note: at W4A4 the synthetic substrate saturates (both
+//! variants reach FP), so the W2A2 panel on the harder dataset carries
+//! the discriminative comparison — same ablation as the paper's.
+//!
+//!     cargo bench --bench fig4a_saturation
+
+use fp_xint::bench_support as bs;
+use fp_xint::datasets::accuracy;
+use fp_xint::models::quantized;
+use fp_xint::util::{logger, Table};
+use fp_xint::xint::layer::LayerPolicy;
+use fp_xint::xint::quantizer::Clip;
+
+fn main() {
+    logger::init(false);
+    let suite = bs::suite();
+    let picks = [suite[0], suite[2], suite[4], suite[5]];
+    let data = bs::bench_data_hard();
+    let val = data.batch(512, 2);
+
+    for (w, a) in [(4u32, 4u32), (2, 2)] {
+        let mut t = Table::new(
+            &format!("Figure 4a — saturation ablation (W{w}A{a}, hard dataset)"),
+            &["Model", "no clip (non-sat)", "Laplace clip (sat)", "Full Prec."],
+        );
+        for (paper, tag, build) in picks {
+            let (m, fp) = bs::trained_hard(tag, build);
+            let acc_of = |clip: Clip| {
+                let q = quantized::quantize_model(
+                    &m,
+                    LayerPolicy::new(w, a).with_clip(clip).with_terms(2, 2),
+                );
+                accuracy(&q.forward(&val.x), &val.y) * 100.0
+            };
+            t.row_str(&[
+                paper,
+                &bs::pct(acc_of(Clip::None)),
+                &bs::pct(acc_of(Clip::Laplace)),
+                &bs::pct(fp),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    println!("expected shape (paper): Laplace clip ≥ no-clip; both near FP at W4A4.");
+    bs::shape_note();
+}

@@ -1,0 +1,125 @@
+//! Perf — the expanded GEMM hot path (§5.2 speed discussion + §Perf).
+//!
+//! Measures: FP32 GEMM vs the integer expanded GEMM (i32 accumulation)
+//! at matched arithmetic, the k·t cost scaling of Eq. 3, the rank-1
+//! M_nsy fast path vs dense, and (when artifacts exist) the PJRT-compiled
+//! Pallas xint_gemm kernel.
+//!
+//!     cargo bench --bench perf_gemm
+
+use fp_xint::tensor::{matmul_a_bt, IntTensor, Rng, Tensor};
+use fp_xint::util::{logger, BenchTimer, Table};
+use fp_xint::xint::gemm::{int_gemm_a_bt, xint_linear_forward, ExpandedWeight};
+use fp_xint::xint::{BitSpec, ExpandConfig};
+
+fn gflops(m: usize, n: usize, k: usize, secs: f64) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64 / secs / 1e9
+}
+
+fn main() {
+    logger::init(false);
+    let timer = BenchTimer::new(3, 10);
+    let mut rng = Rng::seed(404);
+
+    // --- FP32 vs INT GEMM at matched shape
+    let mut t = Table::new(
+        "perf — GEMM kernels (single thread)",
+        &["shape (m×n×k)", "kernel", "time (ms)", "GFLOP/s", "vs FP32"],
+    );
+    for &(m, n, k) in &[(64usize, 64usize, 256usize), (128, 128, 512), (256, 256, 1024)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let fp = timer.run(|| matmul_a_bt(&a, &b));
+        let ai = IntTensor::from_vec(&[m, k], (0..m * k).map(|_| rng.below(15) as i32 - 7).collect());
+        let bi = IntTensor::from_vec(&[n, k], (0..n * k).map(|_| rng.below(15) as i32 - 7).collect());
+        let int = timer.run(|| int_gemm_a_bt(&ai, &bi));
+        let shape = format!("{m}×{n}×{k}");
+        t.row_str(&[
+            &shape,
+            "fp32",
+            &format!("{:.3}", fp.mean * 1e3),
+            &format!("{:.2}", gflops(m, n, k, fp.mean)),
+            "1.00×",
+        ]);
+        t.row_str(&[
+            &shape,
+            "int32-acc",
+            &format!("{:.3}", int.mean * 1e3),
+            &format!("{:.2}", gflops(m, n, k, int.mean)),
+            &format!("{:.2}×", fp.mean / int.mean),
+        ]);
+    }
+    t.print();
+
+    // --- Eq. 3 cost scaling: expanded forward vs k·t
+    let mut t2 = Table::new(
+        "perf — expanded linear forward (Eq. 3), 64×256 → 64",
+        &["(k, t)", "time (ms)", "per-term (ms)", "vs FP32 linear"],
+    );
+    let x = Tensor::randn(&[64, 256], 1.0, &mut rng);
+    let w_raw = Tensor::randn(&[64, 256], 0.3, &mut rng);
+    let fp = timer.run(|| matmul_a_bt(&x, &w_raw));
+    for &(k, tt) in &[(1usize, 1usize), (2, 2), (2, 4), (3, 4)] {
+        let w = ExpandedWeight::new(&w_raw, &ExpandConfig::weights(BitSpec::int(4), k));
+        let acfg = ExpandConfig::activations(BitSpec::int(4), tt);
+        let s = timer.run(|| xint_linear_forward(&x, &w, &acfg));
+        t2.row_str(&[
+            &format!("({k}, {tt})"),
+            &format!("{:.3}", s.mean * 1e3),
+            &format!("{:.3}", s.mean * 1e3 / (k * tt) as f64),
+            &format!("{:.2}×", s.mean / fp.mean),
+        ]);
+    }
+    t2.print();
+
+    // --- rank-1 M_nsy path vs dense multiplication (the §4 O(n²) claim)
+    let mut t3 = Table::new(
+        "perf — M_nsy rank-1 trick (row sums) vs dense ones-matmul",
+        &["n", "dense (ms)", "rank-1 (ms)", "speedup"],
+    );
+    for &n in &[128usize, 256, 512] {
+        let m = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let ones = Tensor::full(&[n, n], 1.0);
+        let dense = timer.run(|| matmul_a_bt(&m, &ones));
+        let rank1 = timer.run(|| {
+            // (M·1ᵀ)·1: row sums broadcast — O(n²)
+            let mut sums = vec![0.0f32; n];
+            for i in 0..n {
+                sums[i] = m.row(i).iter().sum();
+            }
+            sums
+        });
+        t3.row_str(&[
+            &n.to_string(),
+            &format!("{:.3}", dense.mean * 1e3),
+            &format!("{:.4}", rank1.mean * 1e3),
+            &format!("{:.0}×", dense.mean / rank1.mean),
+        ]);
+    }
+    t3.print();
+
+    // --- PJRT Pallas kernel (artifact) timing, if built
+    let dir = fp_xint::runtime::Runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = fp_xint::runtime::Runtime::cpu(&dir).expect("runtime");
+        if let Ok(exec) = rt.load_key("xint_gemm") {
+            // shapes fixed at lowering: k=2, t=3, (64,256)x(64,256)
+            let wp = Tensor::randn(&[2, 64, 256], 1.0, &mut rng).map(|v| v.round());
+            let ws = Tensor::vec1(&[0.1, 0.00625]);
+            let ap = Tensor::randn(&[3, 64, 256], 1.0, &mut rng).map(|v| v.round());
+            let as_ = Tensor::vec1(&[0.2, 0.0125, 0.00078125]);
+            let s = timer.run(|| exec.run1(&[wp.clone(), ws.clone(), ap.clone(), as_.clone()]).unwrap());
+            println!(
+                "PJRT pallas xint_gemm (k=2,t=3, 64×64×256): {:.3} ms/call ({:.2} GFLOP/s eff)",
+                s.mean * 1e3,
+                gflops(64, 64, 256, s.mean) * 6.0
+            );
+        }
+    } else {
+        println!("(run `make artifacts` to include the PJRT pallas kernel timing)");
+    }
+    println!(
+        "\ntarget (§Perf): int32-acc ≥ FP32 at matched shape (stand-in for the\n\
+         paper's 4× INT8 claim); expanded (k,t) cost ≈ k·t × single-term cost."
+    );
+}

@@ -1,0 +1,52 @@
+//! Table 1 — top-1 accuracy of the CNN suite under W4A4 / W2A4 / W2A2,
+//! ours vs PTQ baselines. Paper reference rows in EXPERIMENTS.md.
+//!
+//!     cargo bench --bench table1_imagenet_acc
+
+use fp_xint::bench_support as bs;
+use fp_xint::util::{logger, Table};
+
+fn main() {
+    logger::init(false);
+    let suite = bs::suite();
+    // train / load every model once
+    let trained: Vec<(&str, fp_xint::models::Model, f64)> = suite
+        .iter()
+        .map(|(paper, tag, build)| {
+            let (m, fp) = bs::trained(tag, *build);
+            (*paper, m, fp)
+        })
+        .collect();
+
+    for (w_bits, a_bits) in [(4u32, 4u32), (2, 4), (2, 2)] {
+        let header: Vec<String> = std::iter::once("Method".to_string())
+            .chain(trained.iter().map(|(n, _, _)| n.to_string()))
+            .collect();
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("Table 1 — Bits W{w_bits}A{a_bits} (top-1 %, synthetic ImageNet stand-in)"),
+            &header_refs,
+        );
+        // Full precision row
+        let mut row = vec!["Full Prec.".to_string()];
+        row.extend(trained.iter().map(|(_, _, fp)| bs::pct(*fp)));
+        t.row(&row);
+        // Baselines
+        for method in bs::methods() {
+            let mut row = vec![method.name().to_string()];
+            for (_, m, _) in &trained {
+                row.push(bs::pct(bs::baseline_acc(m, method.as_ref(), w_bits, a_bits)));
+            }
+            t.row(&row);
+        }
+        // Ours
+        let mut row = vec!["Ours (series)".to_string()];
+        for (_, m, _) in &trained {
+            row.push(bs::pct(bs::ours_acc(m, w_bits, a_bits)));
+        }
+        t.row(&row);
+        t.print();
+        println!();
+    }
+    bs::shape_note();
+}

@@ -1,0 +1,65 @@
+//! Table 2 — ResNet-18 stand-in across W3A3 / W2A4 / W4A2 / W8A8 /
+//! W32A32 plus per-setting quantization wall time, vs baselines.
+//!
+//!     cargo bench --bench table2_bit_settings
+
+use fp_xint::bench_support as bs;
+use fp_xint::models::quantized;
+use fp_xint::util::{logger, timer::time_once, Table};
+use fp_xint::xint::layer::LayerPolicy;
+
+fn main() {
+    logger::init(false);
+    let (model, fp_acc) = {
+        let s = bs::suite();
+        let (_, tag, build) = s[0];
+        bs::trained(tag, build)
+    };
+    let settings: [(&str, Option<(u32, u32)>); 5] = [
+        ("W3A3", Some((3, 3))),
+        ("W2A4", Some((2, 4))),
+        ("W4A2", Some((4, 2))),
+        ("W8A8", Some((8, 8))),
+        ("W32A32", None),
+    ];
+
+    let mut t = Table::new(
+        "Table 2 — MiniResNet-A (ResNet-18 stand-in) across bit settings",
+        &["Method", "W3A3", "W2A4", "W4A2", "W8A8", "W32A32"],
+    );
+    // baselines (AdaQuant as the paper's representative row)
+    for method in [&fp_xint::baselines::AdaQuant::default() as &dyn fp_xint::baselines::PtqMethod]
+    {
+        let mut row = vec![method.name().to_string()];
+        for (_, bits) in &settings {
+            match bits {
+                Some((w, a)) => row.push(bs::pct(bs::baseline_acc(&model, method, *w, *a))),
+                None => row.push(bs::pct(fp_acc)),
+            }
+        }
+        t.row(&row);
+    }
+    let mut row = vec!["Ours (series)".to_string()];
+    for (_, bits) in &settings {
+        match bits {
+            Some((w, a)) => row.push(bs::pct(bs::ours_acc(&model, *w, *a))),
+            None => row.push(bs::pct(fp_acc)),
+        }
+    }
+    t.row(&row);
+    // quantization wall time per setting (the paper's Quant-Time row)
+    let mut row = vec!["Quant-Time".to_string()];
+    for (_, bits) in &settings {
+        match bits {
+            Some((w, a)) => {
+                let policy = LayerPolicy::new(*w, *a);
+                let (_, dt) = time_once(|| quantized::quantize_model(&model, policy));
+                row.push(format!("{dt:.3}s"));
+            }
+            None => row.push("-".to_string()),
+        }
+    }
+    t.row(&row);
+    t.print();
+    bs::shape_note();
+}

@@ -1,0 +1,139 @@
+//! Table 3 — method cost comparison: accuracy / model size / training
+//! data / runtime / calibration for the ResNet-18 and MobileNetV2
+//! stand-ins, including the 2/Mix(2/4/8) mixed-precision row.
+//!
+//!     cargo bench --bench table3_method_cost
+
+use fp_xint::baselines::PtqMethod;
+use fp_xint::bench_support as bs;
+use fp_xint::models::{quantized, Model};
+use fp_xint::util::{logger, timer::time_once, Table};
+use fp_xint::xint::layer::LayerPolicy;
+use fp_xint::xint::mixed::{LayerInfo, MixedPlanner, MIX_BITS};
+use fp_xint::xint::model_size_bytes;
+
+fn size_str(bytes: usize) -> String {
+    format!("{:.2}M", bytes as f64 / 1e6)
+}
+
+fn mixed_row(model: &Model, fp_name: &str) -> (f64, usize, f64) {
+    // per-layer sensitivity: whole-model output error when ALL layers run
+    // at each activation width (coarse but monotone proxy shared by all
+    // layers; the planner needs only relative order)
+    let data = bs::bench_data();
+    let calib = data.batch(32, 3).x;
+    let mut folded = model.clone();
+    folded.fold_bn();
+    let y_fp = folded.forward(&calib);
+    let t0 = std::time::Instant::now();
+    let global_err: Vec<f64> = MIX_BITS
+        .iter()
+        .map(|&b| {
+            let q = quantized::quantize_model(model, LayerPolicy::new(2, b).with_terms(1, 1));
+            (y_fp.sub(&q.forward(&calib)).norm() / y_fp.norm()) as f64
+        })
+        .collect();
+    // params per layer via a visit
+    let mut params = Vec::new();
+    let mut m2 = model.clone();
+    m2.fold_bn();
+    collect_layer_params(&m2.layers, &mut params);
+    let infos: Vec<LayerInfo> = params
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| LayerInfo {
+            name: format!("{fp_name}-l{i}"),
+            params: p,
+            sensitivity: global_err.clone(),
+        })
+        .collect();
+    let total_params: usize = params.iter().sum();
+    let budget = model_size_bytes(total_params, 2) + model_size_bytes(total_params, 4) / 2;
+    let plan = MixedPlanner { w_bits: 2, budget_bytes: budget }.plan(&infos);
+    // evaluate at per-model granularity: use the median activation width
+    let mut widths: Vec<u32> = plan.layers.iter().map(|l| l.2).collect();
+    widths.sort();
+    let a_bits = widths[widths.len() / 2];
+    let acc = bs::ours_acc_terms(model, 2, a_bits, 2, 4);
+    let size = plan.size_bytes(&params);
+    let dt = t0.elapsed().as_secs_f64();
+    (acc, size, dt)
+}
+
+fn collect_layer_params(layers: &[fp_xint::models::Layer], out: &mut Vec<usize>) {
+    use fp_xint::models::Layer;
+    for l in layers {
+        match l {
+            Layer::Conv(_) | Layer::Linear(_) => out.push(l.params()),
+            Layer::Residual(m, s) => {
+                collect_layer_params(m, out);
+                collect_layer_params(s, out);
+            }
+            Layer::Branches(bs_) => {
+                for b in bs_ {
+                    collect_layer_params(b, out);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn main() {
+    logger::init(false);
+    let mut blocks: Vec<(&str, &str, fn() -> Model)> = vec![bs::suite()[0]];
+    let mn = bs::mobilenet();
+    blocks.push(mn);
+
+    for (paper_name, tag, build) in blocks {
+        let (model, fp_acc) = bs::trained(tag, build);
+        let params = model.params();
+        let mut t = Table::new(
+            &format!("Table 3 — {paper_name} (FP {:.2}%)", fp_acc),
+            &["Method", "Bits (W/A)", "Accuracy", "Model Size", "Train Data", "Runtime", "Calib/FT"],
+        );
+        // representative baselines with their cost profile
+        let reps: Vec<(Box<dyn PtqMethod>, &str, &str)> = vec![
+            (Box::new(fp_xint::baselines::Rtn), "0", "0 (data-free)"),
+            (Box::new(fp_xint::baselines::AdaQuant::default()), "0", "32 samples"),
+            (Box::new(fp_xint::baselines::Lapq::default()), "0", "32 samples"),
+        ];
+        for (method, train_data, calib) in reps {
+            let (acc, dt) = time_once(|| bs::baseline_acc(&model, method.as_ref(), 4, 4));
+            t.row_str(&[
+                method.name(),
+                "4/4",
+                &bs::pct(acc),
+                &size_str(model_size_bytes(params, 4)),
+                train_data,
+                &format!("{dt:.2}s"),
+                calib,
+            ]);
+        }
+        // ours 4/4
+        let (acc, dt) = time_once(|| bs::ours_acc(&model, 4, 4));
+        t.row_str(&[
+            "Ours",
+            "4/4",
+            &bs::pct(acc),
+            &size_str(model_size_bytes(params, 4)),
+            "0",
+            &format!("{dt:.2}s"),
+            "0, w/o FT",
+        ]);
+        // ours mixed 2/Mix(2/4/8)
+        let (acc, size, dt) = mixed_row(&model, paper_name);
+        t.row_str(&[
+            "Ours",
+            "2/Mix(2/4/8)",
+            &bs::pct(acc),
+            &size_str(size),
+            "0",
+            &format!("{dt:.2}s"),
+            "0, w/o FT",
+        ]);
+        t.print();
+        println!();
+    }
+    bs::shape_note();
+}

@@ -1,0 +1,140 @@
+//! Table 4 — NLP tasks under W4A4: SQuAD stand-in (span F1, per-position
+//! start/end head) and MNLI stand-in (entailment accuracy) on TinyBert.
+//!
+//!     cargo bench --bench table4_nlp
+
+use fp_xint::datasets::textgen::{span_f1, EntailTask, SpanTask};
+use fp_xint::models::tinybert::{quantized_copy, BertHead, TinyBert};
+use fp_xint::tensor::Tensor;
+use fp_xint::train::{train_bert, TrainConfig};
+use fp_xint::util::{logger, Table};
+use fp_xint::xint::layer::LayerPolicy;
+
+const SEQ: usize = 24;
+const SEQ_SPAN: usize = 32;
+
+fn eval_entail(m: &TinyBert, task: &EntailTask) -> f64 {
+    let batch = task.batch(300, 2);
+    let tokens: Vec<Vec<usize>> = batch.iter().map(|e| e.tokens.clone()).collect();
+    let logits = m.forward(&tokens);
+    let pred = logits.argmax_rows();
+    let correct = pred.iter().zip(&batch).filter(|(p, e)| **p == e.label).count();
+    correct as f64 / batch.len() as f64 * 100.0
+}
+
+/// Span model: BertHead::Span gives per-token (start, end) logits.
+/// Training: cross-entropy over the position axis for each head.
+fn train_span(model: &mut TinyBert, task: &SpanTask, steps: usize) {
+    let mut opt = fp_xint::train::Sgd::new(0.05);
+    for step in 0..steps {
+        let b = task.batch(32, 3_000 + step as u64);
+        let tokens: Vec<Vec<usize>> = b.iter().map(|e| e.tokens.clone()).collect();
+        model.zero_grad();
+        let logits = model.forward_train(&tokens); // (N·T, 2)
+        let n = b.len();
+        // softmax over positions per head
+        let mut dl = Tensor::zeros(&[n * SEQ_SPAN, 2]);
+        for (s, ex) in b.iter().enumerate() {
+            for head in 0..2 {
+                let gold = if head == 0 { ex.start } else { ex.end };
+                // softmax over the T positions of this sequence
+                let mut mx = f32::NEG_INFINITY;
+                for p in 0..SEQ_SPAN {
+                    mx = mx.max(logits.at(&[s * SEQ_SPAN + p, head]));
+                }
+                let mut z = 0.0f32;
+                let mut probs = [0.0f32; 64];
+                for p in 0..SEQ_SPAN {
+                    probs[p] = (logits.at(&[s * SEQ_SPAN + p, head]) - mx).exp();
+                    z += probs[p];
+                }
+                for p in 0..SEQ_SPAN {
+                    let soft = probs[p] / z;
+                    let target = if p == gold { 1.0 } else { 0.0 };
+                    dl.data_mut()[(s * SEQ_SPAN + p) * 2 + head] =
+                        (soft - target) / (n as f32 * 2.0);
+                }
+            }
+        }
+        model.backward(&dl);
+        opt.step(|f| model.visit_params(f));
+    }
+}
+
+fn eval_span(m: &TinyBert, task: &SpanTask) -> f64 {
+    let batch = task.batch(200, 2);
+    let tokens: Vec<Vec<usize>> = batch.iter().map(|e| e.tokens.clone()).collect();
+    let logits = m.forward(&tokens); // (N·T, 2)
+    let mut f1 = 0.0;
+    for (i, ex) in batch.iter().enumerate() {
+        let mut best_s = (0usize, f32::NEG_INFINITY);
+        let mut best_e = (0usize, f32::NEG_INFINITY);
+        for p in 0..SEQ_SPAN {
+            let s = logits.at(&[i * SEQ_SPAN + p, 0]);
+            let e = logits.at(&[i * SEQ_SPAN + p, 1]);
+            if s > best_s.1 {
+                best_s = (p, s);
+            }
+            if e > best_e.1 {
+                best_e = (p, e);
+            }
+        }
+        f1 += span_f1((best_s.0, best_e.0), (ex.start, ex.end));
+    }
+    f1 / batch.len() as f64 * 100.0
+}
+
+fn main() {
+    logger::init(false);
+    // --- MNLI stand-in: 3-way entailment
+    let entail = EntailTask::new(SEQ, 5);
+    let mut bert_cls = TinyBert::new(32, 24, 48, 2, SEQ, BertHead::Cls { classes: 3 }, 7);
+    let cfg = TrainConfig { steps: 900, batch: 32, lr: 0.04, log_every: 300 };
+    println!("training entailment model ({} params)…", bert_cls.params());
+    train_bert(
+        &mut bert_cls,
+        |step| {
+            let b = entail.batch(32, 1_000 + step as u64);
+            (
+                b.iter().map(|e| e.tokens.clone()).collect(),
+                b.iter().map(|e| e.label).collect(),
+            )
+        },
+        &cfg,
+    );
+
+    // --- SQuAD stand-in: per-position span head
+    let span = SpanTask::new(SEQ_SPAN, 9);
+    let mut bert_span = TinyBert::new(32, 24, 48, 2, SEQ_SPAN, BertHead::Span, 11);
+    println!("training span model ({} params)…", bert_span.params());
+    train_span(&mut bert_span, &span, 1200);
+
+    let mut t = Table::new(
+        "Table 4 — NLP W4A4 (synthetic SQuAD/MNLI stand-ins)",
+        &["Method", "SQuAD-like (F1)", "MNLI-like (Acc)"],
+    );
+    t.row_str(&[
+        "Full Prec.",
+        &format!("{:.2}", eval_span(&bert_span, &span)),
+        &format!("{:.2}", eval_entail(&bert_cls, &entail)),
+    ]);
+    let rows: Vec<(&str, LayerPolicy, (u32, usize))> = vec![
+        ("Naive W4A4 (1 term)", LayerPolicy::new(4, 4).with_terms(1, 1), (4, 1)),
+        ("Naive W2A4 (1 term)", LayerPolicy::new(2, 4).with_terms(1, 1), (4, 1)),
+        ("Ours W4A4 (series)", LayerPolicy::new(4, 4).with_terms(2, 4), (4, 4)),
+        ("Ours W2A4 (series)", LayerPolicy::new(2, 4).with_terms(3, 4), (4, 4)),
+    ];
+    for (name, policy, act) in rows {
+        let mut q_cls = quantized_copy(&bert_cls, &policy);
+        q_cls.act_quant = Some(act);
+        let mut q_span = quantized_copy(&bert_span, &policy);
+        q_span.act_quant = Some(act);
+        t.row_str(&[
+            name,
+            &format!("{:.2}", eval_span(&q_span, &span)),
+            &format!("{:.2}", eval_entail(&q_cls, &entail)),
+        ]);
+    }
+    t.print();
+    fp_xint::bench_support::shape_note();
+}

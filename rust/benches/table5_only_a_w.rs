@@ -1,0 +1,43 @@
+//! Table 5 — ablation: expand only activations (onlyA) vs only weights
+//! (onlyW) vs both, ResNet-18/50 stand-ins.
+//!
+//! Substitution note: the paper runs this at INT4 on ImageNet; the
+//! synthetic substrate saturates at INT4 (FP ≈ 99–100%), so the
+//! discriminative panel here is INT3/INT2 on the harder dataset — same
+//! ablation, same expected ordering (onlyA > onlyW; both best).
+//!
+//!     cargo bench --bench table5_only_a_w
+
+use fp_xint::bench_support as bs;
+use fp_xint::util::{logger, Table};
+
+fn main() {
+    logger::init(false);
+    let suite = bs::suite();
+    let picks = [suite[0], suite[2]]; // ResNet-18, ResNet-50 stand-ins
+    let data = bs::bench_data_hard();
+
+    for bits in [4u32, 3, 2] {
+        let mut t = Table::new(
+            &format!("Table 5 — INT{bits} expansion ablation (hard dataset)"),
+            &["Model", "onlyA (k=1,t=4)", "onlyW (k=2,t=1)", "Ours (k=2,t=4)", "Full Prec."],
+        );
+        for (paper, tag, build) in picks {
+            let (m, fp) = bs::trained_hard(tag, build);
+            t.row_str(&[
+                paper,
+                &bs::pct(bs::ours_acc_on(&data, &m, bits, bits, 1, 4)),
+                &bs::pct(bs::ours_acc_on(&data, &m, bits, bits, 2, 1)),
+                &bs::pct(bs::ours_acc_on(&data, &m, bits, bits, 2, 4)),
+                &bs::pct(fp),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "expected shape (paper, INT4): onlyA > onlyW; both together best —\n\
+         activation expansion matters more than weight expansion."
+    );
+    bs::shape_note();
+}

@@ -1,0 +1,77 @@
+//! Table 6 — LLM stand-in: W4A16 weight-only expansion on the char LM,
+//! MMLU-style 4-subject multiple choice scored by sequence likelihood.
+//!
+//!     cargo bench --bench table6_llm_mmlu
+
+use fp_xint::datasets::charlm::{CharLmTask, SUBJECTS};
+use fp_xint::models::TinyLm;
+use fp_xint::train::{train_lm, TrainConfig};
+use fp_xint::util::{logger, Table};
+use fp_xint::xint::layer::LayerPolicy;
+
+fn mmlu_eval(lm: &TinyLm, task: &CharLmTask) -> ([f64; 4], f64) {
+    let qs = task.questions();
+    let mut correct = [0usize; 4];
+    let mut total = [0usize; 4];
+    for q in &qs {
+        total[q.subject] += 1;
+        if lm.answer(q) == q.answer {
+            correct[q.subject] += 1;
+        }
+    }
+    let mut per = [0.0f64; 4];
+    for s in 0..4 {
+        per[s] = correct[s] as f64 / total[s].max(1) as f64 * 100.0;
+    }
+    let avg = correct.iter().sum::<usize>() as f64 / qs.len() as f64 * 100.0;
+    (per, avg)
+}
+
+fn main() {
+    logger::init(false);
+    let task = CharLmTask::new(11);
+    let stream = task.tokens();
+    let mut lm = TinyLm::new(32, 64, 2, 32, 13);
+    println!("training char LM ({} params) on {} tokens…", lm.params(), stream.len());
+    let cfg = TrainConfig { steps: 500, batch: 16, lr: 0.08, log_every: 100 };
+    let report = train_lm(&mut lm, &stream, &cfg);
+    println!(
+        "LM loss {:.3} -> {:.3}",
+        report.loss_curve.first().unwrap().1,
+        report.loss_curve.last().unwrap().1
+    );
+
+    let mut t = Table::new(
+        "Table 6 — MMLU stand-in (W4A16 weight-only), 24 questions / 4 subjects",
+        &["Method", SUBJECTS[0], SUBJECTS[1], SUBJECTS[2], SUBJECTS[3], "Avg."],
+    );
+    let fmt_row = |name: &str, per: [f64; 4], avg: f64| {
+        [
+            name.to_string(),
+            format!("{:.1}", per[0]),
+            format!("{:.1}", per[1]),
+            format!("{:.1}", per[2]),
+            format!("{:.1}", per[3]),
+            format!("{:.1}", avg),
+        ]
+    };
+    let (per, avg) = mmlu_eval(&lm, &task);
+    t.row(&fmt_row("Full Prec. (TinyLM)", per, avg));
+
+    // W4 panel (the paper's setting; often lossless on this small LM —
+    // the discriminative panel below pushes to W2 where single-term breaks)
+    for (name, w_bits, terms) in [
+        ("Normal (W4 1-term)", 4u32, 1usize),
+        ("Ours (W4 series k=2)", 4, 2),
+        ("Normal (W2 1-term)", 2, 1),
+        ("Ours (W2 series k=2)", 2, 2),
+        ("Ours (W2 series k=3)", 2, 3),
+    ] {
+        let mut q = lm.clone();
+        q.quantize_weights(&LayerPolicy::new(w_bits, 16).with_terms(terms, 1));
+        let (per, avg) = mmlu_eval(&q, &task);
+        t.row(&fmt_row(name, per, avg));
+    }
+    t.print();
+    fp_xint::bench_support::shape_note();
+}

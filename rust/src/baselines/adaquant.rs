@@ -1,0 +1,157 @@
+//! AdaQuant (Hubara et al., 2020): layer-by-layer calibration — for each
+//! layer, search the weight quantization scale that minimizes the layer's
+//! *output* error on a calibration batch (the layerwise-optimization core
+//! of the method, without the integer-programming bit allocation).
+
+use super::{count_quantizable, insert_act_quant, is_first_or_last, PtqMethod};
+use crate::models::graph::{Layer, Model};
+use crate::models::quantized::ActObserver;
+use crate::tensor::Tensor;
+use crate::xint::quantizer::{fake_quant, Clip, Range, Symmetry};
+use crate::xint::BitSpec;
+
+pub struct AdaQuant {
+    /// scale-multiplier grid around the min/max scale
+    pub grid: Vec<f32>,
+}
+
+impl Default for AdaQuant {
+    fn default() -> Self {
+        AdaQuant { grid: vec![0.5, 0.65, 0.8, 0.9, 1.0, 1.1] }
+    }
+}
+
+/// Quantize `w` per-channel with a global scale multiplier `mult`.
+fn quant_with_mult(w: &Tensor, bits: u32, mult: f32) -> Tensor {
+    let out_ch = w.dims()[0];
+    let chlen = w.numel() / out_ch;
+    let spec = BitSpec::int(bits);
+    let mut data = Vec::with_capacity(w.numel());
+    for c in 0..out_ch {
+        let xs = &w.data()[c * chlen..(c + 1) * chlen];
+        let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let r = Range { bias: 0.0, half_width: maxabs * mult };
+        data.extend(fake_quant(xs, r, spec));
+    }
+    Tensor::from_vec(w.dims(), data)
+}
+
+impl PtqMethod for AdaQuant {
+    fn name(&self) -> &'static str {
+        "AdaQuant"
+    }
+
+    fn quantize(&self, fp: &Model, w_bits: u32, a_bits: u32, calib: &Tensor) -> Model {
+        let mut m = fp.clone();
+        m.fold_bn();
+        let total = count_quantizable(&m.layers);
+        // walk the graph carrying the calibration activation; optimize each
+        // layer's scale against its own FP output
+        let grid = self.grid.clone();
+        fn walk(
+            layers: &mut [Layer],
+            h: &Tensor,
+            idx: &mut usize,
+            total: usize,
+            w_bits: u32,
+            grid: &[f32],
+        ) -> Tensor {
+            let mut h = h.clone();
+            for l in layers {
+                match l {
+                    Layer::Residual(main, short) => {
+                        let hm = walk(main, &h, idx, total, w_bits, grid);
+                        let hs = walk(short, &h, idx, total, w_bits, grid);
+                        h = hm.add(&hs);
+                    }
+                    Layer::Branches(bs) => {
+                        let outs: Vec<Tensor> = bs
+                            .iter_mut()
+                            .map(|b| walk(b, &h, idx, total, w_bits, grid))
+                            .collect();
+                        h = crate::models::graph::concat_channels_pub(&outs);
+                    }
+                    Layer::Conv(c) => {
+                        let bits = if is_first_or_last(*idx, total) { 8 } else { w_bits };
+                        *idx += 1;
+                        let fp_out = c.forward(&h);
+                        let w0 = c.w.clone();
+                        let mut best = (f32::INFINITY, 1.0f32);
+                        for &mult in grid {
+                            c.w = quant_with_mult(&w0, bits, mult);
+                            let out = c.forward(&h);
+                            let err = fp_out.sub(&out).norm();
+                            if err < best.0 {
+                                best = (err, mult);
+                            }
+                        }
+                        c.w = quant_with_mult(&w0, bits, best.1);
+                        h = fp_out; // calibrate downstream layers on FP activations
+                    }
+                    Layer::Linear(lin) => {
+                        let bits = if is_first_or_last(*idx, total) { 8 } else { w_bits };
+                        *idx += 1;
+                        let fp_out = lin.forward(&h);
+                        let w0 = lin.w.clone();
+                        let mut best = (f32::INFINITY, 1.0f32);
+                        for &mult in grid {
+                            lin.w = quant_with_mult(&w0, bits, mult);
+                            let out = lin.forward(&h);
+                            let err = fp_out.sub(&out).norm();
+                            if err < best.0 {
+                                best = (err, mult);
+                            }
+                        }
+                        lin.w = quant_with_mult(&w0, bits, best.1);
+                        h = fp_out;
+                    }
+                    other => {
+                        h = other.forward(&h);
+                    }
+                }
+            }
+            h
+        }
+        let mut idx = 0usize;
+        let _ = walk(&mut m.layers, calib, &mut idx, total, w_bits, &grid);
+        debug_assert_eq!(idx, total);
+        // activation calibration as usual
+        let obs = ActObserver::observe(&m, calib, Symmetry::Asymmetric, Clip::Laplace, a_bits);
+        insert_act_quant(&mut m, &obs.ranges, a_bits, total);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn scale_search_improves_layer_output_error() {
+        // heavy-tailed weights: mult < 1 should win over mult = 1
+        let mut rng = Rng::seed(85);
+        let w = Tensor::from_vec(&[4, 128], (0..512).map(|_| rng.laplace(0.2)).collect());
+        let x = Tensor::randn(&[8, 128], 1.0, &mut rng);
+        let fp = crate::tensor::matmul_a_bt(&x, &w);
+        let err = |mult: f32| {
+            let q = quant_with_mult(&w, 3, mult);
+            fp.sub(&crate::tensor::matmul_a_bt(&x, &q)).norm()
+        };
+        let best_sub1 = [0.5f32, 0.65, 0.8].iter().cloned().map(err).fold(f32::INFINITY, f32::min);
+        assert!(best_sub1 < err(1.0), "clipped scale should win on laplace weights");
+    }
+
+    #[test]
+    fn adaquant_not_worse_than_rtn_on_model_output() {
+        let (m, calib) = super::super::tests::trained_small();
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let yf = fp.forward(&calib);
+        let q_ada = AdaQuant::default().quantize(&m, 3, 8, &calib);
+        let q_rtn = super::super::Rtn.quantize(&m, 3, 8, &calib);
+        let e_ada = yf.sub(&q_ada.forward(&calib)).norm();
+        let e_rtn = yf.sub(&q_rtn.forward(&calib)).norm();
+        assert!(e_ada <= e_rtn * 1.05, "ada {e_ada} rtn {e_rtn}");
+    }
+}

@@ -1,0 +1,114 @@
+//! DFQ-style bias correction (Nagel et al., 2019): after weight
+//! quantization, restore each layer's expected output by absorbing the
+//! mean quantization-error shift into the bias — data-free in the
+//! original; we use the calibration batch as the expectation estimate.
+
+use super::{count_quantizable, insert_act_quant, is_first_or_last, PtqMethod};
+use crate::models::graph::{Layer, Model};
+use crate::models::quantized::ActObserver;
+use crate::tensor::Tensor;
+use crate::xint::quantizer::{Clip, Symmetry};
+
+pub struct BiasCorr;
+
+impl PtqMethod for BiasCorr {
+    fn name(&self) -> &'static str {
+        "DFQ-BiasCorr"
+    }
+
+    fn quantize(&self, fp: &Model, w_bits: u32, a_bits: u32, calib: &Tensor) -> Model {
+        let mut m = fp.clone();
+        m.fold_bn();
+        let total = count_quantizable(&m.layers);
+        fn walk(layers: &mut [Layer], h: &Tensor, idx: &mut usize, total: usize, w_bits: u32) -> Tensor {
+            let mut h = h.clone();
+            for l in layers {
+                match l {
+                    Layer::Residual(main, short) => {
+                        let hm = walk(main, &h, idx, total, w_bits);
+                        let hs = walk(short, &h, idx, total, w_bits);
+                        h = hm.add(&hs);
+                    }
+                    Layer::Branches(bs) => {
+                        let outs: Vec<Tensor> =
+                            bs.iter_mut().map(|b| walk(b, &h, idx, total, w_bits)).collect();
+                        h = crate::models::graph::concat_channels_pub(&outs);
+                    }
+                    Layer::Conv(c) => {
+                        let bits = if is_first_or_last(*idx, total) { 8 } else { w_bits };
+                        *idx += 1;
+                        let fp_out = c.forward(&h);
+                        c.w = super::quant_weight_per_channel(&c.w, bits, Clip::None);
+                        let q_out = c.forward(&h);
+                        // per-channel mean error over batch and spatial dims
+                        let (n, oc, oh, ow) =
+                            (q_out.dims()[0], q_out.dims()[1], q_out.dims()[2], q_out.dims()[3]);
+                        let mut bias = c.b.clone().unwrap_or_else(|| Tensor::zeros(&[oc]));
+                        for ch in 0..oc {
+                            let mut err = 0.0f64;
+                            for ni in 0..n {
+                                let base = (ni * oc + ch) * oh * ow;
+                                for p in 0..oh * ow {
+                                    err += (fp_out.data()[base + p] - q_out.data()[base + p]) as f64;
+                                }
+                            }
+                            bias.data_mut()[ch] += (err / (n * oh * ow) as f64) as f32;
+                        }
+                        c.b = Some(bias);
+                        h = fp_out;
+                    }
+                    Layer::Linear(lin) => {
+                        let bits = if is_first_or_last(*idx, total) { 8 } else { w_bits };
+                        *idx += 1;
+                        let fp_out = lin.forward(&h);
+                        lin.w = super::quant_weight_per_channel(&lin.w, bits, Clip::None);
+                        let q_out = lin.forward(&h);
+                        let err = fp_out.sub(&q_out).sum_axis0().scale(1.0 / h.dims()[0] as f32);
+                        let mut bias =
+                            lin.b.clone().unwrap_or_else(|| Tensor::zeros(&[fp_out.dims()[1]]));
+                        bias.axpy(1.0, &err);
+                        lin.b = Some(bias);
+                        h = fp_out;
+                    }
+                    other => {
+                        h = other.forward(&h);
+                    }
+                }
+            }
+            h
+        }
+        let mut idx = 0usize;
+        let _ = walk(&mut m.layers, calib, &mut idx, total, w_bits);
+        let obs = ActObserver::observe(&m, calib, Symmetry::Asymmetric, Clip::Laplace, a_bits);
+        insert_act_quant(&mut m, &obs.ranges, a_bits, total);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_correction_zeroes_mean_output_shift() {
+        let (m, calib) = super::super::tests::trained_small();
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let yf = fp.forward(&calib);
+        let q = BiasCorr.quantize(&m, 3, 8, &calib);
+        let yq = q.forward(&calib);
+        // mean shift per class must be tiny compared to the RTN version
+        let q_rtn = super::super::Rtn.quantize(&m, 3, 8, &calib);
+        let yr = q_rtn.forward(&calib);
+        let mean_shift = |y: &Tensor| {
+            let d = yf.sub(y).sum_axis0().scale(1.0 / yf.dims()[0] as f32);
+            d.max_abs()
+        };
+        assert!(
+            mean_shift(&yq) <= mean_shift(&yr) * 1.1,
+            "biascorr shift {} rtn shift {}",
+            mean_shift(&yq),
+            mean_shift(&yr)
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! INT-model ensembles — the §5.4 "Series Expansion ≠ Ensemble" control.
+//!
+//! Combines `k` independently quantized INT models (each sees a different
+//! stochastic rounding realization) by output averaging. The paper's
+//! point: this does NOT converge to the FP model as k grows, while the
+//! series expansion does — the benches quantify exactly that gap.
+
+use crate::models::graph::Model;
+use crate::tensor::{Rng, Tensor};
+use crate::xint::quantizer::Range;
+use crate::xint::BitSpec;
+
+pub struct IntEnsemble {
+    pub members: usize,
+    pub seed: u64,
+}
+
+impl IntEnsemble {
+    pub fn new(members: usize, seed: u64) -> Self {
+        IntEnsemble { members, seed }
+    }
+
+    /// Stochastic-rounding fake quant: round up with probability equal to
+    /// the fractional part (unbiased; different seeds → different members).
+    fn stochastic_quant(w: &Tensor, bits: u32, rng: &mut Rng) -> Tensor {
+        let spec = BitSpec::int(bits);
+        let half = spec.half() as f32;
+        let out_ch = w.dims()[0];
+        let chlen = w.numel() / out_ch;
+        let mut data = Vec::with_capacity(w.numel());
+        for c in 0..out_ch {
+            let xs = &w.data()[c * chlen..(c + 1) * chlen];
+            let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if maxabs == 0.0 {
+                data.extend_from_slice(xs);
+                continue;
+            }
+            let scale = maxabs / half;
+            for &v in xs {
+                let t = v / scale;
+                let fl = t.floor();
+                let frac = t - fl;
+                let q = if (rng.f32()) < frac { fl + 1.0 } else { fl };
+                data.push(q.clamp(-half, half) * scale);
+            }
+        }
+        Tensor::from_vec(w.dims(), data)
+    }
+
+    /// Build the ensemble members from an FP model.
+    pub fn build(&self, fp: &Model, w_bits: u32) -> Vec<Model> {
+        let mut base = fp.clone();
+        base.fold_bn();
+        let total = super::count_quantizable(&base.layers);
+        let mut rng = Rng::seed(self.seed);
+        (0..self.members)
+            .map(|_| {
+                let mut m = base.clone();
+                let mut member_rng = rng.fork(1);
+                super::transform_weights(&mut m, total, &mut |w, _| {
+                    Self::stochastic_quant(w, w_bits, &mut member_rng)
+                });
+                m
+            })
+            .collect()
+    }
+
+    /// Ensemble prediction: average of member logits.
+    pub fn forward(members: &[Model], x: &Tensor) -> Tensor {
+        let mut acc: Option<Tensor> = None;
+        for m in members {
+            let y = m.forward(x);
+            acc = Some(match acc {
+                Some(a) => a.add(&y),
+                None => y,
+            });
+        }
+        acc.expect("no members").scale(1.0 / members.len() as f32)
+    }
+
+    /// A matched-budget series expansion uses `members` INT terms; the
+    /// ensemble uses `members` INT models. Returns (ensemble_err,
+    /// series_err) against the FP output — the §5.4 comparison.
+    pub fn versus_series(
+        &self,
+        fp: &Model,
+        w_bits: u32,
+        x: &Tensor,
+    ) -> (f64, f64) {
+        let mut folded = fp.clone();
+        folded.fold_bn();
+        let y_fp = folded.forward(x);
+        let members = self.build(fp, w_bits);
+        let y_ens = Self::forward(&members, x);
+        let ens_err = (y_fp.sub(&y_ens).norm() / y_fp.norm()) as f64;
+        // series: same #INT terms in the weight expansion
+        let policy = crate::xint::layer::LayerPolicy::new(w_bits, 8)
+            .with_terms(self.members, 2);
+        let q = crate::models::quantized::quantize_model(fp, policy);
+        let y_series = q.forward(x);
+        let ser_err = (y_fp.sub(&y_series).norm() / y_fp.norm()) as f64;
+        (ens_err, ser_err)
+    }
+
+    /// Average fake-quant range helper exposed for tests.
+    pub fn nominal_range(w: &Tensor, bits: u32) -> Range {
+        crate::xint::quantizer::channel_range(
+            w.data(),
+            crate::xint::quantizer::Symmetry::Symmetric,
+            crate::xint::quantizer::Clip::None,
+            bits,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let mut rng = Rng::seed(91);
+        let w = Tensor::full(&[1, 1000], 0.3711);
+        let mut acc = vec![0.0f64; 1000];
+        let reps = 64;
+        for _ in 0..reps {
+            let q = IntEnsemble::stochastic_quant(&w, 4, &mut rng);
+            for (a, &v) in acc.iter_mut().zip(q.data()) {
+                *a += v as f64;
+            }
+        }
+        let grand_mean = acc.iter().sum::<f64>() / (1000.0 * reps as f64);
+        assert!((grand_mean - 0.3711).abs() < 0.005, "biased: {grand_mean}");
+    }
+
+    #[test]
+    fn ensemble_error_plateaus_while_series_converges() {
+        let (m, calib) = super::super::tests::trained_small();
+        let e2 = IntEnsemble::new(2, 7).versus_series(&m, 3, &calib);
+        let e4 = IntEnsemble::new(4, 7).versus_series(&m, 3, &calib);
+        // series error shrinks fast with terms; ensemble error stays
+        // roughly flat (it averages noise but keeps the quantization bias)
+        assert!(e4.1 < e2.1 * 0.5, "series must converge: {} -> {}", e2.1, e4.1);
+        assert!(e4.0 > e4.1 * 3.0, "ensemble {} should be far above series {}", e4.0, e4.1);
+    }
+
+    #[test]
+    fn members_differ_but_agree_on_average() {
+        let (m, calib) = super::super::tests::trained_small();
+        let members = IntEnsemble::new(3, 11).build(&m, 4);
+        assert_eq!(members.len(), 3);
+        let y0 = members[0].forward(&calib);
+        let y1 = members[1].forward(&calib);
+        assert!(y0.sub(&y1).max_abs() > 0.0, "members must differ");
+    }
+}

@@ -1,0 +1,112 @@
+//! LAPQ (Nahshan et al., 2021): loss-aware PTQ — optimize a global clip
+//! fraction against the *network output* error on calibration data
+//! (golden-section over the 1-D clip parameter, the paper's L_p-space
+//! insight reduced to its core).
+
+use super::{count_quantizable, insert_act_quant, PtqMethod};
+use crate::models::quantized::ActObserver;
+use crate::models::Model;
+use crate::tensor::Tensor;
+use crate::xint::quantizer::{fake_quant, Clip, Range, Symmetry};
+use crate::xint::BitSpec;
+
+pub struct Lapq {
+    pub iters: usize,
+}
+
+impl Default for Lapq {
+    fn default() -> Self {
+        Lapq { iters: 10 }
+    }
+}
+
+fn quantize_all(fp_folded: &Model, frac: f32, w_bits: u32, total: usize) -> Model {
+    let mut m = fp_folded.clone();
+    super::transform_weights(&mut m, total, &mut |w, idx| {
+        let bits = if super::is_first_or_last(idx, total) { 8 } else { w_bits };
+        let spec = BitSpec::int(bits);
+        let out_ch = w.dims()[0];
+        let chlen = w.numel() / out_ch;
+        let mut data = Vec::with_capacity(w.numel());
+        for c in 0..out_ch {
+            let xs = &w.data()[c * chlen..(c + 1) * chlen];
+            let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let r = Range { bias: 0.0, half_width: maxabs * frac };
+            data.extend(fake_quant(xs, r, spec));
+        }
+        Tensor::from_vec(w.dims(), data)
+    });
+    m
+}
+
+/// Golden-section search for the loss-minimizing global clip fraction.
+pub fn search_clip_frac(
+    folded: &Model,
+    calib: &Tensor,
+    w_bits: u32,
+    total: usize,
+    iters: usize,
+) -> f32 {
+    let y_fp = folded.forward(calib);
+    let loss = |frac: f32| {
+        let q = quantize_all(folded, frac, w_bits, total);
+        y_fp.sub(&q.forward(calib)).norm()
+    };
+    // the loss landscape is not reliably unimodal at very low bits, so use
+    // a coarse grid (LAPQ's multi-point initialization) and refine locally
+    let mut best = (loss(1.0), 1.0f32);
+    let coarse = iters.max(4);
+    for i in 0..coarse {
+        let frac = 0.3 + 0.7 * i as f32 / (coarse - 1) as f32;
+        let l = loss(frac);
+        if l < best.0 {
+            best = (l, frac);
+        }
+    }
+    // local refinement around the winner
+    for &d in &[-0.05f32, -0.02, 0.02, 0.05] {
+        let frac = (best.1 + d).clamp(0.3, 1.0);
+        let l = loss(frac);
+        if l < best.0 {
+            best = (l, frac);
+        }
+    }
+    best.1
+}
+
+impl PtqMethod for Lapq {
+    fn name(&self) -> &'static str {
+        "LAPQ"
+    }
+
+    fn quantize(&self, fp: &Model, w_bits: u32, a_bits: u32, calib: &Tensor) -> Model {
+        let mut folded = fp.clone();
+        folded.fold_bn();
+        let total = count_quantizable(&folded.layers);
+        let best = search_clip_frac(&folded, calib, w_bits, total, self.iters);
+        let mut m = quantize_all(&folded, best, w_bits, total);
+        let obs = ActObserver::observe(&m, calib, Symmetry::Asymmetric, Clip::Laplace, a_bits);
+        insert_act_quant(&mut m, &obs.ranges, a_bits, total);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn searched_clip_beats_full_range_weight_only() {
+        // apples-to-apples: weight-only quantization at the searched clip
+        // fraction vs the full range (no activation quantization on either)
+        let (m, calib) = super::super::tests::trained_small();
+        let mut folded = m.clone();
+        folded.fold_bn();
+        let total = count_quantizable(&folded.layers);
+        let y_fp = folded.forward(&calib);
+        let best = search_clip_frac(&folded, &calib, 2, total, 10);
+        let e_best = y_fp.sub(&quantize_all(&folded, best, 2, total).forward(&calib)).norm();
+        let e_full = y_fp.sub(&quantize_all(&folded, 1.0, 2, total).forward(&calib)).norm();
+        assert!(e_best <= e_full * 1.001, "searched {e_best} vs full {e_full}");
+    }
+}

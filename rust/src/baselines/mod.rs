@@ -1,0 +1,277 @@
+//! PTQ baseline comparators (Table 1/2/3/4 rows): each implements the
+//! core idea of its paper at the granularity this harness needs.
+//!
+//! All baselines share the same protocol as the paper's §5.1 setup: BN is
+//! folded first, weights are fake-quantized (per-channel unless noted),
+//! activations are fake-quantized by [`graph::Layer::ActQuant`] nodes
+//! inserted after every conv/linear with ranges calibrated on a small
+//! unlabeled batch, and the first/last layer runs at 8 bits.
+
+pub mod aciq;
+pub mod adaquant;
+pub mod biascorr;
+pub mod ensemble;
+pub mod lapq;
+pub mod mseclip;
+pub mod rtn;
+
+pub use aciq::Aciq;
+pub use adaquant::AdaQuant;
+pub use biascorr::BiasCorr;
+pub use ensemble::IntEnsemble;
+pub use lapq::Lapq;
+pub use mseclip::MseClip;
+pub use rtn::Rtn;
+
+use crate::models::graph::{Layer, Model};
+use crate::tensor::Tensor;
+use crate::xint::quantizer::{channel_range, fake_quant, Clip, Range, Symmetry};
+use crate::xint::BitSpec;
+
+/// A PTQ method: FP model + calibration batch → fake-quantized FP model.
+pub trait PtqMethod {
+    fn name(&self) -> &'static str;
+    /// Quantize (weights at `w_bits`, activations at `a_bits`).
+    fn quantize(&self, fp: &Model, w_bits: u32, a_bits: u32, calib: &Tensor) -> Model;
+}
+
+/// First/last-layer index bookkeeping shared by all methods.
+pub(crate) fn is_first_or_last(idx: usize, total: usize) -> bool {
+    idx == 0 || idx + 1 == total
+}
+
+pub(crate) fn count_quantizable(layers: &[Layer]) -> usize {
+    layers
+        .iter()
+        .map(|l| match l {
+            Layer::Conv(_) | Layer::Linear(_) => 1,
+            Layer::Residual(m, s) => count_quantizable(m) + count_quantizable(s),
+            Layer::Branches(bs) => bs.iter().map(|b| count_quantizable(b)).sum(),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Fake-quantize a weight tensor per output channel.
+pub(crate) fn quant_weight_per_channel(w: &Tensor, bits: u32, clip: Clip) -> Tensor {
+    let out_ch = w.dims()[0];
+    let chlen = w.numel() / out_ch;
+    let spec = BitSpec::int(bits);
+    let mut data = Vec::with_capacity(w.numel());
+    for c in 0..out_ch {
+        let xs = &w.data()[c * chlen..(c + 1) * chlen];
+        let r = channel_range(xs, Symmetry::Symmetric, clip, bits);
+        data.extend(fake_quant(xs, r, spec));
+    }
+    Tensor::from_vec(w.dims(), data)
+}
+
+/// Fake-quantize a weight tensor per tensor (RTN-style).
+pub(crate) fn quant_weight_per_tensor(w: &Tensor, bits: u32, clip: Clip) -> Tensor {
+    let spec = BitSpec::int(bits);
+    let r = channel_range(w.data(), Symmetry::Symmetric, clip, bits);
+    Tensor::from_vec(w.dims(), fake_quant(w.data(), r, spec))
+}
+
+/// Walk the graph, applying `f(weight, layer_idx, total)` to each
+/// conv/linear weight in execution order.
+pub(crate) fn transform_weights(
+    model: &mut Model,
+    total: usize,
+    f: &mut dyn FnMut(&Tensor, usize) -> Tensor,
+) {
+    fn walk(layers: &mut [Layer], idx: &mut usize, f: &mut dyn FnMut(&Tensor, usize) -> Tensor) {
+        for l in layers {
+            match l {
+                Layer::Conv(c) => {
+                    c.w = f(&c.w, *idx);
+                    *idx += 1;
+                }
+                Layer::Linear(lin) => {
+                    lin.w = f(&lin.w, *idx);
+                    *idx += 1;
+                }
+                Layer::Residual(m, s) => {
+                    walk(m, idx, f);
+                    walk(s, idx, f);
+                }
+                Layer::Branches(bs) => {
+                    for b in bs {
+                        walk(b, idx, f);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut idx = 0usize;
+    walk(&mut model.layers, &mut idx, f);
+    debug_assert_eq!(idx, total);
+}
+
+/// Insert `ActQuant(range, bits)` after every conv/linear, using
+/// calibrated per-layer ranges (execution order). First/last layers get
+/// 8-bit ranges per the shared protocol.
+pub(crate) fn insert_act_quant(
+    model: &mut Model,
+    ranges: &[Range],
+    a_bits: u32,
+    total: usize,
+) {
+    fn walk(
+        layers: &mut Vec<Layer>,
+        idx: &mut usize,
+        ranges: &[Range],
+        a_bits: u32,
+        total: usize,
+    ) {
+        let mut i = 0;
+        while i < layers.len() {
+            match &mut layers[i] {
+                Layer::Residual(m, s) => {
+                    walk(m, idx, ranges, a_bits, total);
+                    walk(s, idx, ranges, a_bits, total);
+                }
+                Layer::Branches(bs) => {
+                    for b in bs.iter_mut() {
+                        walk(b, idx, ranges, a_bits, total);
+                    }
+                }
+                Layer::Conv(_) | Layer::Linear(_) => {
+                    let bits = if is_first_or_last(*idx, total) { 8 } else { a_bits };
+                    let r = ranges[*idx];
+                    *idx += 1;
+                    layers.insert(i + 1, Layer::ActQuant(r, BitSpec::int(bits)));
+                    i += 1; // skip the inserted node
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    let mut idx = 0usize;
+    walk(&mut model.layers, &mut idx, ranges, a_bits, total);
+    debug_assert_eq!(idx, total);
+}
+
+/// The standard baseline pipeline: fold BN → quantize weights with
+/// `wq(w, is_first_last)` → calibrate activation ranges with `clip` →
+/// insert ActQuant nodes.
+pub(crate) fn baseline_pipeline(
+    fp: &Model,
+    calib: &Tensor,
+    a_bits: u32,
+    act_clip: Clip,
+    wq: &mut dyn FnMut(&Tensor, bool) -> Tensor,
+) -> Model {
+    let mut m = fp.clone();
+    m.fold_bn();
+    let total = count_quantizable(&m.layers);
+    transform_weights(&mut m, total, &mut |w, idx| {
+        wq(w, is_first_or_last(idx, total))
+    });
+    // calibrate activation ranges on the weight-quantized model (post-quant
+    // distributions are what the runtime sees)
+    let obs = crate::models::quantized::ActObserver::observe(
+        &m,
+        calib,
+        Symmetry::Asymmetric,
+        act_clip,
+        a_bits,
+    );
+    insert_act_quant(&mut m, &obs.ranges, a_bits, total);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SynthImg;
+    use crate::models::zoo;
+    use crate::tensor::Rng;
+
+    /// Shared trained fixture — training once for the whole test binary
+    /// keeps the baseline test suite fast.
+    pub(crate) fn trained_small() -> (Model, Tensor) {
+        static FIXTURE: once_cell::sync::Lazy<(Model, Tensor)> = once_cell::sync::Lazy::new(|| {
+            let data = SynthImg::new(4, 1, 12, 0.15, 21);
+            let mut m = zoo::mini_resnet_a(4, 22);
+            let cfg =
+                crate::train::TrainConfig { steps: 80, batch: 24, lr: 0.05, log_every: 1000 };
+            crate::train::train_classifier(&mut m, &data, &cfg);
+            let calib = data.batch(32, 3).x;
+            (m, calib)
+        });
+        FIXTURE.clone()
+    }
+
+    #[test]
+    fn all_methods_preserve_topology_and_run() {
+        let (m, calib) = trained_small();
+        let methods: Vec<Box<dyn PtqMethod>> = vec![
+            Box::new(Rtn),
+            Box::new(Aciq),
+            Box::new(MseClip),
+            Box::new(AdaQuant::default()),
+            Box::new(Lapq::default()),
+            Box::new(BiasCorr),
+        ];
+        let mut rng = Rng::seed(23);
+        let x = Tensor::randn(&[2, 1, 12, 12], 1.0, &mut rng);
+        for meth in methods {
+            let q = meth.quantize(&m, 4, 4, &calib);
+            let y = q.forward(&x);
+            assert_eq!(y.dims(), &[2, 4], "{}", meth.name());
+            assert!(y.data().iter().all(|v| v.is_finite()), "{}", meth.name());
+        }
+    }
+
+    #[test]
+    fn eight_bit_baselines_match_fp_closely() {
+        let (m, calib) = trained_small();
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let x = calib.clone();
+        let yf = fp.forward(&x);
+        for meth in [&Rtn as &dyn PtqMethod, &Aciq] {
+            let q = meth.quantize(&m, 8, 8, &calib);
+            let yq = q.forward(&x);
+            let rel = yf.sub(&yq).norm() / yf.norm();
+            assert!(rel < 0.1, "{} W8A8 rel err {rel}", meth.name());
+        }
+    }
+
+    #[test]
+    fn act_quant_nodes_inserted_once_per_layer() {
+        let (m, calib) = trained_small();
+        let q = Rtn.quantize(&m, 4, 4, &calib);
+        fn counts(layers: &[Layer]) -> (usize, usize) {
+            let mut ql = 0;
+            let mut aq = 0;
+            for l in layers {
+                match l {
+                    Layer::Conv(_) | Layer::Linear(_) => ql += 1,
+                    Layer::ActQuant(..) => aq += 1,
+                    Layer::Residual(m, s) => {
+                        let (a, b) = counts(m);
+                        let (c, d) = counts(s);
+                        ql += a + c;
+                        aq += b + d;
+                    }
+                    Layer::Branches(bs) => {
+                        for b in bs {
+                            let (a, bb) = counts(b);
+                            ql += a;
+                            aq += bb;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            (ql, aq)
+        }
+        let (ql, aq) = counts(&q.layers);
+        assert_eq!(ql, aq, "one ActQuant per quantizable layer");
+        assert!(ql > 3);
+    }
+}

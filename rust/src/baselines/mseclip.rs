@@ -1,0 +1,83 @@
+//! MSE-grid clipping: per-channel grid search over clip fractions
+//! minimizing weight reconstruction MSE (the OMSE-style calibration used
+//! as a strong range-only baseline).
+
+use super::{baseline_pipeline, PtqMethod};
+use crate::models::Model;
+use crate::tensor::Tensor;
+use crate::xint::quantizer::{fake_quant, Clip, Range, Symmetry};
+use crate::xint::BitSpec;
+
+pub struct MseClip;
+
+/// Per-channel MSE-optimal clip fraction (grid over [0.3, 1.0]·max).
+pub fn mse_quant_per_channel(w: &Tensor, bits: u32) -> Tensor {
+    let out_ch = w.dims()[0];
+    let chlen = w.numel() / out_ch;
+    let spec = BitSpec::int(bits);
+    let mut data = Vec::with_capacity(w.numel());
+    for c in 0..out_ch {
+        let xs = &w.data()[c * chlen..(c + 1) * chlen];
+        let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut best = (f32::INFINITY, maxabs);
+        for i in 0..24 {
+            let frac = 0.3 + 0.7 * (i as f32 / 23.0);
+            let r = Range { bias: 0.0, half_width: maxabs * frac };
+            let q = fake_quant(xs, r, spec);
+            let mse: f32 = xs.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+            if mse < best.0 {
+                best = (mse, maxabs * frac);
+            }
+        }
+        let r = Range { bias: 0.0, half_width: best.1 };
+        data.extend(fake_quant(xs, r, spec));
+    }
+    Tensor::from_vec(w.dims(), data)
+}
+
+impl PtqMethod for MseClip {
+    fn name(&self) -> &'static str {
+        "MSE-Clip"
+    }
+
+    fn quantize(&self, fp: &Model, w_bits: u32, a_bits: u32, calib: &Tensor) -> Model {
+        baseline_pipeline(fp, calib, a_bits, Clip::Laplace, &mut |w, first_last| {
+            let bits = if first_last { 8 } else { w_bits };
+            mse_quant_per_channel(w, bits)
+        })
+    }
+}
+
+/// Percentile activation variant used by LAPQ's starting point; exposed
+/// for reuse.
+pub fn percentile_range(xs: &[f32], p: f32, bits: u32) -> Range {
+    crate::xint::quantizer::channel_range(xs, Symmetry::Asymmetric, Clip::Percentile(p), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::xint::quantizer::Clip;
+
+    #[test]
+    fn mse_clip_never_worse_than_full_range() {
+        let mut rng = Rng::seed(84);
+        // mix of gaussian + outliers
+        let mut data: Vec<f32> = (0..512).map(|_| rng.normal() * 0.2).collect();
+        data[0] = 4.0;
+        data[511] = -4.0;
+        let w = Tensor::from_vec(&[2, 256], data);
+        let q_full = super::super::quant_weight_per_channel(&w, 4, Clip::None);
+        let q_mse = mse_quant_per_channel(&w, 4);
+        assert!(w.sub(&q_mse).norm() <= w.sub(&q_full).norm() * 1.001);
+    }
+
+    #[test]
+    fn percentile_range_trims_outliers() {
+        let mut xs: Vec<f32> = (0..99).map(|i| i as f32 / 99.0).collect();
+        xs.push(100.0);
+        let r = percentile_range(&xs, 95.0, 4);
+        assert!(r.half_width < 50.0, "outlier not trimmed: {}", r.half_width);
+    }
+}

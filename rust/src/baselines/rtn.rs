@@ -1,0 +1,54 @@
+//! Round-to-nearest (RTN): the naive PTQ floor every paper compares
+//! against. Per-tensor symmetric min/max weights, min/max activations,
+//! no calibration beyond the activation range observation.
+
+use super::{baseline_pipeline, PtqMethod};
+use crate::models::Model;
+use crate::tensor::Tensor;
+use crate::xint::quantizer::Clip;
+
+pub struct Rtn;
+
+impl PtqMethod for Rtn {
+    fn name(&self) -> &'static str {
+        "RTN"
+    }
+
+    fn quantize(&self, fp: &Model, w_bits: u32, a_bits: u32, calib: &Tensor) -> Model {
+        baseline_pipeline(fp, calib, a_bits, Clip::None, &mut |w, first_last| {
+            let bits = if first_last { 8 } else { w_bits };
+            super::quant_weight_per_tensor(w, bits, Clip::None)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rtn_weights_live_on_a_grid() {
+        let mut rng = Rng::seed(81);
+        let w = Tensor::randn(&[4, 8], 0.5, &mut rng);
+        let q = super::super::quant_weight_per_tensor(&w, 4, Clip::None);
+        // infer the step from the max and check all values are multiples
+        let step = w.max_abs() / 8.0;
+        for v in q.data() {
+            let k = v / step;
+            assert!((k - k.round()).abs() < 1e-4, "{v} not on grid (step {step})");
+        }
+    }
+
+    #[test]
+    fn lower_bits_mean_higher_weight_error() {
+        let mut rng = Rng::seed(82);
+        let w = Tensor::randn(&[4, 64], 0.5, &mut rng);
+        let err = |bits| {
+            let q = super::super::quant_weight_per_tensor(&w, bits, Clip::None);
+            w.sub(&q).norm()
+        };
+        assert!(err(2) > err(4));
+        assert!(err(4) > err(8));
+    }
+}

@@ -1,0 +1,136 @@
+//! Shared harness for the table/figure benches (`rust/benches/`).
+//!
+//! Criterion is unavailable offline, so every bench is a `harness = false`
+//! binary that prints the paper-style table via [`crate::util::Table`].
+//! This module centralizes the trained-model suite (cached checkpoints),
+//! the method registry, and the evaluation loop so each bench stays
+//! focused on its table's rows.
+
+use crate::baselines::{self, PtqMethod};
+use crate::datasets::{accuracy, SynthImg};
+use crate::models::{quantized, zoo, Model};
+use crate::train::{trained_model_cached, TrainConfig};
+use crate::xint::layer::LayerPolicy;
+
+/// The standard benchmark dataset (ImageNet stand-in).
+pub fn bench_data() -> SynthImg {
+    SynthImg::standard(42)
+}
+
+/// Harder variant for the ablation benches: more noise so FP accuracy
+/// sits below 100% and quantization effects are visible (the standard
+/// task saturates the bigger zoo models).
+pub fn bench_data_hard() -> SynthImg {
+    SynthImg::new(10, 1, 16, 0.55, 43)
+}
+
+/// Train (or load cached) on the hard dataset.
+pub fn trained_hard(tag: &str, build: fn() -> Model) -> (Model, f64) {
+    let data = bench_data_hard();
+    let cfg = TrainConfig { steps: 500, batch: 32, lr: 0.05, log_every: 1_000 };
+    let (m, acc) = trained_model_cached(&format!("{tag}_hard"), build, &data, &cfg);
+    (m, acc * 100.0)
+}
+
+/// Ours on an explicit dataset.
+pub fn ours_acc_on(
+    data: &SynthImg,
+    model: &Model,
+    w_bits: u32,
+    a_bits: u32,
+    k: usize,
+    t: usize,
+) -> f64 {
+    let val = data.batch(512, 2);
+    let q = quantized::quantize_model(model, LayerPolicy::new(w_bits, a_bits).with_terms(k, t));
+    accuracy(&q.forward(&val.x), &val.y) * 100.0
+}
+
+/// Baseline on an explicit dataset.
+pub fn baseline_acc_on(
+    data: &SynthImg,
+    model: &Model,
+    method: &dyn PtqMethod,
+    w_bits: u32,
+    a_bits: u32,
+) -> f64 {
+    let val = data.batch(512, 2);
+    let calib = data.batch(32, 3).x;
+    let q = method.quantize(model, w_bits, a_bits, &calib);
+    accuracy(&q.forward(&val.x), &val.y) * 100.0
+}
+
+/// Table-1 suite: (paper name, stand-in tag, builder).
+pub fn suite() -> Vec<(&'static str, &'static str, fn() -> Model)> {
+    vec![
+        ("ResNet-18", "mini_resnet_a", (|| zoo::mini_resnet_a(10, 1)) as fn() -> Model),
+        ("ResNet-34", "mini_resnet_b", || zoo::mini_resnet_b(10, 2)),
+        ("ResNet-50", "mini_resnet_c", || zoo::mini_resnet_c(10, 3)),
+        ("ResNet-101", "mini_resnet_d", || zoo::mini_resnet_d(10, 4)),
+        ("RegNetX-600MF", "regnet_style", || zoo::regnet_style(10, 5)),
+        ("Inception-V3", "inception_style", || zoo::inception_style(10, 6)),
+    ]
+}
+
+/// MobileNet stand-in (Table 3's second block).
+pub fn mobilenet() -> (&'static str, &'static str, fn() -> Model) {
+    ("MobileNetV2", "mobilenet_style", || zoo::mobilenet_style(10, 7))
+}
+
+/// Train (or load the cached) model; returns (model, fp val accuracy %).
+pub fn trained(tag: &str, build: fn() -> Model) -> (Model, f64) {
+    let data = bench_data();
+    let cfg = TrainConfig { steps: 400, batch: 32, lr: 0.05, log_every: 1_000 };
+    let (m, acc) = trained_model_cached(tag, build, &data, &cfg);
+    (m, acc * 100.0)
+}
+
+/// Accuracy (%) of the paper's series-expansion PTQ at (w_bits, a_bits).
+pub fn ours_acc(model: &Model, w_bits: u32, a_bits: u32) -> f64 {
+    ours_acc_terms(model, w_bits, a_bits, 2, 4)
+}
+
+/// Ours with explicit term counts.
+pub fn ours_acc_terms(model: &Model, w_bits: u32, a_bits: u32, k: usize, t: usize) -> f64 {
+    let data = bench_data();
+    let val = data.batch(512, 2);
+    let q = quantized::quantize_model(model, LayerPolicy::new(w_bits, a_bits).with_terms(k, t));
+    accuracy(&q.forward(&val.x), &val.y) * 100.0
+}
+
+/// Accuracy (%) of a baseline method at (w_bits, a_bits).
+pub fn baseline_acc(model: &Model, method: &dyn PtqMethod, w_bits: u32, a_bits: u32) -> f64 {
+    let data = bench_data();
+    let val = data.batch(512, 2);
+    let calib = data.batch(32, 3).x;
+    let q = method.quantize(model, w_bits, a_bits, &calib);
+    accuracy(&q.forward(&val.x), &val.y) * 100.0
+}
+
+/// The baseline registry used across tables.
+pub fn methods() -> Vec<Box<dyn PtqMethod>> {
+    vec![
+        Box::new(baselines::Rtn),
+        Box::new(baselines::Aciq),
+        Box::new(baselines::MseClip),
+        Box::new(baselines::BiasCorr),
+        Box::new(baselines::AdaQuant::default()),
+        Box::new(baselines::Lapq::default()),
+    ]
+}
+
+/// Format a percentage cell.
+pub fn pct(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Paper-vs-measured footnote helper: benches print the paper's numbers
+/// for orientation; absolute values are not expected to match (different
+/// substrate), the *shape* is (see EXPERIMENTS.md).
+pub fn shape_note() {
+    println!(
+        "\nnote: absolute numbers come from the synthetic substrate (DESIGN.md §2);\n\
+         compare SHAPE against the paper — who wins, by roughly what factor,\n\
+         where methods collapse. Paper values are recorded in EXPERIMENTS.md.\n"
+    );
+}

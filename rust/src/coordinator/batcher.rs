@@ -1,0 +1,255 @@
+//! Dynamic batcher with bounded-queue backpressure.
+//!
+//! Requests accumulate until `max_batch` samples are pending or
+//! `max_wait_us` elapses since the oldest arrival — the standard
+//! serving trade-off (throughput vs tail latency) the perf bench sweeps.
+
+use super::{Request, Response};
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batcher tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// max total samples per formed batch
+    pub max_batch: usize,
+    /// max time the oldest request waits before the batch is flushed
+    pub max_wait_us: u64,
+    /// bounded queue capacity (requests beyond this are shed)
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait_us: 2_000, queue_cap: 256 }
+    }
+}
+
+/// Submission failure modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// queue full — caller should back off (shed-on-full backpressure)
+    Busy,
+    /// batcher stopped
+    Closed,
+}
+
+/// A formed batch handed to the processing callback.
+pub struct FormedBatch {
+    /// concatenated samples (Σnᵢ, din)
+    pub x: Tensor,
+    /// per-request (id, rows, reply, enqueue_time)
+    pub parts: Vec<(u64, usize, mpsc::Sender<Response>, Instant)>,
+}
+
+pub struct Batcher {
+    tx: mpsc::SyncSender<(Request, Instant)>,
+    handle: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Batcher {
+    /// Start the batching loop; `process` receives each formed batch and
+    /// must reply to every part.
+    pub fn start(
+        cfg: BatcherConfig,
+        process: impl Fn(FormedBatch) + Send + 'static,
+    ) -> Batcher {
+        let (tx, rx) = mpsc::sync_channel::<(Request, Instant)>(cfg.queue_cap);
+        let handle = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || {
+                let mut pending: Vec<(Request, Instant)> = Vec::new();
+                loop {
+                    // wait for the first request (or shutdown)
+                    if pending.is_empty() {
+                        match rx.recv() {
+                            Ok(r) => pending.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    // accumulate until size or deadline
+                    let deadline = pending[0].1 + Duration::from_micros(cfg.max_wait_us);
+                    loop {
+                        let rows: usize = pending.iter().map(|(r, _)| r.x.dims()[0]).sum();
+                        if rows >= cfg.max_batch {
+                            break;
+                        }
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(r) => pending.push(r),
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    // form the batch (split off at most max_batch samples)
+                    let mut take = Vec::new();
+                    let mut rows = 0usize;
+                    while let Some((req, _)) = pending.first() {
+                        let n = req.x.dims()[0];
+                        if !take.is_empty() && rows + n > cfg.max_batch {
+                            break;
+                        }
+                        rows += n;
+                        take.push(pending.remove(0));
+                    }
+                    let din = take[0].0.x.dims()[1];
+                    let mut data = Vec::with_capacity(rows * din);
+                    let mut parts = Vec::with_capacity(take.len());
+                    for (req, at) in take {
+                        assert_eq!(req.x.dims()[1], din, "mixed feature dims in batch");
+                        data.extend_from_slice(req.x.data());
+                        parts.push((req.id, req.x.dims()[0], req.reply, at));
+                    }
+                    process(FormedBatch { x: Tensor::from_vec(&[rows, din], data), parts });
+                }
+            })
+            .expect("spawn batcher");
+        Batcher { tx, handle: Some(handle), next_id: AtomicU64::new(0) }
+    }
+
+    /// Non-blocking submit; sheds with [`SubmitError::Busy`] when full.
+    pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send((Request { id, x, reply }, Instant::now())) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::Busy),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        drop(self.tx.clone()); // original tx dropped below
+        // dropping self.tx closes the channel; the loop drains and exits
+        let handle = self.handle.take();
+        drop(self);
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // channel sender dropped implicitly; worker exits after drain
+        if let Some(h) = self.handle.take() {
+            // do not join on panic paths to avoid deadlocks in tests
+            if !std::thread::panicking() {
+                let _ = h;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    fn echo_batcher(cfg: BatcherConfig, batches_seen: Arc<AtomicUsize>) -> Batcher {
+        Batcher::start(cfg, move |batch| {
+            batches_seen.fetch_add(1, Ordering::SeqCst);
+            let mut row = 0usize;
+            for (id, rows, reply, at) in batch.parts {
+                let din = batch.x.dims()[1];
+                let data = batch.x.data()[row * din..(row + rows) * din].to_vec();
+                row += rows;
+                let _ = reply.send(Response {
+                    id,
+                    logits: Tensor::from_vec(&[rows, din], data),
+                    latency_s: at.elapsed().as_secs_f64(),
+                });
+            }
+        })
+    }
+
+    #[test]
+    fn coalesces_small_requests_into_one_batch() {
+        let seen = Arc::new(AtomicUsize::new(0));
+        let b = echo_batcher(
+            BatcherConfig { max_batch: 8, max_wait_us: 20_000, queue_cap: 32 },
+            seen.clone(),
+        );
+        let rxs: Vec<_> =
+            (0..4).map(|_| b.submit(Tensor::from_vec(&[1, 2], vec![1.0, 2.0])).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.logits.dims(), &[1, 2]);
+        }
+        // four 1-row requests within the wait window → 1 or 2 batches
+        assert!(seen.load(Ordering::SeqCst) <= 2, "batches {}", seen.load(Ordering::SeqCst));
+        b.shutdown();
+    }
+
+    #[test]
+    fn flushes_on_size_immediately() {
+        let seen = Arc::new(AtomicUsize::new(0));
+        let b = echo_batcher(
+            BatcherConfig { max_batch: 2, max_wait_us: 1_000_000, queue_cap: 32 },
+            seen.clone(),
+        );
+        let t0 = Instant::now();
+        let rx1 = b.submit(Tensor::from_vec(&[1, 1], vec![1.0])).unwrap();
+        let rx2 = b.submit(Tensor::from_vec(&[1, 1], vec![2.0])).unwrap();
+        rx1.recv().unwrap();
+        rx2.recv().unwrap();
+        // must not wait the full 1 s window
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        b.shutdown();
+    }
+
+    #[test]
+    fn sheds_when_queue_full() {
+        // processing blocked by a slow callback; fill the queue
+        let b = Batcher::start(
+            BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 2 },
+            |batch| {
+                std::thread::sleep(Duration::from_millis(200));
+                for (id, rows, reply, at) in batch.parts {
+                    let _ = reply.send(Response {
+                        id,
+                        logits: Tensor::zeros(&[rows, 1]),
+                        latency_s: at.elapsed().as_secs_f64(),
+                    });
+                }
+            },
+        );
+        let mut shed = 0;
+        let mut keep = Vec::new();
+        for _ in 0..16 {
+            match b.submit(Tensor::zeros(&[1, 1])) {
+                Ok(rx) => keep.push(rx),
+                Err(SubmitError::Busy) => shed += 1,
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+        assert!(shed > 0, "expected shedding under overload");
+        // accepted requests still complete
+        for rx in keep {
+            assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn oversize_request_still_processed_alone() {
+        let seen = Arc::new(AtomicUsize::new(0));
+        let b = echo_batcher(
+            BatcherConfig { max_batch: 4, max_wait_us: 100, queue_cap: 8 },
+            seen.clone(),
+        );
+        let rx = b.submit(Tensor::zeros(&[10, 3])).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.logits.dims(), &[10, 3]);
+        b.shutdown();
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving metrics: lock-free counters + a latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Coordinator-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    samples: AtomicU64,
+    /// request latencies (seconds); reservoir capped to keep memory flat
+    latencies: Mutex<Vec<f64>>,
+    /// batch service times (seconds)
+    batch_times: Mutex<Vec<f64>>,
+}
+
+const RESERVOIR_CAP: usize = 100_000;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_completed(&self, latency_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() < RESERVOIR_CAP {
+            l.push(latency_s);
+        }
+    }
+
+    pub fn record_failed(&self, n: usize) {
+        self.failed.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, samples: usize, service_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(samples as u64, Ordering::Relaxed);
+        let mut b = self.batch_times.lock().unwrap();
+        if b.len() < RESERVOIR_CAP {
+            b.push(service_s);
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean samples per formed batch (batching effectiveness).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.samples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Latency summary over the reservoir.
+    pub fn latency_summary(&self) -> crate::util::stats::Summary {
+        crate::util::stats::Summary::of(&self.latencies.lock().unwrap())
+    }
+
+    pub fn batch_time_summary(&self) -> crate::util::stats::Summary {
+        crate::util::stats::Summary::of(&self.batch_times.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_completed(0.001);
+        m.record_completed(0.003);
+        m.record_failed(2);
+        m.record_batch(8, 0.002);
+        m.record_batch(4, 0.004);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.failed(), 2);
+        assert_eq!(m.batches(), 2);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        let s = m.latency_summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.002).abs() < 1e-9);
+    }
+}

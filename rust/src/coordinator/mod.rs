@@ -1,0 +1,159 @@
+//! L3 coordinator — the serving system around the paper's expansion:
+//! request routing, dynamic batching, basis-model scheduling across a
+//! worker pool, and the AbelianAdd AllReduce that recombines basis
+//! outputs (Theorem 2's deployment shape: t·k low-bit models run in
+//! parallel, one commutative reduction at the end).
+//!
+//! * [`pool`] — worker threads; each owns one basis model (optionally a
+//!   per-thread PJRT runtime — `xla::PjRtClient` is not `Send`).
+//! * [`batcher`] — bounded request queue with timeout-based batch forming
+//!   and shed-on-full backpressure.
+//! * [`scheduler`] — broadcast/collect over the pool + AbelianAdd tree.
+//! * [`metrics`] — counters and latency summaries for the benches.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+pub mod scheduler;
+
+pub use batcher::{Batcher, BatcherConfig, SubmitError};
+pub use metrics::Metrics;
+pub use pool::{BasisWorker, WorkerPool};
+pub use scheduler::ExpansionScheduler;
+
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// One inference request: a (n, din) batch of samples and a reply slot.
+pub struct Request {
+    pub id: u64,
+    pub x: Tensor,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The reply: logits for the request's samples.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Tensor,
+    /// end-to-end latency attributed by the coordinator
+    pub latency_s: f64,
+}
+
+/// The assembled serving coordinator: batcher → scheduler → AllReduce.
+pub struct Coordinator {
+    batcher: Batcher,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Build with `scheduler` handling each formed batch.
+    pub fn new(cfg: BatcherConfig, scheduler: ExpansionScheduler) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let batcher = Batcher::start(cfg, move |batch| scheduler.process(batch, &m2));
+        Coordinator { batcher, metrics }
+    }
+
+    /// Submit a request (non-blocking; sheds when the queue is full).
+    pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.batcher.submit(x)
+    }
+
+    /// Submit and wait for the reply.
+    pub fn infer(&self, x: Tensor) -> anyhow::Result<Response> {
+        let rx = self
+            .submit(x)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Drain and stop.
+    pub fn shutdown(self) {
+        self.batcher.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    /// A worker that computes `x * weight_scalar` — enough to validate
+    /// the batching/reduction plumbing deterministically.
+    struct ScalarWorker(f32);
+
+    impl BasisWorker for ScalarWorker {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(x.scale(self.0))
+        }
+    }
+
+    fn scalar_coordinator(weights: Vec<f32>, max_batch: usize) -> Coordinator {
+        let pool = WorkerPool::new(
+            weights.len(),
+            Arc::new(move |i: usize| {
+                Box::new(ScalarWorker(weights[i])) as Box<dyn BasisWorker>
+            }),
+        );
+        let sched = ExpansionScheduler::new(pool);
+        let cfg = BatcherConfig { max_batch, max_wait_us: 500, queue_cap: 64 };
+        Coordinator::new(cfg, sched)
+    }
+
+    #[test]
+    fn single_request_reduces_all_basis_outputs() {
+        // Σ of 0.5x + 0.25x + 0.25x = x
+        let c = scalar_coordinator(vec![0.5, 0.25, 0.25], 8);
+        let mut rng = Rng::seed(31);
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let resp = c.infer(x.clone()).unwrap();
+        for (a, b) in x.data().iter().zip(resp.logits.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(c.metrics.completed(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let c = Arc::new(scalar_coordinator(vec![1.0, 2.0], 4));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed(100 + t);
+                for _ in 0..5 {
+                    let x = Tensor::randn(&[1, 3], 1.0, &mut rng);
+                    let resp = c.infer(x.clone()).unwrap();
+                    // workers sum to 3x
+                    for (a, b) in x.data().iter().zip(resp.logits.data()) {
+                        assert!((a * 3.0 - b).abs() < 1e-4);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics.completed(), 40);
+    }
+
+    #[test]
+    fn batching_preserves_request_boundaries() {
+        let c = scalar_coordinator(vec![2.0], 16);
+        let mut rng = Rng::seed(9);
+        // different-sized requests interleaved
+        let xs: Vec<Tensor> = (1..=4).map(|n| Tensor::randn(&[n, 2], 1.0, &mut rng)).collect();
+        let rxs: Vec<_> = xs.iter().map(|x| c.submit(x.clone()).unwrap()).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.logits.dims(), x.dims());
+            for (a, b) in x.data().iter().zip(resp.logits.data()) {
+                assert!((a * 2.0 - b).abs() < 1e-5);
+            }
+        }
+        c.shutdown();
+    }
+}

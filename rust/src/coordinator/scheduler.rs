@@ -1,0 +1,102 @@
+//! Expansion scheduler: broadcast a formed batch to every basis worker,
+//! AbelianAdd-reduce the partial outputs (tree order — valid because ⊎
+//! is an Abelian group op), and scatter replies.
+
+use super::batcher::FormedBatch;
+use super::metrics::Metrics;
+use super::pool::WorkerPool;
+use super::Response;
+use crate::tensor::Tensor;
+use crate::xint::abelian::abelian_reduce;
+
+pub struct ExpansionScheduler {
+    pool: WorkerPool,
+    /// optional per-worker output gains (AbelianMul scale application);
+    /// length must equal the pool size when set
+    gains: Option<Vec<f32>>,
+}
+
+impl ExpansionScheduler {
+    pub fn new(pool: WorkerPool) -> ExpansionScheduler {
+        ExpansionScheduler { pool, gains: None }
+    }
+
+    /// Apply per-basis output gains before reduction (the AbelianMul
+    /// step: scale vectors distribute over ⊎).
+    pub fn with_gains(mut self, gains: Vec<f32>) -> ExpansionScheduler {
+        assert_eq!(gains.len(), self.pool.len());
+        self.gains = Some(gains);
+        self
+    }
+
+    /// Process one formed batch end to end.
+    pub fn process(&self, batch: FormedBatch, metrics: &Metrics) {
+        let t0 = std::time::Instant::now();
+        let result = self.forward(batch.x.clone());
+        match result {
+            Ok(logits) => {
+                let mut row = 0usize;
+                let classes = logits.dims()[1];
+                for (id, rows, reply, at) in batch.parts {
+                    let data = logits.data()[row * classes..(row + rows) * classes].to_vec();
+                    row += rows;
+                    // record BEFORE sending: the caller may assert on the
+                    // metrics immediately after receiving the reply
+                    metrics.record_completed(at.elapsed().as_secs_f64());
+                    let _ = reply.send(Response {
+                        id,
+                        logits: Tensor::from_vec(&[rows, classes], data),
+                        latency_s: at.elapsed().as_secs_f64(),
+                    });
+                }
+                metrics.record_batch(batch.x.dims()[0], t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                log::error!("batch failed: {e:#}");
+                metrics.record_failed(batch.parts.len());
+                // drop replies: receivers observe RecvError
+            }
+        }
+    }
+
+    /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree.
+    pub fn forward(&self, x: Tensor) -> anyhow::Result<Tensor> {
+        let outs = self.pool.broadcast(x)?;
+        let outs = match &self.gains {
+            Some(g) => outs
+                .into_iter()
+                .zip(g)
+                .map(|(o, &gain)| o.scale(gain))
+                .collect(),
+            None => outs,
+        };
+        abelian_reduce(outs).ok_or_else(|| anyhow::anyhow!("empty worker pool"))
+    }
+
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::BasisWorker;
+    use std::sync::Arc;
+
+    struct Id;
+    impl BasisWorker for Id {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(x.clone())
+        }
+    }
+
+    #[test]
+    fn gains_apply_abelian_mul() {
+        let pool = WorkerPool::new(3, Arc::new(|_| Box::new(Id) as Box<dyn BasisWorker>));
+        let sched = ExpansionScheduler::new(pool).with_gains(vec![1.0, 0.5, 0.25]);
+        let y = sched.forward(Tensor::vec1(&[8.0]).reshaped(&[1, 1])).unwrap();
+        assert!((y.data()[0] - 14.0).abs() < 1e-5); // 8·(1+0.5+0.25)
+        sched.shutdown();
+    }
+}

@@ -1,0 +1,193 @@
+//! Character-level LM corpus + synthetic-MMLU evaluation — the LLM
+//! stand-in for Table 6 (W4A16 weight-only expansion).
+//!
+//! The corpus is a generated "fact base": templated sentences over four
+//! subjects (the paper reports Humanities/STEM/Social/Other). A causal LM
+//! is trained on the corpus; the MMLU stand-in asks it to complete held-in
+//! facts against 3 distractors, scored by sequence log-likelihood — the
+//! same protocol MMLU uses for base models.
+
+use crate::tensor::Rng;
+
+/// Character vocabulary: lowercase letters, space, period = 28 symbols.
+pub const CHAR_VOCAB: usize = 28;
+
+pub fn encode_char(c: u8) -> usize {
+    match c {
+        b'a'..=b'z' => (c - b'a') as usize,
+        b' ' => 26,
+        _ => 27, // '.'
+    }
+}
+
+pub fn decode_char(t: usize) -> char {
+    match t {
+        0..=25 => (b'a' + t as u8) as char,
+        26 => ' ',
+        _ => '.',
+    }
+}
+
+/// The four MMLU-style subjects.
+pub const SUBJECTS: [&str; 4] = ["hums", "stem", "social", "other"];
+
+const ENTITIES: [&[&str]; 4] = [
+    &["plato", "homer", "dante", "ovid", "sappho", "virgil"],
+    &["quark", "proton", "vector", "tensor", "prime", "graph"],
+    &["market", "treaty", "senate", "tribe", "guild", "census"],
+    &["recipe", "harbor", "violin", "garden", "bridge", "lantern"],
+];
+
+const ATTRIBUTES: [&[&str]; 4] = [
+    &["wrote epics", "taught logic", "sang odes", "shaped myth"],
+    &["carries charge", "spans space", "divides evenly", "links nodes"],
+    &["sets prices", "binds states", "passes laws", "keeps records"],
+    &["feeds guests", "shelters ships", "makes music", "grows herbs"],
+];
+
+/// One multiple-choice question: a stem plus 4 candidate completions.
+#[derive(Clone, Debug)]
+pub struct McQuestion {
+    pub subject: usize,
+    pub stem: String,
+    pub choices: [String; 4],
+    pub answer: usize,
+}
+
+/// Char-LM training corpus + MMLU-style eval set.
+#[derive(Clone, Debug)]
+pub struct CharLmTask {
+    /// (entity, attribute-idx) ground-truth pairing per subject
+    truth: Vec<Vec<usize>>,
+    seed: u64,
+}
+
+impl CharLmTask {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::seed(seed);
+        // fix a random but consistent entity→attribute map per subject
+        let truth = ENTITIES
+            .iter()
+            .enumerate()
+            .map(|(s, ents)| (0..ents.len()).map(|_| rng.below(ATTRIBUTES[s].len())).collect())
+            .collect();
+        CharLmTask { truth, seed }
+    }
+
+    fn fact(&self, subject: usize, ent: usize) -> String {
+        format!(
+            "the {} {}.",
+            ENTITIES[subject][ent],
+            ATTRIBUTES[subject][self.truth[subject][ent]]
+        )
+    }
+
+    /// Full training corpus: every fact repeated with connective noise.
+    pub fn corpus(&self) -> String {
+        let mut rng = Rng::seed(self.seed ^ 0xC0FFEE);
+        let fillers = ["note that ", "recall ", "clearly ", "we know ", ""];
+        let mut out = String::new();
+        for _ in 0..40 {
+            for s in 0..4 {
+                for e in 0..ENTITIES[s].len() {
+                    out.push_str(fillers[rng.below(fillers.len())]);
+                    out.push_str(&self.fact(s, e));
+                    out.push(' ');
+                }
+            }
+        }
+        out
+    }
+
+    /// Corpus as token ids.
+    pub fn tokens(&self) -> Vec<usize> {
+        self.corpus().bytes().map(encode_char).collect()
+    }
+
+    /// MMLU-style eval: for each (subject, entity), the true attribute vs
+    /// 3 distractor attributes.
+    pub fn questions(&self) -> Vec<McQuestion> {
+        let mut rng = Rng::seed(self.seed ^ 0xE7A1_5EED);
+        let mut qs = Vec::new();
+        for s in 0..4 {
+            for e in 0..ENTITIES[s].len() {
+                let gold = self.truth[s][e];
+                let natt = ATTRIBUTES[s].len();
+                let mut distract: Vec<usize> = (0..natt).filter(|&a| a != gold).collect();
+                rng.shuffle(&mut distract);
+                let answer = rng.below(4);
+                let mut choices: Vec<String> = Vec::with_capacity(4);
+                let mut d = distract.into_iter();
+                for slot in 0..4 {
+                    let att = if slot == answer { gold } else { d.next().unwrap_or(gold) };
+                    choices.push(format!("{}.", ATTRIBUTES[s][att]));
+                }
+                qs.push(McQuestion {
+                    subject: s,
+                    stem: format!("the {} ", ENTITIES[s][e]),
+                    choices: [
+                        choices[0].clone(),
+                        choices[1].clone(),
+                        choices[2].clone(),
+                        choices[3].clone(),
+                    ],
+                    answer,
+                });
+            }
+        }
+        qs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for c in b'a'..=b'z' {
+            assert_eq!(decode_char(encode_char(c)) as u8, c);
+        }
+        assert_eq!(decode_char(encode_char(b' ')), ' ');
+        assert_eq!(decode_char(encode_char(b'.')), '.');
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_encodable() {
+        let t1 = CharLmTask::new(3);
+        let t2 = CharLmTask::new(3);
+        assert_eq!(t1.corpus(), t2.corpus());
+        assert!(t1.tokens().iter().all(|&t| t < CHAR_VOCAB));
+        assert!(t1.tokens().len() > 5000, "corpus too small");
+    }
+
+    #[test]
+    fn questions_have_unique_gold() {
+        let t = CharLmTask::new(3);
+        let qs = t.questions();
+        assert_eq!(qs.len(), 24);
+        for q in &qs {
+            assert!(q.answer < 4);
+            // gold choice text appears exactly once in the corpus context
+            let gold = &q.choices[q.answer];
+            for (i, c) in q.choices.iter().enumerate() {
+                if i != q.answer {
+                    assert_ne!(c, gold, "distractor equals gold in {q:?}");
+                }
+            }
+            // the concatenated stem+gold must literally appear in the corpus
+            let fact = format!("{}{}", q.stem, gold);
+            assert!(t.corpus().contains(&fact), "missing fact {fact}");
+        }
+    }
+
+    #[test]
+    fn subjects_covered() {
+        let t = CharLmTask::new(4);
+        let mut seen = [false; 4];
+        for q in t.questions() {
+            seen[q.subject] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

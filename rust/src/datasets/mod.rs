@@ -1,0 +1,51 @@
+//! Synthetic dataset substrates — the ImageNet / MNLI / SQuAD / MMLU
+//! stand-ins described in DESIGN.md §2. Everything is procedurally
+//! generated from a seed, so every table is exactly reproducible and no
+//! external data is required.
+
+pub mod charlm;
+pub mod synthimg;
+pub mod textgen;
+pub mod trace;
+
+pub use charlm::CharLmTask;
+pub use synthimg::SynthImg;
+pub use textgen::{EntailTask, SpanTask, VOCAB};
+pub use trace::{RequestTrace, TraceEvent};
+
+use crate::tensor::Tensor;
+
+/// A labelled classification batch: `x` (N,...) and integer labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Vec<usize>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// Top-1 accuracy of logits (N, K) against labels.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+    let pred = logits.argmax_rows();
+    let correct = pred.iter().zip(labels).filter(|(p, y)| p == y).count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_matches() {
+        let logits = Tensor::from_vec(&[3, 2], vec![1., 0., 0., 1., 1., 0.]);
+        assert!((accuracy(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

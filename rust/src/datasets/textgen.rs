@@ -1,0 +1,222 @@
+//! Synthetic token-sequence tasks — the MNLI / SQuAD stand-ins.
+//!
+//! A small formal grammar over a 32-token vocabulary generates premise /
+//! hypothesis pairs with a latent entailment relation (EntailTask → MNLI
+//! accuracy) and passages with an answer span marked by latent key tokens
+//! (SpanTask → SQuAD F1). Both need attention over token interactions to
+//! solve, so they exercise the transformer quantization path.
+
+use crate::tensor::Rng;
+
+/// Vocabulary: 0=PAD, 1=CLS, 2=SEP, 3..=30 content, 31=QUERY marker.
+pub const VOCAB: usize = 32;
+pub const PAD: usize = 0;
+pub const CLS: usize = 1;
+pub const SEP: usize = 2;
+pub const QUERY: usize = 31;
+const CONTENT_LO: usize = 3;
+const CONTENT_HI: usize = 30; // inclusive
+
+/// One tokenized example with a sequence label.
+#[derive(Clone, Debug)]
+pub struct SeqExample {
+    pub tokens: Vec<usize>,
+    pub label: usize,
+}
+
+/// One span-extraction example: find `[start, end]` of the answer.
+#[derive(Clone, Debug)]
+pub struct SpanExample {
+    pub tokens: Vec<usize>,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// 3-way entailment classification (entail / neutral / contradict).
+///
+/// Construction: premise = random content tokens. Entail hypothesis = a
+/// contiguous subsequence of the premise. Contradict hypothesis = the
+/// subsequence with each token mapped through a fixed involution (so the
+/// model must compare token identities across the SEP). Neutral = fresh
+/// random tokens.
+#[derive(Clone, Debug)]
+pub struct EntailTask {
+    pub seq_len: usize,
+    seed: u64,
+}
+
+impl EntailTask {
+    pub fn new(seq_len: usize, seed: u64) -> Self {
+        assert!(seq_len >= 12);
+        EntailTask { seq_len, seed }
+    }
+
+    /// Involution on content tokens ("antonym map").
+    fn antonym(t: usize) -> usize {
+        CONTENT_LO + (CONTENT_HI - t)
+    }
+
+    pub fn batch(&self, n: usize, which: u64) -> Vec<SeqExample> {
+        let mut rng = Rng::seed(self.seed ^ which.wrapping_mul(0xA24B_AED4_963E_E407));
+        (0..n).map(|_| self.sample(&mut rng)).collect()
+    }
+
+    fn sample(&self, rng: &mut Rng) -> SeqExample {
+        let label = rng.below(3);
+        let prem_len = (self.seq_len - 4) * 2 / 3;
+        let hyp_len = self.seq_len - 4 - prem_len;
+        let premise: Vec<usize> =
+            (0..prem_len).map(|_| CONTENT_LO + rng.below(CONTENT_HI - CONTENT_LO + 1)).collect();
+        let start = rng.below(prem_len - hyp_len + 1);
+        let hypothesis: Vec<usize> = match label {
+            0 => premise[start..start + hyp_len].to_vec(), // entail
+            1 => (0..hyp_len)
+                .map(|_| CONTENT_LO + rng.below(CONTENT_HI - CONTENT_LO + 1))
+                .collect(), // neutral
+            _ => premise[start..start + hyp_len].iter().map(|&t| Self::antonym(t)).collect(),
+        };
+        let mut tokens = Vec::with_capacity(self.seq_len);
+        tokens.push(CLS);
+        tokens.extend(&premise);
+        tokens.push(SEP);
+        tokens.extend(&hypothesis);
+        tokens.push(SEP);
+        while tokens.len() < self.seq_len {
+            tokens.push(PAD);
+        }
+        SeqExample { tokens, label }
+    }
+}
+
+/// Span extraction: a passage contains a QUERY token followed by a key
+/// token `k`; the answer is the (unique) earlier run of tokens bracketed
+/// by two copies of `k`. F1 is computed over token overlap as in SQuAD.
+#[derive(Clone, Debug)]
+pub struct SpanTask {
+    pub seq_len: usize,
+    seed: u64,
+}
+
+impl SpanTask {
+    pub fn new(seq_len: usize, seed: u64) -> Self {
+        assert!(seq_len >= 16);
+        SpanTask { seq_len, seed }
+    }
+
+    pub fn batch(&self, n: usize, which: u64) -> Vec<SpanExample> {
+        let mut rng = Rng::seed(self.seed ^ which.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        (0..n).map(|_| self.sample(&mut rng)).collect()
+    }
+
+    fn sample(&self, rng: &mut Rng) -> SpanExample {
+        let body = self.seq_len - 3; // CLS ... QUERY key
+        let key = CONTENT_LO + rng.below(CONTENT_HI - CONTENT_LO + 1);
+        // fill passage with content tokens != key
+        let mut tokens: Vec<usize> = vec![CLS];
+        for _ in 0..body {
+            let mut t = CONTENT_LO + rng.below(CONTENT_HI - CONTENT_LO + 1);
+            while t == key {
+                t = CONTENT_LO + rng.below(CONTENT_HI - CONTENT_LO + 1);
+            }
+            tokens.push(t);
+        }
+        // choose answer span [start, end] inside the passage, bracket with key
+        let span_len = 1 + rng.below(3);
+        let start = 2 + rng.below(body.saturating_sub(span_len + 4));
+        let end = start + span_len - 1;
+        tokens[start - 1] = key;
+        tokens[end + 1] = key;
+        tokens.push(QUERY);
+        tokens.push(key);
+        SpanExample { tokens, start, end }
+    }
+}
+
+/// SQuAD-style token-overlap F1 between predicted and gold span.
+pub fn span_f1(pred: (usize, usize), gold: (usize, usize)) -> f64 {
+    let (ps, pe) = (pred.0.min(pred.1), pred.0.max(pred.1));
+    let (gs, ge) = gold;
+    let inter = (pe.min(ge) + 1).saturating_sub(ps.max(gs));
+    if inter == 0 {
+        return 0.0;
+    }
+    let p = inter as f64 / (pe - ps + 1) as f64;
+    let r = inter as f64 / (ge - gs + 1) as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entail_batch_well_formed() {
+        let t = EntailTask::new(24, 5);
+        for ex in t.batch(64, 0) {
+            assert_eq!(ex.tokens.len(), 24);
+            assert_eq!(ex.tokens[0], CLS);
+            assert!(ex.label < 3);
+            assert!(ex.tokens.iter().all(|&t| t < VOCAB));
+        }
+    }
+
+    #[test]
+    fn entail_labels_balanced_and_deterministic() {
+        let t = EntailTask::new(24, 5);
+        let b1 = t.batch(300, 0);
+        let b2 = t.batch(300, 0);
+        assert_eq!(b1.len(), b2.len());
+        assert!(b1.iter().zip(&b2).all(|(a, b)| a.tokens == b.tokens && a.label == b.label));
+        let counts = b1.iter().fold([0usize; 3], |mut c, e| {
+            c[e.label] += 1;
+            c
+        });
+        for c in counts {
+            assert!(c > 60, "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn entail_signal_exists() {
+        // entailed hypothesis tokens must appear in the premise
+        let t = EntailTask::new(24, 9);
+        for ex in t.batch(100, 1) {
+            if ex.label == 0 {
+                let sep = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+                let premise = &ex.tokens[1..sep];
+                let hyp: Vec<usize> = ex.tokens[sep + 1..]
+                    .iter()
+                    .cloned()
+                    .take_while(|&t| t != SEP)
+                    .collect();
+                for h in hyp {
+                    assert!(premise.contains(&h));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn span_batch_keys_bracket_answer() {
+        let t = SpanTask::new(32, 11);
+        for ex in t.batch(64, 0) {
+            assert_eq!(ex.tokens.len(), 32);
+            let key = *ex.tokens.last().unwrap();
+            assert_eq!(ex.tokens[ex.start - 1], key);
+            assert_eq!(ex.tokens[ex.end + 1], key);
+            assert!(ex.start <= ex.end);
+            // answer span itself must not contain the key
+            for i in ex.start..=ex.end {
+                assert_ne!(ex.tokens[i], key);
+            }
+        }
+    }
+
+    #[test]
+    fn f1_known_values() {
+        assert_eq!(span_f1((3, 5), (3, 5)), 1.0);
+        assert_eq!(span_f1((0, 1), (5, 6)), 0.0);
+        let f = span_f1((3, 4), (4, 5)); // overlap 1, both len 2
+        assert!((f - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,31 @@
+//! # FP=xINT — low-bit series expansion for post-training quantization
+//!
+//! Reproduction of "FP=xINT: A Low-Bit Series Expansion Algorithm for
+//! Post-Training Quantization" (AAAI 2026) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 1** (build-time Python): Pallas kernels for residual series
+//!   decomposition and the stacked xINT GEMM (`python/compile/kernels/`).
+//! * **Layer 2** (build-time Python): JAX model graphs lowered AOT to HLO
+//!   text (`python/compile/model.py`, `aot.py` → `artifacts/`).
+//! * **Layer 3** (this crate): the serving coordinator — request routing,
+//!   dynamic batching, basis-model scheduling, AbelianAdd AllReduce — plus
+//!   every substrate the paper depends on, implemented from scratch:
+//!   tensors, NN inference + training, quantizers, PTQ baselines, synthetic
+//!   datasets, a PJRT runtime wrapper, and benchmark harnesses that
+//!   regenerate every table and figure of the paper (see DESIGN.md §5).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod coordinator;
+pub mod datasets;
+pub mod models;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod xint;
+
+/// Crate version reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

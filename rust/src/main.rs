@@ -1,0 +1,182 @@
+//! `fp-xint` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   quantize  — train (or load) a model, series-expand it, report accuracy
+//!   serve     — start the TCP serving coordinator over basis workers
+//!   eval      — FP vs xINT vs baseline accuracy on the synthetic val set
+//!   info      — artifact manifest + environment report
+
+use fp_xint::baselines::{self, PtqMethod};
+use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+use fp_xint::datasets::{accuracy, SynthImg};
+use fp_xint::models::{quantized, zoo};
+use fp_xint::serve::{self, workers::MlpWeights};
+use fp_xint::tensor::Tensor;
+use fp_xint::train::{trained_model_cached, TrainConfig};
+use fp_xint::util::{cli::Args, logger, Table};
+use fp_xint::xint::layer::LayerPolicy;
+use std::sync::Arc;
+
+fn main() {
+    let mut args = Args::from_env();
+    let verbose = args.flag("verbose");
+    logger::init(verbose);
+    match args.subcommand().map(|s| s.to_string()).as_deref() {
+        Some("quantize") => cmd_quantize(args),
+        Some("serve") => cmd_serve(args),
+        Some("eval") => cmd_eval(args),
+        Some("info") => cmd_info(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!(
+                "fp-xint {} — low-bit series expansion PTQ\n\
+                 usage: fp-xint <quantize|serve|eval|info> [--bits N] [--w-terms K] \n\
+                 [--a-terms T] [--model NAME] [--steps N] [--port P] [--verbose]",
+                fp_xint::VERSION
+            );
+            std::process::exit(if other.is_some() { 2 } else { 0 });
+        }
+    }
+}
+
+fn load_model(name: &str, steps: usize) -> (fp_xint::models::Model, SynthImg, f64) {
+    let data = SynthImg::standard(42);
+    let build: Box<dyn Fn() -> fp_xint::models::Model> = match name {
+        "mini-resnet-a" => Box::new(|| zoo::mini_resnet_a(10, 1)),
+        "mini-resnet-b" => Box::new(|| zoo::mini_resnet_b(10, 2)),
+        "mini-resnet-c" => Box::new(|| zoo::mini_resnet_c(10, 3)),
+        "regnet" => Box::new(|| zoo::regnet_style(10, 5)),
+        "inception" => Box::new(|| zoo::inception_style(10, 6)),
+        "mobilenet" => Box::new(|| zoo::mobilenet_style(10, 7)),
+        "mlp" => Box::new(|| zoo::mlp(256, &[64], 10, 8)),
+        other => {
+            eprintln!("unknown model {other}");
+            std::process::exit(2);
+        }
+    };
+    let cfg = TrainConfig { steps, ..Default::default() };
+    let (m, acc) = trained_model_cached(&format!("cli_{name}"), &*build, &data, &cfg);
+    (m, data, acc)
+}
+
+fn cmd_quantize(mut args: Args) {
+    let bits: u32 = args.get_num("bits", 4);
+    let w_terms: usize = args.get_num("w-terms", 2);
+    let a_terms: usize = args.get_num("a-terms", 4);
+    let steps: usize = args.get_num("steps", 400);
+    let model_name = args.get("model", "mini-resnet-a");
+    let (model, data, fp_acc) = load_model(&model_name, steps);
+    let policy = LayerPolicy::new(bits, bits).with_terms(w_terms, a_terms);
+    let (q, dt) = fp_xint::util::timer::time_once(|| quantized::quantize_model(&model, policy));
+    let val = data.batch(512, 2);
+    let q_acc = accuracy(&q.forward(&val.x), &val.y);
+    let mut t = Table::new(
+        &format!("{model_name} W{bits}A{bits} (k={w_terms}, t={a_terms})"),
+        &["metric", "value"],
+    );
+    t.row_str(&["FP val acc", &format!("{:.2}%", fp_acc * 100.0)]);
+    t.row_str(&["xINT val acc", &format!("{:.2}%", q_acc * 100.0)]);
+    t.row_str(&["quantization time", &format!("{dt:.3}s")]);
+    t.row_str(&["quantized size", &format!("{} B", q.storage_bytes())]);
+    t.print();
+}
+
+fn cmd_eval(mut args: Args) {
+    let bits: u32 = args.get_num("bits", 4);
+    let steps: usize = args.get_num("steps", 400);
+    let model_name = args.get("model", "mini-resnet-a");
+    let (model, data, fp_acc) = load_model(&model_name, steps);
+    let val = data.batch(512, 2);
+    let calib = data.batch(32, 3).x;
+    let mut t = Table::new(
+        &format!("{model_name} — W{bits}A{bits} method comparison"),
+        &["method", "val acc"],
+    );
+    t.row_str(&["Full Prec.", &format!("{:.2}%", fp_acc * 100.0)]);
+    let methods: Vec<Box<dyn PtqMethod>> = vec![
+        Box::new(baselines::Rtn),
+        Box::new(baselines::Aciq),
+        Box::new(baselines::AdaQuant::default()),
+    ];
+    for m in methods {
+        let q = m.quantize(&model, bits, bits, &calib);
+        let acc = accuracy(&q.forward(&val.x), &val.y);
+        t.row_str(&[m.name(), &format!("{:.2}%", acc * 100.0)]);
+    }
+    let q = quantized::quantize_model(&model, LayerPolicy::new(bits, bits));
+    let acc = accuracy(&q.forward(&val.x), &val.y);
+    t.row_str(&["Ours (series)", &format!("{:.2}%", acc * 100.0)]);
+    t.print();
+}
+
+fn cmd_serve(mut args: Args) {
+    let bits: u32 = args.get_num("bits", 8);
+    let terms: usize = args.get_num("terms", 3);
+    let port: u16 = args.get_num("port", 7878);
+    let steps: usize = args.get_num("steps", 300);
+    // MLP serving path (matches the AOT artifacts' geometry)
+    let (mut model, _data, _) = load_model("mlp", steps);
+    model.fold_bn();
+    let weights = mlp_weights_of(&model);
+    let pool = WorkerPool::new(terms, serve::workers::mlp_basis_factory(&weights, bits, terms));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig::default(),
+        ExpansionScheduler::new(pool),
+    ));
+    let handle =
+        serve::serve_tcp(&format!("127.0.0.1:{port}"), coord.clone()).expect("bind server");
+    println!("serving xINT basis models on {} (Ctrl-C to stop)", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let s = coord.metrics.latency_summary();
+        log::info!(
+            "completed {} failed {} mean batch {:.1} p50 {:.2}ms",
+            coord.metrics.completed(),
+            coord.metrics.failed(),
+            coord.metrics.mean_batch_size(),
+            s.p50 * 1e3
+        );
+    }
+}
+
+fn mlp_weights_of(model: &fp_xint::models::Model) -> MlpWeights {
+    use fp_xint::models::Layer;
+    let linears: Vec<&fp_xint::models::LinearLayer> = model
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Linear(lin) => Some(lin),
+            _ => None,
+        })
+        .collect();
+    assert!(linears.len() >= 2, "serve expects the MLP model");
+    MlpWeights {
+        w1: linears[0].w.clone(),
+        b1: linears[0].b.clone().unwrap_or_else(|| Tensor::zeros(&[linears[0].w.dims()[0]])),
+        w2: linears[1].w.clone(),
+        b2: linears[1].b.clone().unwrap_or_else(|| Tensor::zeros(&[linears[1].w.dims()[0]])),
+    }
+}
+
+fn cmd_info() {
+    println!("fp-xint {}", fp_xint::VERSION);
+    let dir = fp_xint::runtime::Runtime::default_artifact_dir();
+    match fp_xint::runtime::Manifest::load(dir.join("manifest.json")) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} entries (din={} hidden={} classes={} bits={})",
+                m.artifacts.len(),
+                m.din,
+                m.hidden,
+                m.classes,
+                m.bits
+            );
+            for (k, v) in &m.artifacts {
+                println!("  {k} -> {v}");
+            }
+        }
+        Err(e) => println!("no artifacts ({e:#}); run `make artifacts`"),
+    }
+}

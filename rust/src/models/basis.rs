@@ -1,0 +1,250 @@
+//! Theorem 2 for arbitrary graphs — model-level low-bit expansion.
+//!
+//! `basis_slices(model, bits, terms)` builds `terms` isomorphic basis
+//! models: slice `i` carries term `i` of every conv/linear weight's
+//! series expansion (a scaled INT plane, §3.3's `model_i`), biases are
+//! split `1/t` across slices (the paper's "copy other layers and divide"
+//! rule), and a one-step activation quantizer is inserted after every
+//! matmul layer (each basis model is a genuine low-bit model). The
+//! coordinator evaluates the slices in parallel and AbelianAdd-reduces
+//! their outputs.
+//!
+//! The reduction over slices equals the layer-sync quantized model only
+//! up to the nonlinearity-interchange error (ReLU does not commute with
+//! ⊎) — the gap Theorem 2's proof glosses over; `tests` and
+//! EXPERIMENTS.md measure it instead of assuming it away.
+
+use super::graph::{Layer, Model};
+use crate::tensor::Tensor;
+use crate::xint::expansion::{ExpandConfig, SeriesExpansion};
+use crate::xint::quantizer::{channel_range, Clip, Symmetry};
+use crate::xint::BitSpec;
+
+/// Build the `terms` basis slices of a (BN-folded) model.
+pub fn basis_slices(model: &Model, bits: u32, terms: usize) -> Vec<Model> {
+    assert!(terms >= 1);
+    let mut folded = model.clone();
+    folded.fold_bn();
+    let w_cfg = ExpandConfig {
+        bits: BitSpec::int(bits),
+        terms,
+        symmetry: Symmetry::Symmetric,
+        clip: Clip::None,
+        channel_axis: Some(0),
+    };
+    (0..terms)
+        .map(|slice| {
+            let mut m = folded.clone();
+            m.name = format!("{}-basis{}", model.name, slice);
+            slice_layers(&mut m.layers, slice, terms, &w_cfg, bits);
+            m
+        })
+        .collect()
+}
+
+fn slice_layers(layers: &mut Vec<Layer>, slice: usize, terms: usize, w_cfg: &ExpandConfig, bits: u32) {
+    let mut i = 0;
+    while i < layers.len() {
+        let mut insert_quant = false;
+        match &mut layers[i] {
+            Layer::Conv(c) => {
+                let flat_dims = [c.w.dims()[0], c.w.numel() / c.w.dims()[0]];
+                let flat = c.w.reshape(&flat_dims);
+                let e = SeriesExpansion::expand(&flat, w_cfg);
+                c.w = e.term_tensor(slice).reshaped(c.w.dims());
+                if let Some(b) = &mut c.b {
+                    *b = b.scale(1.0 / terms as f32);
+                }
+                insert_quant = true;
+            }
+            Layer::Linear(l) => {
+                let e = SeriesExpansion::expand(&l.w, w_cfg);
+                l.w = e.term_tensor(slice);
+                if let Some(b) = &mut l.b {
+                    *b = b.scale(1.0 / terms as f32);
+                }
+                insert_quant = true;
+            }
+            Layer::Residual(m, s) => {
+                slice_layers(m, slice, terms, w_cfg, bits);
+                slice_layers(s, slice, terms, w_cfg, bits);
+            }
+            Layer::Branches(bs) => {
+                for b in bs.iter_mut() {
+                    slice_layers(b, slice, terms, w_cfg, bits);
+                }
+            }
+            Layer::Bn(_) => panic!("fold_bn before slicing"),
+            _ => {}
+        }
+        if insert_quant {
+            // one-step activation quantizer; range resolved lazily at the
+            // first forward would need state — use a generous static range
+            // refreshed by calibrate_slices()
+            layers.insert(
+                i + 1,
+                Layer::ActQuant(
+                    crate::xint::quantizer::Range { bias: 0.0, half_width: 0.0 },
+                    BitSpec::int(bits),
+                ),
+            );
+            i += 1;
+        }
+        i += 1;
+    }
+}
+
+/// Calibrate every ActQuant range in each slice on a probe batch (ranges
+/// observed on the *slice's own* activations — each basis model sees its
+/// own scale `s_i` worth of signal).
+pub fn calibrate_slices(slices: &mut [Model], probe: &Tensor, bits: u32) {
+    for m in slices {
+        calibrate_walk(&mut m.layers, probe, bits);
+    }
+}
+
+fn calibrate_walk(layers: &mut [Layer], x: &Tensor, bits: u32) -> Tensor {
+    let mut h = x.clone();
+    let mut i = 0;
+    while i < layers.len() {
+        match &mut layers[i] {
+            Layer::Residual(m, s) => {
+                let hm = calibrate_walk(m, &h, bits);
+                let hs = calibrate_walk(s, &h, bits);
+                h = hm.add(&hs);
+            }
+            Layer::Branches(bs) => {
+                let outs: Vec<Tensor> =
+                    bs.iter_mut().map(|b| calibrate_walk(b, &h, bits)).collect();
+                h = super::graph::concat_channels_pub(&outs);
+            }
+            Layer::ActQuant(r, _) => {
+                *r = channel_range(h.data(), Symmetry::Symmetric, Clip::None, bits);
+                h = layers[i].forward(&h);
+            }
+            other => {
+                h = other.forward(&h);
+            }
+        }
+        i += 1;
+    }
+    h
+}
+
+/// Evaluate the AllReduce of the slices on a batch.
+pub fn forward_reduced(slices: &[Model], x: &Tensor) -> Tensor {
+    crate::xint::abelian::abelian_reduce(slices.iter().map(|m| m.forward(x)).collect())
+        .expect("at least one slice")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SynthImg;
+    use crate::models::zoo;
+    use crate::train::TrainConfig;
+    use once_cell::sync::Lazy;
+
+    static FIX: Lazy<(Model, SynthImg)> = Lazy::new(|| {
+        let data = SynthImg::new(4, 1, 12, 0.2, 301);
+        let mut m = zoo::mini_resnet_a(4, 302);
+        let cfg = TrainConfig { steps: 100, batch: 24, lr: 0.05, log_every: 1000 };
+        crate::train::train_classifier(&mut m, &data, &cfg);
+        (m, data)
+    });
+
+    #[test]
+    fn slices_are_isomorphic_and_low_bit() {
+        let (m, data) = &*FIX;
+        let mut slices = basis_slices(m, 8, 3);
+        assert_eq!(slices.len(), 3);
+        let probe = data.batch(8, 3).x;
+        calibrate_slices(&mut slices, &probe, 8);
+        // every slice runs and produces the same output shape
+        for s in &slices {
+            let y = s.forward(&probe);
+            assert_eq!(y.dims(), &[8, 4], "{}", s.name);
+            assert!(y.data().iter().all(|v| v.is_finite()), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn weight_sum_over_slices_reconstructs_folded_weights() {
+        // Σᵢ W_i == folded FP weights within the Theorem-1 bound —
+        // the weight-side half of Theorem 2 is exact
+        let (m, _) = &*FIX;
+        let terms = 3;
+        let slices = basis_slices(m, 8, terms);
+        let mut folded = m.clone();
+        folded.fold_bn();
+        // compare the first conv weight
+        let first_conv = |mm: &Model| -> Tensor {
+            for l in &mm.layers {
+                if let Layer::Conv(c) = l {
+                    return c.w.clone();
+                }
+            }
+            panic!("no conv")
+        };
+        let want = first_conv(&folded);
+        let mut sum = Tensor::zeros(want.dims());
+        for s in &slices {
+            sum.axpy(1.0, &first_conv(s));
+        }
+        let err = want.sub(&sum).max_abs();
+        // 8-bit × 3 terms → residual ≤ max|w| / 2^{8·3+1}, ~float noise
+        assert!(err < 1e-4 * (1.0 + want.max_abs()), "weight sum err {err}");
+    }
+
+    #[test]
+    fn reduced_slices_track_fp_and_improve_with_terms() {
+        let (m, data) = &*FIX;
+        let probe = data.batch(32, 3).x;
+        let val = data.batch(128, 2);
+        let mut folded = m.clone();
+        folded.fold_bn();
+        let fp_acc = crate::datasets::accuracy(&folded.forward(&val.x), &val.y);
+        let acc_of = |terms: usize| {
+            let mut slices = basis_slices(m, 8, terms);
+            calibrate_slices(&mut slices, &probe, 8);
+            let y = forward_reduced(&slices, &val.x);
+            crate::datasets::accuracy(&y, &val.y)
+        };
+        let a2 = acc_of(2);
+        let a4 = acc_of(4);
+        // Honest Theorem-2 finding (soundness 0/5 in the calibration
+        // bands): the t diagonal slices drop all (i≠j) cross terms AND
+        // split biases 1/t, so ReLU(Wᵢx + b/t) errors COMPOUND with both
+        // depth and t — measured here: t=2 is near-FP (term 0 dominates
+        // at 8 bits) while t=4 drops tens of points. Model-parallel mode
+        // is therefore only exact for shallow/linear nets; deep nets need
+        // the layer-sync mode (which all accuracy tables use). Quantified
+        // in EXPERIMENTS.md as a paper-claim deviation.
+        assert!(a2 >= fp_acc - 0.05, "t=2 should be near FP: {a2:.3} vs {fp_acc:.3}");
+        assert!(a4 > 0.40, "t=4 slices acc {a4:.3} (chance 0.25)");
+        assert!(
+            a4 <= a2 + 0.02,
+            "expected the interchange error to grow with t: {a2:.3} -> {a4:.3}"
+        );
+    }
+
+    #[test]
+    fn interchange_gap_is_measurable_and_bounded() {
+        // quantify the Theorem-2 gap: reduced-slices output vs the
+        // layer-sync quantized model output
+        let (m, data) = &*FIX;
+        let probe = data.batch(16, 3).x;
+        let mut slices = basis_slices(m, 8, 3);
+        calibrate_slices(&mut slices, &probe, 8);
+        let y_par = forward_reduced(&slices, &probe);
+        let q = crate::models::quantized::quantize_model(
+            m,
+            crate::xint::layer::LayerPolicy::new(8, 8).with_terms(3, 2),
+        );
+        let y_sync = q.forward(&probe);
+        let gap = y_sync.sub(&y_par).norm() / y_sync.norm();
+        // nonzero (ReLU doesn't commute with ⊎) but bounded
+        assert!(gap > 1e-6, "gap suspiciously zero");
+        assert!(gap < 1.0, "interchange gap blew up: {gap}");
+    }
+}

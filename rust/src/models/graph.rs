@@ -1,0 +1,596 @@
+//! Sequential model graph with residual blocks and inception-style
+//! branches — rich enough to express every architecture in the paper's
+//! Table 1 suite while keeping manual backprop tractable.
+
+use super::layers::{BatchNorm, ConvLayer, LinearLayer};
+use crate::tensor::Tensor;
+use crate::xint::quantizer::{fake_quant, Range};
+use crate::xint::BitSpec;
+
+/// A graph node.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Conv(ConvLayer),
+    Bn(BatchNorm),
+    Linear(LinearLayer),
+    ReLU,
+    Gelu,
+    MaxPool2,
+    GlobalAvgPool,
+    Flatten,
+    /// residual block: `y = main(x) + shortcut(x)` (empty shortcut = identity)
+    Residual(Vec<Layer>, Vec<Layer>),
+    /// inception-style: run branches in parallel, concat along channels
+    Branches(Vec<Vec<Layer>>),
+    /// activation fake-quantization (inserted by PTQ baselines)
+    ActQuant(Range, BitSpec),
+}
+
+/// Per-layer forward cache for backprop.
+#[derive(Clone, Debug)]
+enum Cache {
+    None,
+    Relu(Tensor),            // input
+    Gelu(Tensor),            // input
+    MaxPool(Tensor),         // input
+    Gap(Vec<usize>),         // input dims
+    Flatten(Vec<usize>),     // input dims
+    Residual(Vec<Cache>, Vec<Cache>),
+    Branches(Vec<Vec<Cache>>, Vec<usize>), // per-branch caches + out channels
+}
+
+/// A named sequential model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    caches: Vec<Cache>,
+}
+
+impl Layer {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match self {
+            Layer::Conv(c) => c.forward(x),
+            Layer::Bn(b) => b.forward(x),
+            Layer::Linear(l) => l.forward(x),
+            Layer::ReLU => x.relu(),
+            Layer::Gelu => x.gelu(),
+            Layer::MaxPool2 => x.maxpool2(),
+            Layer::GlobalAvgPool => x.global_avg_pool(),
+            Layer::Flatten => {
+                let n = x.dims()[0];
+                x.reshape(&[n, x.numel() / n])
+            }
+            Layer::Residual(main, short) => {
+                let mut h = x.clone();
+                for l in main {
+                    h = l.forward(&h);
+                }
+                let mut s = x.clone();
+                for l in short {
+                    s = l.forward(&s);
+                }
+                h.add(&s)
+            }
+            Layer::Branches(branches) => {
+                let outs: Vec<Tensor> = branches
+                    .iter()
+                    .map(|b| {
+                        let mut h = x.clone();
+                        for l in b {
+                            h = l.forward(&h);
+                        }
+                        h
+                    })
+                    .collect();
+                concat_channels(&outs)
+            }
+            Layer::ActQuant(r, spec) => {
+                Tensor::from_vec(x.dims(), fake_quant(x.data(), *r, *spec))
+            }
+        }
+    }
+
+    fn forward_train(&mut self, x: &Tensor) -> (Tensor, Cache) {
+        match self {
+            Layer::Conv(c) => (c.forward_train(x), Cache::None),
+            Layer::Bn(b) => (b.forward_train(x), Cache::None),
+            Layer::Linear(l) => (l.forward_train(x), Cache::None),
+            Layer::ReLU => (x.relu(), Cache::Relu(x.clone())),
+            Layer::Gelu => (x.gelu(), Cache::Gelu(x.clone())),
+            Layer::MaxPool2 => (x.maxpool2(), Cache::MaxPool(x.clone())),
+            Layer::GlobalAvgPool => (x.global_avg_pool(), Cache::Gap(x.dims().to_vec())),
+            Layer::Flatten => {
+                let n = x.dims()[0];
+                (x.reshape(&[n, x.numel() / n]), Cache::Flatten(x.dims().to_vec()))
+            }
+            Layer::Residual(main, short) => {
+                let mut h = x.clone();
+                let mut mc = Vec::new();
+                for l in main.iter_mut() {
+                    let (nh, c) = l.forward_train(&h);
+                    h = nh;
+                    mc.push(c);
+                }
+                let mut s = x.clone();
+                let mut sc = Vec::new();
+                for l in short.iter_mut() {
+                    let (ns, c) = l.forward_train(&s);
+                    s = ns;
+                    sc.push(c);
+                }
+                (h.add(&s), Cache::Residual(mc, sc))
+            }
+            Layer::Branches(branches) => {
+                let mut outs = Vec::new();
+                let mut caches = Vec::new();
+                let mut chans = Vec::new();
+                for b in branches.iter_mut() {
+                    let mut h = x.clone();
+                    let mut bc = Vec::new();
+                    for l in b.iter_mut() {
+                        let (nh, c) = l.forward_train(&h);
+                        h = nh;
+                        bc.push(c);
+                    }
+                    chans.push(h.dims()[1]);
+                    outs.push(h);
+                    caches.push(bc);
+                }
+                (concat_channels(&outs), Cache::Branches(caches, chans))
+            }
+            Layer::ActQuant(r, spec) => {
+                // straight-through estimator: cache nothing, pass grads
+                (Tensor::from_vec(x.dims(), fake_quant(x.data(), *r, *spec)), Cache::None)
+            }
+        }
+    }
+
+    fn backward(&mut self, dy: &Tensor, cache: &Cache) -> Tensor {
+        match (self, cache) {
+            (Layer::Conv(c), _) => c.backward(dy),
+            (Layer::Bn(b), _) => b.backward(dy),
+            (Layer::Linear(l), _) => l.backward(dy),
+            (Layer::ReLU, Cache::Relu(x)) => {
+                dy.zip(x, |g, v| if v > 0.0 { g } else { 0.0 })
+            }
+            (Layer::Gelu, Cache::Gelu(x)) => {
+                dy.zip(x, |g, v| g * crate::tensor::gelu_grad(v))
+            }
+            (Layer::MaxPool2, Cache::MaxPool(x)) => maxpool2_backward(x, dy),
+            (Layer::GlobalAvgPool, Cache::Gap(dims)) => {
+                let (n, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+                let mut dx = Tensor::zeros(dims);
+                let inv = 1.0 / (h * w) as f32;
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let g = dy.at(&[ni, ci]) * inv;
+                        let base = (ni * c + ci) * h * w;
+                        for v in &mut dx.data_mut()[base..base + h * w] {
+                            *v = g;
+                        }
+                    }
+                }
+                dx
+            }
+            (Layer::Flatten, Cache::Flatten(dims)) => dy.reshape(dims),
+            (Layer::Residual(main, short), Cache::Residual(mc, sc)) => {
+                let mut g = dy.clone();
+                for (l, c) in main.iter_mut().rev().zip(mc.iter().rev()) {
+                    g = l.backward(&g, c);
+                }
+                let mut gs = dy.clone();
+                for (l, c) in short.iter_mut().rev().zip(sc.iter().rev()) {
+                    gs = l.backward(&gs, c);
+                }
+                g.add(&gs)
+            }
+            (Layer::Branches(branches), Cache::Branches(caches, chans)) => {
+                let mut dx: Option<Tensor> = None;
+                let mut off = 0;
+                for ((b, bc), &ch) in branches.iter_mut().zip(caches).zip(chans) {
+                    let dyb = slice_channels(dy, off, ch);
+                    off += ch;
+                    let mut g = dyb;
+                    for (l, c) in b.iter_mut().rev().zip(bc.iter().rev()) {
+                        g = l.backward(&g, c);
+                    }
+                    dx = Some(match dx {
+                        Some(acc) => acc.add(&g),
+                        None => g,
+                    });
+                }
+                dx.expect("at least one branch")
+            }
+            (Layer::ActQuant(..), _) => dy.clone(), // straight-through
+            (l, c) => panic!("cache mismatch for {l:?} vs {c:?}"),
+        }
+    }
+
+    /// Parameter count (recursive).
+    pub fn params(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.params(),
+            Layer::Bn(b) => b.params(),
+            Layer::Linear(l) => l.params(),
+            Layer::Residual(m, s) => {
+                m.iter().map(|l| l.params()).sum::<usize>()
+                    + s.iter().map(|l| l.params()).sum::<usize>()
+            }
+            Layer::Branches(bs) => {
+                bs.iter().flat_map(|b| b.iter().map(|l| l.params())).sum()
+            }
+            _ => 0,
+        }
+    }
+
+    /// Visit every (param, grad) pair.
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &Tensor)) {
+        match self {
+            Layer::Conv(c) => {
+                f(&mut c.w, &c.gw.clone());
+                if let (Some(b), Some(gb)) = (&mut c.b, &c.gb) {
+                    f(b, &gb.clone());
+                }
+            }
+            Layer::Bn(b) => {
+                f(&mut b.gamma, &b.ggamma.clone());
+                f(&mut b.beta, &b.gbeta.clone());
+            }
+            Layer::Linear(l) => {
+                f(&mut l.w, &l.gw.clone());
+                if let (Some(b), Some(gb)) = (&mut l.b, &l.gb) {
+                    f(b, &gb.clone());
+                }
+            }
+            Layer::Residual(m, s) => {
+                for l in m.iter_mut().chain(s.iter_mut()) {
+                    l.visit_params(f);
+                }
+            }
+            Layer::Branches(bs) => {
+                for b in bs {
+                    for l in b {
+                        l.visit_params(f);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Zero all gradients.
+    pub fn zero_grad(&mut self) {
+        match self {
+            Layer::Conv(c) => {
+                c.gw.map_inplace(|_| 0.0);
+                if let Some(gb) = &mut c.gb {
+                    gb.map_inplace(|_| 0.0);
+                }
+            }
+            Layer::Bn(b) => {
+                b.ggamma.map_inplace(|_| 0.0);
+                b.gbeta.map_inplace(|_| 0.0);
+            }
+            Layer::Linear(l) => {
+                l.gw.map_inplace(|_| 0.0);
+                if let Some(gb) = &mut l.gb {
+                    gb.map_inplace(|_| 0.0);
+                }
+            }
+            Layer::Residual(m, s) => {
+                for l in m.iter_mut().chain(s.iter_mut()) {
+                    l.zero_grad();
+                }
+            }
+            Layer::Branches(bs) => {
+                for b in bs {
+                    for l in b {
+                        l.zero_grad();
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+impl Model {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Self {
+        Model { name: name.to_string(), layers, caches: Vec::new() }
+    }
+
+    /// Inference forward.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        for l in &self.layers {
+            h = l.forward(&h);
+        }
+        h
+    }
+
+    /// Training forward (records caches).
+    pub fn forward_train(&mut self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        self.caches.clear();
+        for l in &mut self.layers {
+            let (nh, c) = l.forward_train(&h);
+            h = nh;
+            self.caches.push(c);
+        }
+        h
+    }
+
+    /// Backward from output gradient; returns input gradient.
+    pub fn backward(&mut self, dy: &Tensor) -> Tensor {
+        assert_eq!(self.caches.len(), self.layers.len(), "run forward_train first");
+        let mut g = dy.clone();
+        for (l, c) in self.layers.iter_mut().rev().zip(self.caches.iter().rev()) {
+            g = l.backward(&g, c);
+        }
+        g
+    }
+
+    pub fn zero_grad(&mut self) {
+        for l in &mut self.layers {
+            l.zero_grad();
+        }
+    }
+
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &Tensor)) {
+        for l in &mut self.layers {
+            l.visit_params(f);
+        }
+    }
+
+    pub fn params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Fold every (Conv, Bn) pair — in sequence, inside residual mains,
+    /// shortcuts and branches — into the conv; required before PTQ.
+    pub fn fold_bn(&mut self) {
+        fn fold_seq(layers: &mut Vec<Layer>) {
+            let mut i = 0;
+            while i < layers.len() {
+                // recurse first
+                match &mut layers[i] {
+                    Layer::Residual(m, s) => {
+                        fold_seq(m);
+                        fold_seq(s);
+                    }
+                    Layer::Branches(bs) => {
+                        for b in bs {
+                            fold_seq(b);
+                        }
+                    }
+                    _ => {}
+                }
+                if i + 1 < layers.len() {
+                    if let (Layer::Conv(_), Layer::Bn(_)) = (&layers[i], &layers[i + 1]) {
+                        let Layer::Bn(bn) = layers.remove(i + 1) else { unreachable!() };
+                        let Layer::Conv(conv) = &mut layers[i] else { unreachable!() };
+                        bn.fold_into(conv);
+                    }
+                }
+                i += 1;
+            }
+        }
+        fold_seq(&mut self.layers);
+    }
+}
+
+/// Public concat used by the quantized graph (same layout rules).
+pub fn concat_channels_pub(xs: &[Tensor]) -> Tensor {
+    concat_channels(xs)
+}
+
+/// Concatenate NCHW tensors along the channel axis.
+fn concat_channels(xs: &[Tensor]) -> Tensor {
+    let n = xs[0].dims()[0];
+    let (h, w) = (xs[0].dims()[2], xs[0].dims()[3]);
+    let total_c: usize = xs.iter().map(|x| x.dims()[1]).sum();
+    let mut out = Tensor::zeros(&[n, total_c, h, w]);
+    for ni in 0..n {
+        let mut off = 0;
+        for x in xs {
+            let c = x.dims()[1];
+            assert_eq!(x.dims()[2], h);
+            assert_eq!(x.dims()[3], w);
+            let src = &x.data()[ni * c * h * w..(ni + 1) * c * h * w];
+            let dst_base = (ni * total_c + off) * h * w;
+            out.data_mut()[dst_base..dst_base + c * h * w].copy_from_slice(src);
+            off += c;
+        }
+    }
+    out
+}
+
+/// Slice `ch` channels starting at `off` from an NCHW tensor.
+fn slice_channels(x: &Tensor, off: usize, ch: usize) -> Tensor {
+    let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let mut out = Tensor::zeros(&[n, ch, h, w]);
+    for ni in 0..n {
+        let src = (ni * c + off) * h * w;
+        let dst = ni * ch * h * w;
+        out.data_mut()[dst..dst + ch * h * w].copy_from_slice(&x.data()[src..src + ch * h * w]);
+    }
+    out
+}
+
+fn maxpool2_backward(x: &Tensor, dy: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut dx = Tensor::zeros(x.dims());
+    for ni in 0..n {
+        for ci in 0..c {
+            for oi in 0..oh {
+                for oj in 0..ow {
+                    // find argmax in 2×2 window
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0;
+                    let mut bj = 0;
+                    for di in 0..2 {
+                        for dj in 0..2 {
+                            let v = x.at(&[ni, ci, oi * 2 + di, oj * 2 + dj]);
+                            if v > best {
+                                best = v;
+                                bi = di;
+                                bj = dj;
+                            }
+                        }
+                    }
+                    let g = dy.at(&[ni, ci, oi, oj]);
+                    let idx = ((ni * c + ci) * h + oi * 2 + bi) * w + oj * 2 + bj;
+                    dx.data_mut()[idx] += g;
+                }
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Conv2dSpec, Rng};
+
+    fn tiny_cnn(seed: u64) -> Model {
+        let mut rng = Rng::seed(seed);
+        Model::new(
+            "tiny",
+            vec![
+                Layer::Conv(ConvLayer::new(Conv2dSpec::new(1, 4, 3, 1, 1), false, &mut rng)),
+                Layer::Bn(BatchNorm::new(4)),
+                Layer::ReLU,
+                Layer::Residual(
+                    vec![
+                        Layer::Conv(ConvLayer::new(Conv2dSpec::new(4, 4, 3, 1, 1), false, &mut rng)),
+                        Layer::Bn(BatchNorm::new(4)),
+                        Layer::ReLU,
+                    ],
+                    vec![],
+                ),
+                Layer::MaxPool2,
+                Layer::GlobalAvgPool,
+                Layer::Linear(LinearLayer::new(4, 3, true, &mut rng)),
+            ],
+        )
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_cnn(1);
+        let mut rng = Rng::seed(2);
+        let x = Tensor::randn(&[2, 1, 8, 8], 1.0, &mut rng);
+        let y = m.forward(&x);
+        assert_eq!(y.dims(), &[2, 3]);
+        assert!(m.params() > 0);
+    }
+
+    #[test]
+    fn whole_model_gradient_matches_fd() {
+        let mut m = tiny_cnn(3);
+        let mut rng = Rng::seed(4);
+        let x = Tensor::randn(&[2, 1, 8, 8], 1.0, &mut rng);
+        // loss = Σ y² / 2 → dy = y
+        m.zero_grad();
+        let y = m.forward_train(&x);
+        let _ = m.backward(&y);
+        // collect analytic grads
+        let mut grads = Vec::new();
+        m.visit_params(&mut |_, g| grads.push(g.clone()));
+        // probe a few params in the first conv (index 0 of visit order)
+        let eps = 1e-2f32;
+        let loss = |m: &mut Model, x: &Tensor| {
+            let y = m.forward_train(x);
+            y.data().iter().map(|&v| 0.5 * v * v).sum::<f32>()
+        };
+        for &pi in &[0usize, 3, 17] {
+            let mut mp = m.clone();
+            let mut count = 0;
+            mp.visit_params(&mut |p, _| {
+                if count == 0 {
+                    p.data_mut()[pi] += eps;
+                }
+                count += 1;
+            });
+            let mut mm = m.clone();
+            let mut count = 0;
+            mm.visit_params(&mut |p, _| {
+                if count == 0 {
+                    p.data_mut()[pi] -= eps;
+                }
+                count += 1;
+            });
+            let fd = (loss(&mut mp, &x) - loss(&mut mm, &x)) / (2.0 * eps);
+            let got = grads[0].data()[pi];
+            assert!(
+                (fd - got).abs() < 0.05 * (1.0 + fd.abs()),
+                "param[{pi}]: fd {fd} vs analytic {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn branches_concat_and_backward() {
+        let mut rng = Rng::seed(5);
+        let mut m = Model::new(
+            "branchy",
+            vec![Layer::Branches(vec![
+                vec![Layer::Conv(ConvLayer::new(Conv2dSpec::new(2, 3, 1, 1, 0), false, &mut rng))],
+                vec![Layer::Conv(ConvLayer::new(Conv2dSpec::new(2, 5, 3, 1, 1), false, &mut rng))],
+            ])],
+        );
+        let x = Tensor::randn(&[1, 2, 4, 4], 1.0, &mut rng);
+        let y = m.forward_train(&x);
+        assert_eq!(y.dims(), &[1, 8, 4, 4]); // 3 + 5 channels
+        let dx = m.backward(&Tensor::full(y.dims(), 1.0));
+        assert_eq!(dx.dims(), x.dims());
+        assert!(dx.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn fold_bn_removes_bns_and_preserves_forward() {
+        let mut m = tiny_cnn(7);
+        let mut rng = Rng::seed(8);
+        // give BNs non-trivial stats by doing a training pass
+        let x = Tensor::randn(&[4, 1, 8, 8], 1.0, &mut rng);
+        let _ = m.forward_train(&x);
+        let want = m.forward(&x);
+        let mut folded = m.clone();
+        folded.fold_bn();
+        fn count_bn(layers: &[Layer]) -> usize {
+            layers
+                .iter()
+                .map(|l| match l {
+                    Layer::Bn(_) => 1,
+                    Layer::Residual(m, s) => count_bn(m) + count_bn(s),
+                    Layer::Branches(bs) => bs.iter().map(|b| count_bn(b)).sum(),
+                    _ => 0,
+                })
+                .sum()
+        }
+        assert_eq!(count_bn(&folded.layers), 0);
+        let got = folded.forward(&x);
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn act_quant_layer_quantizes_forward_passes_grad() {
+        let r = Range { bias: 0.0, half_width: 1.0 };
+        let mut l = Layer::ActQuant(r, BitSpec::int(2));
+        let x = Tensor::vec1(&[0.3, -0.9, 0.77]);
+        let y = l.forward(&x);
+        // INT2 step = 0.5: values snap to the grid
+        for v in y.data() {
+            assert!((v / 0.5 - (v / 0.5).round()).abs() < 1e-6, "{v} not on grid");
+        }
+        let (_, cache) = l.forward_train(&x);
+        let dy = Tensor::vec1(&[1.0, 2.0, 3.0]);
+        let dx = l.backward(&dy, &cache);
+        assert_eq!(dx.data(), dy.data()); // straight-through
+    }
+}

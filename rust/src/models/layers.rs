@@ -1,0 +1,403 @@
+//! Parametric layers with manual forward/backward — the training and
+//! inference substrate the paper's experiments assume (PyTorch stand-in).
+//!
+//! Each layer owns its parameters, gradients, and forward cache; the
+//! trainer drives `forward_train` → `backward` → `visit_params`.
+
+use crate::tensor::{
+    conv2d, conv2d_grad_input, conv2d_grad_weight, matmul, matmul_at_b, Conv2dSpec, Rng, Tensor,
+};
+
+/// 2-D convolution layer (weights OIHW).
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub spec: Conv2dSpec,
+    pub w: Tensor,
+    pub b: Option<Tensor>,
+    pub gw: Tensor,
+    pub gb: Option<Tensor>,
+    cache_x: Option<Tensor>,
+}
+
+impl ConvLayer {
+    pub fn new(spec: Conv2dSpec, bias: bool, rng: &mut Rng) -> Self {
+        let fan_in = (spec.in_ch / spec.groups) * spec.kh * spec.kw;
+        let std = (2.0 / fan_in as f32).sqrt(); // He init
+        let wdims = [spec.out_ch, spec.in_ch / spec.groups, spec.kh, spec.kw];
+        ConvLayer {
+            spec,
+            w: Tensor::randn(&wdims, std, rng),
+            b: bias.then(|| Tensor::zeros(&[spec.out_ch])),
+            gw: Tensor::zeros(&wdims),
+            gb: bias.then(|| Tensor::zeros(&[spec.out_ch])),
+            cache_x: None,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        conv2d(x, &self.w, self.b.as_ref(), &self.spec)
+    }
+
+    pub fn forward_train(&mut self, x: &Tensor) -> Tensor {
+        self.cache_x = Some(x.clone());
+        self.forward(x)
+    }
+
+    pub fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("forward_train first");
+        let dw = conv2d_grad_weight(x, dy, &self.spec);
+        self.gw.axpy(1.0, &dw);
+        if let Some(gb) = &mut self.gb {
+            // sum dy over N, H, W per out channel
+            let (n, oc, oh, ow) = (dy.dims()[0], dy.dims()[1], dy.dims()[2], dy.dims()[3]);
+            for ni in 0..n {
+                for c in 0..oc {
+                    let base = (ni * oc + c) * oh * ow;
+                    let s: f32 = dy.data()[base..base + oh * ow].iter().sum();
+                    gb.data_mut()[c] += s;
+                }
+            }
+        }
+        conv2d_grad_input(&self.w, dy, x.dims(), &self.spec)
+    }
+
+    pub fn params(&self) -> usize {
+        self.w.numel() + self.b.as_ref().map_or(0, |b| b.numel())
+    }
+}
+
+/// Fully connected layer `y = x Wᵀ + b`, weights (out, in).
+#[derive(Clone, Debug)]
+pub struct LinearLayer {
+    pub w: Tensor,
+    pub b: Option<Tensor>,
+    pub gw: Tensor,
+    pub gb: Option<Tensor>,
+    cache_x: Option<Tensor>,
+}
+
+impl LinearLayer {
+    pub fn new(in_dim: usize, out_dim: usize, bias: bool, rng: &mut Rng) -> Self {
+        let std = (2.0 / in_dim as f32).sqrt();
+        LinearLayer {
+            w: Tensor::randn(&[out_dim, in_dim], std, rng),
+            b: bias.then(|| Tensor::zeros(&[out_dim])),
+            gw: Tensor::zeros(&[out_dim, in_dim]),
+            gb: bias.then(|| Tensor::zeros(&[out_dim])),
+            cache_x: None,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let y = crate::tensor::matmul_a_bt(x, &self.w);
+        match &self.b {
+            Some(b) => y.add_row_bias(b),
+            None => y,
+        }
+    }
+
+    pub fn forward_train(&mut self, x: &Tensor) -> Tensor {
+        self.cache_x = Some(x.clone());
+        self.forward(x)
+    }
+
+    pub fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("forward_train first");
+        // dW = dyᵀ × x : (out, in)
+        let dw = matmul_at_b(dy, x);
+        self.gw.axpy(1.0, &dw);
+        if let Some(gb) = &mut self.gb {
+            gb.axpy(1.0, &dy.sum_axis0());
+        }
+        // dx = dy × W : (N, in)
+        matmul(dy, &self.w)
+    }
+
+    pub fn params(&self) -> usize {
+        self.w.numel() + self.b.as_ref().map_or(0, |b| b.numel())
+    }
+}
+
+/// Batch normalization over NCHW channels (training uses batch stats and
+/// updates running stats; inference uses running stats).
+#[derive(Clone, Debug)]
+pub struct BatchNorm {
+    pub ch: usize,
+    pub gamma: Tensor,
+    pub beta: Tensor,
+    pub run_mean: Tensor,
+    pub run_var: Tensor,
+    pub momentum: f32,
+    pub eps: f32,
+    pub ggamma: Tensor,
+    pub gbeta: Tensor,
+    cache: Option<BnCache>,
+}
+
+#[derive(Clone, Debug)]
+struct BnCache {
+    xhat: Tensor,
+    inv_std: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+impl BatchNorm {
+    pub fn new(ch: usize) -> Self {
+        BatchNorm {
+            ch,
+            gamma: Tensor::full(&[ch], 1.0),
+            beta: Tensor::zeros(&[ch]),
+            run_mean: Tensor::zeros(&[ch]),
+            run_var: Tensor::full(&[ch], 1.0),
+            momentum: 0.1,
+            eps: 1e-5,
+            ggamma: Tensor::zeros(&[ch]),
+            gbeta: Tensor::zeros(&[ch]),
+            cache: None,
+        }
+    }
+
+    fn stats_slices<'a>(x: &'a Tensor, ch: usize) -> (usize, usize) {
+        let n = x.dims()[0];
+        assert_eq!(x.dims()[1], ch, "BN channel mismatch");
+        let hw: usize = x.dims()[2..].iter().product::<usize>().max(1);
+        (n, hw)
+    }
+
+    /// Inference-mode forward with running statistics.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (n, hw) = Self::stats_slices(x, self.ch);
+        let mut out = x.clone();
+        for c in 0..self.ch {
+            let inv = 1.0 / (self.run_var.data()[c] + self.eps).sqrt();
+            let g = self.gamma.data()[c] * inv;
+            let sh = self.beta.data()[c] - self.run_mean.data()[c] * g;
+            for ni in 0..n {
+                let base = (ni * self.ch + c) * hw;
+                for v in &mut out.data_mut()[base..base + hw] {
+                    *v = *v * g + sh;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn forward_train(&mut self, x: &Tensor) -> Tensor {
+        let (n, hw) = Self::stats_slices(x, self.ch);
+        let count = (n * hw) as f32;
+        let mut out = x.clone();
+        let mut xhat = x.clone();
+        let mut inv_stds = vec![0.0f32; self.ch];
+        for c in 0..self.ch {
+            let mut sum = 0.0f64;
+            let mut sq = 0.0f64;
+            for ni in 0..n {
+                let base = (ni * self.ch + c) * hw;
+                for &v in &x.data()[base..base + hw] {
+                    sum += v as f64;
+                    sq += (v * v) as f64;
+                }
+            }
+            let mean = (sum / count as f64) as f32;
+            let var = ((sq / count as f64) as f32 - mean * mean).max(0.0);
+            let inv = 1.0 / (var + self.eps).sqrt();
+            inv_stds[c] = inv;
+            self.run_mean.data_mut()[c] =
+                (1.0 - self.momentum) * self.run_mean.data()[c] + self.momentum * mean;
+            self.run_var.data_mut()[c] =
+                (1.0 - self.momentum) * self.run_var.data()[c] + self.momentum * var;
+            let g = self.gamma.data()[c];
+            let b = self.beta.data()[c];
+            for ni in 0..n {
+                let base = (ni * self.ch + c) * hw;
+                for j in 0..hw {
+                    let h = (x.data()[base + j] - mean) * inv;
+                    xhat.data_mut()[base + j] = h;
+                    out.data_mut()[base + j] = g * h + b;
+                }
+            }
+        }
+        self.cache = Some(BnCache { xhat, inv_std: inv_stds, dims: x.dims().to_vec() });
+        out
+    }
+
+    pub fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let cache = self.cache.as_ref().expect("forward_train first");
+        let (n, hw) = Self::stats_slices(dy, self.ch);
+        let count = (n * hw) as f32;
+        let mut dx = Tensor::zeros(&cache.dims);
+        for c in 0..self.ch {
+            let mut dg = 0.0f32;
+            let mut db = 0.0f32;
+            for ni in 0..n {
+                let base = (ni * self.ch + c) * hw;
+                for j in 0..hw {
+                    dg += dy.data()[base + j] * cache.xhat.data()[base + j];
+                    db += dy.data()[base + j];
+                }
+            }
+            self.ggamma.data_mut()[c] += dg;
+            self.gbeta.data_mut()[c] += db;
+            let g = self.gamma.data()[c];
+            let inv = cache.inv_std[c];
+            // dx = g*inv/count * (count*dy - db - xhat*dg)
+            for ni in 0..n {
+                let base = (ni * self.ch + c) * hw;
+                for j in 0..hw {
+                    dx.data_mut()[base + j] = g * inv / count
+                        * (count * dy.data()[base + j]
+                            - db
+                            - cache.xhat.data()[base + j] * dg);
+                }
+            }
+        }
+        dx
+    }
+
+    /// Fold into a preceding conv: `w' = w·γ/σ`, `b' = β + (b−μ)·γ/σ`
+    /// (the standard PTQ BN-fold every baseline and the paper assume).
+    pub fn fold_into(&self, conv: &mut ConvLayer) {
+        assert_eq!(conv.spec.out_ch, self.ch);
+        let kelem = conv.w.numel() / self.ch;
+        let mut b = conv.b.clone().unwrap_or_else(|| Tensor::zeros(&[self.ch]));
+        for c in 0..self.ch {
+            let inv = 1.0 / (self.run_var.data()[c] + self.eps).sqrt();
+            let g = self.gamma.data()[c] * inv;
+            for v in &mut conv.w.data_mut()[c * kelem..(c + 1) * kelem] {
+                *v *= g;
+            }
+            let bv = b.data()[c];
+            b.data_mut()[c] = self.beta.data()[c] + (bv - self.run_mean.data()[c]) * g;
+        }
+        conv.b = Some(b);
+    }
+
+    pub fn params(&self) -> usize {
+        2 * self.ch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_backward_matches_fd() {
+        let mut rng = Rng::seed(61);
+        let mut l = LinearLayer::new(5, 3, true, &mut rng);
+        let x = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let y = l.forward_train(&x);
+        let dy = Tensor::full(y.dims(), 1.0);
+        let dx = l.backward(&dy);
+        let f = |l: &LinearLayer, x: &Tensor| l.forward(x).data().iter().sum::<f32>();
+        let eps = 1e-2;
+        for &i in &[0usize, 7, 14] {
+            let mut lp = l.clone();
+            lp.w.data_mut()[i] += eps;
+            let mut lm = l.clone();
+            lm.w.data_mut()[i] -= eps;
+            let fd = (f(&lp, &x) - f(&lm, &x)) / (2.0 * eps);
+            assert!((fd - l.gw.data()[i]).abs() < 1e-2, "gw[{i}]: {fd} vs {}", l.gw.data()[i]);
+        }
+        for &i in &[0usize, 9, 19] {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let fd = (f(&l, &xp) - f(&l, &xm)) / (2.0 * eps);
+            assert!((fd - dx.data()[i]).abs() < 1e-2, "dx[{i}]");
+        }
+        // bias grad = column sums of dy = batch size
+        assert!(l.gb.as_ref().unwrap().data().iter().all(|&v| (v - 4.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn conv_layer_backward_accumulates() {
+        let mut rng = Rng::seed(62);
+        let spec = Conv2dSpec::new(2, 3, 3, 1, 1);
+        let mut c = ConvLayer::new(spec, true, &mut rng);
+        let x = Tensor::randn(&[1, 2, 5, 5], 1.0, &mut rng);
+        let y = c.forward_train(&x);
+        let dy = Tensor::full(y.dims(), 1.0);
+        let _ = c.backward(&dy);
+        let g1 = c.gw.clone();
+        let _ = c.forward_train(&x);
+        let _ = c.backward(&dy);
+        // second backward doubles the accumulated grad
+        for (a, b) in c.gw.data().iter().zip(g1.data()) {
+            assert!((a - 2.0 * b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bn_train_normalizes_and_infer_matches_after_convergence() {
+        let mut rng = Rng::seed(63);
+        let mut bn = BatchNorm::new(2);
+        bn.momentum = 1.0; // adopt batch stats immediately
+        let x = Tensor::randn(&[8, 2, 4, 4], 3.0, &mut rng).map(|v| v + 5.0);
+        let y = bn.forward_train(&x);
+        // per-channel output stats ≈ (0, 1)
+        for c in 0..2 {
+            let mut vals = Vec::new();
+            for n in 0..8 {
+                let base = (n * 2 + c) * 16;
+                vals.extend_from_slice(&y.data()[base..base + 16]);
+            }
+            let m: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let v: f32 = vals.iter().map(|&a| (a - m) * (a - m)).sum::<f32>() / vals.len() as f32;
+            assert!(m.abs() < 1e-3, "mean {m}");
+            assert!((v - 1.0).abs() < 1e-2, "var {v}");
+        }
+        // inference with adopted stats reproduces training output
+        let yi = bn.forward(&x);
+        for (a, b) in y.data().iter().zip(yi.data()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn bn_backward_matches_fd() {
+        let mut rng = Rng::seed(64);
+        let mut bn = BatchNorm::new(2);
+        bn.gamma = Tensor::vec1(&[1.5, 0.7]);
+        bn.beta = Tensor::vec1(&[0.2, -0.1]);
+        let x = Tensor::randn(&[3, 2, 2, 2], 1.0, &mut rng);
+        // loss = Σ y²/2 so dy = y
+        let y = bn.forward_train(&x);
+        let dx = bn.backward(&y);
+        let loss = |bn: &mut BatchNorm, x: &Tensor| {
+            let y = bn.forward_train(x);
+            y.data().iter().map(|&v| v * v * 0.5).sum::<f32>()
+        };
+        let eps = 1e-2;
+        for &i in &[0usize, 5, 13, 23] {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let mut b2 = bn.clone();
+            let fd = (loss(&mut b2, &xp) - loss(&mut b2, &xm)) / (2.0 * eps);
+            assert!((fd - dx.data()[i]).abs() < 2e-2, "dx[{i}] {fd} vs {}", dx.data()[i]);
+        }
+    }
+
+    #[test]
+    fn bn_fold_preserves_inference() {
+        let mut rng = Rng::seed(65);
+        let spec = Conv2dSpec::new(2, 3, 3, 1, 1);
+        let mut conv = ConvLayer::new(spec, false, &mut rng);
+        let mut bn = BatchNorm::new(3);
+        // give BN non-trivial running stats
+        bn.run_mean = Tensor::vec1(&[0.3, -0.2, 0.1]);
+        bn.run_var = Tensor::vec1(&[1.5, 0.5, 2.0]);
+        bn.gamma = Tensor::vec1(&[1.2, 0.8, 1.0]);
+        bn.beta = Tensor::vec1(&[0.1, 0.0, -0.3]);
+        let x = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+        let want = bn.forward(&conv.forward(&x));
+        bn.fold_into(&mut conv);
+        let got = conv.forward(&x);
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Neural-network model substrate: layer definitions with forward and
+//! backward passes, a sequential/residual/branch graph, the model zoo
+//! (the paper's CNN suite stand-ins), transformer models (BERT / causal
+//! LM stand-ins), quantized-graph construction, and weight serialization.
+
+pub mod basis;
+pub mod graph;
+pub mod layers;
+pub mod quantized;
+pub mod serialize;
+pub mod tinybert;
+pub mod tinylm;
+pub mod zoo;
+
+pub use basis::{basis_slices, calibrate_slices, forward_reduced};
+pub use graph::{Layer, Model};
+pub use layers::{BatchNorm, ConvLayer, LinearLayer};
+pub use quantized::{quantize_model, ActObserver, QuantModel};
+pub use tinybert::TinyBert;
+pub use tinylm::TinyLm;

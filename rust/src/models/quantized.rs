@@ -1,0 +1,315 @@
+//! Quantized-graph construction: turn a trained FP [`Model`] into a
+//! series-expanded [`QuantModel`] (the paper's method) with the §5.1
+//! deployment policy — BN folded, per-channel weights, first/last layer
+//! at 8-bit — plus the activation-range observer PTQ baselines calibrate
+//! with.
+
+use super::graph::{Layer, Model};
+use crate::tensor::Tensor;
+use crate::xint::layer::{LayerPolicy, XintConv2d, XintLinear};
+use crate::xint::quantizer::{channel_range, Clip, Range, Symmetry};
+
+/// A quantized mirror of [`Model`]: same topology, expanded conv/linear.
+#[derive(Clone, Debug)]
+pub enum QuantLayer {
+    Conv(XintConv2d),
+    Linear(XintLinear),
+    ReLU,
+    Gelu,
+    MaxPool2,
+    GlobalAvgPool,
+    Flatten,
+    Residual(Vec<QuantLayer>, Vec<QuantLayer>),
+    Branches(Vec<Vec<QuantLayer>>),
+}
+
+/// The quantized model.
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    pub name: String,
+    pub layers: Vec<QuantLayer>,
+}
+
+impl QuantLayer {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match self {
+            QuantLayer::Conv(c) => c.forward(x),
+            QuantLayer::Linear(l) => l.forward(x),
+            QuantLayer::ReLU => x.relu(),
+            QuantLayer::Gelu => x.gelu(),
+            QuantLayer::MaxPool2 => x.maxpool2(),
+            QuantLayer::GlobalAvgPool => x.global_avg_pool(),
+            QuantLayer::Flatten => {
+                let n = x.dims()[0];
+                x.reshape(&[n, x.numel() / n])
+            }
+            QuantLayer::Residual(main, short) => {
+                let mut h = x.clone();
+                for l in main {
+                    h = l.forward(&h);
+                }
+                let mut s = x.clone();
+                for l in short {
+                    s = l.forward(&s);
+                }
+                h.add(&s)
+            }
+            QuantLayer::Branches(bs) => {
+                let outs: Vec<Tensor> = bs
+                    .iter()
+                    .map(|b| {
+                        let mut h = x.clone();
+                        for l in b {
+                            h = l.forward(&h);
+                        }
+                        h
+                    })
+                    .collect();
+                super::graph::concat_channels_pub(&outs)
+            }
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            QuantLayer::Conv(c) => c.storage_bytes(),
+            QuantLayer::Linear(l) => l.storage_bytes(),
+            QuantLayer::Residual(m, s) => {
+                m.iter().map(|l| l.storage_bytes()).sum::<usize>()
+                    + s.iter().map(|l| l.storage_bytes()).sum::<usize>()
+            }
+            QuantLayer::Branches(bs) => {
+                bs.iter().flat_map(|b| b.iter().map(|l| l.storage_bytes())).sum()
+            }
+            _ => 0,
+        }
+    }
+}
+
+impl QuantModel {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        for l in &self.layers {
+            h = l.forward(&h);
+        }
+        h
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.storage_bytes()).sum()
+    }
+}
+
+/// Count quantizable (conv/linear) layers, depth-first — used to find the
+/// first/last layer for the 8-bit policy.
+fn count_quantizable(layers: &[Layer]) -> usize {
+    layers
+        .iter()
+        .map(|l| match l {
+            Layer::Conv(_) | Layer::Linear(_) => 1,
+            Layer::Residual(m, s) => count_quantizable(m) + count_quantizable(s),
+            Layer::Branches(bs) => bs.iter().map(|b| count_quantizable(b)).sum(),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Quantize a (BN-folded) model with the paper's policy: `policy` for
+/// interior layers, 8-bit for the first and last quantizable layer.
+pub fn quantize_model(model: &Model, policy: LayerPolicy) -> QuantModel {
+    let mut fp = model.clone();
+    fp.fold_bn();
+    let total = count_quantizable(&fp.layers);
+    let mut idx = 0usize;
+    let layers = quantize_seq(&fp.layers, policy, &mut idx, total);
+    QuantModel { name: format!("{}-W{}A{}", model.name, policy.w_bits.bits, policy.a_bits.bits), layers }
+}
+
+fn quantize_seq(
+    layers: &[Layer],
+    policy: LayerPolicy,
+    idx: &mut usize,
+    total: usize,
+) -> Vec<QuantLayer> {
+    layers
+        .iter()
+        .map(|l| match l {
+            Layer::Conv(c) => {
+                let p = pick_policy(policy, *idx, total);
+                *idx += 1;
+                QuantLayer::Conv(XintConv2d::from_fp(&c.w, c.b.as_ref(), c.spec, p))
+            }
+            Layer::Linear(lin) => {
+                let p = pick_policy(policy, *idx, total);
+                *idx += 1;
+                QuantLayer::Linear(XintLinear::from_fp(&lin.w, lin.b.as_ref(), p))
+            }
+            Layer::Bn(_) => panic!("fold_bn before quantization"),
+            Layer::ReLU => QuantLayer::ReLU,
+            Layer::Gelu => QuantLayer::Gelu,
+            Layer::MaxPool2 => QuantLayer::MaxPool2,
+            Layer::GlobalAvgPool => QuantLayer::GlobalAvgPool,
+            Layer::Flatten => QuantLayer::Flatten,
+            Layer::ActQuant(..) => panic!("don't series-expand a fake-quantized model"),
+            Layer::Residual(m, s) => QuantLayer::Residual(
+                quantize_seq(m, policy, idx, total),
+                quantize_seq(s, policy, idx, total),
+            ),
+            Layer::Branches(bs) => QuantLayer::Branches(
+                bs.iter().map(|b| quantize_seq(b, policy, idx, total)).collect(),
+            ),
+        })
+        .collect()
+}
+
+fn pick_policy(policy: LayerPolicy, idx: usize, total: usize) -> LayerPolicy {
+    if idx == 0 || idx + 1 == total {
+        LayerPolicy::eight_bit()
+    } else {
+        policy
+    }
+}
+
+/// Activation-range observer: runs calibration batches through the FP
+/// model and records the post-layer ranges baselines need.
+#[derive(Clone, Debug, Default)]
+pub struct ActObserver {
+    /// per quantizable-layer activation range (output side)
+    pub ranges: Vec<Range>,
+}
+
+impl ActObserver {
+    /// Observe output ranges of every conv/linear in execution order.
+    pub fn observe(model: &Model, x: &Tensor, sym: Symmetry, clip: Clip, bits: u32) -> ActObserver {
+        let mut fp = model.clone();
+        fp.fold_bn();
+        let mut ranges = Vec::new();
+        fn walk(
+            layers: &[Layer],
+            h: &Tensor,
+            ranges: &mut Vec<Range>,
+            sym: Symmetry,
+            clip: Clip,
+            bits: u32,
+        ) -> Tensor {
+            let mut h = h.clone();
+            for l in layers {
+                match l {
+                    Layer::Residual(m, s) => {
+                        let hm = walk(m, &h, ranges, sym, clip, bits);
+                        let hs = walk(s, &h, ranges, sym, clip, bits);
+                        h = hm.add(&hs);
+                    }
+                    Layer::Branches(bs) => {
+                        let outs: Vec<Tensor> =
+                            bs.iter().map(|b| walk(b, &h, ranges, sym, clip, bits)).collect();
+                        h = super::graph::concat_channels_pub(&outs);
+                    }
+                    other => {
+                        h = other.forward(&h);
+                        if matches!(other, Layer::Conv(_) | Layer::Linear(_)) {
+                            ranges.push(channel_range(h.data(), sym, clip, bits));
+                        }
+                    }
+                }
+            }
+            h
+        }
+        let _ = walk(&fp.layers, x, &mut ranges, sym, clip, bits);
+        ActObserver { ranges }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::tensor::{Rng, Tensor};
+
+    fn probe() -> Tensor {
+        let mut rng = Rng::seed(100);
+        Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn quantized_w8a8_close_to_fp() {
+        let mut m = zoo::mini_resnet_a(10, 11);
+        // settle BN stats
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(8, 8).with_terms(1, 1));
+        let x = probe();
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let yf = fp.forward(&x);
+        let yq = q.forward(&x);
+        let rel = yf.sub(&yq).norm() / yf.norm();
+        assert!(rel < 0.05, "W8A8 model rel err {rel}");
+    }
+
+    #[test]
+    fn quantized_w4a4_beats_w2a2_single_term() {
+        let mut m = zoo::mini_resnet_a(10, 12);
+        let _ = m.forward_train(&probe());
+        let x = probe();
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let yf = fp.forward(&x);
+        let err = |wb: u32, ab: u32| {
+            let q = quantize_model(&m, LayerPolicy::new(wb, ab).with_terms(1, 1));
+            yf.sub(&q.forward(&x)).norm() / yf.norm()
+        };
+        assert!(err(4, 4) < err(2, 2), "4-bit should beat 2-bit");
+    }
+
+    #[test]
+    fn expansion_terms_shrink_model_error() {
+        let mut m = zoo::mini_resnet_a(10, 13);
+        let _ = m.forward_train(&probe());
+        let x = probe();
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let yf = fp.forward(&x);
+        let err = |w_terms: usize, a_terms: usize| {
+            let q = quantize_model(&m, LayerPolicy::new(4, 4).with_terms(w_terms, a_terms));
+            yf.sub(&q.forward(&x)).norm() / yf.norm()
+        };
+        let e1 = err(1, 1);
+        let e2 = err(2, 3);
+        assert!(e2 < e1 * 0.5, "expansion must help: 1 term {e1}, expanded {e2}");
+    }
+
+    #[test]
+    fn quant_works_on_branchy_and_grouped_models() {
+        for mut m in [zoo::inception_style(10, 14), zoo::regnet_style(10, 15), zoo::mobilenet_style(10, 16)] {
+            let _ = m.forward_train(&probe());
+            let q = quantize_model(&m, LayerPolicy::new(4, 4));
+            let y = q.forward(&probe());
+            assert_eq!(y.dims(), &[4, 10], "{}", m.name);
+            assert!(y.data().iter().all(|v| v.is_finite()), "{}", m.name);
+            assert!(q.storage_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn observer_counts_quantizable_layers() {
+        let mut m = zoo::mini_resnet_a(10, 17);
+        let _ = m.forward_train(&probe());
+        let obs = ActObserver::observe(&m, &probe(), Symmetry::Asymmetric, Clip::None, 4);
+        let expected = count_quantizable(&{
+            let mut f = m.clone();
+            f.fold_bn();
+            f
+        }.layers);
+        assert_eq!(obs.ranges.len(), expected);
+        assert!(obs.ranges.iter().all(|r| r.half_width > 0.0));
+    }
+
+    #[test]
+    fn storage_accounting_orders_bitwidths() {
+        let mut m = zoo::mini_resnet_a(10, 18);
+        let _ = m.forward_train(&probe());
+        let q2 = quantize_model(&m, LayerPolicy::new(2, 2).with_terms(1, 1));
+        let q4 = quantize_model(&m, LayerPolicy::new(4, 4).with_terms(1, 1));
+        assert!(q2.storage_bytes() < q4.storage_bytes());
+    }
+}

@@ -1,0 +1,199 @@
+//! Weight checkpoint serialization (little-endian binary; serde is
+//! unavailable offline). Benches train once and cache checkpoints so
+//! table regeneration is fast and deterministic.
+//!
+//! Format: magic "FPXW" + u32 version + u32 tensor count, then per tensor:
+//! u32 rank, u64 dims..., f32 data...
+
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FPXW";
+const VERSION: u32 = 1;
+
+/// Serialize a list of tensors.
+pub fn save_tensors(path: impl AsRef<Path>, tensors: &[&Tensor]) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        f.write_all(&(t.dims().len() as u32).to_le_bytes())?;
+        for &d in t.dims() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a list of tensors.
+pub fn load_tensors(path: impl AsRef<Path>) -> std::io::Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    if u32::from_le_bytes(u32buf) != VERSION {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad version"));
+    }
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let rank = u32::from_le_bytes(u32buf) as usize;
+        let mut dims = Vec::with_capacity(rank);
+        let mut u64buf = [0u8; 8];
+        for _ in 0..rank {
+            f.read_exact(&mut u64buf)?;
+            dims.push(u64::from_le_bytes(u64buf) as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            f.read_exact(&mut u32buf)?;
+            data.push(f32::from_le_bytes(u32buf));
+        }
+        out.push(Tensor::from_vec(&dims, data));
+    }
+    Ok(out)
+}
+
+/// Save every parameter AND buffer of a model (BN running stats included,
+/// so quantization after load behaves identically).
+pub fn save_model(path: impl AsRef<Path>, model: &mut super::Model) -> std::io::Result<()> {
+    let mut tensors: Vec<Tensor> = Vec::new();
+    collect_state(&mut model.layers, &mut |t| tensors.push(t.clone()));
+    let refs: Vec<&Tensor> = tensors.iter().collect();
+    save_tensors(path, &refs)
+}
+
+/// Load parameters into an architecture-identical model.
+pub fn load_model(path: impl AsRef<Path>, model: &mut super::Model) -> std::io::Result<()> {
+    let tensors = load_tensors(path)?;
+    let mut it = tensors.into_iter();
+    let mut err = None;
+    collect_state(&mut model.layers, &mut |t| {
+        match it.next() {
+            Some(src) if src.dims() == t.dims() => *t = src,
+            Some(src) => {
+                err = Some(format!("shape mismatch: {:?} vs {:?}", src.dims(), t.dims()))
+            }
+            None => err = Some("checkpoint too short".into()),
+        }
+    });
+    if it.next().is_some() {
+        err = Some("checkpoint too long".into());
+    }
+    match err {
+        Some(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e)),
+        None => Ok(()),
+    }
+}
+
+/// Deterministic walk over every stateful tensor of the graph.
+fn collect_state(layers: &mut [super::Layer], f: &mut dyn FnMut(&mut Tensor)) {
+    use super::Layer;
+    for l in layers {
+        match l {
+            Layer::Conv(c) => {
+                f(&mut c.w);
+                if let Some(b) = &mut c.b {
+                    f(b);
+                }
+            }
+            Layer::Linear(lin) => {
+                f(&mut lin.w);
+                if let Some(b) = &mut lin.b {
+                    f(b);
+                }
+            }
+            Layer::Bn(bn) => {
+                f(&mut bn.gamma);
+                f(&mut bn.beta);
+                f(&mut bn.run_mean);
+                f(&mut bn.run_var);
+            }
+            Layer::Residual(m, s) => {
+                collect_state(m, f);
+                collect_state(s, f);
+            }
+            Layer::Branches(bs) => {
+                for b in bs {
+                    collect_state(b, f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::tensor::{Rng, Tensor};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fpxint_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Rng::seed(70);
+        let a = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[7], 2.0, &mut rng);
+        let p = tmp("tensors");
+        save_tensors(&p, &[&a, &b]).unwrap();
+        let loaded = load_tensors(&p).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0], a);
+        assert_eq!(loaded[1], b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn model_roundtrip_preserves_forward() {
+        let mut rng = Rng::seed(71);
+        let mut m = zoo::mini_resnet_a(10, 72);
+        let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
+        let _ = m.forward_train(&x); // give BN real stats
+        let want = m.forward(&x);
+        let p = tmp("model");
+        save_model(&p, &mut m).unwrap();
+        // fresh model with different seed: weights differ until load
+        let mut m2 = zoo::mini_resnet_a(10, 999);
+        assert!(m2.forward(&x).sub(&want).max_abs() > 1e-3);
+        load_model(&p, &mut m2).unwrap();
+        assert_eq!(m2.forward(&x), want);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_architecture() {
+        let mut m = zoo::mini_resnet_a(10, 73);
+        let p = tmp("archmismatch");
+        save_model(&p, &mut m).unwrap();
+        let mut other = zoo::mini_resnet_c(10, 73);
+        assert!(load_model(&p, &mut other).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_file() {
+        let p = tmp("corrupt");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load_tensors(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,251 @@
+//! Tiny causal char-level LM — the LLM stand-in for Table 6 (MMLU under
+//! W4A16 weight-only expansion). Reuses [`super::tinybert::EncoderBlock`]
+//! with the causal mask; scoring follows the MMLU base-model protocol:
+//! pick the answer choice with the highest sequence log-likelihood.
+
+use super::tinybert::EncoderBlock;
+use crate::datasets::charlm::{encode_char, McQuestion, CHAR_VOCAB};
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Rng, Tensor};
+use crate::xint::layer::LayerPolicy;
+use crate::xint::SeriesExpansion;
+
+/// Causal transformer LM over the 28-char vocabulary.
+#[derive(Clone, Debug)]
+pub struct TinyLm {
+    pub d: usize,
+    pub seq: usize,
+    pub embed: Tensor, // (vocab, d)
+    pub pos: Tensor,   // (seq, d)
+    pub blocks: Vec<EncoderBlock>,
+    pub w_out: Tensor, // (vocab, d)
+    pub gembed: Tensor,
+    pub gpos: Tensor,
+    pub gout: Tensor,
+    cache: Option<(Vec<Vec<usize>>, Tensor)>,
+}
+
+impl TinyLm {
+    pub fn new(d: usize, ff: usize, layers: usize, seq: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed(seed);
+        TinyLm {
+            d,
+            seq,
+            embed: Tensor::randn(&[CHAR_VOCAB, d], 0.5, &mut rng),
+            pos: Tensor::randn(&[seq, d], 0.1, &mut rng),
+            blocks: (0..layers).map(|_| EncoderBlock::new(d, ff, &mut rng)).collect(),
+            w_out: Tensor::randn(&[CHAR_VOCAB, d], (1.0 / d as f32).sqrt(), &mut rng),
+            gembed: Tensor::zeros(&[CHAR_VOCAB, d]),
+            gpos: Tensor::zeros(&[seq, d]),
+            gout: Tensor::zeros(&[CHAR_VOCAB, d]),
+            cache: None,
+        }
+    }
+
+    fn embed_batch(&self, tokens: &[Vec<usize>]) -> Tensor {
+        let n = tokens.len();
+        let mut x = Tensor::zeros(&[n * self.seq, self.d]);
+        for (s, seq) in tokens.iter().enumerate() {
+            for (p, &tok) in seq.iter().enumerate() {
+                let dst = (s * self.seq + p) * self.d;
+                for j in 0..self.d {
+                    x.data_mut()[dst + j] =
+                        self.embed.data()[tok * self.d + j] + self.pos.data()[p * self.d + j];
+                }
+            }
+        }
+        x
+    }
+
+    /// Next-token logits at every position: (N·T, vocab).
+    pub fn forward(&self, tokens: &[Vec<usize>]) -> Tensor {
+        let n = tokens.len();
+        let mut h = self.embed_batch(tokens);
+        for b in &self.blocks {
+            h = b.forward(&h, n, self.seq, true);
+        }
+        matmul_a_bt(&h, &self.w_out)
+    }
+
+    pub fn forward_train(&mut self, tokens: &[Vec<usize>]) -> Tensor {
+        let n = tokens.len();
+        let mut h = self.embed_batch(tokens);
+        for b in &mut self.blocks {
+            h = b.forward_train(&h, n, self.seq, true);
+        }
+        self.cache = Some((tokens.to_vec(), h.clone()));
+        matmul_a_bt(&h, &self.w_out)
+    }
+
+    pub fn backward(&mut self, dlogits: &Tensor) {
+        let (tokens, feat) = self.cache.take().expect("forward_train first");
+        let n = tokens.len();
+        self.gout.axpy(1.0, &matmul_at_b(dlogits, &feat));
+        let mut g = matmul(dlogits, &self.w_out);
+        for b in self.blocks.iter_mut().rev() {
+            g = b.backward(&g, n, self.seq, true);
+        }
+        for (s, seq) in tokens.iter().enumerate() {
+            for (p, &tok) in seq.iter().enumerate() {
+                let src = (s * self.seq + p) * self.d;
+                for j in 0..self.d {
+                    self.gembed.data_mut()[tok * self.d + j] += g.data()[src + j];
+                    self.gpos.data_mut()[p * self.d + j] += g.data()[src + j];
+                }
+            }
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gembed.map_inplace(|_| 0.0);
+        self.gpos.map_inplace(|_| 0.0);
+        self.gout.map_inplace(|_| 0.0);
+        for b in &mut self.blocks {
+            b.zero_grad();
+        }
+    }
+
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &Tensor)) {
+        f(&mut self.embed, &self.gembed.clone());
+        f(&mut self.pos, &self.gpos.clone());
+        f(&mut self.w_out, &self.gout.clone());
+        for b in &mut self.blocks {
+            b.visit_params(f);
+        }
+    }
+
+    pub fn params(&self) -> usize {
+        self.embed.numel()
+            + self.pos.numel()
+            + self.w_out.numel()
+            + self.blocks.iter().map(|b| b.params()).sum::<usize>()
+    }
+
+    /// Log-likelihood of `text` continuing after `stem` (sum of next-char
+    /// log-probs over the continuation region).
+    pub fn continuation_ll(&self, stem: &str, cont: &str) -> f64 {
+        let mut toks: Vec<usize> = format!("{stem}{cont}").bytes().map(encode_char).collect();
+        let stem_len = stem.len();
+        toks.truncate(self.seq);
+        while toks.len() < self.seq {
+            toks.push(encode_char(b' '));
+        }
+        let logits = self.forward(&[toks.clone()]);
+        let ls = logits.log_softmax_rows();
+        let end = (stem_len + cont.len()).min(self.seq);
+        let mut ll = 0.0f64;
+        for p in stem_len.saturating_sub(1)..end.saturating_sub(1) {
+            let next = toks[p + 1];
+            ll += ls.at(&[p, next]) as f64;
+        }
+        ll
+    }
+
+    /// MMLU protocol: answer = argmax choice log-likelihood.
+    pub fn answer(&self, q: &McQuestion) -> usize {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (i, c) in q.choices.iter().enumerate() {
+            let ll = self.continuation_ll(&q.stem, c);
+            if ll > best.1 {
+                best = (i, ll);
+            }
+        }
+        best.0
+    }
+
+    /// W4A16-style weight-only PTQ: expand block weights at `policy`,
+    /// embeddings/head at 8-bit (the paper's first/last rule).
+    pub fn quantize_weights(&mut self, policy: &LayerPolicy) {
+        let e_cfg = LayerPolicy::eight_bit().weight_config();
+        self.embed = SeriesExpansion::expand(&self.embed, &e_cfg).reconstruct();
+        for b in &mut self.blocks {
+            b.quantize_weights(policy);
+        }
+        self.w_out = SeriesExpansion::expand(&self.w_out, &e_cfg).reconstruct();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::charlm::CharLmTask;
+
+    #[test]
+    fn forward_shape() {
+        let lm = TinyLm::new(8, 16, 1, 12, 1);
+        let toks = vec![vec![0usize; 12], vec![1usize; 12]];
+        let y = lm.forward(&toks);
+        assert_eq!(y.dims(), &[24, CHAR_VOCAB]);
+    }
+
+    #[test]
+    fn lm_learns_repetition() {
+        // train on a trivially predictable stream; loss must drop
+        let mut lm = TinyLm::new(8, 16, 1, 8, 2);
+        let stream: Vec<usize> = "abcabcabcabcabcabcabcabc".bytes().map(encode_char).collect();
+        let mk_batch = |off: usize| -> Vec<Vec<usize>> {
+            vec![stream[off..off + 8].to_vec(), stream[off + 3..off + 11].to_vec()]
+        };
+        let loss_of = |lm: &TinyLm, toks: &[Vec<usize>]| {
+            let logits = lm.forward(toks);
+            let ls = logits.log_softmax_rows();
+            let mut l = 0.0f32;
+            let mut count = 0;
+            for (s, seq) in toks.iter().enumerate() {
+                for p in 0..7 {
+                    l -= ls.at(&[s * 8 + p, seq[p + 1]]);
+                    count += 1;
+                }
+            }
+            l / count as f32
+        };
+        let toks = mk_batch(0);
+        let l0 = loss_of(&lm, &toks);
+        for step in 0..60 {
+            let batch = mk_batch(step % 4);
+            lm.zero_grad();
+            let logits = lm.forward_train(&batch);
+            let sm = logits.softmax_rows();
+            let mut dl = sm.clone();
+            let mut count = 0.0f32;
+            for (s, seq) in batch.iter().enumerate() {
+                for p in 0..7 {
+                    dl.data_mut()[(s * 8 + p) * CHAR_VOCAB + seq[p + 1]] -= 1.0;
+                    count += 1.0;
+                }
+                // zero grads at the last position (no target)
+                for j in 0..CHAR_VOCAB {
+                    dl.data_mut()[(s * 8 + 7) * CHAR_VOCAB + j] = 0.0;
+                }
+            }
+            let dl = dl.scale(1.0 / count);
+            lm.backward(&dl);
+            lm.visit_params(&mut |p, g| p.axpy(-1.0, g));
+        }
+        let l1 = loss_of(&lm, &toks);
+        assert!(l1 < l0 * 0.6, "LM loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn answer_returns_valid_choice() {
+        let lm = TinyLm::new(8, 16, 1, 32, 3);
+        let task = CharLmTask::new(4);
+        for q in task.questions().iter().take(4) {
+            assert!(lm.answer(q) < 4);
+        }
+    }
+
+    #[test]
+    fn w8_weight_quant_preserves_ll_ordering_better_than_w2() {
+        let lm = TinyLm::new(8, 16, 1, 16, 5);
+        let stem = "the plato ";
+        let conts = ["wrote epics.", "sang odes."];
+        let fp: Vec<f64> = conts.iter().map(|c| lm.continuation_ll(stem, c)).collect();
+        let mut q8 = lm.clone();
+        q8.quantize_weights(&LayerPolicy::new(8, 16).with_terms(2, 1));
+        let l8: Vec<f64> = conts.iter().map(|c| q8.continuation_ll(stem, c)).collect();
+        // 8-bit 2-term weight expansion keeps log-likelihoods close
+        for (a, b) in fp.iter().zip(&l8) {
+            assert!((a - b).abs() < 0.1 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+}

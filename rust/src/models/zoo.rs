@@ -1,0 +1,254 @@
+//! The model zoo — architecture stand-ins for the paper's Table 1 suite
+//! (DESIGN.md §2). Every constructor is deterministic given a seed.
+//!
+//! | Paper model     | Zoo stand-in        | Shared property              |
+//! |-----------------|---------------------|------------------------------|
+//! | ResNet-18       | `mini_resnet_a`     | residual conv+BN blocks      |
+//! | ResNet-34       | `mini_resnet_b`     | deeper residual stack        |
+//! | ResNet-50       | `mini_resnet_c`     | deeper + wider, projections  |
+//! | ResNet-101      | `mini_resnet_d`     | deepest stack                |
+//! | RegNetX-600MF   | `regnet_style`      | grouped convolutions         |
+//! | Inception-V3    | `inception_style`   | multi-branch concat blocks   |
+//! | MobileNetV2     | `mobilenet_style`   | depthwise-separable convs    |
+
+use super::graph::{Layer, Model};
+use super::layers::{BatchNorm, ConvLayer, LinearLayer};
+use crate::tensor::{Conv2dSpec, Rng};
+
+fn conv_bn_relu(inc: usize, outc: usize, k: usize, stride: usize, rng: &mut Rng) -> Vec<Layer> {
+    let pad = k / 2;
+    vec![
+        Layer::Conv(ConvLayer::new(Conv2dSpec::new(inc, outc, k, stride, pad), false, rng)),
+        Layer::Bn(BatchNorm::new(outc)),
+        Layer::ReLU,
+    ]
+}
+
+/// A basic residual block (two 3×3 convs; projection shortcut on shape change).
+fn res_block(inc: usize, outc: usize, stride: usize, rng: &mut Rng) -> Layer {
+    let main = vec![
+        Layer::Conv(ConvLayer::new(Conv2dSpec::new(inc, outc, 3, stride, 1), false, rng)),
+        Layer::Bn(BatchNorm::new(outc)),
+        Layer::ReLU,
+        Layer::Conv(ConvLayer::new(Conv2dSpec::new(outc, outc, 3, 1, 1), false, rng)),
+        Layer::Bn(BatchNorm::new(outc)),
+    ];
+    let short = if inc != outc || stride != 1 {
+        vec![
+            Layer::Conv(ConvLayer::new(Conv2dSpec::new(inc, outc, 1, stride, 0), false, rng)),
+            Layer::Bn(BatchNorm::new(outc)),
+        ]
+    } else {
+        vec![]
+    };
+    Layer::Residual(main, short)
+}
+
+fn resnet(name: &str, widths: &[usize], blocks_per_stage: &[usize], classes: usize, seed: u64) -> Model {
+    let mut rng = Rng::seed(seed);
+    let mut layers = conv_bn_relu(1, widths[0], 3, 1, &mut rng);
+    let mut inc = widths[0];
+    for (si, (&w, &nb)) in widths.iter().zip(blocks_per_stage).enumerate() {
+        for bi in 0..nb {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            layers.push(res_block(inc, w, stride, &mut rng));
+            layers.push(Layer::ReLU);
+            inc = w;
+        }
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Linear(LinearLayer::new(inc, classes, true, &mut rng)));
+    Model::new(name, layers)
+}
+
+/// ResNet-18 stand-in: 2 stages × 1 block, widths 8/16.
+pub fn mini_resnet_a(classes: usize, seed: u64) -> Model {
+    resnet("MiniResNet-A", &[8, 16], &[1, 1], classes, seed)
+}
+
+/// ResNet-34 stand-in: 2 stages × 2 blocks.
+pub fn mini_resnet_b(classes: usize, seed: u64) -> Model {
+    resnet("MiniResNet-B", &[8, 16], &[2, 2], classes, seed)
+}
+
+/// ResNet-50 stand-in: 3 stages, wider.
+pub fn mini_resnet_c(classes: usize, seed: u64) -> Model {
+    resnet("MiniResNet-C", &[12, 24, 48], &[2, 2, 2], classes, seed)
+}
+
+/// ResNet-101 stand-in: deepest stack.
+pub fn mini_resnet_d(classes: usize, seed: u64) -> Model {
+    resnet("MiniResNet-D", &[12, 24, 48], &[3, 3, 3], classes, seed)
+}
+
+/// RegNetX stand-in: grouped 3×3 convs in the residual trunk.
+pub fn regnet_style(classes: usize, seed: u64) -> Model {
+    let mut rng = Rng::seed(seed);
+    let mut layers = conv_bn_relu(1, 8, 3, 1, &mut rng);
+    for (inc, outc, stride) in [(8usize, 16usize, 1usize), (16, 16, 2), (16, 32, 2)] {
+        let groups = 4;
+        let main = vec![
+            Layer::Conv(ConvLayer::new(Conv2dSpec::new(inc, outc, 1, 1, 0), false, &mut rng)),
+            Layer::Bn(BatchNorm::new(outc)),
+            Layer::ReLU,
+            Layer::Conv(ConvLayer::new(
+                Conv2dSpec::new(outc, outc, 3, stride, 1).grouped(groups),
+                false,
+                &mut rng,
+            )),
+            Layer::Bn(BatchNorm::new(outc)),
+            Layer::ReLU,
+            Layer::Conv(ConvLayer::new(Conv2dSpec::new(outc, outc, 1, 1, 0), false, &mut rng)),
+            Layer::Bn(BatchNorm::new(outc)),
+        ];
+        let short = if inc != outc || stride != 1 {
+            vec![
+                Layer::Conv(ConvLayer::new(Conv2dSpec::new(inc, outc, 1, stride, 0), false, &mut rng)),
+                Layer::Bn(BatchNorm::new(outc)),
+            ]
+        } else {
+            vec![]
+        };
+        layers.push(Layer::Residual(main, short));
+        layers.push(Layer::ReLU);
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Linear(LinearLayer::new(32, classes, true, &mut rng)));
+    Model::new("RegNet-style", layers)
+}
+
+/// Inception-V3 stand-in: multi-branch concat blocks (1×1 / 3×3 / 5×5-ish).
+pub fn inception_style(classes: usize, seed: u64) -> Model {
+    let mut rng = Rng::seed(seed);
+    let mut layers = conv_bn_relu(1, 8, 3, 1, &mut rng);
+    // two inception blocks
+    for inc in [8usize, 16] {
+        let b1 = conv_bn_relu(inc, 4, 1, 1, &mut rng);
+        let b2 = {
+            let mut v = conv_bn_relu(inc, 6, 1, 1, &mut rng);
+            v.extend(conv_bn_relu(6, 8, 3, 1, &mut rng));
+            v
+        };
+        let b3 = {
+            let mut v = conv_bn_relu(inc, 2, 1, 1, &mut rng);
+            v.extend(conv_bn_relu(2, 4, 5, 1, &mut rng));
+            v
+        };
+        layers.push(Layer::Branches(vec![b1, b2, b3])); // 4+8+4 = 16 ch
+        layers.push(Layer::MaxPool2);
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Linear(LinearLayer::new(16, classes, true, &mut rng)));
+    Model::new("Inception-style", layers)
+}
+
+/// MobileNetV2 stand-in: inverted residuals with depthwise 3×3 convs —
+/// the architecture PTQ papers consistently find hardest to quantize.
+pub fn mobilenet_style(classes: usize, seed: u64) -> Model {
+    let mut rng = Rng::seed(seed);
+    let mut layers = conv_bn_relu(1, 8, 3, 1, &mut rng);
+    for (inc, exp, outc, stride) in
+        [(8usize, 16usize, 8usize, 1usize), (8, 24, 12, 2), (12, 36, 12, 1)]
+    {
+        let main = vec![
+            // expand 1×1
+            Layer::Conv(ConvLayer::new(Conv2dSpec::new(inc, exp, 1, 1, 0), false, &mut rng)),
+            Layer::Bn(BatchNorm::new(exp)),
+            Layer::ReLU,
+            // depthwise 3×3
+            Layer::Conv(ConvLayer::new(Conv2dSpec::depthwise(exp, 3, stride, 1), false, &mut rng)),
+            Layer::Bn(BatchNorm::new(exp)),
+            Layer::ReLU,
+            // project 1×1
+            Layer::Conv(ConvLayer::new(Conv2dSpec::new(exp, outc, 1, 1, 0), false, &mut rng)),
+            Layer::Bn(BatchNorm::new(outc)),
+        ];
+        if inc == outc && stride == 1 {
+            layers.push(Layer::Residual(main, vec![]));
+        } else {
+            layers.extend(main);
+        }
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Linear(LinearLayer::new(12, classes, true, &mut rng)));
+    Model::new("MobileNet-style", layers)
+}
+
+/// A plain MLP for quickstart / unit tests (flattens NCHW input first).
+pub fn mlp(in_dim: usize, hidden: &[usize], classes: usize, seed: u64) -> Model {
+    let mut rng = Rng::seed(seed);
+    let mut layers = vec![Layer::Flatten];
+    let mut d = in_dim;
+    for &h in hidden {
+        layers.push(Layer::Linear(LinearLayer::new(d, h, true, &mut rng)));
+        layers.push(Layer::ReLU);
+        d = h;
+    }
+    layers.push(Layer::Linear(LinearLayer::new(d, classes, true, &mut rng)));
+    Model::new("MLP", layers)
+}
+
+/// Table-1 row order: the six CNN stand-ins.
+pub fn table1_suite(classes: usize, seed: u64) -> Vec<Model> {
+    vec![
+        mini_resnet_a(classes, seed),
+        mini_resnet_b(classes, seed + 1),
+        mini_resnet_c(classes, seed + 2),
+        mini_resnet_d(classes, seed + 3),
+        regnet_style(classes, seed + 4),
+        inception_style(classes, seed + 5),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Rng, Tensor};
+
+    fn check(m: &Model, classes: usize) {
+        let mut rng = Rng::seed(99);
+        let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
+        let y = m.forward(&x);
+        assert_eq!(y.dims(), &[2, classes], "{}", m.name);
+        assert!(y.data().iter().all(|v| v.is_finite()), "{}", m.name);
+    }
+
+    #[test]
+    fn all_zoo_models_forward() {
+        for m in table1_suite(10, 1) {
+            check(&m, 10);
+        }
+        check(&mobilenet_style(10, 2), 10);
+        check(&mlp(256, &[64], 10, 3), 10);
+    }
+
+    #[test]
+    fn depth_ordering_by_params() {
+        let a = mini_resnet_a(10, 1).params();
+        let b = mini_resnet_b(10, 1).params();
+        let c = mini_resnet_c(10, 1).params();
+        let d = mini_resnet_d(10, 1).params();
+        assert!(a < b && b < c && c < d, "{a} {b} {c} {d}");
+    }
+
+    #[test]
+    fn zoo_models_trainable_one_step() {
+        // one backprop step must run and produce finite grads on each arch
+        for mut m in
+            vec![mini_resnet_a(4, 5), regnet_style(4, 5), inception_style(4, 5), mobilenet_style(4, 5)]
+        {
+            let mut rng = Rng::seed(7);
+            let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
+            m.zero_grad();
+            let y = m.forward_train(&x);
+            let _ = m.backward(&y);
+            let name = m.name.clone();
+            let mut saw = false;
+            m.visit_params(&mut |_, g| {
+                saw = true;
+                assert!(g.data().iter().all(|v| v.is_finite()), "{name}");
+            });
+            assert!(saw);
+        }
+    }
+}

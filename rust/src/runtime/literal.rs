@@ -1,0 +1,43 @@
+//! Tensor ⇄ `xla::Literal` marshalling.
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// Dense f32 tensor → XLA literal with the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).context("reshape literal")
+}
+
+/// XLA literal (f32 array) → dense tensor.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("literal data")?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip_preserves_shape_and_data() {
+        let mut rng = Rng::seed(17);
+        for dims in [vec![4usize], vec![2, 3], vec![2, 3, 4]] {
+            let t = Tensor::rand(&dims, -1.0, 1.0, &mut rng);
+            let l = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&l).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn scalar_like_shapes() {
+        let t = Tensor::from_vec(&[1], vec![42.0]);
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.data(), &[42.0]);
+    }
+}

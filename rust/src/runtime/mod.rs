@@ -1,0 +1,182 @@
+//! PJRT runtime: loads the HLO-text artifacts `python/compile/aot.py`
+//! emits and executes them from Rust. Python is never on this path — the
+//! artifacts are self-contained.
+//!
+//! Threading note: the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so a [`Runtime`] lives on one thread. The coordinator spawns
+//! one runtime per worker thread (see `coordinator::pool`), which also
+//! mirrors the paper's one-basis-model-per-device deployment.
+
+pub mod literal;
+pub mod registry;
+
+pub use literal::{literal_to_tensor, tensor_to_literal};
+pub use registry::Manifest;
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its artifact name.
+pub struct Exec {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exec {
+    /// Execute with dense f32 inputs; returns the tuple elements.
+    ///
+    /// All AOT artifacts are lowered with `return_tuple=True`, so the
+    /// single output literal is a tuple we decompose.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = result.to_tuple().context("decompose result tuple")?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Single-output convenience.
+    pub fn run1(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut out = self.run(inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+/// One-thread PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Exec>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        log::info!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory (env-overridable for tests).
+    pub fn default_artifact_dir() -> PathBuf {
+        PathBuf::from(
+            std::env::var("FP_XINT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+        )
+    }
+
+    /// Load the AOT manifest from the artifact directory.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(self.artifact_dir.join("manifest.json"))
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&mut self, file_name: &str) -> Result<std::rc::Rc<Exec>> {
+        if let Some(e) = self.cache.get(file_name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifact_dir.join(file_name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {file_name}"))?;
+        let exec = std::rc::Rc::new(Exec { name: file_name.to_string(), exe });
+        self.cache.insert(file_name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Load an artifact by manifest key (e.g. "xint_mlp_b8").
+    pub fn load_key(&mut self, key: &str) -> Result<std::rc::Rc<Exec>> {
+        let manifest = self.manifest()?;
+        let file = manifest
+            .artifacts
+            .get(key)
+            .with_context(|| format!("artifact key {key} not in manifest"))?
+            .clone();
+        self.load(&file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn artifacts_ready() -> bool {
+        Runtime::default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn fp_mlp_artifact_matches_native_forward() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
+        let manifest = rt.manifest().unwrap();
+        let exec = rt.load_key("fp_mlp_b8").unwrap();
+        let (din, hidden, classes) = (manifest.din, manifest.hidden, manifest.classes);
+        let mut rng = Rng::seed(7);
+        let x = Tensor::randn(&[8, din], 1.0, &mut rng);
+        let w1 = Tensor::randn(&[hidden, din], 0.3, &mut rng);
+        let b1 = Tensor::randn(&[hidden], 0.1, &mut rng);
+        let w2 = Tensor::randn(&[classes, hidden], 0.3, &mut rng);
+        let b2 = Tensor::randn(&[classes], 0.1, &mut rng);
+        let y = exec
+            .run1(&[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()])
+            .unwrap();
+        // native reference
+        let h = crate::tensor::matmul_a_bt(&x, &w1).add_row_bias(&b1).relu();
+        let want = crate::tensor::matmul_a_bt(&h, &w2).add_row_bias(&b2);
+        assert_eq!(y.dims(), want.dims());
+        let rel = want.sub(&y).norm() / want.norm();
+        assert!(rel < 1e-5, "PJRT vs native rel err {rel}");
+    }
+
+    #[test]
+    fn quantize_artifact_matches_native_fake_quant() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
+        let manifest = rt.manifest().unwrap();
+        let exec = rt.load_key("quantize_act_b8").unwrap();
+        let mut rng = Rng::seed(8);
+        let x = Tensor::randn(&[8, manifest.din], 1.0, &mut rng);
+        let half = 128.0f32;
+        let scale = x.max_abs() / half;
+        let y = exec.run1(&[x.clone(), Tensor::vec1(&[scale])]).unwrap();
+        for (a, b) in x.data().iter().zip(y.data()) {
+            let q = (a / scale).round().clamp(-half, half - 1.0) * scale;
+            assert!((q - b).abs() < 1e-5, "{a}: {q} vs {b}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
+        let a = rt.load_key("fp_mlp_b1").unwrap();
+        let b = rt.load_key("fp_mlp_b1").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+}

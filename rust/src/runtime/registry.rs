@@ -1,0 +1,103 @@
+//! AOT artifact manifest (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub din: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub bits: u32,
+    pub w_terms: usize,
+    pub a_terms: usize,
+    pub batches: Vec<usize>,
+    /// key → artifact file name
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let need = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing numeric '{k}'"))
+        };
+        let batches = j
+            .get("batches")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'batches'")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts'")?
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect();
+        Ok(Manifest {
+            din: need("din")?,
+            hidden: need("hidden")?,
+            classes: need("classes")?,
+            bits: need("bits")? as u32,
+            w_terms: need("w_terms")?,
+            a_terms: need("a_terms")?,
+            batches,
+            artifacts,
+        })
+    }
+
+    /// Pick the smallest exported batch size that fits `n` samples
+    /// (the router pads up to it).
+    pub fn batch_for(&self, n: usize) -> Option<usize> {
+        self.batches.iter().copied().filter(|&b| b >= n).min().or_else(|| {
+            self.batches.iter().copied().max() // chunk large requests
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "din": 256, "hidden": 64, "classes": 10, "bits": 4,
+        "w_terms": 2, "a_terms": 3, "batches": [1, 8, 32],
+        "artifacts": {"fp_mlp_b1": "fp_mlp_b1.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_fields() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.din, 256);
+        assert_eq!(m.batches, vec![1, 8, 32]);
+        assert_eq!(m.artifacts["fp_mlp_b1"], "fp_mlp_b1.hlo.txt");
+    }
+
+    #[test]
+    fn batch_for_picks_smallest_fitting() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.batch_for(1), Some(1));
+        assert_eq!(m.batch_for(2), Some(8));
+        assert_eq!(m.batch_for(8), Some(8));
+        assert_eq!(m.batch_for(9), Some(32));
+        assert_eq!(m.batch_for(33), Some(32)); // chunking case
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse(r#"{"din": 1}"#).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Trace-driven load generator: replays a [`RequestTrace`] against the
+//! in-process coordinator and reports latency/throughput — the harness
+//! behind the §5.2 serving-speed claims.
+
+use crate::coordinator::Coordinator;
+use crate::datasets::trace::RequestTrace;
+use crate::tensor::{Rng, Tensor};
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Load-test outcome.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency: Summary,
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "offered {} completed {} shed {} wall {:.2}s thpt {:.1} rps p50 {:.2}ms p99 {:.2}ms",
+            self.offered,
+            self.completed,
+            self.shed,
+            self.wall_s,
+            self.throughput_rps,
+            self.latency.p50 * 1e3,
+            self.latency.p99 * 1e3
+        )
+    }
+}
+
+/// Replay `trace` for `duration_s` seconds against `coord`, generating
+/// feature vectors of width `din`. Arrival times are honored by sleeping
+/// to each event's offset (compressed by `time_scale` for fast benches).
+pub fn run_trace(
+    coord: &Arc<Coordinator>,
+    trace: &RequestTrace,
+    duration_s: f64,
+    din: usize,
+    time_scale: f64,
+) -> LoadReport {
+    let events = trace.generate(duration_s);
+    let offered = events.len();
+    let shed = Arc::new(AtomicU64::new(0));
+    let latencies = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut rng = Rng::seed(0xBEE);
+    for ev in events {
+        let target = Duration::from_secs_f64(ev.at * time_scale);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let x = Tensor::randn(&[ev.batch, din], 1.0, &mut rng);
+        match coord.submit(x) {
+            Ok(rx) => {
+                let latencies = latencies.clone();
+                let sent = Instant::now();
+                pending.push(std::thread::spawn(move || {
+                    if let Ok(_resp) = rx.recv() {
+                        latencies.lock().unwrap().push(sent.elapsed().as_secs_f64());
+                    }
+                }));
+            }
+            Err(_) => {
+                shed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    for h in pending {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let lats = latencies.lock().unwrap().clone();
+    LoadReport {
+        offered,
+        completed: lats.len(),
+        shed: shed.load(Ordering::Relaxed) as usize,
+        wall_s: wall,
+        throughput_rps: lats.len() as f64 / wall.max(1e-9),
+        latency: Summary::of(&lats),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{
+        BasisWorker, BatcherConfig, ExpansionScheduler, WorkerPool,
+    };
+
+    struct Fast;
+    impl BasisWorker for Fast {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(x.clone())
+        }
+    }
+
+    #[test]
+    fn trace_replay_completes_requests() {
+        let pool = WorkerPool::new(2, Arc::new(|_| Box::new(Fast) as Box<dyn BasisWorker>));
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig { max_batch: 16, max_wait_us: 300, queue_cap: 128 },
+            ExpansionScheduler::new(pool),
+        ));
+        let trace = RequestTrace::new(200.0, 5);
+        let report = run_trace(&coord, &trace, 0.5, 8, 0.2);
+        assert!(report.offered > 20, "trace too small: {}", report.offered);
+        assert_eq!(report.completed + report.shed, report.offered);
+        assert!(report.completed > 0);
+        assert!(report.latency.p50 >= 0.0);
+    }
+}

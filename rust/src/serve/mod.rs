@@ -1,0 +1,11 @@
+//! Serving front-end: model-backed basis workers (native and PJRT), a
+//! TCP server speaking a small binary protocol, and a trace-driven load
+//! generator for the latency/throughput benches.
+
+pub mod loadgen;
+pub mod server;
+pub mod workers;
+
+pub use loadgen::{run_trace, LoadReport};
+pub use server::{serve_tcp, TcpServerHandle};
+pub use workers::{mlp_basis_factory, MlpWeights, PjrtMlpWorker, QuantModelWorker};

@@ -1,0 +1,209 @@
+//! TCP front-end speaking a minimal binary protocol:
+//!
+//! request : [u32 n][u32 d][n·d × f32 LE]
+//! response: [u32 n][u32 c][n·c × f32 LE]   (or [0][0] on shed/error)
+//!
+//! The server is a thin shim over the in-process [`Coordinator`]; one
+//! OS thread per connection (std only — tokio is unavailable offline).
+
+use crate::coordinator::Coordinator;
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Handle to a running TCP server.
+pub struct TcpServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn read_exact_u32(s: &mut TcpStream) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
+    loop {
+        let n = match read_exact_u32(&mut stream) {
+            Ok(v) => v as usize,
+            Err(_) => return, // client closed
+        };
+        let d = match read_exact_u32(&mut stream) {
+            Ok(v) => v as usize,
+            Err(_) => return,
+        };
+        if n == 0 || d == 0 || n * d > 16 * 1024 * 1024 {
+            let _ = stream.write_all(&0u32.to_le_bytes());
+            let _ = stream.write_all(&0u32.to_le_bytes());
+            return;
+        }
+        let mut buf = vec![0u8; n * d * 4];
+        if stream.read_exact(&mut buf).is_err() {
+            return;
+        }
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let x = Tensor::from_vec(&[n, d], data);
+        let reply = match coord.infer(x) {
+            Ok(resp) => resp.logits,
+            Err(e) => {
+                log::warn!("request failed: {e:#}");
+                let _ = stream.write_all(&0u32.to_le_bytes());
+                let _ = stream.write_all(&0u32.to_le_bytes());
+                continue;
+            }
+        };
+        let (rn, rc) = (reply.dims()[0] as u32, reply.dims()[1] as u32);
+        let mut out = Vec::with_capacity(8 + reply.numel() * 4);
+        out.extend_from_slice(&rn.to_le_bytes());
+        out.extend_from_slice(&rc.to_le_bytes());
+        for &v in reply.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        if stream.write_all(&out).is_err() {
+            return;
+        }
+    }
+}
+
+/// Start serving on `addr` ("127.0.0.1:0" for an ephemeral port).
+pub fn serve_tcp(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<TcpServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::Builder::new().name("tcp-accept".into()).spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let coord = coord.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("tcp-conn".into())
+                        .spawn(move || handle_conn(stream, coord));
+                }
+                Err(e) => log::warn!("accept error: {e}"),
+            }
+        }
+    })?;
+    log::info!("serving on {local}");
+    Ok(TcpServerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
+}
+
+/// Blocking client call against a running server (used by tests/loadgen).
+pub fn client_infer(addr: std::net::SocketAddr, x: &Tensor) -> anyhow::Result<Tensor> {
+    let mut s = TcpStream::connect(addr)?;
+    let (n, d) = (x.dims()[0] as u32, x.dims()[1] as u32);
+    let mut msg = Vec::with_capacity(8 + x.numel() * 4);
+    msg.extend_from_slice(&n.to_le_bytes());
+    msg.extend_from_slice(&d.to_le_bytes());
+    for &v in x.data() {
+        msg.extend_from_slice(&v.to_le_bytes());
+    }
+    s.write_all(&msg)?;
+    let rn = read_exact_u32(&mut s)? as usize;
+    let rc = read_exact_u32(&mut s)? as usize;
+    anyhow::ensure!(rn > 0 && rc > 0, "server shed the request");
+    let mut buf = vec![0u8; rn * rc * 4];
+    s.read_exact(&mut buf)?;
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::from_vec(&[rn, rc], data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{
+        BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
+    };
+    use crate::tensor::Rng;
+
+    struct Double;
+    impl BasisWorker for Double {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(x.scale(2.0))
+        }
+    }
+
+    fn tiny_coordinator() -> Arc<Coordinator> {
+        let pool =
+            WorkerPool::new(1, Arc::new(|_| Box::new(Double) as Box<dyn BasisWorker>));
+        Arc::new(Coordinator::new(
+            BatcherConfig { max_batch: 8, max_wait_us: 200, queue_cap: 64 },
+            ExpansionScheduler::new(pool),
+        ))
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut rng = Rng::seed(61);
+        let x = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let y = client_infer(handle.addr, &x).unwrap();
+        assert_eq!(y.dims(), &[3, 5]);
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert!((a * 2.0 - b).abs() < 1e-5);
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn multiple_clients_concurrently() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let addr = handle.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seed(70 + t);
+                    for _ in 0..3 {
+                        let x = Tensor::randn(&[1, 4], 1.0, &mut rng);
+                        let y = client_infer(addr, &x).unwrap();
+                        assert!((x.data()[0] * 2.0 - y.data()[0]).abs() < 1e-5);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn malformed_header_rejected() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        // n = 0 triggers the guard
+        s.write_all(&0u32.to_le_bytes()).unwrap();
+        s.write_all(&5u32.to_le_bytes()).unwrap();
+        let mut reply = [0u8; 8];
+        s.read_exact(&mut reply).unwrap();
+        assert_eq!(reply, [0u8; 8]);
+        handle.stop();
+    }
+}

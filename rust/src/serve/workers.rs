@@ -1,0 +1,320 @@
+//! Model-backed [`BasisWorker`] implementations.
+//!
+//! Three execution backends, all plugging into the same coordinator:
+//!
+//! * [`QuantModelWorker`] — replication mode: each worker runs the whole
+//!   layer-sync quantized model (accuracy-bearing mode; parallelism over
+//!   *requests* comes from the batcher).
+//! * [`mlp_basis_factory`] — Theorem-2 mode for the MLP: worker `i` holds
+//!   term `i` of every layer's weight expansion; outputs AbelianAdd into
+//!   the full prediction (the nonlinearity-interchange error is measured
+//!   in EXPERIMENTS.md).
+//! * [`PjrtMlpWorker`] — the same basis slice but executed through the
+//!   AOT-compiled PJRT artifact (one PJRT client per worker thread).
+
+use crate::coordinator::pool::{BasisWorker, WorkerFactory};
+use crate::models::quantized::QuantModel;
+use crate::tensor::Tensor;
+use crate::xint::expansion::{ExpandConfig, SeriesExpansion};
+use crate::xint::quantizer::{channel_range, fake_quant, Clip, Symmetry};
+use crate::xint::BitSpec;
+use std::sync::Arc;
+
+/// The plain FP MLP weights exported to workers.
+#[derive(Clone, Debug)]
+pub struct MlpWeights {
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+}
+
+/// Whole-quantized-model worker (replication mode). The input is assumed
+/// to be a flattened (n, din) batch; image models reshape internally.
+pub struct QuantModelWorker {
+    pub model: QuantModel,
+    /// reshape target per sample, e.g. [1, 16, 16] for image models
+    pub sample_dims: Option<Vec<usize>>,
+}
+
+impl BasisWorker for QuantModelWorker {
+    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let x = match &self.sample_dims {
+            Some(sd) => {
+                let n = x.dims()[0];
+                let mut dims = vec![n];
+                dims.extend_from_slice(sd);
+                x.reshape(&dims)
+            }
+            None => x.clone(),
+        };
+        Ok(self.model.forward(&x))
+    }
+}
+
+/// One Theorem-2 basis slice of a 2-layer MLP: term `i` of each weight
+/// expansion, activations quantized at one step, biases divided by the
+/// basis count (the paper's "copy other layers and multiply 1/t²").
+pub struct MlpBasisSlice {
+    w1_term: Tensor,
+    w2_term: Tensor,
+    b1_frac: Tensor,
+    b2_frac: Tensor,
+    act_bits: u32,
+}
+
+impl MlpBasisSlice {
+    fn quant_act(&self, x: &Tensor) -> Tensor {
+        let r = channel_range(x.data(), Symmetry::Symmetric, Clip::None, self.act_bits);
+        Tensor::from_vec(x.dims(), fake_quant(x.data(), r, BitSpec::int(self.act_bits)))
+    }
+}
+
+impl BasisWorker for MlpBasisSlice {
+    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let a = self.quant_act(x);
+        let h = crate::tensor::matmul_a_bt(&a, &self.w1_term)
+            .add_row_bias(&self.b1_frac)
+            .relu();
+        let a2 = self.quant_act(&h);
+        Ok(crate::tensor::matmul_a_bt(&a2, &self.w2_term).add_row_bias(&self.b2_frac))
+    }
+}
+
+/// Build the Theorem-2 worker factory: `terms` basis slices, slice `i`
+/// carrying term `i` of both layers' expansions.
+pub fn mlp_basis_factory(weights: &MlpWeights, bits: u32, terms: usize) -> WorkerFactory {
+    let cfg = ExpandConfig::symmetric(BitSpec::int(bits), terms);
+    let e1 = SeriesExpansion::expand(&weights.w1, &cfg);
+    let e2 = SeriesExpansion::expand(&weights.w2, &cfg);
+    let slices: Vec<MlpBasisSlice> = (0..terms)
+        .map(|i| MlpBasisSlice {
+            w1_term: e1.term_tensor(i),
+            w2_term: e2.term_tensor(i),
+            b1_frac: weights.b1.scale(1.0 / terms as f32),
+            b2_frac: weights.b2.scale(1.0 / terms as f32),
+            act_bits: bits,
+        })
+        .collect();
+    let slices = Arc::new(slices);
+    Arc::new(move |i: usize| {
+        let s = &slices[i];
+        Box::new(MlpBasisSlice {
+            w1_term: s.w1_term.clone(),
+            w2_term: s.w2_term.clone(),
+            b1_frac: s.b1_frac.clone(),
+            b2_frac: s.b2_frac.clone(),
+            act_bits: s.act_bits,
+        }) as Box<dyn BasisWorker>
+    })
+}
+
+/// PJRT-backed basis worker: executes the `basis_mlp_b{N}` artifact with
+/// this slice's weight plane. Constructed inside the worker thread (the
+/// PJRT client is not Send) via [`pjrt_mlp_basis_factory`].
+pub struct PjrtMlpWorker {
+    runtime: crate::runtime::Runtime,
+    exec_by_batch: std::collections::HashMap<usize, std::rc::Rc<crate::runtime::Exec>>,
+    batches: Vec<usize>,
+    w1_plane: Tensor,
+    w1_scale: Tensor,
+    w2_plane: Tensor,
+    w2_scale: Tensor,
+    b1_frac: Tensor,
+    b2_frac: Tensor,
+    din: usize,
+}
+
+impl PjrtMlpWorker {
+    pub fn new(
+        artifact_dir: std::path::PathBuf,
+        w1_plane: Tensor,
+        w1_scale: f32,
+        w2_plane: Tensor,
+        w2_scale: f32,
+        b1_frac: Tensor,
+        b2_frac: Tensor,
+    ) -> anyhow::Result<PjrtMlpWorker> {
+        let mut runtime = crate::runtime::Runtime::cpu(&artifact_dir)?;
+        let manifest = runtime.manifest()?;
+        let mut exec_by_batch = std::collections::HashMap::new();
+        for &b in &manifest.batches {
+            exec_by_batch.insert(b, runtime.load_key(&format!("basis_mlp_b{b}"))?);
+        }
+        Ok(PjrtMlpWorker {
+            runtime,
+            exec_by_batch,
+            batches: manifest.batches.clone(),
+            // artifacts expect planes with a leading term axis of 1
+            w1_plane,
+            w1_scale: Tensor::vec1(&[w1_scale]),
+            w2_plane,
+            w2_scale: Tensor::vec1(&[w2_scale]),
+            b1_frac,
+            b2_frac,
+            din: manifest.din,
+        })
+    }
+}
+
+impl BasisWorker for PjrtMlpWorker {
+    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let _ = &self.runtime; // keeps the client alive alongside execs
+        let n = x.dims()[0];
+        anyhow::ensure!(x.dims()[1] == self.din, "din mismatch");
+        // route to the smallest artifact batch ≥ n, padding with zeros
+        let target = self
+            .batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow::anyhow!("request larger than max artifact batch"))?;
+        let exec = self.exec_by_batch[&target].clone();
+        let mut xp = Tensor::zeros(&[target, self.din]);
+        xp.data_mut()[..n * self.din].copy_from_slice(x.data());
+        let y = exec.run1(&[
+            xp,
+            self.w1_plane.clone(),
+            self.w1_scale.clone(),
+            self.b1_frac.clone(),
+            self.w2_plane.clone(),
+            self.w2_scale.clone(),
+            self.b2_frac.clone(),
+        ])?;
+        // strip padding rows
+        let classes = y.dims()[1];
+        Ok(Tensor::from_vec(&[n, classes], y.data()[..n * classes].to_vec()))
+    }
+}
+
+/// Factory producing PJRT basis workers — slice `i` of the expansions.
+pub fn pjrt_mlp_basis_factory(
+    artifact_dir: std::path::PathBuf,
+    weights: &MlpWeights,
+    bits: u32,
+    terms: usize,
+) -> WorkerFactory {
+    let cfg = ExpandConfig::symmetric(BitSpec::int(bits), terms);
+    let e1 = SeriesExpansion::expand(&weights.w1, &cfg);
+    let e2 = SeriesExpansion::expand(&weights.w2, &cfg);
+    let hidden = weights.w1.dims()[0];
+    let din = weights.w1.dims()[1];
+    let classes = weights.w2.dims()[0];
+    let payload: Vec<(Tensor, f32, Tensor, f32)> = (0..terms)
+        .map(|i| {
+            (
+                e1.planes[i].to_f32().reshaped(&[1, hidden, din]),
+                e1.scales[i][0],
+                e2.planes[i].to_f32().reshaped(&[1, classes, hidden]),
+                e2.scales[i][0],
+            )
+        })
+        .collect();
+    let payload = Arc::new(payload);
+    let b1 = weights.b1.scale(1.0 / terms as f32);
+    let b2 = weights.b2.scale(1.0 / terms as f32);
+    Arc::new(move |i: usize| {
+        let (w1p, w1s, w2p, w2s) = payload[i].clone();
+        Box::new(
+            PjrtMlpWorker::new(
+                artifact_dir.clone(),
+                w1p,
+                w1s,
+                w2p,
+                w2s,
+                b1.clone(),
+                b2.clone(),
+            )
+            .expect("construct PJRT worker"),
+        ) as Box<dyn BasisWorker>
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+    use crate::tensor::Rng;
+
+    fn mlp_weights(seed: u64) -> MlpWeights {
+        let mut rng = Rng::seed(seed);
+        MlpWeights {
+            w1: Tensor::randn(&[16, 32], 0.3, &mut rng),
+            b1: Tensor::randn(&[16], 0.1, &mut rng),
+            w2: Tensor::randn(&[10, 16], 0.3, &mut rng),
+            b2: Tensor::randn(&[10], 0.1, &mut rng),
+        }
+    }
+
+    fn fp_forward(w: &MlpWeights, x: &Tensor) -> Tensor {
+        let h = crate::tensor::matmul_a_bt(x, &w.w1).add_row_bias(&w.b1).relu();
+        crate::tensor::matmul_a_bt(&h, &w.w2).add_row_bias(&w.b2)
+    }
+
+    #[test]
+    fn basis_slices_reduce_close_to_fp() {
+        let w = mlp_weights(51);
+        let terms = 4;
+        let pool = WorkerPool::new(terms, mlp_basis_factory(&w, 8, terms));
+        let sched = ExpansionScheduler::new(pool);
+        let mut rng = Rng::seed(52);
+        let x = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let y = sched.forward(x.clone()).unwrap();
+        let fp = fp_forward(&w, &x);
+        // model-parallel mode has nonlinearity-interchange error; with
+        // 8-bit terms it must still track FP closely enough to rank classes
+        let rel = fp.sub(&y).norm() / fp.norm();
+        assert!(rel < 0.5, "basis AllReduce rel err {rel}");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn full_coordinator_with_basis_workers() {
+        let w = mlp_weights(53);
+        let terms = 3;
+        let pool = WorkerPool::new(terms, mlp_basis_factory(&w, 8, terms));
+        let sched = ExpansionScheduler::new(pool);
+        let coord = Coordinator::new(
+            BatcherConfig { max_batch: 8, max_wait_us: 500, queue_cap: 32 },
+            sched,
+        );
+        let mut rng = Rng::seed(54);
+        for _ in 0..4 {
+            let x = Tensor::randn(&[2, 32], 1.0, &mut rng);
+            let resp = coord.infer(x).unwrap();
+            assert_eq!(resp.logits.dims(), &[2, 10]);
+        }
+        assert_eq!(coord.metrics.completed(), 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn quant_model_worker_replication_mode() {
+        let data = crate::datasets::SynthImg::new(4, 1, 12, 0.15, 55);
+        let mut m = crate::models::zoo::mini_resnet_a(4, 56);
+        let cfg = crate::train::TrainConfig { steps: 40, batch: 16, lr: 0.05, log_every: 1000 };
+        crate::train::train_classifier(&mut m, &data, &cfg);
+        let q = crate::models::quantized::quantize_model(
+            &m,
+            crate::xint::layer::LayerPolicy::new(4, 4),
+        );
+        let q2 = q.clone();
+        let pool = WorkerPool::new(
+            1,
+            Arc::new(move |_| {
+                Box::new(QuantModelWorker {
+                    model: q2.clone(),
+                    sample_dims: Some(vec![1, 12, 12]),
+                }) as Box<dyn BasisWorker>
+            }),
+        );
+        let sched = ExpansionScheduler::new(pool);
+        let b = data.batch(4, 2);
+        let n = b.x.dims()[0];
+        let flat = b.x.reshape(&[n, 144]);
+        let y = sched.forward(flat).unwrap();
+        assert_eq!(y.dims(), &[4, 4]);
+        sched.shutdown();
+    }
+}

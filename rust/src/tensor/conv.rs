@@ -1,0 +1,336 @@
+//! 2-D convolution via im2col + GEMM, plus the gradients the trainer needs.
+//!
+//! Layout: NCHW activations, OIHW weights (the PyTorch convention the paper's
+//! models use). im2col routes every conv through the same GEMM that the
+//! series expansion quantizes, so conv layers inherit Eq. 3's expanded
+//! multiplication for free.
+
+use super::{matmul, Tensor};
+
+/// Static geometry of a conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// groups=in_ch gives depthwise conv (MobileNet-style substrate)
+    pub groups: usize,
+}
+
+impl Conv2dSpec {
+    pub fn new(in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Conv2dSpec { in_ch, out_ch, kh: k, kw: k, stride, pad, groups: 1 }
+    }
+
+    pub fn depthwise(ch: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Conv2dSpec { in_ch: ch, out_ch: ch, kh: k, kw: k, stride, pad, groups: ch }
+    }
+
+    pub fn grouped(mut self, groups: usize) -> Self {
+        assert_eq!(self.in_ch % groups, 0);
+        assert_eq!(self.out_ch % groups, 0);
+        self.groups = groups;
+        self
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+}
+
+/// Unfold one image `(C,H,W)` into a `(C·kh·kw, OH·OW)` column matrix.
+pub fn im2col(x: &[f32], c: usize, h: usize, w: usize, spec: &Conv2dSpec) -> Tensor {
+    let (oh, ow) = spec.out_hw(h, w);
+    let rows = c * spec.kh * spec.kw;
+    let cols = oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
+    for ci in 0..c {
+        for ki in 0..spec.kh {
+            for kj in 0..spec.kw {
+                let r = (ci * spec.kh + ki) * spec.kw + kj;
+                let orow = &mut out[r * cols..(r + 1) * cols];
+                for oi in 0..oh {
+                    let ii = (oi * spec.stride + ki) as isize - spec.pad as isize;
+                    if ii < 0 || ii >= h as isize {
+                        continue;
+                    }
+                    let xrow = &x[(ci * h + ii as usize) * w..(ci * h + ii as usize + 1) * w];
+                    for oj in 0..ow {
+                        let jj = (oj * spec.stride + kj) as isize - spec.pad as isize;
+                        if jj < 0 || jj >= w as isize {
+                            continue;
+                        }
+                        orow[oi * ow + oj] = xrow[jj as usize];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[rows, cols], out)
+}
+
+/// Fold a `(C·kh·kw, OH·OW)` column matrix back into `(C,H,W)`,
+/// accumulating overlaps — the adjoint of `im2col` (used by backprop).
+pub fn col2im(cols: &Tensor, c: usize, h: usize, w: usize, spec: &Conv2dSpec) -> Vec<f32> {
+    let (oh, ow) = spec.out_hw(h, w);
+    let ncols = oh * ow;
+    let mut out = vec![0.0f32; c * h * w];
+    let cd = cols.data();
+    for ci in 0..c {
+        for ki in 0..spec.kh {
+            for kj in 0..spec.kw {
+                let r = (ci * spec.kh + ki) * spec.kw + kj;
+                let crow = &cd[r * ncols..(r + 1) * ncols];
+                for oi in 0..oh {
+                    let ii = (oi * spec.stride + ki) as isize - spec.pad as isize;
+                    if ii < 0 || ii >= h as isize {
+                        continue;
+                    }
+                    for oj in 0..ow {
+                        let jj = (oj * spec.stride + kj) as isize - spec.pad as isize;
+                        if jj < 0 || jj >= w as isize {
+                            continue;
+                        }
+                        out[(ci * h + ii as usize) * w + jj as usize] += crow[oi * ow + oj];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Forward conv: x `(N,C,H,W)`, weight `(O,I/g,kh,kw)` → `(N,O,OH,OW)`.
+pub fn conv2d(x: &Tensor, weight: &Tensor, bias: Option<&Tensor>, spec: &Conv2dSpec) -> Tensor {
+    let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    assert_eq!(c, spec.in_ch, "conv2d in_ch");
+    assert_eq!(weight.dims()[0], spec.out_ch);
+    let (oh, ow) = spec.out_hw(h, w);
+    let g = spec.groups;
+    let icg = spec.in_ch / g;
+    let ocg = spec.out_ch / g;
+    let mut out = Tensor::zeros(&[n, spec.out_ch, oh, ow]);
+    let chw = c * h * w;
+    let kelem = icg * spec.kh * spec.kw;
+    // weight viewed per group as (ocg, kelem)
+    for ni in 0..n {
+        let img = &x.data()[ni * chw..(ni + 1) * chw];
+        for gi in 0..g {
+            let gspec = Conv2dSpec { in_ch: icg, out_ch: ocg, groups: 1, ..*spec };
+            let cols = im2col(&img[gi * icg * h * w..(gi + 1) * icg * h * w], icg, h, w, &gspec);
+            let wg = Tensor::from_vec(
+                &[ocg, kelem],
+                weight.data()[gi * ocg * kelem..(gi + 1) * ocg * kelem].to_vec(),
+            );
+            let y = matmul(&wg, &cols); // (ocg, oh*ow)
+            let base = (ni * spec.out_ch + gi * ocg) * oh * ow;
+            out.data_mut()[base..base + ocg * oh * ow].copy_from_slice(y.data());
+        }
+    }
+    if let Some(b) = bias {
+        assert_eq!(b.numel(), spec.out_ch);
+        let od = out.data_mut();
+        for ni in 0..n {
+            for oc in 0..spec.out_ch {
+                let bval = b.data()[oc];
+                let base = (ni * spec.out_ch + oc) * oh * ow;
+                for v in &mut od[base..base + oh * ow] {
+                    *v += bval;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Gradient w.r.t. the weight: `dW = dY ⋆ X` (per group, via im2col GEMM).
+pub fn conv2d_grad_weight(x: &Tensor, dy: &Tensor, spec: &Conv2dSpec) -> Tensor {
+    let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (oh, ow) = spec.out_hw(h, w);
+    let g = spec.groups;
+    let icg = c / g;
+    let ocg = spec.out_ch / g;
+    let kelem = icg * spec.kh * spec.kw;
+    let mut dw = Tensor::zeros(&[spec.out_ch, icg, spec.kh, spec.kw]);
+    let chw = c * h * w;
+    for ni in 0..n {
+        let img = &x.data()[ni * chw..(ni + 1) * chw];
+        for gi in 0..g {
+            let gspec = Conv2dSpec { in_ch: icg, out_ch: ocg, groups: 1, ..*spec };
+            let cols = im2col(&img[gi * icg * h * w..(gi + 1) * icg * h * w], icg, h, w, &gspec);
+            // dY slice (ocg, oh*ow)
+            let base = (ni * spec.out_ch + gi * ocg) * oh * ow;
+            let dyg = Tensor::from_vec(&[ocg, oh * ow], dy.data()[base..base + ocg * oh * ow].to_vec());
+            // dW_g (ocg, kelem) = dY_g × colsᵀ
+            let grad = super::matmul_a_bt(&dyg, &cols);
+            let wbase = gi * ocg * kelem;
+            for (dst, src) in dw.data_mut()[wbase..wbase + ocg * kelem].iter_mut().zip(grad.data()) {
+                *dst += *src;
+            }
+        }
+    }
+    dw
+}
+
+/// Gradient w.r.t. the input: `dX = Wᵀ × dY` folded back with col2im.
+pub fn conv2d_grad_input(weight: &Tensor, dy: &Tensor, x_dims: &[usize], spec: &Conv2dSpec) -> Tensor {
+    let (n, c, h, w) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+    let (oh, ow) = spec.out_hw(h, w);
+    let g = spec.groups;
+    let icg = c / g;
+    let ocg = spec.out_ch / g;
+    let kelem = icg * spec.kh * spec.kw;
+    let mut dx = Tensor::zeros(x_dims);
+    let chw = c * h * w;
+    for ni in 0..n {
+        for gi in 0..g {
+            let gspec = Conv2dSpec { in_ch: icg, out_ch: ocg, groups: 1, ..*spec };
+            let base = (ni * spec.out_ch + gi * ocg) * oh * ow;
+            let dyg = Tensor::from_vec(&[ocg, oh * ow], dy.data()[base..base + ocg * oh * ow].to_vec());
+            let wg = Tensor::from_vec(
+                &[ocg, kelem],
+                weight.data()[gi * ocg * kelem..(gi + 1) * ocg * kelem].to_vec(),
+            );
+            // cols grad (kelem, oh*ow) = W_gᵀ × dY_g
+            let dcols = super::matmul_at_b(&wg, &dyg);
+            let img = col2im(&dcols, icg, h, w, &gspec);
+            let dst = &mut dx.data_mut()[ni * chw + gi * icg * h * w..ni * chw + (gi + 1) * icg * h * w];
+            for (d, s) in dst.iter_mut().zip(&img) {
+                *d += *s;
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn naive_conv(x: &Tensor, w: &Tensor, spec: &Conv2dSpec) -> Tensor {
+        assert_eq!(spec.groups, 1);
+        let (n, c, h, ww) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+        let (oh, ow) = spec.out_hw(h, ww);
+        let mut out = Tensor::zeros(&[n, spec.out_ch, oh, ow]);
+        for ni in 0..n {
+            for oc in 0..spec.out_ch {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let mut s = 0.0;
+                        for ci in 0..c {
+                            for ki in 0..spec.kh {
+                                for kj in 0..spec.kw {
+                                    let ii = (oi * spec.stride + ki) as isize - spec.pad as isize;
+                                    let jj = (oj * spec.stride + kj) as isize - spec.pad as isize;
+                                    if ii < 0 || jj < 0 || ii >= h as isize || jj >= ww as isize {
+                                        continue;
+                                    }
+                                    s += x.at(&[ni, ci, ii as usize, jj as usize])
+                                        * w.at(&[oc, ci, ki, kj]);
+                                }
+                            }
+                        }
+                        out.set(&[ni, oc, oi, oj], s);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let mut rng = Rng::seed(21);
+        for &(stride, pad) in &[(1usize, 0usize), (1, 1), (2, 1)] {
+            let spec = Conv2dSpec::new(3, 4, 3, stride, pad);
+            let x = Tensor::rand(&[2, 3, 8, 8], -1.0, 1.0, &mut rng);
+            let w = Tensor::rand(&[4, 3, 3, 3], -1.0, 1.0, &mut rng);
+            let got = conv2d(&x, &w, None, &spec);
+            let want = naive_conv(&x, &w, &spec);
+            assert_eq!(got.dims(), want.dims());
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b} (stride {stride} pad {pad})");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_shapes_and_independence() {
+        let mut rng = Rng::seed(22);
+        let spec = Conv2dSpec::depthwise(4, 3, 1, 1);
+        let x = Tensor::rand(&[1, 4, 6, 6], -1.0, 1.0, &mut rng);
+        let w = Tensor::rand(&[4, 1, 3, 3], -1.0, 1.0, &mut rng);
+        let y = conv2d(&x, &w, None, &spec);
+        assert_eq!(y.dims(), &[1, 4, 6, 6]);
+        // channel 0 output must not depend on channel 1 input
+        let mut x2 = x.clone();
+        for i in 0..36 {
+            x2.data_mut()[36 + i] += 5.0; // perturb channel 1
+        }
+        let y2 = conv2d(&x2, &w, None, &spec);
+        assert_eq!(&y.data()[0..36], &y2.data()[0..36]);
+        assert_ne!(&y.data()[36..72], &y2.data()[36..72]);
+    }
+
+    #[test]
+    fn bias_adds_per_channel() {
+        let spec = Conv2dSpec::new(1, 2, 1, 1, 0);
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::from_vec(&[2, 1, 1, 1], vec![1.0, 0.0]);
+        let b = Tensor::vec1(&[10.0, 20.0]);
+        let y = conv2d(&x, &w, Some(&b), &spec);
+        assert_eq!(y.data(), &[11., 12., 13., 14., 20., 20., 20., 20.]);
+    }
+
+    /// Finite-difference check of both conv gradients.
+    #[test]
+    fn conv_grads_match_fd() {
+        let mut rng = Rng::seed(23);
+        let spec = Conv2dSpec::new(2, 3, 3, 1, 1);
+        let x = Tensor::rand(&[1, 2, 5, 5], -1.0, 1.0, &mut rng);
+        let w = Tensor::rand(&[3, 2, 3, 3], -0.5, 0.5, &mut rng);
+        // loss = sum(conv(x, w))
+        let dy = Tensor::full(&[1, 3, 5, 5], 1.0);
+        let dw = conv2d_grad_weight(&x, &dy, &spec);
+        let dx = conv2d_grad_input(&w, &dy, x.dims(), &spec);
+        let eps = 1e-2f32;
+        let f = |x: &Tensor, w: &Tensor| conv2d(x, w, None, &spec).data().iter().sum::<f32>();
+        for &idx in &[0usize, 7, 23, 53] {
+            let mut wp = w.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = w.clone();
+            wm.data_mut()[idx] -= eps;
+            let fd = (f(&x, &wp) - f(&x, &wm)) / (2.0 * eps);
+            assert!((fd - dw.data()[idx]).abs() < 2e-2, "dw[{idx}] fd {fd} vs {}", dw.data()[idx]);
+        }
+        for &idx in &[0usize, 11, 31] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let fd = (f(&xp, &w) - f(&xm, &w)) / (2.0 * eps);
+            assert!((fd - dx.data()[idx]).abs() < 2e-2, "dx[{idx}] fd {fd} vs {}", dx.data()[idx]);
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> — the defining adjoint property
+        let mut rng = Rng::seed(29);
+        let spec = Conv2dSpec::new(2, 1, 3, 2, 1);
+        let x = Tensor::rand(&[2, 7, 6], -1.0, 1.0, &mut rng);
+        let cols = im2col(x.data(), 2, 7, 6, &spec);
+        let y = Tensor::rand(cols.dims(), -1.0, 1.0, &mut rng);
+        let lhs: f32 = cols.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let back = col2im(&y, 2, 7, 6, &spec);
+        let rhs: f32 = x.data().iter().zip(&back).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+}

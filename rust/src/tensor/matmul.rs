@@ -1,0 +1,170 @@
+//! Blocked matmul kernels. These are the FP hot path that the paper's
+//! expanded INT GEMM (xint::gemm) is benchmarked against, so they are
+//! written for cache behaviour: i-k-j loop order (unit-stride inner loop)
+//! with k-blocking. See `perf_gemm` bench and EXPERIMENTS.md §Perf.
+
+use super::Tensor;
+
+const KC: usize = 256; // k-dimension block: keeps a B panel in L1/L2
+
+/// `C = A × B` for rank-2 tensors `(m,k)×(k,n)`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C += A × B` into a preallocated output (hot-loop friendly: no alloc).
+pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let n = b.dims()[1];
+    assert_eq!(b.dims()[0], k);
+    assert_eq!(c.dims(), &[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for k0 in (0..k).step_by(KC) {
+        let kend = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for p in k0..kend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue; // sparse M_sa planes hit this often
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                // unit-stride FMA loop — autovectorizes
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ × B` for `(k,m)ᵀ×(k,n)` without materializing the transpose.
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul_at_b inner dims");
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A × Bᵀ` for `(m,k)×(n,k)ᵀ` without materializing the transpose.
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (n, k2) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul_a_bt inner dims");
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &bd[j * k..(j + 1) * k];
+            // dot product, unit stride on both sides
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.dims()[0], a.dims()[1]);
+        let n = b.dims()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.at(&[i, p]) * b.at(&[p, j]);
+                }
+                c.set(&[i, j], s);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.dims(), b.dims());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = Rng::seed(123);
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (17, 33, 9), (64, 300, 31)] {
+            let a = Tensor::rand(&[m, k], -1.0, 1.0, &mut rng);
+            let b = Tensor::rand(&[k, n], -1.0, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn at_b_matches_transpose() {
+        let mut rng = Rng::seed(5);
+        let a = Tensor::rand(&[7, 4], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&[7, 6], -1.0, 1.0, &mut rng);
+        assert_close(&matmul_at_b(&a, &b), &matmul(&a.transpose2(), &b), 1e-5);
+    }
+
+    #[test]
+    fn a_bt_matches_transpose() {
+        let mut rng = Rng::seed(6);
+        let a = Tensor::rand(&[5, 8], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&[9, 8], -1.0, 1.0, &mut rng);
+        assert_close(&matmul_a_bt(&a, &b), &matmul(&a, &b.transpose2()), 1e-5);
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let a = Tensor::from_vec(&[1, 1], vec![2.0]);
+        let b = Tensor::from_vec(&[1, 1], vec![3.0]);
+        let mut c = Tensor::from_vec(&[1, 1], vec![10.0]);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data(), &[16.0]);
+    }
+}

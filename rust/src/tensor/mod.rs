@@ -1,0 +1,323 @@
+//! From-scratch dense tensor substrate.
+//!
+//! The paper's algorithm is tensor algebra (series expansion of weights and
+//! activations, Eq. 3's expanded GEMM), so the whole stack sits on this
+//! module: a row-major `f32` tensor with the ops the models and quantizers
+//! need (matmul, im2col conv, broadcasting elementwise ops, reductions) and
+//! an integer-plane tensor for the low-bit basis terms.
+//!
+//! No external array crate is available offline; this is deliberately a
+//! small, well-tested implementation rather than a general ndarray clone.
+
+mod conv;
+mod matmul;
+mod ops;
+mod rng;
+mod shape;
+
+pub use conv::{col2im, conv2d, conv2d_grad_input, conv2d_grad_weight, im2col, Conv2dSpec};
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into};
+pub use ops::{gelu_grad_scalar as gelu_grad, gelu_scalar};
+pub use rng::Rng;
+pub use shape::Shape;
+
+/// Row-major dense `f32` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+/// Dense integer tensor used for low-bit basis planes (`M̃_i` in Theorem 1).
+/// Values are *semantically* INT(X); stored as `i32` so any X ≤ 31 fits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Shape,
+    data: Vec<i32>,
+}
+
+impl Tensor {
+    /// Create a tensor of zeros with the given shape.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Create a tensor filled with `v`.
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Build from raw data; panics if the element count mismatches.
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {:?} needs {} elements, got {}",
+            dims,
+            shape.numel(),
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        Tensor::from_vec(&[data.len()], data.to_vec())
+    }
+
+    /// Uniform random tensor in `[lo, hi)`.
+    pub fn rand(dims: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
+        Tensor { shape, data }
+    }
+
+    /// Standard-normal random tensor scaled by `std`.
+    pub fn randn(dims: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, dims: &[usize]) -> Tensor {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), self.data.len(), "reshape numel mismatch");
+        Tensor { shape, data: self.data.clone() }
+    }
+
+    /// In-place reshape (no copy).
+    pub fn reshaped(mut self, dims: &[usize]) -> Tensor {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), self.data.len(), "reshape numel mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.shape.rank(), 2, "transpose2 needs rank 2");
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.rank(), 2);
+        let c = self.dims()[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.shape.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.shape.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Maximum absolute value (`‖·‖∞`), 0 for empty tensors.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Minimum and maximum element.
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Population variance of all elements.
+    pub fn var(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.data.iter().map(|&v| (v - m) * (v - m)).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+impl IntTensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        IntTensor { shape, data: vec![0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<i32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), data.len(), "IntTensor shape/data mismatch");
+        IntTensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    /// Convert to `f32` (integer values are exact in f32 for |v| < 2^24).
+    pub fn to_f32(&self) -> Tensor {
+        Tensor::from_vec(self.dims(), self.data.iter().map(|&v| v as f32).collect())
+    }
+
+    /// Maximum absolute element.
+    pub fn max_abs(&self) -> i32 {
+        self.data.iter().fold(0i32, |m, &v| m.max(v.abs()))
+    }
+
+    /// True iff every element fits in a signed `bits`-bit integer
+    /// (symmetric range `[-2^{b-1}, 2^{b-1}-1]`... we allow the full
+    /// `|v| ≤ 2^{b-1}` bound used by symmetric quantizers).
+    pub fn fits_signed(&self, bits: u32) -> bool {
+        let lim = 1i32 << (bits - 1);
+        self.data.iter().all(|&v| -lim <= v && v <= lim)
+    }
+
+    /// True iff every element is in the unsigned `bits`-bit range `[0, 2^b)`.
+    pub fn fits_unsigned(&self, bits: u32) -> bool {
+        let lim = 1i64 << bits;
+        self.data.iter().all(|&v| 0 <= v && (v as i64) < lim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        let f = Tensor::full(&[4], 2.5);
+        assert!(f.data().iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at(&[0, 1]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn from_vec_bad_len_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose2_involution() {
+        let mut rng = Rng::seed(7);
+        let t = Tensor::rand(&[3, 5], -1.0, 1.0, &mut rng);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn min_max_mean_var() {
+        let t = Tensor::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.min_max(), (1.0, 4.0));
+        assert_eq!(t.mean(), 2.5);
+        assert!((t.var() - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int_tensor_fits() {
+        let t = IntTensor::from_vec(&[3], vec![-8, 0, 7]);
+        assert!(t.fits_signed(4));
+        let t2 = IntTensor::from_vec(&[1], vec![9]);
+        assert!(!t2.fits_signed(4));
+        let u = IntTensor::from_vec(&[2], vec![0, 15]);
+        assert!(u.fits_unsigned(4));
+        assert!(!u.fits_unsigned(3));
+    }
+
+    #[test]
+    fn int_to_f32_exact() {
+        let t = IntTensor::from_vec(&[2], vec![-7, 123]);
+        assert_eq!(t.to_f32().data(), &[-7.0, 123.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect());
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.dims(), &[3, 2]);
+    }
+}

@@ -1,0 +1,282 @@
+//! Elementwise / reduction / activation ops on `Tensor`.
+
+use super::Tensor;
+
+impl Tensor {
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::from_vec(self.dims(), self.data().iter().map(|&v| f(v)).collect())
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in self.data_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise zip of two same-shaped tensors.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.dims(), other.dims(), "zip shape mismatch");
+        Tensor::from_vec(
+            self.dims(),
+            self.data().iter().zip(other.data()).map(|(&a, &b)| f(a, b)).collect(),
+        )
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a - b)
+    }
+
+    pub fn mul(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|v| v * s)
+    }
+
+    /// `self += alpha * o` in place (hot-loop friendly AXPY).
+    pub fn axpy(&mut self, alpha: f32, o: &Tensor) {
+        assert_eq!(self.dims(), o.dims(), "axpy shape mismatch");
+        for (d, &s) in self.data_mut().iter_mut().zip(o.data()) {
+            *d += alpha * s;
+        }
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|v| v.max(0.0))
+    }
+
+    /// tanh-approximation GELU (the BERT variant).
+    pub fn gelu(&self) -> Tensor {
+        self.map(gelu_scalar)
+    }
+
+    /// Row-wise softmax over the last axis of a rank-2 tensor.
+    pub fn softmax_rows(&self) -> Tensor {
+        assert_eq!(self.shape().rank(), 2);
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            let row = self.row(i);
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            for j in 0..c {
+                let e = (row[j] - m).exp();
+                out[i * c + j] = e;
+                sum += e;
+            }
+            for j in 0..c {
+                out[i * c + j] /= sum;
+            }
+        }
+        Tensor::from_vec(&[r, c], out)
+    }
+
+    /// Row-wise log-softmax over the last axis of a rank-2 tensor.
+    pub fn log_softmax_rows(&self) -> Tensor {
+        assert_eq!(self.shape().rank(), 2);
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            let row = self.row(i);
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let lse = row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+            for j in 0..c {
+                out[i * c + j] = row[j] - lse;
+            }
+        }
+        Tensor::from_vec(&[r, c], out)
+    }
+
+    /// Argmax over the last axis of a rank-2 tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape().rank(), 2);
+        let (r, _c) = (self.dims()[0], self.dims()[1]);
+        (0..r)
+            .map(|i| {
+                let row = self.row(i);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Sum over axis 0 of a rank-2 tensor → rank-1 of length `cols`.
+    pub fn sum_axis0(&self) -> Tensor {
+        assert_eq!(self.shape().rank(), 2);
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        Tensor::from_vec(&[c], out)
+    }
+
+    /// Broadcast-add a length-`cols` bias to every row of a rank-2 tensor.
+    pub fn add_row_bias(&self, bias: &Tensor) -> Tensor {
+        assert_eq!(self.shape().rank(), 2);
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        assert_eq!(bias.numel(), c, "bias length");
+        let mut out = self.data().to_vec();
+        for i in 0..r {
+            for j in 0..c {
+                out[i * c + j] += bias.data()[j];
+            }
+        }
+        Tensor::from_vec(&[r, c], out)
+    }
+
+    /// 2×2 max pooling (stride 2) on NCHW.
+    pub fn maxpool2(&self) -> Tensor {
+        let (n, c, h, w) = (self.dims()[0], self.dims()[1], self.dims()[2], self.dims()[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = Tensor::zeros(&[n, c, oh, ow]);
+        for ni in 0..n {
+            for ci in 0..c {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let mut m = f32::NEG_INFINITY;
+                        for di in 0..2 {
+                            for dj in 0..2 {
+                                m = m.max(self.at(&[ni, ci, oi * 2 + di, oj * 2 + dj]));
+                            }
+                        }
+                        out.set(&[ni, ci, oi, oj], m);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Global average pool NCHW → (N, C).
+    pub fn global_avg_pool(&self) -> Tensor {
+        let (n, c, h, w) = (self.dims()[0], self.dims()[1], self.dims()[2], self.dims()[3]);
+        let hw = (h * w) as f32;
+        let mut out = Tensor::zeros(&[n, c]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let base = (ni * c + ci) * h * w;
+                let s: f32 = self.data()[base..base + h * w].iter().sum();
+                out.set(&[ni, ci], s / hw);
+            }
+        }
+        out
+    }
+}
+
+/// Scalar GELU, tanh approximation.
+pub fn gelu_scalar(v: f32) -> f32 {
+    0.5 * v * (1.0 + (0.7978845608 * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// Derivative of the tanh-approx GELU (trainer backward pass).
+pub fn gelu_grad_scalar(v: f32) -> f32 {
+    let c = 0.7978845608f32;
+    let inner = c * (v + 0.044715 * v * v * v);
+    let t = inner.tanh();
+    let dinner = c * (1.0 + 3.0 * 0.044715 * v * v);
+    0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * dinner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_mul() {
+        let a = Tensor::vec1(&[1., 2., 3.]);
+        let b = Tensor::vec1(&[4., 5., 6.]);
+        assert_eq!(a.add(&b).data(), &[5., 7., 9.]);
+        assert_eq!(b.sub(&a).data(), &[3., 3., 3.]);
+        assert_eq!(a.mul(&b).data(), &[4., 10., 18.]);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = Tensor::vec1(&[1., 1.]);
+        a.axpy(2.0, &Tensor::vec1(&[3., 4.]));
+        assert_eq!(a.data(), &[7., 9.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 100., 100., 100.]);
+        let s = t.softmax_rows();
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // large-value row must not overflow
+        assert!((s.at(&[1, 0]) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let t = Tensor::from_vec(&[1, 4], vec![0.3, -1.2, 2.0, 0.0]);
+        let ls = t.log_softmax_rows();
+        let s = t.softmax_rows();
+        for j in 0..4 {
+            assert!((ls.at(&[0, j]).exp() - s.at(&[0, j])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 5., 1., 9., 2., 3.]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        // gelu(0)=0, gelu(large)≈large, gelu(-large)≈0
+        assert_eq!(gelu_scalar(0.0), 0.0);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu_scalar(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_fd() {
+        for &v in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let fd = (gelu_scalar(v + eps) - gelu_scalar(v - eps)) / (2.0 * eps);
+            assert!((fd - gelu_grad_scalar(v)).abs() < 1e-3, "at {v}");
+        }
+    }
+
+    #[test]
+    fn maxpool_and_gap() {
+        let t = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12., 13., 14., 15., 16.],
+        );
+        let p = t.maxpool2();
+        assert_eq!(p.data(), &[6., 8., 14., 16.]);
+        let g = t.global_avg_pool();
+        assert_eq!(g.data(), &[8.5]);
+    }
+
+    #[test]
+    fn row_bias_broadcasts() {
+        let t = Tensor::from_vec(&[2, 2], vec![0., 0., 1., 1.]);
+        let b = Tensor::vec1(&[10., 20.]);
+        assert_eq!(t.add_row_bias(&b).data(), &[10., 20., 11., 21.]);
+    }
+
+    #[test]
+    fn sum_axis0_works() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.sum_axis0().data(), &[9., 12.]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Losses: cross-entropy with softmax gradient.
+
+use crate::tensor::Tensor;
+
+/// Cross-entropy result: mean loss and dLoss/dlogits.
+#[derive(Clone, Debug)]
+pub struct CrossEntropy {
+    pub loss: f32,
+    pub dlogits: Tensor,
+}
+
+/// Mean cross-entropy over rows of `logits` (N, K) against `labels`.
+pub fn cross_entropy(logits: &Tensor, labels: &[usize]) -> CrossEntropy {
+    let (n, k) = (logits.dims()[0], logits.dims()[1]);
+    assert_eq!(n, labels.len());
+    let ls = logits.log_softmax_rows();
+    let mut loss = 0.0f32;
+    for (i, &y) in labels.iter().enumerate() {
+        assert!(y < k, "label {y} out of range");
+        loss -= ls.at(&[i, y]);
+    }
+    loss /= n as f32;
+    let mut dlogits = logits.softmax_rows();
+    for (i, &y) in labels.iter().enumerate() {
+        dlogits.data_mut()[i * k + y] -= 1.0;
+    }
+    CrossEntropy { loss, dlogits: dlogits.scale(1.0 / n as f32) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_k() {
+        let logits = Tensor::zeros(&[4, 5]);
+        let ce = cross_entropy(&logits, &[0, 1, 2, 3]);
+        assert!((ce.loss - (5.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn grad_matches_fd() {
+        let logits = Tensor::from_vec(&[2, 3], vec![0.5, -1.0, 2.0, 0.1, 0.2, -0.4]);
+        let labels = [2usize, 0];
+        let ce = cross_entropy(&logits, &labels);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut lp = logits.clone();
+            lp.data_mut()[i] += eps;
+            let mut lm = logits.clone();
+            lm.data_mut()[i] -= eps;
+            let fd = (cross_entropy(&lp, &labels).loss - cross_entropy(&lm, &labels).loss)
+                / (2.0 * eps);
+            assert!((fd - ce.dlogits.data()[i]).abs() < 1e-3, "idx {i}");
+        }
+    }
+
+    #[test]
+    fn perfect_prediction_low_loss() {
+        let logits = Tensor::from_vec(&[1, 2], vec![20.0, -20.0]);
+        let ce = cross_entropy(&logits, &[0]);
+        assert!(ce.loss < 1e-5);
+    }
+}

@@ -1,0 +1,11 @@
+//! From-scratch training substrate: losses, optimizers, training loops and
+//! checkpoint caching. Every experiment quantizes a model trained here —
+//! the "pretrained FP model" ingredient of PTQ.
+
+pub mod loss;
+pub mod optim;
+pub mod trainer;
+
+pub use loss::{cross_entropy, CrossEntropy};
+pub use optim::{Adam, Sgd};
+pub use trainer::{train_bert, train_classifier, train_lm, trained_model_cached, TrainConfig, TrainReport};

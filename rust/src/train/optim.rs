@@ -1,0 +1,149 @@
+//! Optimizers over the `visit_params` protocol.
+//!
+//! Both optimizers are *stateful over visit order*: they identify a
+//! parameter by its position in the deterministic `visit_params` walk,
+//! which is stable for a fixed architecture.
+
+use crate::tensor::Tensor;
+
+/// Plain SGD with momentum and weight decay.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr, momentum: 0.9, weight_decay: 1e-4, velocity: Vec::new() }
+    }
+
+    /// One update pass; call inside `model.visit_params` via [`Sgd::step`].
+    pub fn step(&mut self, visit: impl FnOnce(&mut dyn FnMut(&mut Tensor, &Tensor))) {
+        let mut idx = 0usize;
+        let lr = self.lr;
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+        let vel = &mut self.velocity;
+        visit(&mut |p, g| {
+            if vel.len() <= idx {
+                vel.push(Tensor::zeros(p.dims()));
+            }
+            let v = &mut vel[idx];
+            debug_assert_eq!(v.dims(), p.dims(), "param order changed");
+            for ((vv, &gv), pv) in
+                v.data_mut().iter_mut().zip(g.data()).zip(p.data().to_vec())
+            {
+                *vv = mu * *vv + gv + wd * pv;
+            }
+            for (pv, &vv) in p.data_mut().iter_mut().zip(v.data()) {
+                *pv -= lr * vv;
+            }
+            idx += 1;
+        });
+    }
+}
+
+/// Adam with bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, visit: impl FnOnce(&mut dyn FnMut(&mut Tensor, &Tensor))) {
+        self.t += 1;
+        let t = self.t;
+        let (b1, b2, eps, lr, wd) = (self.beta1, self.beta2, self.eps, self.lr, self.weight_decay);
+        let bc1 = 1.0 - b1.powi(t);
+        let bc2 = 1.0 - b2.powi(t);
+        let mut idx = 0usize;
+        let ms = &mut self.m;
+        let vs = &mut self.v;
+        visit(&mut |p, g| {
+            if ms.len() <= idx {
+                ms.push(Tensor::zeros(p.dims()));
+                vs.push(Tensor::zeros(p.dims()));
+            }
+            let m = &mut ms[idx];
+            let v = &mut vs[idx];
+            for i in 0..p.numel() {
+                let gv = g.data()[i] + wd * p.data()[i];
+                m.data_mut()[i] = b1 * m.data()[i] + (1.0 - b1) * gv;
+                v.data_mut()[i] = b2 * v.data()[i] + (1.0 - b2) * gv * gv;
+                let mhat = m.data()[i] / bc1;
+                let vhat = v.data()[i] / bc2;
+                p.data_mut()[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+            idx += 1;
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(w) = ||w - target||² with each optimizer.
+    fn quadratic_descent(opt: &mut dyn FnMut(&mut Tensor, &Tensor)) -> f32 {
+        let target = Tensor::vec1(&[3.0, -2.0, 0.5]);
+        let mut w = Tensor::zeros(&[3]);
+        for _ in 0..300 {
+            let g = w.sub(&target).scale(2.0);
+            opt(&mut w, &g);
+        }
+        w.sub(&target).norm()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut sgd = Sgd::new(0.05);
+        sgd.weight_decay = 0.0;
+        let d = quadratic_descent(&mut |w, g| {
+            sgd.step(|f| f(w, g));
+        });
+        assert!(d < 1e-3, "dist {d}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut adam = Adam::new(0.05);
+        let d = quadratic_descent(&mut |w, g| {
+            adam.step(|f| f(w, g));
+        });
+        assert!(d < 1e-2, "dist {d}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut sgd = Sgd::new(0.1);
+        sgd.momentum = 0.0;
+        sgd.weight_decay = 0.5;
+        let mut w = Tensor::vec1(&[1.0]);
+        let zero_g = Tensor::vec1(&[0.0]);
+        for _ in 0..10 {
+            sgd.step(|f| f(&mut w, &zero_g));
+        }
+        assert!(w.data()[0] < 0.7, "decay not applied: {}", w.data()[0]);
+    }
+}

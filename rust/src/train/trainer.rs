@@ -1,0 +1,221 @@
+//! Training loops for the three model families + checkpoint caching.
+//!
+//! Benches call [`trained_model_cached`], which trains once per
+//! (architecture, dataset, seed) and reuses the checkpoint from
+//! `artifacts/checkpoints/` afterwards, so regenerating a table does not
+//! re-train six CNNs every time.
+
+use super::loss::cross_entropy;
+use super::optim::Sgd;
+use crate::datasets::{accuracy, SynthImg};
+use crate::models::{serialize, Model, TinyBert, TinyLm};
+use std::path::PathBuf;
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 600, batch: 32, lr: 0.05, log_every: 100 }
+    }
+}
+
+/// Loss-curve + final-accuracy report (the e2e example logs this).
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// (step, loss) samples
+    pub loss_curve: Vec<(usize, f32)>,
+    pub final_train_acc: f64,
+    pub final_val_acc: f64,
+}
+
+/// Train a CNN/MLP classifier on the synthetic image task.
+pub fn train_classifier(model: &mut Model, data: &SynthImg, cfg: &TrainConfig) -> TrainReport {
+    let mut opt = Sgd::new(cfg.lr);
+    let mut report = TrainReport::default();
+    for step in 0..cfg.steps {
+        let b = data.batch(cfg.batch, 1_000 + step as u64);
+        model.zero_grad();
+        let logits = model.forward_train(&b.x);
+        let ce = cross_entropy(&logits, &b.y);
+        model.backward(&ce.dlogits);
+        opt.step(|f| model.visit_params(f));
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            report.loss_curve.push((step, ce.loss));
+            log::debug!("{} step {step} loss {:.4}", model.name, ce.loss);
+        }
+    }
+    let train = data.batch(256, 1);
+    let val = data.batch(256, 2);
+    report.final_train_acc = accuracy(&model.forward(&train.x), &train.y);
+    report.final_val_acc = accuracy(&model.forward(&val.x), &val.y);
+    report
+}
+
+/// Train a TinyBert on a token classification task (entailment) or span
+/// task. `batches` yields (tokens, labels) where span labels are encoded
+/// per-token (2·T classes handled by the caller via per-token CE).
+pub fn train_bert(
+    model: &mut TinyBert,
+    mut next_batch: impl FnMut(usize) -> (Vec<Vec<usize>>, Vec<usize>),
+    cfg: &TrainConfig,
+) -> TrainReport {
+    let mut opt = Sgd::new(cfg.lr);
+    let mut report = TrainReport::default();
+    for step in 0..cfg.steps {
+        let (tokens, labels) = next_batch(step);
+        model.zero_grad();
+        let logits = model.forward_train(&tokens);
+        let ce = cross_entropy(&logits, &labels);
+        model.backward(&ce.dlogits);
+        opt.step(|f| model.visit_params(f));
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            report.loss_curve.push((step, ce.loss));
+            log::debug!("tinybert step {step} loss {:.4}", ce.loss);
+        }
+    }
+    report
+}
+
+/// Train the char LM on a token stream with next-char cross entropy.
+pub fn train_lm(model: &mut TinyLm, stream: &[usize], cfg: &TrainConfig) -> TrainReport {
+    let mut opt = Sgd::new(cfg.lr);
+    let mut report = TrainReport::default();
+    let seq = model.seq;
+    let vocab = crate::datasets::charlm::CHAR_VOCAB;
+    let mut cursor = 0usize;
+    for step in 0..cfg.steps {
+        // batch of contiguous windows
+        let mut tokens = Vec::with_capacity(cfg.batch);
+        for _ in 0..cfg.batch {
+            if cursor + seq + 1 >= stream.len() {
+                cursor = (cursor * 7 + 13) % seq.max(1); // wrap with a shifting phase
+            }
+            tokens.push(stream[cursor..cursor + seq].to_vec());
+            cursor += seq / 2 + 1;
+        }
+        model.zero_grad();
+        let logits = model.forward_train(&tokens);
+        // next-char CE at positions 0..seq-1
+        let sm = logits.softmax_rows();
+        let mut dl = sm.clone();
+        let mut loss = 0.0f32;
+        let ls = logits.log_softmax_rows();
+        let mut count = 0.0f32;
+        for (s, seq_toks) in tokens.iter().enumerate() {
+            for p in 0..seq - 1 {
+                let row = s * seq + p;
+                let next = seq_toks[p + 1];
+                loss -= ls.at(&[row, next]);
+                dl.data_mut()[row * vocab + next] -= 1.0;
+                count += 1.0;
+            }
+            // no target at the last position
+            let row = s * seq + seq - 1;
+            for j in 0..vocab {
+                dl.data_mut()[row * vocab + j] = 0.0;
+            }
+        }
+        loss /= count;
+        model.backward(&dl.scale(1.0 / count));
+        opt.step(|f| model.visit_params(f));
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            report.loss_curve.push((step, loss));
+            log::debug!("tinylm step {step} loss {loss:.4}");
+        }
+    }
+    report
+}
+
+/// Checkpoint directory (gitignored, lives with the AOT artifacts).
+pub fn checkpoint_dir() -> PathBuf {
+    let root = std::env::var("FP_XINT_CKPT_DIR")
+        .unwrap_or_else(|_| "artifacts/checkpoints".to_string());
+    PathBuf::from(root)
+}
+
+/// Train-once-and-cache: returns the model with trained weights and its
+/// validation accuracy. `build` must deterministically construct the
+/// architecture (same seed ⇒ same shapes).
+pub fn trained_model_cached(
+    tag: &str,
+    build: impl Fn() -> Model,
+    data: &SynthImg,
+    cfg: &TrainConfig,
+) -> (Model, f64) {
+    let path = checkpoint_dir().join(format!("{tag}.fpxw"));
+    let mut model = build();
+    if path.exists() {
+        if serialize::load_model(&path, &mut model).is_ok() {
+            let val = data.batch(256, 2);
+            let acc = accuracy(&model.forward(&val.x), &val.y);
+            log::info!("loaded cached {tag} (val acc {:.2}%)", acc * 100.0);
+            return (model, acc);
+        }
+        log::warn!("stale checkpoint {path:?}; retraining");
+        model = build();
+    }
+    let report = train_classifier(&mut model, data, cfg);
+    // one extra train-mode pass is NOT needed; BN running stats accumulated
+    serialize::save_model(&path, &mut model).expect("save checkpoint");
+    log::info!(
+        "trained {tag}: train acc {:.2}% val acc {:.2}%",
+        report.final_train_acc * 100.0,
+        report.final_val_acc * 100.0
+    );
+    (model, report.final_val_acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SynthImg;
+    use crate::models::zoo;
+
+    #[test]
+    fn classifier_learns_synthimg() {
+        // small budget: must beat chance (10%) clearly
+        let data = SynthImg::new(4, 1, 12, 0.15, 5);
+        let mut m = zoo::mlp(144, &[32], 4, 6);
+        let cfg = TrainConfig { steps: 150, batch: 32, lr: 0.08, log_every: 50 };
+        let rep = train_classifier(&mut m, &data, &cfg);
+        assert!(rep.loss_curve.len() >= 3);
+        assert!(
+            rep.final_val_acc > 0.5,
+            "val acc {:.2} too low (chance 0.25)",
+            rep.final_val_acc
+        );
+        // loss must decrease overall
+        let first = rep.loss_curve.first().unwrap().1;
+        let last = rep.loss_curve.last().unwrap().1;
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn cnn_learns_synthimg() {
+        let data = SynthImg::new(4, 1, 12, 0.15, 7);
+        let mut m = zoo::mini_resnet_a(4, 8);
+        let cfg = TrainConfig { steps: 120, batch: 24, lr: 0.05, log_every: 40 };
+        let rep = train_classifier(&mut m, &data, &cfg);
+        assert!(rep.final_val_acc > 0.5, "cnn val acc {:.2}", rep.final_val_acc);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let data = SynthImg::new(3, 1, 8, 0.1, 9);
+        let cfg = TrainConfig { steps: 30, batch: 16, lr: 0.05, log_every: 10 };
+        let tag = format!("test_cache_{}", std::process::id());
+        let build = || zoo::mlp(64, &[16], 3, 10);
+        let (_m1, acc1) = trained_model_cached(&tag, build, &data, &cfg);
+        // second call loads the cache and reports the same accuracy
+        let (_m2, acc2) = trained_model_cached(&tag, build, &data, &cfg);
+        assert_eq!(acc1, acc2);
+        std::fs::remove_file(checkpoint_dir().join(format!("{tag}.fpxw"))).ok();
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal GNU-style CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! typed accessors with defaults. Unknown-flag detection is the caller's
+//! choice via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (tests).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// String option with default.
+    pub fn get(&mut self, key: &str, default: &str) -> String {
+        self.consumed.push(key.to_string());
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.opts.get(key).cloned()
+    }
+
+    /// Typed numeric option with default; panics with a clear message on
+    /// unparseable input (surface config errors early).
+    pub fn get_num<T: std::str::FromStr>(&mut self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        self.consumed.push(key.to_string());
+        match self.opts.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: not a valid number: {e:?}")),
+            None => default,
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.opts.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Subcommand = first positional.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional(0)
+    }
+
+    /// Error out on unrecognized options (call after all accessors).
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown options: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let mut a = args("--bits 4 --terms=3");
+        assert_eq!(a.get_num::<u32>("bits", 0), 4);
+        assert_eq!(a.get_num::<u32>("terms", 0), 3);
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let mut a = args("serve --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("model", "mlp"), "mlp");
+        assert_eq!(a.subcommand(), Some("serve"));
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let mut a = args("--known 1 --unknown 2");
+        let _ = a.get_num::<u32>("known", 0);
+        assert!(a.finish().is_err());
+        let _ = a.get_num::<u32>("unknown", 0);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "not a valid number")]
+    fn bad_number_panics() {
+        let mut a = args("--bits four");
+        let _: u32 = a.get_num("bits", 0);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let mut a = args("--clip=-2.5");
+        assert_eq!(a.get_num::<f32>("clip", 0.0), -2.5);
+    }
+}

@@ -1,0 +1,164 @@
+//! Flat key/value config-file substrate (TOML subset; serde unavailable).
+//!
+//! Format: `key = value` lines, `[section]` headers flattening to
+//! `section.key`, `#` comments, quoted strings, bools, ints, floats and
+//! comma lists. Enough to drive experiment configs reproducibly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config file.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn empty() -> Self {
+        Config::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: unterminated section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, unquote(v.trim()));
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read {:?}: {e}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.map.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn boolean(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    /// Comma-separated list of numbers.
+    pub fn num_list<T: std::str::FromStr>(&self, key: &str) -> Vec<T> {
+        self.map
+            .get(key)
+            .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quotes
+    let mut in_quote = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            r#"
+            name = "xint"   # quoted string with comment
+            [quant]
+            bits = 4
+            act_terms = 4
+            clip = 1.5
+            saturate = true
+            layers = 1, 2, 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.str("name", ""), "xint");
+        assert_eq!(c.num::<u32>("quant.bits", 0), 4);
+        assert_eq!(c.num::<f32>("quant.clip", 0.0), 1.5);
+        assert!(c.boolean("quant.saturate", false));
+        assert_eq!(c.num_list::<u32>("quant.layers"), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let c = Config::parse("a = 1").unwrap();
+        assert_eq!(c.num::<u32>("b", 7), 7);
+        assert_eq!(c.str("c", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Config::parse("no equals here").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let c = Config::parse(r#"tag = "a#b""#).unwrap();
+        assert_eq!(c.str("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.set("a", 2);
+        assert_eq!(c.num::<u32>("a", 0), 2);
+    }
+}

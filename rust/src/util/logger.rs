@@ -1,0 +1,53 @@
+//! Tiny `log`-facade backend: leveled, timestamped stderr logging.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; `verbose` raises the filter to Debug.
+/// Safe to call repeatedly (subsequent calls are no-ops).
+pub fn init(verbose: bool) {
+    let level = if verbose { LevelFilter::Debug } else { LevelFilter::Info };
+    let logger = Box::leak(Box::new(StderrLogger { level }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_idempotent() {
+        super::init(false);
+        super::init(true); // must not panic
+        log::info!("logger test line");
+    }
+}

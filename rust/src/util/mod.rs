@@ -1,0 +1,18 @@
+//! Cross-cutting substrates built from scratch (no clap/serde/criterion
+//! offline): CLI parsing, config files, logging, statistics, ASCII table
+//! rendering, a micro property-testing harness, and a bench timer.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use cli::Args;
+pub use config::Config;
+pub use stats::{mean, percentile, stddev, Summary};
+pub use table::Table;
+pub use timer::BenchTimer;

@@ -1,0 +1,153 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! [`forall`] draws `cases` random inputs from a generator and asserts the
+//! property; on failure it greedily shrinks through caller-provided
+//! candidates and reports the minimal counterexample. The xint invariants
+//! in DESIGN.md §7 are tested through this.
+
+use crate::tensor::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xF00D, max_shrink: 200 }
+    }
+}
+
+/// Run `prop` on `cases` values drawn by `gen`; shrink failures via `shrink`.
+///
+/// `prop` returns `Err(msg)` to signal failure (so assertions carry context).
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // shrink: repeatedly take the first failing candidate
+            let mut cur = input.clone();
+            let mut msg = first_msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x})\n  minimal input: {cur:?}\n  error: {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for `Vec<f32>`: halve length, zero elements, halve magnitudes.
+pub fn shrink_vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    if v.iter().any(|&x| x != 0.0) {
+        out.push(v.iter().map(|&x| x / 2.0).collect());
+        for i in 0..v.len().min(8) {
+            if v[i] != 0.0 {
+                let mut w = v.clone();
+                w[i] = 0.0;
+                out.push(w);
+            }
+        }
+    }
+    out
+}
+
+/// No-op shrinker for types without a useful notion of "smaller".
+pub fn no_shrink<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::cell::Cell;
+        let n = Cell::new(0usize);
+        forall(
+            PropConfig { cases: 10, ..Default::default() },
+            |r| r.uniform(-1.0, 1.0),
+            no_shrink,
+            |_| {
+                n.set(n.get() + 1);
+                Ok(())
+            },
+        );
+        assert_eq!(n.get(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(
+            PropConfig::default(),
+            |r| r.uniform(0.0, 10.0),
+            no_shrink,
+            |&x| if x < 20.0 { Err(format!("x={x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrinker_finds_small_counterexample() {
+        // property: no element > 1.0 — the shrinker should isolate a small vec
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                PropConfig { cases: 20, seed: 3, max_shrink: 500 },
+                |r| (0..16).map(|_| r.uniform(0.0, 2.0)).collect::<Vec<f32>>(),
+                shrink_vec_f32,
+                |v| {
+                    if v.iter().all(|&x| x <= 1.0) {
+                        Ok(())
+                    } else {
+                        Err("element > 1".into())
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("expected failure"),
+        };
+        // the minimal input should be much smaller than 16 elements
+        let shown = msg.split("minimal input: ").nth(1).unwrap();
+        let count = shown.split(',').count();
+        assert!(count <= 8, "shrunk to {count} elems: {msg}");
+    }
+
+    #[test]
+    fn shrink_vec_reduces() {
+        let v = vec![1.0f32, 2.0, 3.0, 4.0];
+        let cands = shrink_vec_f32(&v);
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+        assert!(cands.iter().any(|c| c.len() == v.len() && c.iter().sum::<f32>() < 10.0));
+    }
+}

@@ -1,0 +1,87 @@
+//! Micro-benchmark timer (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with black-box result sinking; reports a
+//! [`crate::util::stats::Summary`] of per-iteration wall times.
+
+use super::stats::Summary;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Bench runner with warmup and fixed iteration count.
+pub struct BenchTimer {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer { warmup: 3, iters: 10 }
+    }
+}
+
+impl BenchTimer {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        BenchTimer { warmup, iters }
+    }
+
+    /// Time `f`, returning per-iteration seconds.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        Summary::of(&times)
+    }
+
+    /// Time `f` and derive items/second from `items` per call.
+    pub fn throughput<T>(&self, items: usize, f: impl FnMut() -> T) -> (Summary, f64) {
+        let s = self.run(f);
+        let thpt = if s.mean > 0.0 { items as f64 / s.mean } else { 0.0 };
+        (s, thpt)
+    }
+}
+
+/// One-shot wall-clock measurement.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_counts_iters() {
+        let mut calls = 0usize;
+        let t = BenchTimer::new(2, 5);
+        let s = t.run(|| {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let t = BenchTimer::new(0, 3);
+        let (_, thpt) = t.throughput(100, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(thpt > 0.0);
+        assert!(thpt < 100.0 / 40e-6);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! AbelianAdd (⊎) and AbelianMul (∗) — §3.3.
+//!
+//! The paper defines ⊎ on isomorphic models by summing homologous
+//! parameters/outputs (Eqs. 5–6), and ∗ as a per-layer scale vector
+//! applied to weights (Definition 2). `(basis models, ⊎)` forms an
+//! Abelian group, which is exactly the algebra AllReduce needs: the
+//! reduction is associative + commutative, so the coordinator may reduce
+//! basis outputs in any tree order ([`abelian_reduce`]).
+//!
+//! [`LinearModel`] is a minimal isomorphic-model type on which the group
+//! laws are *provable* and property-tested (identity, inverse,
+//! commutativity, associativity, and the Eq. 5/6 homomorphisms). The real
+//! CNN/transformer basis models reuse only the output-side reduction,
+//! which is what Theorem 2's AllReduce needs.
+
+use crate::tensor::Tensor;
+
+/// A stack of linear layers `y = W_L ⋯ W_1 x` — the isomorphic-model
+/// class on which AbelianAdd/Mul are exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinearModel {
+    pub weights: Vec<Tensor>,
+}
+
+impl LinearModel {
+    pub fn new(weights: Vec<Tensor>) -> Self {
+        for w in weights.windows(2) {
+            assert_eq!(w[1].dims()[1], w[0].dims()[0], "layer dims must chain");
+        }
+        LinearModel { weights }
+    }
+
+    /// Isomorphic zero model (the ⊎ identity).
+    pub fn zero_like(&self) -> LinearModel {
+        LinearModel { weights: self.weights.iter().map(|w| Tensor::zeros(w.dims())).collect() }
+    }
+
+    /// Isomorphic negation (the ⊎ inverse).
+    pub fn neg(&self) -> LinearModel {
+        LinearModel { weights: self.weights.iter().map(|w| w.scale(-1.0)).collect() }
+    }
+
+    /// AbelianAdd ⊎: parameter-wise sum of isomorphic models (Eq. 5).
+    pub fn abelian_add(&self, other: &LinearModel) -> LinearModel {
+        assert_eq!(self.weights.len(), other.weights.len(), "models must be isomorphic");
+        LinearModel {
+            weights: self
+                .weights
+                .iter()
+                .zip(&other.weights)
+                .map(|(a, b)| a.add(b))
+                .collect(),
+        }
+    }
+
+    /// Forward pass `Model(W, x)`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        for w in &self.weights {
+            h = crate::tensor::matmul_a_bt(&h, w);
+        }
+        h
+    }
+}
+
+/// AbelianMul ∗ (Definition 2): a per-layer scale vector `U` applied to
+/// the model's parameters, `U ∗ model(W_i) = model(u_i · W_i)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AbelianMul {
+    pub u: Vec<f32>,
+}
+
+impl AbelianMul {
+    pub fn new(u: Vec<f32>) -> Self {
+        AbelianMul { u }
+    }
+
+    pub fn identity(layers: usize) -> Self {
+        AbelianMul { u: vec![1.0; layers] }
+    }
+
+    /// Apply to a linear model.
+    pub fn apply(&self, m: &LinearModel) -> LinearModel {
+        assert_eq!(self.u.len(), m.weights.len(), "scale vector arity");
+        LinearModel {
+            weights: m
+                .weights
+                .iter()
+                .zip(&self.u)
+                .map(|(w, &u)| w.scale(u))
+                .collect(),
+        }
+    }
+
+    /// Compose two scale vectors (the group op of the multiplicative side).
+    pub fn compose(&self, other: &AbelianMul) -> AbelianMul {
+        assert_eq!(self.u.len(), other.u.len());
+        AbelianMul { u: self.u.iter().zip(&other.u).map(|(a, b)| a * b).collect() }
+    }
+
+    /// Effective scalar on the model *output* for a linear model: Π u_i.
+    pub fn output_gain(&self) -> f32 {
+        self.u.iter().product()
+    }
+}
+
+/// The AllReduce reduction of basis-model outputs under ⊎ (output side):
+/// pairwise tree sum. Because ⊎ is an Abelian group op, any tree order
+/// gives the same result — the property the coordinator's parallel
+/// reduction relies on (and that `tests::reduce_order_invariant` checks).
+pub fn abelian_reduce(mut outputs: Vec<Tensor>) -> Option<Tensor> {
+    if outputs.is_empty() {
+        return None;
+    }
+    // balanced binary tree, mirroring a log-depth AllReduce
+    while outputs.len() > 1 {
+        let mut next = Vec::with_capacity(outputs.len().div_ceil(2));
+        let mut it = outputs.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(a.add(&b)),
+                None => next.push(a),
+            }
+        }
+        outputs = next;
+    }
+    outputs.pop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn rand_model(dims: &[usize], seed: u64) -> LinearModel {
+        let mut rng = Rng::seed(seed);
+        let weights = dims
+            .windows(2)
+            .map(|w| Tensor::randn(&[w[1], w[0]], 0.5, &mut rng))
+            .collect();
+        LinearModel::new(weights)
+    }
+
+    fn close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.dims(), b.dims());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn group_laws_hold() {
+        let a = rand_model(&[4, 6, 3], 1);
+        let b = rand_model(&[4, 6, 3], 2);
+        let c = rand_model(&[4, 6, 3], 3);
+        // commutativity (exact in IEEE: x+y == y+x)
+        assert_eq!(a.abelian_add(&b), b.abelian_add(&a));
+        // associativity (holds up to f32 rounding)
+        let lhs = a.abelian_add(&b).abelian_add(&c);
+        let rhs = a.abelian_add(&b.abelian_add(&c));
+        for (wl, wr) in lhs.weights.iter().zip(&rhs.weights) {
+            close(wl, wr, 1e-6);
+        }
+        // identity
+        assert_eq!(a.abelian_add(&a.zero_like()), a);
+        // inverse
+        assert_eq!(a.abelian_add(&a.neg()), a.zero_like());
+    }
+
+    #[test]
+    fn eq5_weight_additivity_single_layer() {
+        // Model(W1,A,x) ⊎ Model(W2,A,x) == Model(W1+W2,A,x) — exact for
+        // a single linear layer (output-side ⊎ = output sum)
+        let mut rng = Rng::seed(4);
+        let w1 = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let w2 = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let m1 = LinearModel::new(vec![w1.clone()]);
+        let m2 = LinearModel::new(vec![w2.clone()]);
+        let sum = LinearModel::new(vec![w1.add(&w2)]);
+        let lhs = m1.forward(&x).add(&m2.forward(&x));
+        close(&lhs, &sum.forward(&x), 1e-5);
+    }
+
+    #[test]
+    fn eq6_activation_additivity() {
+        // Model(W,A1) ⊎ Model(W,A2) == Model(W,A1+A2) for linear layers
+        let mut rng = Rng::seed(5);
+        let m = rand_model(&[8, 5, 4], 6);
+        let x1 = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let x2 = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let lhs = m.forward(&x1).add(&m.forward(&x2));
+        close(&lhs, &m.forward(&x1.add(&x2)), 1e-4);
+    }
+
+    #[test]
+    fn abelian_mul_is_weight_scaling() {
+        let m = rand_model(&[6, 4, 2], 7);
+        let mut rng = Rng::seed(8);
+        let x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let u = AbelianMul::new(vec![2.0, -0.5]);
+        let lhs = u.apply(&m).forward(&x);
+        // for linear models: output scales by Π u_i
+        let rhs = m.forward(&x).scale(u.output_gain());
+        close(&lhs, &rhs, 1e-4);
+    }
+
+    #[test]
+    fn abelian_mul_composition() {
+        let m = rand_model(&[4, 4], 9);
+        let u1 = AbelianMul::new(vec![3.0]);
+        let u2 = AbelianMul::new(vec![0.25]);
+        assert_eq!(u1.apply(&u2.apply(&m)), u1.compose(&u2).apply(&m));
+        assert_eq!(AbelianMul::identity(1).apply(&m), m);
+    }
+
+    #[test]
+    fn reduce_order_invariant() {
+        let mut rng = Rng::seed(10);
+        let outs: Vec<Tensor> =
+            (0..7).map(|_| Tensor::randn(&[2, 3], 1.0, &mut rng)).collect();
+        let tree = abelian_reduce(outs.clone()).unwrap();
+        // sequential left fold
+        let mut seq = Tensor::zeros(&[2, 3]);
+        for o in &outs {
+            seq = seq.add(o);
+        }
+        close(&tree, &seq, 1e-5);
+        // random permutation
+        let mut perm = outs.clone();
+        rng.shuffle(&mut perm);
+        close(&tree, &abelian_reduce(perm).unwrap(), 1e-5);
+    }
+
+    #[test]
+    fn reduce_empty_is_none_single_is_identity() {
+        assert!(abelian_reduce(vec![]).is_none());
+        let t = Tensor::vec1(&[1.0, 2.0]);
+        assert_eq!(abelian_reduce(vec![t.clone()]).unwrap(), t);
+    }
+
+    #[test]
+    fn property_group_laws_random() {
+        use crate::util::prop::{forall, no_shrink, PropConfig};
+        forall(
+            PropConfig { cases: 24, seed: 0xBEEF, max_shrink: 0 },
+            |r| {
+                let d1 = 1 + r.below(5);
+                let d2 = 1 + r.below(5);
+                let mut rng = r.fork(2);
+                (
+                    rand_model(&[d1, d2], rng.next_u64()),
+                    rand_model(&[d1, d2], rng.next_u64()),
+                )
+            },
+            no_shrink,
+            |(a, b)| {
+                if a.abelian_add(b) != b.abelian_add(a) {
+                    return Err("commutativity".into());
+                }
+                if a.abelian_add(&a.zero_like()) != *a {
+                    return Err("identity".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Automatic term-count resolution — the paper's two stopping rules as a
+//! policy resolver:
+//!
+//! * weights (§4, "The Weight Expansion Upper Bound"): grow `k` until the
+//!   total-differential criterion `scale_k · 2^X < 1e-2` holds (trained
+//!   weights have zero loss-gradient, so finer weight terms are invisible
+//!   to the loss) — in practice k = 2–3.
+//! * activations (§5.3): grow `t` until the max reconstruction residual
+//!   on a probe batch drops below `1e-4` — in practice t ≈ 4 at INT4.
+
+use super::expansion::ExpandConfig;
+use super::layer::{weight_term_bound, LayerPolicy};
+use super::monitor::ExpansionMonitor;
+use super::BitSpec;
+use crate::tensor::Tensor;
+
+/// Tunable thresholds (paper defaults).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoConfig {
+    /// §4: `scale_k · 2^X < w_threshold` stops the weight expansion
+    pub w_threshold: f32,
+    /// §5.3: max activation residual < a_tol stops the act expansion
+    pub a_tol: f32,
+    pub max_w_terms: usize,
+    pub max_a_terms: usize,
+}
+
+impl Default for AutoConfig {
+    fn default() -> Self {
+        AutoConfig { w_threshold: 1e-2, a_tol: 1e-4, max_w_terms: 3, max_a_terms: 6 }
+    }
+}
+
+/// Resolve a [`LayerPolicy`] for one layer from its weight tensor and a
+/// probe activation batch.
+pub fn resolve_policy(
+    w: &Tensor,
+    probe_act: &Tensor,
+    w_bits: u32,
+    a_bits: u32,
+    cfg: &AutoConfig,
+) -> LayerPolicy {
+    let k = weight_term_bound(w, BitSpec::int(w_bits), cfg.w_threshold, cfg.max_w_terms);
+    let mut mon = ExpansionMonitor::new();
+    mon.observe(
+        probe_act,
+        &ExpandConfig::activations(BitSpec::int(a_bits), cfg.max_a_terms),
+    );
+    let t = mon.optimal_terms(cfg.a_tol).unwrap_or(cfg.max_a_terms);
+    LayerPolicy::new(w_bits, a_bits).with_terms(k, t)
+}
+
+/// Auto-quantize a model: resolve one global activation term count from a
+/// probe batch, per the §5.3 rule, and the weight bound from the largest
+/// weight scale in the model (conservative: the §4 criterion must hold
+/// for every layer).
+pub fn quantize_model_auto(
+    model: &crate::models::Model,
+    probe: &Tensor,
+    w_bits: u32,
+    a_bits: u32,
+    cfg: &AutoConfig,
+) -> (crate::models::quantized::QuantModel, LayerPolicy) {
+    // weight bound from the max-|w| layer
+    let mut folded = model.clone();
+    folded.fold_bn();
+    let mut max_scale_w: Option<Tensor> = None;
+    visit_weights(&folded.layers, &mut |w| {
+        let cur = max_scale_w.as_ref().map(|t| t.max_abs()).unwrap_or(0.0);
+        if w.max_abs() > cur {
+            max_scale_w = Some(w.clone());
+        }
+    });
+    let wref = max_scale_w.expect("model has no quantizable layers");
+    let policy = resolve_policy(&wref, probe, w_bits, a_bits, cfg);
+    (crate::models::quantized::quantize_model(model, policy), policy)
+}
+
+fn visit_weights(layers: &[crate::models::Layer], f: &mut dyn FnMut(&Tensor)) {
+    use crate::models::Layer;
+    for l in layers {
+        match l {
+            Layer::Conv(c) => f(&c.w),
+            Layer::Linear(lin) => f(&lin.w),
+            Layer::Residual(m, s) => {
+                visit_weights(m, f);
+                visit_weights(s, f);
+            }
+            Layer::Branches(bs) => {
+                for b in bs {
+                    visit_weights(b, f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn resolve_policy_matches_paper_defaults_at_int4() {
+        let mut rng = Rng::seed(401);
+        // trained-scale weights (max ≈ 0.5) and unit-scale activations
+        let w = Tensor::randn(&[16, 32], 0.15, &mut rng);
+        let a = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let p = resolve_policy(&w, &a, 4, 4, &AutoConfig::default());
+        assert!(
+            (2..=3).contains(&p.w_terms),
+            "weight terms {} outside the paper's 2–3",
+            p.w_terms
+        );
+        assert!(
+            (3..=5).contains(&p.a_terms),
+            "act terms {} outside the paper's ≈4",
+            p.a_terms
+        );
+    }
+
+    #[test]
+    fn more_bits_need_fewer_terms() {
+        let mut rng = Rng::seed(402);
+        let w = Tensor::randn(&[16, 32], 0.15, &mut rng);
+        let a = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let p4 = resolve_policy(&w, &a, 4, 4, &AutoConfig::default());
+        let p8 = resolve_policy(&w, &a, 8, 8, &AutoConfig::default());
+        assert!(p8.w_terms <= p4.w_terms);
+        assert!(p8.a_terms <= p4.a_terms);
+    }
+
+    #[test]
+    fn auto_quantize_model_end_to_end() {
+        let data = crate::datasets::SynthImg::new(4, 1, 12, 0.2, 403);
+        let mut m = crate::models::zoo::mini_resnet_a(4, 404);
+        let cfg = crate::train::TrainConfig { steps: 60, batch: 16, lr: 0.05, log_every: 1000 };
+        crate::train::train_classifier(&mut m, &data, &cfg);
+        let probe = data.batch(16, 3).x;
+        let (q, policy) = quantize_model_auto(&m, &probe, 4, 4, &AutoConfig::default());
+        assert!(policy.w_terms >= 2);
+        assert!(policy.a_terms >= 2);
+        let val = data.batch(128, 2);
+        let acc = crate::datasets::accuracy(&q.forward(&val.x), &val.y);
+        let mut fp = m.clone();
+        fp.fold_bn();
+        let fp_acc = crate::datasets::accuracy(&fp.forward(&val.x), &val.y);
+        assert!(acc >= fp_acc - 0.05, "auto W4A4 {acc:.3} vs FP {fp_acc:.3}");
+    }
+}

@@ -1,0 +1,466 @@
+//! Theorem 1 — tensor low-bit series expansion.
+//!
+//! `M = M_sa + bias·M_nsy + Σ_{i=1..n} scale_i · M̃_i`, with the geometric
+//! scale law `scale_i = 2^X · scale_{i+1}` and every `M̃_i` an INT(X)
+//! tensor. Planes are computed with the §4 *parallel* closed form
+//!
+//! `M̃_k(i,j) = round(M'/s_k) − 2^X · round(M'/s_{k−1})`
+//!
+//! which telescopes to `Σ s_i M̃_i = s_n · round(M'/s_n)`, hence the
+//! exponential convergence `‖residual‖∞ ≤ s_n/2` (Theorem 1's proof).
+//! Supports per-tensor or per-channel (axis 0) ranges, matching the
+//! paper's channel-by-channel quantization (§5.1).
+
+use super::quantizer::{channel_range, Clip, Range, Symmetry};
+use super::BitSpec;
+use crate::tensor::{IntTensor, Tensor};
+
+/// Sparse COO tensor holding the saturation residual `M_sa` (§3.1).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseTensor {
+    pub dims: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn empty(dims: &[usize]) -> Self {
+        SparseTensor { dims: dims.to_vec(), indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&self.dims);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            t.data_mut()[i] = v;
+        }
+        t
+    }
+
+    /// Add `self` into a dense accumulator.
+    pub fn add_into(&self, out: &mut Tensor) {
+        assert_eq!(out.dims(), &self.dims[..]);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out.data_mut()[i] += v;
+        }
+    }
+}
+
+/// Configuration of a series expansion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExpandConfig {
+    pub bits: BitSpec,
+    /// number of INT terms `n`
+    pub terms: usize,
+    pub symmetry: Symmetry,
+    pub clip: Clip,
+    /// `Some(0)`: per-channel along axis 0 (weights); `None`: per-tensor
+    pub channel_axis: Option<usize>,
+}
+
+impl ExpandConfig {
+    /// Non-saturating symmetric per-tensor expansion — the proof's base case.
+    pub fn symmetric(bits: BitSpec, terms: usize) -> Self {
+        ExpandConfig { bits, terms, symmetry: Symmetry::Symmetric, clip: Clip::None, channel_axis: None }
+    }
+
+    /// The paper's weight policy: per-channel symmetric, Laplace clip.
+    pub fn weights(bits: BitSpec, terms: usize) -> Self {
+        ExpandConfig {
+            bits,
+            terms,
+            symmetry: Symmetry::Symmetric,
+            clip: Clip::Laplace,
+            channel_axis: Some(0),
+        }
+    }
+
+    /// The paper's activation policy: per-tensor asymmetric, Laplace clip.
+    pub fn activations(bits: BitSpec, terms: usize) -> Self {
+        ExpandConfig {
+            bits,
+            terms,
+            symmetry: Symmetry::Asymmetric,
+            clip: Clip::Laplace,
+            channel_axis: None,
+        }
+    }
+
+    pub fn with_clip(mut self, clip: Clip) -> Self {
+        self.clip = clip;
+        self
+    }
+
+    pub fn with_terms(mut self, terms: usize) -> Self {
+        self.terms = terms;
+        self
+    }
+}
+
+/// The expansion of one tensor: `bias`, scales and INT planes per channel,
+/// plus the sparse saturation residual.
+#[derive(Clone, Debug)]
+pub struct SeriesExpansion {
+    pub config: ExpandConfig,
+    pub dims: Vec<usize>,
+    /// zero point per channel (len = #channels; 1 for per-tensor)
+    pub bias: Vec<f32>,
+    /// `scales[t][c]`: scale of term `t` for channel `c`
+    pub scales: Vec<Vec<f32>>,
+    /// INT(X) basis planes, each with the full tensor shape
+    pub planes: Vec<IntTensor>,
+    /// saturation residual `M_sa` (empty when non-saturating)
+    pub sparse: SparseTensor,
+}
+
+impl SeriesExpansion {
+    /// Expand `m` per Theorem 1.
+    pub fn expand(m: &Tensor, cfg: &ExpandConfig) -> SeriesExpansion {
+        assert!(cfg.terms >= 1, "need at least one term");
+        let dims = m.dims().to_vec();
+        let (nch, chlen) = match cfg.channel_axis {
+            Some(0) => (dims[0], m.numel() / dims[0].max(1)),
+            None => (1, m.numel()),
+            Some(a) => panic!("channel_axis {a} unsupported (only 0)"),
+        };
+        let levels = (1i64 << cfg.bits.bits) as f32;
+        let half = cfg.bits.half() as f32;
+
+        let mut bias = vec![0.0f32; nch];
+        let mut scale1 = vec![0.0f32; nch];
+        let mut ranges = vec![Range { bias: 0.0, half_width: 0.0 }; nch];
+        for c in 0..nch {
+            let xs = &m.data()[c * chlen..(c + 1) * chlen];
+            let r = channel_range(xs, cfg.symmetry, cfg.clip, cfg.bits.bits);
+            bias[c] = r.bias;
+            scale1[c] = r.half_width / half;
+            ranges[c] = r;
+        }
+
+        // sparse saturation residual: whatever the clipped range misses
+        let mut sparse = SparseTensor::empty(&dims);
+        if !matches!(cfg.clip, Clip::None) {
+            for c in 0..nch {
+                let r = ranges[c];
+                for j in 0..chlen {
+                    let idx = c * chlen + j;
+                    let v = m.data()[idx] - r.bias;
+                    let clipped = v.clamp(-r.half_width, r.half_width);
+                    if v != clipped {
+                        sparse.indices.push(idx);
+                        sparse.values.push(v - clipped);
+                    }
+                }
+            }
+        }
+
+        // parallel closed-form planes on the clipped, centred tensor
+        let mut planes = Vec::with_capacity(cfg.terms);
+        let mut scales = Vec::with_capacity(cfg.terms);
+        let mut prev_q: Vec<i64> = vec![0; m.numel()];
+        let mut s_t = scale1.clone();
+        for t in 0..cfg.terms {
+            let mut plane = vec![0i32; m.numel()];
+            for c in 0..nch {
+                let r = ranges[c];
+                let s = s_t[c];
+                for j in 0..chlen {
+                    let idx = c * chlen + j;
+                    let v = (m.data()[idx] - r.bias).clamp(-r.half_width, r.half_width);
+                    let q = if s > 0.0 { (v / s).round() as i64 } else { 0 };
+                    plane[idx] = (q - (levels as i64) * prev_q[idx]) as i32;
+                    prev_q[idx] = q;
+                }
+            }
+            planes.push(IntTensor::from_vec(&dims, plane));
+            scales.push(s_t.clone());
+            for s in s_t.iter_mut() {
+                *s /= levels;
+            }
+            let _ = t;
+        }
+
+        SeriesExpansion { config: *cfg, dims, bias, scales, planes, sparse }
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.bias.len()
+    }
+
+    fn chlen(&self) -> usize {
+        let numel: usize = self.dims.iter().product();
+        numel / self.n_channels()
+    }
+
+    /// Dense reconstruction `M_sa + bias·M_nsy + Σ scale_i·M̃_i`.
+    pub fn reconstruct(&self) -> Tensor {
+        self.reconstruct_terms(self.planes.len())
+    }
+
+    /// Reconstruction truncated to the first `terms` INT planes
+    /// (Figure 4b's convergence sweep).
+    pub fn reconstruct_terms(&self, terms: usize) -> Tensor {
+        let chlen = self.chlen();
+        let mut out = Tensor::zeros(&self.dims);
+        for c in 0..self.n_channels() {
+            for j in 0..chlen {
+                out.data_mut()[c * chlen + j] = self.bias[c];
+            }
+        }
+        for t in 0..terms.min(self.planes.len()) {
+            let plane = &self.planes[t];
+            for c in 0..self.n_channels() {
+                let s = self.scales[t][c];
+                if s == 0.0 {
+                    continue;
+                }
+                for j in 0..chlen {
+                    let idx = c * chlen + j;
+                    out.data_mut()[idx] += s * plane.data()[idx] as f32;
+                }
+            }
+        }
+        self.sparse.add_into(&mut out);
+        out
+    }
+
+    /// One dequantized term `scale_t ⊙ M̃_t` as a dense tensor.
+    pub fn term_tensor(&self, t: usize) -> Tensor {
+        let chlen = self.chlen();
+        let mut out = Tensor::zeros(&self.dims);
+        let plane = &self.planes[t];
+        for c in 0..self.n_channels() {
+            let s = self.scales[t][c];
+            for j in 0..chlen {
+                let idx = c * chlen + j;
+                out.data_mut()[idx] = s * plane.data()[idx] as f32;
+            }
+        }
+        out
+    }
+
+    /// Analytic `‖M − reconstruct()‖∞` bound: half the last scale
+    /// (max over channels) — Theorem 1's exponential convergence — plus an
+    /// f32-rounding floor proportional to the data magnitude (deep
+    /// expansions bottom out at float precision, not zero).
+    pub fn residual_bound(&self) -> f32 {
+        let Some(last) = self.scales.last() else { return 0.0 };
+        let s_n = last.iter().fold(0.0f32, |m, &v| m.max(v));
+        let s_1 = self.scales[0].iter().fold(0.0f32, |m, &v| m.max(v));
+        let bias_mag = self.bias.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let magnitude = s_1 * self.config.bits.half() as f32 + bias_mag;
+        s_n * 0.5 + magnitude * 8.0 * f32::EPSILON + 1e-7
+    }
+
+    /// True iff every plane fits in the configured bit-width
+    /// (`|M̃| ≤ 2^{X−1}`, the symmetric INT(X) envelope).
+    pub fn planes_fit(&self) -> bool {
+        self.planes.iter().all(|p| p.fits_signed(self.config.bits.bits + 1) && {
+            let lim = self.config.bits.half();
+            p.data().iter().all(|&v| -lim <= v && v <= lim)
+        })
+    }
+
+    /// Total bytes to store the expansion (planes at X bits + scales/bias
+    /// + sparse) — the Table 3 "Model Size" accounting.
+    pub fn storage_bytes(&self) -> usize {
+        let numel: usize = self.dims.iter().product();
+        let plane_bits = numel * self.config.bits.bits as usize * self.planes.len();
+        let meta = (self.bias.len() + self.scales.len() * self.n_channels()) * 4;
+        let sparse = self.sparse.nnz() * 8; // index + f32 value
+        plane_bits / 8 + meta + sparse
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randn(dims: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::seed(seed);
+        Tensor::randn(dims, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn reconstruction_within_bound_symmetric() {
+        let m = randn(&[32, 16], 1);
+        for &bits in &[2u32, 4, 8] {
+            for terms in 1..=4 {
+                let cfg = ExpandConfig::symmetric(BitSpec::int(bits), terms);
+                let e = SeriesExpansion::expand(&m, &cfg);
+                let err = m.sub(&e.reconstruct()).max_abs();
+                assert!(
+                    err <= e.residual_bound(),
+                    "bits {bits} terms {terms}: err {err} > bound {}",
+                    e.residual_bound()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scale_law_is_exact_powers() {
+        let m = randn(&[8, 8], 2);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 4);
+        let e = SeriesExpansion::expand(&m, &cfg);
+        for t in 1..e.scales.len() {
+            for c in 0..e.n_channels() {
+                assert_eq!(e.scales[t - 1][c], e.scales[t][c] * 16.0, "term {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn planes_are_within_int_range() {
+        let m = randn(&[16, 16], 3);
+        for &bits in &[2u32, 3, 4, 8] {
+            let cfg = ExpandConfig::symmetric(BitSpec::int(bits), 3);
+            let e = SeriesExpansion::expand(&m, &cfg);
+            assert!(e.planes_fit(), "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn exponential_convergence() {
+        let m = randn(&[64, 8], 4);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 1);
+        let mut errs = Vec::new();
+        for terms in 1..=4 {
+            let e = SeriesExpansion::expand(&m, &cfg.with_terms(terms));
+            errs.push(m.sub(&e.reconstruct()).max_abs());
+        }
+        for w in errs.windows(2) {
+            // each extra INT4 term must shrink the residual by ~2^4
+            assert!(w[1] <= w[0] / 8.0, "convergence too slow: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn asymmetric_recovers_shifted_data() {
+        let mut rng = Rng::seed(5);
+        // data centred far from 0 — symmetric wastes range, asymmetric doesn't
+        let m = Tensor::from_vec(&[256], (0..256).map(|_| 10.0 + rng.normal()).collect());
+        let sym = SeriesExpansion::expand(&m, &ExpandConfig::symmetric(BitSpec::int(4), 1));
+        let asym_cfg = ExpandConfig {
+            symmetry: Symmetry::Asymmetric,
+            ..ExpandConfig::symmetric(BitSpec::int(4), 1)
+        };
+        let asym = SeriesExpansion::expand(&m, &asym_cfg);
+        let err_sym = m.sub(&sym.reconstruct()).max_abs();
+        let err_asym = m.sub(&asym.reconstruct()).max_abs();
+        assert!(err_asym < err_sym * 0.5, "asym {err_asym} vs sym {err_sym}");
+        assert!((asym.bias[0] - 10.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn saturating_clip_exact_via_sparse() {
+        // heavy-tailed data: Laplace clip + M_sa must still reconstruct exactly
+        let mut rng = Rng::seed(6);
+        let m = Tensor::from_vec(&[2000], (0..2000).map(|_| rng.laplace(1.0)).collect());
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 3).with_clip(Clip::Laplace);
+        let e = SeriesExpansion::expand(&m, &cfg);
+        assert!(e.sparse.nnz() > 0, "clip should produce a sparse residual");
+        let err = m.sub(&e.reconstruct()).max_abs();
+        assert!(err <= e.residual_bound(), "err {err} bound {}", e.residual_bound());
+        // and the sparse part must be a small fraction of elements
+        assert!(e.sparse.nnz() < 400, "M_sa too dense: {}", e.sparse.nnz());
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_mixed_scales() {
+        let mut rng = Rng::seed(7);
+        // channel 0 has tiny weights, channel 1 huge — per-tensor wastes bits
+        let mut data = Vec::new();
+        for _ in 0..64 {
+            data.push(rng.normal() * 0.01);
+        }
+        for _ in 0..64 {
+            data.push(rng.normal() * 10.0);
+        }
+        let m = Tensor::from_vec(&[2, 64], data);
+        let pt = SeriesExpansion::expand(&m, &ExpandConfig::symmetric(BitSpec::int(4), 1));
+        let mut pc_cfg = ExpandConfig::symmetric(BitSpec::int(4), 1);
+        pc_cfg.channel_axis = Some(0);
+        let pc = SeriesExpansion::expand(&m, &pc_cfg);
+        // error on the small channel
+        let err = |e: &SeriesExpansion| {
+            m.sub(&e.reconstruct()).data()[..64].iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+        };
+        assert!(err(&pc) < err(&pt) / 10.0, "pc {} pt {}", err(&pc), err(&pt));
+    }
+
+    #[test]
+    fn parallel_form_matches_sequential_residual_recursion() {
+        // DESIGN.md §7 invariant 6: closed-form planes == greedy residual quant
+        let m = randn(&[128], 8);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 3);
+        let e = SeriesExpansion::expand(&m, &cfg);
+        // sequential reference
+        let half = 8.0f32;
+        let s1 = m.max_abs() / half;
+        let mut resid = m.clone();
+        let mut scale = s1;
+        for t in 0..3 {
+            let plane: Vec<i32> =
+                resid.data().iter().map(|&v| (v / scale).round() as i32).collect();
+            assert_eq!(plane, e.planes[t].data(), "term {t} differs");
+            let deq: Vec<f32> = plane.iter().map(|&q| q as f32 * scale).collect();
+            resid = Tensor::from_vec(&[128], resid.data().iter().zip(&deq).map(|(a, b)| a - b).collect());
+            scale /= 16.0;
+        }
+    }
+
+    #[test]
+    fn zero_tensor_expansion_is_stable() {
+        let m = Tensor::zeros(&[4, 4]);
+        let e = SeriesExpansion::expand(&m, &ExpandConfig::symmetric(BitSpec::int(4), 3));
+        assert_eq!(e.reconstruct(), m);
+        assert!(e.residual_bound() <= 1e-6);
+        assert!(e.planes.iter().all(|p| p.data().iter().all(|&v| v == 0)));
+    }
+
+    #[test]
+    fn storage_accounting_scales_with_bits_and_terms() {
+        let m = randn(&[64, 64], 9);
+        let e2 = SeriesExpansion::expand(&m, &ExpandConfig::symmetric(BitSpec::int(2), 1));
+        let e4 = SeriesExpansion::expand(&m, &ExpandConfig::symmetric(BitSpec::int(4), 1));
+        let e4x2 = SeriesExpansion::expand(&m, &ExpandConfig::symmetric(BitSpec::int(4), 2));
+        assert!(e2.storage_bytes() < e4.storage_bytes());
+        assert!(e4.storage_bytes() < e4x2.storage_bytes());
+        // INT4 single term of 4096 params ≈ 2048 bytes + metadata
+        assert!(e4.storage_bytes() >= 2048 && e4.storage_bytes() < 2200);
+    }
+
+    #[test]
+    fn property_reconstruction_bound_random_tensors() {
+        use crate::util::prop::{forall, no_shrink, PropConfig};
+        forall(
+            PropConfig { cases: 40, seed: 0xABCD, max_shrink: 0 },
+            |r| {
+                let rows = 1 + r.below(8);
+                let cols = 1 + r.below(32);
+                let bits = [2u32, 3, 4, 8][r.below(4)];
+                let terms = 1 + r.below(4);
+                let scale = 10f32.powi(r.below(5) as i32 - 2);
+                let mut rng2 = r.fork(1);
+                let m = Tensor::randn(&[rows, cols], scale, &mut rng2);
+                (m, bits, terms)
+            },
+            no_shrink,
+            |(m, bits, terms)| {
+                let cfg = ExpandConfig::symmetric(BitSpec::int(*bits), *terms);
+                let e = SeriesExpansion::expand(m, &cfg);
+                let err = m.sub(&e.reconstruct()).max_abs();
+                if err <= e.residual_bound() && e.planes_fit() {
+                    Ok(())
+                } else {
+                    Err(format!("err {err} bound {} fit {}", e.residual_bound(), e.planes_fit()))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! The paper's contribution: low-bit series expansion of FP tensors,
+//! layers and models (Theorems 1–2, Eqs. 3–8).
+//!
+//! * [`quantizer`] — single-step integer quantization variants (symmetric /
+//!   asymmetric × saturating / non-saturating, analytic Laplace clipping).
+//! * [`expansion`] — Theorem 1: `M = M_sa + bias·M_nsy + Σ scale_i·M̃_i`
+//!   with `scale_i = 2^X · scale_{i+1}`, built via the §4 parallel closed
+//!   form; per-tensor or per-channel.
+//! * [`gemm`] — Eq. 3: the expanded low-bit GEMM with i32 accumulation,
+//!   rank-1 `M_nsy` fast path and sparse `M_sa` path.
+//! * [`layer`] — Eq. 4: expanded linear / conv layers with the paper's
+//!   deployment policy (per-channel weights, 8-bit first/last layer,
+//!   weight-term upper bound from the §4 total-differential criterion).
+//! * [`abelian`] — AbelianAdd / AbelianMul, the Abelian group over
+//!   isomorphic basis models, and the AllReduce-style reduction.
+//! * [`mixed`] — mixed-precision planner + model-size accounting (Table 3).
+//! * [`monitor`] — expansion-count auto-stop rule and convergence traces
+//!   (Figure 4b).
+
+pub mod abelian;
+pub mod auto;
+pub mod expansion;
+pub mod gemm;
+pub mod layer;
+pub mod mixed;
+pub mod monitor;
+pub mod quantizer;
+
+pub use abelian::{abelian_reduce, AbelianMul, LinearModel};
+pub use auto::{quantize_model_auto, AutoConfig};
+pub use expansion::{ExpandConfig, SeriesExpansion, SparseTensor};
+pub use gemm::{int_gemm_a_bt, xint_linear_forward, ExpandedWeight};
+pub use layer::{LayerPolicy, XintConv2d, XintLinear};
+pub use mixed::{model_size_bytes, MixedPlan, MixedPlanner};
+pub use monitor::ExpansionMonitor;
+pub use quantizer::{Clip, Symmetry};
+
+/// Integer bit-width `X` of every basis plane (the paper's `INT(X)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitSpec {
+    pub bits: u32,
+}
+
+impl BitSpec {
+    pub fn int(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "supported bit-widths: 1..=16");
+        BitSpec { bits }
+    }
+
+    /// Quantization levels per term: `2^X`.
+    pub fn levels(&self) -> i64 {
+        1i64 << self.bits
+    }
+
+    /// Symmetric half-range `2^{X-1}`.
+    pub fn half(&self) -> i32 {
+        1i32 << (self.bits - 1)
+    }
+}

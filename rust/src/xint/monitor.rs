@@ -1,0 +1,91 @@
+//! Expansion-count convergence monitor — the §5.3 auto-stop rule
+//! ("when the maximum difference is less than 1e-4, the number of
+//! expansions is optimal") and the data series behind Figure 4b.
+
+use super::expansion::{ExpandConfig, SeriesExpansion};
+use crate::tensor::Tensor;
+
+/// Records max-residual per expansion count for a stream of tensors.
+#[derive(Clone, Debug, Default)]
+pub struct ExpansionMonitor {
+    /// max |x - recon_t(x)| seen, indexed by term count − 1
+    pub max_diff: Vec<f32>,
+    pub samples: usize,
+}
+
+impl ExpansionMonitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe one tensor under `cfg` for 1..=cfg.terms truncations.
+    pub fn observe(&mut self, x: &Tensor, cfg: &ExpandConfig) {
+        let e = SeriesExpansion::expand(x, cfg);
+        if self.max_diff.len() < cfg.terms {
+            self.max_diff.resize(cfg.terms, 0.0);
+        }
+        for t in 1..=cfg.terms {
+            let diff = x.sub(&e.reconstruct_terms(t)).max_abs();
+            self.max_diff[t - 1] = self.max_diff[t - 1].max(diff);
+        }
+        self.samples += 1;
+    }
+
+    /// The paper's rule: smallest term count whose max diff < `tol`
+    /// (default 1e-4); `None` if never reached within the observed range.
+    pub fn optimal_terms(&self, tol: f32) -> Option<usize> {
+        self.max_diff.iter().position(|&d| d < tol).map(|i| i + 1)
+    }
+
+    /// The (terms, max_diff) series — Figure 4b's blue line.
+    pub fn series(&self) -> Vec<(usize, f32)> {
+        self.max_diff.iter().enumerate().map(|(i, &d)| (i + 1, d)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::xint::{BitSpec, ExpandConfig};
+
+    #[test]
+    fn monitor_series_decreases() {
+        let mut rng = Rng::seed(51);
+        let mut mon = ExpansionMonitor::new();
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 5);
+        for _ in 0..4 {
+            mon.observe(&Tensor::randn(&[16, 16], 1.0, &mut rng), &cfg);
+        }
+        assert_eq!(mon.samples, 4);
+        let s = mon.series();
+        assert_eq!(s.len(), 5);
+        for w in s.windows(2) {
+            assert!(w[1].1 <= w[0].1, "non-monotone {s:?}");
+        }
+    }
+
+    #[test]
+    fn optimal_terms_matches_rule() {
+        let mut rng = Rng::seed(52);
+        let mut mon = ExpansionMonitor::new();
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 6);
+        mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg);
+        let n = mon.optimal_terms(1e-4).expect("INT4×6 reaches 1e-4");
+        // INT4: residual ≈ max/2^(4t+1); max≈4 ⇒ need ~4 terms
+        assert!((3..=5).contains(&n), "optimal {n}");
+        // a stricter tolerance needs at least as many terms
+        if let Some(n9) = mon.optimal_terms(1e-6) {
+            assert!(n9 >= n);
+        }
+    }
+
+    #[test]
+    fn unreached_tolerance_is_none() {
+        let mut mon = ExpansionMonitor::new();
+        let cfg = ExpandConfig::symmetric(BitSpec::int(2), 1);
+        let mut rng = Rng::seed(53);
+        mon.observe(&Tensor::randn(&[8, 8], 1.0, &mut rng), &cfg);
+        assert_eq!(mon.optimal_terms(1e-12), None);
+    }
+}

@@ -1,0 +1,236 @@
+//! Single-step integer quantization — the "computational kernel for
+//! constructing basis functions" (§3.1).
+//!
+//! Variants follow the paper's taxonomy: symmetric vs asymmetric zero
+//! point, saturating (clipped range, residual absorbed by the sparse
+//! `M_sa` tensor) vs non-saturating (full min/max range). The saturating
+//! clip threshold is chosen analytically for a Laplace activation model,
+//! "the expected quantization noise in the Laplace distribution as the
+//! clipping function" (§5.1) — i.e. ACIQ-style MSE-optimal clipping.
+
+use super::BitSpec;
+
+/// Zero-point handling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Symmetry {
+    /// zero point at 0; range `[-c, c]`
+    Symmetric,
+    /// zero point at the range midpoint (the paper's `bias · M_nsy` term)
+    Asymmetric,
+}
+
+/// Range / clipping strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Clip {
+    /// non-saturating: full observed range, `M_sa = 0`
+    None,
+    /// saturating at the Laplace-MSE-optimal threshold (ACIQ-style)
+    Laplace,
+    /// saturating at a fixed absolute threshold
+    Fixed(f32),
+    /// saturating at the p-th percentile of |x - μ| (p in [0,100])
+    Percentile(f32),
+}
+
+/// Channel-range statistics produced by [`channel_range`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Range {
+    /// zero point (0 for symmetric)
+    pub bias: f32,
+    /// half-width of the quantized interval `[bias - c, bias + c]`
+    pub half_width: f32,
+}
+
+/// Expected quantization MSE of X-bit uniform quantization of Laplace(b)
+/// clipped at ±alpha: clipping term `2 b² e^{-α/b}` plus rounding term
+/// `α² / (3 · 4^X)` (step Δ = 2α/2^X, noise Δ²/12).
+pub fn laplace_mse(alpha: f32, b: f32, bits: u32) -> f32 {
+    let clip_term = 2.0 * b * b * (-alpha / b).exp();
+    let steps = (1u64 << bits) as f32;
+    let round_term = alpha * alpha / (3.0 * steps * steps);
+    clip_term + round_term
+}
+
+/// MSE-optimal clip threshold for Laplace(b) at the given bit-width
+/// (golden-section search on the unimodal objective).
+pub fn optimal_laplace_clip(b: f32, bits: u32) -> f32 {
+    if b <= 0.0 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.5 * b, 25.0 * b);
+    let phi = 0.618_034f32;
+    for _ in 0..60 {
+        let m1 = hi - phi * (hi - lo);
+        let m2 = lo + phi * (hi - lo);
+        if laplace_mse(m1, b, bits) < laplace_mse(m2, b, bits) {
+            hi = m2;
+        } else {
+            lo = m1;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Compute the quantization range of one channel of data.
+pub fn channel_range(xs: &[f32], sym: Symmetry, clip: Clip, bits: u32) -> Range {
+    if xs.is_empty() {
+        return Range { bias: 0.0, half_width: 0.0 };
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    let mut sum = 0.0f64;
+    for &v in xs {
+        lo = lo.min(v);
+        hi = hi.max(v);
+        sum += v as f64;
+    }
+    let mean = (sum / xs.len() as f64) as f32;
+    let bias = match sym {
+        Symmetry::Symmetric => 0.0,
+        // the paper's bias = (vmax - vmin)/2 + vmin — the midpoint
+        Symmetry::Asymmetric => 0.5 * (hi + lo),
+    };
+    let full = match sym {
+        Symmetry::Symmetric => lo.abs().max(hi.abs()),
+        Symmetry::Asymmetric => 0.5 * (hi - lo),
+    };
+    let half_width = match clip {
+        Clip::None => full,
+        Clip::Fixed(c) => c.min(full),
+        Clip::Laplace => {
+            // Laplace scale estimated around the zero point actually used
+            let center = match sym {
+                Symmetry::Symmetric => 0.0,
+                Symmetry::Asymmetric => mean,
+            };
+            let b = xs.iter().map(|&v| (v - center).abs()).sum::<f32>() / xs.len() as f32;
+            optimal_laplace_clip(b, bits).min(full)
+        }
+        Clip::Percentile(p) => {
+            let center = match sym {
+                Symmetry::Symmetric => 0.0,
+                Symmetry::Asymmetric => bias,
+            };
+            let mut devs: Vec<f32> = xs.iter().map(|&v| (v - center).abs()).collect();
+            devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let rank = ((p / 100.0) * (devs.len() - 1) as f32).round() as usize;
+            devs[rank.min(devs.len() - 1)].min(full)
+        }
+    };
+    Range { bias, half_width }
+}
+
+/// One-shot quantize/dequantize of a slice at `bits` with the given range
+/// (round-to-nearest, saturating at the range edge). Returns the
+/// dequantized values — this is the plain-PTQ primitive the baselines use.
+pub fn fake_quant(xs: &[f32], r: Range, spec: BitSpec) -> Vec<f32> {
+    if r.half_width <= 0.0 {
+        return vec![r.bias; xs.len()];
+    }
+    let half = spec.half() as f32;
+    let scale = r.half_width / half;
+    xs.iter()
+        .map(|&v| {
+            let q = ((v - r.bias) / scale).round().clamp(-half, half - 1.0);
+            r.bias + q * scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn laplace_mse_decomposes() {
+        // at alpha -> inf, only rounding noise; at alpha -> 0, only clip noise
+        let b = 1.0;
+        assert!((laplace_mse(50.0, b, 4) - 2500.0 / (3.0 * 256.0)).abs() < 1e-3);
+        assert!((laplace_mse(1e-6, b, 4) - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn optimal_clip_is_stationary() {
+        for &bits in &[2u32, 4, 8] {
+            let b = 1.7;
+            let a = optimal_laplace_clip(b, bits);
+            let f0 = laplace_mse(a, b, bits);
+            for d in [-0.05f32, 0.05] {
+                assert!(
+                    laplace_mse(a + d * b, b, bits) >= f0 - 1e-6,
+                    "bits {bits}: not a minimum at {a}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_clip_grows_with_bits() {
+        // more bits -> cheaper rounding -> wider optimal range
+        let b = 1.0;
+        let a2 = optimal_laplace_clip(b, 2);
+        let a4 = optimal_laplace_clip(b, 4);
+        let a8 = optimal_laplace_clip(b, 8);
+        assert!(a2 < a4 && a4 < a8, "{a2} {a4} {a8}");
+    }
+
+    #[test]
+    fn symmetric_range_covers_max_abs() {
+        let r = channel_range(&[-3.0, 1.0, 2.0], Symmetry::Symmetric, Clip::None, 4);
+        assert_eq!(r.bias, 0.0);
+        assert_eq!(r.half_width, 3.0);
+    }
+
+    #[test]
+    fn asymmetric_bias_is_midpoint() {
+        let r = channel_range(&[2.0, 6.0], Symmetry::Asymmetric, Clip::None, 4);
+        assert_eq!(r.bias, 4.0);
+        assert_eq!(r.half_width, 2.0);
+    }
+
+    #[test]
+    fn laplace_clip_tighter_than_range_on_heavy_tail() {
+        let mut rng = Rng::seed(17);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.laplace(1.0)).collect();
+        let r_none = channel_range(&xs, Symmetry::Symmetric, Clip::None, 4);
+        let r_lap = channel_range(&xs, Symmetry::Symmetric, Clip::Laplace, 4);
+        assert!(r_lap.half_width < r_none.half_width);
+        // and the clipped quantizer must have lower empirical MSE
+        let spec = BitSpec::int(4);
+        let mse = |r: Range| {
+            let q = fake_quant(&xs, r, spec);
+            xs.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / xs.len() as f32
+        };
+        assert!(mse(r_lap) < mse(r_none), "{} vs {}", mse(r_lap), mse(r_none));
+    }
+
+    #[test]
+    fn percentile_clip_bounds() {
+        let xs: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        let r = channel_range(&xs, Symmetry::Asymmetric, Clip::Percentile(90.0), 4);
+        assert!(r.half_width <= 50.0);
+        assert!(r.half_width >= 40.0);
+    }
+
+    #[test]
+    fn fake_quant_error_bounded_by_step() {
+        let mut rng = Rng::seed(99);
+        let xs: Vec<f32> = (0..1000).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let spec = BitSpec::int(8);
+        let r = channel_range(&xs, Symmetry::Symmetric, Clip::None, 8);
+        let q = fake_quant(&xs, r, spec);
+        let step = r.half_width / spec.half() as f32;
+        for (a, b) in xs.iter().zip(&q) {
+            // one extra step of slack for the asymmetric clamp at +half-1
+            assert!((a - b).abs() <= step * 1.01 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn degenerate_channel_is_stable() {
+        let r = channel_range(&[0.0, 0.0], Symmetry::Symmetric, Clip::Laplace, 4);
+        assert_eq!(r.half_width, 0.0);
+        let q = fake_quant(&[0.0, 0.0], r, BitSpec::int(4));
+        assert_eq!(q, vec![0.0, 0.0]);
+    }
+}

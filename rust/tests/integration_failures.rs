@@ -1,0 +1,175 @@
+//! Failure injection: the coordinator/runtime must degrade cleanly, not
+//! wedge — worker panics, failing workers, corrupt artifacts/manifests,
+//! overload shedding, and malformed wire traffic.
+
+use fp_xint::coordinator::{
+    BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
+};
+use fp_xint::runtime::Manifest;
+use fp_xint::serve::server::serve_tcp;
+use fp_xint::tensor::Tensor;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct FlakyWorker {
+    calls: Arc<AtomicUsize>,
+    fail_every: usize,
+}
+
+impl BasisWorker for FlakyWorker {
+    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if self.fail_every > 0 && n % self.fail_every == self.fail_every - 1 {
+            anyhow::bail!("injected failure #{n}");
+        }
+        Ok(x.clone())
+    }
+}
+
+#[test]
+fn failing_batches_are_reported_not_hung() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c2 = calls.clone();
+    let pool = WorkerPool::new(
+        1,
+        Arc::new(move |_| {
+            Box::new(FlakyWorker { calls: c2.clone(), fail_every: 2 }) as Box<dyn BasisWorker>
+        }),
+    );
+    let coord = Coordinator::new(
+        BatcherConfig { max_batch: 1, max_wait_us: 100, queue_cap: 16 },
+        ExpansionScheduler::new(pool),
+    );
+    let mut ok = 0;
+    let mut failed = 0;
+    for _ in 0..10 {
+        let rx = coord.submit(Tensor::zeros(&[1, 4])).unwrap();
+        // a failed batch drops the reply sender → RecvError, no hang
+        match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    assert!(ok > 0, "some requests must succeed");
+    assert!(failed > 0, "injected failures must surface");
+    assert_eq!(coord.metrics.completed() as usize, ok);
+    assert_eq!(coord.metrics.failed() as usize, failed);
+    coord.shutdown();
+}
+
+#[test]
+fn panicking_worker_becomes_an_error_not_a_deadlock() {
+    struct Panicker;
+    impl BasisWorker for Panicker {
+        fn run(&mut self, _x: &Tensor) -> anyhow::Result<Tensor> {
+            panic!("worker exploded");
+        }
+    }
+    let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Panicker) as Box<dyn BasisWorker>));
+    // the panic kills the worker thread; broadcast must error (the reply
+    // channel drops), not block forever
+    let res = std::thread::spawn(move || pool.broadcast(Tensor::zeros(&[1, 1])))
+        .join()
+        .expect("harness thread");
+    assert!(res.is_err(), "dead worker must surface as an error");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_with_context() {
+    let dir = std::env::temp_dir().join(format!("fpx_manifest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{not json").unwrap();
+    let err = Manifest::load(dir.join("manifest.json")).unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    assert!(Manifest::parse("{}").is_err());
+    assert!(Manifest::parse(r#"{"din": 1, "hidden": 2}"#).is_err());
+}
+
+#[test]
+fn corrupt_hlo_artifact_fails_compile_not_process() {
+    let dir = std::env::temp_dir().join(format!("fpx_hlo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), b"HloModule nonsense garbage {{{").unwrap();
+    let mut rt = fp_xint::runtime::Runtime::cpu(&dir).unwrap();
+    assert!(rt.load("bad.hlo.txt").is_err());
+    assert!(rt.load("missing.hlo.txt").is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn overload_sheds_instead_of_oom() {
+    struct Slow;
+    impl BasisWorker for Slow {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            Ok(x.clone())
+        }
+    }
+    let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Slow) as Box<dyn BasisWorker>));
+    let coord = Coordinator::new(
+        BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 4 },
+        ExpansionScheduler::new(pool),
+    );
+    let mut shed = 0;
+    let mut accepted = Vec::new();
+    for _ in 0..64 {
+        match coord.submit(Tensor::zeros(&[1, 2])) {
+            Ok(rx) => accepted.push(rx),
+            Err(fp_xint::coordinator::SubmitError::Busy) => shed += 1,
+            Err(e) => panic!("{e:?}"),
+        }
+    }
+    assert!(shed >= 48, "bounded queue must shed most of a 64-burst: shed {shed}");
+    for rx in accepted {
+        assert!(rx.recv_timeout(std::time::Duration::from_secs(15)).is_ok());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn tcp_garbage_header_closes_cleanly() {
+    struct Echo;
+    impl BasisWorker for Echo {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(x.clone())
+        }
+    }
+    let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Echo) as Box<dyn BasisWorker>));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig::default(),
+        ExpansionScheduler::new(pool),
+    ));
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+    // absurd n·d (> the 16M element guard) must be refused
+    let mut s = std::net::TcpStream::connect(handle.addr).unwrap();
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    let mut reply = [0u8; 8];
+    s.read_exact(&mut reply).unwrap();
+    assert_eq!(reply, [0u8; 8], "oversized request must be shed");
+    // server still serves normal traffic afterwards
+    let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+    let y = fp_xint::serve::server::client_infer(handle.addr, &x).unwrap();
+    assert_eq!(y.data(), x.data());
+    handle.stop();
+}
+
+#[test]
+fn checkpoint_truncation_detected() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("fpx_trunc_{}.fpxw", std::process::id()));
+    let mut m = fp_xint::models::zoo::mlp(16, &[8], 2, 1);
+    fp_xint::models::serialize::save_model(&path, &mut m).unwrap();
+    // truncate the file
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let mut m2 = fp_xint::models::zoo::mlp(16, &[8], 2, 2);
+    assert!(fp_xint::models::serialize::load_model(&path, &mut m2).is_err());
+    std::fs::remove_file(path).ok();
+}

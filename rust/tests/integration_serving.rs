@@ -1,0 +1,130 @@
+//! Integration: coordinator + runtime + serve — PJRT-backed basis workers
+//! must agree with native basis workers, survive concurrent load, and the
+//! AllReduce must be order-invariant end to end.
+
+use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+use fp_xint::serve::server::{client_infer, serve_tcp};
+use fp_xint::serve::workers::{mlp_basis_factory, pjrt_mlp_basis_factory, MlpWeights};
+use fp_xint::tensor::{Rng, Tensor};
+use std::sync::Arc;
+
+fn weights(seed: u64) -> MlpWeights {
+    // geometry must match the AOT manifest (256 → 64 → 10)
+    let mut rng = Rng::seed(seed);
+    MlpWeights {
+        w1: Tensor::randn(&[64, 256], 0.3, &mut rng),
+        b1: Tensor::randn(&[64], 0.1, &mut rng),
+        w2: Tensor::randn(&[10, 64], 0.3, &mut rng),
+        b2: Tensor::randn(&[10], 0.1, &mut rng),
+    }
+}
+
+fn artifacts_ready() -> bool {
+    fp_xint::runtime::Runtime::default_artifact_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn pjrt_and_native_basis_workers_agree() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let w = weights(91);
+    let terms = 2;
+    let mut rng = Rng::seed(92);
+    let x = Tensor::randn(&[4, 256], 1.0, &mut rng);
+
+    let native = ExpansionScheduler::new(WorkerPool::new(terms, mlp_basis_factory(&w, 4, terms)));
+    let y_native = native.forward(x.clone()).unwrap();
+    native.shutdown();
+
+    let dir = fp_xint::runtime::Runtime::default_artifact_dir();
+    let pjrt = ExpansionScheduler::new(WorkerPool::new(
+        terms,
+        pjrt_mlp_basis_factory(dir, &w, 4, terms),
+    ));
+    let y_pjrt = pjrt.forward(x).unwrap();
+    pjrt.shutdown();
+
+    assert_eq!(y_native.dims(), y_pjrt.dims());
+    let rel = y_native.sub(&y_pjrt).norm() / y_native.norm();
+    // both compute single-plane basis slices with one-step activation
+    // quantization; small numeric differences come from scale estimation
+    // (native uses per-channel max, kernel uses per-tensor max)
+    assert!(rel < 0.25, "native vs PJRT basis drift: rel {rel}");
+}
+
+#[test]
+fn coordinator_survives_concurrent_tcp_load() {
+    let w = weights(93);
+    let pool = WorkerPool::new(3, mlp_basis_factory(&w, 8, 3));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig { max_batch: 16, max_wait_us: 500, queue_cap: 256 },
+        ExpansionScheduler::new(pool),
+    ));
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = handle.addr;
+    let threads: Vec<_> = (0..6)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed(1000 + t);
+                for _ in 0..10 {
+                    let x = Tensor::randn(&[1 + (t as usize % 3), 256], 1.0, &mut rng);
+                    let y = client_infer(addr, &x).unwrap();
+                    assert_eq!(y.dims()[0], x.dims()[0]);
+                    assert_eq!(y.dims()[1], 10);
+                    assert!(y.data().iter().all(|v| v.is_finite()));
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(coord.metrics.completed(), 60);
+    assert_eq!(coord.metrics.failed(), 0);
+    handle.stop();
+}
+
+#[test]
+fn allreduce_invariant_to_worker_permutation() {
+    // two pools with permuted slice order must produce identical sums
+    let w = weights(94);
+    let terms = 4;
+    let mut rng = Rng::seed(95);
+    let x = Tensor::randn(&[3, 256], 1.0, &mut rng);
+
+    let fwd = ExpansionScheduler::new(WorkerPool::new(terms, mlp_basis_factory(&w, 4, terms)));
+    let y1 = fwd.forward(x.clone()).unwrap();
+    fwd.shutdown();
+
+    // permuted: wrap the factory to reverse worker indices
+    let base = mlp_basis_factory(&w, 4, terms);
+    let rev: fp_xint::coordinator::pool::WorkerFactory =
+        Arc::new(move |i: usize| base(terms - 1 - i));
+    let bwd = ExpansionScheduler::new(WorkerPool::new(terms, rev));
+    let y2 = bwd.forward(x).unwrap();
+    bwd.shutdown();
+
+    let rel = y1.sub(&y2).norm() / y1.norm().max(1e-9);
+    assert!(rel < 1e-5, "AbelianAdd must commute: rel {rel}");
+}
+
+#[test]
+fn batcher_latency_accounting_sane() {
+    let w = weights(96);
+    let pool = WorkerPool::new(2, mlp_basis_factory(&w, 8, 2));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig { max_batch: 8, max_wait_us: 2_000, queue_cap: 64 },
+        ExpansionScheduler::new(pool),
+    ));
+    let mut rng = Rng::seed(97);
+    for _ in 0..5 {
+        let x = Tensor::randn(&[2, 256], 1.0, &mut rng);
+        let resp = coord.infer(x).unwrap();
+        assert!(resp.latency_s >= 0.0 && resp.latency_s < 5.0);
+    }
+    let s = coord.metrics.latency_summary();
+    assert_eq!(s.n, 5);
+    assert!(coord.metrics.mean_batch_size() >= 1.0);
+}

@@ -1,0 +1,89 @@
+//! Integration: transformer stack (TinyBert / TinyLm) through training
+//! and quantization — the Table 4 / Table 6 pipelines end to end at a
+//! small budget.
+
+use fp_xint::datasets::charlm::CharLmTask;
+use fp_xint::datasets::textgen::EntailTask;
+use fp_xint::models::tinybert::{quantized_copy, BertHead, TinyBert};
+use fp_xint::models::TinyLm;
+use fp_xint::train::{train_bert, train_lm, TrainConfig};
+use fp_xint::xint::layer::LayerPolicy;
+use once_cell::sync::Lazy;
+
+const SEQ: usize = 20;
+
+static BERT: Lazy<(TinyBert, EntailTask)> = Lazy::new(|| {
+    let task = EntailTask::new(SEQ, 15);
+    let mut m = TinyBert::new(32, 24, 48, 2, SEQ, BertHead::Cls { classes: 3 }, 16);
+    let cfg = TrainConfig { steps: 600, batch: 32, lr: 0.04, log_every: 1_000 };
+    train_bert(
+        &mut m,
+        |step| {
+            let b = task.batch(32, 500 + step as u64);
+            (b.iter().map(|e| e.tokens.clone()).collect(), b.iter().map(|e| e.label).collect())
+        },
+        &cfg,
+    );
+    (m, task)
+});
+
+fn entail_acc(m: &TinyBert, task: &EntailTask) -> f64 {
+    let b = task.batch(200, 2);
+    let logits = m.forward(&b.iter().map(|e| e.tokens.clone()).collect::<Vec<_>>());
+    let pred = logits.argmax_rows();
+    pred.iter().zip(&b).filter(|(p, e)| **p == e.label).count() as f64 / b.len() as f64
+}
+
+#[test]
+fn bert_learns_entailment_above_chance() {
+    let (m, task) = &*BERT;
+    let acc = entail_acc(m, task);
+    assert!(acc > 0.55, "entail acc {acc:.3} (chance 0.33)");
+}
+
+#[test]
+fn bert_w8_quantization_preserves_accuracy() {
+    let (m, task) = &*BERT;
+    let fp = entail_acc(m, task);
+    let mut q = quantized_copy(m, &LayerPolicy::new(8, 8).with_terms(2, 1));
+    q.act_quant = Some((8, 1));
+    let qa = entail_acc(&q, task);
+    assert!(qa >= fp - 0.05, "W8A8 {qa:.3} vs FP {fp:.3}");
+}
+
+#[test]
+fn bert_series_beats_single_term_at_w4a4() {
+    let (m, task) = &*BERT;
+    let mut naive = quantized_copy(m, &LayerPolicy::new(4, 4).with_terms(1, 1));
+    naive.act_quant = Some((4, 1));
+    let mut ours = quantized_copy(m, &LayerPolicy::new(4, 4).with_terms(2, 1));
+    ours.act_quant = Some((4, 4));
+    let a_naive = entail_acc(&naive, task);
+    let a_ours = entail_acc(&ours, task);
+    assert!(
+        a_ours >= a_naive - 0.02,
+        "series W4A4 {a_ours:.3} must not meaningfully lose to naive {a_naive:.3}"
+    );
+}
+
+#[test]
+fn lm_trains_and_w4_series_tracks_fp_answers() {
+    let task = CharLmTask::new(21);
+    let stream = task.tokens();
+    let mut lm = TinyLm::new(16, 32, 1, 24, 22);
+    let cfg = TrainConfig { steps: 150, batch: 8, lr: 0.08, log_every: 1_000 };
+    let rep = train_lm(&mut lm, &stream, &cfg);
+    let first = rep.loss_curve.first().unwrap().1;
+    let last = rep.loss_curve.last().unwrap().1;
+    assert!(last < first, "LM loss {first} -> {last}");
+    // W4 series answers must agree with FP answers on most questions
+    let mut q = lm.clone();
+    q.quantize_weights(&LayerPolicy::new(4, 16).with_terms(2, 1));
+    let qs = task.questions();
+    let agree = qs.iter().filter(|question| lm.answer(question) == q.answer(question)).count();
+    assert!(
+        agree as f64 / qs.len() as f64 > 0.7,
+        "W4 series only agrees on {agree}/{} answers",
+        qs.len()
+    );
+}
