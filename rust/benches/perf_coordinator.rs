@@ -6,11 +6,13 @@
 //!
 //!     cargo bench --bench perf_coordinator
 
+use fp_xint::bench_support::write_bench_json;
 use fp_xint::coordinator::{
     BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
 };
 use fp_xint::datasets::RequestTrace;
-use fp_xint::serve::loadgen::run_trace;
+use fp_xint::serve::loadgen::{run_trace, LoadReport};
+use fp_xint::util::json::Json;
 use fp_xint::serve::workers::{mlp_basis_factory, MlpWeights};
 use fp_xint::tensor::{Rng, Tensor};
 use fp_xint::util::{logger, BenchTimer, Table};
@@ -24,6 +26,18 @@ fn weights(seed: u64) -> MlpWeights {
         w2: Tensor::randn(&[10, 64], 0.3, &mut rng),
         b2: Tensor::randn(&[10], 0.1, &mut rng),
     }
+}
+
+fn load_row(rate: f64, max_batch: usize, rep: &LoadReport) -> Json {
+    Json::obj([
+        ("offered_rps", Json::num(rate)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("throughput_rps", Json::num(rep.throughput_rps)),
+        ("p50_ms", Json::num(rep.latency.p50 * 1e3)),
+        ("p99_ms", Json::num(rep.latency.p99 * 1e3)),
+        ("shed", Json::num(rep.shed as f64)),
+        ("offered", Json::num(rep.offered as f64)),
+    ])
 }
 
 fn main() {
@@ -116,6 +130,7 @@ fn main() {
         "perf — coordinator under Poisson load (4 basis workers)",
         &["offered rps", "max_batch", "thpt (rps)", "p50 (ms)", "p99 (ms)", "shed %"],
     );
+    let mut json_rows = Vec::new();
     for &rate in &[100.0f64, 400.0, 1200.0] {
         for &(mb, mw) in &[(1usize, 50u64), (32, 1_000)] {
             let pool = WorkerPool::new(4, mlp_basis_factory(&w, 4, 4));
@@ -133,9 +148,15 @@ fn main() {
                 &format!("{:.2}", rep.latency.p99 * 1e3),
                 &format!("{:.1}", rep.shed as f64 / rep.offered.max(1) as f64 * 100.0),
             ]);
+            json_rows.push(load_row(rate, mb, &rep));
         }
     }
     t2.print();
+    let json = Json::obj([("bench", Json::str("coordinator")), ("load_sweep", Json::Arr(json_rows))]);
+    match write_bench_json("coordinator", &json) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nBENCH json write failed: {e}"),
+    }
     println!(
         "\ntarget (§Perf): parallel ≥ 1.3× serial at t·k = 8 on ≥8 cores;\n\
          batching raises throughput at high load at bounded p99 cost."

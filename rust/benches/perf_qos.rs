@@ -1,0 +1,211 @@
+//! Perf — QoS control plane: truncated-series serving cost, per-tier
+//! latency under mixed traffic, and the degraded-mode scenario (queue
+//! pressure lowers term budgets instead of shedding).
+//!
+//!     cargo bench --bench perf_qos
+//!
+//! Emits `BENCH_qos.json` (per-tier throughput/p50/p99 + spike sheds)
+//! so the perf trajectory is machine-trackable across PRs.
+
+use fp_xint::bench_support::write_bench_json;
+use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+use fp_xint::datasets::RequestTrace;
+use fp_xint::qos::{QosConfig, TermController, Tier};
+use fp_xint::serve::loadgen::{run_trace_mix, LoadReport};
+use fp_xint::serve::workers::{mlp_basis_factory_with, BiasPlacement, MlpWeights};
+use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::util::json::Json;
+use fp_xint::util::{logger, BenchTimer, Table};
+use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor};
+use std::sync::Arc;
+
+const TERMS: usize = 8;
+const BITS: u32 = 4;
+const DIN: usize = 256;
+
+fn weights(seed: u64) -> MlpWeights {
+    let mut rng = Rng::seed(seed);
+    MlpWeights {
+        w1: Tensor::randn(&[128, DIN], 0.3, &mut rng),
+        b1: Tensor::randn(&[128], 0.1, &mut rng),
+        w2: Tensor::randn(&[10, 128], 0.3, &mut rng),
+        b2: Tensor::randn(&[10], 0.1, &mut rng),
+    }
+}
+
+fn calibrated_controller(anytime: bool) -> Arc<TermController> {
+    let mut mon = ExpansionMonitor::new();
+    let cfg = ExpandConfig::symmetric(BitSpec::int(BITS), TERMS);
+    let mut rng = Rng::seed(11);
+    for _ in 0..4 {
+        mon.observe(&Tensor::randn(&[32, DIN], 1.0, &mut rng), &cfg);
+    }
+    let ctl = TermController::new(QosConfig::new(TERMS).with_anytime(anytime));
+    ctl.calibrate(&mon);
+    Arc::new(ctl)
+}
+
+fn qos_coordinator(
+    w: &MlpWeights,
+    cfg: BatcherConfig,
+    controller: Option<Arc<TermController>>,
+) -> Arc<Coordinator> {
+    let pool =
+        WorkerPool::new(TERMS, mlp_basis_factory_with(w, BITS, TERMS, BiasPlacement::FirstTerm));
+    let mut sched = ExpansionScheduler::new(pool);
+    if let Some(c) = controller {
+        sched = sched.with_controller(c);
+    }
+    Arc::new(Coordinator::new(cfg, sched))
+}
+
+fn tier_row(table: &mut Table, rep: &LoadReport, tier: Tier, coord: &Coordinator) {
+    let Some(t) = rep.per_tier.iter().find(|t| t.tier == tier) else { return };
+    table.row_str(&[
+        tier.name(),
+        &t.completed.to_string(),
+        &format!("{:.2}", t.latency.p50 * 1e3),
+        &format!("{:.2}", t.latency.p99 * 1e3),
+        &format!("{:.2}", coord.metrics.tier_mean_terms(tier)),
+        &format!("{:.2e}", coord.metrics.tier_est_loss(tier)),
+    ]);
+}
+
+fn main() {
+    logger::init(false);
+    let timer = BenchTimer::new(3, 20);
+    let w = weights(41);
+    let mut rng = Rng::seed(42);
+    let x = Tensor::randn(&[16, DIN], 1.0, &mut rng);
+
+    // (a) truncated-reduction cost: the first n workers of the pool
+    let pool =
+        WorkerPool::new(TERMS, mlp_basis_factory_with(&w, BITS, TERMS, BiasPlacement::FirstTerm));
+    let sched = ExpansionScheduler::new(pool);
+    let mut t1 = Table::new(
+        "perf — truncated prefix reduction (8 basis workers available)",
+        &["terms", "forward (ms)", "vs full"],
+    );
+    let full = timer.run(|| sched.forward(x.clone()).unwrap());
+    for &n in &[1usize, 2, 4, 8] {
+        let r = timer.run(|| sched.forward_truncated(x.clone(), n).unwrap());
+        t1.row_str(&[
+            &n.to_string(),
+            &format!("{:.3}", r.mean * 1e3),
+            &format!("{:.2}×", full.mean / r.mean),
+        ]);
+    }
+    t1.print();
+    sched.shutdown();
+
+    // (b) mixed-tier serving with the controller calibrated from the
+    // §5.3 monitor: per-tier latency / terms / estimated loss
+    let ctl = calibrated_controller(false);
+    let snap = ctl.snapshot();
+    println!("\ncalibrated budgets (terms per tier): {:?}", snap.budgets);
+    let coord = qos_coordinator(
+        &w,
+        BatcherConfig { max_batch: 16, max_wait_us: 500, queue_cap: 256 },
+        Some(ctl.clone()),
+    );
+    let mix = [
+        (Tier::Exact, 0.25),
+        (Tier::Balanced, 0.25),
+        (Tier::Throughput, 0.25),
+        (Tier::BestEffort, 0.25),
+    ];
+    let trace = RequestTrace::new(300.0, 87);
+    let rep = run_trace_mix(&coord, &trace, 1.0, DIN, 1.0, &mix);
+    let mut t2 = Table::new(
+        "perf — mixed-tier traffic (300 rps Poisson, calibrated controller)",
+        &["tier", "completed", "p50 (ms)", "p99 (ms)", "mean terms", "est loss"],
+    );
+    for tier in Tier::ALL {
+        tier_row(&mut t2, &rep, tier, &coord);
+    }
+    t2.print();
+    println!("aggregate: {rep}");
+    let mixed_json: Vec<Json> = Tier::ALL
+        .iter()
+        .filter_map(|&tier| {
+            let t = rep.per_tier.iter().find(|t| t.tier == tier)?;
+            Some(Json::obj([
+                ("tier", Json::str(tier.name())),
+                ("completed", Json::num(t.completed as f64)),
+                ("p50_ms", Json::num(t.latency.p50 * 1e3)),
+                ("p99_ms", Json::num(t.latency.p99 * 1e3)),
+                ("mean_terms", Json::num(coord.metrics.tier_mean_terms(tier))),
+                ("est_loss", Json::num(coord.metrics.tier_est_loss(tier))),
+            ]))
+        })
+        .collect();
+
+    // (c) degraded mode: a load spike against the seed batcher config
+    // (small queue, no controller → sheds) vs the same queue with the
+    // controller (precision degrades, availability holds)
+    let spike_cfg = BatcherConfig { max_batch: 16, max_wait_us: 500, queue_cap: 32 };
+    let spike_mix = [
+        (Tier::Balanced, 0.4),
+        (Tier::Throughput, 0.3),
+        (Tier::BestEffort, 0.3),
+    ];
+    let spike = RequestTrace::new(700.0, 88);
+    let seed_coord = qos_coordinator(&w, spike_cfg, None);
+    let seed_rep = run_trace_mix(&seed_coord, &spike, 1.0, DIN, 1.0, &spike_mix);
+    let ctl2 = calibrated_controller(false);
+    let qos_coord = qos_coordinator(&w, spike_cfg, Some(ctl2.clone()));
+    let qos_rep = run_trace_mix(&qos_coord, &spike, 1.0, DIN, 1.0, &spike_mix);
+    let mut t3 = Table::new(
+        "perf — 700 rps spike, queue_cap 32: shed-on-full vs degrade-precision",
+        &["config", "offered", "completed", "shed", "p99 (ms)", "mean terms (BE)"],
+    );
+    t3.row_str(&[
+        "seed (no controller)",
+        &seed_rep.offered.to_string(),
+        &seed_rep.completed.to_string(),
+        &seed_rep.shed.to_string(),
+        &format!("{:.2}", seed_rep.latency.p99 * 1e3),
+        &format!("{:.2}", seed_coord.metrics.tier_mean_terms(Tier::BestEffort)),
+    ]);
+    t3.row_str(&[
+        "qos controller",
+        &qos_rep.offered.to_string(),
+        &qos_rep.completed.to_string(),
+        &qos_rep.shed.to_string(),
+        &format!("{:.2}", qos_rep.latency.p99 * 1e3),
+        &format!("{:.2}", qos_coord.metrics.tier_mean_terms(Tier::BestEffort)),
+    ]);
+    t3.print();
+    let s2 = ctl2.snapshot();
+    println!(
+        "controller pressure after spike: {} (degrades {}, restores {})",
+        s2.pressure, s2.degrade_events, s2.restore_events
+    );
+
+    let json = Json::obj([
+        ("bench", Json::str("qos")),
+        ("mixed_tier", Json::Arr(mixed_json)),
+        (
+            "spike",
+            Json::obj([
+                ("offered_rps", Json::num(700.0)),
+                ("queue_cap", Json::num(32.0)),
+                ("seed_shed", Json::num(seed_rep.shed as f64)),
+                ("seed_completed", Json::num(seed_rep.completed as f64)),
+                ("qos_shed", Json::num(qos_rep.shed as f64)),
+                ("qos_completed", Json::num(qos_rep.completed as f64)),
+                ("qos_p99_ms", Json::num(qos_rep.latency.p99 * 1e3)),
+                ("seed_p99_ms", Json::num(seed_rep.latency.p99 * 1e3)),
+            ]),
+        ),
+    ]);
+    match write_bench_json("qos", &json) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nBENCH json write failed: {e}"),
+    }
+    println!(
+        "\ntarget: truncated reduction cost falls with the term budget;\n\
+         under the spike the controller completes more requests (fewer\n\
+         sheds) than the seed config by degrading precision, not availability."
+    );
+}

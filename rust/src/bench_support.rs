@@ -10,7 +10,24 @@ use crate::baselines::{self, PtqMethod};
 use crate::datasets::{accuracy, SynthImg};
 use crate::models::{quantized, zoo, Model};
 use crate::train::{trained_model_cached, TrainConfig};
+use crate::util::json::Json;
 use crate::xint::layer::LayerPolicy;
+use std::path::PathBuf;
+
+/// Where `BENCH_<tag>.json` files land: `$BENCH_JSON_DIR` when set,
+/// else the current working directory.
+pub fn bench_json_path(tag: &str) -> PathBuf {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    PathBuf::from(dir).join(format!("BENCH_{tag}.json"))
+}
+
+/// Write a machine-trackable benchmark result (`BENCH_<tag>.json`) so
+/// the perf trajectory is comparable across PRs; returns the path.
+pub fn write_bench_json(tag: &str, json: &Json) -> std::io::Result<PathBuf> {
+    let path = bench_json_path(tag);
+    std::fs::write(&path, json.render())?;
+    Ok(path)
+}
 
 /// The standard benchmark dataset (ImageNet stand-in).
 pub fn bench_data() -> SynthImg {

@@ -3,11 +3,21 @@
 //! Requests accumulate until `max_batch` samples are pending or
 //! `max_wait_us` elapses since the oldest arrival — the standard
 //! serving trade-off (throughput vs tail latency) the perf bench sweeps.
+//!
+//! Batches are *tier-grouped*: each formed batch contains only requests
+//! of the head request's [`Tier`], so the scheduler can truncate the
+//! basis reduction per batch without dragging lower tiers through an
+//! Exact-sized broadcast. The head is always taken first (FIFO on the
+//! oldest request), so no tier can starve another. The batcher also
+//! exports its queue depth — the QoS pressure signal the
+//! [`TermController`](crate::qos::TermController) watches.
 
 use super::{Request, Response};
+use crate::qos::Tier;
 use crate::tensor::Tensor;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -37,18 +47,40 @@ pub enum SubmitError {
     Closed,
 }
 
-/// A formed batch handed to the processing callback.
+/// One request's slot within a formed batch.
+pub struct BatchPart {
+    pub id: u64,
+    /// number of sample rows this request contributes
+    pub rows: usize,
+    pub reply: mpsc::Sender<Response>,
+    pub enqueued_at: Instant,
+    pub tier: Tier,
+}
+
+/// A formed batch handed to the processing callback. All parts share
+/// one tier (tier-grouped forming).
 pub struct FormedBatch {
     /// concatenated samples (Σnᵢ, din)
     pub x: Tensor,
-    /// per-request (id, rows, reply, enqueue_time)
-    pub parts: Vec<(u64, usize, mpsc::Sender<Response>, Instant)>,
+    pub parts: Vec<BatchPart>,
+    /// requests still waiting (channel + pending) at formation time
+    pub queue_depth: usize,
+    /// the batcher's configured queue capacity
+    pub queue_cap: usize,
+}
+
+impl FormedBatch {
+    /// The batch's tier (parts are tier-homogeneous by construction).
+    pub fn tier(&self) -> Tier {
+        self.parts.first().map(|p| p.tier).unwrap_or_default()
+    }
 }
 
 pub struct Batcher {
     tx: mpsc::SyncSender<(Request, Instant)>,
     handle: Option<JoinHandle<()>>,
     next_id: AtomicU64,
+    depth: Arc<AtomicUsize>,
 }
 
 impl Batcher {
@@ -59,6 +91,8 @@ impl Batcher {
         process: impl Fn(FormedBatch) + Send + 'static,
     ) -> Batcher {
         let (tx, rx) = mpsc::sync_channel::<(Request, Instant)>(cfg.queue_cap);
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth2 = depth.clone();
         let handle = std::thread::Builder::new()
             .name("batcher".into())
             .spawn(move || {
@@ -71,10 +105,17 @@ impl Batcher {
                             Err(_) => break,
                         }
                     }
-                    // accumulate until size or deadline
+                    // accumulate until size or deadline; the size trigger
+                    // counts only the head tier's rows — that is the batch
+                    // we will actually form
                     let deadline = pending[0].1 + Duration::from_micros(cfg.max_wait_us);
                     loop {
-                        let rows: usize = pending.iter().map(|(r, _)| r.x.dims()[0]).sum();
+                        let head_tier = pending[0].0.tier;
+                        let rows: usize = pending
+                            .iter()
+                            .filter(|(r, _)| r.tier == head_tier)
+                            .map(|(r, _)| r.x.dims()[0])
+                            .sum();
                         if rows >= cfg.max_batch {
                             break;
                         }
@@ -88,42 +129,80 @@ impl Batcher {
                             Err(mpsc::RecvTimeoutError::Disconnected) => break,
                         }
                     }
-                    // form the batch (split off at most max_batch samples)
+                    // form the batch: the head request, then pending
+                    // requests of the head's tier up to max_batch samples;
+                    // other tiers stay queued for the next iteration
+                    let head_tier = pending[0].0.tier;
                     let mut take = Vec::new();
                     let mut rows = 0usize;
-                    while let Some((req, _)) = pending.first() {
-                        let n = req.x.dims()[0];
+                    let mut i = 0;
+                    while i < pending.len() {
+                        if pending[i].0.tier != head_tier {
+                            i += 1;
+                            continue;
+                        }
+                        let n = pending[i].0.x.dims()[0];
                         if !take.is_empty() && rows + n > cfg.max_batch {
                             break;
                         }
                         rows += n;
-                        take.push(pending.remove(0));
+                        take.push(pending.remove(i));
                     }
+                    depth2.fetch_sub(take.len(), Ordering::Relaxed);
                     let din = take[0].0.x.dims()[1];
                     let mut data = Vec::with_capacity(rows * din);
                     let mut parts = Vec::with_capacity(take.len());
                     for (req, at) in take {
                         assert_eq!(req.x.dims()[1], din, "mixed feature dims in batch");
                         data.extend_from_slice(req.x.data());
-                        parts.push((req.id, req.x.dims()[0], req.reply, at));
+                        parts.push(BatchPart {
+                            id: req.id,
+                            rows: req.x.dims()[0],
+                            reply: req.reply,
+                            enqueued_at: at,
+                            tier: req.tier,
+                        });
                     }
-                    process(FormedBatch { x: Tensor::from_vec(&[rows, din], data), parts });
+                    process(FormedBatch {
+                        x: Tensor::from_vec(&[rows, din], data),
+                        parts,
+                        queue_depth: depth2.load(Ordering::Relaxed),
+                        queue_cap: cfg.queue_cap,
+                    });
                 }
             })
             .expect("spawn batcher");
-        Batcher { tx, handle: Some(handle), next_id: AtomicU64::new(0) }
+        Batcher { tx, handle: Some(handle), next_id: AtomicU64::new(0), depth }
     }
 
     /// Non-blocking submit; sheds with [`SubmitError::Busy`] when full.
-    pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
+    pub fn submit(
+        &self,
+        x: Tensor,
+        tier: Tier,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send((Request { id, x, reply }, Instant::now())) {
+        // count before sending so the batcher's decrement can never race
+        // the increment below zero
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send((Request { id, x, tier, reply }, Instant::now())) {
             Ok(()) => Ok(rx),
-            Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::Busy),
-            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
         }
+    }
+
+    /// Requests accepted but not yet formed into a batch.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 
     pub fn shutdown(mut self) {
@@ -159,14 +238,17 @@ mod tests {
         Batcher::start(cfg, move |batch| {
             batches_seen.fetch_add(1, Ordering::SeqCst);
             let mut row = 0usize;
-            for (id, rows, reply, at) in batch.parts {
+            for p in batch.parts {
                 let din = batch.x.dims()[1];
-                let data = batch.x.data()[row * din..(row + rows) * din].to_vec();
-                row += rows;
-                let _ = reply.send(Response {
-                    id,
-                    logits: Tensor::from_vec(&[rows, din], data),
-                    latency_s: at.elapsed().as_secs_f64(),
+                let data = batch.x.data()[row * din..(row + p.rows) * din].to_vec();
+                row += p.rows;
+                let _ = p.reply.send(Response {
+                    id: p.id,
+                    logits: Tensor::from_vec(&[p.rows, din], data),
+                    latency_s: p.enqueued_at.elapsed().as_secs_f64(),
+                    tier: p.tier,
+                    terms: 0,
+                    error: None,
                 });
             }
         })
@@ -179,8 +261,11 @@ mod tests {
             BatcherConfig { max_batch: 8, max_wait_us: 20_000, queue_cap: 32 },
             seen.clone(),
         );
-        let rxs: Vec<_> =
-            (0..4).map(|_| b.submit(Tensor::from_vec(&[1, 2], vec![1.0, 2.0])).unwrap()).collect();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| {
+                b.submit(Tensor::from_vec(&[1, 2], vec![1.0, 2.0]), Tier::Exact).unwrap()
+            })
+            .collect();
         for rx in rxs {
             let r = rx.recv().unwrap();
             assert_eq!(r.logits.dims(), &[1, 2]);
@@ -198,8 +283,8 @@ mod tests {
             seen.clone(),
         );
         let t0 = Instant::now();
-        let rx1 = b.submit(Tensor::from_vec(&[1, 1], vec![1.0])).unwrap();
-        let rx2 = b.submit(Tensor::from_vec(&[1, 1], vec![2.0])).unwrap();
+        let rx1 = b.submit(Tensor::from_vec(&[1, 1], vec![1.0]), Tier::Exact).unwrap();
+        let rx2 = b.submit(Tensor::from_vec(&[1, 1], vec![2.0]), Tier::Exact).unwrap();
         rx1.recv().unwrap();
         rx2.recv().unwrap();
         // must not wait the full 1 s window
@@ -214,11 +299,14 @@ mod tests {
             BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 2 },
             |batch| {
                 std::thread::sleep(Duration::from_millis(200));
-                for (id, rows, reply, at) in batch.parts {
-                    let _ = reply.send(Response {
-                        id,
-                        logits: Tensor::zeros(&[rows, 1]),
-                        latency_s: at.elapsed().as_secs_f64(),
+                for p in batch.parts {
+                    let _ = p.reply.send(Response {
+                        id: p.id,
+                        logits: Tensor::zeros(&[p.rows, 1]),
+                        latency_s: p.enqueued_at.elapsed().as_secs_f64(),
+                        tier: p.tier,
+                        terms: 0,
+                        error: None,
                     });
                 }
             },
@@ -226,7 +314,7 @@ mod tests {
         let mut shed = 0;
         let mut keep = Vec::new();
         for _ in 0..16 {
-            match b.submit(Tensor::zeros(&[1, 1])) {
+            match b.submit(Tensor::zeros(&[1, 1]), Tier::Exact) {
                 Ok(rx) => keep.push(rx),
                 Err(SubmitError::Busy) => shed += 1,
                 Err(e) => panic!("{e:?}"),
@@ -247,9 +335,76 @@ mod tests {
             BatcherConfig { max_batch: 4, max_wait_us: 100, queue_cap: 8 },
             seen.clone(),
         );
-        let rx = b.submit(Tensor::zeros(&[10, 3])).unwrap();
+        let rx = b.submit(Tensor::zeros(&[10, 3]), Tier::Exact).unwrap();
         let r = rx.recv().unwrap();
         assert_eq!(r.logits.dims(), &[10, 3]);
+        b.shutdown();
+    }
+
+    #[test]
+    fn batches_are_tier_homogeneous() {
+        // interleave two tiers within one wait window; every formed batch
+        // must contain a single tier and all requests must complete
+        let tiers_seen = Arc::new(std::sync::Mutex::new(Vec::<Vec<Tier>>::new()));
+        let ts = tiers_seen.clone();
+        let b = Batcher::start(
+            BatcherConfig { max_batch: 16, max_wait_us: 20_000, queue_cap: 64 },
+            move |batch| {
+                ts.lock().unwrap().push(batch.parts.iter().map(|p| p.tier).collect());
+                for p in batch.parts {
+                    let _ = p.reply.send(Response {
+                        id: p.id,
+                        logits: Tensor::zeros(&[p.rows, 1]),
+                        latency_s: 0.0,
+                        tier: p.tier,
+                        terms: 0,
+                        error: None,
+                    });
+                }
+            },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let tier = if i % 2 == 0 { Tier::Exact } else { Tier::BestEffort };
+            rxs.push(b.submit(Tensor::zeros(&[1, 1]), tier).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        for tiers in tiers_seen.lock().unwrap().iter() {
+            assert!(tiers.windows(2).all(|w| w[0] == w[1]), "mixed batch: {tiers:?}");
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_tracks_outstanding_requests() {
+        let b = Batcher::start(
+            BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 8 },
+            |batch| {
+                std::thread::sleep(Duration::from_millis(100));
+                for p in batch.parts {
+                    let _ = p.reply.send(Response {
+                        id: p.id,
+                        logits: Tensor::zeros(&[p.rows, 1]),
+                        latency_s: 0.0,
+                        tier: p.tier,
+                        terms: 0,
+                        error: None,
+                    });
+                }
+            },
+        );
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).unwrap());
+        }
+        assert!(b.queue_depth() >= 2, "depth {}", b.queue_depth());
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        // all formed: depth returns to zero
+        assert_eq!(b.queue_depth(), 0);
         b.shutdown();
     }
 }

@@ -1,5 +1,7 @@
-//! Serving metrics: lock-free counters + a latency reservoir.
+//! Serving metrics: lock-free counters + latency reservoirs, aggregated
+//! and per QoS tier (latency, terms served, estimated precision loss).
 
+use crate::qos::{Tier, NUM_TIERS};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -14,6 +16,15 @@ pub struct Metrics {
     latencies: Mutex<Vec<f64>>,
     /// batch service times (seconds)
     batch_times: Mutex<Vec<f64>>,
+    /// per-tier counters, indexed by [`Tier::idx`]
+    tier_completed: [AtomicU64; NUM_TIERS],
+    /// per-tier sum of terms reduced (mean = /completed)
+    tier_terms: [AtomicU64; NUM_TIERS],
+    /// per-tier latency reservoirs
+    tier_latencies: [Mutex<Vec<f64>>; NUM_TIERS],
+    /// per-tier worst estimated precision loss (max-residual estimate
+    /// from the controller's calibration; NAN-free, 0 when unknown)
+    tier_loss: Mutex<[f64; NUM_TIERS]>,
 }
 
 const RESERVOIR_CAP: usize = 100_000;
@@ -24,10 +35,34 @@ impl Metrics {
     }
 
     pub fn record_completed(&self, latency_s: f64) {
+        self.record_completed_tier(Tier::Exact, latency_s, 0, None);
+    }
+
+    /// Record one completed request with its serving detail.
+    pub fn record_completed_tier(
+        &self,
+        tier: Tier,
+        latency_s: f64,
+        terms: usize,
+        est_loss: Option<f32>,
+    ) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut l = self.latencies.lock().unwrap();
         if l.len() < RESERVOIR_CAP {
             l.push(latency_s);
+        }
+        drop(l);
+        let i = tier.idx();
+        self.tier_completed[i].fetch_add(1, Ordering::Relaxed);
+        self.tier_terms[i].fetch_add(terms as u64, Ordering::Relaxed);
+        let mut tl = self.tier_latencies[i].lock().unwrap();
+        if tl.len() < RESERVOIR_CAP {
+            tl.push(latency_s);
+        }
+        drop(tl);
+        if let Some(loss) = est_loss {
+            let mut worst = self.tier_loss.lock().unwrap();
+            worst[i] = worst[i].max(loss as f64);
         }
     }
 
@@ -74,6 +109,32 @@ impl Metrics {
     pub fn batch_time_summary(&self) -> crate::util::stats::Summary {
         crate::util::stats::Summary::of(&self.batch_times.lock().unwrap())
     }
+
+    /// Completed requests served at `tier`.
+    pub fn tier_completed(&self, tier: Tier) -> u64 {
+        self.tier_completed[tier.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Mean basis terms reduced per request at `tier` (0 when none).
+    pub fn tier_mean_terms(&self, tier: Tier) -> f64 {
+        let n = self.tier_completed(tier);
+        if n == 0 {
+            0.0
+        } else {
+            self.tier_terms[tier.idx()].load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Latency summary for one tier.
+    pub fn tier_latency_summary(&self, tier: Tier) -> crate::util::stats::Summary {
+        crate::util::stats::Summary::of(&self.tier_latencies[tier.idx()].lock().unwrap())
+    }
+
+    /// Worst estimated precision loss (max-residual) served at `tier`;
+    /// 0 when the controller never reported an estimate.
+    pub fn tier_est_loss(&self, tier: Tier) -> f64 {
+        self.tier_loss.lock().unwrap()[tier.idx()]
+    }
 }
 
 #[cfg(test)]
@@ -95,5 +156,25 @@ mod tests {
         let s = m.latency_summary();
         assert_eq!(s.n, 2);
         assert!((s.mean - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_tier_accounting() {
+        let m = Metrics::new();
+        m.record_completed_tier(Tier::Exact, 0.004, 8, None);
+        m.record_completed_tier(Tier::Throughput, 0.001, 2, Some(0.01));
+        m.record_completed_tier(Tier::Throughput, 0.002, 4, Some(0.002));
+        assert_eq!(m.completed(), 3);
+        assert_eq!(m.tier_completed(Tier::Exact), 1);
+        assert_eq!(m.tier_completed(Tier::Throughput), 2);
+        assert_eq!(m.tier_completed(Tier::BestEffort), 0);
+        assert!((m.tier_mean_terms(Tier::Throughput) - 3.0).abs() < 1e-9);
+        assert!((m.tier_mean_terms(Tier::Exact) - 8.0).abs() < 1e-9);
+        assert_eq!(m.tier_mean_terms(Tier::Balanced), 0.0);
+        // worst loss wins
+        assert!((m.tier_est_loss(Tier::Throughput) - 0.01).abs() < 1e-9);
+        assert_eq!(m.tier_est_loss(Tier::Exact), 0.0);
+        let s = m.tier_latency_summary(Tier::Throughput);
+        assert_eq!(s.n, 2);
     }
 }

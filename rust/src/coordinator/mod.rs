@@ -7,9 +7,12 @@
 //! * [`pool`] — worker threads; each owns one basis model (optionally a
 //!   per-thread PJRT runtime — `xla::PjRtClient` is not `Send`).
 //! * [`batcher`] — bounded request queue with timeout-based batch forming
-//!   and shed-on-full backpressure.
-//! * [`scheduler`] — broadcast/collect over the pool + AbelianAdd tree.
-//! * [`metrics`] — counters and latency summaries for the benches.
+//!   (tier-grouped), shed-on-full backpressure, and queue-depth export
+//!   for the QoS pressure signal.
+//! * [`scheduler`] — broadcast/collect over the pool + AbelianAdd tree,
+//!   with tier-truncated prefix reduction and anytime early stopping
+//!   (see [`crate::qos`]).
+//! * [`metrics`] — counters and latency summaries, per tier.
 
 pub mod batcher;
 pub mod metrics;
@@ -21,24 +24,50 @@ pub use metrics::Metrics;
 pub use pool::{BasisWorker, WorkerPool};
 pub use scheduler::ExpansionScheduler;
 
+use crate::qos::Tier;
 use crate::tensor::Tensor;
 use std::sync::mpsc;
 use std::sync::Arc;
 
-/// One inference request: a (n, din) batch of samples and a reply slot.
+/// One inference request: a (n, din) batch of samples, its service
+/// tier, and a reply slot.
 pub struct Request {
     pub id: u64,
     pub x: Tensor,
+    pub tier: Tier,
     pub reply: mpsc::Sender<Response>,
 }
 
-/// The reply: logits for the request's samples.
+/// The reply: logits for the request's samples, plus how the request
+/// was actually served (tier, basis terms reduced). `error` is set when
+/// the owning batch failed — the logits are then empty and callers must
+/// surface the message instead of hanging on a dropped channel.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub logits: Tensor,
     /// end-to-end latency attributed by the coordinator
     pub latency_s: f64,
+    /// tier the request was served under
+    pub tier: Tier,
+    /// number of series terms reduced into `logits`
+    pub terms: usize,
+    /// protocol-level failure carried to the caller (batch error)
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// A failed reply: empty logits, explicit error message.
+    pub fn failure(id: u64, tier: Tier, latency_s: f64, msg: String) -> Response {
+        Response {
+            id,
+            logits: Tensor::zeros(&[0, 0]),
+            latency_s,
+            tier,
+            terms: 0,
+            error: Some(msg),
+        }
+    }
 }
 
 /// The assembled serving coordinator: batcher → scheduler → AllReduce.
@@ -56,17 +85,42 @@ impl Coordinator {
         Coordinator { batcher, metrics }
     }
 
-    /// Submit a request (non-blocking; sheds when the queue is full).
+    /// Submit a request at [`Tier::Exact`] (non-blocking; sheds when the
+    /// queue is full).
     pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        self.batcher.submit(x)
+        self.batcher.submit(x, Tier::Exact)
     }
 
-    /// Submit and wait for the reply.
+    /// Submit a request at an explicit service tier.
+    pub fn submit_tier(
+        &self,
+        x: Tensor,
+        tier: Tier,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.batcher.submit(x, tier)
+    }
+
+    /// Submit and wait for the reply; a batch failure surfaces as `Err`.
     pub fn infer(&self, x: Tensor) -> anyhow::Result<Response> {
+        self.infer_tier(x, Tier::Exact)
+    }
+
+    /// Submit at `tier` and wait for the reply.
+    pub fn infer_tier(&self, x: Tensor, tier: Tier) -> anyhow::Result<Response> {
         let rx = self
-            .submit(x)
+            .submit_tier(x, tier)
             .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
-        Ok(rx.recv()?)
+        let resp = rx.recv()?;
+        match resp.error {
+            Some(msg) => Err(anyhow::anyhow!("batch failed: {msg}")),
+            None => Ok(resp),
+        }
+    }
+
+    /// Current batcher queue depth (requests accepted, not yet formed
+    /// into a batch) — the QoS pressure signal.
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.queue_depth()
     }
 
     /// Drain and stop.
@@ -112,6 +166,9 @@ mod tests {
         for (a, b) in x.data().iter().zip(resp.logits.data()) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
+        assert_eq!(resp.tier, Tier::Exact);
+        assert_eq!(resp.terms, 3, "exact tier reduces the full pool");
+        assert!(resp.error.is_none());
         assert_eq!(c.metrics.completed(), 1);
         c.shutdown();
     }
@@ -154,6 +211,21 @@ mod tests {
                 assert!((a * 2.0 - b).abs() < 1e-5);
             }
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn tiered_submit_reports_served_tier() {
+        let c = scalar_coordinator(vec![0.5, 0.5], 8);
+        let mut rng = Rng::seed(32);
+        let x = Tensor::randn(&[1, 4], 1.0, &mut rng);
+        // without a controller every tier runs the full pool; the tier
+        // tag must still round-trip to the response
+        let resp = c.infer_tier(x, Tier::Throughput).unwrap();
+        assert_eq!(resp.tier, Tier::Throughput);
+        assert_eq!(resp.terms, 2);
+        assert_eq!(c.metrics.tier_completed(Tier::Throughput), 1);
+        assert_eq!(c.metrics.tier_completed(Tier::Exact), 0);
         c.shutdown();
     }
 }

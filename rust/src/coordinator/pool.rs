@@ -77,15 +77,25 @@ impl WorkerPool {
 
     /// Broadcast `x` to all workers, collect all outputs in worker order.
     pub fn broadcast(&self, x: Tensor) -> anyhow::Result<Vec<Tensor>> {
+        self.broadcast_to(x, self.senders.len())
+    }
+
+    /// Broadcast `x` to the first `n` workers only — the truncated-series
+    /// path: because ⊎ prefix sums are themselves group elements, the
+    /// first `n` basis outputs reduce to a valid lower-precision model
+    /// (the QoS tiers ride this). Outputs return in worker order 0..n.
+    pub fn broadcast_to(&self, x: Tensor, n: usize) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(n >= 1, "broadcast needs at least one worker");
+        anyhow::ensure!(n <= self.senders.len(), "prefix {n} exceeds pool {}", self.senders.len());
         let x = Arc::new(x);
         let (tx, rx) = mpsc::channel();
-        for s in &self.senders {
+        for s in &self.senders[..n] {
             s.send(Job::Broadcast { x: x.clone(), out: tx.clone() })
                 .map_err(|_| anyhow::anyhow!("worker thread died"))?;
         }
         drop(tx);
-        let mut outs: Vec<Option<Tensor>> = vec![None; self.senders.len()];
-        for _ in 0..self.senders.len() {
+        let mut outs: Vec<Option<Tensor>> = vec![None; n];
+        for _ in 0..n {
             let (i, res) = rx.recv().map_err(|_| anyhow::anyhow!("worker output lost"))?;
             outs[i] = Some(res?);
         }
@@ -127,6 +137,21 @@ mod tests {
         for (i, o) in outs.iter().enumerate() {
             assert_eq!(o.data(), &[10.0 + i as f32], "worker {i}");
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn broadcast_to_prefix_only_runs_first_workers() {
+        let pool = WorkerPool::new(
+            4,
+            Arc::new(|i| Box::new(AddConst(i as f32)) as Box<dyn BasisWorker>),
+        );
+        let outs = pool.broadcast_to(Tensor::vec1(&[1.0]), 2).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].data(), &[1.0]);
+        assert_eq!(outs[1].data(), &[2.0]);
+        assert!(pool.broadcast_to(Tensor::vec1(&[1.0]), 0).is_err());
+        assert!(pool.broadcast_to(Tensor::vec1(&[1.0]), 5).is_err());
         pool.shutdown();
     }
 

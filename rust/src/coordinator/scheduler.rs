@@ -1,24 +1,41 @@
-//! Expansion scheduler: broadcast a formed batch to every basis worker,
+//! Expansion scheduler: broadcast a formed batch to the basis workers,
 //! AbelianAdd-reduce the partial outputs (tree order — valid because ⊎
 //! is an Abelian group op), and scatter replies.
+//!
+//! With a [`TermController`] attached, the scheduler serves each batch
+//! at its tier's term budget: it broadcasts only to the first `n`
+//! workers of the pool (⊎ prefix sums are themselves group elements, so
+//! the prefix is a valid lower-precision model), feeds queue-pressure
+//! observations back to the controller, and in *anytime* mode stops the
+//! prefix reduction early once the marginal term's contribution falls
+//! below the batch tolerance. Failed batches send an explicit error
+//! [`Response`] so protocol clients get an error frame instead of a
+//! dropped channel.
 
 use super::batcher::FormedBatch;
 use super::metrics::Metrics;
 use super::pool::WorkerPool;
 use super::Response;
+use crate::qos::{TermController, NUM_TIERS};
 use crate::tensor::Tensor;
 use crate::xint::abelian::abelian_reduce;
+use std::sync::Arc;
 
 pub struct ExpansionScheduler {
     pool: WorkerPool,
     /// optional per-worker output gains (AbelianMul scale application);
     /// length must equal the pool size when set
     gains: Option<Vec<f32>>,
+    /// optional per-tier output gains applied after the prefix reduction
+    /// (e.g. bias-mass compensation for truncated split biases)
+    tier_gains: Option<[f32; NUM_TIERS]>,
+    /// QoS control plane; absent = every batch runs the full pool
+    controller: Option<Arc<TermController>>,
 }
 
 impl ExpansionScheduler {
     pub fn new(pool: WorkerPool) -> ExpansionScheduler {
-        ExpansionScheduler { pool, gains: None }
+        ExpansionScheduler { pool, gains: None, tier_gains: None, controller: None }
     }
 
     /// Apply per-basis output gains before reduction (the AbelianMul
@@ -29,40 +46,128 @@ impl ExpansionScheduler {
         self
     }
 
+    /// Apply a per-tier scalar to the reduced output (indexed by
+    /// [`Tier::idx`](crate::qos::Tier::idx)); identity is `1.0`.
+    pub fn with_tier_gains(mut self, tier_gains: [f32; NUM_TIERS]) -> ExpansionScheduler {
+        self.tier_gains = Some(tier_gains);
+        self
+    }
+
+    /// Attach the QoS control plane: per-tier truncation + pressure
+    /// feedback + anytime early stopping. The controller must be sized
+    /// for this pool — otherwise Exact-tier requests would be silently
+    /// truncated to a budget smaller than the series.
+    pub fn with_controller(mut self, controller: Arc<TermController>) -> ExpansionScheduler {
+        assert_eq!(
+            controller.config().total_terms,
+            self.pool.len(),
+            "controller total_terms must equal the worker-pool size"
+        );
+        self.controller = Some(controller);
+        self
+    }
+
     /// Process one formed batch end to end.
     pub fn process(&self, batch: FormedBatch, metrics: &Metrics) {
         let t0 = std::time::Instant::now();
-        let result = self.forward(batch.x.clone());
+        let tier = batch.tier();
+        if let Some(ctl) = &self.controller {
+            ctl.observe_queue(batch.queue_depth, batch.queue_cap);
+        }
+        let budget = match &self.controller {
+            Some(ctl) => ctl.budget_for(tier).min(self.pool.len()).max(1),
+            None => self.pool.len(),
+        };
+        let anytime_tol = self
+            .controller
+            .as_ref()
+            .filter(|ctl| ctl.config().anytime)
+            .and_then(|ctl| ctl.batch_tolerance([tier]));
+        let result = self.reduce_prefix(batch.x.clone(), budget, anytime_tol);
         match result {
-            Ok(logits) => {
+            Ok((logits, terms_used)) => {
+                let logits = match &self.tier_gains {
+                    Some(g) if g[tier.idx()] != 1.0 => logits.scale(g[tier.idx()]),
+                    _ => logits,
+                };
+                let est_loss = self
+                    .controller
+                    .as_ref()
+                    .and_then(|ctl| ctl.estimated_loss(terms_used));
                 let mut row = 0usize;
                 let classes = logits.dims()[1];
-                for (id, rows, reply, at) in batch.parts {
-                    let data = logits.data()[row * classes..(row + rows) * classes].to_vec();
-                    row += rows;
+                for p in batch.parts {
+                    let data = logits.data()[row * classes..(row + p.rows) * classes].to_vec();
+                    row += p.rows;
                     // record BEFORE sending: the caller may assert on the
                     // metrics immediately after receiving the reply
-                    metrics.record_completed(at.elapsed().as_secs_f64());
-                    let _ = reply.send(Response {
-                        id,
-                        logits: Tensor::from_vec(&[rows, classes], data),
-                        latency_s: at.elapsed().as_secs_f64(),
+                    let latency = p.enqueued_at.elapsed().as_secs_f64();
+                    metrics.record_completed_tier(p.tier, latency, terms_used, est_loss);
+                    let _ = p.reply.send(Response {
+                        id: p.id,
+                        logits: Tensor::from_vec(&[p.rows, classes], data),
+                        latency_s: latency,
+                        tier: p.tier,
+                        terms: terms_used,
+                        error: None,
                     });
                 }
-                metrics.record_batch(batch.x.dims()[0], t0.elapsed().as_secs_f64());
+                let service = t0.elapsed().as_secs_f64();
+                metrics.record_batch(batch.x.dims()[0], service);
+                if let Some(ctl) = &self.controller {
+                    ctl.observe_service_time(service);
+                }
             }
             Err(e) => {
-                log::error!("batch failed: {e:#}");
+                let msg = format!("{e:#}");
+                log::error!("batch failed: {msg}");
                 metrics.record_failed(batch.parts.len());
-                // drop replies: receivers observe RecvError
+                // explicit error replies: TCP clients get an error frame
+                // instead of hanging until RecvError
+                for p in batch.parts {
+                    let latency = p.enqueued_at.elapsed().as_secs_f64();
+                    let _ = p.reply.send(Response::failure(p.id, p.tier, latency, msg.clone()));
+                }
             }
         }
     }
 
-    /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree.
+    /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree
+    /// over the full pool.
     pub fn forward(&self, x: Tensor) -> anyhow::Result<Tensor> {
-        let outs = self.pool.broadcast(x)?;
-        let outs = match &self.gains {
+        Ok(self.reduce_prefix(x, self.pool.len(), None)?.0)
+    }
+
+    /// Truncated forward: reduce only the first `n` basis outputs.
+    pub fn forward_truncated(&self, x: Tensor, n: usize) -> anyhow::Result<Tensor> {
+        Ok(self.reduce_prefix(x, n, None)?.0)
+    }
+
+    /// Anytime forward over the first `n` workers: accumulate terms in
+    /// series order and stop once the marginal term's max contribution
+    /// falls below `tol` *relative to the leading term's magnitude*
+    /// (scale-invariant, so small-magnitude activations do not trip the
+    /// stop rule spuriously). Returns the reduction and terms consumed.
+    pub fn forward_anytime(
+        &self,
+        x: Tensor,
+        n: usize,
+        tol: f32,
+    ) -> anyhow::Result<(Tensor, usize)> {
+        self.reduce_prefix(x, n, Some(tol))
+    }
+
+    /// Broadcast to the first `n` workers, apply gains, reduce. With a
+    /// tolerance, accumulate sequentially (series order) and stop early;
+    /// otherwise reduce the whole prefix as a balanced tree.
+    fn reduce_prefix(
+        &self,
+        x: Tensor,
+        n: usize,
+        tol: Option<f32>,
+    ) -> anyhow::Result<(Tensor, usize)> {
+        let outs = self.pool.broadcast_to(x, n)?;
+        let outs: Vec<Tensor> = match &self.gains {
             Some(g) => outs
                 .into_iter()
                 .zip(g)
@@ -70,7 +175,33 @@ impl ExpansionScheduler {
                 .collect(),
             None => outs,
         };
-        abelian_reduce(outs).ok_or_else(|| anyhow::anyhow!("empty worker pool"))
+        match tol {
+            None => {
+                let terms = outs.len();
+                let y = abelian_reduce(outs).ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
+                Ok((y, terms))
+            }
+            Some(tol) => {
+                let mut it = outs.into_iter();
+                let mut acc =
+                    it.next().ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
+                // relative threshold: tolerance × leading-term magnitude,
+                // so the stop rule is invariant to the input's scale
+                let threshold = tol * acc.max_abs();
+                let mut terms = 1usize;
+                for term in it {
+                    // the series' geometric scale law makes later terms
+                    // strictly smaller; once one drops below the batch
+                    // tolerance, the remaining tail is negligible too
+                    if term.max_abs() < threshold {
+                        break;
+                    }
+                    acc = acc.add(&term);
+                    terms += 1;
+                }
+                Ok((acc, terms))
+            }
+        }
     }
 
     pub fn shutdown(self) {
@@ -82,6 +213,7 @@ impl ExpansionScheduler {
 mod tests {
     use super::*;
     use crate::coordinator::pool::BasisWorker;
+    use crate::qos::{QosConfig, Tier};
     use std::sync::Arc;
 
     struct Id;
@@ -91,12 +223,115 @@ mod tests {
         }
     }
 
+    fn id_pool(n: usize) -> WorkerPool {
+        WorkerPool::new(n, Arc::new(|_| Box::new(Id) as Box<dyn BasisWorker>))
+    }
+
     #[test]
     fn gains_apply_abelian_mul() {
-        let pool = WorkerPool::new(3, Arc::new(|_| Box::new(Id) as Box<dyn BasisWorker>));
-        let sched = ExpansionScheduler::new(pool).with_gains(vec![1.0, 0.5, 0.25]);
+        let sched = ExpansionScheduler::new(id_pool(3)).with_gains(vec![1.0, 0.5, 0.25]);
         let y = sched.forward(Tensor::vec1(&[8.0]).reshaped(&[1, 1])).unwrap();
         assert!((y.data()[0] - 14.0).abs() < 1e-5); // 8·(1+0.5+0.25)
         sched.shutdown();
+    }
+
+    #[test]
+    fn truncated_forward_reduces_prefix_only() {
+        let sched = ExpansionScheduler::new(id_pool(4)).with_gains(vec![1.0, 0.5, 0.25, 0.125]);
+        let x = Tensor::vec1(&[8.0]).reshaped(&[1, 1]);
+        let y2 = sched.forward_truncated(x.clone(), 2).unwrap();
+        assert!((y2.data()[0] - 12.0).abs() < 1e-5); // 8·(1+0.5)
+        let y4 = sched.forward_truncated(x, 4).unwrap();
+        assert!((y4.data()[0] - 15.0).abs() < 1e-5);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn anytime_stops_when_marginal_below_tol() {
+        // gains shrink geometrically: terms contribute 8, 4, 2, 1;
+        // tol is relative to the leading term (threshold = 0.2·8 = 1.6)
+        let sched =
+            ExpansionScheduler::new(id_pool(4)).with_gains(vec![1.0, 0.5, 0.25, 0.125]);
+        let x = Tensor::vec1(&[8.0]).reshaped(&[1, 1]);
+        let (y, terms) = sched.forward_anytime(x.clone(), 4, 0.2).unwrap();
+        // stops before the 4th term (contribution 1 < 1.6)
+        assert_eq!(terms, 3);
+        assert!((y.data()[0] - 14.0).abs() < 1e-5);
+        // the stop rule is scale-invariant: a 1000× smaller input stops
+        // at the same term count
+        let (_, terms_small) =
+            sched.forward_anytime(x.scale(1e-3), 4, 0.2).unwrap();
+        assert_eq!(terms_small, 3);
+        // a zero tolerance consumes everything
+        let (_, all) = sched.forward_anytime(x, 4, 0.0).unwrap();
+        assert_eq!(all, 4);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn controller_budget_truncates_batch_processing() {
+        use crate::coordinator::{BatcherConfig, Coordinator};
+        let ctl = Arc::new(TermController::new(QosConfig::new(4)));
+        let sched = ExpansionScheduler::new(id_pool(4))
+            .with_gains(vec![1.0, 0.5, 0.25, 0.125])
+            .with_controller(ctl.clone());
+        let coord = Coordinator::new(
+            BatcherConfig { max_batch: 8, max_wait_us: 200, queue_cap: 32 },
+            sched,
+        );
+        let x = Tensor::vec1(&[8.0]).reshaped(&[1, 1]);
+        // Exact: all four terms
+        let r = coord.infer_tier(x.clone(), Tier::Exact).unwrap();
+        assert_eq!(r.terms, 4);
+        assert!((r.logits.data()[0] - 15.0).abs() < 1e-5);
+        // BestEffort default budget is 1 term
+        let r = coord.infer_tier(x, Tier::BestEffort).unwrap();
+        assert_eq!(r.terms, 1);
+        assert!((r.logits.data()[0] - 8.0).abs() < 1e-5);
+        assert_eq!(coord.metrics.tier_completed(Tier::BestEffort), 1);
+        assert!(coord.metrics.tier_mean_terms(Tier::BestEffort) < 2.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tier_gains_scale_reduced_output() {
+        use crate::coordinator::{BatcherConfig, Coordinator};
+        let mut tg = [1.0f32; NUM_TIERS];
+        tg[Tier::BestEffort.idx()] = 2.0;
+        let sched = ExpansionScheduler::new(id_pool(2)).with_tier_gains(tg);
+        let coord = Coordinator::new(
+            BatcherConfig { max_batch: 4, max_wait_us: 200, queue_cap: 16 },
+            sched,
+        );
+        let x = Tensor::vec1(&[3.0]).reshaped(&[1, 1]);
+        let exact = coord.infer_tier(x.clone(), Tier::Exact).unwrap();
+        assert!((exact.logits.data()[0] - 6.0).abs() < 1e-5);
+        let be = coord.infer_tier(x, Tier::BestEffort).unwrap();
+        assert!((be.logits.data()[0] - 12.0).abs() < 1e-5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_batch_sends_error_response() {
+        use crate::coordinator::{BatcherConfig, Coordinator};
+        struct Failing;
+        impl BasisWorker for Failing {
+            fn run(&mut self, _x: &Tensor) -> anyhow::Result<Tensor> {
+                anyhow::bail!("injected basis failure")
+            }
+        }
+        let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Failing) as Box<dyn BasisWorker>));
+        let coord = Coordinator::new(
+            BatcherConfig { max_batch: 2, max_wait_us: 100, queue_cap: 8 },
+            ExpansionScheduler::new(pool),
+        );
+        let rx = coord.submit(Tensor::zeros(&[1, 2])).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        let err = resp.error.expect("explicit error reply");
+        assert!(err.contains("injected basis failure"), "{err}");
+        assert_eq!(coord.metrics.failed(), 1);
+        // infer() surfaces the same failure as Err
+        assert!(coord.infer(Tensor::zeros(&[1, 2])).is_err());
+        coord.shutdown();
     }
 }

@@ -10,16 +10,23 @@
 //!   text (`python/compile/model.py`, `aot.py` → `artifacts/`).
 //! * **Layer 3** (this crate): the serving coordinator — request routing,
 //!   dynamic batching, basis-model scheduling, AbelianAdd AllReduce — plus
-//!   every substrate the paper depends on, implemented from scratch:
-//!   tensors, NN inference + training, quantizers, PTQ baselines, synthetic
-//!   datasets, a PJRT runtime wrapper, and benchmark harnesses that
-//!   regenerate every table and figure of the paper (see DESIGN.md §5).
+//!   the [`qos`] control plane, which rides the series structure itself:
+//!   per-request [`qos::Tier`]s map to basis-term budgets (calibrated from
+//!   §5.3 convergence data), the scheduler reduces only the prefix of the
+//!   worker pool a tier needs (⊎ prefix sums are group elements), and
+//!   under queue pressure the [`qos::TermController`] trades precision for
+//!   availability instead of shedding. Every substrate the paper depends
+//!   on is implemented from scratch: tensors, NN inference + training,
+//!   quantizers, PTQ baselines, synthetic datasets, a PJRT runtime
+//!   wrapper, and benchmark harnesses that regenerate every table and
+//!   figure of the paper (see DESIGN.md §5).
 
 pub mod baselines;
 pub mod bench_support;
 pub mod coordinator;
 pub mod datasets;
 pub mod models;
+pub mod qos;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

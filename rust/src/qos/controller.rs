@@ -1,0 +1,320 @@
+//! Term controller — translates tier tolerances into basis-term budgets
+//! and degrades those budgets under load instead of shedding requests.
+//!
+//! Calibration uses [`ExpansionMonitor`] convergence data (§5.3): a
+//! tier's base budget is the smallest term count whose observed
+//! max-residual is below the tier tolerance. At serve time the
+//! controller watches batcher queue occupancy (and optionally batch
+//! service time) and raises a *pressure level*; each pressure step
+//! removes one term from every non-Exact tier, bounded below by the
+//! tier's floor. When the queue drains, pressure falls and full
+//! precision is restored — precision degrades, availability does not.
+
+use super::tier::{Tier, NUM_TIERS};
+use crate::xint::monitor::ExpansionMonitor;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Controller tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    /// total basis terms available (the worker-pool size)
+    pub total_terms: usize,
+    /// queue occupancy above which pressure rises (one step per batch)
+    pub high_watermark: f64,
+    /// queue occupancy below which pressure falls
+    pub low_watermark: f64,
+    /// batch service time (seconds) above which pressure also rises;
+    /// 0.0 disables the latency signal
+    pub service_target_s: f64,
+    /// enable anytime reduction: stop the prefix sum early when the
+    /// marginal term's contribution falls below the batch tolerance
+    pub anytime: bool,
+}
+
+impl QosConfig {
+    pub fn new(total_terms: usize) -> QosConfig {
+        QosConfig {
+            total_terms,
+            high_watermark: 0.75,
+            low_watermark: 0.25,
+            service_target_s: 0.0,
+            anytime: false,
+        }
+    }
+
+    pub fn with_anytime(mut self, on: bool) -> QosConfig {
+        self.anytime = on;
+        self
+    }
+
+    pub fn with_service_target(mut self, target_s: f64) -> QosConfig {
+        self.service_target_s = target_s;
+        self
+    }
+}
+
+/// Point-in-time view of the controller (observability/reporting).
+#[derive(Clone, Debug)]
+pub struct QosSnapshot {
+    pub pressure: usize,
+    /// effective budget per tier, indexed by [`Tier::idx`]
+    pub budgets: [usize; NUM_TIERS],
+    pub degrade_events: u64,
+    pub restore_events: u64,
+}
+
+/// Adaptive-precision control plane shared by batcher and scheduler.
+///
+/// All state is atomic: `budget_for` runs on the scheduler hot path
+/// while pressure observations arrive from batch formation.
+#[derive(Debug)]
+pub struct TermController {
+    cfg: QosConfig,
+    /// calibrated base budget per tier (before pressure)
+    base: [AtomicUsize; NUM_TIERS],
+    /// current pressure level: terms removed from non-Exact tiers
+    pressure: AtomicUsize,
+    degrade_events: AtomicU64,
+    restore_events: AtomicU64,
+    /// observed max-residual per term count (monitor copy), for
+    /// estimated-precision-loss reporting; empty before calibration
+    convergence: Mutex<Vec<f32>>,
+    /// EWMA of batch service time (seconds, stored as f64 bits)
+    service_ewma: AtomicU64,
+}
+
+impl TermController {
+    pub fn new(cfg: QosConfig) -> TermController {
+        assert!(cfg.total_terms >= 1, "controller needs at least one term");
+        assert!(cfg.low_watermark < cfg.high_watermark, "watermarks inverted");
+        let base = std::array::from_fn(|i| {
+            AtomicUsize::new(Tier::ALL[i].default_budget(cfg.total_terms))
+        });
+        TermController {
+            cfg,
+            base,
+            pressure: AtomicUsize::new(0),
+            degrade_events: AtomicU64::new(0),
+            restore_events: AtomicU64::new(0),
+            convergence: Mutex::new(Vec::new()),
+            service_ewma: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    /// Set each tier's base budget from observed convergence: the
+    /// smallest term count under the tier tolerance (§5.3 rule), all
+    /// terms when the tolerance was never reached.
+    pub fn calibrate(&self, monitor: &ExpansionMonitor) {
+        let total = self.cfg.total_terms;
+        for tier in Tier::ALL {
+            let budget = match tier.tolerance() {
+                None => total,
+                Some(tol) => monitor.optimal_terms(tol).unwrap_or(total).min(total),
+            };
+            self.base[tier.idx()].store(budget.max(1), Ordering::Relaxed);
+        }
+        let mut conv = self.convergence.lock().unwrap();
+        *conv = monitor.max_diff.clone();
+    }
+
+    /// Effective term budget for `tier` right now: base minus pressure,
+    /// clamped to the tier floor. Exact is immune by construction
+    /// (`floor_terms(total) == total`).
+    pub fn budget_for(&self, tier: Tier) -> usize {
+        let base = self.base[tier.idx()].load(Ordering::Relaxed);
+        let floor = tier.floor_terms(self.cfg.total_terms).min(base);
+        let p = self.pressure.load(Ordering::Relaxed);
+        base.saturating_sub(p).clamp(floor.max(1), self.cfg.total_terms)
+    }
+
+    /// Feed one queue-occupancy observation (taken at batch formation).
+    /// Pressure moves at most one step per observation so precision
+    /// ramps rather than cliffs.
+    pub fn observe_queue(&self, depth: usize, cap: usize) {
+        let occupancy = depth as f64 / cap.max(1) as f64;
+        if occupancy > self.cfg.high_watermark {
+            self.raise_pressure();
+        } else if occupancy < self.cfg.low_watermark {
+            self.lower_pressure();
+        }
+    }
+
+    /// Feed one batch service time; only acts when a target is set.
+    pub fn observe_service_time(&self, service_s: f64) {
+        let prev = f64::from_bits(self.service_ewma.load(Ordering::Relaxed));
+        let ewma = if prev == 0.0 { service_s } else { 0.8 * prev + 0.2 * service_s };
+        self.service_ewma.store(ewma.to_bits(), Ordering::Relaxed);
+        if self.cfg.service_target_s > 0.0 {
+            if ewma > self.cfg.service_target_s {
+                self.raise_pressure();
+            } else if ewma < 0.5 * self.cfg.service_target_s {
+                self.lower_pressure();
+            }
+        }
+    }
+
+    fn raise_pressure(&self) {
+        // cap: the deepest cut still leaves every tier at its floor
+        let max_p = self.cfg.total_terms.saturating_sub(1);
+        let p = self.pressure.load(Ordering::Relaxed);
+        if p < max_p
+            && self
+                .pressure
+                .compare_exchange(p, p + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            self.degrade_events.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn lower_pressure(&self) {
+        let p = self.pressure.load(Ordering::Relaxed);
+        if p > 0
+            && self
+                .pressure
+                .compare_exchange(p, p - 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            self.restore_events.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn pressure(&self) -> usize {
+        self.pressure.load(Ordering::Relaxed)
+    }
+
+    /// Estimated max-residual at `terms` from the calibration data;
+    /// `None` before calibration or out of the observed range.
+    pub fn estimated_loss(&self, terms: usize) -> Option<f32> {
+        let conv = self.convergence.lock().unwrap();
+        if terms == 0 {
+            return None;
+        }
+        conv.get(terms - 1).copied()
+    }
+
+    /// Smallest tolerance across a batch's tiers, for anytime stopping;
+    /// `None` when any tier is Exact (never stop early).
+    pub fn batch_tolerance(&self, tiers: impl IntoIterator<Item = Tier>) -> Option<f32> {
+        let mut min_tol: Option<f32> = None;
+        for t in tiers {
+            match t.tolerance() {
+                None => return None,
+                Some(tol) => {
+                    min_tol = Some(match min_tol {
+                        Some(m) => m.min(tol),
+                        None => tol,
+                    });
+                }
+            }
+        }
+        min_tol
+    }
+
+    pub fn snapshot(&self) -> QosSnapshot {
+        QosSnapshot {
+            pressure: self.pressure(),
+            budgets: std::array::from_fn(|i| self.budget_for(Tier::ALL[i])),
+            degrade_events: self.degrade_events.load(Ordering::Relaxed),
+            restore_events: self.restore_events.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Rng, Tensor};
+    use crate::xint::{BitSpec, ExpandConfig};
+
+    #[test]
+    fn uncalibrated_budgets_follow_tier_defaults() {
+        let c = TermController::new(QosConfig::new(8));
+        assert_eq!(c.budget_for(Tier::Exact), 8);
+        assert!(c.budget_for(Tier::Balanced) <= 8);
+        assert!(c.budget_for(Tier::BestEffort) >= 1);
+    }
+
+    #[test]
+    fn calibration_orders_budgets_by_tolerance() {
+        let mut mon = ExpansionMonitor::new();
+        let mut rng = Rng::seed(71);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
+        for _ in 0..3 {
+            mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg);
+        }
+        let c = TermController::new(QosConfig::new(8));
+        c.calibrate(&mon);
+        let b: Vec<usize> = Tier::ALL.iter().map(|&t| c.budget_for(t)).collect();
+        assert_eq!(b[0], 8, "exact runs the full series");
+        // looser tolerance ⇒ no more terms
+        assert!(b.windows(2).all(|w| w[1] <= w[0]), "{b:?}");
+        assert!(b[3] >= 1);
+        // estimated loss is monotone non-increasing in terms
+        let l1 = c.estimated_loss(1).unwrap();
+        let l8 = c.estimated_loss(8).unwrap();
+        assert!(l8 <= l1);
+    }
+
+    #[test]
+    fn pressure_degrades_and_restores_non_exact_tiers() {
+        let c = TermController::new(QosConfig::new(8));
+        let before = c.budget_for(Tier::Balanced);
+        // sustained overload: pressure ramps one step per observation
+        for _ in 0..4 {
+            c.observe_queue(90, 100);
+        }
+        assert_eq!(c.pressure(), 4);
+        assert_eq!(c.budget_for(Tier::Exact), 8, "exact is immune");
+        let degraded = c.budget_for(Tier::Balanced);
+        assert!(degraded < before, "{degraded} !< {before}");
+        assert!(degraded >= Tier::Balanced.floor_terms(8));
+        // drain: pressure falls, budget restored
+        for _ in 0..8 {
+            c.observe_queue(0, 100);
+        }
+        assert_eq!(c.pressure(), 0);
+        assert_eq!(c.budget_for(Tier::Balanced), before);
+        let s = c.snapshot();
+        assert!(s.degrade_events >= 4 && s.restore_events >= 4);
+    }
+
+    #[test]
+    fn pressure_never_breaks_tier_floors() {
+        let c = TermController::new(QosConfig::new(4));
+        for _ in 0..100 {
+            c.observe_queue(100, 100);
+        }
+        assert_eq!(c.budget_for(Tier::Exact), 4);
+        assert_eq!(c.budget_for(Tier::Balanced), Tier::Balanced.floor_terms(4));
+        assert_eq!(c.budget_for(Tier::Throughput), 1);
+        assert_eq!(c.budget_for(Tier::BestEffort), 1);
+    }
+
+    #[test]
+    fn service_time_signal_raises_pressure() {
+        let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
+        for _ in 0..3 {
+            c.observe_service_time(0.050);
+        }
+        assert!(c.pressure() > 0);
+        for _ in 0..20 {
+            c.observe_service_time(0.001);
+        }
+        assert_eq!(c.pressure(), 0);
+    }
+
+    #[test]
+    fn batch_tolerance_is_strictest_present() {
+        let c = TermController::new(QosConfig::new(4));
+        assert_eq!(c.batch_tolerance([Tier::Exact, Tier::BestEffort]), None);
+        let t = c.batch_tolerance([Tier::Throughput, Tier::Balanced]).unwrap();
+        assert_eq!(t, Tier::Balanced.tolerance().unwrap());
+        assert_eq!(c.batch_tolerance([]), None);
+    }
+}

@@ -1,0 +1,37 @@
+//! QoS control plane — anytime serving over truncated series expansions.
+//!
+//! The paper's central object `M = M_sa + bias·M_nsy + Σ scale_i·M̃_i`
+//! is a *series*: every truncation prefix is itself a valid
+//! lower-precision model, and the §5.3 monitor quantifies exactly how
+//! much accuracy each extra term buys. This module exploits that
+//! structure to degrade **precision instead of availability** when the
+//! serving stack is under pressure — a knob single-artifact PTQ
+//! pipelines cannot offer.
+//!
+//! * [`tier`] — the request-facing [`Tier`] ladder (`Exact` /
+//!   `Balanced` / `Throughput` / `BestEffort`), carried through
+//!   [`coordinator::Request`](crate::coordinator::Request) and the TCP
+//!   protocol's tier field.
+//! * [`controller`] — the [`TermController`]: calibrates per-tier term
+//!   budgets from [`ExpansionMonitor`](crate::xint::ExpansionMonitor)
+//!   convergence data and dynamically lowers budgets under queue
+//!   pressure (batcher depth / batch service time), restoring full
+//!   precision as load drains.
+//!
+//! The scheduler side lives in
+//! [`coordinator::scheduler`](crate::coordinator::scheduler): truncated
+//! reduction broadcasts only to the first `n` workers of the pool —
+//! valid because ⊎ prefix sums are themselves group elements — and the
+//! anytime mode stops the prefix reduction early once the marginal
+//! term's contribution falls below the batch tolerance (relative to
+//! the leading term). The compute saving comes from the tier budget
+//! (workers past the budget never run); anytime refines *within* the
+//! budget, trimming reduction work and reporting the terms actually
+//! consumed. Per-tier latency/terms/precision-loss observability lives
+//! in [`coordinator::metrics`](crate::coordinator::metrics).
+
+pub mod controller;
+pub mod tier;
+
+pub use controller::{QosConfig, QosSnapshot, TermController};
+pub use tier::{Tier, NUM_TIERS};

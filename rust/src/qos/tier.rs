@@ -1,0 +1,146 @@
+//! Service tiers — the request-facing half of the QoS contract.
+//!
+//! A tier names an accuracy/latency trade-off, not a term count: the
+//! [`TermController`](super::TermController) translates each tier's
+//! tolerance into a basis-term budget using §5.3 convergence data, and
+//! may lower the budget further under load. Because the expansion is a
+//! *series*, every prefix of the basis pool is itself a valid model —
+//! tiers select how far along the series a request rides.
+
+/// Number of tiers (array sizing for per-tier metrics/budgets).
+pub const NUM_TIERS: usize = 4;
+
+/// Per-request service tier, ordered strictest → loosest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// Full series: every basis term, never degraded by the controller.
+    #[default]
+    Exact = 0,
+    /// Reconstruction within the paper's 1e-4 auto-stop tolerance (§5.3).
+    Balanced = 1,
+    /// Coarse reconstruction (1e-2 tolerance) tuned for tail latency.
+    Throughput = 2,
+    /// Whatever precision the current load affords; degraded first.
+    BestEffort = 3,
+}
+
+impl Tier {
+    /// All tiers in wire order.
+    pub const ALL: [Tier; NUM_TIERS] =
+        [Tier::Exact, Tier::Balanced, Tier::Throughput, Tier::BestEffort];
+
+    /// Wire encoding (the TCP protocol's tier field).
+    pub fn as_u32(self) -> u32 {
+        self as u32
+    }
+
+    /// Decode the wire value; `None` for unknown tiers (protocol error).
+    pub fn from_u32(v: u32) -> Option<Tier> {
+        Tier::ALL.get(v as usize).copied()
+    }
+
+    /// Index into per-tier arrays (budgets, metrics).
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Max-residual tolerance defining the tier's base budget; `None`
+    /// means "all terms" (Exact is a tolerance-free contract).
+    pub fn tolerance(self) -> Option<f32> {
+        match self {
+            Tier::Exact => None,
+            Tier::Balanced => Some(1e-4),
+            Tier::Throughput => Some(1e-2),
+            Tier::BestEffort => Some(1e-1),
+        }
+    }
+
+    /// Minimum term count the controller may degrade this tier to.
+    /// Exact is immune (floor = total); looser tiers bottom out earlier.
+    pub fn floor_terms(self, total: usize) -> usize {
+        match self {
+            Tier::Exact => total,
+            Tier::Balanced => (total / 4).max(1),
+            Tier::Throughput => 1,
+            Tier::BestEffort => 1,
+        }
+    }
+
+    /// Uncalibrated default budget (used before a monitor calibration).
+    pub fn default_budget(self, total: usize) -> usize {
+        match self {
+            Tier::Exact => total,
+            Tier::Balanced => total.div_ceil(2).max(1),
+            Tier::Throughput => total.div_ceil(4).max(1),
+            Tier::BestEffort => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Exact => "exact",
+            Tier::Balanced => "balanced",
+            Tier::Throughput => "throughput",
+            Tier::BestEffort => "best-effort",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" => Some(Tier::Exact),
+            "balanced" => Some(Tier::Balanced),
+            "throughput" => Some(Tier::Throughput),
+            "best-effort" | "besteffort" | "best_effort" => Some(Tier::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip() {
+        for t in Tier::ALL {
+            assert_eq!(Tier::from_u32(t.as_u32()), Some(t));
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::from_u32(17), None);
+        assert_eq!(Tier::parse("platinum"), None);
+    }
+
+    #[test]
+    fn ordering_strictest_first() {
+        assert!(Tier::Exact < Tier::Balanced);
+        assert!(Tier::Balanced < Tier::Throughput);
+        assert!(Tier::Throughput < Tier::BestEffort);
+    }
+
+    #[test]
+    fn tolerances_loosen_down_the_ladder() {
+        let tols: Vec<f32> = Tier::ALL.iter().filter_map(|t| t.tolerance()).collect();
+        assert!(tols.windows(2).all(|w| w[0] < w[1]), "{tols:?}");
+        assert_eq!(Tier::Exact.tolerance(), None);
+    }
+
+    #[test]
+    fn budgets_and_floors_monotone_in_tier() {
+        for total in [1usize, 2, 4, 8, 16] {
+            let budgets: Vec<usize> =
+                Tier::ALL.iter().map(|t| t.default_budget(total)).collect();
+            assert!(budgets.windows(2).all(|w| w[1] <= w[0]), "{budgets:?}");
+            for t in Tier::ALL {
+                assert!((1..=total).contains(&t.floor_terms(total)));
+            }
+            assert_eq!(Tier::Exact.floor_terms(total), total);
+        }
+    }
+}

@@ -1,14 +1,25 @@
 //! Trace-driven load generator: replays a [`RequestTrace`] against the
 //! in-process coordinator and reports latency/throughput — the harness
-//! behind the §5.2 serving-speed claims.
+//! behind the §5.2 serving-speed claims. Supports mixed-tier traffic
+//! (weighted tier draw per request) with per-tier latency reporting,
+//! the workload shape the QoS benches sweep.
 
 use crate::coordinator::Coordinator;
 use crate::datasets::trace::RequestTrace;
+use crate::qos::Tier;
 use crate::tensor::{Rng, Tensor};
 use crate::util::stats::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Per-tier slice of a load-test outcome.
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    pub tier: Tier,
+    pub completed: usize,
+    pub latency: Summary,
+}
 
 /// Load-test outcome.
 #[derive(Debug, Clone)]
@@ -16,19 +27,24 @@ pub struct LoadReport {
     pub offered: usize,
     pub completed: usize,
     pub shed: usize,
+    /// accepted requests answered with an explicit error reply
+    pub failed: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
     pub latency: Summary,
+    /// per-tier breakdown (only tiers that appeared in the mix)
+    pub per_tier: Vec<TierReport>,
 }
 
 impl std::fmt::Display for LoadReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "offered {} completed {} shed {} wall {:.2}s thpt {:.1} rps p50 {:.2}ms p99 {:.2}ms",
+            "offered {} completed {} shed {} failed {} wall {:.2}s thpt {:.1} rps p50 {:.2}ms p99 {:.2}ms",
             self.offered,
             self.completed,
             self.shed,
+            self.failed,
             self.wall_s,
             self.throughput_rps,
             self.latency.p50 * 1e3,
@@ -37,9 +53,8 @@ impl std::fmt::Display for LoadReport {
     }
 }
 
-/// Replay `trace` for `duration_s` seconds against `coord`, generating
-/// feature vectors of width `din`. Arrival times are honored by sleeping
-/// to each event's offset (compressed by `time_scale` for fast benches).
+/// Replay `trace` for `duration_s` seconds against `coord` at
+/// [`Tier::Exact`] (the pre-QoS behavior).
 pub fn run_trace(
     coord: &Arc<Coordinator>,
     trace: &RequestTrace,
@@ -47,10 +62,28 @@ pub fn run_trace(
     din: usize,
     time_scale: f64,
 ) -> LoadReport {
+    run_trace_mix(coord, trace, duration_s, din, time_scale, &[(Tier::Exact, 1.0)])
+}
+
+/// Replay `trace` with each request's tier drawn from the weighted
+/// `mix`. Arrival times are honored by sleeping to each event's offset
+/// (compressed by `time_scale` for fast benches).
+pub fn run_trace_mix(
+    coord: &Arc<Coordinator>,
+    trace: &RequestTrace,
+    duration_s: f64,
+    din: usize,
+    time_scale: f64,
+    mix: &[(Tier, f64)],
+) -> LoadReport {
+    assert!(!mix.is_empty(), "tier mix must name at least one tier");
+    let total_w: f64 = mix.iter().map(|(_, w)| w.max(0.0)).sum();
+    assert!(total_w > 0.0, "tier mix weights must sum > 0");
     let events = trace.generate(duration_s);
     let offered = events.len();
     let shed = Arc::new(AtomicU64::new(0));
-    let latencies = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let failed = Arc::new(AtomicU64::new(0));
+    let latencies = Arc::new(std::sync::Mutex::new(Vec::<(Tier, f64)>::new()));
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut rng = Rng::seed(0xBEE);
@@ -60,14 +93,32 @@ pub fn run_trace(
         if target > elapsed {
             std::thread::sleep(target - elapsed);
         }
+        // weighted tier draw
+        let mut pick = rng.f32() as f64 * total_w;
+        let mut tier = mix[mix.len() - 1].0;
+        for &(t, w) in mix {
+            let w = w.max(0.0);
+            if pick < w {
+                tier = t;
+                break;
+            }
+            pick -= w;
+        }
         let x = Tensor::randn(&[ev.batch, din], 1.0, &mut rng);
-        match coord.submit(x) {
+        match coord.submit_tier(x, tier) {
             Ok(rx) => {
                 let latencies = latencies.clone();
+                let failed = failed.clone();
                 let sent = Instant::now();
-                pending.push(std::thread::spawn(move || {
-                    if let Ok(_resp) = rx.recv() {
-                        latencies.lock().unwrap().push(sent.elapsed().as_secs_f64());
+                pending.push(std::thread::spawn(move || match rx.recv() {
+                    Ok(resp) if resp.error.is_none() => {
+                        latencies
+                            .lock()
+                            .unwrap()
+                            .push((tier, sent.elapsed().as_secs_f64()));
+                    }
+                    Ok(_) | Err(_) => {
+                        failed.fetch_add(1, Ordering::Relaxed);
                     }
                 }));
             }
@@ -81,13 +132,25 @@ pub fn run_trace(
     }
     let wall = t0.elapsed().as_secs_f64();
     let lats = latencies.lock().unwrap().clone();
+    let all: Vec<f64> = lats.iter().map(|&(_, l)| l).collect();
+    let per_tier = mix
+        .iter()
+        .map(|&(t, _)| t)
+        .map(|tier| {
+            let tl: Vec<f64> =
+                lats.iter().filter(|&&(t, _)| t == tier).map(|&(_, l)| l).collect();
+            TierReport { tier, completed: tl.len(), latency: Summary::of(&tl) }
+        })
+        .collect();
     LoadReport {
         offered,
-        completed: lats.len(),
+        completed: all.len(),
         shed: shed.load(Ordering::Relaxed) as usize,
+        failed: failed.load(Ordering::Relaxed) as usize,
         wall_s: wall,
-        throughput_rps: lats.len() as f64 / wall.max(1e-9),
-        latency: Summary::of(&lats),
+        throughput_rps: all.len() as f64 / wall.max(1e-9),
+        latency: Summary::of(&all),
+        per_tier,
     }
 }
 
@@ -105,18 +168,42 @@ mod tests {
         }
     }
 
-    #[test]
-    fn trace_replay_completes_requests() {
+    fn fast_coordinator() -> Arc<Coordinator> {
         let pool = WorkerPool::new(2, Arc::new(|_| Box::new(Fast) as Box<dyn BasisWorker>));
-        let coord = Arc::new(Coordinator::new(
+        Arc::new(Coordinator::new(
             BatcherConfig { max_batch: 16, max_wait_us: 300, queue_cap: 128 },
             ExpansionScheduler::new(pool),
-        ));
+        ))
+    }
+
+    #[test]
+    fn trace_replay_completes_requests() {
+        let coord = fast_coordinator();
         let trace = RequestTrace::new(200.0, 5);
         let report = run_trace(&coord, &trace, 0.5, 8, 0.2);
         assert!(report.offered > 20, "trace too small: {}", report.offered);
-        assert_eq!(report.completed + report.shed, report.offered);
+        assert_eq!(report.completed + report.shed + report.failed, report.offered);
         assert!(report.completed > 0);
         assert!(report.latency.p50 >= 0.0);
+        // single-tier mix: the per-tier slice covers everything
+        assert_eq!(report.per_tier.len(), 1);
+        assert_eq!(report.per_tier[0].tier, Tier::Exact);
+        assert_eq!(report.per_tier[0].completed, report.completed);
+    }
+
+    #[test]
+    fn mixed_tiers_split_the_traffic() {
+        let coord = fast_coordinator();
+        let trace = RequestTrace::new(300.0, 6);
+        let mix = [(Tier::Exact, 0.5), (Tier::BestEffort, 0.5)];
+        let report = run_trace_mix(&coord, &trace, 0.4, 8, 0.2, &mix);
+        assert_eq!(report.per_tier.len(), 2);
+        let by_tier: usize = report.per_tier.iter().map(|t| t.completed).sum();
+        assert_eq!(by_tier, report.completed);
+        // both tiers should see a fair share of a 50/50 draw
+        for t in &report.per_tier {
+            assert!(t.completed > 0, "tier {} starved", t.tier);
+        }
+        assert_eq!(coord.metrics.tier_completed(Tier::Balanced), 0);
     }
 }

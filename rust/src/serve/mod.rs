@@ -1,11 +1,15 @@
 //! Serving front-end: model-backed basis workers (native and PJRT), a
-//! TCP server speaking a small binary protocol, and a trace-driven load
-//! generator for the latency/throughput benches.
+//! TCP server speaking a small binary protocol (with a per-request QoS
+//! tier field), and a trace-driven load generator for the
+//! latency/throughput benches (mixed-tier traffic supported).
 
 pub mod loadgen;
 pub mod server;
 pub mod workers;
 
-pub use loadgen::{run_trace, LoadReport};
-pub use server::{serve_tcp, TcpServerHandle};
-pub use workers::{mlp_basis_factory, MlpWeights, PjrtMlpWorker, QuantModelWorker};
+pub use loadgen::{run_trace, run_trace_mix, LoadReport, TierReport};
+pub use server::{client_infer, client_infer_tier, serve_tcp, TcpServerHandle};
+pub use workers::{
+    mlp_basis_factory, mlp_basis_factory_with, BiasPlacement, MlpWeights, PjrtMlpWorker,
+    QuantModelWorker,
+};

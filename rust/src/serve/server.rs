@@ -1,17 +1,27 @@
 //! TCP front-end speaking a minimal binary protocol:
 //!
-//! request : [u32 n][u32 d][n·d × f32 LE]
-//! response: [u32 n][u32 c][n·c × f32 LE]   (or [0][0] on shed/error)
+//! request : [u32 n][u32 d][u32 tier][n·d × f32 LE]
+//! response: [u32 n][u32 c][n·c × f32 LE]
+//!           [0][0]                       shed / malformed request
+//!           [0][1][u32 len][len × u8]    batch failure (UTF-8 message)
 //!
-//! The server is a thin shim over the in-process [`Coordinator`]; one
-//! OS thread per connection (std only — tokio is unavailable offline).
+//! `tier` is the QoS service tier ([`Tier`] wire encoding): it selects
+//! how many basis terms of the series the coordinator reduces for this
+//! request. The server is a thin shim over the in-process
+//! [`Coordinator`]; one OS thread per connection (std only — tokio is
+//! unavailable offline).
 
 use crate::coordinator::Coordinator;
+use crate::qos::Tier;
 use crate::tensor::Tensor;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Error code in the `[0][code]` response header.
+const CODE_SHED: u32 = 0;
+const CODE_BATCH_FAILED: u32 = 1;
 
 /// Handle to a running TCP server.
 pub struct TcpServerHandle {
@@ -37,6 +47,18 @@ fn read_exact_u32(s: &mut TcpStream) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+fn write_error_frame(stream: &mut TcpStream, code: u32, msg: Option<&str>) -> bool {
+    let mut out = Vec::new();
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&code.to_le_bytes());
+    if let Some(m) = msg {
+        let bytes = m.as_bytes();
+        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(bytes);
+    }
+    stream.write_all(&out).is_ok()
+}
+
 fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
     loop {
         let n = match read_exact_u32(&mut stream) {
@@ -48,10 +70,16 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
             Err(_) => return,
         };
         if n == 0 || d == 0 || n * d > 16 * 1024 * 1024 {
-            let _ = stream.write_all(&0u32.to_le_bytes());
-            let _ = stream.write_all(&0u32.to_le_bytes());
+            let _ = write_error_frame(&mut stream, CODE_SHED, None);
             return;
         }
+        let tier = match read_exact_u32(&mut stream).ok().and_then(Tier::from_u32) {
+            Some(t) => t,
+            None => {
+                let _ = write_error_frame(&mut stream, CODE_SHED, None);
+                return;
+            }
+        };
         let mut buf = vec![0u8; n * d * 4];
         if stream.read_exact(&mut buf).is_err() {
             return;
@@ -61,12 +89,36 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         let x = Tensor::from_vec(&[n, d], data);
-        let reply = match coord.infer(x) {
-            Ok(resp) => resp.logits,
+        let rx = match coord.submit_tier(x, tier) {
+            Ok(rx) => rx,
             Err(e) => {
-                log::warn!("request failed: {e:#}");
-                let _ = stream.write_all(&0u32.to_le_bytes());
-                let _ = stream.write_all(&0u32.to_le_bytes());
+                log::warn!("request shed: {e:?}");
+                if !write_error_frame(&mut stream, CODE_SHED, None) {
+                    return;
+                }
+                continue;
+            }
+        };
+        let reply = match rx.recv() {
+            Ok(resp) => match resp.error {
+                None => resp.logits,
+                Some(msg) => {
+                    log::warn!("request failed: {msg}");
+                    if !write_error_frame(&mut stream, CODE_BATCH_FAILED, Some(&msg)) {
+                        return;
+                    }
+                    continue;
+                }
+            },
+            Err(_) => {
+                // batcher died mid-request; tell the client explicitly
+                if !write_error_frame(
+                    &mut stream,
+                    CODE_BATCH_FAILED,
+                    Some("coordinator stopped"),
+                ) {
+                    return;
+                }
                 continue;
             }
         };
@@ -109,20 +161,39 @@ pub fn serve_tcp(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<TcpServe
     Ok(TcpServerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
 }
 
-/// Blocking client call against a running server (used by tests/loadgen).
+/// Blocking client call at [`Tier::Exact`] (used by tests/loadgen).
 pub fn client_infer(addr: std::net::SocketAddr, x: &Tensor) -> anyhow::Result<Tensor> {
+    client_infer_tier(addr, x, Tier::Exact)
+}
+
+/// Blocking client call at an explicit service tier.
+pub fn client_infer_tier(
+    addr: std::net::SocketAddr,
+    x: &Tensor,
+    tier: Tier,
+) -> anyhow::Result<Tensor> {
     let mut s = TcpStream::connect(addr)?;
     let (n, d) = (x.dims()[0] as u32, x.dims()[1] as u32);
-    let mut msg = Vec::with_capacity(8 + x.numel() * 4);
+    let mut msg = Vec::with_capacity(12 + x.numel() * 4);
     msg.extend_from_slice(&n.to_le_bytes());
     msg.extend_from_slice(&d.to_le_bytes());
+    msg.extend_from_slice(&tier.as_u32().to_le_bytes());
     for &v in x.data() {
         msg.extend_from_slice(&v.to_le_bytes());
     }
     s.write_all(&msg)?;
     let rn = read_exact_u32(&mut s)? as usize;
     let rc = read_exact_u32(&mut s)? as usize;
-    anyhow::ensure!(rn > 0 && rc > 0, "server shed the request");
+    if rn == 0 {
+        if rc as u32 == CODE_BATCH_FAILED {
+            let len = read_exact_u32(&mut s)? as usize;
+            let mut buf = vec![0u8; len.min(4096)];
+            s.read_exact(&mut buf)?;
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&buf));
+        }
+        anyhow::bail!("server shed the request");
+    }
+    anyhow::ensure!(rc > 0, "empty response frame");
     let mut buf = vec![0u8; rn * rc * 4];
     s.read_exact(&mut buf)?;
     let data: Vec<f32> = buf
@@ -171,6 +242,20 @@ mod tests {
     }
 
     #[test]
+    fn tiered_requests_roundtrip() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+        let mut rng = Rng::seed(62);
+        for tier in Tier::ALL {
+            let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+            let y = client_infer_tier(handle.addr, &x, tier).unwrap();
+            assert_eq!(y.dims(), &[2, 4]);
+            assert_eq!(coord.metrics.tier_completed(tier), 1, "{tier}");
+        }
+        handle.stop();
+    }
+
+    #[test]
     fn multiple_clients_concurrently() {
         let coord = tiny_coordinator();
         let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
@@ -204,6 +289,42 @@ mod tests {
         let mut reply = [0u8; 8];
         s.read_exact(&mut reply).unwrap();
         assert_eq!(reply, [0u8; 8]);
+        handle.stop();
+    }
+
+    #[test]
+    fn unknown_tier_rejected() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        s.write_all(&1u32.to_le_bytes()).unwrap();
+        s.write_all(&1u32.to_le_bytes()).unwrap();
+        s.write_all(&99u32.to_le_bytes()).unwrap(); // no such tier
+        let mut reply = [0u8; 8];
+        s.read_exact(&mut reply).unwrap();
+        assert_eq!(reply, [0u8; 8]);
+        handle.stop();
+    }
+
+    #[test]
+    fn batch_failure_returns_error_frame() {
+        struct Failing;
+        impl BasisWorker for Failing {
+            fn run(&mut self, _x: &Tensor) -> anyhow::Result<Tensor> {
+                anyhow::bail!("boom")
+            }
+        }
+        let pool =
+            WorkerPool::new(1, Arc::new(|_| Box::new(Failing) as Box<dyn BasisWorker>));
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig { max_batch: 4, max_wait_us: 100, queue_cap: 16 },
+            ExpansionScheduler::new(pool),
+        ));
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let x = Tensor::zeros(&[1, 2]);
+        let err = client_infer(handle.addr, &x).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom"), "error frame must carry the cause: {msg}");
         handle.stop();
     }
 }

@@ -81,18 +81,49 @@ impl BasisWorker for MlpBasisSlice {
     }
 }
 
+/// Where the FP biases live across the basis slices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BiasPlacement {
+    /// The paper's replication policy: every slice carries `b/terms`,
+    /// so only the *full* reduction recovers the exact bias mass.
+    #[default]
+    Split,
+    /// The whole bias rides slice 0; later slices carry zero bias. Any
+    /// ⊎ prefix then carries the exact bias mass — the layout QoS
+    /// truncation wants. At full reduction the two placements agree up
+    /// to the nonlinearity-interchange error (both sum to the same
+    /// bias), but under truncation `Split` loses `(t−n)/t` of the bias
+    /// while `FirstTerm` loses none.
+    FirstTerm,
+}
+
 /// Build the Theorem-2 worker factory: `terms` basis slices, slice `i`
 /// carrying term `i` of both layers' expansions.
 pub fn mlp_basis_factory(weights: &MlpWeights, bits: u32, terms: usize) -> WorkerFactory {
+    mlp_basis_factory_with(weights, bits, terms, BiasPlacement::Split)
+}
+
+/// [`mlp_basis_factory`] with an explicit bias placement.
+pub fn mlp_basis_factory_with(
+    weights: &MlpWeights,
+    bits: u32,
+    terms: usize,
+    bias: BiasPlacement,
+) -> WorkerFactory {
     let cfg = ExpandConfig::symmetric(BitSpec::int(bits), terms);
     let e1 = SeriesExpansion::expand(&weights.w1, &cfg);
     let e2 = SeriesExpansion::expand(&weights.w2, &cfg);
+    let bias_for = |b: &Tensor, i: usize| match bias {
+        BiasPlacement::Split => b.scale(1.0 / terms as f32),
+        BiasPlacement::FirstTerm if i == 0 => b.clone(),
+        BiasPlacement::FirstTerm => b.scale(0.0),
+    };
     let slices: Vec<MlpBasisSlice> = (0..terms)
         .map(|i| MlpBasisSlice {
             w1_term: e1.term_tensor(i),
             w2_term: e2.term_tensor(i),
-            b1_frac: weights.b1.scale(1.0 / terms as f32),
-            b2_frac: weights.b2.scale(1.0 / terms as f32),
+            b1_frac: bias_for(&weights.b1, i),
+            b2_frac: bias_for(&weights.b2, i),
             act_bits: bits,
         })
         .collect();
@@ -287,6 +318,36 @@ mod tests {
         }
         assert_eq!(coord.metrics.completed(), 4);
         coord.shutdown();
+    }
+
+    #[test]
+    fn first_term_bias_placement_survives_truncation() {
+        // bias-dominated MLP: truncating Split slices loses bias mass,
+        // FirstTerm keeps it — the 1-term prefix must track FP better
+        let mut rng = Rng::seed(57);
+        let w = MlpWeights {
+            w1: Tensor::randn(&[16, 32], 0.05, &mut rng),
+            b1: Tensor::randn(&[16], 1.0, &mut rng),
+            w2: Tensor::randn(&[10, 16], 0.05, &mut rng),
+            b2: Tensor::randn(&[10], 1.0, &mut rng),
+        };
+        let terms = 4;
+        let x = Tensor::randn(&[6, 32], 1.0, &mut rng);
+        let fp = fp_forward(&w, &x);
+        let err_for = |placement| {
+            let pool = WorkerPool::new(
+                terms,
+                mlp_basis_factory_with(&w, 8, terms, placement),
+            );
+            let sched = ExpansionScheduler::new(pool);
+            let y = sched.forward_truncated(x.clone(), 1).unwrap();
+            let rel = fp.sub(&y).norm() / fp.norm();
+            sched.shutdown();
+            rel
+        };
+        let split = err_for(BiasPlacement::Split);
+        let first = err_for(BiasPlacement::FirstTerm);
+        assert!(first < split, "first-term {first} !< split {split}");
     }
 
     #[test]

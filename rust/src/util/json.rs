@@ -1,5 +1,6 @@
-//! Minimal JSON parser (serde is unavailable offline) — enough for the
-//! AOT `manifest.json` and the serve protocol: objects, arrays, strings,
+//! Minimal JSON parser + writer (serde is unavailable offline) — enough
+//! for the AOT `manifest.json`, the serve protocol, and the
+//! `BENCH_*.json` perf-trajectory files: objects, arrays, strings,
 //! numbers, bools, null; no exotic escapes beyond \" \\ \/ \n \t \r \u.
 
 use std::collections::BTreeMap;
@@ -65,6 +66,81 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Build an object from (key, value) pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Number value (NaN/∞ have no JSON spelling; they serialize as null).
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn str(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Serialize to compact JSON text. `parse(render(j)) == j` for all
+    /// finite values.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -268,5 +344,27 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let j = Json::obj([
+            ("name", Json::str("qos \"bench\"\n")),
+            ("p99_ms", Json::num(1.25)),
+            ("n", Json::num(400.0)),
+            ("tiers", Json::Arr(vec![Json::str("exact"), Json::str("best-effort")])),
+            ("flag", Json::Bool(true)),
+            ("none", Json::Null),
+        ]);
+        let text = j.render();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        // integers render without a trailing fraction
+        assert!(text.contains("\"n\":400"), "{text}");
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::num(f64::INFINITY).render(), "null");
     }
 }

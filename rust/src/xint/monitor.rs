@@ -19,13 +19,21 @@ impl ExpansionMonitor {
     }
 
     /// Observe one tensor under `cfg` for 1..=cfg.terms truncations.
+    ///
+    /// Each truncation's reconstruction is built incrementally from the
+    /// previous prefix (`recon_t = recon_{t-1} + scale_t·M̃_t`), so one
+    /// observation costs O(terms·numel) instead of the naive
+    /// O(terms²·numel) of re-reconstructing every prefix from scratch.
     pub fn observe(&mut self, x: &Tensor, cfg: &ExpandConfig) {
         let e = SeriesExpansion::expand(x, cfg);
         if self.max_diff.len() < cfg.terms {
             self.max_diff.resize(cfg.terms, 0.0);
         }
+        // term count 0 = bias + sparse saturation residual only
+        let mut recon = e.reconstruct_terms(0);
         for t in 1..=cfg.terms {
-            let diff = x.sub(&e.reconstruct_terms(t)).max_abs();
+            recon.axpy(1.0, &e.term_tensor(t - 1));
+            let diff = x.sub(&recon).max_abs();
             self.max_diff[t - 1] = self.max_diff[t - 1].max(diff);
         }
         self.samples += 1;
@@ -40,6 +48,15 @@ impl ExpansionMonitor {
     /// The (terms, max_diff) series — Figure 4b's blue line.
     pub fn series(&self) -> Vec<(usize, f32)> {
         self.max_diff.iter().enumerate().map(|(i, &d)| (i + 1, d)).collect()
+    }
+
+    /// Observed max-residual at a given truncation (`None` outside the
+    /// observed range) — the QoS controller's estimated precision loss.
+    pub fn max_diff_at(&self, terms: usize) -> Option<f32> {
+        if terms == 0 {
+            return None;
+        }
+        self.max_diff.get(terms - 1).copied()
     }
 }
 
@@ -78,6 +95,26 @@ mod tests {
         if let Some(n9) = mon.optimal_terms(1e-6) {
             assert!(n9 >= n);
         }
+    }
+
+    #[test]
+    fn incremental_observe_matches_full_reconstruction() {
+        let mut rng = Rng::seed(54);
+        let x = Tensor::randn(&[24, 8], 1.0, &mut rng);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 5);
+        let mut mon = ExpansionMonitor::new();
+        mon.observe(&x, &cfg);
+        let e = SeriesExpansion::expand(&x, &cfg);
+        for t in 1..=5 {
+            let full = x.sub(&e.reconstruct_terms(t)).max_abs();
+            let inc = mon.max_diff_at(t).unwrap();
+            assert!(
+                (full - inc).abs() <= 1e-6 * (1.0 + full.abs()),
+                "t {t}: incremental {inc} vs full {full}"
+            );
+        }
+        assert_eq!(mon.max_diff_at(0), None);
+        assert_eq!(mon.max_diff_at(9), None);
     }
 
     #[test]

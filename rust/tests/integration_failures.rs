@@ -45,10 +45,18 @@ fn failing_batches_are_reported_not_hung() {
     let mut failed = 0;
     for _ in 0..10 {
         let rx = coord.submit(Tensor::zeros(&[1, 4])).unwrap();
-        // a failed batch drops the reply sender → RecvError, no hang
+        // a failed batch sends an explicit error reply — never a hang,
+        // never a silently dropped channel
         match rx.recv_timeout(std::time::Duration::from_secs(10)) {
-            Ok(_) => ok += 1,
-            Err(_) => failed += 1,
+            Ok(resp) if resp.error.is_none() => ok += 1,
+            Ok(resp) => {
+                assert!(
+                    resp.error.unwrap().contains("injected failure"),
+                    "error reply must carry the cause"
+                );
+                failed += 1;
+            }
+            Err(e) => panic!("reply channel must not drop: {e:?}"),
         }
     }
     assert!(ok > 0, "some requests must succeed");

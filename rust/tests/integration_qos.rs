@@ -1,0 +1,215 @@
+//! Integration + property tests for the QoS control plane: the Abelian
+//! prefix-truncation algebra (⊎ prefix sums are valid group elements,
+//! order-invariant), monotone precision in the term budget, and the
+//! end-to-end degrade-instead-of-shed behavior.
+
+use fp_xint::coordinator::{
+    BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
+};
+use fp_xint::qos::{QosConfig, TermController, Tier};
+use fp_xint::serve::server::{client_infer_tier, serve_tcp};
+use fp_xint::serve::workers::{mlp_basis_factory_with, BiasPlacement, MlpWeights};
+use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::util::prop::{forall, no_shrink, PropConfig};
+use fp_xint::xint::abelian::abelian_reduce;
+use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor, SeriesExpansion};
+use std::sync::Arc;
+
+fn close(a: &Tensor, b: &Tensor, tol: f32) -> Result<(), String> {
+    if a.dims() != b.dims() {
+        return Err(format!("dims {:?} vs {:?}", a.dims(), b.dims()));
+    }
+    for (x, y) in a.data().iter().zip(b.data()) {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("{x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn property_prefix_reduction_matches_sequential_sum_any_order() {
+    // ⊎ over any prefix of the gained basis outputs, in any order,
+    // equals the sequential left-fold — the algebra the scheduler's
+    // truncated broadcast relies on
+    forall(
+        PropConfig { cases: 30, seed: 0xA11CE, max_shrink: 0 },
+        |r| {
+            let k = 2 + r.below(6);
+            let rows = 1 + r.below(4);
+            let cols = 1 + r.below(6);
+            let mut rng = r.fork(3);
+            let outs: Vec<Tensor> =
+                (0..k).map(|_| Tensor::randn(&[rows, cols], 1.0, &mut rng)).collect();
+            let prefix = 1 + rng.below(k);
+            (outs, prefix, rng.next_u64())
+        },
+        no_shrink,
+        |(outs, prefix, perm_seed)| {
+            let head: Vec<Tensor> = outs[..*prefix].to_vec();
+            // sequential left fold
+            let mut seq = Tensor::zeros(head[0].dims());
+            for o in &head {
+                seq = seq.add(o);
+            }
+            let tree = abelian_reduce(head.clone()).expect("nonempty");
+            close(&tree, &seq, 1e-5)?;
+            // any reordering of the prefix reduces to the same element
+            let mut shuffled = head;
+            Rng::seed(*perm_seed).shuffle(&mut shuffled);
+            let permuted = abelian_reduce(shuffled).expect("nonempty");
+            close(&permuted, &seq, 1e-5)
+        },
+    );
+}
+
+#[test]
+fn property_more_terms_no_worse_max_residual() {
+    // tier budgets degrade monotonically: a larger term budget can
+    // never reconstruct worse (up to f32 rounding noise)
+    forall(
+        PropConfig { cases: 30, seed: 0xB0B, max_shrink: 0 },
+        |r| {
+            let rows = 1 + r.below(8);
+            let cols = 1 + r.below(24);
+            let bits = [2u32, 3, 4, 8][r.below(4)];
+            let terms = 2 + r.below(5);
+            let scale = 10f32.powi(r.below(4) as i32 - 1);
+            let mut rng = r.fork(7);
+            (Tensor::randn(&[rows, cols], scale, &mut rng), bits, terms)
+        },
+        no_shrink,
+        |(m, bits, terms)| {
+            let cfg = ExpandConfig::symmetric(BitSpec::int(*bits), *terms);
+            let e = SeriesExpansion::expand(m, &cfg);
+            let mut prev = f32::INFINITY;
+            for t in 1..=*terms {
+                let resid = m.sub(&e.reconstruct_terms(t)).max_abs();
+                let slack = 1e-6 * (1.0 + m.max_abs());
+                if resid > prev + slack {
+                    return Err(format!("terms {t}: residual {resid} > {prev}"));
+                }
+                prev = resid;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn monitor_calibrated_budgets_are_monotone_across_tiers() {
+    let mut mon = ExpansionMonitor::new();
+    let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
+    let mut rng = Rng::seed(0xCAFE);
+    for _ in 0..3 {
+        mon.observe(&Tensor::randn(&[16, 64], 1.0, &mut rng), &cfg);
+    }
+    let ctl = TermController::new(QosConfig::new(8));
+    ctl.calibrate(&mon);
+    let budgets: Vec<usize> = Tier::ALL.iter().map(|&t| ctl.budget_for(t)).collect();
+    assert!(budgets.windows(2).all(|w| w[1] <= w[0]), "{budgets:?}");
+    // and the monitor's loss estimate at each budget honors the tolerance
+    for tier in [Tier::Balanced, Tier::Throughput, Tier::BestEffort] {
+        let b = ctl.budget_for(tier);
+        if let (Some(loss), Some(tol)) = (mon.max_diff_at(b), tier.tolerance()) {
+            // either within tolerance or already at the full series
+            assert!(loss < tol || b == 8, "{tier}: loss {loss} tol {tol} budget {b}");
+        }
+    }
+}
+
+struct Sleepy(std::time::Duration);
+impl BasisWorker for Sleepy {
+    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        std::thread::sleep(self.0);
+        Ok(x.clone())
+    }
+}
+
+#[test]
+fn pressure_degrades_then_restores_under_load() {
+    // slow workers + burst traffic: the controller must pick up queue
+    // pressure, serve BestEffort with fewer terms, and restore later
+    let terms = 4;
+    // low watermark threshold so the burst reliably crosses it even if
+    // the batcher drains a request or two while we are still submitting
+    let mut qcfg = QosConfig::new(terms);
+    qcfg.high_watermark = 0.5;
+    let ctl = Arc::new(TermController::new(qcfg));
+    let pool = WorkerPool::new(
+        terms,
+        Arc::new(|_| {
+            Box::new(Sleepy(std::time::Duration::from_millis(5))) as Box<dyn BasisWorker>
+        }),
+    );
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig { max_batch: 1, max_wait_us: 100, queue_cap: 16 },
+        ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+    ));
+    // burst: fill most of the queue, then watch pressure rise
+    let mut rxs = Vec::new();
+    for _ in 0..15 {
+        if let Ok(rx) = coord.submit_tier(Tensor::zeros(&[1, 2]), Tier::BestEffort) {
+            rxs.push(rx);
+        }
+    }
+    let mut terms_seen = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap();
+        assert!(resp.error.is_none());
+        terms_seen.push(resp.terms);
+    }
+    assert!(ctl.snapshot().degrade_events > 0, "pressure never rose");
+    assert!(
+        terms_seen.iter().any(|&t| t < terms),
+        "no degraded service under pressure: {terms_seen:?}"
+    );
+    // drain: light traffic at empty queue lowers pressure back to zero
+    for _ in 0..20 {
+        let _ = coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::BestEffort);
+    }
+    assert_eq!(ctl.pressure(), 0, "pressure must fall once the queue drains");
+    coord.shutdown();
+}
+
+#[test]
+fn tcp_mixed_tiers_end_to_end() {
+    let mut rng = Rng::seed(0xD00D);
+    let w = MlpWeights {
+        w1: Tensor::randn(&[32, 16], 0.3, &mut rng),
+        b1: Tensor::randn(&[32], 0.1, &mut rng),
+        w2: Tensor::randn(&[4, 32], 0.3, &mut rng),
+        b2: Tensor::randn(&[4], 0.1, &mut rng),
+    };
+    let terms = 4;
+    let mut mon = ExpansionMonitor::new();
+    let ecfg = ExpandConfig::symmetric(BitSpec::int(4), terms);
+    for _ in 0..3 {
+        mon.observe(&Tensor::randn(&[8, 16], 1.0, &mut rng), &ecfg);
+    }
+    let ctl = Arc::new(TermController::new(QosConfig::new(terms)));
+    ctl.calibrate(&mon);
+    let pool =
+        WorkerPool::new(terms, mlp_basis_factory_with(&w, 4, terms, BiasPlacement::FirstTerm));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig { max_batch: 8, max_wait_us: 300, queue_cap: 64 },
+        ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+    ));
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+    for tier in Tier::ALL {
+        for _ in 0..3 {
+            let x = Tensor::randn(&[2, 16], 1.0, &mut rng);
+            let y = client_infer_tier(handle.addr, &x, tier).unwrap();
+            assert_eq!(y.dims(), &[2, 4]);
+            assert!(y.data().iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(coord.metrics.tier_completed(tier), 3, "{tier}");
+    }
+    // tier budgets actually shaped the service (no pressure involved)
+    let exact_terms = coord.metrics.tier_mean_terms(Tier::Exact);
+    let be_terms = coord.metrics.tier_mean_terms(Tier::BestEffort);
+    assert!((exact_terms - terms as f64).abs() < 1e-9, "exact got {exact_terms}");
+    assert!(be_terms <= exact_terms, "{be_terms} > {exact_terms}");
+    assert_eq!(coord.metrics.failed(), 0);
+    handle.stop();
+}

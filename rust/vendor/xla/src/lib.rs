@@ -1,0 +1,178 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The container this repo grows in has no XLA install, so the real
+//! bindings cannot link. This stub exposes the exact API surface
+//! `fp_xint::runtime` uses:
+//!
+//! * [`Literal`] is fully functional (host-side f32 arrays): create,
+//!   reshape, read back — the marshalling layer round-trips for real.
+//! * HLO parsing / compilation / execution ([`HloModuleProto`],
+//!   [`PjRtClient::compile`], [`PjRtLoadedExecutable::execute`]) return
+//!   a descriptive [`Error`] — callers degrade exactly as they would on
+//!   a host with a broken accelerator runtime.
+//!
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for the real
+//! crate to execute the AOT artifacts; no fp_xint source changes needed.
+
+use std::path::Path;
+
+/// Stub error: carries the operation that is unavailable offline.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(op: &str) -> Error {
+        Error(format!("{op} unavailable: offline xla stub (no PJRT/XLA install)"))
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Dense host-side f32 array with a shape — functional in the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    /// Reshape to `dims`; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Read the elements back; the stub stores f32 only.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from(v)).collect())
+    }
+
+    /// Decompose a tuple literal — never constructed by the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("tuple literals"))
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module — parsing is unavailable offline.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "parse {:?} unavailable: offline xla stub (no HLO parser)",
+            path.as_ref()
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer handle — never produced by the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("buffer readback"))
+    }
+}
+
+/// Compiled executable — never produced by the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execution"))
+    }
+}
+
+/// PJRT client. Construction succeeds (so runtimes boot and report a
+/// platform); compilation fails with a descriptive error.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("HLO compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn unavailable_paths_error_cleanly() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto(()));
+        assert!(client.compile(&comp).is_err());
+        assert!(PjRtBuffer(()).to_literal_sync().is_err());
+    }
+}
