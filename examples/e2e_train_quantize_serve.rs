@@ -81,7 +81,7 @@ fn main() {
     };
     let pool = WorkerPool::new(terms, factory);
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 32, max_wait_us: 1_000, queue_cap: 256 },
+        BatcherConfig::uniform(32, 1_000, 256),
         ExpansionScheduler::new(pool),
     ));
 

@@ -64,7 +64,7 @@ fn start_server(
         sched = sched.with_controller(c);
     }
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 16, max_wait_us: 1_000, queue_cap },
+        BatcherConfig::uniform(16, 1_000, queue_cap),
         sched,
     ));
     let handle = serve_tcp("127.0.0.1:0", coord.clone()).expect("bind");
@@ -230,6 +230,13 @@ fn main() {
         &format!("{:.2}", qos_coord.metrics.tier_mean_terms(Tier::BestEffort)),
     ]);
     t2.print();
+    for tier in [Tier::Balanced, Tier::Throughput, Tier::BestEffort] {
+        println!(
+            "  per-tier admission — {tier}: seed shed {}, qos shed {}",
+            seed_coord.tier_shed(tier),
+            qos_coord.tier_shed(tier)
+        );
+    }
     println!(
         "controller after spike: pressure {} (degrade events {}, restore events {})",
         peak_pressure.pressure, peak_pressure.degrade_events, peak_pressure.restore_events

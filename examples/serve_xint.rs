@@ -51,7 +51,7 @@ fn main() {
     {
         let pool = WorkerPool::new(terms, mlp_basis_factory(&weights, 4, terms));
         let coord = Arc::new(Coordinator::new(
-            BatcherConfig { max_batch, max_wait_us, queue_cap: 512 },
+            BatcherConfig::uniform(max_batch, max_wait_us, 512),
             ExpansionScheduler::new(pool),
         ));
         let trace = RequestTrace::new(200.0, 77);
@@ -70,7 +70,7 @@ fn main() {
     // latency histogram for the balanced setting
     let pool = WorkerPool::new(terms, mlp_basis_factory(&weights, 4, terms));
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 32, max_wait_us: 1_000, queue_cap: 512 },
+        BatcherConfig::uniform(32, 1_000, 512),
         ExpansionScheduler::new(pool),
     ));
     let trace = RequestTrace::new(200.0, 78);

@@ -135,7 +135,7 @@ fn main() {
         for &(mb, mw) in &[(1usize, 50u64), (32, 1_000)] {
             let pool = WorkerPool::new(4, mlp_basis_factory(&w, 4, 4));
             let coord = Arc::new(Coordinator::new(
-                BatcherConfig { max_batch: mb, max_wait_us: mw, queue_cap: 256 },
+                BatcherConfig::uniform(mb, mw, 256),
                 ExpansionScheduler::new(pool),
             ));
             let trace = RequestTrace::new(rate, 87);

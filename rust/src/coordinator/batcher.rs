@@ -1,48 +1,121 @@
-//! Dynamic batcher with bounded-queue backpressure.
+//! Dynamic batcher: one bounded queue per [`Tier`], weighted service.
 //!
-//! Requests accumulate until `max_batch` samples are pending or
-//! `max_wait_us` elapses since the oldest arrival — the standard
-//! serving trade-off (throughput vs tail latency) the perf bench sweeps.
+//! Every tier gets its own bounded FIFO with independent admission
+//! control (per-tier `queue_caps` + shed accounting), and the forming
+//! loop serves the queues by **weighted deficit round-robin**: each
+//! top-up round grants every non-empty tier `Tier::service_weight()`
+//! rows of credit, and a tier serves while its credit covers the rows
+//! it can form, so contended tiers share service rows in proportion to
+//! their weights, an `Exact` head can never sit behind a `Throughput`
+//! burst, and no tier starves (every non-empty queue accrues credit
+//! each round).
 //!
-//! Batches are *tier-grouped*: each formed batch contains only requests
-//! of the head request's [`Tier`], so the scheduler can truncate the
-//! basis reduction per batch without dragging lower tiers through an
-//! Exact-sized broadcast. The head is always taken first (FIFO on the
-//! oldest request), so no tier can starve another. The batcher also
-//! exports its queue depth — the QoS pressure signal the
-//! [`TermController`](crate::qos::TermController) watches.
+//! Within the selected tier, requests accumulate until `max_batch`
+//! sample rows are pending or `max_wait_us` elapses — with the
+//! accumulation window anchored at **selection time**, not at the head
+//! request's arrival. A request stranded while other tiers were served
+//! therefore still gets a full coalescing window once its tier comes up
+//! (the PR 1 single-FIFO batcher inherited the head's possibly-expired
+//! window and collapsed such batches to singletons).
+//!
+//! Batches stay *tier-grouped* (and feature-dim-grouped: a request
+//! whose `din` differs from the head's waits for its own batch rather
+//! than poisoning the concatenation): each formed batch contains one
+//! tier only, so the scheduler can truncate the basis reduction per
+//! batch.
+//! The batcher exports per-tier queue depths — the QoS pressure signal
+//! the [`TermController`](crate::qos::TermController) watches — and
+//! per-tier shed counts that surface as per-tier `CODE_SHED` frames in
+//! the TCP protocol.
 
 use super::{Request, Response};
-use crate::qos::Tier;
+use crate::qos::{Tier, NUM_TIERS};
 use crate::tensor::Tensor;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Tier-selection policy for the forming loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServicePolicy {
+    /// Weighted deficit round-robin over the per-tier queues (the
+    /// production policy; see module docs).
+    #[default]
+    WeightedFair,
+    /// PR 1's single-FIFO order: always serve the tier whose head
+    /// request is oldest, with the accumulation window anchored at that
+    /// head's arrival (reproducing the expired-window head-of-line
+    /// pathology). Kept as a measurable baseline for `perf_qos`.
+    FifoArrival,
+}
 
 /// Batcher tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
-    /// max total samples per formed batch
+    /// max total sample rows per formed batch
     pub max_batch: usize,
-    /// max time the oldest request waits before the batch is flushed
+    /// accumulation window once a tier is selected for service
     pub max_wait_us: u64,
-    /// bounded queue capacity (requests beyond this are shed)
-    pub queue_cap: usize,
+    /// bounded queue capacity per tier, indexed by [`Tier::idx`]
+    /// (requests beyond a tier's cap are shed with that tier's reason)
+    pub queue_caps: [usize; NUM_TIERS],
+    /// deficit round-robin weights (rows of service credit per
+    /// rotation), indexed by [`Tier::idx`]; zero is treated as one
+    pub weights: [u32; NUM_TIERS],
+    /// how the forming loop picks the next tier to serve
+    pub policy: ServicePolicy,
+}
+
+impl BatcherConfig {
+    /// Uniform per-tier caps with the tier ladder's default weights.
+    pub fn uniform(max_batch: usize, max_wait_us: u64, cap_per_tier: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait_us,
+            queue_caps: [cap_per_tier; NUM_TIERS],
+            weights: Tier::service_weights(),
+            policy: ServicePolicy::WeightedFair,
+        }
+    }
+
+    /// Override one tier's queue capacity.
+    pub fn with_queue_cap(mut self, tier: Tier, cap: usize) -> BatcherConfig {
+        self.queue_caps[tier.idx()] = cap;
+        self
+    }
+
+    /// Override one tier's service weight.
+    pub fn with_weight(mut self, tier: Tier, weight: u32) -> BatcherConfig {
+        self.weights[tier.idx()] = weight;
+        self
+    }
+
+    /// Use a different tier-selection policy.
+    pub fn with_policy(mut self, policy: ServicePolicy) -> BatcherConfig {
+        self.policy = policy;
+        self
+    }
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 32, max_wait_us: 2_000, queue_cap: 256 }
+        // 256 PER TIER: caps are per-queue now, so this keeps the
+        // pre-split default headroom (one shared 256-slot queue) for
+        // the common single-tier traffic shape instead of tightening
+        // shed onset 4× for default Exact-only callers
+        BatcherConfig::uniform(32, 2_000, 256)
     }
 }
 
 /// Submission failure modes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// queue full — caller should back off (shed-on-full backpressure)
-    Busy,
+    /// that tier's queue is full — caller should back off (per-tier
+    /// shed-on-full backpressure)
+    Busy(Tier),
     /// batcher stopped
     Closed,
 }
@@ -63,10 +136,10 @@ pub struct FormedBatch {
     /// concatenated samples (Σnᵢ, din)
     pub x: Tensor,
     pub parts: Vec<BatchPart>,
-    /// requests still waiting (channel + pending) at formation time
-    pub queue_depth: usize,
-    /// the batcher's configured queue capacity
-    pub queue_cap: usize,
+    /// per-tier queue depths (requests still waiting) at formation time
+    pub tier_depths: [usize; NUM_TIERS],
+    /// the batcher's configured per-tier queue capacities
+    pub tier_caps: [usize; NUM_TIERS],
 }
 
 impl FormedBatch {
@@ -74,13 +147,170 @@ impl FormedBatch {
     pub fn tier(&self) -> Tier {
         self.parts.first().map(|p| p.tier).unwrap_or_default()
     }
+
+    /// Total requests still queued across all tiers at formation time.
+    pub fn queue_depth(&self) -> usize {
+        self.tier_depths.iter().sum()
+    }
+
+    /// Hottest per-tier occupancy (depth / cap) across the queues —
+    /// the admission-pressure signal fed to the QoS controller.
+    pub fn max_occupancy(&self) -> f64 {
+        self.tier_depths
+            .iter()
+            .zip(&self.tier_caps)
+            .map(|(&d, &c)| d as f64 / c.max(1) as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+type Queue = VecDeque<(Request, Instant)>;
+
+/// The per-tier queues shared between submitters and the forming loop.
+struct TierQueues {
+    q: [Queue; NUM_TIERS],
+    closed: bool,
+}
+
+impl TierQueues {
+    fn total(&self) -> usize {
+        self.q.iter().map(|d| d.len()).sum()
+    }
+
+    fn depths(&self) -> [usize; NUM_TIERS] {
+        std::array::from_fn(|i| self.q[i].len())
+    }
+
+    /// Rows the selected tier could form into its next batch: requests
+    /// in FIFO order sharing the head's feature dim (forming splits on
+    /// a dim mismatch, so rows past one must not trip the size trigger
+    /// early and flush the head as a windowless singleton), stopping
+    /// once `max_batch` is reached.
+    fn formable_rows(&self, tier: Tier, max_batch: usize) -> usize {
+        let mut rows = 0usize;
+        let mut din: Option<usize> = None;
+        for (r, _) in &self.q[tier.idx()] {
+            let d = r.x.dims()[1];
+            match din {
+                None => din = Some(d),
+                Some(head_din) if head_din != d => break,
+                Some(_) => {}
+            }
+            rows += r.x.dims()[0];
+            if rows >= max_batch {
+                break;
+            }
+        }
+        rows
+    }
+}
+
+struct Shared {
+    m: Mutex<TierQueues>,
+    cv: Condvar,
+}
+
+fn lock(shared: &Shared) -> MutexGuard<'_, TierQueues> {
+    shared.m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Armed inside the forming thread: if the thread exits for ANY reason
+/// — including a panic in the `process` callback — the batcher is
+/// marked closed and every queued request is dropped, so waiting
+/// clients observe a closed reply channel and later submits get
+/// [`SubmitError::Closed`] instead of queueing into a zombie (the PR 1
+/// channel design had this fail-fast property implicitly; the shared
+/// queues must reproduce it explicitly).
+struct CloseOnExit(Arc<Shared>);
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        let mut g = lock(&self.0);
+        g.closed = true;
+        for q in &mut g.q {
+            q.clear(); // drop reply senders → receivers unblock with an error
+        }
+        drop(g);
+        self.0.cv.notify_all();
+    }
 }
 
 pub struct Batcher {
-    tx: mpsc::SyncSender<(Request, Instant)>,
+    shared: Arc<Shared>,
+    cfg: BatcherConfig,
     handle: Option<JoinHandle<()>>,
     next_id: AtomicU64,
-    depth: Arc<AtomicUsize>,
+    sheds: [AtomicU64; NUM_TIERS],
+}
+
+/// Weighted deficit round-robin tier selection.
+///
+/// Credit is granted in *top-up rounds*: whenever no tier's remaining
+/// credit covers the batch it would form, every non-empty tier accrues
+/// its weight in rows. A tier then serves batch after batch while its
+/// credit lasts (the cursor parks on it), so over any contended window
+/// tiers share service rows in proportion to their weights — even for
+/// single-row traffic, where a per-visit gate would degenerate to plain
+/// round-robin. The cost charged is the rows the tier can actually form
+/// right now (capped at `max_batch`), and empty queues forfeit unused
+/// credit at each top-up so an idle tier cannot hoard. The deficit is
+/// *signed*: the rows actually formed are charged in full, so a batch
+/// that fills up during its accumulation window leaves the tier in
+/// debt it must repay over later rounds — and the debt survives the
+/// queue going idle — otherwise trickle-then-burst traffic would let
+/// a low-weight tier overdraw to parity.
+/// Starvation-free: debt per service is bounded by the batch formed,
+/// every non-empty tier gains ≥ 1 row of credit per round, and its
+/// cost is bounded, so it is always served within finitely many rounds.
+fn select_wdrr(
+    q: &TierQueues,
+    deficit: &mut [i64; NUM_TIERS],
+    cursor: &mut usize,
+    weights: &[u32; NUM_TIERS],
+    max_batch: usize,
+) -> Tier {
+    let cost = |q: &TierQueues, i: usize| -> i64 {
+        q.formable_rows(Tier::ALL[i], max_batch).min(max_batch).max(1) as i64
+    };
+    loop {
+        // pass 1: serve from the cursor with existing credit
+        for k in 0..NUM_TIERS {
+            let i = (*cursor + k) % NUM_TIERS;
+            if !q.q[i].is_empty() && deficit[i] >= cost(q, i) {
+                *cursor = i; // park: keep serving while credit lasts
+                return Tier::ALL[i];
+            }
+        }
+        // nobody has credit: one top-up round (callers guarantee at
+        // least one queue is non-empty, so this terminates)
+        for i in 0..NUM_TIERS {
+            if q.q[i].is_empty() {
+                // forfeit unused credit only — debt survives idling, or
+                // trickle-then-burst traffic could overdraw each cycle
+                // and have the slate wiped while its queue sits empty
+                deficit[i] = deficit[i].min(0);
+            } else {
+                deficit[i] += weights[i].max(1) as i64;
+            }
+        }
+    }
+}
+
+/// PR 1 arrival-order selection: the tier whose head request is oldest.
+fn select_fifo(q: &TierQueues) -> (Tier, Instant) {
+    let mut best: Option<(Tier, Instant)> = None;
+    for t in Tier::ALL {
+        if let Some((_, at)) = q.q[t.idx()].front() {
+            let older = match best {
+                None => true,
+                Some((_, b)) => *at < b,
+            };
+            if older {
+                best = Some((t, *at));
+            }
+        }
+    }
+    best.expect("select_fifo called with all queues empty")
 }
 
 impl Batcher {
@@ -90,70 +320,103 @@ impl Batcher {
         cfg: BatcherConfig,
         process: impl Fn(FormedBatch) + Send + 'static,
     ) -> Batcher {
-        let (tx, rx) = mpsc::sync_channel::<(Request, Instant)>(cfg.queue_cap);
-        let depth = Arc::new(AtomicUsize::new(0));
-        let depth2 = depth.clone();
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        assert!(
+            cfg.queue_caps.iter().all(|&c| c >= 1),
+            "every tier needs queue capacity >= 1"
+        );
+        let shared = Arc::new(Shared {
+            m: Mutex::new(TierQueues {
+                q: std::array::from_fn(|_| VecDeque::new()),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let shared2 = shared.clone();
         let handle = std::thread::Builder::new()
             .name("batcher".into())
             .spawn(move || {
-                let mut pending: Vec<(Request, Instant)> = Vec::new();
+                let _close_on_exit = CloseOnExit(shared2.clone());
+                let mut deficit = [0i64; NUM_TIERS];
+                let mut cursor = 0usize;
                 loop {
-                    // wait for the first request (or shutdown)
-                    if pending.is_empty() {
-                        match rx.recv() {
-                            Ok(r) => pending.push(r),
-                            Err(_) => break,
-                        }
+                    // wait for any request (or shutdown); on shutdown the
+                    // queues are drained before the loop exits, so accepted
+                    // requests always get a reply
+                    let mut g = lock(&shared2);
+                    while g.total() == 0 && !g.closed {
+                        g = shared2.cv.wait(g).unwrap_or_else(|e| e.into_inner());
                     }
-                    // accumulate until size or deadline; the size trigger
-                    // counts only the head tier's rows — that is the batch
-                    // we will actually form
-                    let deadline = pending[0].1 + Duration::from_micros(cfg.max_wait_us);
+                    if g.total() == 0 && g.closed {
+                        break;
+                    }
+
+                    // pick the tier to serve and anchor its window
+                    let (tier, window_start) = match cfg.policy {
+                        ServicePolicy::WeightedFair => (
+                            select_wdrr(
+                                &g,
+                                &mut deficit,
+                                &mut cursor,
+                                &cfg.weights,
+                                cfg.max_batch,
+                            ),
+                            Instant::now(),
+                        ),
+                        ServicePolicy::FifoArrival => select_fifo(&g),
+                    };
+
+                    // accumulate until size or deadline (lock released
+                    // while waiting); closing flushes immediately
+                    let deadline = window_start + Duration::from_micros(cfg.max_wait_us);
                     loop {
-                        let head_tier = pending[0].0.tier;
-                        let rows: usize = pending
-                            .iter()
-                            .filter(|(r, _)| r.tier == head_tier)
-                            .map(|(r, _)| r.x.dims()[0])
-                            .sum();
-                        if rows >= cfg.max_batch {
+                        if g.closed || g.formable_rows(tier, cfg.max_batch) >= cfg.max_batch {
                             break;
                         }
                         let now = Instant::now();
                         if now >= deadline {
                             break;
                         }
-                        match rx.recv_timeout(deadline - now) {
-                            Ok(r) => pending.push(r),
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                        }
+                        g = shared2
+                            .cv
+                            .wait_timeout(g, deadline - now)
+                            .unwrap_or_else(|e| e.into_inner())
+                            .0;
                     }
-                    // form the batch: the head request, then pending
-                    // requests of the head's tier up to max_batch samples;
-                    // other tiers stay queued for the next iteration
-                    let head_tier = pending[0].0.tier;
-                    let mut take = Vec::new();
+
+                    // form the batch: head always taken, then FIFO within
+                    // the tier up to max_batch rows; only requests
+                    // matching the head's feature dim coalesce (a
+                    // mismatched request simply waits for its own batch —
+                    // a remote caller must not be able to panic this
+                    // thread by mixing dims within one window)
+                    let mut take: Vec<(Request, Instant)> = Vec::new();
                     let mut rows = 0usize;
-                    let mut i = 0;
-                    while i < pending.len() {
-                        if pending[i].0.tier != head_tier {
-                            i += 1;
-                            continue;
-                        }
-                        let n = pending[i].0.x.dims()[0];
-                        if !take.is_empty() && rows + n > cfg.max_batch {
+                    let batch_din = g.q[tier.idx()]
+                        .front()
+                        .map(|(r, _)| r.x.dims()[1])
+                        .expect("selected tier is non-empty");
+                    while let Some(front) = g.q[tier.idx()].front() {
+                        let n = front.0.x.dims()[0];
+                        if !take.is_empty()
+                            && (rows + n > cfg.max_batch || front.0.x.dims()[1] != batch_din)
+                        {
                             break;
                         }
                         rows += n;
-                        take.push(pending.remove(i));
+                        take.push(g.q[tier.idx()].pop_front().expect("front checked"));
                     }
-                    depth2.fetch_sub(take.len(), Ordering::Relaxed);
-                    let din = take[0].0.x.dims()[1];
+                    let tier_depths = g.depths();
+                    drop(g);
+                    // charge the rows actually served; going negative is
+                    // the debt mechanism that keeps shares weighted when
+                    // the window filled a batch beyond the selection cost
+                    deficit[tier.idx()] -= rows as i64;
+
+                    let din = batch_din;
                     let mut data = Vec::with_capacity(rows * din);
                     let mut parts = Vec::with_capacity(take.len());
                     for (req, at) in take {
-                        assert_eq!(req.x.dims()[1], din, "mixed feature dims in batch");
                         data.extend_from_slice(req.x.data());
                         parts.push(BatchPart {
                             id: req.id,
@@ -166,16 +429,23 @@ impl Batcher {
                     process(FormedBatch {
                         x: Tensor::from_vec(&[rows, din], data),
                         parts,
-                        queue_depth: depth2.load(Ordering::Relaxed),
-                        queue_cap: cfg.queue_cap,
+                        tier_depths,
+                        tier_caps: cfg.queue_caps,
                     });
                 }
             })
             .expect("spawn batcher");
-        Batcher { tx, handle: Some(handle), next_id: AtomicU64::new(0), depth }
+        Batcher {
+            shared,
+            cfg,
+            handle: Some(handle),
+            next_id: AtomicU64::new(0),
+            sheds: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
     }
 
-    /// Non-blocking submit; sheds with [`SubmitError::Busy`] when full.
+    /// Non-blocking submit; sheds with [`SubmitError::Busy`] naming the
+    /// tier whose queue was full.
     pub fn submit(
         &self,
         x: Tensor,
@@ -184,47 +454,68 @@ impl Batcher {
         assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        // count before sending so the batcher's decrement can never race
-        // the increment below zero
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send((Request { id, x, tier, reply }, Instant::now())) {
-            Ok(()) => Ok(rx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(SubmitError::Busy)
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(SubmitError::Closed)
-            }
+        let mut g = lock(&self.shared);
+        if g.closed {
+            return Err(SubmitError::Closed);
         }
+        if g.q[tier.idx()].len() >= self.cfg.queue_caps[tier.idx()] {
+            self.sheds[tier.idx()].fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Busy(tier));
+        }
+        g.q[tier.idx()].push_back((Request { id, x, tier, reply }, Instant::now()));
+        drop(g);
+        self.shared.cv.notify_all();
+        Ok(rx)
     }
 
-    /// Requests accepted but not yet formed into a batch.
+    /// Requests accepted but not yet formed into a batch, across tiers.
     pub fn queue_depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        lock(&self.shared).total()
     }
 
-    pub fn shutdown(mut self) {
-        drop(self.tx.clone()); // original tx dropped below
-        // dropping self.tx closes the channel; the loop drains and exits
-        let handle = self.handle.take();
-        drop(self);
-        if let Some(h) = handle {
-            let _ = h.join();
+    /// Requests of one tier accepted but not yet formed into a batch.
+    pub fn tier_depth(&self, tier: Tier) -> usize {
+        lock(&self.shared).q[tier.idx()].len()
+    }
+
+    /// Requests shed at `tier`'s admission check since start.
+    pub fn shed_count(&self, tier: Tier) -> u64 {
+        self.sheds[tier.idx()].load(Ordering::Relaxed)
+    }
+
+    fn stop(&mut self) {
+        {
+            let mut g = lock(&self.shared);
+            g.closed = true;
         }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            // join unless we are unwinding (a panicking test must not
+            // deadlock on a wedged process callback). NOTE: the join
+            // waits for any in-flight `process` call to return — that
+            // is the contract that makes accepted replies durable; a
+            // backend that can block forever must enforce its own
+            // timeout, since std gives no timed join
+            if std::thread::panicking() {
+                drop(h);
+            } else {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Drain the queues (every accepted request gets its reply) and
+    /// join the forming thread.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // channel sender dropped implicitly; worker exits after drain
-        if let Some(h) = self.handle.take() {
-            // do not join on panic paths to avoid deadlocks in tests
-            if !std::thread::panicking() {
-                let _ = h;
-            }
-        }
+        // same as shutdown: drain, reply, join — a dropped batcher must
+        // not detach its thread and lose in-flight replies at exit
+        self.stop();
     }
 }
 
@@ -254,13 +545,23 @@ mod tests {
         })
     }
 
+    fn zero_reply(batch: FormedBatch) {
+        for p in batch.parts {
+            let _ = p.reply.send(Response {
+                id: p.id,
+                logits: Tensor::zeros(&[p.rows, 1]),
+                latency_s: p.enqueued_at.elapsed().as_secs_f64(),
+                tier: p.tier,
+                terms: 0,
+                error: None,
+            });
+        }
+    }
+
     #[test]
     fn coalesces_small_requests_into_one_batch() {
         let seen = Arc::new(AtomicUsize::new(0));
-        let b = echo_batcher(
-            BatcherConfig { max_batch: 8, max_wait_us: 20_000, queue_cap: 32 },
-            seen.clone(),
-        );
+        let b = echo_batcher(BatcherConfig::uniform(8, 20_000, 32), seen.clone());
         let rxs: Vec<_> = (0..4)
             .map(|_| {
                 b.submit(Tensor::from_vec(&[1, 2], vec![1.0, 2.0]), Tier::Exact).unwrap()
@@ -278,10 +579,7 @@ mod tests {
     #[test]
     fn flushes_on_size_immediately() {
         let seen = Arc::new(AtomicUsize::new(0));
-        let b = echo_batcher(
-            BatcherConfig { max_batch: 2, max_wait_us: 1_000_000, queue_cap: 32 },
-            seen.clone(),
-        );
+        let b = echo_batcher(BatcherConfig::uniform(2, 1_000_000, 32), seen.clone());
         let t0 = Instant::now();
         let rx1 = b.submit(Tensor::from_vec(&[1, 1], vec![1.0]), Tier::Exact).unwrap();
         let rx2 = b.submit(Tensor::from_vec(&[1, 1], vec![2.0]), Tier::Exact).unwrap();
@@ -294,33 +592,26 @@ mod tests {
 
     #[test]
     fn sheds_when_queue_full() {
-        // processing blocked by a slow callback; fill the queue
-        let b = Batcher::start(
-            BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 2 },
-            |batch| {
-                std::thread::sleep(Duration::from_millis(200));
-                for p in batch.parts {
-                    let _ = p.reply.send(Response {
-                        id: p.id,
-                        logits: Tensor::zeros(&[p.rows, 1]),
-                        latency_s: p.enqueued_at.elapsed().as_secs_f64(),
-                        tier: p.tier,
-                        terms: 0,
-                        error: None,
-                    });
-                }
-            },
-        );
+        // processing blocked by a slow callback; fill the Exact queue
+        let b = Batcher::start(BatcherConfig::uniform(1, 10, 2), |batch| {
+            std::thread::sleep(Duration::from_millis(200));
+            zero_reply(batch);
+        });
         let mut shed = 0;
         let mut keep = Vec::new();
         for _ in 0..16 {
             match b.submit(Tensor::zeros(&[1, 1]), Tier::Exact) {
                 Ok(rx) => keep.push(rx),
-                Err(SubmitError::Busy) => shed += 1,
+                Err(SubmitError::Busy(t)) => {
+                    assert_eq!(t, Tier::Exact, "shed reason names the full queue");
+                    shed += 1;
+                }
                 Err(e) => panic!("{e:?}"),
             }
         }
         assert!(shed > 0, "expected shedding under overload");
+        assert_eq!(b.shed_count(Tier::Exact), shed as u64);
+        assert_eq!(b.shed_count(Tier::BestEffort), 0);
         // accepted requests still complete
         for rx in keep {
             assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
@@ -329,12 +620,37 @@ mod tests {
     }
 
     #[test]
+    fn admission_is_per_tier() {
+        // a full Throughput queue must not block an Exact submit
+        let b = Batcher::start(
+            BatcherConfig::uniform(1, 10, 1).with_queue_cap(Tier::Exact, 8),
+            |batch| {
+                std::thread::sleep(Duration::from_millis(100));
+                zero_reply(batch);
+            },
+        );
+        let mut rxs = Vec::new();
+        let mut throughput_shed = false;
+        for _ in 0..8 {
+            match b.submit(Tensor::zeros(&[1, 1]), Tier::Throughput) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Busy(Tier::Throughput)) => throughput_shed = true,
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+        assert!(throughput_shed, "cap-1 tier queue must overflow");
+        // Exact admission is independent of the flooded tier
+        rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).unwrap());
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
+        }
+        b.shutdown();
+    }
+
+    #[test]
     fn oversize_request_still_processed_alone() {
         let seen = Arc::new(AtomicUsize::new(0));
-        let b = echo_batcher(
-            BatcherConfig { max_batch: 4, max_wait_us: 100, queue_cap: 8 },
-            seen.clone(),
-        );
+        let b = echo_batcher(BatcherConfig::uniform(4, 100, 8), seen.clone());
         let rx = b.submit(Tensor::zeros(&[10, 3]), Tier::Exact).unwrap();
         let r = rx.recv().unwrap();
         assert_eq!(r.logits.dims(), &[10, 3]);
@@ -347,22 +663,10 @@ mod tests {
         // must contain a single tier and all requests must complete
         let tiers_seen = Arc::new(std::sync::Mutex::new(Vec::<Vec<Tier>>::new()));
         let ts = tiers_seen.clone();
-        let b = Batcher::start(
-            BatcherConfig { max_batch: 16, max_wait_us: 20_000, queue_cap: 64 },
-            move |batch| {
-                ts.lock().unwrap().push(batch.parts.iter().map(|p| p.tier).collect());
-                for p in batch.parts {
-                    let _ = p.reply.send(Response {
-                        id: p.id,
-                        logits: Tensor::zeros(&[p.rows, 1]),
-                        latency_s: 0.0,
-                        tier: p.tier,
-                        terms: 0,
-                        error: None,
-                    });
-                }
-            },
-        );
+        let b = Batcher::start(BatcherConfig::uniform(16, 20_000, 64), move |batch| {
+            ts.lock().unwrap().push(batch.parts.iter().map(|p| p.tier).collect());
+            zero_reply(batch);
+        });
         let mut rxs = Vec::new();
         for i in 0..8 {
             let tier = if i % 2 == 0 { Tier::Exact } else { Tier::BestEffort };
@@ -379,32 +683,255 @@ mod tests {
 
     #[test]
     fn queue_depth_tracks_outstanding_requests() {
-        let b = Batcher::start(
-            BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 8 },
-            |batch| {
-                std::thread::sleep(Duration::from_millis(100));
-                for p in batch.parts {
-                    let _ = p.reply.send(Response {
-                        id: p.id,
-                        logits: Tensor::zeros(&[p.rows, 1]),
-                        latency_s: 0.0,
-                        tier: p.tier,
-                        terms: 0,
-                        error: None,
-                    });
-                }
-            },
-        );
+        let b = Batcher::start(BatcherConfig::uniform(1, 10, 8), |batch| {
+            std::thread::sleep(Duration::from_millis(100));
+            zero_reply(batch);
+        });
         let mut rxs = Vec::new();
         for _ in 0..4 {
-            rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).unwrap());
+            rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::Balanced).unwrap());
         }
         assert!(b.queue_depth() >= 2, "depth {}", b.queue_depth());
+        assert!(b.tier_depth(Tier::Balanced) >= 2, "{}", b.tier_depth(Tier::Balanced));
+        assert_eq!(b.tier_depth(Tier::Exact), 0);
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(10)).unwrap();
         }
         // all formed: depth returns to zero
         assert_eq!(b.queue_depth(), 0);
         b.shutdown();
+    }
+
+    #[test]
+    fn exact_head_overtakes_a_flooded_tier() {
+        // a BestEffort flood is queued; an Exact request arriving later
+        // must be served within one WDRR rotation of the in-flight batch,
+        // not after the whole flood
+        let order = Arc::new(std::sync::Mutex::new(Vec::<Tier>::new()));
+        let o2 = order.clone();
+        let b = Batcher::start(BatcherConfig::uniform(1, 10, 64), move |batch| {
+            o2.lock().unwrap().push(batch.tier());
+            std::thread::sleep(Duration::from_millis(30));
+            zero_reply(batch);
+        });
+        let mut rxs = Vec::new();
+        for _ in 0..12 {
+            rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::BestEffort).unwrap());
+        }
+        // let the flood's first batch enter service, then submit Exact
+        std::thread::sleep(Duration::from_millis(45));
+        let exact_rx = b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).unwrap();
+        exact_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let order = order.lock().unwrap().clone();
+        let exact_pos = order.iter().position(|&t| t == Tier::Exact).expect("exact served");
+        assert!(
+            exact_pos <= 3,
+            "exact waited behind the flood: served at position {exact_pos} of {order:?}"
+        );
+        b.shutdown();
+    }
+
+    #[test]
+    fn stranded_tier_gets_a_full_accumulation_window() {
+        // regression for the PR 1 expired-deadline bug: a request stranded
+        // while another tier was in service must still get a full
+        // coalescing window once its tier is selected, so a companion
+        // arriving during that window joins the same batch
+        let batches = Arc::new(std::sync::Mutex::new(Vec::<Vec<Tier>>::new()));
+        let bt = batches.clone();
+        let gate = Arc::new(std::sync::Mutex::new(()));
+        let gate2 = gate.clone();
+        let first = Arc::new(AtomicUsize::new(0));
+        let f2 = first.clone();
+        let b = Batcher::start(BatcherConfig::uniform(2, 300_000, 16), move |batch| {
+            // the first (Exact) batch blocks in service until the gate
+            // opens, stranding the Balanced request behind it
+            if f2.fetch_add(1, Ordering::SeqCst) == 0 {
+                let _g = gate2.lock().unwrap();
+            }
+            bt.lock().unwrap().push(batch.parts.iter().map(|p| p.tier).collect());
+            zero_reply(batch);
+        });
+        let hold = gate.lock().unwrap();
+        let rx_a = b.submit(Tensor::zeros(&[2, 1]), Tier::Exact).unwrap(); // size-triggers
+        std::thread::sleep(Duration::from_millis(30)); // Exact batch now in service
+        let rx_b1 = b.submit(Tensor::zeros(&[1, 1]), Tier::Balanced).unwrap();
+        // strand B1 well past its own arrival window's worth of waiting
+        std::thread::sleep(Duration::from_millis(100));
+        drop(hold); // Exact batch completes; Balanced is selected now
+        std::thread::sleep(Duration::from_millis(50));
+        // B2 arrives during B1's (fresh) window — must join B1's batch
+        let rx_b2 = b.submit(Tensor::zeros(&[1, 1]), Tier::Balanced).unwrap();
+        for rx in [rx_a, rx_b1, rx_b2] {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let batches = batches.lock().unwrap().clone();
+        let balanced: Vec<&Vec<Tier>> =
+            batches.iter().filter(|b| b.contains(&Tier::Balanced)).collect();
+        assert_eq!(
+            balanced.len(),
+            1,
+            "stranded request was flushed alone instead of coalescing: {batches:?}"
+        );
+        assert_eq!(balanced[0].len(), 2);
+        b.shutdown();
+    }
+
+    #[test]
+    fn fifo_policy_reproduces_the_expired_window_pathology() {
+        // the FifoArrival baseline anchors the window at head arrival, so
+        // the same stranding scenario collapses to singleton batches —
+        // this is the measurable contrast perf_qos reports
+        let batches = Arc::new(std::sync::Mutex::new(Vec::<Vec<Tier>>::new()));
+        let bt = batches.clone();
+        let gate = Arc::new(std::sync::Mutex::new(()));
+        let gate2 = gate.clone();
+        let first = Arc::new(AtomicUsize::new(0));
+        let f2 = first.clone();
+        let b = Batcher::start(
+            BatcherConfig::uniform(2, 50_000, 16).with_policy(ServicePolicy::FifoArrival),
+            move |batch| {
+                if f2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    let _g = gate2.lock().unwrap();
+                }
+                bt.lock().unwrap().push(batch.parts.iter().map(|p| p.tier).collect());
+                zero_reply(batch);
+            },
+        );
+        let hold = gate.lock().unwrap();
+        let rx_a = b.submit(Tensor::zeros(&[2, 1]), Tier::Exact).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let rx_b1 = b.submit(Tensor::zeros(&[1, 1]), Tier::Balanced).unwrap();
+        // strand B1 past its 50 ms arrival-anchored window
+        std::thread::sleep(Duration::from_millis(100));
+        drop(hold);
+        std::thread::sleep(Duration::from_millis(30));
+        let rx_b2 = b.submit(Tensor::zeros(&[1, 1]), Tier::Balanced).unwrap();
+        for rx in [rx_a, rx_b1, rx_b2] {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let batches = batches.lock().unwrap().clone();
+        let balanced_batches =
+            batches.iter().filter(|b| b.contains(&Tier::Balanced)).count();
+        assert_eq!(
+            balanced_batches, 2,
+            "fifo baseline should flush the stranded request alone: {batches:?}"
+        );
+        b.shutdown();
+    }
+
+    #[test]
+    fn drop_drains_and_joins_the_worker() {
+        // dropping (not shutting down) the batcher must still deliver
+        // every accepted reply before the thread is joined
+        let seen = Arc::new(AtomicUsize::new(0));
+        let b = echo_batcher(BatcherConfig::uniform(4, 1_000, 16), seen.clone());
+        let rxs: Vec<_> = (0..6)
+            .map(|_| b.submit(Tensor::zeros(&[1, 1]), Tier::Throughput).unwrap())
+            .collect();
+        drop(b); // Drop drains + joins — replies must already be sent
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok(), "in-flight reply lost on drop");
+        }
+    }
+
+    #[test]
+    fn mixed_feature_dims_split_batches_instead_of_panicking() {
+        // a remote caller mixing dims within one window must get two
+        // clean batches — never a forming-thread panic (which would
+        // zombie the batcher for every later client)
+        let seen = Arc::new(AtomicUsize::new(0));
+        let b = echo_batcher(BatcherConfig::uniform(8, 5_000, 16), seen.clone());
+        let rx1 = b.submit(Tensor::zeros(&[1, 4]), Tier::Exact).unwrap();
+        let rx2 = b.submit(Tensor::zeros(&[1, 5]), Tier::Exact).unwrap();
+        assert_eq!(
+            rx1.recv_timeout(Duration::from_secs(10)).unwrap().logits.dims(),
+            &[1, 4]
+        );
+        assert_eq!(
+            rx2.recv_timeout(Duration::from_secs(10)).unwrap().logits.dims(),
+            &[1, 5]
+        );
+        // the forming thread survived: new work still completes
+        let rx3 = b.submit(Tensor::zeros(&[2, 3]), Tier::Balanced).unwrap();
+        assert!(rx3.recv_timeout(Duration::from_secs(10)).is_ok());
+        b.shutdown();
+    }
+
+    #[test]
+    fn forming_thread_death_fails_fast_not_zombie() {
+        // if the process callback panics, queued clients must see a
+        // dropped reply channel and later submits must get Closed —
+        // not an ever-growing queue nobody will ever serve
+        let b = Batcher::start(BatcherConfig::uniform(1, 10, 8), |batch| {
+            if batch.tier() == Tier::BestEffort {
+                panic!("injected process panic");
+            }
+            zero_reply(batch);
+        });
+        let rx = b.submit(Tensor::zeros(&[1, 1]), Tier::BestEffort).unwrap();
+        assert!(
+            rx.recv_timeout(Duration::from_secs(10)).is_err(),
+            "client of the panicked batch must observe a closed channel"
+        );
+        // the close-on-exit guard marks the batcher closed for new work
+        let mut closed = false;
+        for _ in 0..100 {
+            match b.submit(Tensor::zeros(&[1, 1]), Tier::Exact) {
+                Err(SubmitError::Closed) => {
+                    closed = true;
+                    break;
+                }
+                _ => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        assert!(closed, "submits after a forming-thread panic must fail fast");
+        b.shutdown();
+    }
+
+    #[test]
+    fn weighted_service_shares_rows_by_tier_weight() {
+        // sustained two-tier contention with single-row requests: WDRR
+        // must split service ~8:1 (Exact:BestEffort weights), not 1:1 —
+        // the regression a per-visit credit gate would reintroduce
+        let order = Arc::new(std::sync::Mutex::new(Vec::<Tier>::new()));
+        let o2 = order.clone();
+        let b = Batcher::start(BatcherConfig::uniform(1, 10, 64), move |batch| {
+            o2.lock().unwrap().push(batch.tier());
+            std::thread::sleep(Duration::from_millis(5));
+            zero_reply(batch);
+        });
+        let mut rxs = Vec::new();
+        for _ in 0..24 {
+            rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).unwrap());
+        }
+        for _ in 0..24 {
+            rxs.push(b.submit(Tensor::zeros(&[1, 1]), Tier::BestEffort).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let order = order.lock().unwrap().clone();
+        // both queues were full for (at least) the first 18 services;
+        // weight 8 vs 1 → expect ~16 Exact per 18, and BestEffort must
+        // still appear (no starvation)
+        let window = &order[..18];
+        let exact = window.iter().filter(|&&t| t == Tier::Exact).count();
+        let best_effort = window.iter().filter(|&&t| t == Tier::BestEffort).count();
+        assert!(exact >= 12, "weights ignored: {exact}/18 exact in {order:?}");
+        assert!(best_effort >= 1, "low-weight tier starved: {order:?}");
+        b.shutdown();
+    }
+
+    #[test]
+    fn submit_after_stop_returns_closed() {
+        let mut b =
+            echo_batcher(BatcherConfig::uniform(4, 100, 16), Arc::new(AtomicUsize::new(0)));
+        b.stop();
+        let err = b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).err();
+        assert_eq!(err, Some(SubmitError::Closed));
     }
 }

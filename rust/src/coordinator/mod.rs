@@ -6,9 +6,10 @@
 //!
 //! * [`pool`] — worker threads; each owns one basis model (optionally a
 //!   per-thread PJRT runtime — `xla::PjRtClient` is not `Send`).
-//! * [`batcher`] — bounded request queue with timeout-based batch forming
-//!   (tier-grouped), shed-on-full backpressure, and queue-depth export
-//!   for the QoS pressure signal.
+//! * [`batcher`] — one bounded queue per tier served by weighted
+//!   deficit round-robin (tier-grouped forming, per-tier admission
+//!   control with shed accounting) and per-tier queue-depth export for
+//!   the QoS pressure signal.
 //! * [`scheduler`] — broadcast/collect over the pool + AbelianAdd tree,
 //!   with tier-truncated prefix reduction and anytime early stopping
 //!   (see [`crate::qos`]).
@@ -19,7 +20,7 @@ pub mod metrics;
 pub mod pool;
 pub mod scheduler;
 
-pub use batcher::{Batcher, BatcherConfig, SubmitError};
+pub use batcher::{Batcher, BatcherConfig, ServicePolicy, SubmitError};
 pub use metrics::Metrics;
 pub use pool::{BasisWorker, WorkerPool};
 pub use scheduler::ExpansionScheduler;
@@ -117,10 +118,20 @@ impl Coordinator {
         }
     }
 
-    /// Current batcher queue depth (requests accepted, not yet formed
-    /// into a batch) — the QoS pressure signal.
+    /// Current batcher queue depth across all tiers (requests accepted,
+    /// not yet formed into a batch).
     pub fn queue_depth(&self) -> usize {
         self.batcher.queue_depth()
+    }
+
+    /// One tier's queue depth — the per-tier QoS pressure signal.
+    pub fn tier_depth(&self, tier: Tier) -> usize {
+        self.batcher.tier_depth(tier)
+    }
+
+    /// Requests shed at one tier's admission check since start.
+    pub fn tier_shed(&self, tier: Tier) -> u64 {
+        self.batcher.shed_count(tier)
     }
 
     /// Drain and stop.
@@ -152,8 +163,7 @@ mod tests {
             }),
         );
         let sched = ExpansionScheduler::new(pool);
-        let cfg = BatcherConfig { max_batch, max_wait_us: 500, queue_cap: 64 };
-        Coordinator::new(cfg, sched)
+        Coordinator::new(BatcherConfig::uniform(max_batch, 500, 64), sched)
     }
 
     #[test]

@@ -102,6 +102,24 @@ impl WorkerPool {
         Ok(outs.into_iter().map(|o| o.expect("all workers reported")).collect())
     }
 
+    /// Run `x` on worker `i` alone and wait for its output — the
+    /// streamed anytime path: terms are dispatched one at a time in
+    /// series order, so an early stop means workers past the stop point
+    /// never run at all (a parallel broadcast would waste their compute).
+    pub fn run_one(&self, i: usize, x: Arc<Tensor>) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            i < self.senders.len(),
+            "worker {i} out of range (pool of {})",
+            self.senders.len()
+        );
+        let (tx, rx) = mpsc::channel();
+        self.senders[i]
+            .send(Job::Broadcast { x, out: tx })
+            .map_err(|_| anyhow::anyhow!("worker thread died"))?;
+        let (_, res) = rx.recv().map_err(|_| anyhow::anyhow!("worker output lost"))?;
+        res
+    }
+
     /// Stop all workers and join.
     pub fn shutdown(self) {
         for s in &self.senders {
@@ -152,6 +170,18 @@ mod tests {
         assert_eq!(outs[1].data(), &[2.0]);
         assert!(pool.broadcast_to(Tensor::vec1(&[1.0]), 0).is_err());
         assert!(pool.broadcast_to(Tensor::vec1(&[1.0]), 5).is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn run_one_targets_a_single_worker() {
+        let pool = WorkerPool::new(
+            3,
+            Arc::new(|i| Box::new(AddConst(i as f32)) as Box<dyn BasisWorker>),
+        );
+        let x = Arc::new(Tensor::vec1(&[5.0]));
+        assert_eq!(pool.run_one(2, x.clone()).unwrap().data(), &[7.0]);
+        assert!(pool.run_one(3, x).is_err(), "out-of-range worker index");
         pool.shutdown();
     }
 

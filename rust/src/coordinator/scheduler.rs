@@ -5,12 +5,16 @@
 //! With a [`TermController`] attached, the scheduler serves each batch
 //! at its tier's term budget: it broadcasts only to the first `n`
 //! workers of the pool (⊎ prefix sums are themselves group elements, so
-//! the prefix is a valid lower-precision model), feeds queue-pressure
-//! observations back to the controller, and in *anytime* mode stops the
-//! prefix reduction early once the marginal term's contribution falls
-//! below the batch tolerance. Failed batches send an explicit error
-//! [`Response`] so protocol clients get an error frame instead of a
-//! dropped channel.
+//! the prefix is a valid lower-precision model) and feeds the
+//! controller exactly ONE [`observe_batch`](TermController::observe_batch)
+//! decision per formed batch (hottest per-tier queue occupancy + batch
+//! service time). In *anytime* mode the prefix is **streamed**: terms
+//! are dispatched to workers one at a time in series order and the
+//! reduction stops once the marginal term's contribution falls below
+//! the batch tolerance — workers past the stop point never run, so the
+//! early stop saves basis compute, not just the adds. Failed batches
+//! send an explicit error [`Response`] so protocol clients get an error
+//! frame instead of a dropped channel.
 
 use super::batcher::FormedBatch;
 use super::metrics::Metrics;
@@ -71,9 +75,8 @@ impl ExpansionScheduler {
     pub fn process(&self, batch: FormedBatch, metrics: &Metrics) {
         let t0 = std::time::Instant::now();
         let tier = batch.tier();
-        if let Some(ctl) = &self.controller {
-            ctl.observe_queue(batch.queue_depth, batch.queue_cap);
-        }
+        // the admission-pressure signal, captured before parts move out
+        let occupancy = batch.max_occupancy();
         let budget = match &self.controller {
             Some(ctl) => ctl.budget_for(tier).min(self.pool.len()).max(1),
             None => self.pool.len(),
@@ -114,8 +117,9 @@ impl ExpansionScheduler {
                 }
                 let service = t0.elapsed().as_secs_f64();
                 metrics.record_batch(batch.x.dims()[0], service);
+                // exactly one pressure decision per formed batch
                 if let Some(ctl) = &self.controller {
-                    ctl.observe_service_time(service);
+                    ctl.observe_batch(occupancy, service);
                 }
             }
             Err(e) => {
@@ -127,6 +131,9 @@ impl ExpansionScheduler {
                 for p in batch.parts {
                     let latency = p.enqueued_at.elapsed().as_secs_f64();
                     let _ = p.reply.send(Response::failure(p.id, p.tier, latency, msg.clone()));
+                }
+                if let Some(ctl) = &self.controller {
+                    ctl.observe_batch(occupancy, t0.elapsed().as_secs_f64());
                 }
             }
         }
@@ -143,7 +150,7 @@ impl ExpansionScheduler {
         Ok(self.reduce_prefix(x, n, None)?.0)
     }
 
-    /// Anytime forward over the first `n` workers: accumulate terms in
+    /// Anytime forward over the first `n` workers: stream terms in
     /// series order and stop once the marginal term's max contribution
     /// falls below `tol` *relative to the leading term's magnitude*
     /// (scale-invariant, so small-magnitude activations do not trip the
@@ -157,39 +164,50 @@ impl ExpansionScheduler {
         self.reduce_prefix(x, n, Some(tol))
     }
 
-    /// Broadcast to the first `n` workers, apply gains, reduce. With a
-    /// tolerance, accumulate sequentially (series order) and stop early;
-    /// otherwise reduce the whole prefix as a balanced tree.
+    /// Reduce the first `n` basis outputs (with gains applied). Without
+    /// a tolerance, broadcast to all `n` workers in parallel and reduce
+    /// as a balanced tree. With a tolerance, **stream**: dispatch one
+    /// worker at a time in series order and stop as soon as a term's
+    /// contribution drops below the threshold — workers past the stop
+    /// point are never dispatched, trading broadcast parallelism for a
+    /// real compute saving (the anytime mode exists to shed load).
     fn reduce_prefix(
         &self,
         x: Tensor,
         n: usize,
         tol: Option<f32>,
     ) -> anyhow::Result<(Tensor, usize)> {
-        let outs = self.pool.broadcast_to(x, n)?;
-        let outs: Vec<Tensor> = match &self.gains {
-            Some(g) => outs
-                .into_iter()
-                .zip(g)
-                .map(|(o, &gain)| o.scale(gain))
-                .collect(),
-            None => outs,
-        };
         match tol {
             None => {
+                let outs = self.pool.broadcast_to(x, n)?;
+                let outs: Vec<Tensor> = match &self.gains {
+                    Some(g) => outs
+                        .into_iter()
+                        .zip(g)
+                        .map(|(o, &gain)| o.scale(gain))
+                        .collect(),
+                    None => outs,
+                };
                 let terms = outs.len();
-                let y = abelian_reduce(outs).ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
+                let y = abelian_reduce(outs)
+                    .ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
                 Ok((y, terms))
             }
             Some(tol) => {
-                let mut it = outs.into_iter();
-                let mut acc =
-                    it.next().ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
+                anyhow::ensure!(n >= 1, "anytime reduction needs at least one term");
+                anyhow::ensure!(
+                    n <= self.pool.len(),
+                    "prefix {n} exceeds pool {}",
+                    self.pool.len()
+                );
+                let x = Arc::new(x);
+                let mut acc = self.term_output(0, x.clone())?;
                 // relative threshold: tolerance × leading-term magnitude,
                 // so the stop rule is invariant to the input's scale
                 let threshold = tol * acc.max_abs();
                 let mut terms = 1usize;
-                for term in it {
+                for i in 1..n {
+                    let term = self.term_output(i, x.clone())?;
                     // the series' geometric scale law makes later terms
                     // strictly smaller; once one drops below the batch
                     // tolerance, the remaining tail is negligible too
@@ -202,6 +220,15 @@ impl ExpansionScheduler {
                 Ok((acc, terms))
             }
         }
+    }
+
+    /// One streamed term: run worker `i` alone and apply its gain.
+    fn term_output(&self, i: usize, x: Arc<Tensor>) -> anyhow::Result<Tensor> {
+        let out = self.pool.run_one(i, x)?;
+        Ok(match &self.gains {
+            Some(g) => out.scale(g[i]),
+            None => out,
+        })
     }
 
     pub fn shutdown(self) {
@@ -269,16 +296,49 @@ mod tests {
     }
 
     #[test]
+    fn anytime_streams_and_skips_workers_past_the_stop() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct CountingId {
+            calls: Arc<[AtomicUsize; 6]>,
+            i: usize,
+        }
+        impl BasisWorker for CountingId {
+            fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+                self.calls[self.i].fetch_add(1, Ordering::SeqCst);
+                Ok(x.clone())
+            }
+        }
+        let calls: Arc<[AtomicUsize; 6]> =
+            Arc::new(std::array::from_fn(|_| AtomicUsize::new(0)));
+        let c2 = calls.clone();
+        let pool = WorkerPool::new(
+            6,
+            Arc::new(move |i| {
+                Box::new(CountingId { calls: c2.clone(), i }) as Box<dyn BasisWorker>
+            }),
+        );
+        let sched = ExpansionScheduler::new(pool)
+            .with_gains(vec![1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125]);
+        let x = Tensor::vec1(&[8.0]).reshaped(&[1, 1]);
+        // contributions 8, 4, 2, 1, …; threshold 0.2·8 = 1.6 → stop at
+        // term 4 (it runs to reveal the stop; terms 5–6 never dispatch)
+        let (y, terms) = sched.forward_anytime(x, 6, 0.2).unwrap();
+        assert_eq!(terms, 3);
+        assert!((y.data()[0] - 14.0).abs() < 1e-5);
+        let counts: Vec<usize> = calls.iter().map(|c| c.load(Ordering::SeqCst)).collect();
+        assert_eq!(counts[..4], [1, 1, 1, 1], "{counts:?}");
+        assert_eq!(counts[4..], [0, 0], "workers past the stop must never run: {counts:?}");
+        sched.shutdown();
+    }
+
+    #[test]
     fn controller_budget_truncates_batch_processing() {
         use crate::coordinator::{BatcherConfig, Coordinator};
         let ctl = Arc::new(TermController::new(QosConfig::new(4)));
         let sched = ExpansionScheduler::new(id_pool(4))
             .with_gains(vec![1.0, 0.5, 0.25, 0.125])
             .with_controller(ctl.clone());
-        let coord = Coordinator::new(
-            BatcherConfig { max_batch: 8, max_wait_us: 200, queue_cap: 32 },
-            sched,
-        );
+        let coord = Coordinator::new(BatcherConfig::uniform(8, 200, 32), sched);
         let x = Tensor::vec1(&[8.0]).reshaped(&[1, 1]);
         // Exact: all four terms
         let r = coord.infer_tier(x.clone(), Tier::Exact).unwrap();
@@ -299,10 +359,7 @@ mod tests {
         let mut tg = [1.0f32; NUM_TIERS];
         tg[Tier::BestEffort.idx()] = 2.0;
         let sched = ExpansionScheduler::new(id_pool(2)).with_tier_gains(tg);
-        let coord = Coordinator::new(
-            BatcherConfig { max_batch: 4, max_wait_us: 200, queue_cap: 16 },
-            sched,
-        );
+        let coord = Coordinator::new(BatcherConfig::uniform(4, 200, 16), sched);
         let x = Tensor::vec1(&[3.0]).reshaped(&[1, 1]);
         let exact = coord.infer_tier(x.clone(), Tier::Exact).unwrap();
         assert!((exact.logits.data()[0] - 6.0).abs() < 1e-5);
@@ -322,7 +379,7 @@ mod tests {
         }
         let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Failing) as Box<dyn BasisWorker>));
         let coord = Coordinator::new(
-            BatcherConfig { max_batch: 2, max_wait_us: 100, queue_cap: 8 },
+            BatcherConfig::uniform(2, 100, 8),
             ExpansionScheduler::new(pool),
         );
         let rx = coord.submit(Tensor::zeros(&[1, 2])).unwrap();

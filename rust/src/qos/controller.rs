@@ -4,11 +4,14 @@
 //! Calibration uses [`ExpansionMonitor`] convergence data (§5.3): a
 //! tier's base budget is the smallest term count whose observed
 //! max-residual is below the tier tolerance. At serve time the
-//! controller watches batcher queue occupancy (and optionally batch
-//! service time) and raises a *pressure level*; each pressure step
-//! removes one term from every non-Exact tier, bounded below by the
-//! tier's floor. When the queue drains, pressure falls and full
-//! precision is restored — precision degrades, availability does not.
+//! controller takes **one decision per formed batch**
+//! ([`TermController::observe_batch`]): the hottest per-tier queue
+//! occupancy (each tier's depth over its own cap, from the per-tier
+//! batcher queues) and the batch service-time EWMA feed a single
+//! pressure step — up, down, or hold. Each pressure step removes one
+//! term from every non-Exact tier, bounded below by the tier's floor.
+//! When the queues drain, pressure falls and full precision is
+//! restored — precision degrades, availability does not.
 
 use super::tier::{Tier, NUM_TIERS};
 use crate::xint::monitor::ExpansionMonitor;
@@ -20,9 +23,10 @@ use std::sync::Mutex;
 pub struct QosConfig {
     /// total basis terms available (the worker-pool size)
     pub total_terms: usize,
-    /// queue occupancy above which pressure rises (one step per batch)
+    /// per-tier queue occupancy above which pressure rises (the hottest
+    /// tier's depth/cap; one step per formed batch)
     pub high_watermark: f64,
-    /// queue occupancy below which pressure falls
+    /// per-tier queue occupancy below which pressure falls
     pub low_watermark: f64,
     /// batch service time (seconds) above which pressure also rises;
     /// 0.0 disables the latency signal
@@ -132,29 +136,35 @@ impl TermController {
         base.saturating_sub(p).clamp(floor.max(1), self.cfg.total_terms)
     }
 
-    /// Feed one queue-occupancy observation (taken at batch formation).
-    /// Pressure moves at most one step per observation so precision
-    /// ramps rather than cliffs.
-    pub fn observe_queue(&self, depth: usize, cap: usize) {
-        let occupancy = depth as f64 / cap.max(1) as f64;
-        if occupancy > self.cfg.high_watermark {
-            self.raise_pressure();
-        } else if occupancy < self.cfg.low_watermark {
-            self.lower_pressure();
-        }
-    }
-
-    /// Feed one batch service time; only acts when a target is set.
-    pub fn observe_service_time(&self, service_s: f64) {
+    /// Feed one formed batch's signals and take at most ONE pressure
+    /// step — the one-step-per-batch contract (the PR 1 scheduler fed
+    /// queue depth and service time separately, so pressure could ramp
+    /// two steps per batch). `occupancy` is the hottest per-tier queue
+    /// occupancy at formation (see
+    /// [`FormedBatch::max_occupancy`](crate::coordinator::batcher::FormedBatch::max_occupancy));
+    /// `service_s` is the batch's service time, folded into the EWMA.
+    /// A hot signal on either axis raises pressure; lowering requires
+    /// the queue cold AND (when a target is set) the EWMA cold too.
+    ///
+    /// Hottest-tier semantics are deliberate: a single saturated tier
+    /// queue holds pressure up until it drains, because degrading
+    /// non-Exact budgets is exactly the lever that raises throughput
+    /// and drains it. A tier saturated at steady state means offered
+    /// load exceeds capacity — degraded precision (never below tier
+    /// floors) is the intended trade, per-tier admission control caps
+    /// the damage to that tier's queue, and pressure falls as soon as
+    /// the hot queue empties.
+    pub fn observe_batch(&self, occupancy: f64, service_s: f64) {
         let prev = f64::from_bits(self.service_ewma.load(Ordering::Relaxed));
         let ewma = if prev == 0.0 { service_s } else { 0.8 * prev + 0.2 * service_s };
         self.service_ewma.store(ewma.to_bits(), Ordering::Relaxed);
-        if self.cfg.service_target_s > 0.0 {
-            if ewma > self.cfg.service_target_s {
-                self.raise_pressure();
-            } else if ewma < 0.5 * self.cfg.service_target_s {
-                self.lower_pressure();
-            }
+        let target = self.cfg.service_target_s;
+        let svc_hot = target > 0.0 && ewma > target;
+        let svc_cold = target <= 0.0 || ewma < 0.5 * target;
+        if occupancy > self.cfg.high_watermark || svc_hot {
+            self.raise_pressure();
+        } else if occupancy < self.cfg.low_watermark && svc_cold {
+            self.lower_pressure();
         }
     }
 
@@ -265,9 +275,9 @@ mod tests {
     fn pressure_degrades_and_restores_non_exact_tiers() {
         let c = TermController::new(QosConfig::new(8));
         let before = c.budget_for(Tier::Balanced);
-        // sustained overload: pressure ramps one step per observation
+        // sustained overload: pressure ramps one step per batch
         for _ in 0..4 {
-            c.observe_queue(90, 100);
+            c.observe_batch(0.9, 0.0);
         }
         assert_eq!(c.pressure(), 4);
         assert_eq!(c.budget_for(Tier::Exact), 8, "exact is immune");
@@ -276,7 +286,7 @@ mod tests {
         assert!(degraded >= Tier::Balanced.floor_terms(8));
         // drain: pressure falls, budget restored
         for _ in 0..8 {
-            c.observe_queue(0, 100);
+            c.observe_batch(0.0, 0.0);
         }
         assert_eq!(c.pressure(), 0);
         assert_eq!(c.budget_for(Tier::Balanced), before);
@@ -288,7 +298,7 @@ mod tests {
     fn pressure_never_breaks_tier_floors() {
         let c = TermController::new(QosConfig::new(4));
         for _ in 0..100 {
-            c.observe_queue(100, 100);
+            c.observe_batch(1.0, 0.0);
         }
         assert_eq!(c.budget_for(Tier::Exact), 4);
         assert_eq!(c.budget_for(Tier::Balanced), Tier::Balanced.floor_terms(4));
@@ -300,11 +310,41 @@ mod tests {
     fn service_time_signal_raises_pressure() {
         let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
         for _ in 0..3 {
-            c.observe_service_time(0.050);
+            c.observe_batch(0.0, 0.050);
         }
         assert!(c.pressure() > 0);
         for _ in 0..20 {
-            c.observe_service_time(0.001);
+            c.observe_batch(0.0, 0.001);
+        }
+        assert_eq!(c.pressure(), 0);
+    }
+
+    #[test]
+    fn one_step_per_batch_even_with_both_signals_hot() {
+        // queue hot AND service hot in one observation must move ONE
+        // step, not two (the PR 1 double-stepping bug)
+        let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
+        c.observe_batch(0.95, 0.100);
+        assert_eq!(c.pressure(), 1, "both-hot batch must step pressure exactly once");
+        // cold queue but hot service EWMA: still one step up, not a
+        // raise+lower wash
+        c.observe_batch(0.0, 0.100);
+        assert_eq!(c.pressure(), 2);
+    }
+
+    #[test]
+    fn lowering_requires_both_axes_cold_when_target_set() {
+        let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
+        for _ in 0..3 {
+            c.observe_batch(0.9, 0.050);
+        }
+        assert_eq!(c.pressure(), 3);
+        // queue drained but the service EWMA is still hot: hold, don't
+        // restore precision into an overloaded pool
+        c.observe_batch(0.0, 0.050);
+        assert_eq!(c.pressure(), 4, "hot service keeps raising even at empty queue");
+        for _ in 0..40 {
+            c.observe_batch(0.0, 0.0001);
         }
         assert_eq!(c.pressure(), 0);
     }

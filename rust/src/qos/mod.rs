@@ -14,9 +14,18 @@
 //!   protocol's tier field.
 //! * [`controller`] — the [`TermController`]: calibrates per-tier term
 //!   budgets from [`ExpansionMonitor`](crate::xint::ExpansionMonitor)
-//!   convergence data and dynamically lowers budgets under queue
-//!   pressure (batcher depth / batch service time), restoring full
+//!   convergence data and dynamically lowers budgets under pressure,
+//!   taking exactly one step per formed batch
+//!   ([`TermController::observe_batch`]) from the hottest per-tier
+//!   queue occupancy plus the batch service-time EWMA, restoring full
 //!   precision as load drains.
+//!
+//! The batcher side ([`coordinator::batcher`](crate::coordinator::batcher))
+//! keeps one bounded queue per tier, served by weighted deficit
+//! round-robin with per-tier admission control, so a flood in one tier
+//! can neither delay another tier's heads nor consume its queue space;
+//! sheds are accounted and surfaced per tier (TCP `CODE_SHED` frames
+//! carry the refusing tier).
 //!
 //! The scheduler side lives in
 //! [`coordinator::scheduler`](crate::coordinator::scheduler): truncated

@@ -66,6 +66,24 @@ impl Tier {
         }
     }
 
+    /// Weighted-service share for the per-tier batcher queues: rows of
+    /// deficit-round-robin credit accrued per scheduling rotation.
+    /// Strict tiers are served more often under contention, but every
+    /// weight is ≥ 1 so no tier can be starved outright.
+    pub fn service_weight(self) -> u32 {
+        match self {
+            Tier::Exact => 8,
+            Tier::Balanced => 4,
+            Tier::Throughput => 2,
+            Tier::BestEffort => 1,
+        }
+    }
+
+    /// All service weights, indexed by [`Tier::idx`] (batcher config).
+    pub fn service_weights() -> [u32; NUM_TIERS] {
+        std::array::from_fn(|i| Tier::ALL[i].service_weight())
+    }
+
     /// Uncalibrated default budget (used before a monitor calibration).
     pub fn default_budget(self, total: usize) -> usize {
         match self {
@@ -129,6 +147,14 @@ mod tests {
         let tols: Vec<f32> = Tier::ALL.iter().filter_map(|t| t.tolerance()).collect();
         assert!(tols.windows(2).all(|w| w[0] < w[1]), "{tols:?}");
         assert_eq!(Tier::Exact.tolerance(), None);
+    }
+
+    #[test]
+    fn service_weights_strict_tiers_first_and_never_zero() {
+        let w = Tier::service_weights();
+        assert!(w.windows(2).all(|p| p[1] <= p[0]), "{w:?}");
+        assert!(w.iter().all(|&x| x >= 1), "zero weight would starve a tier: {w:?}");
+        assert_eq!(w[Tier::Exact.idx()], Tier::Exact.service_weight());
     }
 
     #[test]

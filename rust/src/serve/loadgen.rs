@@ -4,9 +4,9 @@
 //! (weighted tier draw per request) with per-tier latency reporting,
 //! the workload shape the QoS benches sweep.
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, SubmitError};
 use crate::datasets::trace::RequestTrace;
-use crate::qos::Tier;
+use crate::qos::{Tier, NUM_TIERS};
 use crate::tensor::{Rng, Tensor};
 use crate::util::stats::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,6 +18,8 @@ use std::time::{Duration, Instant};
 pub struct TierReport {
     pub tier: Tier,
     pub completed: usize,
+    /// requests refused at this tier's admission check
+    pub shed: usize,
     pub latency: Summary,
 }
 
@@ -81,7 +83,7 @@ pub fn run_trace_mix(
     assert!(total_w > 0.0, "tier mix weights must sum > 0");
     let events = trace.generate(duration_s);
     let offered = events.len();
-    let shed = Arc::new(AtomicU64::new(0));
+    let mut shed_by = [0usize; NUM_TIERS];
     let failed = Arc::new(AtomicU64::new(0));
     let latencies = Arc::new(std::sync::Mutex::new(Vec::<(Tier, f64)>::new()));
     let t0 = Instant::now();
@@ -122,8 +124,15 @@ pub fn run_trace_mix(
                     }
                 }));
             }
-            Err(_) => {
-                shed.fetch_add(1, Ordering::Relaxed);
+            // only admission-control refusals count as sheds; a closed
+            // coordinator (e.g. a dead forming thread) is a failure —
+            // conflating them would let a crash masquerade as healthy
+            // load shedding in the per-tier reports and BENCH json
+            Err(SubmitError::Busy(t)) => {
+                shed_by[t.idx()] += 1;
+            }
+            Err(SubmitError::Closed) => {
+                failed.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -139,13 +148,18 @@ pub fn run_trace_mix(
         .map(|tier| {
             let tl: Vec<f64> =
                 lats.iter().filter(|&&(t, _)| t == tier).map(|&(_, l)| l).collect();
-            TierReport { tier, completed: tl.len(), latency: Summary::of(&tl) }
+            TierReport {
+                tier,
+                completed: tl.len(),
+                shed: shed_by[tier.idx()],
+                latency: Summary::of(&tl),
+            }
         })
         .collect();
     LoadReport {
         offered,
         completed: all.len(),
-        shed: shed.load(Ordering::Relaxed) as usize,
+        shed: shed_by.iter().sum(),
         failed: failed.load(Ordering::Relaxed) as usize,
         wall_s: wall,
         throughput_rps: all.len() as f64 / wall.max(1e-9),
@@ -171,7 +185,7 @@ mod tests {
     fn fast_coordinator() -> Arc<Coordinator> {
         let pool = WorkerPool::new(2, Arc::new(|_| Box::new(Fast) as Box<dyn BasisWorker>));
         Arc::new(Coordinator::new(
-            BatcherConfig { max_batch: 16, max_wait_us: 300, queue_cap: 128 },
+            BatcherConfig::uniform(16, 300, 128),
             ExpansionScheduler::new(pool),
         ))
     }
@@ -189,6 +203,7 @@ mod tests {
         assert_eq!(report.per_tier.len(), 1);
         assert_eq!(report.per_tier[0].tier, Tier::Exact);
         assert_eq!(report.per_tier[0].completed, report.completed);
+        assert_eq!(report.per_tier[0].shed, report.shed, "all sheds were Exact");
     }
 
     #[test]

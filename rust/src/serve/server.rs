@@ -2,16 +2,23 @@
 //!
 //! request : [u32 n][u32 d][u32 tier][n·d × f32 LE]
 //! response: [u32 n][u32 c][n·c × f32 LE]
-//!           [0][0]                       shed / malformed request
+//!           [0][0][u32 tier]             shed: that tier's bounded queue
+//!                                        was full (per-tier admission
+//!                                        control; `tier` is the [`Tier`]
+//!                                        wire encoding of the queue that
+//!                                        refused the request)
 //!           [0][1][u32 len][len × u8]    batch failure (UTF-8 message)
+//!           [0][2]                       malformed request (bad header
+//!                                        or unknown tier); the
+//!                                        connection is closed
 //!
 //! `tier` is the QoS service tier ([`Tier`] wire encoding): it selects
 //! how many basis terms of the series the coordinator reduces for this
-//! request. The server is a thin shim over the in-process
-//! [`Coordinator`]; one OS thread per connection (std only — tokio is
-//! unavailable offline).
+//! request, and which bounded queue admits it. The server is a thin
+//! shim over the in-process [`Coordinator`]; one OS thread per
+//! connection (std only — tokio is unavailable offline).
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, SubmitError};
 use crate::qos::Tier;
 use crate::tensor::Tensor;
 use std::io::{Read, Write};
@@ -19,9 +26,13 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-/// Error code in the `[0][code]` response header.
-const CODE_SHED: u32 = 0;
-const CODE_BATCH_FAILED: u32 = 1;
+/// Error code in the `[0][code]` response header: per-tier shed frame
+/// (payload = the refusing tier's wire encoding).
+pub const CODE_SHED: u32 = 0;
+/// Error code: batch failure (payload = length-prefixed UTF-8 message).
+pub const CODE_BATCH_FAILED: u32 = 1;
+/// Error code: malformed request header or unknown tier (no payload).
+pub const CODE_MALFORMED: u32 = 2;
 
 /// Handle to a running TCP server.
 pub struct TcpServerHandle {
@@ -47,16 +58,24 @@ fn read_exact_u32(s: &mut TcpStream) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-fn write_error_frame(stream: &mut TcpStream, code: u32, msg: Option<&str>) -> bool {
-    let mut out = Vec::new();
+fn write_error_frame(stream: &mut TcpStream, code: u32, payload: &[u8]) -> bool {
+    let mut out = Vec::with_capacity(8 + payload.len());
     out.extend_from_slice(&0u32.to_le_bytes());
     out.extend_from_slice(&code.to_le_bytes());
-    if let Some(m) = msg {
-        let bytes = m.as_bytes();
-        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-        out.extend_from_slice(bytes);
-    }
+    out.extend_from_slice(payload);
     stream.write_all(&out).is_ok()
+}
+
+fn write_shed_frame(stream: &mut TcpStream, tier: Tier) -> bool {
+    write_error_frame(stream, CODE_SHED, &tier.as_u32().to_le_bytes())
+}
+
+fn write_failure_frame(stream: &mut TcpStream, msg: &str) -> bool {
+    let bytes = msg.as_bytes();
+    let mut payload = Vec::with_capacity(4 + bytes.len());
+    payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    payload.extend_from_slice(bytes);
+    write_error_frame(stream, CODE_BATCH_FAILED, &payload)
 }
 
 fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
@@ -70,13 +89,13 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
             Err(_) => return,
         };
         if n == 0 || d == 0 || n * d > 16 * 1024 * 1024 {
-            let _ = write_error_frame(&mut stream, CODE_SHED, None);
+            let _ = write_error_frame(&mut stream, CODE_MALFORMED, &[]);
             return;
         }
         let tier = match read_exact_u32(&mut stream).ok().and_then(Tier::from_u32) {
             Some(t) => t,
             None => {
-                let _ = write_error_frame(&mut stream, CODE_SHED, None);
+                let _ = write_error_frame(&mut stream, CODE_MALFORMED, &[]);
                 return;
             }
         };
@@ -91,9 +110,15 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
         let x = Tensor::from_vec(&[n, d], data);
         let rx = match coord.submit_tier(x, tier) {
             Ok(rx) => rx,
-            Err(e) => {
-                log::warn!("request shed: {e:?}");
-                if !write_error_frame(&mut stream, CODE_SHED, None) {
+            Err(SubmitError::Busy(full_tier)) => {
+                log::warn!("request shed: {full_tier} queue full");
+                if !write_shed_frame(&mut stream, full_tier) {
+                    return;
+                }
+                continue;
+            }
+            Err(SubmitError::Closed) => {
+                if !write_failure_frame(&mut stream, "coordinator stopped") {
                     return;
                 }
                 continue;
@@ -104,7 +129,7 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
                 None => resp.logits,
                 Some(msg) => {
                     log::warn!("request failed: {msg}");
-                    if !write_error_frame(&mut stream, CODE_BATCH_FAILED, Some(&msg)) {
+                    if !write_failure_frame(&mut stream, &msg) {
                         return;
                     }
                     continue;
@@ -112,11 +137,7 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
             },
             Err(_) => {
                 // batcher died mid-request; tell the client explicitly
-                if !write_error_frame(
-                    &mut stream,
-                    CODE_BATCH_FAILED,
-                    Some("coordinator stopped"),
-                ) {
+                if !write_failure_frame(&mut stream, "coordinator stopped") {
                     return;
                 }
                 continue;
@@ -185,13 +206,23 @@ pub fn client_infer_tier(
     let rn = read_exact_u32(&mut s)? as usize;
     let rc = read_exact_u32(&mut s)? as usize;
     if rn == 0 {
-        if rc as u32 == CODE_BATCH_FAILED {
-            let len = read_exact_u32(&mut s)? as usize;
-            let mut buf = vec![0u8; len.min(4096)];
-            s.read_exact(&mut buf)?;
-            anyhow::bail!("server error: {}", String::from_utf8_lossy(&buf));
+        match rc as u32 {
+            CODE_SHED => {
+                let wire = read_exact_u32(&mut s)?;
+                let queue = Tier::from_u32(wire)
+                    .map(|t| t.name().to_string())
+                    .unwrap_or_else(|| format!("#{wire}"));
+                anyhow::bail!("server shed the request: {queue} queue full");
+            }
+            CODE_BATCH_FAILED => {
+                let len = read_exact_u32(&mut s)? as usize;
+                let mut buf = vec![0u8; len.min(4096)];
+                s.read_exact(&mut buf)?;
+                anyhow::bail!("server error: {}", String::from_utf8_lossy(&buf));
+            }
+            CODE_MALFORMED => anyhow::bail!("server rejected the request as malformed"),
+            other => anyhow::bail!("unknown error frame code {other}"),
         }
-        anyhow::bail!("server shed the request");
     }
     anyhow::ensure!(rc > 0, "empty response frame");
     let mut buf = vec![0u8; rn * rc * 4];
@@ -222,9 +253,16 @@ mod tests {
         let pool =
             WorkerPool::new(1, Arc::new(|_| Box::new(Double) as Box<dyn BasisWorker>));
         Arc::new(Coordinator::new(
-            BatcherConfig { max_batch: 8, max_wait_us: 200, queue_cap: 64 },
+            BatcherConfig::uniform(8, 200, 64),
             ExpansionScheduler::new(pool),
         ))
+    }
+
+    fn frame_code(reply: &[u8; 8]) -> (u32, u32) {
+        (
+            u32::from_le_bytes(reply[0..4].try_into().unwrap()),
+            u32::from_le_bytes(reply[4..8].try_into().unwrap()),
+        )
     }
 
     #[test]
@@ -288,7 +326,7 @@ mod tests {
         s.write_all(&5u32.to_le_bytes()).unwrap();
         let mut reply = [0u8; 8];
         s.read_exact(&mut reply).unwrap();
-        assert_eq!(reply, [0u8; 8]);
+        assert_eq!(frame_code(&reply), (0, CODE_MALFORMED));
         handle.stop();
     }
 
@@ -302,7 +340,51 @@ mod tests {
         s.write_all(&99u32.to_le_bytes()).unwrap(); // no such tier
         let mut reply = [0u8; 8];
         s.read_exact(&mut reply).unwrap();
-        assert_eq!(reply, [0u8; 8]);
+        assert_eq!(frame_code(&reply), (0, CODE_MALFORMED));
+        handle.stop();
+    }
+
+    #[test]
+    fn shed_frame_names_the_full_tier_queue() {
+        struct Slow;
+        impl BasisWorker for Slow {
+            fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                Ok(x.clone())
+            }
+        }
+        let pool =
+            WorkerPool::new(1, Arc::new(|_| Box::new(Slow) as Box<dyn BasisWorker>));
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig::uniform(1, 10, 2),
+            ExpansionScheduler::new(pool),
+        ));
+        let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+        // saturate the Throughput queue in-process, keeping the worker busy
+        let mut keep = Vec::new();
+        let mut saturated = false;
+        for _ in 0..16 {
+            match coord.submit_tier(Tensor::zeros(&[1, 2]), Tier::Throughput) {
+                Ok(rx) => keep.push(rx),
+                Err(_) => {
+                    saturated = true;
+                    break;
+                }
+            }
+        }
+        assert!(saturated, "throughput queue must fill");
+        // a TCP request at the saturated tier gets a shed frame naming it
+        let err = client_infer_tier(handle.addr, &Tensor::zeros(&[1, 2]), Tier::Throughput)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("throughput queue full"), "shed reason missing tier: {msg}");
+        assert!(coord.tier_shed(Tier::Throughput) >= 1);
+        // other tiers are still admitted (per-tier admission control)
+        let y = client_infer_tier(handle.addr, &Tensor::zeros(&[1, 2]), Tier::Exact).unwrap();
+        assert_eq!(y.dims(), &[1, 2]);
+        for rx in keep {
+            let _ = rx.recv_timeout(std::time::Duration::from_secs(20));
+        }
         handle.stop();
     }
 
@@ -317,7 +399,7 @@ mod tests {
         let pool =
             WorkerPool::new(1, Arc::new(|_| Box::new(Failing) as Box<dyn BasisWorker>));
         let coord = Arc::new(Coordinator::new(
-            BatcherConfig { max_batch: 4, max_wait_us: 100, queue_cap: 16 },
+            BatcherConfig::uniform(4, 100, 16),
             ExpansionScheduler::new(pool),
         ));
         let handle = serve_tcp("127.0.0.1:0", coord).unwrap();

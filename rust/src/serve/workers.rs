@@ -306,10 +306,7 @@ mod tests {
         let terms = 3;
         let pool = WorkerPool::new(terms, mlp_basis_factory(&w, 8, terms));
         let sched = ExpansionScheduler::new(pool);
-        let coord = Coordinator::new(
-            BatcherConfig { max_batch: 8, max_wait_us: 500, queue_cap: 32 },
-            sched,
-        );
+        let coord = Coordinator::new(BatcherConfig::uniform(8, 500, 32), sched);
         let mut rng = Rng::seed(54);
         for _ in 0..4 {
             let x = Tensor::randn(&[2, 32], 1.0, &mut rng);

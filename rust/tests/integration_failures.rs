@@ -38,7 +38,7 @@ fn failing_batches_are_reported_not_hung() {
         }),
     );
     let coord = Coordinator::new(
-        BatcherConfig { max_batch: 1, max_wait_us: 100, queue_cap: 16 },
+        BatcherConfig::uniform(1, 100, 16),
         ExpansionScheduler::new(pool),
     );
     let mut ok = 0;
@@ -121,7 +121,7 @@ fn overload_sheds_instead_of_oom() {
     }
     let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Slow) as Box<dyn BasisWorker>));
     let coord = Coordinator::new(
-        BatcherConfig { max_batch: 1, max_wait_us: 10, queue_cap: 4 },
+        BatcherConfig::uniform(1, 10, 4),
         ExpansionScheduler::new(pool),
     );
     let mut shed = 0;
@@ -129,7 +129,10 @@ fn overload_sheds_instead_of_oom() {
     for _ in 0..64 {
         match coord.submit(Tensor::zeros(&[1, 2])) {
             Ok(rx) => accepted.push(rx),
-            Err(fp_xint::coordinator::SubmitError::Busy) => shed += 1,
+            Err(fp_xint::coordinator::SubmitError::Busy(t)) => {
+                assert_eq!(t, fp_xint::qos::Tier::Exact, "shed reason names the tier");
+                shed += 1;
+            }
             Err(e) => panic!("{e:?}"),
         }
     }
@@ -160,7 +163,12 @@ fn tcp_garbage_header_closes_cleanly() {
     s.write_all(&u32::MAX.to_le_bytes()).unwrap();
     let mut reply = [0u8; 8];
     s.read_exact(&mut reply).unwrap();
-    assert_eq!(reply, [0u8; 8], "oversized request must be shed");
+    assert_eq!(u32::from_le_bytes(reply[0..4].try_into().unwrap()), 0);
+    assert_eq!(
+        u32::from_le_bytes(reply[4..8].try_into().unwrap()),
+        fp_xint::serve::server::CODE_MALFORMED,
+        "oversized request must be rejected as malformed"
+    );
     // server still serves normal traffic afterwards
     let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
     let y = fp_xint::serve::server::client_infer(handle.addr, &x).unwrap();

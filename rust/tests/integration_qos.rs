@@ -143,7 +143,7 @@ fn pressure_degrades_then_restores_under_load() {
         }),
     );
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 1, max_wait_us: 100, queue_cap: 16 },
+        BatcherConfig::uniform(1, 100, 16),
         ExpansionScheduler::new(pool).with_controller(ctl.clone()),
     ));
     // burst: fill most of the queue, then watch pressure rise
@@ -173,6 +173,65 @@ fn pressure_degrades_then_restores_under_load() {
 }
 
 #[test]
+fn property_no_tier_starves_under_a_sustained_flood() {
+    // for every flood tier F: requests of every other tier, submitted
+    // while F saturates its own queue, must still complete — the WDRR
+    // per-tier queues guarantee each non-empty queue is visited every
+    // rotation, so no tier can monopolize service
+    use std::sync::atomic::{AtomicBool, Ordering};
+    for flood in Tier::ALL {
+        let pool = WorkerPool::new(
+            2,
+            Arc::new(|_| {
+                Box::new(Sleepy(std::time::Duration::from_millis(2))) as Box<dyn BasisWorker>
+            }),
+        );
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig::uniform(4, 200, 64),
+            ExpansionScheduler::new(pool),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let flooder = {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    match coord.submit_tier(Tensor::zeros(&[1, 2]), flood) {
+                        Ok(rx) => accepted.push(rx),
+                        Err(_) => std::thread::yield_now(),
+                    }
+                }
+                // flood replies must also all arrive (no tier starves,
+                // including the flooding tier itself)
+                for rx in accepted {
+                    assert!(
+                        rx.recv_timeout(std::time::Duration::from_secs(30)).is_ok(),
+                        "flood tier {flood} lost a reply"
+                    );
+                }
+            })
+        };
+        // let the flood saturate its queue, then submit the victims
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        for tier in Tier::ALL {
+            if tier == flood {
+                continue;
+            }
+            let rx = coord
+                .submit_tier(Tensor::zeros(&[1, 2]), tier)
+                .unwrap_or_else(|e| panic!("{tier} refused during a {flood} flood: {e:?}"));
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(20))
+                .unwrap_or_else(|_| panic!("{tier} starved under a {flood} flood"));
+            assert!(resp.error.is_none(), "{tier} errored under a {flood} flood");
+        }
+        stop.store(true, Ordering::Relaxed);
+        flooder.join().unwrap();
+    }
+}
+
+#[test]
 fn tcp_mixed_tiers_end_to_end() {
     let mut rng = Rng::seed(0xD00D);
     let w = MlpWeights {
@@ -192,7 +251,7 @@ fn tcp_mixed_tiers_end_to_end() {
     let pool =
         WorkerPool::new(terms, mlp_basis_factory_with(&w, 4, terms, BiasPlacement::FirstTerm));
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 8, max_wait_us: 300, queue_cap: 64 },
+        BatcherConfig::uniform(8, 300, 64),
         ExpansionScheduler::new(pool).with_controller(ctl.clone()),
     ));
     let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();

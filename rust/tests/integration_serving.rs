@@ -59,7 +59,7 @@ fn coordinator_survives_concurrent_tcp_load() {
     let w = weights(93);
     let pool = WorkerPool::new(3, mlp_basis_factory(&w, 8, 3));
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 16, max_wait_us: 500, queue_cap: 256 },
+        BatcherConfig::uniform(16, 500, 256),
         ExpansionScheduler::new(pool),
     ));
     let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
@@ -115,7 +115,7 @@ fn batcher_latency_accounting_sane() {
     let w = weights(96);
     let pool = WorkerPool::new(2, mlp_basis_factory(&w, 8, 2));
     let coord = Arc::new(Coordinator::new(
-        BatcherConfig { max_batch: 8, max_wait_us: 2_000, queue_cap: 64 },
+        BatcherConfig::uniform(8, 2_000, 64),
         ExpansionScheduler::new(pool),
     ));
     let mut rng = Rng::seed(97);
