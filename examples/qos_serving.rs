@@ -126,7 +126,12 @@ fn main() {
     logger::init(false);
     let w = weights(71);
     let ctl = calibrated_controller();
-    println!("calibrated term budgets per tier: {:?}", ctl.snapshot().budgets);
+    let snap = ctl.snapshot();
+    println!("calibrated term budgets per tier: {:?}", snap.budgets);
+    println!(
+        "calibrated layer budgets (replication mode, w×a caps): {:?}",
+        snap.layer_budgets.iter().map(|b| b.to_string()).collect::<Vec<_>>()
+    );
 
     // ---------- phase 1: steady mixed-tier traffic ----------
     let (handle, coord) = start_server(&w, 256, Some(ctl.clone()));

@@ -1,0 +1,121 @@
+//! Perf — runtime term budgets in replication mode: the same layer-sync
+//! quantized model served at every tier's layer-granularity
+//! [`TermBudget`]. The Exact tier must be bit-identical to the legacy
+//! full-grid forward; the BestEffort tier must run a real speedup by
+//! executing fewer (i, j) INT GEMM terms, not by skipping layers.
+//!
+//!     cargo bench --bench perf_budget
+//!
+//! Emits `BENCH_budget.json` (per-tier latency / grid terms / rel err +
+//! the BestEffort speedup and the Exact bit-identity flag) so the
+//! regression gate can hold the budget contract across PRs. The gated
+//! speedup is measured as an *adjacent* full-vs-budget pair of p50s
+//! (back-to-back on the same core, so runner drift cancels), and the
+//! grid-term cut is gated deterministically.
+
+use fp_xint::bench_support::write_bench_json;
+use fp_xint::models::quantized::quantize_model;
+use fp_xint::models::zoo;
+use fp_xint::qos::{QosConfig, TermController, Tier};
+use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::util::json::Json;
+use fp_xint::util::{logger, BenchTimer, Table};
+use fp_xint::xint::layer::LayerPolicy;
+use fp_xint::xint::TermBudget;
+
+fn main() {
+    logger::init(false);
+    let timer = BenchTimer::new(2, 10);
+    let mut rng = Rng::seed(77);
+    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    let mut m = zoo::mini_resnet_a(10, 78);
+    let _ = m.forward_train(&probe); // settle BN stats before folding
+    let q = quantize_model(&m, LayerPolicy::new(4, 4)); // k=2, t=4 interior
+    let x = Tensor::randn(&[8, 1, 16, 16], 1.0, &mut rng);
+
+    // Exact contract: the budgeted stack with a full budget reproduces
+    // the legacy forward bit for bit (shared natural-order grid path)
+    let legacy = q.forward(&x);
+    let (full_y, full_stats) = q.forward_with(&x, &TermBudget::full());
+    let exact_bit_identical = legacy.data() == full_y.data();
+
+    // tier ladder → layer budgets via the controller (uncalibrated
+    // defaults; replication mode = single whole-model worker)
+    let ctl = TermController::new(QosConfig::new(1));
+    let full_time = timer.run(|| q.forward_with(&x, &TermBudget::full()));
+
+    let mut table = Table::new(
+        "perf — replication-mode forward under per-tier layer budgets (mini_resnet_a W4A4)",
+        &["tier", "budget (w×a)", "grid terms", "forward (ms)", "speedup", "rel err"],
+    );
+    let mut tier_json: Vec<Json> = Vec::new();
+    let mut besteffort_grid = full_stats.grid_terms;
+    for tier in Tier::ALL {
+        let budget = ctl.layer_budget_for(tier);
+        let (y, stats) = q.forward_with(&x, &budget);
+        let s = timer.run(|| q.forward_with(&x, &budget));
+        let speedup = full_time.p50 / s.p50;
+        let rel = legacy.sub(&y).norm() / legacy.norm().max(1e-12);
+        if tier == Tier::BestEffort {
+            besteffort_grid = stats.grid_terms;
+        }
+        table.row_str(&[
+            tier.name(),
+            &budget.to_string(),
+            &stats.grid_terms.to_string(),
+            &format!("{:.3}", s.p50 * 1e3),
+            &format!("{speedup:.2}×"),
+            &format!("{rel:.2e}"),
+        ]);
+        tier_json.push(Json::obj([
+            ("tier", Json::str(tier.name())),
+            ("grid_terms", Json::num(stats.grid_terms as f64)),
+            ("forward_ms", Json::num(s.p50 * 1e3)),
+            ("speedup", Json::num(speedup)),
+            ("rel_err", Json::num(rel as f64)),
+        ]));
+    }
+    table.print();
+
+    // the gated speedup: an adjacent full/BestEffort pair, measured
+    // back to back so shared-runner drift hits both sides equally
+    let be_budget = ctl.layer_budget_for(Tier::BestEffort);
+    let full_adj = timer.run(|| q.forward_with(&x, &TermBudget::full()));
+    let be_adj = timer.run(|| q.forward_with(&x, &be_budget));
+    let besteffort_speedup = full_adj.p50 / be_adj.p50;
+
+    println!(
+        "\nfull grid: {} GEMM terms over {} expanded layers; exact bit-identical: {}",
+        full_stats.grid_terms, full_stats.layers, exact_bit_identical
+    );
+    println!(
+        "besteffort: {} GEMM terms (full: {}), adjacent-pair speedup {besteffort_speedup:.2}× \
+         (target ≥ 1.5×)",
+        besteffort_grid, full_stats.grid_terms
+    );
+
+    let json = Json::obj([
+        ("bench", Json::str("budget")),
+        ("model", Json::str("mini_resnet_a_w4a4")),
+        ("full_forward_ms", Json::num(full_adj.p50 * 1e3)),
+        ("full_grid_terms", Json::num(full_stats.grid_terms as f64)),
+        ("exact_bit_identical", Json::num(if exact_bit_identical { 1.0 } else { 0.0 })),
+        ("besteffort_speedup", Json::num(besteffort_speedup)),
+        ("besteffort_grid_terms", Json::num(besteffort_grid as f64)),
+        // deterministic compute-cut ratio (independent of runner noise)
+        (
+            "grid_cut_ratio",
+            Json::num(full_stats.grid_terms as f64 / (besteffort_grid as f64).max(1.0)),
+        ),
+        ("tiers", Json::Arr(tier_json)),
+    ]);
+    match write_bench_json("budget", &json) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nBENCH json write failed: {e}"),
+    }
+    println!(
+        "\ntarget: the Exact tier is bit-identical to the pre-budget forward;\n\
+         BestEffort cuts the executed (i, j) grid (k·t → 1) for a ≥ 1.5×\n\
+         replication-mode speedup — precision-for-latency at layer granularity."
+    );
+}

@@ -539,6 +539,7 @@ mod tests {
                     latency_s: p.enqueued_at.elapsed().as_secs_f64(),
                     tier: p.tier,
                     terms: 0,
+                    grid_terms: 0,
                     error: None,
                 });
             }
@@ -553,6 +554,7 @@ mod tests {
                 latency_s: p.enqueued_at.elapsed().as_secs_f64(),
                 tier: p.tier,
                 terms: 0,
+                grid_terms: 0,
                 error: None,
             });
         }

@@ -20,6 +20,13 @@ pub struct Metrics {
     tier_completed: [AtomicU64; NUM_TIERS],
     /// per-tier sum of terms reduced (mean = /completed)
     tier_terms: [AtomicU64; NUM_TIERS],
+    /// per-tier sum of INT GEMM grid terms executed by budget-aware
+    /// workers, recorded once per formed batch (a batch's forward is
+    /// shared by its requests, so per-request attribution would scale
+    /// with batch size and make tiers incomparable)
+    tier_grid_terms: [AtomicU64; NUM_TIERS],
+    /// per-tier count of batches with grid accounting (mean divisor)
+    tier_grid_batches: [AtomicU64; NUM_TIERS],
     /// per-tier latency reservoirs
     tier_latencies: [Mutex<Vec<f64>>; NUM_TIERS],
     /// per-tier worst estimated precision loss (max-residual estimate
@@ -125,6 +132,28 @@ impl Metrics {
         }
     }
 
+    /// Record one formed batch's INT GEMM grid spend at `tier` (the
+    /// batch forward is shared by all its requests — call once per
+    /// batch, not per request).
+    pub fn record_batch_grid(&self, tier: Tier, grid_terms: usize) {
+        let i = tier.idx();
+        self.tier_grid_terms[i].fetch_add(grid_terms as u64, Ordering::Relaxed);
+        self.tier_grid_batches[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean INT GEMM grid terms executed per *batch forward* at `tier`
+    /// — the layer-granularity budget's observable (0 for unmetered
+    /// backends). Note: conv grid spend scales with the rows in a
+    /// batch, so compare tiers under similar batch shapes.
+    pub fn tier_mean_grid_terms(&self, tier: Tier) -> f64 {
+        let n = self.tier_grid_batches[tier.idx()].load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.tier_grid_terms[tier.idx()].load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
     /// Latency summary for one tier.
     pub fn tier_latency_summary(&self, tier: Tier) -> crate::util::stats::Summary {
         crate::util::stats::Summary::of(&self.tier_latencies[tier.idx()].lock().unwrap())
@@ -164,6 +193,9 @@ mod tests {
         m.record_completed_tier(Tier::Exact, 0.004, 8, None);
         m.record_completed_tier(Tier::Throughput, 0.001, 2, Some(0.01));
         m.record_completed_tier(Tier::Throughput, 0.002, 4, Some(0.002));
+        m.record_batch_grid(Tier::Exact, 64);
+        m.record_batch_grid(Tier::Throughput, 6);
+        m.record_batch_grid(Tier::Throughput, 10);
         assert_eq!(m.completed(), 3);
         assert_eq!(m.tier_completed(Tier::Exact), 1);
         assert_eq!(m.tier_completed(Tier::Throughput), 2);
@@ -171,6 +203,9 @@ mod tests {
         assert!((m.tier_mean_terms(Tier::Throughput) - 3.0).abs() < 1e-9);
         assert!((m.tier_mean_terms(Tier::Exact) - 8.0).abs() < 1e-9);
         assert_eq!(m.tier_mean_terms(Tier::Balanced), 0.0);
+        assert!((m.tier_mean_grid_terms(Tier::Throughput) - 8.0).abs() < 1e-9);
+        assert!((m.tier_mean_grid_terms(Tier::Exact) - 64.0).abs() < 1e-9);
+        assert_eq!(m.tier_mean_grid_terms(Tier::Balanced), 0.0);
         // worst loss wins
         assert!((m.tier_est_loss(Tier::Throughput) - 0.01).abs() < 1e-9);
         assert_eq!(m.tier_est_loss(Tier::Exact), 0.0);

@@ -22,7 +22,7 @@ pub mod scheduler;
 
 pub use batcher::{Batcher, BatcherConfig, ServicePolicy, SubmitError};
 pub use metrics::Metrics;
-pub use pool::{BasisWorker, WorkerPool};
+pub use pool::{BasisWorker, BudgetedRun, WorkerPool};
 pub use scheduler::ExpansionScheduler;
 
 use crate::qos::Tier;
@@ -53,6 +53,13 @@ pub struct Response {
     pub tier: Tier,
     /// number of series terms reduced into `logits`
     pub terms: usize,
+    /// INT GEMM `(i, j)` grid terms executed by budget-aware workers
+    /// and *reduced into this reply* — a batch-level observable (the
+    /// batch forward is shared by its requests). 0 when the backend
+    /// doesn't meter grids. In anytime mode a discarded speculative
+    /// lookahead run is not counted: this meters the compute behind the
+    /// answer, not total compute burned.
+    pub grid_terms: usize,
     /// protocol-level failure carried to the caller (batch error)
     pub error: Option<String>,
 }
@@ -66,6 +73,7 @@ impl Response {
             latency_s,
             tier,
             terms: 0,
+            grid_terms: 0,
             error: Some(msg),
         }
     }

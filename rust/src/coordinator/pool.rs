@@ -7,9 +7,23 @@
 //! (§5.1: "the activations of all base models are broadcast").
 
 use crate::tensor::Tensor;
+use crate::xint::budget::TermBudget;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+
+/// One worker invocation's result: the partial output plus what the
+/// worker actually spent on it (0 when the backend has no Eq. 3 grid
+/// to meter — e.g. the Theorem-2 basis slices, which are themselves
+/// single terms).
+pub struct BudgetedRun {
+    pub y: Tensor,
+    /// INT GEMM `(i, j)` terms executed inside the worker
+    pub grid_terms: usize,
+}
+
+/// Reply channel of one dispatched job (worker index + its result).
+pub type RunReceiver = mpsc::Receiver<(usize, anyhow::Result<BudgetedRun>)>;
 
 /// One basis model's compute: activation batch in, partial output out.
 ///
@@ -18,6 +32,15 @@ use std::thread::JoinHandle;
 /// (`Rc`-based in the `xla` crate).
 pub trait BasisWorker {
     fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor>;
+
+    /// Budget-aware entry point. The default ignores the budget and
+    /// reports no grid spend, so existing workers keep their exact
+    /// behavior; backends with a runtime-truncatable term grid
+    /// (`QuantModelWorker`) override it.
+    fn run_budgeted(&mut self, x: &Tensor, budget: &TermBudget) -> anyhow::Result<BudgetedRun> {
+        let _ = budget;
+        Ok(BudgetedRun { y: self.run(x)?, grid_terms: 0 })
+    }
 }
 
 /// Factory constructing worker `i` inside its thread. The factory itself
@@ -26,7 +49,11 @@ pub trait BasisWorker {
 pub type WorkerFactory = Arc<dyn Fn(usize) -> Box<dyn BasisWorker> + Send + Sync>;
 
 enum Job {
-    Broadcast { x: Arc<Tensor>, out: mpsc::Sender<(usize, anyhow::Result<Tensor>)> },
+    Broadcast {
+        x: Arc<Tensor>,
+        budget: TermBudget,
+        out: mpsc::Sender<(usize, anyhow::Result<BudgetedRun>)>,
+    },
     Stop,
 }
 
@@ -51,8 +78,8 @@ impl WorkerPool {
                         let mut worker = factory(i);
                         while let Ok(job) = rx.recv() {
                             match job {
-                                Job::Broadcast { x, out } => {
-                                    let res = worker.run(&x);
+                                Job::Broadcast { x, budget, out } => {
+                                    let res = worker.run_budgeted(&x, &budget);
                                     // receiver may be gone on shutdown
                                     let _ = out.send((i, res));
                                 }
@@ -85,16 +112,33 @@ impl WorkerPool {
     /// first `n` basis outputs reduce to a valid lower-precision model
     /// (the QoS tiers ride this). Outputs return in worker order 0..n.
     pub fn broadcast_to(&self, x: Tensor, n: usize) -> anyhow::Result<Vec<Tensor>> {
+        Ok(self
+            .broadcast_runs(x, n, TermBudget::full())?
+            .into_iter()
+            .map(|r| r.y)
+            .collect())
+    }
+
+    /// [`WorkerPool::broadcast_to`] with an explicit per-worker
+    /// [`TermBudget`] — budget-aware workers truncate their own Eq. 3
+    /// grids and report the GEMM terms spent.
+    pub fn broadcast_runs(
+        &self,
+        x: Tensor,
+        n: usize,
+        budget: TermBudget,
+    ) -> anyhow::Result<Vec<BudgetedRun>> {
         anyhow::ensure!(n >= 1, "broadcast needs at least one worker");
         anyhow::ensure!(n <= self.senders.len(), "prefix {n} exceeds pool {}", self.senders.len());
         let x = Arc::new(x);
         let (tx, rx) = mpsc::channel();
         for s in &self.senders[..n] {
-            s.send(Job::Broadcast { x: x.clone(), out: tx.clone() })
+            s.send(Job::Broadcast { x: x.clone(), budget, out: tx.clone() })
                 .map_err(|_| anyhow::anyhow!("worker thread died"))?;
         }
         drop(tx);
-        let mut outs: Vec<Option<Tensor>> = vec![None; n];
+        let mut outs: Vec<Option<BudgetedRun>> = Vec::new();
+        outs.resize_with(n, || None);
         for _ in 0..n {
             let (i, res) = rx.recv().map_err(|_| anyhow::anyhow!("worker output lost"))?;
             outs[i] = Some(res?);
@@ -102,11 +146,17 @@ impl WorkerPool {
         Ok(outs.into_iter().map(|o| o.expect("all workers reported")).collect())
     }
 
-    /// Run `x` on worker `i` alone and wait for its output — the
-    /// streamed anytime path: terms are dispatched one at a time in
-    /// series order, so an early stop means workers past the stop point
-    /// never run at all (a parallel broadcast would waste their compute).
-    pub fn run_one(&self, i: usize, x: Arc<Tensor>) -> anyhow::Result<Tensor> {
+    /// Dispatch `x` to worker `i` WITHOUT waiting: returns the reply
+    /// channel. This is the primitive under the streamed anytime path's
+    /// one-term-lookahead pipeline — the scheduler keeps exactly one
+    /// speculative dispatch in flight while it inspects the previous
+    /// term, so an early stop wastes at most one worker run.
+    pub fn dispatch_one(
+        &self,
+        i: usize,
+        x: Arc<Tensor>,
+        budget: TermBudget,
+    ) -> anyhow::Result<RunReceiver> {
         anyhow::ensure!(
             i < self.senders.len(),
             "worker {i} out of range (pool of {})",
@@ -114,10 +164,16 @@ impl WorkerPool {
         );
         let (tx, rx) = mpsc::channel();
         self.senders[i]
-            .send(Job::Broadcast { x, out: tx })
+            .send(Job::Broadcast { x, budget, out: tx })
             .map_err(|_| anyhow::anyhow!("worker thread died"))?;
+        Ok(rx)
+    }
+
+    /// Run `x` on worker `i` alone and wait for its output.
+    pub fn run_one(&self, i: usize, x: Arc<Tensor>) -> anyhow::Result<Tensor> {
+        let rx = self.dispatch_one(i, x, TermBudget::full())?;
         let (_, res) = rx.recv().map_err(|_| anyhow::anyhow!("worker output lost"))?;
-        res
+        Ok(res?.y)
     }
 
     /// Stop all workers and join.
@@ -183,6 +239,41 @@ mod tests {
         assert_eq!(pool.run_one(2, x.clone()).unwrap().data(), &[7.0]);
         assert!(pool.run_one(3, x).is_err(), "out-of-range worker index");
         pool.shutdown();
+    }
+
+    #[test]
+    fn budget_reaches_workers_and_spend_reports_back() {
+        struct BudgetEcho;
+        impl BasisWorker for BudgetEcho {
+            fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+                Ok(x.clone())
+            }
+            fn run_budgeted(
+                &mut self,
+                x: &Tensor,
+                budget: &TermBudget,
+            ) -> anyhow::Result<BudgetedRun> {
+                // report the (clamped) activation cap as "spend"
+                Ok(BudgetedRun { y: x.clone(), grid_terms: budget.a_terms.min(100) })
+            }
+        }
+        let pool =
+            WorkerPool::new(2, Arc::new(|_| Box::new(BudgetEcho) as Box<dyn BasisWorker>));
+        let runs = pool
+            .broadcast_runs(Tensor::vec1(&[1.0]), 2, TermBudget::new(2, 3))
+            .unwrap();
+        assert!(runs.iter().all(|r| r.grid_terms == 3));
+        // the budget-free API defaults to a full budget
+        let runs = pool.broadcast_runs(Tensor::vec1(&[1.0]), 2, TermBudget::full()).unwrap();
+        assert!(runs.iter().all(|r| r.grid_terms == 100));
+        // workers without an override report zero spend
+        let plain =
+            WorkerPool::new(1, Arc::new(|i| Box::new(AddConst(i as f32)) as Box<dyn BasisWorker>));
+        let runs = plain.broadcast_runs(Tensor::vec1(&[1.0]), 1, TermBudget::new(1, 1)).unwrap();
+        assert_eq!(runs[0].grid_terms, 0);
+        assert_eq!(runs[0].y.data(), &[1.0]);
+        pool.shutdown();
+        plain.shutdown();
     }
 
     #[test]

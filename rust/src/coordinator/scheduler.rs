@@ -8,13 +8,18 @@
 //! the prefix is a valid lower-precision model) and feeds the
 //! controller exactly ONE [`observe_batch`](TermController::observe_batch)
 //! decision per formed batch (hottest per-tier queue occupancy + batch
-//! service time). In *anytime* mode the prefix is **streamed**: terms
-//! are dispatched to workers one at a time in series order and the
+//! service time), and runs every worker under the tier's
+//! layer-granularity [`TermBudget`]
+//! ([`TermController::layer_budget_for`]) so budget-aware replication
+//! workers truncate their own Eq. 3 grids. In *anytime* mode the prefix
+//! is **streamed** with a one-term lookahead: terms dispatch in series
+//! order with exactly one speculative dispatch in flight, and the
 //! reduction stops once the marginal term's contribution falls below
-//! the batch tolerance — workers past the stop point never run, so the
-//! early stop saves basis compute, not just the adds. Failed batches
-//! send an explicit error [`Response`] so protocol clients get an error
-//! frame instead of a dropped channel.
+//! the batch tolerance — at most one worker past the stop point ever
+//! runs, so the early stop still saves basis compute while dispatch
+//! overlaps the previous term's reduction. Failed batches send an
+//! explicit error [`Response`] so protocol clients get an error frame
+//! instead of a dropped channel.
 
 use super::batcher::FormedBatch;
 use super::metrics::Metrics;
@@ -23,7 +28,16 @@ use super::Response;
 use crate::qos::{TermController, NUM_TIERS};
 use crate::tensor::Tensor;
 use crate::xint::abelian::abelian_reduce;
+use crate::xint::budget::TermBudget;
 use std::sync::Arc;
+
+/// One reduced batch: the output, the basis terms reduced, and the INT
+/// GEMM grid terms budget-aware workers reported executing.
+struct Reduced {
+    y: Tensor,
+    terms: usize,
+    grid_terms: usize,
+}
 
 pub struct ExpansionScheduler {
     pool: WorkerPool,
@@ -81,22 +95,33 @@ impl ExpansionScheduler {
             Some(ctl) => ctl.budget_for(tier).min(self.pool.len()).max(1),
             None => self.pool.len(),
         };
+        // layer-granularity budget (replication-mode workers truncate
+        // their own Eq. 3 grids); full when no controller is attached
+        let layer_budget = match &self.controller {
+            Some(ctl) => ctl.layer_budget_for(tier),
+            None => TermBudget::full(),
+        };
         let anytime_tol = self
             .controller
             .as_ref()
             .filter(|ctl| ctl.config().anytime)
             .and_then(|ctl| ctl.batch_tolerance([tier]));
-        let result = self.reduce_prefix(batch.x.clone(), budget, anytime_tol);
+        let result = self.reduce_prefix(batch.x.clone(), budget, layer_budget, anytime_tol);
         match result {
-            Ok((logits, terms_used)) => {
+            Ok(reduced) => {
+                let terms_used = reduced.terms;
                 let logits = match &self.tier_gains {
-                    Some(g) if g[tier.idx()] != 1.0 => logits.scale(g[tier.idx()]),
-                    _ => logits,
+                    Some(g) if g[tier.idx()] != 1.0 => reduced.y.scale(g[tier.idx()]),
+                    _ => reduced.y,
                 };
                 let est_loss = self
                     .controller
                     .as_ref()
                     .and_then(|ctl| ctl.estimated_loss(terms_used));
+                // the batch forward is shared by every request in it:
+                // grid spend is a batch-level observable, recorded once
+                // (and BEFORE replies, so callers can assert on it)
+                metrics.record_batch_grid(tier, reduced.grid_terms);
                 let mut row = 0usize;
                 let classes = logits.dims()[1];
                 for p in batch.parts {
@@ -112,6 +137,7 @@ impl ExpansionScheduler {
                         latency_s: latency,
                         tier: p.tier,
                         terms: terms_used,
+                        grid_terms: reduced.grid_terms,
                         error: None,
                     });
                 }
@@ -142,12 +168,12 @@ impl ExpansionScheduler {
     /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree
     /// over the full pool.
     pub fn forward(&self, x: Tensor) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, self.pool.len(), None)?.0)
+        Ok(self.reduce_prefix(x, self.pool.len(), TermBudget::full(), None)?.y)
     }
 
     /// Truncated forward: reduce only the first `n` basis outputs.
     pub fn forward_truncated(&self, x: Tensor, n: usize) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, n, None)?.0)
+        Ok(self.reduce_prefix(x, n, TermBudget::full(), None)?.y)
     }
 
     /// Anytime forward over the first `n` workers: stream terms in
@@ -161,37 +187,46 @@ impl ExpansionScheduler {
         n: usize,
         tol: f32,
     ) -> anyhow::Result<(Tensor, usize)> {
-        self.reduce_prefix(x, n, Some(tol))
+        let r = self.reduce_prefix(x, n, TermBudget::full(), Some(tol))?;
+        Ok((r.y, r.terms))
     }
 
-    /// Reduce the first `n` basis outputs (with gains applied). Without
-    /// a tolerance, broadcast to all `n` workers in parallel and reduce
-    /// as a balanced tree. With a tolerance, **stream**: dispatch one
-    /// worker at a time in series order and stop as soon as a term's
-    /// contribution drops below the threshold — workers past the stop
-    /// point are never dispatched, trading broadcast parallelism for a
-    /// real compute saving (the anytime mode exists to shed load).
+    /// Reduce the first `n` basis outputs (with gains applied), each
+    /// worker running under `layer_budget`. Without a tolerance,
+    /// broadcast to all `n` workers in parallel and reduce as a
+    /// balanced tree. With a tolerance, **stream** with a one-term
+    /// lookahead pipeline: while term `i` is being inspected (gain,
+    /// threshold check, add), term `i+1` is already in flight — the
+    /// early stop then wastes at most ONE speculative worker run, while
+    /// a hit recovers the dispatch/compute overlap the strictly serial
+    /// stream gave up (PR 2 dispatched one term at a time, fully
+    /// serializing term latency when the stop never triggered).
     fn reduce_prefix(
         &self,
         x: Tensor,
         n: usize,
+        layer_budget: TermBudget,
         tol: Option<f32>,
-    ) -> anyhow::Result<(Tensor, usize)> {
+    ) -> anyhow::Result<Reduced> {
         match tol {
             None => {
-                let outs = self.pool.broadcast_to(x, n)?;
-                let outs: Vec<Tensor> = match &self.gains {
-                    Some(g) => outs
-                        .into_iter()
-                        .zip(g)
-                        .map(|(o, &gain)| o.scale(gain))
-                        .collect(),
-                    None => outs,
-                };
+                let runs = self.pool.broadcast_runs(x, n, layer_budget)?;
+                let mut grid_terms = 0usize;
+                let outs: Vec<Tensor> = runs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        grid_terms += r.grid_terms;
+                        match &self.gains {
+                            Some(g) => r.y.scale(g[i]),
+                            None => r.y,
+                        }
+                    })
+                    .collect();
                 let terms = outs.len();
                 let y = abelian_reduce(outs)
                     .ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
-                Ok((y, terms))
+                Ok(Reduced { y, terms, grid_terms })
             }
             Some(tol) => {
                 anyhow::ensure!(n >= 1, "anytime reduction needs at least one term");
@@ -201,34 +236,63 @@ impl ExpansionScheduler {
                     self.pool.len()
                 );
                 let x = Arc::new(x);
-                let mut acc = self.term_output(0, x.clone())?;
+                let gained = |y: Tensor, i: usize| match &self.gains {
+                    Some(g) => y.scale(g[i]),
+                    None => y,
+                };
+                let recv_run = |rx: super::pool::RunReceiver| {
+                    let (_, res) =
+                        rx.recv().map_err(|_| anyhow::anyhow!("worker output lost"))?;
+                    res
+                };
+                // term 0 is always consumed and sets the stop threshold;
+                // its lookahead (term 1) is dispatched before we block
+                let head = self.pool.dispatch_one(0, x.clone(), layer_budget)?;
+                let mut pending = if n > 1 {
+                    Some(self.pool.dispatch_one(1, x.clone(), layer_budget)?)
+                } else {
+                    None
+                };
+                let run = recv_run(head)?;
+                let mut grid_terms = run.grid_terms;
+                let mut acc = gained(run.y, 0);
                 // relative threshold: tolerance × leading-term magnitude,
-                // so the stop rule is invariant to the input's scale
+                // invariant to the input's scale
                 let threshold = tol * acc.max_abs();
                 let mut terms = 1usize;
                 for i in 1..n {
-                    let term = self.term_output(i, x.clone())?;
+                    // one-term lookahead: exactly one dispatch in flight
+                    // beyond the term currently being inspected
+                    let lookahead = if i + 1 < n {
+                        Some(self.pool.dispatch_one(i + 1, x.clone(), layer_budget)?)
+                    } else {
+                        None
+                    };
+                    let rx = pending.take().expect("lookahead dispatched for term");
+                    let run = recv_run(rx)?;
+                    grid_terms += run.grid_terms;
+                    let term = gained(run.y, i);
                     // the series' geometric scale law makes later terms
                     // strictly smaller; once one drops below the batch
-                    // tolerance, the remaining tail is negligible too
+                    // tolerance the tail is negligible. The already-sent
+                    // lookahead is the bounded waste: its receiver drops
+                    // here (never awaited — waiting would forfeit the
+                    // early stop's latency win) and its grid spend is
+                    // deliberately NOT counted, so `grid_terms` meters
+                    // the compute reduced into the answer.
                     if term.max_abs() < threshold {
                         break;
                     }
                     acc = acc.add(&term);
                     terms += 1;
+                    match lookahead {
+                        Some(rx) => pending = Some(rx),
+                        None => break,
+                    }
                 }
-                Ok((acc, terms))
+                Ok(Reduced { y: acc, terms, grid_terms })
             }
         }
-    }
-
-    /// One streamed term: run worker `i` alone and apply its gain.
-    fn term_output(&self, i: usize, x: Arc<Tensor>) -> anyhow::Result<Tensor> {
-        let out = self.pool.run_one(i, x)?;
-        Ok(match &self.gains {
-            Some(g) => out.scale(g[i]),
-            None => out,
-        })
     }
 
     pub fn shutdown(self) {
@@ -296,7 +360,7 @@ mod tests {
     }
 
     #[test]
-    fn anytime_streams_and_skips_workers_past_the_stop() {
+    fn anytime_streams_with_one_term_lookahead_bounded_waste() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         struct CountingId {
             calls: Arc<[AtomicUsize; 6]>,
@@ -320,15 +384,21 @@ mod tests {
         let sched = ExpansionScheduler::new(pool)
             .with_gains(vec![1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125]);
         let x = Tensor::vec1(&[8.0]).reshaped(&[1, 1]);
-        // contributions 8, 4, 2, 1, …; threshold 0.2·8 = 1.6 → stop at
-        // term 4 (it runs to reveal the stop; terms 5–6 never dispatch)
+        // contributions 8, 4, 2, 1, …; threshold 0.2·8 = 1.6 → term 4
+        // runs to reveal the stop, term 5 was the one-term-lookahead
+        // speculation already in flight, term 6 never dispatches
         let (y, terms) = sched.forward_anytime(x, 6, 0.2).unwrap();
         assert_eq!(terms, 3);
         assert!((y.data()[0] - 14.0).abs() < 1e-5);
+        // shutdown drains every dispatched job, so the counts are final
+        sched.shutdown();
         let counts: Vec<usize> = calls.iter().map(|c| c.load(Ordering::SeqCst)).collect();
         assert_eq!(counts[..4], [1, 1, 1, 1], "{counts:?}");
-        assert_eq!(counts[4..], [0, 0], "workers past the stop must never run: {counts:?}");
-        sched.shutdown();
+        assert_eq!(
+            counts[4], 1,
+            "the lookahead speculates exactly one worker past the stop: {counts:?}"
+        );
+        assert_eq!(counts[5], 0, "beyond the lookahead no worker may run: {counts:?}");
     }
 
     #[test]

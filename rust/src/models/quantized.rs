@@ -6,6 +6,7 @@
 
 use super::graph::{Layer, Model};
 use crate::tensor::Tensor;
+use crate::xint::budget::{ForwardStats, TermBudget};
 use crate::xint::layer::{LayerPolicy, XintConv2d, XintLinear};
 use crate::xint::quantizer::{channel_range, Clip, Range, Symmetry};
 
@@ -32,9 +33,33 @@ pub struct QuantModel {
 
 impl QuantLayer {
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        // full budget takes the legacy natural-order grid in every
+        // layer, so this stays bit-identical to the pre-budget stack
+        let mut stats = ForwardStats::default();
+        self.forward_with(x, &TermBudget::full(), &mut stats)
+    }
+
+    /// Budgeted forward: every expanded conv/linear resolves `budget`
+    /// against its own policy (8-bit first/last layers stay exact) and
+    /// truncates its Eq. 3 grid accordingly; `stats` accumulates the
+    /// INT GEMM terms actually executed.
+    pub fn forward_with(
+        &self,
+        x: &Tensor,
+        budget: &TermBudget,
+        stats: &mut ForwardStats,
+    ) -> Tensor {
         match self {
-            QuantLayer::Conv(c) => c.forward(x),
-            QuantLayer::Linear(l) => l.forward(x),
+            QuantLayer::Conv(c) => {
+                let (y, executed) = c.forward_with(x, budget);
+                stats.record_layer(executed);
+                y
+            }
+            QuantLayer::Linear(l) => {
+                let (y, executed) = l.forward_with(x, budget);
+                stats.record_layer(executed);
+                y
+            }
             QuantLayer::ReLU => x.relu(),
             QuantLayer::Gelu => x.gelu(),
             QuantLayer::MaxPool2 => x.maxpool2(),
@@ -46,11 +71,11 @@ impl QuantLayer {
             QuantLayer::Residual(main, short) => {
                 let mut h = x.clone();
                 for l in main {
-                    h = l.forward(&h);
+                    h = l.forward_with(&h, budget, stats);
                 }
                 let mut s = x.clone();
                 for l in short {
-                    s = l.forward(&s);
+                    s = l.forward_with(&s, budget, stats);
                 }
                 h.add(&s)
             }
@@ -60,7 +85,7 @@ impl QuantLayer {
                     .map(|b| {
                         let mut h = x.clone();
                         for l in b {
-                            h = l.forward(&h);
+                            h = l.forward_with(&h, budget, stats);
                         }
                         h
                     })
@@ -88,11 +113,19 @@ impl QuantLayer {
 
 impl QuantModel {
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with(x, &TermBudget::full()).0
+    }
+
+    /// Model-level budgeted forward (the paper's layer granularity at
+    /// serve time): every expanded layer honors `budget` after per-layer
+    /// policy resolution. Returns the logits and what was spent.
+    pub fn forward_with(&self, x: &Tensor, budget: &TermBudget) -> (Tensor, ForwardStats) {
+        let mut stats = ForwardStats::default();
         let mut h = x.clone();
         for l in &self.layers {
-            h = l.forward(&h);
+            h = l.forward_with(&h, budget, &mut stats);
         }
-        h
+        (h, stats)
     }
 
     pub fn storage_bytes(&self) -> usize {
@@ -302,6 +335,46 @@ mod tests {
         }.layers);
         assert_eq!(obs.ranges.len(), expected);
         assert!(obs.ranges.iter().all(|r| r.half_width > 0.0));
+    }
+
+    #[test]
+    fn model_full_budget_bit_identical_and_low_budget_fewer_gemms() {
+        let mut m = zoo::mini_resnet_a(10, 19);
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(4, 4));
+        let x = probe();
+        let legacy = q.forward(&x);
+        let (full, full_stats) = q.forward_with(&x, &TermBudget::full());
+        assert_eq!(legacy.data(), full.data(), "full budget must be bit-identical");
+        assert!(full_stats.layers > 0 && full_stats.grid_terms > full_stats.layers);
+        let (cheap, cheap_stats) = q.forward_with(&x, &TermBudget::new(1, 1));
+        assert_eq!(cheap.dims(), legacy.dims());
+        assert!(cheap.data().iter().all(|v| v.is_finite()));
+        assert!(
+            cheap_stats.grid_terms < full_stats.grid_terms,
+            "budget must cut GEMMs: {cheap_stats:?} vs {full_stats:?}"
+        );
+        assert_eq!(cheap_stats.layers, full_stats.layers);
+        // 8-bit first/last layers are exempt (1 GEMM each, un-truncatable)
+        // so even the minimal budget keeps ≥ 1 GEMM per layer
+        assert!(cheap_stats.grid_terms >= cheap_stats.layers);
+    }
+
+    #[test]
+    fn model_budget_error_shrinks_with_budget() {
+        let mut m = zoo::mini_resnet_a(10, 20);
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(4, 4));
+        let x = probe();
+        let full = q.forward(&x);
+        let err = |b: &TermBudget| {
+            let (y, _) = q.forward_with(&x, b);
+            full.sub(&y).norm() / full.norm().max(1e-9)
+        };
+        let e11 = err(&TermBudget::new(1, 1));
+        let e24 = err(&TermBudget::new(2, 4));
+        assert!(e24 <= 1e-6, "covering budget must reproduce the full forward: {e24}");
+        assert!(e11 >= e24, "{e11} < {e24}");
     }
 
     #[test]

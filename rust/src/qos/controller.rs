@@ -14,6 +14,7 @@
 //! restored — precision degrades, availability does not.
 
 use super::tier::{Tier, NUM_TIERS};
+use crate::xint::budget::TermBudget;
 use crate::xint::monitor::ExpansionMonitor;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -64,6 +65,8 @@ pub struct QosSnapshot {
     pub pressure: usize,
     /// effective budget per tier, indexed by [`Tier::idx`]
     pub budgets: [usize; NUM_TIERS],
+    /// effective layer-granularity budget per tier (replication mode)
+    pub layer_budgets: [TermBudget; NUM_TIERS],
     pub degrade_events: u64,
     pub restore_events: u64,
 }
@@ -77,6 +80,9 @@ pub struct TermController {
     cfg: QosConfig,
     /// calibrated base budget per tier (before pressure)
     base: [AtomicUsize; NUM_TIERS],
+    /// calibrated base *layer* term cap per tier (replication mode's
+    /// per-axis Eq. 3 grid bound; `usize::MAX` = untruncated)
+    layer_base: [AtomicUsize; NUM_TIERS],
     /// current pressure level: terms removed from non-Exact tiers
     pressure: AtomicUsize,
     degrade_events: AtomicU64,
@@ -95,9 +101,12 @@ impl TermController {
         let base = std::array::from_fn(|i| {
             AtomicUsize::new(Tier::ALL[i].default_budget(cfg.total_terms))
         });
+        let layer_base =
+            std::array::from_fn(|i| AtomicUsize::new(Tier::ALL[i].default_layer_terms()));
         TermController {
             cfg,
             base,
+            layer_base,
             pressure: AtomicUsize::new(0),
             degrade_events: AtomicU64::new(0),
             restore_events: AtomicU64::new(0),
@@ -112,15 +121,22 @@ impl TermController {
 
     /// Set each tier's base budget from observed convergence: the
     /// smallest term count under the tier tolerance (§5.3 rule), all
-    /// terms when the tolerance was never reached.
+    /// terms when the tolerance was never reached. The same rule
+    /// calibrates the layer-granularity budget — the monitor measures
+    /// how many series terms a tensor needs for a tolerance, which is
+    /// exactly the per-axis cap a layer's Eq. 3 grid should honor.
     pub fn calibrate(&self, monitor: &ExpansionMonitor) {
         let total = self.cfg.total_terms;
         for tier in Tier::ALL {
-            let budget = match tier.tolerance() {
-                None => total,
-                Some(tol) => monitor.optimal_terms(tol).unwrap_or(total).min(total),
+            let (budget, layer) = match tier.tolerance() {
+                None => (total, usize::MAX),
+                Some(tol) => {
+                    let n = monitor.optimal_terms(tol);
+                    (n.unwrap_or(total).min(total), n.unwrap_or(usize::MAX))
+                }
             };
             self.base[tier.idx()].store(budget.max(1), Ordering::Relaxed);
+            self.layer_base[tier.idx()].store(layer.max(1), Ordering::Relaxed);
         }
         let mut conv = self.convergence.lock().unwrap();
         *conv = monitor.max_diff.clone();
@@ -134,6 +150,22 @@ impl TermController {
         let floor = tier.floor_terms(self.cfg.total_terms).min(base);
         let p = self.pressure.load(Ordering::Relaxed);
         base.saturating_sub(p).clamp(floor.max(1), self.cfg.total_terms)
+    }
+
+    /// Effective *layer-granularity* [`TermBudget`] for `tier` right
+    /// now — the replication-mode twin of [`TermController::budget_for`].
+    /// The weight axis keeps the calibrated cap (weight planes are
+    /// pre-expanded; truncating them saves GEMMs, not expansion work);
+    /// the activation axis additionally degrades with pressure, bounded
+    /// by [`Tier::layer_floor_terms`]. Exact is immune by construction.
+    pub fn layer_budget_for(&self, tier: Tier) -> TermBudget {
+        let base = self.layer_base[tier.idx()].load(Ordering::Relaxed);
+        if base == usize::MAX {
+            return TermBudget::full();
+        }
+        let floor = tier.layer_floor_terms().min(base).max(1);
+        let p = self.pressure.load(Ordering::Relaxed);
+        TermBudget::new(base, base.saturating_sub(p).max(floor))
     }
 
     /// Feed one formed batch's signals and take at most ONE pressure
@@ -230,6 +262,7 @@ impl TermController {
         QosSnapshot {
             pressure: self.pressure(),
             budgets: std::array::from_fn(|i| self.budget_for(Tier::ALL[i])),
+            layer_budgets: std::array::from_fn(|i| self.layer_budget_for(Tier::ALL[i])),
             degrade_events: self.degrade_events.load(Ordering::Relaxed),
             restore_events: self.restore_events.load(Ordering::Relaxed),
         }
@@ -269,6 +302,59 @@ mod tests {
         let l1 = c.estimated_loss(1).unwrap();
         let l8 = c.estimated_loss(8).unwrap();
         assert!(l8 <= l1);
+    }
+
+    #[test]
+    fn layer_budgets_follow_tier_ladder_and_pressure() {
+        let c = TermController::new(QosConfig::new(8));
+        assert_eq!(c.layer_budget_for(Tier::Exact), TermBudget::full());
+        let be = c.layer_budget_for(Tier::BestEffort);
+        assert_eq!((be.w_terms, be.a_terms), (1, 1));
+        let bal = c.layer_budget_for(Tier::Balanced);
+        assert!(bal.a_terms >= be.a_terms);
+        // pressure degrades the activation axis down to the layer floor
+        for _ in 0..10 {
+            c.observe_batch(0.95, 0.0);
+        }
+        assert_eq!(c.layer_budget_for(Tier::Exact), TermBudget::full(), "exact immune");
+        let bal_hot = c.layer_budget_for(Tier::Balanced);
+        assert_eq!(bal_hot.a_terms, Tier::Balanced.layer_floor_terms());
+        assert_eq!(bal_hot.w_terms, bal.w_terms, "weight axis is pressure-free");
+        // drain restores
+        for _ in 0..20 {
+            c.observe_batch(0.0, 0.0);
+        }
+        assert_eq!(c.layer_budget_for(Tier::Balanced), bal);
+        // snapshot carries the layer ladder
+        let s = c.snapshot();
+        assert_eq!(s.layer_budgets[Tier::Exact.idx()], TermBudget::full());
+        assert_eq!(s.layer_budgets[Tier::BestEffort.idx()].a_terms, 1);
+    }
+
+    #[test]
+    fn calibration_sets_layer_budgets_from_monitor() {
+        let mut mon = ExpansionMonitor::new();
+        let mut rng = Rng::seed(72);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
+        for _ in 0..3 {
+            mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg);
+        }
+        let c = TermController::new(QosConfig::new(8));
+        c.calibrate(&mon);
+        assert_eq!(c.layer_budget_for(Tier::Exact), TermBudget::full());
+        let a_caps: Vec<usize> = [Tier::Balanced, Tier::Throughput, Tier::BestEffort]
+            .iter()
+            .map(|&t| c.layer_budget_for(t).a_terms)
+            .collect();
+        // looser tolerance ⇒ no more layer terms
+        assert!(a_caps.windows(2).all(|w| w[1] <= w[0]), "{a_caps:?}");
+        // and each calibrated cap meets its tier tolerance per the monitor
+        for &t in &[Tier::Balanced, Tier::Throughput, Tier::BestEffort] {
+            let cap = c.layer_budget_for(t).a_terms;
+            if let (Some(loss), Some(tol)) = (mon.max_diff_at(cap), t.tolerance()) {
+                assert!(loss < tol, "{t}: loss {loss} at cap {cap} vs tol {tol}");
+            }
+        }
     }
 
     #[test]

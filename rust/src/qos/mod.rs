@@ -18,7 +18,13 @@
 //!   taking exactly one step per formed batch
 //!   ([`TermController::observe_batch`]) from the hottest per-tier
 //!   queue occupancy plus the batch service-time EWMA, restoring full
-//!   precision as load drains.
+//!   precision as load drains. Each tier maps to TWO budgets: the
+//!   pool-prefix budget (model granularity — how many basis workers
+//!   reduce) and a layer-granularity
+//!   [`TermBudget`](crate::xint::TermBudget)
+//!   ([`TermController::layer_budget_for`]) that budget-aware
+//!   replication workers use to truncate every layer's Eq. 3 GEMM grid
+//!   largest-scale-first (8-bit first/last layers stay exact).
 //!
 //! The batcher side ([`coordinator::batcher`](crate::coordinator::batcher))
 //! keeps one bounded queue per tier, served by weighted deficit

@@ -84,6 +84,30 @@ impl Tier {
         std::array::from_fn(|i| Tier::ALL[i].service_weight())
     }
 
+    /// Uncalibrated default *layer-granularity* term cap: the per-axis
+    /// bound a tier puts on every expanded layer's Eq. 3 grid in
+    /// replication mode (the pool-prefix budget's counterpart one level
+    /// down). `usize::MAX` means untruncated.
+    pub fn default_layer_terms(self) -> usize {
+        match self {
+            Tier::Exact => usize::MAX,
+            Tier::Balanced => 3,
+            Tier::Throughput => 2,
+            Tier::BestEffort => 1,
+        }
+    }
+
+    /// Minimum activation-term cap pressure may degrade a tier's layer
+    /// budget to. Exact is immune (never truncated at all).
+    pub fn layer_floor_terms(self) -> usize {
+        match self {
+            Tier::Exact => usize::MAX,
+            Tier::Balanced => 2,
+            Tier::Throughput => 1,
+            Tier::BestEffort => 1,
+        }
+    }
+
     /// Uncalibrated default budget (used before a monitor calibration).
     pub fn default_budget(self, total: usize) -> usize {
         match self {
@@ -155,6 +179,18 @@ mod tests {
         assert!(w.windows(2).all(|p| p[1] <= p[0]), "{w:?}");
         assert!(w.iter().all(|&x| x >= 1), "zero weight would starve a tier: {w:?}");
         assert_eq!(w[Tier::Exact.idx()], Tier::Exact.service_weight());
+    }
+
+    #[test]
+    fn layer_terms_monotone_and_floored() {
+        let caps: Vec<usize> = Tier::ALL.iter().map(|t| t.default_layer_terms()).collect();
+        assert!(caps.windows(2).all(|w| w[1] <= w[0]), "{caps:?}");
+        assert_eq!(caps[0], usize::MAX, "exact is never truncated");
+        assert_eq!(caps[3], 1, "best-effort bottoms out at one term per axis");
+        for t in Tier::ALL {
+            assert!(t.layer_floor_terms() >= 1);
+            assert!(t.layer_floor_terms() <= t.default_layer_terms());
+        }
     }
 
     #[test]

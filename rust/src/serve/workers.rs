@@ -12,9 +12,10 @@
 //! * [`PjrtMlpWorker`] — the same basis slice but executed through the
 //!   AOT-compiled PJRT artifact (one PJRT client per worker thread).
 
-use crate::coordinator::pool::{BasisWorker, WorkerFactory};
+use crate::coordinator::pool::{BasisWorker, BudgetedRun, WorkerFactory};
 use crate::models::quantized::QuantModel;
 use crate::tensor::Tensor;
+use crate::xint::budget::TermBudget;
 use crate::xint::expansion::{ExpandConfig, SeriesExpansion};
 use crate::xint::quantizer::{channel_range, fake_quant, Clip, Symmetry};
 use crate::xint::BitSpec;
@@ -37,9 +38,9 @@ pub struct QuantModelWorker {
     pub sample_dims: Option<Vec<usize>>,
 }
 
-impl BasisWorker for QuantModelWorker {
-    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
-        let x = match &self.sample_dims {
+impl QuantModelWorker {
+    fn shaped(&self, x: &Tensor) -> Tensor {
+        match &self.sample_dims {
             Some(sd) => {
                 let n = x.dims()[0];
                 let mut dims = vec![n];
@@ -47,8 +48,24 @@ impl BasisWorker for QuantModelWorker {
                 x.reshape(&dims)
             }
             None => x.clone(),
-        };
+        }
+    }
+}
+
+impl BasisWorker for QuantModelWorker {
+    fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let x = self.shaped(x);
         Ok(self.model.forward(&x))
+    }
+
+    /// Replication mode is where the layer-granularity budget bites:
+    /// the whole layer-sync model truncates every expanded layer's
+    /// Eq. 3 grid to the request's budget (8-bit first/last layers stay
+    /// exact) and reports the INT GEMMs actually executed.
+    fn run_budgeted(&mut self, x: &Tensor, budget: &TermBudget) -> anyhow::Result<BudgetedRun> {
+        let x = self.shaped(x);
+        let (y, stats) = self.model.forward_with(&x, budget);
+        Ok(BudgetedRun { y, grid_terms: stats.grid_terms })
     }
 }
 

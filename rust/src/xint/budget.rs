@@ -1,0 +1,163 @@
+//! Runtime term budgets — the paper's tensor/layer-granularity
+//! truncation as a *serve-time* parameter.
+//!
+//! The seed stack fixed the Eq. 3 term grid at construction time: a
+//! quantized layer always ran all `k·t` low-bit GEMMs. Because the
+//! expansion is a *series* (geometric scale law, Theorem 1), any subset
+//! of terms taken largest-scale-first is the best available
+//! approximation at that compute cost — the same Abelian prefix
+//! argument the QoS scheduler uses for pool-prefix truncation, applied
+//! one level down inside a single layer's GEMM grid. A [`TermBudget`]
+//! carries per-request caps on the weight/activation term axes (plus an
+//! optional cap on the total `(i, j)` grid) through the whole forward
+//! stack: `xint_linear_forward_budgeted` → `XintLinear::forward_with` →
+//! `QuantModel::forward_with` → `QuantModelWorker::run_budgeted` →
+//! `TermController::layer_budget_for`.
+
+/// Per-request cap on the series terms a layer forward may spend.
+///
+/// Caps are upper bounds, clamped to what each layer actually has: a
+/// budget of 3 activation terms leaves a 1-term 8-bit layer untouched.
+/// Per-layer *policy resolution* happens in
+/// [`LayerPolicy::resolve_budget`](super::layer::LayerPolicy::resolve_budget):
+/// the §5.1 8-bit first/last layers are exempt and stay exact under any
+/// request budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TermBudget {
+    /// cap on weight expansion terms (the `i` axis of the Eq. 3 grid)
+    pub w_terms: usize,
+    /// cap on activation expansion terms (the `j` axis)
+    pub a_terms: usize,
+    /// optional cap on the total number of `(i, j)` INT GEMMs executed
+    /// inside the `w_terms × a_terms` rectangle; pairs are taken in
+    /// descending `s_wi · s_aj` order so any prefix is the best
+    /// available approximation. `None` runs the whole rectangle.
+    pub grid_terms: Option<usize>,
+}
+
+impl TermBudget {
+    /// No truncation anywhere: the full `k·t` grid of every layer.
+    pub const fn full() -> TermBudget {
+        TermBudget { w_terms: usize::MAX, a_terms: usize::MAX, grid_terms: None }
+    }
+
+    /// Cap the weight/activation term axes (no separate grid cap).
+    pub fn new(w_terms: usize, a_terms: usize) -> TermBudget {
+        TermBudget { w_terms: w_terms.max(1), a_terms: a_terms.max(1), grid_terms: None }
+    }
+
+    /// Additionally cap the total `(i, j)` GEMM count.
+    pub fn with_grid_terms(mut self, grid_terms: usize) -> TermBudget {
+        self.grid_terms = Some(grid_terms.max(1));
+        self
+    }
+
+    /// True iff this budget leaves a `k × t` grid untruncated — the
+    /// forward then takes the legacy natural-order loop, so a full
+    /// budget is bit-identical to the unbudgeted forward.
+    pub fn covers(&self, k: usize, t: usize) -> bool {
+        self.w_terms >= k
+            && self.a_terms >= t
+            && match self.grid_terms {
+                None => true,
+                Some(g) => g >= k * t,
+            }
+    }
+
+    /// Effective caps against a concrete `k × t` grid (both ≥ 1).
+    pub fn clamp_to(&self, k: usize, t: usize) -> (usize, usize) {
+        (self.w_terms.clamp(1, k.max(1)), self.a_terms.clamp(1, t.max(1)))
+    }
+}
+
+impl Default for TermBudget {
+    fn default() -> TermBudget {
+        TermBudget::full()
+    }
+}
+
+impl std::fmt::Display for TermBudget {
+    /// `full`, `2×4`, or `2×4/3` (axis caps plus a grid cap).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if *self == TermBudget::full() {
+            return f.write_str("full");
+        }
+        match (self.w_terms, self.a_terms, self.grid_terms) {
+            (w, a, None) => write!(f, "{w}×{a}"),
+            (w, a, Some(g)) => write!(f, "{w}×{a}/{g}"),
+        }
+    }
+}
+
+/// What a budgeted forward actually spent — the observability half of
+/// the budget contract (per-tier means surface in
+/// [`Metrics`](crate::coordinator::Metrics)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ForwardStats {
+    /// `(i, j)` INT GEMM terms executed across all layers
+    pub grid_terms: usize,
+    /// expanded (conv/linear) layer forwards that contributed
+    pub layers: usize,
+}
+
+impl ForwardStats {
+    pub fn absorb(&mut self, other: ForwardStats) {
+        self.grid_terms += other.grid_terms;
+        self.layers += other.layers;
+    }
+
+    /// Record one layer forward that executed `grid_terms` GEMMs.
+    pub fn record_layer(&mut self, grid_terms: usize) {
+        self.grid_terms += grid_terms;
+        self.layers += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_budget_covers_everything() {
+        let b = TermBudget::full();
+        assert!(b.covers(3, 7));
+        assert_eq!(b.clamp_to(2, 4), (2, 4));
+        assert_eq!(TermBudget::default(), b);
+    }
+
+    #[test]
+    fn caps_clamp_to_the_grid() {
+        let b = TermBudget::new(1, 2);
+        assert!(!b.covers(2, 4));
+        assert_eq!(b.clamp_to(2, 4), (1, 2));
+        // caps never exceed what the layer has, never fall below 1
+        assert_eq!(TermBudget::new(9, 9).clamp_to(2, 4), (2, 4));
+        assert_eq!(TermBudget::new(0, 0).clamp_to(2, 4), (1, 1));
+    }
+
+    #[test]
+    fn grid_cap_breaks_coverage() {
+        let b = TermBudget::new(2, 4).with_grid_terms(3);
+        assert!(!b.covers(2, 4));
+        assert!(TermBudget::new(2, 4).with_grid_terms(8).covers(2, 4));
+        assert!(TermBudget::new(2, 4).covers(2, 4));
+    }
+
+    #[test]
+    fn display_labels() {
+        assert_eq!(TermBudget::full().to_string(), "full");
+        assert_eq!(TermBudget::new(2, 4).to_string(), "2×4");
+        assert_eq!(TermBudget::new(2, 4).with_grid_terms(3).to_string(), "2×4/3");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = ForwardStats::default();
+        s.record_layer(8);
+        s.record_layer(1);
+        let mut total = ForwardStats::default();
+        total.absorb(s);
+        total.absorb(ForwardStats { grid_terms: 2, layers: 1 });
+        assert_eq!(total, ForwardStats { grid_terms: 11, layers: 3 });
+    }
+}

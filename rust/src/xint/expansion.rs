@@ -162,7 +162,7 @@ impl SeriesExpansion {
         let mut scales = Vec::with_capacity(cfg.terms);
         let mut prev_q: Vec<i64> = vec![0; m.numel()];
         let mut s_t = scale1.clone();
-        for t in 0..cfg.terms {
+        for _ in 0..cfg.terms {
             let mut plane = vec![0i32; m.numel()];
             for c in 0..nch {
                 let r = ranges[c];
@@ -180,7 +180,6 @@ impl SeriesExpansion {
             for s in s_t.iter_mut() {
                 *s /= levels;
             }
-            let _ = t;
         }
 
         SeriesExpansion { config: *cfg, dims, bias, scales, planes, sparse }

@@ -6,10 +6,15 @@
 //! A800). The rank-1 `M_nsy` terms use the §4 `(M·oneᵀ)·one` trick and
 //! cost O(n²); the sparse `M_sa` terms use a COO kernel proportional to
 //! nnz. `xint_linear_forward` assembles the full Eq. 3 sum for a linear
-//! layer `y = x Wᵀ` where both operands are series expansions.
+//! layer `y = x Wᵀ` where both operands are series expansions;
+//! [`xint_linear_forward_budgeted`] is the same forward under a runtime
+//! [`TermBudget`], executing the `(i, j)` grid largest-scale-first so
+//! any truncation prefix is the best available approximation.
 
+use super::budget::TermBudget;
 use super::expansion::{ExpandConfig, SeriesExpansion};
 use crate::tensor::{IntTensor, Tensor};
+use std::sync::OnceLock;
 
 /// A weight matrix `(out, in)` pre-expanded at load time (PTQ happens once;
 /// only activations are expanded on the request path).
@@ -21,10 +26,12 @@ pub struct ExpandedWeight {
     /// per-plane row sums `Σ_k W̃_i[o,k]` — precomputed for the rank-1
     /// activation-bias (`A_nsy`) terms, O(out) per use instead of O(out·in)
     pub plane_row_sums: Vec<Vec<i64>>,
-    /// row sums of the dense FP weight (bias and sparse cross terms)
-    pub fp_row_sums: Vec<f32>,
     /// dense FP reconstruction of the *sparse* part only (usually empty)
     pub sparse_dense: Option<Tensor>,
+    /// dense FP reconstruction of the whole expansion (incl. bias),
+    /// built once on first use: the `A_sa` sparse path needs it, and
+    /// with Laplace-clipped activations that path runs on every request
+    recon: OnceLock<Tensor>,
 }
 
 impl ExpandedWeight {
@@ -43,23 +50,27 @@ impl ExpandedWeight {
                     .collect()
             })
             .collect();
-        let fp_row_sums = (0..out_dim)
-            .map(|o| w.data()[o * in_dim..(o + 1) * in_dim].iter().sum())
-            .collect();
         let sparse_dense = if exp.sparse.nnz() > 0 { Some(exp.sparse.to_dense()) } else { None };
-        ExpandedWeight { exp, out_dim, in_dim, plane_row_sums, fp_row_sums, sparse_dense }
+        let recon = OnceLock::new();
+        ExpandedWeight { exp, out_dim, in_dim, plane_row_sums, sparse_dense, recon }
     }
 
     /// Number of INT weight terms `k`.
     pub fn terms(&self) -> usize {
         self.exp.planes.len()
     }
+
+    /// Cached dense reconstruction of the expansion (incl. bias).
+    pub fn reconstructed(&self) -> &Tensor {
+        self.recon.get_or_init(|| self.exp.reconstruct())
+    }
 }
 
 /// Integer GEMM `C = A × Bᵀ` with i32 accumulation: A `(m,k)`, B `(n,k)`.
 ///
 /// Values are INT(X) planes so every product fits comfortably in i32 for
-/// X ≤ 12 and k ≤ 2^named; accumulate in i64 when that could overflow.
+/// X ≤ 12; the inner loop folds 256-element i32 partials into an i64
+/// accumulator, so any inner dimension `k` is overflow-safe.
 pub fn int_gemm_a_bt(a: &IntTensor, b: &IntTensor) -> Vec<i64> {
     let (m, k) = (a.dims()[0], a.dims()[1]);
     let (n, k2) = (b.dims()[0], b.dims()[1]);
@@ -150,6 +161,30 @@ pub fn xint_linear_forward(x: &Tensor, w: &ExpandedWeight, act_cfg: &ExpandConfi
     xint_linear_forward_pre(&a_exp, x, w)
 }
 
+/// [`xint_linear_forward`] under a runtime [`TermBudget`]: the `(i, j)`
+/// GEMM grid is capped per axis and optionally in total, taking pairs in
+/// descending `s_wi · s_aj` order (largest contribution first — the
+/// Abelian prefix argument one level below the worker pool). Activations
+/// are expanded only to the budgeted term count, so a low budget saves
+/// both expansion and GEMM work. A budget that covers the full grid runs
+/// the legacy natural-order loop and is bit-identical to
+/// [`xint_linear_forward`]. Returns the output and the number of INT
+/// GEMM terms actually executed.
+pub fn xint_linear_forward_budgeted(
+    x: &Tensor,
+    w: &ExpandedWeight,
+    act_cfg: &ExpandConfig,
+    budget: &TermBudget,
+) -> (Tensor, usize) {
+    assert_eq!(x.shape().rank(), 2);
+    assert_eq!(x.dims()[1], w.in_dim, "in_dim mismatch");
+    // the closed-form planes are prefix-stable: expanding at a_cap terms
+    // yields exactly the first a_cap planes of the full expansion
+    let (_, a_cap) = budget.clamp_to(w.terms(), act_cfg.terms);
+    let a_exp = SeriesExpansion::expand(x, &act_cfg.with_terms(a_cap));
+    xint_linear_forward_pre_budgeted(&a_exp, x, w, budget)
+}
+
 /// Same as [`xint_linear_forward`] but with the activation expansion
 /// supplied by the caller (the coordinator expands once and fans out).
 pub fn xint_linear_forward_pre(
@@ -157,29 +192,81 @@ pub fn xint_linear_forward_pre(
     x: &Tensor,
     w: &ExpandedWeight,
 ) -> Tensor {
+    xint_linear_forward_pre_budgeted(a_exp, x, w, &TermBudget::full()).0
+}
+
+/// [`xint_linear_forward_pre`] under a [`TermBudget`]. With a full
+/// budget the INT grid runs in the legacy natural order (bit-identical
+/// output); a truncating budget orders the capped grid by scale product
+/// and stops at the grid cap. The rank-1 zero-point terms and the
+/// activation-side sparse path follow the same axis caps; the exact
+/// `A_sa`/`W_sa` sparse corrections stay exact (they are O(nnz), not
+/// part of the grid, and keeping them budget-independent means a larger
+/// budget only ever *adds* grid terms).
+pub fn xint_linear_forward_pre_budgeted(
+    a_exp: &SeriesExpansion,
+    x: &Tensor,
+    w: &ExpandedWeight,
+    budget: &TermBudget,
+) -> (Tensor, usize) {
     let (batch, in_dim) = (x.dims()[0], x.dims()[1]);
     let out_dim = w.out_dim;
+    let k = w.exp.planes.len();
+    let t = a_exp.planes.len();
+    let (w_cap, a_cap) = budget.clamp_to(k, t);
     let mut y = Tensor::zeros(&[batch, out_dim]);
     let yd = y.data_mut();
+    let mut executed = 0usize;
 
     // --- INT × INT terms (the k·t low-bit GEMMs of Figure 2's red grid)
     // §Perf iteration 2: fused scale application inside the GEMM — one
     // pass per (i, j) pair, no i64 intermediate, no scale re-derivation.
-    for (i, wplane) in w.exp.planes.iter().enumerate() {
-        for (j, aplane) in a_exp.planes.iter().enumerate() {
-            let s_aj = a_exp.scales[j][0];
-            if s_aj == 0.0 {
-                continue;
+    if budget.covers(k, t) {
+        for (i, wplane) in w.exp.planes.iter().enumerate() {
+            for (j, aplane) in a_exp.planes.iter().enumerate() {
+                let s_aj = a_exp.scales[j][0];
+                if s_aj == 0.0 {
+                    continue;
+                }
+                int_gemm_scaled_into(aplane, wplane, &w.exp.scales[i], s_aj, yd);
+                executed += 1;
             }
-            int_gemm_scaled_into(aplane, wplane, &w.exp.scales[i], s_aj, yd);
+        }
+    } else {
+        // largest-contribution-first: order the capped grid by the scale
+        // product (max over weight channels), so any executed prefix is
+        // the best approximation available at that GEMM count
+        let mut pairs: Vec<(usize, usize, f32)> = Vec::with_capacity(w_cap * a_cap);
+        for i in 0..w_cap {
+            let s_wi = w.exp.scales[i].iter().fold(0.0f32, |m, &v| m.max(v));
+            for j in 0..a_cap {
+                pairs.push((i, j, s_wi * a_exp.scales[j][0]));
+            }
+        }
+        // descending product; tie-break on (i+j, i) so equal-scale
+        // diagonals execute in a deterministic order
+        pairs.sort_by(|a, b| {
+            b.2.partial_cmp(&a.2)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| (a.0 + a.1, a.0).cmp(&(b.0 + b.1, b.0)))
+        });
+        let grid_cap = budget.grid_terms.unwrap_or(usize::MAX);
+        for &(i, j, _) in pairs.iter().filter(|p| p.2 != 0.0).take(grid_cap) {
+            int_gemm_scaled_into(
+                &a_exp.planes[j],
+                &w.exp.planes[i],
+                &w.exp.scales[i],
+                a_exp.scales[j][0],
+                yd,
+            );
+            executed += 1;
         }
     }
 
     // --- activation zero-point × INT weight planes: bias_a · rowsum(W̃_i)
     let bias_a = a_exp.bias[0];
     if bias_a != 0.0 {
-        let pcs = &w.plane_row_sums;
-        for (i, rs) in pcs.iter().enumerate() {
+        for (i, rs) in w.plane_row_sums.iter().take(w_cap).enumerate() {
             let pc = w.exp.scales[i].len() > 1;
             for o in 0..out_dim {
                 let s_wi = if pc { w.exp.scales[i][o] } else { w.exp.scales[i][0] };
@@ -199,7 +286,7 @@ pub fn xint_linear_forward_pre(
             }
         }
         // activation zero-point × weight zero-point handled below via
-        // fp_row_sums? No: keep exact decomposition — bias_w term covers it.
+        // the bias_w term — keep the decomposition exact.
     }
 
     // --- weight zero-point (asymmetric weights) × reconstructed activation:
@@ -209,7 +296,7 @@ pub fn xint_linear_forward_pre(
     if w.exp.bias.iter().any(|&b| b != 0.0) {
         let per_ch = w.exp.bias.len() > 1;
         let mut arow_sums = vec![bias_a * in_dim as f32; batch];
-        for (j, aplane) in a_exp.planes.iter().enumerate() {
+        for (j, aplane) in a_exp.planes.iter().take(a_cap).enumerate() {
             let s_aj = a_exp.scales[j][0];
             if s_aj == 0.0 {
                 continue;
@@ -234,22 +321,21 @@ pub fn xint_linear_forward_pre(
     }
 
     // --- sparse A_sa × W terms and sparse W_sa × Ã terms
-    // A_sa: activation saturation residual (exact): y += A_sa · Wᵀ_fp
+    // A_sa: activation saturation residual (exact): y += A_sa · Wᵀ_fp.
+    // A_sa is very sparse — loop nnz against the cached dense weight
+    // reconstruction (built once per ExpandedWeight, not per request).
     if a_exp.sparse.nnz() > 0 {
-        // reconstruct W's dense non-bias part lazily? Use full precision
-        // weight reconstruction = planes + sparse (bias handled above).
-        // Cheaper: A_sa is very sparse — loop nnz.
-        let wrec = w.exp.reconstruct(); // (out, in) incl. bias; subtract bias later
+        let wrec = w.reconstructed();
         let per_ch = w.exp.bias.len() > 1;
         for (&idx, &v) in a_exp.sparse.indices.iter().zip(&a_exp.sparse.values) {
             let b = idx / w.in_dim;
-            let k = idx % w.in_dim;
+            let kk = idx % w.in_dim;
             for o in 0..out_dim {
                 let bw = if per_ch { w.exp.bias[o] } else { w.exp.bias[0] };
                 // wrec includes bias_w; the bias_w × full-x term above
                 // already paired bias_w with the full x (which includes
                 // A_sa), so exclude it here.
-                yd[b * out_dim + o] += v * (wrec.data()[o * w.in_dim + k] - bw);
+                yd[b * out_dim + o] += v * (wrec.data()[o * w.in_dim + kk] - bw);
             }
         }
     }
@@ -258,12 +344,12 @@ pub fn xint_linear_forward_pre(
     if let Some(sd) = &w.sparse_dense {
         // a_expanded dense (without bias/sparse: those were paired above)
         let mut arec = Tensor::zeros(&[batch, in_dim]);
-        for t in 0..a_exp.planes.len() {
-            let s = a_exp.scales[t][0];
+        for j in 0..a_cap.min(a_exp.planes.len()) {
+            let s = a_exp.scales[j][0];
             if s == 0.0 {
                 continue;
             }
-            for (dst, &src) in arec.data_mut().iter_mut().zip(a_exp.planes[t].data()) {
+            for (dst, &src) in arec.data_mut().iter_mut().zip(a_exp.planes[j].data()) {
                 *dst += s * src as f32;
             }
         }
@@ -273,7 +359,7 @@ pub fn xint_linear_forward_pre(
         }
     }
 
-    y
+    (y, executed)
 }
 
 /// Reference: dequantize both expansions densely and multiply in FP —
@@ -297,6 +383,20 @@ mod tests {
         for (x, y) in a.data().iter().zip(b.data()) {
             assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
         }
+    }
+
+    /// Every (symmetry, clip, channel_axis) combination used by the
+    /// deployment policies — shared by the equivalence tests below.
+    fn all_variants() -> Vec<(Symmetry, Clip, Option<usize>)> {
+        let mut v = Vec::new();
+        for sym in [Symmetry::Symmetric, Symmetry::Asymmetric] {
+            for clip in [Clip::None, Clip::Laplace] {
+                for ch_axis in [None, Some(0)] {
+                    v.push((sym, clip, ch_axis));
+                }
+            }
+        }
+        v
     }
 
     #[test]
@@ -328,30 +428,161 @@ mod tests {
         let mut rng = Rng::seed(33);
         let x = Tensor::randn(&[3, 16], 1.0, &mut rng);
         let w_raw = Tensor::randn(&[5, 16], 0.5, &mut rng);
-        for sym in [Symmetry::Symmetric, Symmetry::Asymmetric] {
-            for clip in [Clip::None, Clip::Laplace] {
-                for ch_axis in [None, Some(0)] {
-                    let wcfg = ExpandConfig {
-                        bits: BitSpec::int(4),
-                        terms: 2,
-                        symmetry: sym,
-                        clip,
-                        channel_axis: ch_axis,
-                    };
-                    let acfg = ExpandConfig {
-                        bits: BitSpec::int(4),
-                        terms: 3,
-                        symmetry: sym,
-                        clip,
-                        channel_axis: None,
-                    };
-                    let w = ExpandedWeight::new(&w_raw, &wcfg);
-                    let got = xint_linear_forward(&x, &w, &acfg);
-                    let want = xint_linear_reference(&x, &w, &acfg);
-                    close(&got, &want, 2e-4);
-                }
-            }
+        for (sym, clip, ch_axis) in all_variants() {
+            let wcfg = ExpandConfig {
+                bits: BitSpec::int(4),
+                terms: 2,
+                symmetry: sym,
+                clip,
+                channel_axis: ch_axis,
+            };
+            let acfg = ExpandConfig {
+                bits: BitSpec::int(4),
+                terms: 3,
+                symmetry: sym,
+                clip,
+                channel_axis: None,
+            };
+            let w = ExpandedWeight::new(&w_raw, &wcfg);
+            let got = xint_linear_forward(&x, &w, &acfg);
+            let want = xint_linear_reference(&x, &w, &acfg);
+            close(&got, &want, 2e-4);
         }
+    }
+
+    /// A full budget must reproduce the legacy forward *bit-for-bit* on
+    /// every quantizer variant: the full-grid path is shared code, so a
+    /// budgeted Exact tier serves exactly what the seed stack served.
+    #[test]
+    fn full_budget_is_bit_identical_to_legacy_all_variants() {
+        let mut rng = Rng::seed(34);
+        let x = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let w_raw = Tensor::randn(&[5, 16], 0.5, &mut rng);
+        for (sym, clip, ch_axis) in all_variants() {
+            let wcfg = ExpandConfig {
+                bits: BitSpec::int(4),
+                terms: 2,
+                symmetry: sym,
+                clip,
+                channel_axis: ch_axis,
+            };
+            let acfg = ExpandConfig {
+                bits: BitSpec::int(4),
+                terms: 3,
+                symmetry: sym,
+                clip,
+                channel_axis: None,
+            };
+            let w = ExpandedWeight::new(&w_raw, &wcfg);
+            let legacy = xint_linear_forward(&x, &w, &acfg);
+            let (budgeted, executed) =
+                xint_linear_forward_budgeted(&x, &w, &acfg, &TermBudget::full());
+            assert_eq!(legacy.data(), budgeted.data(), "sym {sym:?} clip {clip:?} ax {ch_axis:?}");
+            assert!(executed <= 2 * 3, "executed {executed} of a 2×3 grid");
+        }
+    }
+
+    /// Axis caps equal re-expanding at the capped term counts: truncating
+    /// the activation axis to `a` is the same computation as a legacy
+    /// forward whose act config has `a` terms (closed-form planes are
+    /// prefix-stable).
+    #[test]
+    fn axis_cap_matches_shorter_expansion_bit_for_bit() {
+        let mut rng = Rng::seed(38);
+        let x = Tensor::randn(&[4, 24], 1.0, &mut rng);
+        let w_raw = Tensor::randn(&[6, 24], 0.4, &mut rng);
+        let wcfg = ExpandConfig::weights(BitSpec::int(4), 2);
+        let w = ExpandedWeight::new(&w_raw, &wcfg);
+        for a in 1..=4usize {
+            let acfg4 = ExpandConfig::activations(BitSpec::int(4), 4);
+            let (budgeted, executed) =
+                xint_linear_forward_budgeted(&x, &w, &acfg4, &TermBudget::new(usize::MAX, a));
+            let short = xint_linear_forward(&x, &w, &ExpandConfig::activations(BitSpec::int(4), a));
+            assert_eq!(budgeted.data(), short.data(), "a_cap {a}");
+            // zero-scale activation planes may be skipped, never added
+            assert!(executed <= 2 * a, "a_cap {a}: executed {executed}");
+        }
+    }
+
+    /// Error against the FP product is monotonically non-increasing as
+    /// the budget grows, along both axes and along the sorted grid
+    /// prefix (up to f32 association noise) — the contract tier budgets
+    /// rely on.
+    #[test]
+    fn property_budget_error_monotone() {
+        use crate::util::prop::{forall, no_shrink, PropConfig};
+        forall(
+            PropConfig { cases: 25, seed: 0xB1D6E7, max_shrink: 0 },
+            |r| {
+                let batch = 1 + r.below(4);
+                let in_dim = 4 + r.below(24);
+                let out_dim = 1 + r.below(8);
+                let bits = [3u32, 4, 8][r.below(3)];
+                let mut rng = r.fork(5);
+                let x = Tensor::randn(&[batch, in_dim], 1.0, &mut rng);
+                let w = Tensor::randn(&[out_dim, in_dim], 0.5, &mut rng);
+                (x, w, bits)
+            },
+            no_shrink,
+            |(x, w_raw, bits)| {
+                let (k, t) = (2usize, 4usize);
+                let wcfg = ExpandConfig::weights(BitSpec::int(*bits), k);
+                let acfg = ExpandConfig::activations(BitSpec::int(*bits), t);
+                let w = ExpandedWeight::new(w_raw, &wcfg);
+                let fp = crate::tensor::matmul_a_bt(x, w_raw);
+                let err = |budget: &TermBudget| {
+                    let (y, _) = xint_linear_forward_budgeted(x, &w, &acfg, budget);
+                    fp.sub(&y).max_abs()
+                };
+                let slack = 1e-5 * (1.0 + fp.max_abs());
+                // growing either axis can only help
+                let mut prev = f32::INFINITY;
+                for a in 1..=t {
+                    let e = err(&TermBudget::new(k, a));
+                    if e > prev + slack {
+                        return Err(format!("a axis: err({a}) {e} > {prev}"));
+                    }
+                    prev = e;
+                }
+                let mut prev = f32::INFINITY;
+                for wc in 1..=k {
+                    let e = err(&TermBudget::new(wc, t));
+                    if e > prev + slack {
+                        return Err(format!("w axis: err({wc}) {e} > {prev}"));
+                    }
+                    prev = e;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The sorted grid prefix under a grid cap tracks the FP product
+    /// better and better as the cap grows, and the executed count obeys
+    /// the cap.
+    #[test]
+    fn grid_cap_prefix_improves_with_budget() {
+        let mut rng = Rng::seed(39);
+        let x = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let w_raw = Tensor::randn(&[8, 32], 0.3, &mut rng);
+        let (k, t) = (2usize, 4usize);
+        let w = ExpandedWeight::new(&w_raw, &ExpandConfig::weights(BitSpec::int(4), k));
+        let acfg = ExpandConfig::activations(BitSpec::int(4), t);
+        let fp = crate::tensor::matmul_a_bt(&x, &w_raw);
+        let mut errs = Vec::new();
+        for g in 1..=k * t {
+            let (y, executed) = xint_linear_forward_budgeted(
+                &x,
+                &w,
+                &acfg,
+                &TermBudget::new(k, t).with_grid_terms(g),
+            );
+            assert!(executed <= g, "grid cap {g}: executed {executed}");
+            errs.push(fp.sub(&y).max_abs());
+        }
+        // the full sorted grid must match the natural-order error scale
+        // and the 1-GEMM prefix must be much worse than the full grid
+        assert!(errs[k * t - 1] < errs[0] / 4.0, "no improvement: {errs:?}");
     }
 
     #[test]
@@ -394,5 +625,17 @@ mod tests {
                 assert_eq!(s, w.plane_row_sums[i][o]);
             }
         }
+    }
+
+    #[test]
+    fn cached_reconstruction_matches_expansion() {
+        let mut rng = Rng::seed(40);
+        let w_raw = Tensor::randn(&[6, 10], 1.0, &mut rng);
+        let w = ExpandedWeight::new(&w_raw, &ExpandConfig::activations(BitSpec::int(4), 2));
+        assert_eq!(w.reconstructed().data(), w.exp.reconstruct().data());
+        // second call returns the same cached tensor
+        let p1 = w.reconstructed() as *const Tensor;
+        let p2 = w.reconstructed() as *const Tensor;
+        assert_eq!(p1, p2);
     }
 }

@@ -3,8 +3,9 @@
 //! Laplace-clipped activations, 8-bit first/last layer, and the §4
 //! weight-term upper bound (`scale_k · 2^X < 10^{-2}` ⇒ k ≈ 2–3).
 
+use super::budget::TermBudget;
 use super::expansion::ExpandConfig;
-use super::gemm::{xint_linear_forward, ExpandedWeight};
+use super::gemm::{xint_linear_forward, xint_linear_forward_budgeted, ExpandedWeight};
 use super::quantizer::{Clip, Symmetry};
 use super::BitSpec;
 use crate::tensor::{conv2d, im2col, Conv2dSpec, Tensor};
@@ -78,6 +79,19 @@ impl LayerPolicy {
             channel_axis: None,
         }
     }
+
+    /// Resolve a request-level [`TermBudget`] against this layer's
+    /// policy: the §5.1 8-bit first/last layers are pinned exact — a
+    /// request budget never truncates them — while every other layer
+    /// takes the budget as-is (its caps clamp to the layer's own term
+    /// counts downstream).
+    pub fn resolve_budget(&self, budget: &TermBudget) -> TermBudget {
+        if self.w_bits.bits >= 8 && self.a_bits.bits >= 8 {
+            TermBudget::full()
+        } else {
+            *budget
+        }
+    }
 }
 
 /// §4 "Weight Expansion Upper Bound": grow k until the *total differential*
@@ -119,6 +133,20 @@ impl XintLinear {
             Some(b) => y.add_row_bias(b),
             None => y,
         }
+    }
+
+    /// Budgeted forward: truncate the Eq. 3 grid per the resolved
+    /// budget. Returns the output and the INT GEMM terms executed; a
+    /// full budget is bit-identical to [`XintLinear::forward`].
+    pub fn forward_with(&self, x: &Tensor, budget: &TermBudget) -> (Tensor, usize) {
+        let b = self.policy.resolve_budget(budget);
+        let (y, executed) =
+            xint_linear_forward_budgeted(x, &self.weight, &self.policy.act_config(), &b);
+        let y = match &self.bias {
+            Some(bias) => y.add_row_bias(bias),
+            None => y,
+        };
+        (y, executed)
     }
 
     /// Storage of the quantized layer in bytes (Table 3 accounting).
@@ -166,6 +194,14 @@ impl XintConv2d {
     }
 
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with(x, &TermBudget::full()).0
+    }
+
+    /// Budgeted forward: the im2col GEMM inherits the resolved budget
+    /// per image (grouped convs keep their FP fallback — their GEMMs
+    /// are tiny and not INT-decomposed, so there is no grid to cap).
+    /// Returns the output and the INT GEMM terms executed.
+    pub fn forward_with(&self, x: &Tensor, budget: &TermBudget) -> (Tensor, usize) {
         let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
         assert_eq!(c, self.spec.in_ch);
         let (oh, ow) = self.spec.out_hw(h, w);
@@ -174,8 +210,10 @@ impl XintConv2d {
             let a_exp =
                 super::expansion::SeriesExpansion::expand(x, &self.policy.act_config());
             let xq = a_exp.reconstruct();
-            return conv2d(&xq, fpw, self.bias.as_ref(), &self.spec);
+            return (conv2d(&xq, fpw, self.bias.as_ref(), &self.spec), 0);
         }
+        let b = self.policy.resolve_budget(budget);
+        let mut executed = 0usize;
         // im2col batch → one expanded GEMM per image
         let mut out = Tensor::zeros(&[n, self.spec.out_ch, oh, ow]);
         let chw = c * h * w;
@@ -183,7 +221,13 @@ impl XintConv2d {
             let img = &x.data()[ni * chw..(ni + 1) * chw];
             let cols = im2col(img, c, h, w, &self.spec); // (kelem, oh*ow)
             let cols_t = cols.transpose2(); // (oh*ow, kelem) = "batch" rows
-            let y = xint_linear_forward(&cols_t, &self.weight, &self.policy.act_config());
+            let (y, e) = xint_linear_forward_budgeted(
+                &cols_t,
+                &self.weight,
+                &self.policy.act_config(),
+                &b,
+            );
+            executed += e;
             // y: (oh*ow, out_ch) → write transposed into NCHW
             for oc in 0..self.spec.out_ch {
                 let base = (ni * self.spec.out_ch + oc) * oh * ow;
@@ -204,7 +248,7 @@ impl XintConv2d {
                 }
             }
         }
-        out
+        (out, executed)
     }
 
     pub fn storage_bytes(&self) -> usize {
@@ -283,6 +327,58 @@ mod tests {
         let y = q.forward(&x);
         let rel = fp.sub(&y).norm() / fp.norm();
         assert!(rel < 0.05, "depthwise W4A4 rel err {rel}");
+    }
+
+    #[test]
+    fn budgeted_linear_full_identical_low_budget_fewer_gemms() {
+        let mut rng = Rng::seed(49);
+        let w = Tensor::randn(&[8, 16], 0.3, &mut rng);
+        let b = Tensor::randn(&[8], 0.1, &mut rng);
+        let x = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let layer = XintLinear::from_fp(&w, Some(&b), LayerPolicy::new(4, 4)); // k=2, t=4
+        let legacy = layer.forward(&x);
+        let (full, e_full) = layer.forward_with(&x, &TermBudget::full());
+        assert_eq!(legacy.data(), full.data(), "full budget must be bit-identical");
+        let (cheap, e_cheap) = layer.forward_with(&x, &TermBudget::new(1, 1));
+        assert!(e_cheap < e_full, "{e_cheap} !< {e_full}");
+        assert!(e_cheap <= 1);
+        // the 1×1 grid is still a coarse but finite approximation
+        let rel = legacy.sub(&cheap).norm() / legacy.norm();
+        assert!(rel.is_finite() && rel < 1.0, "budgeted rel err {rel}");
+    }
+
+    #[test]
+    fn eight_bit_policy_is_exempt_from_budgets() {
+        let mut rng = Rng::seed(50);
+        let w = Tensor::randn(&[8, 16], 0.3, &mut rng);
+        let x = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        // 8-bit multi-term layer: a minimal budget must not truncate it
+        let p = LayerPolicy::eight_bit().with_terms(2, 2);
+        assert_eq!(p.resolve_budget(&TermBudget::new(1, 1)), TermBudget::full());
+        let l = XintLinear::from_fp(&w, None, p);
+        let (y_min, e_min) = l.forward_with(&x, &TermBudget::new(1, 1));
+        let (y_full, e_full) = l.forward_with(&x, &TermBudget::full());
+        assert_eq!(y_min.data(), y_full.data());
+        assert_eq!(e_min, e_full);
+        // a sub-8-bit layer with the same terms IS truncated
+        let l4 = XintLinear::from_fp(&w, None, LayerPolicy::new(4, 4).with_terms(2, 2));
+        let (_, e4) = l4.forward_with(&x, &TermBudget::new(1, 1));
+        assert!(e4 <= 1, "low-bit layer must honor the budget: {e4}");
+    }
+
+    #[test]
+    fn budgeted_conv_full_identical_low_budget_fewer_gemms() {
+        let mut rng = Rng::seed(51);
+        let spec = Conv2dSpec::new(3, 6, 3, 1, 1);
+        let w = Tensor::randn(&[6, 3, 3, 3], 0.2, &mut rng);
+        let x = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+        let q = XintConv2d::from_fp(&w, None, spec, LayerPolicy::new(4, 4));
+        let legacy = q.forward(&x);
+        let (full, e_full) = q.forward_with(&x, &TermBudget::full());
+        assert_eq!(legacy.data(), full.data());
+        let (cheap, e_cheap) = q.forward_with(&x, &TermBudget::new(1, 1));
+        assert!(e_cheap < e_full, "{e_cheap} !< {e_full}");
+        assert_eq!(cheap.dims(), legacy.dims());
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //! * [`layer`] — Eq. 4: expanded linear / conv layers with the paper's
 //!   deployment policy (per-channel weights, 8-bit first/last layer,
 //!   weight-term upper bound from the §4 total-differential criterion).
+//! * [`budget`] — runtime [`TermBudget`]: per-request caps on the Eq. 3
+//!   term grid, executed largest-scale-first so any prefix is the best
+//!   available approximation (the QoS tiers' layer-granularity knob).
 //! * [`abelian`] — AbelianAdd / AbelianMul, the Abelian group over
 //!   isomorphic basis models, and the AllReduce-style reduction.
 //! * [`mixed`] — mixed-precision planner + model-size accounting (Table 3).
@@ -19,6 +22,7 @@
 
 pub mod abelian;
 pub mod auto;
+pub mod budget;
 pub mod expansion;
 pub mod gemm;
 pub mod layer;
@@ -28,8 +32,9 @@ pub mod quantizer;
 
 pub use abelian::{abelian_reduce, AbelianMul, LinearModel};
 pub use auto::{quantize_model_auto, AutoConfig};
+pub use budget::{ForwardStats, TermBudget};
 pub use expansion::{ExpandConfig, SeriesExpansion, SparseTensor};
-pub use gemm::{int_gemm_a_bt, xint_linear_forward, ExpandedWeight};
+pub use gemm::{int_gemm_a_bt, xint_linear_forward, xint_linear_forward_budgeted, ExpandedWeight};
 pub use layer::{LayerPolicy, XintConv2d, XintLinear};
 pub use mixed::{model_size_bytes, MixedPlan, MixedPlanner};
 pub use monitor::ExpansionMonitor;

@@ -6,13 +6,16 @@
 use fp_xint::coordinator::{
     BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
 };
+use fp_xint::models::quantized::quantize_model;
+use fp_xint::models::zoo;
 use fp_xint::qos::{QosConfig, TermController, Tier};
 use fp_xint::serve::server::{client_infer_tier, serve_tcp};
-use fp_xint::serve::workers::{mlp_basis_factory_with, BiasPlacement, MlpWeights};
+use fp_xint::serve::workers::{mlp_basis_factory_with, BiasPlacement, MlpWeights, QuantModelWorker};
 use fp_xint::tensor::{Rng, Tensor};
 use fp_xint::util::prop::{forall, no_shrink, PropConfig};
 use fp_xint::xint::abelian::abelian_reduce;
-use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor, SeriesExpansion};
+use fp_xint::xint::layer::LayerPolicy;
+use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor, SeriesExpansion, TermBudget};
 use std::sync::Arc;
 
 fn close(a: &Tensor, b: &Tensor, tol: f32) -> Result<(), String> {
@@ -229,6 +232,57 @@ fn property_no_tier_starves_under_a_sustained_flood() {
         stop.store(true, Ordering::Relaxed);
         flooder.join().unwrap();
     }
+}
+
+#[test]
+fn replication_mode_budget_flows_tier_to_gemm_grid() {
+    // Tier → TermBudget end to end in replication mode: the same
+    // layer-sync QuantModel serves Exact bit-identically to the direct
+    // forward while a BestEffort request executes measurably fewer
+    // (i, j) GEMM terms inside the worker.
+    let mut rng = Rng::seed(0xF00D);
+    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    let mut m = zoo::mini_resnet_a(4, 0xBEE);
+    let _ = m.forward_train(&probe); // settle BN stats
+    let q = quantize_model(&m, LayerPolicy::new(4, 4));
+    let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
+    let direct = q.forward(&x);
+    let (_, full_stats) = q.forward_with(&x, &TermBudget::full());
+
+    let qw = q.clone();
+    let pool = WorkerPool::new(
+        1,
+        Arc::new(move |_| {
+            Box::new(QuantModelWorker { model: qw.clone(), sample_dims: Some(vec![1, 16, 16]) })
+                as Box<dyn BasisWorker>
+        }),
+    );
+    let ctl = Arc::new(TermController::new(QosConfig::new(1)));
+    let coord = Coordinator::new(
+        BatcherConfig::uniform(4, 200, 16),
+        ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+    );
+    let flat = x.reshape(&[2, 256]);
+
+    let exact = coord.infer_tier(flat.clone(), Tier::Exact).unwrap();
+    assert_eq!(exact.logits.data(), direct.data(), "Exact must be bit-identical");
+    assert_eq!(exact.grid_terms, full_stats.grid_terms, "Exact runs the full grid");
+
+    let be = coord.infer_tier(flat, Tier::BestEffort).unwrap();
+    assert!(
+        be.grid_terms < exact.grid_terms,
+        "BestEffort must execute fewer GEMM terms: {} !< {}",
+        be.grid_terms,
+        exact.grid_terms
+    );
+    assert!(be.grid_terms > 0, "budget metering must reach the worker");
+    assert!(be.logits.data().iter().all(|v| v.is_finite()));
+    // the per-tier metrics expose the same separation
+    assert!(
+        coord.metrics.tier_mean_grid_terms(Tier::BestEffort)
+            < coord.metrics.tier_mean_grid_terms(Tier::Exact)
+    );
+    coord.shutdown();
 }
 
 #[test]

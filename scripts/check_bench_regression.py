@@ -52,6 +52,39 @@ ABSOLUTE_GATES = [
         "Exact p99 under a Throughput flood avoids the head-of-line cliff (WDRR)",
         lambda v: v <= 5.0,
     ),
+    # Term-budget contract (perf_budget): bit-identity and the grid-term
+    # cut are deterministic, so they gate absolutely on every run. The
+    # 1.5x wall-clock floor lives in MEASURED_FLOOR_GATES below: it arms
+    # only once a baseline measurement from the CI runner class has been
+    # committed (gating an absolute wall-clock number that has never
+    # been measured on that hardware could brick CI repo-wide).
+    (
+        "BENCH_budget.json",
+        "exact_bit_identical",
+        "Exact tier is bit-identical to the pre-budget forward",
+        lambda v: v == 1,
+    ),
+    (
+        "BENCH_budget.json",
+        "grid_cut_ratio",
+        "BestEffort executes at most half the full grid's INT GEMMs (deterministic)",
+        lambda v: v >= 2.0,
+    ),
+]
+
+# (file, dotted path, predicate description, check) — absolute floors on
+# measured quantities, armed only when the committed baseline contains
+# the same key (i.e. the quantity has been observed on this hardware
+# class at least once). The bench measures the speedup as an
+# adjacent-pair p50 ratio (full vs BestEffort back to back), so runner
+# drift largely cancels and the floor is stable once proven reachable.
+MEASURED_FLOOR_GATES = [
+    (
+        "BENCH_budget.json",
+        "besteffort_speedup",
+        "BestEffort layer budget yields >= 1.5x replication-mode speedup",
+        lambda v: v >= 1.5,
+    ),
 ]
 
 # (file, dotted path, kind, tolerance)
@@ -61,6 +94,11 @@ BASELINE_GATES = [
     ("BENCH_qos.json", "flood.wdrr_exact_p99_ms", "latency", 1.5),
     ("BENCH_qos.json", "spike.qos_p99_ms", "latency", 1.5),
     ("BENCH_qos.json", "spike.qos_completed", "count", 0.8),
+    # term-budget trend: the BestEffort replication speedup may not
+    # collapse relative to the recorded baseline, and the full-grid
+    # forward may not cliff
+    ("BENCH_budget.json", "besteffort_speedup", "count", 0.8),
+    ("BENCH_budget.json", "full_forward_ms", "latency", 2.0),
 ]
 
 
@@ -103,6 +141,19 @@ def main():
             "baseline gates (see benchmarks/baseline/README.md to record one)"
         )
     else:
+        for fname, path, desc, check in MEASURED_FLOOR_GATES:
+            base_doc = load(baseline_dir, fname)
+            cur_doc = load(current_dir, fname)
+            if base_doc is None or lookup(base_doc, path) is None:
+                print(f"skip [floor] {fname}:{path}: not yet measured in the baseline")
+                continue
+            value = None if cur_doc is None else lookup(cur_doc, path)
+            if value is None:
+                failures.append(f"{fname}:{path}: key missing (floor gate '{desc}')")
+            elif not check(value):
+                failures.append(f"{fname}:{path} = {value}: FAILED '{desc}'")
+            else:
+                print(f"ok  [floor] {fname}:{path} = {value} ({desc})")
         for fname, path, kind, tol in BASELINE_GATES:
             base_doc = load(baseline_dir, fname)
             cur_doc = load(current_dir, fname)
