@@ -29,7 +29,7 @@ fn main() {
     let mut monitor = ExpansionMonitor::new();
     let probe = data.batch(16, 3).x;
     let cfg_exp = ExpandConfig::activations(BitSpec::int(bits), 6);
-    monitor.observe(&probe, &cfg_exp);
+    monitor.observe(&probe, &cfg_exp).expect("one config per monitor series");
 
     let mut t = Table::new(
         &format!("expansion count ablation (W{bits}A{bits})"),
@@ -41,7 +41,7 @@ fn main() {
             LayerPolicy::new(bits, bits).with_terms(2.min(terms), terms),
         );
         let acc = accuracy(&q.forward(&val.x), &val.y);
-        let diff = monitor.max_diff[terms - 1];
+        let diff = monitor.max_diff()[terms - 1];
         t.row_str(&[
             &terms.to_string(),
             &format!("{:.2}%", acc * 100.0),

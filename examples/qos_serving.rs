@@ -45,7 +45,8 @@ fn calibrated_controller() -> Arc<TermController> {
     let cfg = ExpandConfig::symmetric(BitSpec::int(BITS), TERMS);
     let mut rng = Rng::seed(13);
     for _ in 0..4 {
-        mon.observe(&Tensor::randn(&[32, DIN], 1.0, &mut rng), &cfg);
+        mon.observe(&Tensor::randn(&[32, DIN], 1.0, &mut rng), &cfg)
+            .expect("one config per monitor series");
     }
     let ctl = TermController::new(QosConfig::new(TERMS));
     ctl.calibrate(&mon);

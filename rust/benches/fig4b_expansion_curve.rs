@@ -19,7 +19,9 @@ fn main() {
     // blue line: max |x − recon_t(x)| on real activations (the input batch)
     let mut monitor = ExpansionMonitor::new();
     let probe = data.batch(32, 3).x;
-    monitor.observe(&probe, &ExpandConfig::activations(BitSpec::int(2), 8));
+    monitor
+        .observe(&probe, &ExpandConfig::activations(BitSpec::int(2), 8))
+        .expect("one config per monitor series");
 
     // INT2 activations make the term count bite (INT4 saturates at t=2
     // on this substrate; the paper's INT4/ImageNet curve peaks at t=4)
@@ -32,7 +34,7 @@ fn main() {
         t.row_str(&[
             &terms.to_string(),
             &bs::pct(acc),
-            &format!("{:.2e}", monitor.max_diff[terms - 1]),
+            &format!("{:.2e}", monitor.max_diff()[terms - 1]),
         ]);
     }
     t.print();

@@ -1,59 +1,69 @@
-//! Perf — runtime term budgets in replication mode: the same layer-sync
-//! quantized model served at every tier's layer-granularity
-//! [`TermBudget`]. The Exact tier must be bit-identical to the legacy
-//! full-grid forward; the BestEffort tier must run a real speedup by
-//! executing fewer (i, j) INT GEMM terms, not by skipping layers.
+//! Perf — runtime budget plans in replication mode: the same layer-sync
+//! quantized model served at every tier's [`BudgetPlan`]. The Exact
+//! tier must be bit-identical to the legacy full-grid forward; the
+//! BestEffort tier must run a real speedup by executing fewer (i, j)
+//! INT GEMM terms, not by skipping layers; and the sensitivity-planned
+//! allocation must beat the uniform budget on output max-diff at an
+//! equal total grid-term count (the BudgetPlan PR's headline claim).
 //!
 //!     cargo bench --bench perf_budget
 //!
 //! Emits `BENCH_budget.json` (per-tier latency / grid terms / rel err +
-//! the BestEffort speedup and the Exact bit-identity flag) so the
-//! regression gate can hold the budget contract across PRs. The gated
-//! speedup is measured as an *adjacent* full-vs-budget pair of p50s
-//! (back-to-back on the same core, so runner drift cancels), and the
-//! grid-term cut is gated deterministically.
+//! the BestEffort speedup, the Exact bit-identity flag, and the
+//! planned-vs-uniform comparison) so the regression gate can hold the
+//! budget contract across PRs. The gated speedup is measured as an
+//! *adjacent* full-vs-budget pair of p50s (back-to-back on the same
+//! core, so runner drift cancels); the grid-term cut and the
+//! planned-vs-uniform max-diff comparison are deterministic.
 
 use fp_xint::bench_support::write_bench_json;
+use fp_xint::datasets::SynthImg;
 use fp_xint::models::quantized::quantize_model;
 use fp_xint::models::zoo;
 use fp_xint::qos::{QosConfig, TermController, Tier};
 use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::train::{train_classifier, TrainConfig};
 use fp_xint::util::json::Json;
 use fp_xint::util::{logger, BenchTimer, Table};
 use fp_xint::xint::layer::LayerPolicy;
-use fp_xint::xint::TermBudget;
+use fp_xint::xint::planner::{BudgetPlanner, LayerGridProfile};
+use fp_xint::xint::{BudgetPlan, ExpansionMonitor, TermBudget};
 
 fn main() {
     logger::init(false);
     let timer = BenchTimer::new(2, 10);
     let mut rng = Rng::seed(77);
-    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    // briefly trained zoo model: trained activations have heterogeneous
+    // per-layer scales, which is what per-layer planning exploits
+    let data = SynthImg::new(10, 1, 16, 0.15, 79);
     let mut m = zoo::mini_resnet_a(10, 78);
-    let _ = m.forward_train(&probe); // settle BN stats before folding
+    let tcfg = TrainConfig { steps: 60, batch: 16, lr: 0.05, log_every: 1000 };
+    train_classifier(&mut m, &data, &tcfg);
     let q = quantize_model(&m, LayerPolicy::new(4, 4)); // k=2, t=4 interior
     let x = Tensor::randn(&[8, 1, 16, 16], 1.0, &mut rng);
 
-    // Exact contract: the budgeted stack with a full budget reproduces
+    // Exact contract: the budgeted stack with a full plan reproduces
     // the legacy forward bit for bit (shared natural-order grid path)
     let legacy = q.forward(&x);
-    let (full_y, full_stats) = q.forward_with(&x, &TermBudget::full());
+    let (full_y, full_stats) = q.forward_with(&x, &BudgetPlan::full());
     let exact_bit_identical = legacy.data() == full_y.data();
 
-    // tier ladder → layer budgets via the controller (uncalibrated
-    // defaults; replication mode = single whole-model worker)
+    // tier ladder → uniform layer budgets via the controller
+    // (uncalibrated defaults; replication mode = single whole-model
+    // worker, plans fall back to uniform without layer calibration)
     let ctl = TermController::new(QosConfig::new(1));
-    let full_time = timer.run(|| q.forward_with(&x, &TermBudget::full()));
+    let full_time = timer.run(|| q.forward_with(&x, &BudgetPlan::full()));
 
     let mut table = Table::new(
         "perf — replication-mode forward under per-tier layer budgets (mini_resnet_a W4A4)",
-        &["tier", "budget (w×a)", "grid terms", "forward (ms)", "speedup", "rel err"],
+        &["tier", "plan", "grid terms", "forward (ms)", "speedup", "rel err"],
     );
     let mut tier_json: Vec<Json> = Vec::new();
     let mut besteffort_grid = full_stats.grid_terms;
     for tier in Tier::ALL {
-        let budget = ctl.layer_budget_for(tier);
-        let (y, stats) = q.forward_with(&x, &budget);
-        let s = timer.run(|| q.forward_with(&x, &budget));
+        let plan = ctl.plan_for(tier);
+        let (y, stats) = q.forward_with(&x, &plan);
+        let s = timer.run(|| q.forward_with(&x, &plan));
         let speedup = full_time.p50 / s.p50;
         let rel = legacy.sub(&y).norm() / legacy.norm().max(1e-12);
         if tier == Tier::BestEffort {
@@ -61,7 +71,7 @@ fn main() {
         }
         table.row_str(&[
             tier.name(),
-            &budget.to_string(),
+            &plan.to_string(),
             &stats.grid_terms.to_string(),
             &format!("{:.3}", s.p50 * 1e3),
             &format!("{speedup:.2}×"),
@@ -79,10 +89,66 @@ fn main() {
 
     // the gated speedup: an adjacent full/BestEffort pair, measured
     // back to back so shared-runner drift hits both sides equally
-    let be_budget = ctl.layer_budget_for(Tier::BestEffort);
-    let full_adj = timer.run(|| q.forward_with(&x, &TermBudget::full()));
-    let be_adj = timer.run(|| q.forward_with(&x, &be_budget));
+    let be_plan = ctl.plan_for(Tier::BestEffort);
+    let full_adj = timer.run(|| q.forward_with(&x, &BudgetPlan::full()));
+    let be_adj = timer.run(|| q.forward_with(&x, &be_plan));
     let besteffort_speedup = full_adj.p50 / be_adj.p50;
+
+    // ---- planned vs uniform at an equal total grid-term count ----
+    // profile each layer's convergence curve on calibration batches,
+    // then give the sensitivity planner exactly the grid ceiling the
+    // uniform 2-term budget spends and compare output max-diff
+    let mut mon = ExpansionMonitor::new();
+    for which in 0..3u64 {
+        let probe = data.batch(8, 10 + which).x;
+        q.observe_layers(&probe, &mut mon).expect("one config per layer series");
+    }
+    let profiles = q.grid_profiles(&mon);
+    let uniform_cap = 2usize;
+    // the ceiling is the uniform budget's EXACT spend (both axes
+    // clamped per layer), so the planner redistributes the same total
+    // the uniform baseline actually executes — never more
+    let ceiling = BudgetPlanner::grid_cost(&profiles, uniform_cap, uniform_cap);
+    let uniform_plan = BudgetPlan::uniform(TermBudget::new(uniform_cap, uniform_cap));
+    // cap the planner's weight axis like the uniform budget does, so
+    // each activation term costs what the baseline would pay for it
+    let capped: Vec<LayerGridProfile> = profiles
+        .iter()
+        .map(|p| {
+            let mut p = p.clone();
+            if !p.exempt {
+                p.w_terms = p.w_terms.min(uniform_cap).max(1);
+            }
+            p
+        })
+        .collect();
+    let planned = BudgetPlanner::new(ceiling).plan(&capped);
+    let (y_uniform, s_uniform) = q.forward_with(&x, &uniform_plan);
+    let (y_planned, s_planned) = q.forward_with(&x, &planned);
+    let scale = legacy.max_abs().max(1e-12);
+    let uniform_max_diff = legacy.sub(&y_uniform).max_abs() / scale;
+    let planned_max_diff = legacy.sub(&y_planned).max_abs() / scale;
+    // max-diff improvement of planning at equal spend (> 1 = planned
+    // is closer to the full forward than uniform)
+    let improvement = uniform_max_diff as f64 / (planned_max_diff as f64).max(1e-12);
+
+    let mut ptable = Table::new(
+        "planned vs uniform allocation (equal grid ceiling, vs full forward)",
+        &["allocation", "ceiling", "grid terms", "max diff"],
+    );
+    ptable.row_str(&[
+        "uniform",
+        &ceiling.to_string(),
+        &s_uniform.grid_terms.to_string(),
+        &format!("{uniform_max_diff:.3e}"),
+    ]);
+    ptable.row_str(&[
+        &planned.to_string(),
+        &planned.total_grid_terms().unwrap_or(0).to_string(),
+        &s_planned.grid_terms.to_string(),
+        &format!("{planned_max_diff:.3e}"),
+    ]);
+    ptable.print();
 
     println!(
         "\nfull grid: {} GEMM terms over {} expanded layers; exact bit-identical: {}",
@@ -92,6 +158,10 @@ fn main() {
         "besteffort: {} GEMM terms (full: {}), adjacent-pair speedup {besteffort_speedup:.2}× \
          (target ≥ 1.5×)",
         besteffort_grid, full_stats.grid_terms
+    );
+    println!(
+        "planned vs uniform at ceiling {ceiling}: max diff {planned_max_diff:.3e} vs \
+         {uniform_max_diff:.3e} ({improvement:.2}× better; target ≥ 1×)"
     );
 
     let json = Json::obj([
@@ -107,6 +177,19 @@ fn main() {
             "grid_cut_ratio",
             Json::num(full_stats.grid_terms as f64 / (besteffort_grid as f64).max(1.0)),
         ),
+        // planned-vs-uniform comparison (deterministic: seeded model,
+        // seeded probes, no timing involved)
+        (
+            "planned",
+            Json::obj([
+                ("ceiling", Json::num(ceiling as f64)),
+                ("uniform_grid_terms", Json::num(s_uniform.grid_terms as f64)),
+                ("planned_grid_terms", Json::num(s_planned.grid_terms as f64)),
+                ("uniform_max_diff", Json::num(uniform_max_diff as f64)),
+                ("planned_max_diff", Json::num(planned_max_diff as f64)),
+                ("improvement", Json::num(improvement)),
+            ]),
+        ),
         ("tiers", Json::Arr(tier_json)),
     ]);
     match write_bench_json("budget", &json) {
@@ -116,6 +199,9 @@ fn main() {
     println!(
         "\ntarget: the Exact tier is bit-identical to the pre-budget forward;\n\
          BestEffort cuts the executed (i, j) grid (k·t → 1) for a ≥ 1.5×\n\
-         replication-mode speedup — precision-for-latency at layer granularity."
+         replication-mode speedup; and at an equal grid ceiling the\n\
+         sensitivity-planned allocation tracks the full forward at least\n\
+         as closely as the uniform budget — per-layer precision where it\n\
+         buys the most."
     );
 }

@@ -27,6 +27,14 @@ pub struct Metrics {
     tier_grid_terms: [AtomicU64; NUM_TIERS],
     /// per-tier count of batches with grid accounting (mean divisor)
     tier_grid_batches: [AtomicU64; NUM_TIERS],
+    /// per-tier sum of *planned* grid ceilings (the BudgetPlan's total
+    /// at serve time) and the batch count that carried one. NOTE: the
+    /// ceiling is an allocation-level pair count (one model forward's
+    /// grid), while executed `tier_grid_terms` sums over every prefix
+    /// worker and every conv image row — track the ceiling as "what the
+    /// controller allocated", not as a ratio against executed spend
+    tier_planned_grid: [AtomicU64; NUM_TIERS],
+    tier_planned_batches: [AtomicU64; NUM_TIERS],
     /// per-tier latency reservoirs
     tier_latencies: [Mutex<Vec<f64>>; NUM_TIERS],
     /// per-tier worst estimated precision loss (max-residual estimate
@@ -134,11 +142,17 @@ impl Metrics {
 
     /// Record one formed batch's INT GEMM grid spend at `tier` (the
     /// batch forward is shared by all its requests — call once per
-    /// batch, not per request).
-    pub fn record_batch_grid(&self, tier: Tier, grid_terms: usize) {
+    /// batch, not per request), plus the plan ceiling the batch was
+    /// served under (`None` when the plan carried no ceiling — full or
+    /// uniform plans).
+    pub fn record_batch_grid(&self, tier: Tier, grid_terms: usize, planned: Option<usize>) {
         let i = tier.idx();
         self.tier_grid_terms[i].fetch_add(grid_terms as u64, Ordering::Relaxed);
         self.tier_grid_batches[i].fetch_add(1, Ordering::Relaxed);
+        if let Some(p) = planned {
+            self.tier_planned_grid[i].fetch_add(p as u64, Ordering::Relaxed);
+            self.tier_planned_batches[i].fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Mean INT GEMM grid terms executed per *batch forward* at `tier`
@@ -151,6 +165,20 @@ impl Metrics {
             0.0
         } else {
             self.tier_grid_terms[tier.idx()].load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Mean *planned* grid ceiling per batch at `tier` (0 when no
+    /// plan-carrying batch was served) — what the controller allocated,
+    /// in single-forward pair units. Not directly comparable to
+    /// [`Metrics::tier_mean_grid_terms`]: executed spend scales with
+    /// prefix workers and conv image rows, the ceiling does not.
+    pub fn tier_mean_planned_grid_terms(&self, tier: Tier) -> f64 {
+        let n = self.tier_planned_batches[tier.idx()].load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.tier_planned_grid[tier.idx()].load(Ordering::Relaxed) as f64 / n as f64
         }
     }
 
@@ -193,9 +221,9 @@ mod tests {
         m.record_completed_tier(Tier::Exact, 0.004, 8, None);
         m.record_completed_tier(Tier::Throughput, 0.001, 2, Some(0.01));
         m.record_completed_tier(Tier::Throughput, 0.002, 4, Some(0.002));
-        m.record_batch_grid(Tier::Exact, 64);
-        m.record_batch_grid(Tier::Throughput, 6);
-        m.record_batch_grid(Tier::Throughput, 10);
+        m.record_batch_grid(Tier::Exact, 64, None);
+        m.record_batch_grid(Tier::Throughput, 6, Some(8));
+        m.record_batch_grid(Tier::Throughput, 10, Some(12));
         assert_eq!(m.completed(), 3);
         assert_eq!(m.tier_completed(Tier::Exact), 1);
         assert_eq!(m.tier_completed(Tier::Throughput), 2);
@@ -206,6 +234,9 @@ mod tests {
         assert!((m.tier_mean_grid_terms(Tier::Throughput) - 8.0).abs() < 1e-9);
         assert!((m.tier_mean_grid_terms(Tier::Exact) - 64.0).abs() < 1e-9);
         assert_eq!(m.tier_mean_grid_terms(Tier::Balanced), 0.0);
+        // planned ceilings accumulate only for plan-carrying batches
+        assert!((m.tier_mean_planned_grid_terms(Tier::Throughput) - 10.0).abs() < 1e-9);
+        assert_eq!(m.tier_mean_planned_grid_terms(Tier::Exact), 0.0);
         // worst loss wins
         assert!((m.tier_est_loss(Tier::Throughput) - 0.01).abs() < 1e-9);
         assert_eq!(m.tier_est_loss(Tier::Exact), 0.0);

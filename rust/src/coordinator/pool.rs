@@ -4,10 +4,12 @@
 //! factory runs *inside* the thread, so non-`Send` state (a PJRT client)
 //! is constructed where it lives. Broadcast jobs fan the same activation
 //! out to every worker — the paper's "broadcast and quantize" step
-//! (§5.1: "the activations of all base models are broadcast").
+//! (§5.1: "the activations of all base models are broadcast") — along
+//! with the batch's [`BudgetPlan`] (shared by `Arc`: one plan per batch,
+//! not one clone per worker).
 
 use crate::tensor::Tensor;
-use crate::xint::budget::TermBudget;
+use crate::xint::budget::BudgetPlan;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -33,12 +35,12 @@ pub type RunReceiver = mpsc::Receiver<(usize, anyhow::Result<BudgetedRun>)>;
 pub trait BasisWorker {
     fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor>;
 
-    /// Budget-aware entry point. The default ignores the budget and
+    /// Plan-aware entry point. The default ignores the plan and
     /// reports no grid spend, so existing workers keep their exact
     /// behavior; backends with a runtime-truncatable term grid
-    /// (`QuantModelWorker`) override it.
-    fn run_budgeted(&mut self, x: &Tensor, budget: &TermBudget) -> anyhow::Result<BudgetedRun> {
-        let _ = budget;
+    /// (`QuantModelWorker`) override it and index the plan per layer.
+    fn run_budgeted(&mut self, x: &Tensor, plan: &BudgetPlan) -> anyhow::Result<BudgetedRun> {
+        let _ = plan;
         Ok(BudgetedRun { y: self.run(x)?, grid_terms: 0 })
     }
 }
@@ -51,7 +53,7 @@ pub type WorkerFactory = Arc<dyn Fn(usize) -> Box<dyn BasisWorker> + Send + Sync
 enum Job {
     Broadcast {
         x: Arc<Tensor>,
-        budget: TermBudget,
+        plan: Arc<BudgetPlan>,
         out: mpsc::Sender<(usize, anyhow::Result<BudgetedRun>)>,
     },
     Stop,
@@ -78,8 +80,8 @@ impl WorkerPool {
                         let mut worker = factory(i);
                         while let Ok(job) = rx.recv() {
                             match job {
-                                Job::Broadcast { x, budget, out } => {
-                                    let res = worker.run_budgeted(&x, &budget);
+                                Job::Broadcast { x, plan, out } => {
+                                    let res = worker.run_budgeted(&x, &plan);
                                     // receiver may be gone on shutdown
                                     let _ = out.send((i, res));
                                 }
@@ -113,27 +115,27 @@ impl WorkerPool {
     /// (the QoS tiers ride this). Outputs return in worker order 0..n.
     pub fn broadcast_to(&self, x: Tensor, n: usize) -> anyhow::Result<Vec<Tensor>> {
         Ok(self
-            .broadcast_runs(x, n, TermBudget::full())?
+            .broadcast_runs(x, n, Arc::new(BudgetPlan::full()))?
             .into_iter()
             .map(|r| r.y)
             .collect())
     }
 
-    /// [`WorkerPool::broadcast_to`] with an explicit per-worker
-    /// [`TermBudget`] — budget-aware workers truncate their own Eq. 3
-    /// grids and report the GEMM terms spent.
+    /// [`WorkerPool::broadcast_to`] with an explicit per-batch
+    /// [`BudgetPlan`] — plan-aware workers truncate their own Eq. 3
+    /// grids per layer and report the GEMM terms spent.
     pub fn broadcast_runs(
         &self,
         x: Tensor,
         n: usize,
-        budget: TermBudget,
+        plan: Arc<BudgetPlan>,
     ) -> anyhow::Result<Vec<BudgetedRun>> {
         anyhow::ensure!(n >= 1, "broadcast needs at least one worker");
         anyhow::ensure!(n <= self.senders.len(), "prefix {n} exceeds pool {}", self.senders.len());
         let x = Arc::new(x);
         let (tx, rx) = mpsc::channel();
         for s in &self.senders[..n] {
-            s.send(Job::Broadcast { x: x.clone(), budget, out: tx.clone() })
+            s.send(Job::Broadcast { x: x.clone(), plan: plan.clone(), out: tx.clone() })
                 .map_err(|_| anyhow::anyhow!("worker thread died"))?;
         }
         drop(tx);
@@ -155,7 +157,7 @@ impl WorkerPool {
         &self,
         i: usize,
         x: Arc<Tensor>,
-        budget: TermBudget,
+        plan: Arc<BudgetPlan>,
     ) -> anyhow::Result<RunReceiver> {
         anyhow::ensure!(
             i < self.senders.len(),
@@ -164,14 +166,14 @@ impl WorkerPool {
         );
         let (tx, rx) = mpsc::channel();
         self.senders[i]
-            .send(Job::Broadcast { x, budget, out: tx })
+            .send(Job::Broadcast { x, plan, out: tx })
             .map_err(|_| anyhow::anyhow!("worker thread died"))?;
         Ok(rx)
     }
 
     /// Run `x` on worker `i` alone and wait for its output.
     pub fn run_one(&self, i: usize, x: Arc<Tensor>) -> anyhow::Result<Tensor> {
-        let rx = self.dispatch_one(i, x, TermBudget::full())?;
+        let rx = self.dispatch_one(i, x, Arc::new(BudgetPlan::full()))?;
         let (_, res) = rx.recv().map_err(|_| anyhow::anyhow!("worker output lost"))?;
         Ok(res?.y)
     }
@@ -191,6 +193,7 @@ impl WorkerPool {
 mod tests {
     use super::*;
     use crate::tensor::Rng;
+    use crate::xint::budget::TermBudget;
 
     struct AddConst(f32);
     impl BasisWorker for AddConst {
@@ -242,34 +245,43 @@ mod tests {
     }
 
     #[test]
-    fn budget_reaches_workers_and_spend_reports_back() {
-        struct BudgetEcho;
-        impl BasisWorker for BudgetEcho {
+    fn plan_reaches_workers_and_spend_reports_back() {
+        struct PlanEcho;
+        impl BasisWorker for PlanEcho {
             fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
                 Ok(x.clone())
             }
             fn run_budgeted(
                 &mut self,
                 x: &Tensor,
-                budget: &TermBudget,
+                plan: &BudgetPlan,
             ) -> anyhow::Result<BudgetedRun> {
-                // report the (clamped) activation cap as "spend"
-                Ok(BudgetedRun { y: x.clone(), grid_terms: budget.a_terms.min(100) })
+                // report layer 0's (clamped) activation cap as "spend"
+                Ok(BudgetedRun { y: x.clone(), grid_terms: plan.budget_for(0).a_terms.min(100) })
             }
         }
         let pool =
-            WorkerPool::new(2, Arc::new(|_| Box::new(BudgetEcho) as Box<dyn BasisWorker>));
-        let runs = pool
-            .broadcast_runs(Tensor::vec1(&[1.0]), 2, TermBudget::new(2, 3))
-            .unwrap();
+            WorkerPool::new(2, Arc::new(|_| Box::new(PlanEcho) as Box<dyn BasisWorker>));
+        let plan = Arc::new(BudgetPlan::uniform(TermBudget::new(2, 3)));
+        let runs = pool.broadcast_runs(Tensor::vec1(&[1.0]), 2, plan).unwrap();
         assert!(runs.iter().all(|r| r.grid_terms == 3));
-        // the budget-free API defaults to a full budget
-        let runs = pool.broadcast_runs(Tensor::vec1(&[1.0]), 2, TermBudget::full()).unwrap();
+        // a per-layer plan is indexed by position inside the worker
+        let plan = Arc::new(BudgetPlan::per_layer(
+            vec![TermBudget::new(2, 7)],
+            TermBudget::full(),
+        ));
+        let runs = pool.broadcast_runs(Tensor::vec1(&[1.0]), 2, plan).unwrap();
+        assert!(runs.iter().all(|r| r.grid_terms == 7));
+        // the plan-free API defaults to a full plan
+        let runs = pool
+            .broadcast_runs(Tensor::vec1(&[1.0]), 2, Arc::new(BudgetPlan::full()))
+            .unwrap();
         assert!(runs.iter().all(|r| r.grid_terms == 100));
         // workers without an override report zero spend
         let plain =
             WorkerPool::new(1, Arc::new(|i| Box::new(AddConst(i as f32)) as Box<dyn BasisWorker>));
-        let runs = plain.broadcast_runs(Tensor::vec1(&[1.0]), 1, TermBudget::new(1, 1)).unwrap();
+        let cheap = Arc::new(BudgetPlan::uniform(TermBudget::new(1, 1)));
+        let runs = plain.broadcast_runs(Tensor::vec1(&[1.0]), 1, cheap).unwrap();
         assert_eq!(runs[0].grid_terms, 0);
         assert_eq!(runs[0].y.data(), &[1.0]);
         pool.shutdown();

@@ -9,9 +9,9 @@
 //! controller exactly ONE [`observe_batch`](TermController::observe_batch)
 //! decision per formed batch (hottest per-tier queue occupancy + batch
 //! service time), and runs every worker under the tier's
-//! layer-granularity [`TermBudget`]
-//! ([`TermController::layer_budget_for`]) so budget-aware replication
-//! workers truncate their own Eq. 3 grids. In *anytime* mode the prefix
+//! [`BudgetPlan`] ([`TermController::plan_for`]) so plan-aware
+//! replication workers truncate each layer's Eq. 3 grid to its
+//! sensitivity-allocated entry. In *anytime* mode the prefix
 //! is **streamed** with a one-term lookahead: terms dispatch in series
 //! order with exactly one speculative dispatch in flight, and the
 //! reduction stops once the marginal term's contribution falls below
@@ -28,7 +28,7 @@ use super::Response;
 use crate::qos::{TermController, NUM_TIERS};
 use crate::tensor::Tensor;
 use crate::xint::abelian::abelian_reduce;
-use crate::xint::budget::TermBudget;
+use crate::xint::budget::BudgetPlan;
 use std::sync::Arc;
 
 /// One reduced batch: the output, the basis terms reduced, and the INT
@@ -95,18 +95,20 @@ impl ExpansionScheduler {
             Some(ctl) => ctl.budget_for(tier).min(self.pool.len()).max(1),
             None => self.pool.len(),
         };
-        // layer-granularity budget (replication-mode workers truncate
-        // their own Eq. 3 grids); full when no controller is attached
-        let layer_budget = match &self.controller {
-            Some(ctl) => ctl.layer_budget_for(tier),
-            None => TermBudget::full(),
-        };
+        // the tier's per-layer budget plan (plan-aware replication
+        // workers truncate each layer's Eq. 3 grid to its entry);
+        // full when no controller is attached
+        let plan = Arc::new(match &self.controller {
+            Some(ctl) => ctl.plan_for(tier),
+            None => BudgetPlan::full(),
+        });
+        let planned_grid = plan.total_grid_terms();
         let anytime_tol = self
             .controller
             .as_ref()
             .filter(|ctl| ctl.config().anytime)
             .and_then(|ctl| ctl.batch_tolerance([tier]));
-        let result = self.reduce_prefix(batch.x.clone(), budget, layer_budget, anytime_tol);
+        let result = self.reduce_prefix(batch.x.clone(), budget, plan, anytime_tol);
         match result {
             Ok(reduced) => {
                 let terms_used = reduced.terms;
@@ -120,8 +122,9 @@ impl ExpansionScheduler {
                     .and_then(|ctl| ctl.estimated_loss(terms_used));
                 // the batch forward is shared by every request in it:
                 // grid spend is a batch-level observable, recorded once
-                // (and BEFORE replies, so callers can assert on it)
-                metrics.record_batch_grid(tier, reduced.grid_terms);
+                // (and BEFORE replies, so callers can assert on it),
+                // alongside the plan ceiling it was served under
+                metrics.record_batch_grid(tier, reduced.grid_terms, planned_grid);
                 let mut row = 0usize;
                 let classes = logits.dims()[1];
                 for p in batch.parts {
@@ -168,12 +171,12 @@ impl ExpansionScheduler {
     /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree
     /// over the full pool.
     pub fn forward(&self, x: Tensor) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, self.pool.len(), TermBudget::full(), None)?.y)
+        Ok(self.reduce_prefix(x, self.pool.len(), Arc::new(BudgetPlan::full()), None)?.y)
     }
 
     /// Truncated forward: reduce only the first `n` basis outputs.
     pub fn forward_truncated(&self, x: Tensor, n: usize) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, n, TermBudget::full(), None)?.y)
+        Ok(self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), None)?.y)
     }
 
     /// Anytime forward over the first `n` workers: stream terms in
@@ -187,12 +190,12 @@ impl ExpansionScheduler {
         n: usize,
         tol: f32,
     ) -> anyhow::Result<(Tensor, usize)> {
-        let r = self.reduce_prefix(x, n, TermBudget::full(), Some(tol))?;
+        let r = self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), Some(tol))?;
         Ok((r.y, r.terms))
     }
 
     /// Reduce the first `n` basis outputs (with gains applied), each
-    /// worker running under `layer_budget`. Without a tolerance,
+    /// worker running under `plan`. Without a tolerance,
     /// broadcast to all `n` workers in parallel and reduce as a
     /// balanced tree. With a tolerance, **stream** with a one-term
     /// lookahead pipeline: while term `i` is being inspected (gain,
@@ -205,12 +208,12 @@ impl ExpansionScheduler {
         &self,
         x: Tensor,
         n: usize,
-        layer_budget: TermBudget,
+        plan: Arc<BudgetPlan>,
         tol: Option<f32>,
     ) -> anyhow::Result<Reduced> {
         match tol {
             None => {
-                let runs = self.pool.broadcast_runs(x, n, layer_budget)?;
+                let runs = self.pool.broadcast_runs(x, n, plan)?;
                 let mut grid_terms = 0usize;
                 let outs: Vec<Tensor> = runs
                     .into_iter()
@@ -247,9 +250,9 @@ impl ExpansionScheduler {
                 };
                 // term 0 is always consumed and sets the stop threshold;
                 // its lookahead (term 1) is dispatched before we block
-                let head = self.pool.dispatch_one(0, x.clone(), layer_budget)?;
+                let head = self.pool.dispatch_one(0, x.clone(), plan.clone())?;
                 let mut pending = if n > 1 {
-                    Some(self.pool.dispatch_one(1, x.clone(), layer_budget)?)
+                    Some(self.pool.dispatch_one(1, x.clone(), plan.clone())?)
                 } else {
                     None
                 };
@@ -264,7 +267,7 @@ impl ExpansionScheduler {
                     // one-term lookahead: exactly one dispatch in flight
                     // beyond the term currently being inspected
                     let lookahead = if i + 1 < n {
-                        Some(self.pool.dispatch_one(i + 1, x.clone(), layer_budget)?)
+                        Some(self.pool.dispatch_one(i + 1, x.clone(), plan.clone())?)
                     } else {
                         None
                     };

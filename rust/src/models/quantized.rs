@@ -3,11 +3,22 @@
 //! deployment policy — BN folded, per-channel weights, first/last layer
 //! at 8-bit — plus the activation-range observer PTQ baselines calibrate
 //! with.
+//!
+//! The budgeted forward consumes a [`BudgetPlan`]: every quantizable
+//! layer is numbered depth-first (the same order `quantize_model`
+//! assigns policies in) and indexes the plan by that position, so a
+//! sensitivity-planned allocation reaches exactly the layer it was made
+//! for. [`QuantModel::observe_layers`] feeds a per-layer
+//! [`ExpansionMonitor`] from a calibration batch and
+//! [`QuantModel::grid_profiles`] turns the observed curves into the
+//! [`BudgetPlanner`](crate::xint::planner::BudgetPlanner)'s input.
 
 use super::graph::{Layer, Model};
 use crate::tensor::Tensor;
-use crate::xint::budget::{ForwardStats, TermBudget};
+use crate::xint::budget::{BudgetPlan, ForwardStats};
 use crate::xint::layer::{LayerPolicy, XintConv2d, XintLinear};
+use crate::xint::monitor::{ConfigMismatch, ExpansionMonitor};
+use crate::xint::planner::LayerGridProfile;
 use crate::xint::quantizer::{channel_range, Clip, Range, Symmetry};
 
 /// A quantized mirror of [`Model`]: same topology, expanded conv/linear.
@@ -33,30 +44,45 @@ pub struct QuantModel {
 
 impl QuantLayer {
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        // full budget takes the legacy natural-order grid in every
+        // full plan takes the legacy natural-order grid in every
         // layer, so this stays bit-identical to the pre-budget stack
         let mut stats = ForwardStats::default();
-        self.forward_with(x, &TermBudget::full(), &mut stats)
+        let mut idx = 0usize;
+        self.forward_with(x, &BudgetPlan::full(), &mut idx, &mut stats)
     }
 
-    /// Budgeted forward: every expanded conv/linear resolves `budget`
-    /// against its own policy (8-bit first/last layers stay exact) and
-    /// truncates its Eq. 3 grid accordingly; `stats` accumulates the
-    /// INT GEMM terms actually executed.
+    /// Plan-indexed budgeted forward: every expanded conv/linear takes
+    /// the plan entry at its depth-first position `idx` (advancing the
+    /// counter), resolves it against its own policy (§5.1 8-bit
+    /// first/last layers stay exact) and truncates its Eq. 3 grid
+    /// accordingly; `stats` accumulates the INT GEMM terms executed.
+    ///
+    /// INVARIANT: the depth-first position order here must stay in
+    /// lockstep with `quantize_seq` (policy assignment), `observe_seq`
+    /// (per-layer calibration) and `profile_seq` (planner input) —
+    /// all four walk Residual main-then-short and Branches in order.
+    /// An order divergence silently hands each layer another layer's
+    /// budget/curve; the `observe_layers_profiles_match_plan_indexing`
+    /// test pins the pairing by config.
     pub fn forward_with(
         &self,
         x: &Tensor,
-        budget: &TermBudget,
+        plan: &BudgetPlan,
+        idx: &mut usize,
         stats: &mut ForwardStats,
     ) -> Tensor {
         match self {
             QuantLayer::Conv(c) => {
-                let (y, executed) = c.forward_with(x, budget);
+                let budget = plan.budget_for(*idx);
+                *idx += 1;
+                let (y, executed) = c.forward_with(x, &budget);
                 stats.record_layer(executed);
                 y
             }
             QuantLayer::Linear(l) => {
-                let (y, executed) = l.forward_with(x, budget);
+                let budget = plan.budget_for(*idx);
+                *idx += 1;
+                let (y, executed) = l.forward_with(x, &budget);
                 stats.record_layer(executed);
                 y
             }
@@ -71,11 +97,11 @@ impl QuantLayer {
             QuantLayer::Residual(main, short) => {
                 let mut h = x.clone();
                 for l in main {
-                    h = l.forward_with(&h, budget, stats);
+                    h = l.forward_with(&h, plan, idx, stats);
                 }
                 let mut s = x.clone();
                 for l in short {
-                    s = l.forward_with(&s, budget, stats);
+                    s = l.forward_with(&s, plan, idx, stats);
                 }
                 h.add(&s)
             }
@@ -85,7 +111,7 @@ impl QuantLayer {
                     .map(|b| {
                         let mut h = x.clone();
                         for l in b {
-                            h = l.forward_with(&h, budget, stats);
+                            h = l.forward_with(&h, plan, idx, stats);
                         }
                         h
                     })
@@ -113,23 +139,147 @@ impl QuantLayer {
 
 impl QuantModel {
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        self.forward_with(x, &TermBudget::full()).0
+        self.forward_with(x, &BudgetPlan::full()).0
     }
 
-    /// Model-level budgeted forward (the paper's layer granularity at
-    /// serve time): every expanded layer honors `budget` after per-layer
-    /// policy resolution. Returns the logits and what was spent.
-    pub fn forward_with(&self, x: &Tensor, budget: &TermBudget) -> (Tensor, ForwardStats) {
+    /// Model-level budgeted forward (the paper's tensor granularity at
+    /// serve time): every expanded layer honors its [`BudgetPlan`]
+    /// entry, indexed by depth-first quantizable-layer position, after
+    /// per-layer policy resolution. Returns the logits and what was
+    /// spent. `BudgetPlan::full()` is bit-identical to
+    /// [`QuantModel::forward`]; `BudgetPlan::uniform(b)` reproduces the
+    /// one-scalar-budget behavior.
+    pub fn forward_with(&self, x: &Tensor, plan: &BudgetPlan) -> (Tensor, ForwardStats) {
         let mut stats = ForwardStats::default();
+        let mut idx = 0usize;
         let mut h = x.clone();
         for l in &self.layers {
-            h = l.forward_with(&h, budget, &mut stats);
+            h = l.forward_with(&h, plan, &mut idx, &mut stats);
         }
         (h, stats)
     }
 
     pub fn storage_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.storage_bytes()).sum()
+    }
+
+    /// Run one calibration batch, observing every *plannable* expanded
+    /// layer's input under that layer's activation config into the
+    /// per-layer keyed monitor — each layer's own Theorem 1 convergence
+    /// curve, which is exactly the sensitivity profile the budget
+    /// planner allocates against. §5.1-exempt layers and FP-fallback
+    /// grouped convs are skipped (their positions still advance): the
+    /// planner never reads their curves, so observing them would only
+    /// burn O(terms·numel) calibration work per exempt layer. Layers
+    /// are keyed by the same depth-first position the budgeted forward
+    /// indexes plans with.
+    pub fn observe_layers(
+        &self,
+        x: &Tensor,
+        monitor: &mut ExpansionMonitor,
+    ) -> Result<(), ConfigMismatch> {
+        let mut idx = 0usize;
+        let _ = observe_seq(&self.layers, x, &mut idx, monitor)?;
+        Ok(())
+    }
+
+    /// Per-layer grid shapes + observed sensitivity curves for the
+    /// [`BudgetPlanner`](crate::xint::planner::BudgetPlanner). §5.1
+    /// 8-bit layers and FP-fallback grouped convs are marked exempt
+    /// (pinned exact / no INT grid to truncate). Unobserved layers get
+    /// an empty curve and stay at the planner's 1-term floor.
+    pub fn grid_profiles(&self, monitor: &ExpansionMonitor) -> Vec<LayerGridProfile> {
+        let mut profiles = Vec::new();
+        let mut idx = 0usize;
+        profile_seq(&self.layers, &mut idx, monitor, &mut profiles);
+        profiles
+    }
+}
+
+fn observe_seq(
+    layers: &[QuantLayer],
+    x: &Tensor,
+    idx: &mut usize,
+    monitor: &mut ExpansionMonitor,
+) -> Result<Tensor, ConfigMismatch> {
+    let mut h = x.clone();
+    for l in layers {
+        match l {
+            QuantLayer::Conv(c) => {
+                if !c.policy.is_exempt() && !c.uses_fp_fallback() {
+                    monitor.observe_layer(*idx, &h, &c.policy.act_config())?;
+                }
+                *idx += 1;
+                h = c.forward(&h);
+            }
+            QuantLayer::Linear(lin) => {
+                if !lin.policy.is_exempt() {
+                    monitor.observe_layer(*idx, &h, &lin.policy.act_config())?;
+                }
+                *idx += 1;
+                h = lin.forward(&h);
+            }
+            QuantLayer::Residual(m, s) => {
+                let hm = observe_seq(m, &h, idx, monitor)?;
+                let hs = observe_seq(s, &h, idx, monitor)?;
+                h = hm.add(&hs);
+            }
+            QuantLayer::Branches(bs) => {
+                let mut outs = Vec::with_capacity(bs.len());
+                for b in bs {
+                    outs.push(observe_seq(b, &h, idx, monitor)?);
+                }
+                h = super::graph::concat_channels_pub(&outs);
+            }
+            other => h = other.forward(&h),
+        }
+    }
+    Ok(h)
+}
+
+fn push_profile(
+    w_terms: usize,
+    policy: &LayerPolicy,
+    fp_fallback: bool,
+    idx: &mut usize,
+    monitor: &ExpansionMonitor,
+    out: &mut Vec<LayerGridProfile>,
+) {
+    let max_diff = monitor.layer_series(*idx).map(|s| s.max_diff.clone()).unwrap_or_default();
+    out.push(LayerGridProfile {
+        w_terms: w_terms.max(1),
+        a_terms: policy.a_terms.max(1),
+        exempt: fp_fallback || policy.is_exempt(),
+        max_diff,
+    });
+    *idx += 1;
+}
+
+fn profile_seq(
+    layers: &[QuantLayer],
+    idx: &mut usize,
+    monitor: &ExpansionMonitor,
+    out: &mut Vec<LayerGridProfile>,
+) {
+    for l in layers {
+        match l {
+            QuantLayer::Conv(c) => {
+                push_profile(c.weight.terms(), &c.policy, c.uses_fp_fallback(), idx, monitor, out)
+            }
+            QuantLayer::Linear(lin) => {
+                push_profile(lin.weight.terms(), &lin.policy, false, idx, monitor, out)
+            }
+            QuantLayer::Residual(m, s) => {
+                profile_seq(m, idx, monitor, out);
+                profile_seq(s, idx, monitor, out);
+            }
+            QuantLayer::Branches(bs) => {
+                for b in bs {
+                    profile_seq(b, idx, monitor, out);
+                }
+            }
+            _ => {}
+        }
     }
 }
 
@@ -155,7 +305,10 @@ pub fn quantize_model(model: &Model, policy: LayerPolicy) -> QuantModel {
     let total = count_quantizable(&fp.layers);
     let mut idx = 0usize;
     let layers = quantize_seq(&fp.layers, policy, &mut idx, total);
-    QuantModel { name: format!("{}-W{}A{}", model.name, policy.w_bits.bits, policy.a_bits.bits), layers }
+    QuantModel {
+        name: format!("{}-W{}A{}", model.name, policy.w_bits.bits, policy.a_bits.bits),
+        layers,
+    }
 }
 
 fn quantize_seq(
@@ -258,6 +411,8 @@ mod tests {
     use super::*;
     use crate::models::zoo;
     use crate::tensor::{Rng, Tensor};
+    use crate::xint::budget::TermBudget;
+    use crate::xint::planner::BudgetPlanner;
 
     fn probe() -> Tensor {
         let mut rng = Rng::seed(100);
@@ -313,7 +468,9 @@ mod tests {
 
     #[test]
     fn quant_works_on_branchy_and_grouped_models() {
-        for mut m in [zoo::inception_style(10, 14), zoo::regnet_style(10, 15), zoo::mobilenet_style(10, 16)] {
+        for mut m in
+            [zoo::inception_style(10, 14), zoo::regnet_style(10, 15), zoo::mobilenet_style(10, 16)]
+        {
             let _ = m.forward_train(&probe());
             let q = quantize_model(&m, LayerPolicy::new(4, 4));
             let y = q.forward(&probe());
@@ -338,16 +495,17 @@ mod tests {
     }
 
     #[test]
-    fn model_full_budget_bit_identical_and_low_budget_fewer_gemms() {
+    fn model_full_plan_bit_identical_and_low_plan_fewer_gemms() {
         let mut m = zoo::mini_resnet_a(10, 19);
         let _ = m.forward_train(&probe());
         let q = quantize_model(&m, LayerPolicy::new(4, 4));
         let x = probe();
         let legacy = q.forward(&x);
-        let (full, full_stats) = q.forward_with(&x, &TermBudget::full());
-        assert_eq!(legacy.data(), full.data(), "full budget must be bit-identical");
+        let (full, full_stats) = q.forward_with(&x, &BudgetPlan::full());
+        assert_eq!(legacy.data(), full.data(), "full plan must be bit-identical");
         assert!(full_stats.layers > 0 && full_stats.grid_terms > full_stats.layers);
-        let (cheap, cheap_stats) = q.forward_with(&x, &TermBudget::new(1, 1));
+        let cheap_plan = BudgetPlan::uniform(TermBudget::new(1, 1));
+        let (cheap, cheap_stats) = q.forward_with(&x, &cheap_plan);
         assert_eq!(cheap.dims(), legacy.dims());
         assert!(cheap.data().iter().all(|v| v.is_finite()));
         assert!(
@@ -356,7 +514,7 @@ mod tests {
         );
         assert_eq!(cheap_stats.layers, full_stats.layers);
         // 8-bit first/last layers are exempt (1 GEMM each, un-truncatable)
-        // so even the minimal budget keeps ≥ 1 GEMM per layer
+        // so even the minimal plan keeps ≥ 1 GEMM per layer
         assert!(cheap_stats.grid_terms >= cheap_stats.layers);
     }
 
@@ -367,14 +525,88 @@ mod tests {
         let q = quantize_model(&m, LayerPolicy::new(4, 4));
         let x = probe();
         let full = q.forward(&x);
-        let err = |b: &TermBudget| {
-            let (y, _) = q.forward_with(&x, b);
+        let err = |b: TermBudget| {
+            let (y, _) = q.forward_with(&x, &BudgetPlan::uniform(b));
             full.sub(&y).norm() / full.norm().max(1e-9)
         };
-        let e11 = err(&TermBudget::new(1, 1));
-        let e24 = err(&TermBudget::new(2, 4));
+        let e11 = err(TermBudget::new(1, 1));
+        let e24 = err(TermBudget::new(2, 4));
         assert!(e24 <= 1e-6, "covering budget must reproduce the full forward: {e24}");
         assert!(e11 >= e24, "{e11} < {e24}");
+    }
+
+    #[test]
+    fn per_layer_plan_entries_reach_their_layers() {
+        // a plan that exempts everything except one interior layer must
+        // cut exactly that layer's grid spend
+        let mut m = zoo::mini_resnet_a(10, 21);
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(4, 4));
+        let x = probe();
+        let (_, full_stats) = q.forward_with(&x, &BudgetPlan::full());
+        let n_layers = full_stats.layers;
+        assert!(n_layers >= 3, "need an interior layer to truncate");
+        // positions 0 and n-1 are the 8-bit exempt layers; squeeze 1
+        let mut layers = vec![TermBudget::full(); n_layers];
+        layers[1] = TermBudget::new(1, 1);
+        let plan = BudgetPlan::per_layer(layers, TermBudget::full());
+        let (y, stats) = q.forward_with(&x, &plan);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        assert!(
+            stats.grid_terms < full_stats.grid_terms,
+            "the squeezed layer must spend less: {stats:?} vs {full_stats:?}"
+        );
+        // squeezing the exempt first layer instead changes nothing
+        let mut layers = vec![TermBudget::full(); n_layers];
+        layers[0] = TermBudget::new(1, 1);
+        let (y0, stats0) = q.forward_with(&x, &BudgetPlan::per_layer(layers, TermBudget::full()));
+        let (yf, _) = q.forward_with(&x, &BudgetPlan::full());
+        assert_eq!(y0.data(), yf.data(), "§5.1 layers ignore plan entries");
+        assert_eq!(stats0.grid_terms, full_stats.grid_terms);
+    }
+
+    #[test]
+    fn observe_layers_profiles_match_plan_indexing() {
+        let mut m = zoo::mini_resnet_a(10, 22);
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(4, 4));
+        let mut mon = ExpansionMonitor::new();
+        q.observe_layers(&probe(), &mut mon).unwrap();
+        // a second calibration batch under the same configs is fine
+        q.observe_layers(&probe(), &mut mon).unwrap();
+        let (_, full_stats) = q.forward_with(&probe(), &BudgetPlan::full());
+        let profiles = q.grid_profiles(&mon);
+        assert_eq!(profiles.len(), full_stats.layers);
+        // §5.1: first and last are exempt, interiors are not — and the
+        // exempt layers were skipped during observation (positions
+        // still advance, so plan indexing is unaffected)
+        assert!(profiles[0].exempt && profiles[profiles.len() - 1].exempt);
+        assert!(profiles[1..profiles.len() - 1].iter().any(|p| !p.exempt));
+        let plannable = profiles.iter().filter(|p| !p.exempt).count();
+        assert_eq!(mon.layer_count(), plannable, "one series per plannable layer");
+        for (i, p) in profiles.iter().enumerate() {
+            assert!(p.w_terms >= 1 && p.a_terms >= 1);
+            if p.exempt {
+                assert!(p.max_diff.is_empty(), "exempt layers are not observed");
+                continue;
+            }
+            assert_eq!(p.max_diff.len(), p.a_terms, "curve covers the activation axis");
+            // Theorem 1: each layer's own curve is non-increasing
+            assert!(p.max_diff.windows(2).all(|w| w[1] <= w[0]));
+            // traversal-lockstep guard: the series at position i was
+            // observed under THIS layer's act config — an order swap
+            // between walks would pair a 4-bit curve with an 8-bit
+            // policy (or vice versa) and fail here
+            let cfg = mon.layer_series(i).unwrap().config().copied().unwrap();
+            assert_eq!(cfg.terms, p.a_terms, "position {i} observed under its own config");
+        }
+        // the planner consumes the profiles end to end
+        let ceiling = BudgetPlanner::uniform_cost(&profiles, 2);
+        let plan = BudgetPlanner::new(ceiling).plan(&profiles);
+        assert_eq!(plan.layer_count(), profiles.len());
+        let (y, stats) = q.forward_with(&probe(), &plan);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        assert!(stats.grid_terms > 0);
     }
 
     #[test]

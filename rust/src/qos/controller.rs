@@ -12,10 +12,20 @@
 //! term from every non-Exact tier, bounded below by the tier's floor.
 //! When the queues drain, pressure falls and full precision is
 //! restored — precision degrades, availability does not.
+//!
+//! With per-layer calibration attached
+//! ([`TermController::calibrate_layers`]), each tier maps to a
+//! sensitivity-planned [`BudgetPlan`] instead of one scalar layer
+//! budget: the tier's **total** grid-term ceiling (the uniform
+//! allocation's cost at the tier's calibrated cap) is spread across
+//! layers by marginal max-diff gain, pressure shrinks the *ceiling*
+//! (one uniform activation-term-equivalent per step) and replans, and
+//! Exact is immune by construction ([`BudgetPlan::full`] always).
 
 use super::tier::{Tier, NUM_TIERS};
-use crate::xint::budget::TermBudget;
+use crate::xint::budget::{BudgetPlan, TermBudget};
 use crate::xint::monitor::ExpansionMonitor;
+use crate::xint::planner::{BudgetPlanner, LayerGridProfile};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -33,7 +43,10 @@ pub struct QosConfig {
     /// 0.0 disables the latency signal
     pub service_target_s: f64,
     /// enable anytime reduction: stop the prefix sum early when the
-    /// marginal term's contribution falls below the batch tolerance
+    /// marginal term's contribution falls below the batch tolerance,
+    /// and carry each tier's §5.3 scale floor
+    /// ([`Tier::grid_scale_floor`]) into planned layer budgets so the
+    /// sorted (i, j) grid stops early too
     pub anytime: bool,
 }
 
@@ -59,22 +72,53 @@ impl QosConfig {
     }
 }
 
+/// Per-layer calibration state behind [`TermController::plan_for`].
+#[derive(Clone, Debug)]
+struct PlanCalibration {
+    /// per-tier profiles with the tier's weight-axis cap already
+    /// applied (mirroring the scalar path, which truncates the `i`
+    /// axis at the tier cap); empty for tiers that plan a full budget
+    capped: [Vec<LayerGridProfile>; NUM_TIERS],
+    /// zero-pressure grid ceiling per tier (`usize::MAX` = untruncated,
+    /// i.e. the tier plans a full budget)
+    base_ceiling: [usize; NUM_TIERS],
+    /// ceiling floor per tier: every non-exempt layer at the tier's
+    /// layer floor — pressure never cuts below this
+    floor_ceiling: [usize; NUM_TIERS],
+    /// grid terms one pressure step removes at each tier: one
+    /// activation term off every plannable layer at the tier's
+    /// weight-axis cap (the uniform-equivalent of the scalar path's
+    /// one-term step)
+    pressure_step: [usize; NUM_TIERS],
+    /// memoized plans keyed by (tier idx, effective ceiling): the
+    /// greedy allocation is deterministic and pressure takes at most
+    /// `total_terms` discrete values, so this stays tiny and the
+    /// per-batch hot path is a hash lookup, not a replan
+    plan_cache: std::collections::HashMap<(usize, usize), BudgetPlan>,
+}
+
 /// Point-in-time view of the controller (observability/reporting).
 #[derive(Clone, Debug)]
 pub struct QosSnapshot {
     pub pressure: usize,
     /// effective budget per tier, indexed by [`Tier::idx`]
     pub budgets: [usize; NUM_TIERS],
-    /// effective layer-granularity budget per tier (replication mode)
+    /// effective layer-granularity budget per tier (replication mode,
+    /// uniform fallback path)
     pub layer_budgets: [TermBudget; NUM_TIERS],
+    /// per-tier planned grid ceiling (`None` before per-layer
+    /// calibration and for untruncated tiers)
+    pub plan_ceilings: [Option<usize>; NUM_TIERS],
     pub degrade_events: u64,
     pub restore_events: u64,
 }
 
 /// Adaptive-precision control plane shared by batcher and scheduler.
 ///
-/// All state is atomic: `budget_for` runs on the scheduler hot path
-/// while pressure observations arrive from batch formation.
+/// All scalar state is atomic: `budget_for` runs on the scheduler hot
+/// path while pressure observations arrive from batch formation. The
+/// per-layer plan calibration sits behind a mutex (`plan_for` takes it
+/// once per formed batch, not per request).
 #[derive(Debug)]
 pub struct TermController {
     cfg: QosConfig,
@@ -90,6 +134,9 @@ pub struct TermController {
     /// observed max-residual per term count (monitor copy), for
     /// estimated-precision-loss reporting; empty before calibration
     convergence: Mutex<Vec<f32>>,
+    /// per-layer sensitivity calibration; `None` until
+    /// [`TermController::calibrate_layers`] runs
+    plan_cal: Mutex<Option<PlanCalibration>>,
     /// EWMA of batch service time (seconds, stored as f64 bits)
     service_ewma: AtomicU64,
 }
@@ -111,6 +158,7 @@ impl TermController {
             degrade_events: AtomicU64::new(0),
             restore_events: AtomicU64::new(0),
             convergence: Mutex::new(Vec::new()),
+            plan_cal: Mutex::new(None),
             service_ewma: AtomicU64::new(0f64.to_bits()),
         }
     }
@@ -139,7 +187,62 @@ impl TermController {
             self.layer_base[tier.idx()].store(layer.max(1), Ordering::Relaxed);
         }
         let mut conv = self.convergence.lock().unwrap();
-        *conv = monitor.max_diff.clone();
+        *conv = monitor.max_diff().to_vec();
+    }
+
+    /// Attach per-layer sensitivity calibration: each tier's plan
+    /// ceiling is the *scalar* path's exact grid cost at the tier's
+    /// calibrated cap — both axes clamped per layer, exactly what
+    /// [`TermController::layer_budget_for`] would spend — so a planned
+    /// allocation redistributes the same total, never more. The planner
+    /// then spreads that total across layers by marginal max-diff gain.
+    /// Call after [`TermController::calibrate`] so the per-tier caps
+    /// reflect the monitor; calling it first uses the tier defaults.
+    pub fn calibrate_layers(&self, profiles: Vec<LayerGridProfile>) {
+        let mut base_ceiling = [usize::MAX; NUM_TIERS];
+        let mut floor_ceiling = [0usize; NUM_TIERS];
+        let mut pressure_step = [1usize; NUM_TIERS];
+        let mut capped: [Vec<LayerGridProfile>; NUM_TIERS] = std::array::from_fn(|_| Vec::new());
+        for tier in Tier::ALL {
+            let cap = self.layer_base[tier.idx()].load(Ordering::Relaxed);
+            if tier == Tier::Exact || cap == usize::MAX {
+                continue;
+            }
+            let i = tier.idx();
+            // mirror the scalar path's weight-axis cap so a planned
+            // budget never spends GEMMs on weight terms the uniform
+            // budget would have truncated
+            capped[i] = profiles
+                .iter()
+                .map(|p| {
+                    let mut p = p.clone();
+                    if !p.exempt {
+                        p.w_terms = p.w_terms.min(cap).max(1);
+                    }
+                    p
+                })
+                .collect();
+            base_ceiling[i] = BudgetPlanner::grid_cost(&profiles, cap, cap);
+            let floor = tier.layer_floor_terms();
+            floor_ceiling[i] = if floor == usize::MAX {
+                base_ceiling[i]
+            } else {
+                // pressure degrades only the activation axis (scalar
+                // path semantics): the floor keeps the tier's w cap
+                BudgetPlanner::grid_cost(&profiles, cap, floor)
+            };
+            // one activation term off every plannable layer at this
+            // tier's weight cap
+            pressure_step[i] = BudgetPlanner::grid_cost(&profiles, cap, 1).max(1);
+        }
+        let mut cal = self.plan_cal.lock().unwrap();
+        *cal = Some(PlanCalibration {
+            capped,
+            base_ceiling,
+            floor_ceiling,
+            pressure_step,
+            plan_cache: std::collections::HashMap::new(),
+        });
     }
 
     /// Effective term budget for `tier` right now: base minus pressure,
@@ -153,7 +256,8 @@ impl TermController {
     }
 
     /// Effective *layer-granularity* [`TermBudget`] for `tier` right
-    /// now — the replication-mode twin of [`TermController::budget_for`].
+    /// now — the replication-mode twin of [`TermController::budget_for`]
+    /// and the uniform fallback under [`TermController::plan_for`].
     /// The weight axis keeps the calibrated cap (weight planes are
     /// pre-expanded; truncating them saves GEMMs, not expansion work);
     /// the activation axis additionally degrades with pressure, bounded
@@ -166,6 +270,65 @@ impl TermController {
         let floor = tier.layer_floor_terms().min(base).max(1);
         let p = self.pressure.load(Ordering::Relaxed);
         TermBudget::new(base, base.saturating_sub(p).max(floor))
+    }
+
+    /// The [`BudgetPlan`] `tier` is served under right now — the unit
+    /// the scheduler hands to budget-aware workers.
+    ///
+    /// * Exact: always [`BudgetPlan::full`] (immune to calibration and
+    ///   pressure alike).
+    /// * With per-layer calibration: the tier's base grid ceiling,
+    ///   shrunk by one uniform activation-term-equivalent per pressure
+    ///   step (never below the tier's floor ceiling), allocated across
+    ///   layers by the greedy sensitivity planner — pressure
+    ///   degradation shrinks the *total*, the planner decides *where*.
+    ///   Plans are memoized per (tier, effective ceiling), so the
+    ///   per-batch cost is a hash lookup once each pressure level has
+    ///   been seen.
+    /// * Without per-layer calibration: the uniform plan over
+    ///   [`TermController::layer_budget_for`] (PR 3 behavior).
+    pub fn plan_for(&self, tier: Tier) -> BudgetPlan {
+        if tier == Tier::Exact {
+            return BudgetPlan::full();
+        }
+        let mut cal = self.plan_cal.lock().unwrap();
+        let Some(c) = cal.as_mut() else {
+            // uniform fallback keeps the §5.3 in-grid stop: without it,
+            // anytime mode would never arm the scale floor unless
+            // per-layer calibration also ran
+            let mut budget = self.layer_budget_for(tier);
+            let floor = self.grid_scale_floor(tier);
+            if floor > 0.0 && budget != TermBudget::full() {
+                budget = budget.with_scale_floor(floor);
+            }
+            return BudgetPlan::uniform(budget);
+        };
+        let i = tier.idx();
+        let base = c.base_ceiling[i];
+        if base == usize::MAX {
+            return BudgetPlan::full();
+        }
+        let p = self.pressure.load(Ordering::Relaxed);
+        let floor = c.floor_ceiling[i].min(base);
+        let total = base.saturating_sub(p.saturating_mul(c.pressure_step[i])).max(floor);
+        if let Some(plan) = c.plan_cache.get(&(i, total)) {
+            return plan.clone();
+        }
+        let plan = BudgetPlanner::new(total)
+            .with_scale_floor(self.grid_scale_floor(tier))
+            .plan(&c.capped[i]);
+        c.plan_cache.insert((i, total), plan.clone());
+        plan
+    }
+
+    /// §5.3 scale-product stop threshold carried into planned budgets
+    /// when anytime mode is on (0.0 = disabled / Exact).
+    fn grid_scale_floor(&self, tier: Tier) -> f32 {
+        if self.cfg.anytime {
+            tier.grid_scale_floor()
+        } else {
+            0.0
+        }
     }
 
     /// Feed one formed batch's signals and take at most ONE pressure
@@ -263,6 +426,7 @@ impl TermController {
             pressure: self.pressure(),
             budgets: std::array::from_fn(|i| self.budget_for(Tier::ALL[i])),
             layer_budgets: std::array::from_fn(|i| self.layer_budget_for(Tier::ALL[i])),
+            plan_ceilings: std::array::from_fn(|i| self.plan_for(Tier::ALL[i]).total_grid_terms()),
             degrade_events: self.degrade_events.load(Ordering::Relaxed),
             restore_events: self.restore_events.load(Ordering::Relaxed),
         }
@@ -289,7 +453,7 @@ mod tests {
         let mut rng = Rng::seed(71);
         let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
         for _ in 0..3 {
-            mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg);
+            mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg).unwrap();
         }
         let c = TermController::new(QosConfig::new(8));
         c.calibrate(&mon);
@@ -337,7 +501,7 @@ mod tests {
         let mut rng = Rng::seed(72);
         let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
         for _ in 0..3 {
-            mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg);
+            mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg).unwrap();
         }
         let c = TermController::new(QosConfig::new(8));
         c.calibrate(&mon);
@@ -355,6 +519,140 @@ mod tests {
                 assert!(loss < tol, "{t}: loss {loss} at cap {cap} vs tol {tol}");
             }
         }
+    }
+
+    fn test_profiles() -> Vec<LayerGridProfile> {
+        // first/last exempt, three interior layers with geometric
+        // curves of very different magnitudes (INT4-ish ratio 16)
+        let curve = |first: f32| -> Vec<f32> {
+            (0..4).map(|t| first / 16f32.powi(t as i32)).collect()
+        };
+        let interior = |first: f32| LayerGridProfile {
+            w_terms: 2,
+            a_terms: 4,
+            exempt: false,
+            max_diff: curve(first),
+        };
+        vec![
+            LayerGridProfile { w_terms: 1, a_terms: 1, exempt: true, max_diff: vec![0.01] },
+            interior(4.0),
+            interior(0.25),
+            interior(0.02),
+            LayerGridProfile { w_terms: 1, a_terms: 1, exempt: true, max_diff: vec![0.01] },
+        ]
+    }
+
+    #[test]
+    fn plan_for_without_layer_calibration_is_uniform_fallback() {
+        let c = TermController::new(QosConfig::new(8));
+        assert_eq!(c.plan_for(Tier::Exact), BudgetPlan::full());
+        let p = c.plan_for(Tier::BestEffort);
+        assert!(p.is_uniform());
+        assert_eq!(p.budget_for(0), c.layer_budget_for(Tier::BestEffort));
+        let s = c.snapshot();
+        assert_eq!(s.plan_ceilings, [None; NUM_TIERS]);
+    }
+
+    #[test]
+    fn plan_for_allocates_tier_ceiling_by_sensitivity() {
+        let c = TermController::new(QosConfig::new(8));
+        c.calibrate_layers(test_profiles());
+        // Exact stays full regardless of calibration
+        assert_eq!(c.plan_for(Tier::Exact), BudgetPlan::full());
+        let plan = c.plan_for(Tier::Throughput);
+        assert!(!plan.is_uniform());
+        assert_eq!(plan.layer_count(), 5);
+        // §5.1 exempt layers pinned full
+        assert_eq!(plan.budget_for(0), TermBudget::full());
+        assert_eq!(plan.budget_for(4), TermBudget::full());
+        // the ceiling equals the uniform allocation's cost at the
+        // tier's default cap (2 for Throughput) = 3 layers × 2w × 2a
+        assert_eq!(plan.total_grid_terms(), Some(12));
+        // the sensitive layer outranks the robust one
+        assert!(plan.budget_for(1).a_terms >= plan.budget_for(3).a_terms);
+        // ladder: a stricter tier plans at least as large a ceiling
+        let bal = c.plan_for(Tier::Balanced).total_grid_terms().unwrap();
+        let thr = c.plan_for(Tier::Throughput).total_grid_terms().unwrap();
+        let be = c.plan_for(Tier::BestEffort).total_grid_terms().unwrap();
+        assert!(bal >= thr && thr >= be, "{bal} {thr} {be}");
+        // snapshot surfaces the ceilings
+        let s = c.snapshot();
+        assert_eq!(s.plan_ceilings[Tier::Exact.idx()], None);
+        assert_eq!(s.plan_ceilings[Tier::Throughput.idx()], Some(thr));
+    }
+
+    #[test]
+    fn pressure_shrinks_plan_ceiling_and_replans_exact_immune() {
+        let c = TermController::new(QosConfig::new(8));
+        c.calibrate_layers(test_profiles());
+        let cold = c.plan_for(Tier::Balanced).total_grid_terms().unwrap();
+        for _ in 0..3 {
+            c.observe_batch(0.95, 0.0);
+        }
+        let hot = c.plan_for(Tier::Balanced).total_grid_terms().unwrap();
+        assert!(hot < cold, "pressure must shrink the ceiling: {hot} !< {cold}");
+        assert_eq!(c.plan_for(Tier::Exact), BudgetPlan::full(), "exact immune");
+        // the floor holds under arbitrary pressure: every plannable
+        // layer still gets at least the tier's layer floor
+        for _ in 0..100 {
+            c.observe_batch(1.0, 0.0);
+        }
+        let floored = c.plan_for(Tier::Balanced);
+        let floor_ceiling =
+            BudgetPlanner::uniform_cost(&test_profiles(), Tier::Balanced.layer_floor_terms());
+        assert_eq!(floored.total_grid_terms(), Some(floor_ceiling));
+        for i in [1usize, 2, 3] {
+            assert!(floored.budget_for(i).a_terms >= 1);
+        }
+        // drain restores the cold ceiling
+        for _ in 0..200 {
+            c.observe_batch(0.0, 0.0);
+        }
+        assert_eq!(c.plan_for(Tier::Balanced).total_grid_terms(), Some(cold));
+    }
+
+    #[test]
+    fn planned_spend_matches_scalar_path_when_cap_truncates_weights() {
+        // BestEffort's calibrated cap (1) is below the interior weight
+        // axis (k=2): the plan must cap the weight axis exactly like
+        // layer_budget_for does, so enabling per-layer calibration
+        // never spends MORE than the scalar path it replaces
+        let c = TermController::new(QosConfig::new(8));
+        let scalar = c.layer_budget_for(Tier::BestEffort);
+        assert_eq!((scalar.w_terms, scalar.a_terms), (1, 1));
+        c.calibrate_layers(test_profiles());
+        let plan = c.plan_for(Tier::BestEffort);
+        for i in [1usize, 2, 3] {
+            let b = plan.budget_for(i);
+            assert_eq!(
+                (b.w_terms, b.a_terms),
+                (scalar.w_terms, scalar.a_terms),
+                "layer {i}: planned {b} must not outspend scalar {scalar}"
+            );
+        }
+        // total ceiling = the scalar path's exact grid cost (3 × 1×1)
+        assert_eq!(plan.total_grid_terms(), Some(3));
+    }
+
+    #[test]
+    fn anytime_carries_tier_scale_floor_into_plans() {
+        let c = TermController::new(QosConfig::new(8).with_anytime(true));
+        c.calibrate_layers(test_profiles());
+        let plan = c.plan_for(Tier::Throughput);
+        assert_eq!(plan.budget_for(1).scale_floor, Tier::Throughput.grid_scale_floor());
+        assert_eq!(plan.budget_for(0).scale_floor, 0.0, "exempt layers carry no stop");
+        // without anytime the floor stays off
+        let c2 = TermController::new(QosConfig::new(8));
+        c2.calibrate_layers(test_profiles());
+        assert_eq!(c2.plan_for(Tier::Throughput).budget_for(1).scale_floor, 0.0);
+        // the uniform fallback (no per-layer calibration) carries the
+        // floor too — anytime must arm the in-grid stop on every
+        // serving path, and Exact stays full
+        let c3 = TermController::new(QosConfig::new(8).with_anytime(true));
+        let fb = c3.plan_for(Tier::Throughput);
+        assert!(fb.is_uniform());
+        assert_eq!(fb.budget_for(0).scale_floor, Tier::Throughput.grid_scale_floor());
+        assert_eq!(c3.plan_for(Tier::Exact), BudgetPlan::full());
     }
 
     #[test]

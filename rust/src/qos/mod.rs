@@ -20,11 +20,17 @@
 //!   queue occupancy plus the batch service-time EWMA, restoring full
 //!   precision as load drains. Each tier maps to TWO budgets: the
 //!   pool-prefix budget (model granularity — how many basis workers
-//!   reduce) and a layer-granularity
-//!   [`TermBudget`](crate::xint::TermBudget)
-//!   ([`TermController::layer_budget_for`]) that budget-aware
-//!   replication workers use to truncate every layer's Eq. 3 GEMM grid
-//!   largest-scale-first (8-bit first/last layers stay exact).
+//!   reduce) and a per-layer [`BudgetPlan`](crate::xint::BudgetPlan)
+//!   ([`TermController::plan_for`]) that plan-aware replication workers
+//!   index by layer position to truncate each layer's Eq. 3 GEMM grid
+//!   largest-scale-first. With per-layer calibration
+//!   ([`TermController::calibrate_layers`]) the plan allocates the
+//!   tier's total grid ceiling across layers by sensitivity (the
+//!   greedy mixed-precision loop over per-layer §5.3 curves); pressure
+//!   shrinks the ceiling and replans. Without it, the plan degrades to
+//!   the uniform scalar budget
+//!   ([`TermController::layer_budget_for`]). 8-bit first/last layers
+//!   stay exact either way.
 //!
 //! The batcher side ([`coordinator::batcher`](crate::coordinator::batcher))
 //! keeps one bounded queue per tier, served by weighted deficit

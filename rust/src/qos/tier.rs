@@ -108,6 +108,22 @@ impl Tier {
         }
     }
 
+    /// §5.3 *relative* scale-product threshold for the in-grid anytime
+    /// stop: a planned layer budget carries this floor so the sorted
+    /// `(i, j)` execution stops once `s_wi · s_aj` drops below
+    /// `floor ×` the layer's leading product (see
+    /// [`TermBudget::scale_floor`](crate::xint::TermBudget); the
+    /// leading pair always runs). The tier tolerance doubles as the
+    /// relative threshold: a pair whose product is below `tol ×` the
+    /// leading product contributes at most `tol ×` the leading pair's
+    /// magnitude — the same scale-invariant relative rule the
+    /// pool-prefix anytime reduction uses on reduced terms (the paper
+    /// gives no in-grid formula; recorded as a substitution). 0.0 for
+    /// Exact: never stop.
+    pub fn grid_scale_floor(self) -> f32 {
+        self.tolerance().unwrap_or(0.0)
+    }
+
     /// Uncalibrated default budget (used before a monitor calibration).
     pub fn default_budget(self, total: usize) -> usize {
         match self {
@@ -190,6 +206,16 @@ mod tests {
         for t in Tier::ALL {
             assert!(t.layer_floor_terms() >= 1);
             assert!(t.layer_floor_terms() <= t.default_layer_terms());
+        }
+    }
+
+    #[test]
+    fn grid_scale_floor_follows_the_tolerance_ladder() {
+        assert_eq!(Tier::Exact.grid_scale_floor(), 0.0, "exact never stops the grid");
+        let floors: Vec<f32> = Tier::ALL.iter().map(|t| t.grid_scale_floor()).collect();
+        assert!(floors.windows(2).all(|w| w[0] <= w[1]), "{floors:?}");
+        for t in [Tier::Balanced, Tier::Throughput, Tier::BestEffort] {
+            assert_eq!(t.grid_scale_floor(), t.tolerance().unwrap());
         }
     }
 

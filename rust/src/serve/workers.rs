@@ -15,7 +15,7 @@
 use crate::coordinator::pool::{BasisWorker, BudgetedRun, WorkerFactory};
 use crate::models::quantized::QuantModel;
 use crate::tensor::Tensor;
-use crate::xint::budget::TermBudget;
+use crate::xint::budget::BudgetPlan;
 use crate::xint::expansion::{ExpandConfig, SeriesExpansion};
 use crate::xint::quantizer::{channel_range, fake_quant, Clip, Symmetry};
 use crate::xint::BitSpec;
@@ -58,13 +58,13 @@ impl BasisWorker for QuantModelWorker {
         Ok(self.model.forward(&x))
     }
 
-    /// Replication mode is where the layer-granularity budget bites:
-    /// the whole layer-sync model truncates every expanded layer's
-    /// Eq. 3 grid to the request's budget (8-bit first/last layers stay
-    /// exact) and reports the INT GEMMs actually executed.
-    fn run_budgeted(&mut self, x: &Tensor, budget: &TermBudget) -> anyhow::Result<BudgetedRun> {
+    /// Replication mode is where the budget plan bites: the whole
+    /// layer-sync model truncates every expanded layer's Eq. 3 grid to
+    /// the plan entry at its depth-first position (8-bit first/last
+    /// layers stay exact) and reports the INT GEMMs actually executed.
+    fn run_budgeted(&mut self, x: &Tensor, plan: &BudgetPlan) -> anyhow::Result<BudgetedRun> {
         let x = self.shaped(x);
-        let (y, stats) = self.model.forward_with(&x, budget);
+        let (y, stats) = self.model.forward_with(&x, plan);
         Ok(BudgetedRun { y, grid_terms: stats.grid_terms })
     }
 }

@@ -42,10 +42,8 @@ pub fn resolve_policy(
 ) -> LayerPolicy {
     let k = weight_term_bound(w, BitSpec::int(w_bits), cfg.w_threshold, cfg.max_w_terms);
     let mut mon = ExpansionMonitor::new();
-    mon.observe(
-        probe_act,
-        &ExpandConfig::activations(BitSpec::int(a_bits), cfg.max_a_terms),
-    );
+    mon.observe(probe_act, &ExpandConfig::activations(BitSpec::int(a_bits), cfg.max_a_terms))
+        .expect("fresh monitor accepts its first config");
     let t = mon.optimal_terms(cfg.a_tol).unwrap_or(cfg.max_a_terms);
     LayerPolicy::new(w_bits, a_bits).with_terms(k, t)
 }

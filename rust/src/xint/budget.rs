@@ -1,28 +1,47 @@
-//! Runtime term budgets — the paper's tensor/layer-granularity
-//! truncation as a *serve-time* parameter.
+//! Runtime budget hierarchy — the paper's *tensor*-granularity
+//! truncation (§4, Theorem 1 converges per tensor) as a serve-time
+//! parameter, planned per layer.
 //!
-//! The seed stack fixed the Eq. 3 term grid at construction time: a
-//! quantized layer always ran all `k·t` low-bit GEMMs. Because the
-//! expansion is a *series* (geometric scale law, Theorem 1), any subset
-//! of terms taken largest-scale-first is the best available
-//! approximation at that compute cost — the same Abelian prefix
-//! argument the QoS scheduler uses for pool-prefix truncation, applied
-//! one level down inside a single layer's GEMM grid. A [`TermBudget`]
-//! carries per-request caps on the weight/activation term axes (plus an
-//! optional cap on the total `(i, j)` grid) through the whole forward
-//! stack: `xint_linear_forward_budgeted` → `XintLinear::forward_with` →
-//! `QuantModel::forward_with` → `QuantModelWorker::run_budgeted` →
-//! `TermController::layer_budget_for`.
+//! Two levels:
+//!
+//! * [`TermBudget`] — the per-layer **leaf**: caps on one layer's Eq. 3
+//!   grid (weight/activation term axes, an optional total `(i, j)` cap,
+//!   and the §5.3 in-grid stop threshold [`TermBudget::scale_floor`]).
+//!   Because the expansion is a *series* (geometric scale law), any
+//!   subset of grid pairs taken largest-scale-first is the best
+//!   available approximation at that compute cost — the same Abelian
+//!   prefix argument the QoS scheduler uses for pool-prefix truncation,
+//!   applied inside a single layer's GEMM grid.
+//! * [`BudgetPlan`] — the unit that flows through the forward stack: a
+//!   per-layer vector of `TermBudget`s (indexed by quantizable-layer
+//!   position, depth-first) plus the global grid-term ceiling the plan
+//!   was allocated under. Layers converge at different rates, so a
+//!   uniform cap overspends on robust layers and starves sensitive
+//!   ones; the [`BudgetPlanner`](super::planner::BudgetPlanner)
+//!   allocates a tier's total ceiling across layers by marginal
+//!   max-diff gain. [`BudgetPlan::uniform`] reproduces the pre-plan
+//!   behavior (one scalar budget for every layer), and
+//!   [`BudgetPlan::full`] is bit-identical to the unbudgeted forward.
+//!
+//! The plan flows `TermController::plan_for` →
+//! `ExpansionScheduler::process` → `BasisWorker::run_budgeted` →
+//! `QuantModel::forward_with` (which indexes the plan by layer
+//! position) → `LayerPolicy::resolve_budget` →
+//! `xint_linear_forward_budgeted` (which consumes the per-layer leaf).
 
-/// Per-request cap on the series terms a layer forward may spend.
+/// Per-layer cap on the series terms a single layer forward may spend.
 ///
 /// Caps are upper bounds, clamped to what each layer actually has: a
 /// budget of 3 activation terms leaves a 1-term 8-bit layer untouched.
-/// Per-layer *policy resolution* happens in
+/// Every cap has a **floor of 1**: a layer forward always executes at
+/// least one term per axis (a zero-term forward would output garbage,
+/// not a coarser approximation), so the constructors lift zero caps to
+/// 1 — and debug-assert, because a zero cap is a caller bug, not a
+/// request for the floor. Per-layer *policy resolution* happens in
 /// [`LayerPolicy::resolve_budget`](super::layer::LayerPolicy::resolve_budget):
 /// the §5.1 8-bit first/last layers are exempt and stay exact under any
 /// request budget.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TermBudget {
     /// cap on weight expansion terms (the `i` axis of the Eq. 3 grid)
     pub w_terms: usize,
@@ -33,30 +52,72 @@ pub struct TermBudget {
     /// descending `s_wi · s_aj` order so any prefix is the best
     /// available approximation. `None` runs the whole rectangle.
     pub grid_terms: Option<usize>,
+    /// §5.3 in-grid anytime stop: the sorted `(i, j)` execution stops
+    /// once a pair's scale product `s_wi · s_aj` falls below
+    /// `scale_floor ×` the layer's *leading* (largest) product — a
+    /// relative, scale-invariant threshold, the same design as the
+    /// pool-prefix anytime stop (the auto-stop rule applied *inside*
+    /// one layer's grid instead of as a fixed cap). The leading pair
+    /// always executes (the ≥ 1 floor). `0.0` disables the stop; any
+    /// positive floor routes the forward through the sorted path even
+    /// when the axis caps cover the grid.
+    pub scale_floor: f32,
 }
 
 impl TermBudget {
     /// No truncation anywhere: the full `k·t` grid of every layer.
     pub const fn full() -> TermBudget {
-        TermBudget { w_terms: usize::MAX, a_terms: usize::MAX, grid_terms: None }
+        TermBudget {
+            w_terms: usize::MAX,
+            a_terms: usize::MAX,
+            grid_terms: None,
+            scale_floor: 0.0,
+        }
     }
 
     /// Cap the weight/activation term axes (no separate grid cap).
+    /// Zero caps are a caller bug (debug-asserted) and lift to the
+    /// documented ≥ 1 floor in release builds.
     pub fn new(w_terms: usize, a_terms: usize) -> TermBudget {
-        TermBudget { w_terms: w_terms.max(1), a_terms: a_terms.max(1), grid_terms: None }
+        debug_assert!(
+            w_terms >= 1 && a_terms >= 1,
+            "TermBudget caps must be >= 1 (got {w_terms}×{a_terms}); \
+             a zero-term forward is not a coarser approximation"
+        );
+        TermBudget {
+            w_terms: w_terms.max(1),
+            a_terms: a_terms.max(1),
+            grid_terms: None,
+            scale_floor: 0.0,
+        }
     }
 
-    /// Additionally cap the total `(i, j)` GEMM count.
+    /// Additionally cap the total `(i, j)` GEMM count (≥ 1 floor, as
+    /// [`TermBudget::new`]).
     pub fn with_grid_terms(mut self, grid_terms: usize) -> TermBudget {
+        debug_assert!(grid_terms >= 1, "grid cap must be >= 1 (got {grid_terms})");
         self.grid_terms = Some(grid_terms.max(1));
+        self
+    }
+
+    /// Set the §5.3 in-grid stop threshold on the scale product.
+    pub fn with_scale_floor(mut self, scale_floor: f32) -> TermBudget {
+        debug_assert!(
+            scale_floor >= 0.0 && scale_floor.is_finite(),
+            "scale floor must be finite and >= 0 (got {scale_floor})"
+        );
+        self.scale_floor = scale_floor;
         self
     }
 
     /// True iff this budget leaves a `k × t` grid untruncated — the
     /// forward then takes the legacy natural-order loop, so a full
-    /// budget is bit-identical to the unbudgeted forward.
+    /// budget is bit-identical to the unbudgeted forward. A positive
+    /// [`scale_floor`](TermBudget::scale_floor) never covers: the §5.3
+    /// stop needs the sorted largest-first order to be a prefix rule.
     pub fn covers(&self, k: usize, t: usize) -> bool {
-        self.w_terms >= k
+        self.scale_floor == 0.0
+            && self.w_terms >= k
             && self.a_terms >= t
             && match self.grid_terms {
                 None => true,
@@ -77,14 +138,112 @@ impl Default for TermBudget {
 }
 
 impl std::fmt::Display for TermBudget {
-    /// `full`, `2×4`, or `2×4/3` (axis caps plus a grid cap).
+    /// `full`, `2×4`, `2×4/3` (axis caps plus a grid cap), with a
+    /// `@1e-2`-style suffix when a §5.3 scale floor is set.
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         if *self == TermBudget::full() {
             return f.write_str("full");
         }
         match (self.w_terms, self.a_terms, self.grid_terms) {
-            (w, a, None) => write!(f, "{w}×{a}"),
-            (w, a, Some(g)) => write!(f, "{w}×{a}/{g}"),
+            (w, a, None) => write!(f, "{w}×{a}")?,
+            (w, a, Some(g)) => write!(f, "{w}×{a}/{g}")?,
+        }
+        if self.scale_floor > 0.0 {
+            write!(f, "@{:.0e}", self.scale_floor)?;
+        }
+        Ok(())
+    }
+}
+
+/// The unit that flows through the forward stack: one [`TermBudget`]
+/// per quantizable layer (depth-first position, matching
+/// `quantize_model`'s traversal) plus the global grid-term ceiling the
+/// allocation was made under.
+///
+/// Positions beyond the per-layer vector fall back to the uniform
+/// budget — so [`BudgetPlan::uniform`] (empty vector) reproduces the
+/// pre-plan behavior of one scalar budget for every layer, and a plan
+/// built for one model applied to a deeper one degrades safely to its
+/// fallback instead of panicking.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetPlan {
+    /// per-layer budgets by quantizable-layer position
+    layers: Vec<TermBudget>,
+    /// budget for positions without a per-layer entry
+    fallback: TermBudget,
+    /// total `(i, j)` grid terms the planner allocated across the
+    /// non-exempt layers (`None` for uniform/full plans, which carry
+    /// no ceiling)
+    total_grid_terms: Option<usize>,
+}
+
+impl BudgetPlan {
+    /// Every layer untruncated — bit-identical to the unbudgeted
+    /// forward (the Exact tier's plan).
+    pub fn full() -> BudgetPlan {
+        BudgetPlan::uniform(TermBudget::full())
+    }
+
+    /// One scalar budget for every layer — PR 3's behavior as a plan.
+    pub fn uniform(budget: TermBudget) -> BudgetPlan {
+        BudgetPlan { layers: Vec::new(), fallback: budget, total_grid_terms: None }
+    }
+
+    /// A sensitivity-allocated plan: `layers[i]` caps quantizable layer
+    /// `i`; positions past the vector take `fallback`.
+    pub fn per_layer(layers: Vec<TermBudget>, fallback: TermBudget) -> BudgetPlan {
+        BudgetPlan { layers, fallback, total_grid_terms: None }
+    }
+
+    /// Record the global grid-term ceiling this plan was allocated
+    /// under (observability + pressure replanning).
+    pub fn with_total_grid_terms(mut self, total: usize) -> BudgetPlan {
+        self.total_grid_terms = Some(total);
+        self
+    }
+
+    /// The budget for quantizable layer `layer` (depth-first position).
+    pub fn budget_for(&self, layer: usize) -> TermBudget {
+        self.layers.get(layer).copied().unwrap_or(self.fallback)
+    }
+
+    /// Number of per-layer entries (0 for uniform plans).
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when the plan has no per-layer entries (every layer takes
+    /// the fallback budget).
+    pub fn is_uniform(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// True when every layer runs untruncated (the Exact contract).
+    pub fn is_full(&self) -> bool {
+        self.fallback == TermBudget::full() && self.layers.iter().all(|b| *b == TermBudget::full())
+    }
+
+    /// The global grid-term ceiling, when the plan carries one.
+    pub fn total_grid_terms(&self) -> Option<usize> {
+        self.total_grid_terms
+    }
+}
+
+impl Default for BudgetPlan {
+    fn default() -> BudgetPlan {
+        BudgetPlan::full()
+    }
+}
+
+impl std::fmt::Display for BudgetPlan {
+    /// `uniform(full)`, `uniform(2×4)`, or `plan(5 layers, 24 grid)`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_uniform() {
+            return write!(f, "uniform({})", self.fallback);
+        }
+        match self.total_grid_terms {
+            Some(t) => write!(f, "plan({} layers, {t} grid)", self.layers.len()),
+            None => write!(f, "plan({} layers)", self.layers.len()),
         }
     }
 }
@@ -130,9 +289,22 @@ mod tests {
         let b = TermBudget::new(1, 2);
         assert!(!b.covers(2, 4));
         assert_eq!(b.clamp_to(2, 4), (1, 2));
-        // caps never exceed what the layer has, never fall below 1
+        // caps never exceed what the layer has
         assert_eq!(TermBudget::new(9, 9).clamp_to(2, 4), (2, 4));
-        assert_eq!(TermBudget::new(0, 0).clamp_to(2, 4), (1, 1));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "caps must be >= 1")]
+    fn zero_caps_are_a_caller_bug() {
+        let _ = TermBudget::new(0, 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "grid cap must be >= 1")]
+    fn zero_grid_cap_is_a_caller_bug() {
+        let _ = TermBudget::new(1, 1).with_grid_terms(0);
     }
 
     #[test]
@@ -144,10 +316,20 @@ mod tests {
     }
 
     #[test]
+    fn scale_floor_breaks_coverage() {
+        // a positive §5.3 floor must route through the sorted path even
+        // when the axis caps cover the grid
+        let b = TermBudget::new(2, 4).with_scale_floor(1e-3);
+        assert!(!b.covers(2, 4));
+        assert!(TermBudget::new(2, 4).with_scale_floor(0.0).covers(2, 4));
+    }
+
+    #[test]
     fn display_labels() {
         assert_eq!(TermBudget::full().to_string(), "full");
         assert_eq!(TermBudget::new(2, 4).to_string(), "2×4");
         assert_eq!(TermBudget::new(2, 4).with_grid_terms(3).to_string(), "2×4/3");
+        assert_eq!(TermBudget::new(2, 4).with_scale_floor(1e-2).to_string(), "2×4@1e-2");
     }
 
     #[test]
@@ -159,5 +341,46 @@ mod tests {
         total.absorb(s);
         total.absorb(ForwardStats { grid_terms: 2, layers: 1 });
         assert_eq!(total, ForwardStats { grid_terms: 11, layers: 3 });
+    }
+
+    #[test]
+    fn uniform_plan_applies_one_budget_everywhere() {
+        let b = TermBudget::new(2, 3);
+        let plan = BudgetPlan::uniform(b);
+        assert!(plan.is_uniform());
+        assert!(!plan.is_full());
+        assert_eq!(plan.layer_count(), 0);
+        assert_eq!(plan.budget_for(0), b);
+        assert_eq!(plan.budget_for(99), b);
+        assert_eq!(plan.total_grid_terms(), None);
+        assert!(BudgetPlan::full().is_full());
+        assert_eq!(BudgetPlan::default(), BudgetPlan::full());
+    }
+
+    #[test]
+    fn per_layer_plan_indexes_by_position_with_fallback() {
+        let plan = BudgetPlan::per_layer(
+            vec![TermBudget::full(), TermBudget::new(2, 1), TermBudget::new(2, 3)],
+            TermBudget::full(),
+        )
+        .with_total_grid_terms(8);
+        assert!(!plan.is_uniform());
+        assert_eq!(plan.layer_count(), 3);
+        assert_eq!(plan.budget_for(0), TermBudget::full());
+        assert_eq!(plan.budget_for(1), TermBudget::new(2, 1));
+        assert_eq!(plan.budget_for(2), TermBudget::new(2, 3));
+        // past the vector: safe fallback, not a panic
+        assert_eq!(plan.budget_for(3), TermBudget::full());
+        assert_eq!(plan.total_grid_terms(), Some(8));
+        assert!(!plan.is_full(), "a truncating entry breaks fullness");
+    }
+
+    #[test]
+    fn plan_display_labels() {
+        assert_eq!(BudgetPlan::full().to_string(), "uniform(full)");
+        assert_eq!(BudgetPlan::uniform(TermBudget::new(2, 4)).to_string(), "uniform(2×4)");
+        let p = BudgetPlan::per_layer(vec![TermBudget::new(2, 1); 5], TermBudget::full())
+            .with_total_grid_terms(24);
+        assert_eq!(p.to_string(), "plan(5 layers, 24 grid)");
     }
 }

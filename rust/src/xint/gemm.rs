@@ -198,7 +198,10 @@ pub fn xint_linear_forward_pre(
 /// [`xint_linear_forward_pre`] under a [`TermBudget`]. With a full
 /// budget the INT grid runs in the legacy natural order (bit-identical
 /// output); a truncating budget orders the capped grid by scale product
-/// and stops at the grid cap. The rank-1 zero-point terms and the
+/// and stops at the grid cap — or earlier, at the §5.3 in-grid anytime
+/// stop, once a pair's `s_wi · s_aj` falls below
+/// [`TermBudget::scale_floor`] × the leading product (relative rule;
+/// the leading pair always runs). The rank-1 zero-point terms and the
 /// activation-side sparse path follow the same axis caps; the exact
 /// `A_sa`/`W_sa` sparse corrections stay exact (they are O(nnz), not
 /// part of the grid, and keeping them budget-independent means a larger
@@ -251,7 +254,20 @@ pub fn xint_linear_forward_pre_budgeted(
                 .then_with(|| (a.0 + a.1, a.0).cmp(&(b.0 + b.1, b.0)))
         });
         let grid_cap = budget.grid_terms.unwrap_or(usize::MAX);
-        for &(i, j, _) in pairs.iter().filter(|p| p.2 != 0.0).take(grid_cap) {
+        // §5.3 in-grid anytime stop: the sorted order makes the scale
+        // floor a prefix rule — the first pair whose product falls
+        // below the plan-carried *relative* threshold (floor × the
+        // layer's leading product, scale-invariant like the pool-prefix
+        // anytime stop) ends the grid; every later pair's contribution
+        // is geometrically smaller still. The leading pair always
+        // executes: a zero-pair forward would be garbage, not a coarser
+        // approximation (the ≥ 1 floor of the budget contract).
+        let leading = pairs.first().map(|p| p.2).unwrap_or(0.0);
+        let threshold = budget.scale_floor * leading;
+        for &(i, j, p) in pairs.iter().filter(|p| p.2 != 0.0).take(grid_cap) {
+            if executed > 0 && p < threshold {
+                break;
+            }
             int_gemm_scaled_into(
                 &a_exp.planes[j],
                 &w.exp.planes[i],
@@ -583,6 +599,54 @@ mod tests {
         // the full sorted grid must match the natural-order error scale
         // and the 1-GEMM prefix must be much worse than the full grid
         assert!(errs[k * t - 1] < errs[0] / 4.0, "no improvement: {errs:?}");
+    }
+
+    /// The §5.3 in-grid stop is exactly a prefix rule: a scale floor
+    /// executes the same sorted prefix as the equivalent grid cap, bit
+    /// for bit, and a floor above every product still runs one pair of
+    /// nothing — the loop just ends at the first sub-floor product.
+    #[test]
+    fn scale_floor_stops_grid_at_the_sorted_prefix() {
+        let mut rng = Rng::seed(41);
+        let x = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let w_raw = Tensor::randn(&[8, 32], 0.3, &mut rng);
+        let (k, t) = (2usize, 4usize);
+        let w = ExpandedWeight::new(&w_raw, &ExpandConfig::weights(BitSpec::int(4), k));
+        let acfg = ExpandConfig::activations(BitSpec::int(4), t);
+        // recompute the sorted products the budgeted forward uses
+        let a_exp = SeriesExpansion::expand(&x, &acfg);
+        let mut products: Vec<f32> = Vec::new();
+        for i in 0..k {
+            let s_wi = w.exp.scales[i].iter().fold(0.0f32, |m, &v| m.max(v));
+            for j in 0..t {
+                products.push(s_wi * a_exp.scales[j][0]);
+            }
+        }
+        products.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        products.retain(|&p| p != 0.0);
+        // pick a *relative* floor strictly between two adjacent
+        // products (the stop threshold is floor × the leading product)
+        let mid = (products[2] + products[3]) / 2.0;
+        let floor = mid / products[0];
+        let expect = products.iter().filter(|&&p| p >= floor * products[0]).count();
+        assert!(expect >= 1 && expect < products.len());
+        let budget = TermBudget::new(k, t).with_scale_floor(floor);
+        let (y_floor, e_floor) = xint_linear_forward_budgeted(&x, &w, &acfg, &budget);
+        assert_eq!(e_floor, expect, "floor {floor} should keep {expect} pairs");
+        // same prefix via an explicit grid cap → bit-identical output
+        let capped = TermBudget::new(k, t).with_grid_terms(expect);
+        let (y_cap, e_cap) = xint_linear_forward_budgeted(&x, &w, &acfg, &capped);
+        assert_eq!(e_cap, expect);
+        assert_eq!(y_floor.data(), y_cap.data());
+        // the leading pair always executes, even under an impossible
+        // floor — a zero-pair forward would violate the ≥ 1 contract
+        let impossible = TermBudget::new(k, t).with_scale_floor(2.0);
+        let (_, e_one) = xint_linear_forward_budgeted(&x, &w, &acfg, &impossible);
+        assert_eq!(e_one, 1, "the leading pair is unconditional");
+        // a zero floor with covering axis caps stays on the legacy path
+        let (y_full, _) = xint_linear_forward_budgeted(&x, &w, &acfg, &TermBudget::full());
+        let legacy = xint_linear_forward(&x, &w, &acfg);
+        assert_eq!(y_full.data(), legacy.data());
     }
 
     #[test]

@@ -80,13 +80,21 @@ impl LayerPolicy {
         }
     }
 
-    /// Resolve a request-level [`TermBudget`] against this layer's
-    /// policy: the §5.1 8-bit first/last layers are pinned exact — a
-    /// request budget never truncates them — while every other layer
-    /// takes the budget as-is (its caps clamp to the layer's own term
-    /// counts downstream).
+    /// §5.1 exemption: 8-bit (first/last) layers are pinned exact — no
+    /// request budget or plan entry may truncate them, and the
+    /// [`BudgetPlanner`](super::planner::BudgetPlanner) does not charge
+    /// them against the grid ceiling.
+    pub fn is_exempt(&self) -> bool {
+        self.w_bits.bits >= 8 && self.a_bits.bits >= 8
+    }
+
+    /// Resolve this layer's [`TermBudget`] — the per-layer entry of a
+    /// [`BudgetPlan`](super::budget::BudgetPlan), or a request-level
+    /// scalar — against the policy: §5.1-exempt layers stay exact under
+    /// any budget, every other layer takes the entry as-is (its caps
+    /// clamp to the layer's own term counts downstream).
     pub fn resolve_budget(&self, budget: &TermBudget) -> TermBudget {
-        if self.w_bits.bits >= 8 && self.a_bits.bits >= 8 {
+        if self.is_exempt() {
             TermBudget::full()
         } else {
             *budget
@@ -171,7 +179,12 @@ pub struct XintConv2d {
 }
 
 impl XintConv2d {
-    pub fn from_fp(w: &Tensor, bias: Option<&Tensor>, spec: Conv2dSpec, policy: LayerPolicy) -> Self {
+    pub fn from_fp(
+        w: &Tensor,
+        bias: Option<&Tensor>,
+        spec: Conv2dSpec,
+        policy: LayerPolicy,
+    ) -> Self {
         assert_eq!(w.dims()[0], spec.out_ch);
         let kelem = (spec.in_ch / spec.groups) * spec.kh * spec.kw;
         let flat = w.reshape(&[spec.out_ch, kelem]);
@@ -253,6 +266,13 @@ impl XintConv2d {
 
     pub fn storage_bytes(&self) -> usize {
         self.weight.exp.storage_bytes() + self.bias.as_ref().map_or(0, |b| b.numel() * 4)
+    }
+
+    /// True for grouped convs, which run the FP-fallback path: they
+    /// have no INT grid to truncate, so the budget planner treats them
+    /// as exempt (allocating grid terms to them would waste ceiling).
+    pub fn uses_fp_fallback(&self) -> bool {
+        self.fp_weight.is_some()
     }
 }
 

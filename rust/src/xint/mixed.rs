@@ -53,6 +53,58 @@ pub fn model_size_bytes(params: usize, bits: u32) -> usize {
     (params * bits as usize).div_ceil(8)
 }
 
+/// The greedy sensitivity-ordered upgrade loop shared by the
+/// mixed-precision planner and the serve-time
+/// [`BudgetPlanner`](super::planner::BudgetPlanner): starting with every
+/// candidate at level 0, repeatedly upgrade the candidate with the best
+/// error-reduction per unit step cost, stopping when the first upgrade
+/// would push `total_cost` past `budget` or no upgrade has positive
+/// gain. Returns the chosen level per candidate.
+///
+/// The upgrade *order* depends only on the gain/cost ratios, never on
+/// `budget` — so allocations at growing budgets are nested prefixes of
+/// one upgrade sequence, which is what makes planned budgets monotone
+/// (the Theorem 1 prefix argument at allocation granularity).
+///
+/// * `max_level(i)` — number of levels candidate `i` has (choices are
+///   `0..max_level(i)`).
+/// * `gain(i, level)` — error reduction of moving `i` from `level` to
+///   `level + 1`.
+/// * `step_cost(i, level)` — cost units that move adds (floored at 1
+///   for the ratio).
+/// * `total_cost(levels)` — full-assignment cost checked against
+///   `budget` after each tentative upgrade (lets callers keep non-linear
+///   cost models, e.g. byte rounding).
+pub fn greedy_allocate(
+    n: usize,
+    max_level: impl Fn(usize) -> usize,
+    gain: impl Fn(usize, usize) -> f64,
+    step_cost: impl Fn(usize, usize) -> usize,
+    total_cost: impl Fn(&[usize]) -> usize,
+    budget: usize,
+) -> Vec<usize> {
+    let mut choice: Vec<usize> = vec![0; n];
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..n {
+            if choice[i] + 1 >= max_level(i) {
+                continue;
+            }
+            let ratio = gain(i, choice[i]) / step_cost(i, choice[i]).max(1) as f64;
+            if ratio > 0.0 && best.map(|(_, r)| ratio > r).unwrap_or(true) {
+                best = Some((i, ratio));
+            }
+        }
+        let Some((i, _)) = best else { break };
+        choice[i] += 1;
+        if total_cost(&choice) > budget {
+            choice[i] -= 1;
+            break;
+        }
+    }
+    choice
+}
+
 /// Greedy sensitivity-ordered mixed-precision planner.
 pub struct MixedPlanner {
     pub w_bits: u32,
@@ -65,44 +117,27 @@ pub struct MixedPlanner {
 
 impl MixedPlanner {
     pub fn plan(&self, layers: &[LayerInfo]) -> MixedPlan {
-        // start everything at the lowest width
-        let mut choice: Vec<usize> = vec![0; layers.len()];
-        let cost = |choice: &[usize], layers: &[LayerInfo]| -> usize {
-            choice
-                .iter()
-                .zip(layers)
-                .map(|(&c, l)| {
-                    let wbits = self.w_bits as usize;
-                    let abits = MIX_BITS[c] as usize;
-                    (l.params * wbits).div_ceil(8) + (l.params * abits / 2).div_ceil(8)
-                })
-                .sum()
-        };
-        // greedy: repeatedly upgrade the layer with the best
+        // the shared greedy loop: start everything at the lowest width,
+        // repeatedly upgrade the layer with the best
         // error-reduction / byte-cost ratio while under budget
-        loop {
-            let mut best: Option<(usize, f64)> = None;
-            for (i, l) in layers.iter().enumerate() {
-                if choice[i] + 1 >= MIX_BITS.len() {
-                    continue;
-                }
-                let gain = l.sensitivity[choice[i]] - l.sensitivity[choice[i] + 1];
-                let extra_bytes =
-                    (l.params * (MIX_BITS[choice[i] + 1] - MIX_BITS[choice[i]]) as usize / 2)
-                        .div_ceil(8)
-                        .max(1);
-                let ratio = gain / extra_bytes as f64;
-                if ratio > 0.0 && best.map(|(_, r)| ratio > r).unwrap_or(true) {
-                    best = Some((i, ratio));
-                }
-            }
-            let Some((i, _)) = best else { break };
-            choice[i] += 1;
-            if cost(&choice, layers) > self.budget_bytes {
-                choice[i] -= 1;
-                break;
-            }
-        }
+        let choice = greedy_allocate(
+            layers.len(),
+            |_| MIX_BITS.len(),
+            |i, c| layers[i].sensitivity[c] - layers[i].sensitivity[c + 1],
+            |i, c| (layers[i].params * (MIX_BITS[c + 1] - MIX_BITS[c]) as usize / 2).div_ceil(8),
+            |choice| {
+                choice
+                    .iter()
+                    .zip(layers)
+                    .map(|(&c, l)| {
+                        let wbits = self.w_bits as usize;
+                        let abits = MIX_BITS[c] as usize;
+                        (l.params * wbits).div_ceil(8) + (l.params * abits / 2).div_ceil(8)
+                    })
+                    .sum()
+            },
+            self.budget_bytes,
+        );
         MixedPlan {
             layers: layers
                 .iter()
@@ -163,6 +198,39 @@ mod tests {
             layers: vec![("a".into(), 2, 4), ("b".into(), 2, 8)],
         };
         assert_eq!(plan.size_bytes(&[100, 200]), 25 + 50);
+    }
+
+    #[test]
+    fn greedy_allocations_are_nested_in_budget() {
+        // the upgrade order is budget-independent, so a smaller budget's
+        // allocation is a coordinatewise prefix of a larger one — the
+        // property the serve-time BudgetPlanner's monotonicity rides on
+        let gains = [[5.0, 1.0], [9.0, 4.0], [0.5, 0.2]];
+        let alloc = |budget: usize| {
+            greedy_allocate(
+                3,
+                |_| 3,
+                |i, c| gains[i][c],
+                |_, _| 1,
+                |choice| choice.iter().sum::<usize>(),
+                budget,
+            )
+        };
+        let mut prev = alloc(0);
+        assert_eq!(prev, vec![0, 0, 0]);
+        for budget in 1..=6 {
+            let cur = alloc(budget);
+            assert!(
+                prev.iter().zip(&cur).all(|(&a, &b)| a <= b),
+                "not nested at {budget}: {prev:?} vs {cur:?}"
+            );
+            assert!(cur.iter().sum::<usize>() <= budget);
+            prev = cur;
+        }
+        // with room for everything, all candidates saturate
+        assert_eq!(alloc(100), vec![2, 2, 2]);
+        // best gain-per-cost goes first
+        assert_eq!(alloc(1), vec![0, 1, 0]);
     }
 
     #[test]

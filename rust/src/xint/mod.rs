@@ -11,9 +11,14 @@
 //! * [`layer`] — Eq. 4: expanded linear / conv layers with the paper's
 //!   deployment policy (per-channel weights, 8-bit first/last layer,
 //!   weight-term upper bound from the §4 total-differential criterion).
-//! * [`budget`] — runtime [`TermBudget`]: per-request caps on the Eq. 3
-//!   term grid, executed largest-scale-first so any prefix is the best
-//!   available approximation (the QoS tiers' layer-granularity knob).
+//! * [`budget`] — the runtime budget hierarchy: [`TermBudget`] caps one
+//!   layer's Eq. 3 term grid (executed largest-scale-first so any
+//!   prefix is the best available approximation, with the §5.3
+//!   scale-product stop), and [`BudgetPlan`] carries one budget per
+//!   layer plus a global grid ceiling through the forward stack.
+//! * [`planner`] — the [`BudgetPlanner`]: sensitivity-profiled greedy
+//!   allocation of a tier's total grid ceiling across layers (per-layer
+//!   monitor curves, §5.1 first/last exemption folded in).
 //! * [`abelian`] — AbelianAdd / AbelianMul, the Abelian group over
 //!   isomorphic basis models, and the AllReduce-style reduction.
 //! * [`mixed`] — mixed-precision planner + model-size accounting (Table 3).
@@ -28,16 +33,18 @@ pub mod gemm;
 pub mod layer;
 pub mod mixed;
 pub mod monitor;
+pub mod planner;
 pub mod quantizer;
 
 pub use abelian::{abelian_reduce, AbelianMul, LinearModel};
 pub use auto::{quantize_model_auto, AutoConfig};
-pub use budget::{ForwardStats, TermBudget};
+pub use budget::{BudgetPlan, ForwardStats, TermBudget};
 pub use expansion::{ExpandConfig, SeriesExpansion, SparseTensor};
 pub use gemm::{int_gemm_a_bt, xint_linear_forward, xint_linear_forward_budgeted, ExpandedWeight};
 pub use layer::{LayerPolicy, XintConv2d, XintLinear};
-pub use mixed::{model_size_bytes, MixedPlan, MixedPlanner};
-pub use monitor::ExpansionMonitor;
+pub use mixed::{greedy_allocate, model_size_bytes, MixedPlan, MixedPlanner};
+pub use monitor::{ConfigMismatch, ExpansionMonitor, LayerSeries};
+pub use planner::{BudgetPlanner, LayerGridProfile};
 pub use quantizer::{Clip, Symmetry};
 
 /// Integer bit-width `X` of every basis plane (the paper's `INT(X)`).

@@ -1,35 +1,88 @@
 //! Expansion-count convergence monitor — the §5.3 auto-stop rule
 //! ("when the maximum difference is less than 1e-4, the number of
 //! expansions is optimal") and the data series behind Figure 4b.
+//!
+//! Observations are **config-guarded**: a series mixes only samples
+//! taken under one [`ExpandConfig`] (bits/terms/symmetry/clip), because
+//! a `max_diff` curve aggregated across configs is meaningless — an
+//! INT2 residual folded into an INT8 series would poison every
+//! calibration downstream. The first observation records the config;
+//! later mismatches return a [`ConfigMismatch`] error.
+//!
+//! Besides the aggregate series (pool-prefix calibration), the monitor
+//! keeps **per-layer-keyed** series ([`ExpansionMonitor::observe_layer`]):
+//! the paper's Theorem 1 converges per *tensor*, so each layer has its
+//! own convergence curve — exactly the sensitivity profile the
+//! [`BudgetPlanner`](super::planner::BudgetPlanner) allocates a grid
+//! ceiling against. Layer keys are independent: different layers may
+//! legitimately observe under different configs (§5.1 gives first/last
+//! layers an 8-bit policy).
 
 use super::expansion::{ExpandConfig, SeriesExpansion};
 use crate::tensor::Tensor;
+use std::collections::BTreeMap;
 
-/// Records max-residual per expansion count for a stream of tensors.
+/// An observation offered under a different [`ExpandConfig`] than the
+/// one a series was started with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigMismatch {
+    /// the layer key, `None` for the aggregate series
+    pub layer: Option<usize>,
+    /// config recorded on first observe
+    pub recorded: ExpandConfig,
+    /// config of the rejected observation
+    pub offered: ExpandConfig,
+}
+
+impl std::fmt::Display for ConfigMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let key = match self.layer {
+            Some(i) => format!("layer {i}"),
+            None => "aggregate".to_string(),
+        };
+        write!(
+            f,
+            "ExpansionMonitor {key} series started under {:?} rejects an observation \
+             under {:?}: one series, one config",
+            self.recorded, self.offered
+        )
+    }
+}
+
+impl std::error::Error for ConfigMismatch {}
+
+/// One convergence series: max-residual per truncation count plus the
+/// config it was observed under.
 #[derive(Clone, Debug, Default)]
-pub struct ExpansionMonitor {
+pub struct LayerSeries {
     /// max |x - recon_t(x)| seen, indexed by term count − 1
     pub max_diff: Vec<f32>,
     pub samples: usize,
+    cfg: Option<ExpandConfig>,
 }
 
-impl ExpansionMonitor {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Observe one tensor under `cfg` for 1..=cfg.terms truncations.
-    ///
-    /// Each truncation's reconstruction is built incrementally from the
-    /// previous prefix (`recon_t = recon_{t-1} + scale_t·M̃_t`), so one
-    /// observation costs O(terms·numel) instead of the naive
-    /// O(terms²·numel) of re-reconstructing every prefix from scratch.
-    pub fn observe(&mut self, x: &Tensor, cfg: &ExpandConfig) {
+impl LayerSeries {
+    fn observe(
+        &mut self,
+        x: &Tensor,
+        cfg: &ExpandConfig,
+        layer: Option<usize>,
+    ) -> Result<(), ConfigMismatch> {
+        match &self.cfg {
+            Some(recorded) if recorded != cfg => {
+                return Err(ConfigMismatch { layer, recorded: *recorded, offered: *cfg });
+            }
+            Some(_) => {}
+            None => self.cfg = Some(*cfg),
+        }
         let e = SeriesExpansion::expand(x, cfg);
         if self.max_diff.len() < cfg.terms {
             self.max_diff.resize(cfg.terms, 0.0);
         }
-        // term count 0 = bias + sparse saturation residual only
+        // term count 0 = bias + sparse saturation residual only; each
+        // truncation's reconstruction is built incrementally from the
+        // previous prefix (`recon_t = recon_{t-1} + scale_t·M̃_t`), so
+        // one observation costs O(terms·numel) instead of O(terms²·numel)
         let mut recon = e.reconstruct_terms(0);
         for t in 1..=cfg.terms {
             recon.axpy(1.0, &e.term_tensor(t - 1));
@@ -37,26 +90,110 @@ impl ExpansionMonitor {
             self.max_diff[t - 1] = self.max_diff[t - 1].max(diff);
         }
         self.samples += 1;
+        Ok(())
     }
 
-    /// The paper's rule: smallest term count whose max diff < `tol`
-    /// (default 1e-4); `None` if never reached within the observed range.
+    /// The config this series was started under (`None` if empty).
+    pub fn config(&self) -> Option<&ExpandConfig> {
+        self.cfg.as_ref()
+    }
+
+    /// The §5.3 rule on this series: smallest term count whose max diff
+    /// is under `tol`; `None` if never reached in the observed range.
     pub fn optimal_terms(&self, tol: f32) -> Option<usize> {
         self.max_diff.iter().position(|&d| d < tol).map(|i| i + 1)
     }
 
-    /// The (terms, max_diff) series — Figure 4b's blue line.
-    pub fn series(&self) -> Vec<(usize, f32)> {
-        self.max_diff.iter().enumerate().map(|(i, &d)| (i + 1, d)).collect()
-    }
-
-    /// Observed max-residual at a given truncation (`None` outside the
-    /// observed range) — the QoS controller's estimated precision loss.
+    /// Observed max-residual at `terms` (`None` outside the range).
     pub fn max_diff_at(&self, terms: usize) -> Option<f32> {
         if terms == 0 {
             return None;
         }
         self.max_diff.get(terms - 1).copied()
+    }
+}
+
+/// Records max-residual per expansion count for a stream of tensors —
+/// one aggregate series plus one series per layer key.
+#[derive(Clone, Debug, Default)]
+pub struct ExpansionMonitor {
+    aggregate: LayerSeries,
+    layers: BTreeMap<usize, LayerSeries>,
+}
+
+impl ExpansionMonitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe one tensor under `cfg` for 1..=cfg.terms truncations in
+    /// the aggregate series. Errors when `cfg` differs from the config
+    /// the series was started with.
+    pub fn observe(&mut self, x: &Tensor, cfg: &ExpandConfig) -> Result<(), ConfigMismatch> {
+        self.aggregate.observe(x, cfg, None)
+    }
+
+    /// Observe one tensor into the series keyed by `layer` (the
+    /// quantizable-layer position). Keys are independent — each layer
+    /// records its own config on first observe and rejects mismatches;
+    /// the aggregate series is untouched (layers under §5.1 policies
+    /// legitimately differ in config, which the aggregate must not mix).
+    pub fn observe_layer(
+        &mut self,
+        layer: usize,
+        x: &Tensor,
+        cfg: &ExpandConfig,
+    ) -> Result<(), ConfigMismatch> {
+        self.layers.entry(layer).or_default().observe(x, cfg, Some(layer))
+    }
+
+    /// Aggregate max-residual series (indexed by term count − 1).
+    pub fn max_diff(&self) -> &[f32] {
+        &self.aggregate.max_diff
+    }
+
+    /// Aggregate observation count.
+    pub fn samples(&self) -> usize {
+        self.aggregate.samples
+    }
+
+    /// The paper's rule on the aggregate series: smallest term count
+    /// whose max diff < `tol` (default 1e-4); `None` if never reached
+    /// within the observed range.
+    pub fn optimal_terms(&self, tol: f32) -> Option<usize> {
+        self.aggregate.optimal_terms(tol)
+    }
+
+    /// The aggregate (terms, max_diff) series — Figure 4b's blue line.
+    pub fn series(&self) -> Vec<(usize, f32)> {
+        self.aggregate.max_diff.iter().enumerate().map(|(i, &d)| (i + 1, d)).collect()
+    }
+
+    /// Aggregate max-residual at a given truncation (`None` outside the
+    /// observed range) — the QoS controller's estimated precision loss.
+    pub fn max_diff_at(&self, terms: usize) -> Option<f32> {
+        self.aggregate.max_diff_at(terms)
+    }
+
+    /// The series observed for `layer`, if any.
+    pub fn layer_series(&self, layer: usize) -> Option<&LayerSeries> {
+        self.layers.get(&layer)
+    }
+
+    /// §5.3 rule on one layer's series (`None` when the layer was never
+    /// observed or never reached `tol`).
+    pub fn optimal_terms_layer(&self, layer: usize, tol: f32) -> Option<usize> {
+        self.layers.get(&layer).and_then(|s| s.optimal_terms(tol))
+    }
+
+    /// One layer's max-residual at `terms`.
+    pub fn max_diff_at_layer(&self, layer: usize, terms: usize) -> Option<f32> {
+        self.layers.get(&layer).and_then(|s| s.max_diff_at(terms))
+    }
+
+    /// Number of distinct layer keys observed.
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
     }
 }
 
@@ -72,9 +209,9 @@ mod tests {
         let mut mon = ExpansionMonitor::new();
         let cfg = ExpandConfig::symmetric(BitSpec::int(4), 5);
         for _ in 0..4 {
-            mon.observe(&Tensor::randn(&[16, 16], 1.0, &mut rng), &cfg);
+            mon.observe(&Tensor::randn(&[16, 16], 1.0, &mut rng), &cfg).unwrap();
         }
-        assert_eq!(mon.samples, 4);
+        assert_eq!(mon.samples(), 4);
         let s = mon.series();
         assert_eq!(s.len(), 5);
         for w in s.windows(2) {
@@ -87,7 +224,7 @@ mod tests {
         let mut rng = Rng::seed(52);
         let mut mon = ExpansionMonitor::new();
         let cfg = ExpandConfig::symmetric(BitSpec::int(4), 6);
-        mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg);
+        mon.observe(&Tensor::randn(&[32, 32], 1.0, &mut rng), &cfg).unwrap();
         let n = mon.optimal_terms(1e-4).expect("INT4×6 reaches 1e-4");
         // INT4: residual ≈ max/2^(4t+1); max≈4 ⇒ need ~4 terms
         assert!((3..=5).contains(&n), "optimal {n}");
@@ -103,7 +240,7 @@ mod tests {
         let x = Tensor::randn(&[24, 8], 1.0, &mut rng);
         let cfg = ExpandConfig::symmetric(BitSpec::int(4), 5);
         let mut mon = ExpansionMonitor::new();
-        mon.observe(&x, &cfg);
+        mon.observe(&x, &cfg).unwrap();
         let e = SeriesExpansion::expand(&x, &cfg);
         for t in 1..=5 {
             let full = x.sub(&e.reconstruct_terms(t)).max_abs();
@@ -122,7 +259,63 @@ mod tests {
         let mut mon = ExpansionMonitor::new();
         let cfg = ExpandConfig::symmetric(BitSpec::int(2), 1);
         let mut rng = Rng::seed(53);
-        mon.observe(&Tensor::randn(&[8, 8], 1.0, &mut rng), &cfg);
+        mon.observe(&Tensor::randn(&[8, 8], 1.0, &mut rng), &cfg).unwrap();
         assert_eq!(mon.optimal_terms(1e-12), None);
+    }
+
+    #[test]
+    fn mixed_configs_are_rejected_not_aggregated() {
+        let mut rng = Rng::seed(55);
+        let mut mon = ExpansionMonitor::new();
+        let cfg4 = ExpandConfig::symmetric(BitSpec::int(4), 5);
+        let cfg8 = ExpandConfig::symmetric(BitSpec::int(8), 5);
+        let x = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        mon.observe(&x, &cfg4).unwrap();
+        let before = mon.max_diff().to_vec();
+        let err = mon.observe(&x, &cfg8).expect_err("mixed configs must be rejected");
+        assert_eq!(err.layer, None);
+        assert_eq!(err.recorded, cfg4);
+        assert_eq!(err.offered, cfg8);
+        // the rejected observation must not have touched the series
+        assert_eq!(mon.max_diff(), &before[..]);
+        assert_eq!(mon.samples(), 1);
+        // same config keeps working
+        mon.observe(&x, &cfg4).unwrap();
+        assert_eq!(mon.samples(), 2);
+        // a differing term count is a config mismatch too
+        let cfg4_short = ExpandConfig::symmetric(BitSpec::int(4), 3);
+        assert!(mon.observe(&x, &cfg4_short).is_err());
+    }
+
+    #[test]
+    fn layer_series_are_keyed_independently() {
+        let mut rng = Rng::seed(56);
+        let mut mon = ExpansionMonitor::new();
+        let cfg4 = ExpandConfig::activations(BitSpec::int(4), 4);
+        let cfg8 = ExpandConfig::activations(BitSpec::int(8), 1);
+        // big activations on layer 0, small on layer 1, 8-bit on layer 2
+        // — three independent series, two different configs
+        mon.observe_layer(0, &Tensor::randn(&[8, 16], 4.0, &mut rng), &cfg4).unwrap();
+        mon.observe_layer(1, &Tensor::randn(&[8, 16], 0.05, &mut rng), &cfg4).unwrap();
+        mon.observe_layer(2, &Tensor::randn(&[8, 16], 1.0, &mut rng), &cfg8).unwrap();
+        assert_eq!(mon.layer_count(), 3);
+        assert_eq!(mon.samples(), 0, "layer observes never touch the aggregate");
+        let d0 = mon.max_diff_at_layer(0, 1).unwrap();
+        let d1 = mon.max_diff_at_layer(1, 1).unwrap();
+        assert!(d0 > d1, "larger activations converge slower: {d0} vs {d1}");
+        // per-layer optimal terms follow each layer's own curve
+        let n0 = mon.optimal_terms_layer(0, 1e-3).unwrap_or(99);
+        let n1 = mon.optimal_terms_layer(1, 1e-3).unwrap_or(99);
+        assert!(n0 >= n1, "sensitive layer needs at least as many terms: {n0} vs {n1}");
+        assert_eq!(mon.optimal_terms_layer(7, 1e-3), None, "unobserved key");
+        assert_eq!(mon.layer_series(2).unwrap().config(), Some(&cfg8));
+        // per-key config guard: layer 0 rejects the 8-bit config while
+        // layer 2 keeps accepting it
+        let err = mon
+            .observe_layer(0, &Tensor::randn(&[8, 16], 1.0, &mut rng), &cfg8)
+            .expect_err("per-key mismatch");
+        assert_eq!(err.layer, Some(0));
+        mon.observe_layer(2, &Tensor::randn(&[8, 16], 1.0, &mut rng), &cfg8).unwrap();
+        assert_eq!(mon.layer_series(2).unwrap().samples, 2);
     }
 }

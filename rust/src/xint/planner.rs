@@ -1,0 +1,263 @@
+//! Serve-time per-layer budget planner — sensitivity-profiled
+//! allocation of a grid-term ceiling across a model's layers.
+//!
+//! The paper's expansion converges per *tensor* (§4, Theorem 1), so
+//! layers converge at different rates: a uniform per-layer cap
+//! overspends grid terms on robust layers and starves sensitive ones.
+//! The [`BudgetPlanner`] takes the per-layer convergence curves a
+//! per-layer [`ExpansionMonitor`](super::monitor::ExpansionMonitor)
+//! observed during calibration and greedily allocates a tier's **total**
+//! `(i, j)` grid-term ceiling across layers by marginal max-diff gain —
+//! the same sensitivity-ordered loop the mixed-precision planner uses
+//! for bit-widths ([`greedy_allocate`](super::mixed::greedy_allocate)),
+//! applied to activation term counts. The §5.1 exemption is folded in:
+//! 8-bit first/last layers (and FP-fallback grouped convs, which have
+//! no INT grid to truncate) stay at a full budget and are not charged
+//! against the ceiling.
+
+use super::budget::{BudgetPlan, TermBudget};
+use super::mixed::greedy_allocate;
+
+/// What the planner knows about one quantizable layer (depth-first
+/// position order, matching `quantize_model`'s traversal).
+#[derive(Clone, Debug)]
+pub struct LayerGridProfile {
+    /// INT weight terms `k` actually held by the layer (the grid's `i`
+    /// axis extent — and the grid cost of one activation term)
+    pub w_terms: usize,
+    /// activation terms `t` the layer's policy expands (the `j` axis)
+    pub a_terms: usize,
+    /// §5.1 exemption: pinned exact, never truncated, not charged
+    /// against the grid ceiling (8-bit first/last layers, FP-fallback
+    /// grouped convs)
+    pub exempt: bool,
+    /// observed max-residual of this layer's input expansion at
+    /// `1..=a_terms` activation terms (the per-layer monitor series);
+    /// empty means unprofiled — the layer then stays at the 1-term
+    /// floor, the conservative-cost choice
+    pub max_diff: Vec<f32>,
+}
+
+impl LayerGridProfile {
+    /// Marginal gain of upgrading from `level + 1` to `level + 2`
+    /// activation terms (levels are 0-based term counts minus one).
+    fn gain(&self, level: usize) -> f64 {
+        let cur = self.max_diff.get(level).copied().unwrap_or(0.0) as f64;
+        let next = self.max_diff.get(level + 1).copied().unwrap_or(0.0) as f64;
+        (cur - next).max(0.0)
+    }
+}
+
+/// Greedy sensitivity-ordered allocator of one total grid-term ceiling.
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetPlanner {
+    /// total `(i, j)` grid terms to spend across all non-exempt layers
+    pub total_grid_terms: usize,
+    /// §5.3 in-grid stop threshold copied into every non-exempt layer
+    /// budget (`0.0` disables; see [`TermBudget::scale_floor`])
+    pub scale_floor: f32,
+}
+
+impl BudgetPlanner {
+    pub fn new(total_grid_terms: usize) -> BudgetPlanner {
+        BudgetPlanner { total_grid_terms, scale_floor: 0.0 }
+    }
+
+    pub fn with_scale_floor(mut self, scale_floor: f32) -> BudgetPlanner {
+        self.scale_floor = scale_floor;
+        self
+    }
+
+    /// The exact grid cost of the uniform budget
+    /// `TermBudget::new(w_cap, a_cap)` over `profiles`: every
+    /// non-exempt layer at `min(w_cap, k) × min(a_cap, t)`. This is THE
+    /// cost formula — `uniform_cost`, `floor_cost` and the controller's
+    /// tier ceilings are all defined through it, so ceiling accounting
+    /// can never desynchronize between planner and controller.
+    pub fn grid_cost(profiles: &[LayerGridProfile], w_cap: usize, a_cap: usize) -> usize {
+        profiles
+            .iter()
+            .filter(|p| !p.exempt)
+            .map(|p| p.w_terms.min(w_cap).max(1) * p.a_terms.min(a_cap).max(1))
+            .sum()
+    }
+
+    /// Grid cost of the PR 3-style uniform allocation with an
+    /// unconstrained weight axis: every non-exempt layer capped at
+    /// `a_cap` activation terms.
+    pub fn uniform_cost(profiles: &[LayerGridProfile], a_cap: usize) -> usize {
+        Self::grid_cost(profiles, usize::MAX, a_cap)
+    }
+
+    /// Minimum spend: every non-exempt layer at one activation term
+    /// (the ≥ 1 floor of [`TermBudget`]).
+    pub fn floor_cost(profiles: &[LayerGridProfile]) -> usize {
+        Self::grid_cost(profiles, usize::MAX, 1)
+    }
+
+    /// Allocate the ceiling across `profiles` by marginal max-diff gain
+    /// per grid-term cost. Exempt layers get a full budget; every other
+    /// layer gets `TermBudget::new(w_terms, allocated_a)` (plus the
+    /// plan's scale floor). The returned plan records the grid terms
+    /// actually allocated as its total ceiling.
+    pub fn plan(&self, profiles: &[LayerGridProfile]) -> BudgetPlan {
+        let plannable: Vec<usize> = profiles
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.exempt)
+            .map(|(i, _)| i)
+            .collect();
+        // levels are activation term counts minus one: level 0 = the
+        // 1-term floor (always affordable), level t-1 = the full axis
+        let choice = greedy_allocate(
+            plannable.len(),
+            |i| profiles[plannable[i]].a_terms.max(1),
+            |i, c| profiles[plannable[i]].gain(c),
+            |i, _| profiles[plannable[i]].w_terms,
+            |levels| {
+                levels
+                    .iter()
+                    .zip(&plannable)
+                    .map(|(&lv, &pi)| profiles[pi].w_terms * (lv + 1))
+                    .sum()
+            },
+            self.total_grid_terms,
+        );
+        let mut layers = Vec::with_capacity(profiles.len());
+        let mut allocated = 0usize;
+        let mut next = 0usize;
+        for p in profiles {
+            if p.exempt {
+                layers.push(TermBudget::full());
+                continue;
+            }
+            let a = choice[next] + 1;
+            next += 1;
+            allocated += p.w_terms * a;
+            let mut b = TermBudget::new(p.w_terms.max(1), a);
+            if self.scale_floor > 0.0 {
+                b = b.with_scale_floor(self.scale_floor);
+            }
+            layers.push(b);
+        }
+        BudgetPlan::per_layer(layers, TermBudget::full()).with_total_grid_terms(allocated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Geometric convergence curve `first / ratio^t` — the Theorem 1
+    /// shape every real layer series follows.
+    fn geometric(first: f32, ratio: f32, terms: usize) -> Vec<f32> {
+        (0..terms).map(|t| first / ratio.powi(t as i32)).collect()
+    }
+
+    fn profile(w_terms: usize, a_terms: usize, first: f32) -> LayerGridProfile {
+        LayerGridProfile {
+            w_terms,
+            a_terms,
+            exempt: false,
+            max_diff: geometric(first, 16.0, a_terms),
+        }
+    }
+
+    #[test]
+    fn planner_shifts_terms_to_sensitive_layers() {
+        // one slow-converging (large-activation) layer, one fast: at a
+        // ceiling equal to the uniform 2-term cost, the sensitive layer
+        // must get at least as many activation terms as the robust one
+        let profiles = vec![profile(2, 4, 8.0), profile(2, 4, 0.01)];
+        let ceiling = BudgetPlanner::uniform_cost(&profiles, 2);
+        assert_eq!(ceiling, 8);
+        let plan = BudgetPlanner::new(ceiling).plan(&profiles);
+        let sensitive = plan.budget_for(0);
+        let robust = plan.budget_for(1);
+        assert!(
+            sensitive.a_terms > robust.a_terms,
+            "sensitive {sensitive} should outrank robust {robust}"
+        );
+        assert!(plan.total_grid_terms().unwrap() <= ceiling);
+        assert_eq!(plan.layer_count(), 2);
+    }
+
+    #[test]
+    fn exempt_layers_stay_full_and_uncharged() {
+        let mut profiles = vec![profile(1, 1, 0.1), profile(2, 4, 1.0), profile(1, 1, 0.1)];
+        profiles[0].exempt = true;
+        profiles[2].exempt = true;
+        assert_eq!(BudgetPlanner::floor_cost(&profiles), 2);
+        let plan = BudgetPlanner::new(4).plan(&profiles);
+        assert_eq!(plan.budget_for(0), TermBudget::full());
+        assert_eq!(plan.budget_for(2), TermBudget::full());
+        let mid = plan.budget_for(1);
+        assert_eq!(mid.w_terms, 2);
+        assert_eq!(mid.a_terms, 2, "ceiling 4 = 2 weight terms × 2 act terms");
+        assert_eq!(plan.total_grid_terms(), Some(4));
+    }
+
+    #[test]
+    fn ceiling_below_floor_still_gives_every_layer_one_term() {
+        let profiles = vec![profile(2, 4, 1.0), profile(3, 4, 1.0)];
+        let plan = BudgetPlanner::new(0).plan(&profiles);
+        assert_eq!(plan.budget_for(0).a_terms, 1);
+        assert_eq!(plan.budget_for(1).a_terms, 1);
+        // the floor is spent even when the ceiling cannot afford it —
+        // a zero-term layer forward is not a thing
+        assert_eq!(plan.total_grid_terms(), Some(BudgetPlanner::floor_cost(&profiles)));
+    }
+
+    #[test]
+    fn generous_ceiling_saturates_every_axis() {
+        let profiles = vec![profile(2, 4, 1.0), profile(2, 3, 0.5)];
+        let plan = BudgetPlanner::new(1000).plan(&profiles);
+        assert_eq!(plan.budget_for(0).a_terms, 4);
+        assert_eq!(plan.budget_for(1).a_terms, 3);
+        assert_eq!(plan.total_grid_terms(), Some(2 * 4 + 2 * 3));
+    }
+
+    #[test]
+    fn plans_nest_as_the_ceiling_grows() {
+        let profiles = vec![profile(2, 4, 4.0), profile(2, 4, 0.5), profile(1, 4, 0.02)];
+        let floor = BudgetPlanner::floor_cost(&profiles);
+        let max = BudgetPlanner::uniform_cost(&profiles, 4);
+        let mut prev: Option<BudgetPlan> = None;
+        for ceiling in floor..=max {
+            let plan = BudgetPlanner::new(ceiling).plan(&profiles);
+            if let Some(p) = &prev {
+                for i in 0..profiles.len() {
+                    assert!(
+                        p.budget_for(i).a_terms <= plan.budget_for(i).a_terms,
+                        "layer {i} shrank when the ceiling grew to {ceiling}"
+                    );
+                }
+                assert!(p.total_grid_terms() <= plan.total_grid_terms());
+            }
+            prev = Some(plan);
+        }
+    }
+
+    #[test]
+    fn scale_floor_is_carried_into_non_exempt_budgets() {
+        let mut profiles = vec![profile(1, 1, 0.1), profile(2, 4, 1.0)];
+        profiles[0].exempt = true;
+        let plan = BudgetPlanner::new(8).with_scale_floor(1e-2).plan(&profiles);
+        assert_eq!(plan.budget_for(0).scale_floor, 0.0, "exempt layers carry no stop");
+        assert_eq!(plan.budget_for(1).scale_floor, 1e-2);
+    }
+
+    #[test]
+    fn unprofiled_layers_stay_at_the_floor() {
+        // no series → no measurable gain → the greedy loop never
+        // upgrades past the 1-term floor, leaving ceiling for profiled
+        // layers
+        let profiles = vec![
+            LayerGridProfile { w_terms: 2, a_terms: 4, exempt: false, max_diff: Vec::new() },
+            profile(2, 4, 1.0),
+        ];
+        let plan = BudgetPlanner::new(10).plan(&profiles);
+        assert_eq!(plan.budget_for(0).a_terms, 1);
+        assert_eq!(plan.budget_for(1).a_terms, 4);
+    }
+}

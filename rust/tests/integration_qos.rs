@@ -15,7 +15,10 @@ use fp_xint::tensor::{Rng, Tensor};
 use fp_xint::util::prop::{forall, no_shrink, PropConfig};
 use fp_xint::xint::abelian::abelian_reduce;
 use fp_xint::xint::layer::LayerPolicy;
-use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor, SeriesExpansion, TermBudget};
+use fp_xint::xint::planner::BudgetPlanner;
+use fp_xint::xint::{
+    BitSpec, BudgetPlan, ExpandConfig, ExpansionMonitor, SeriesExpansion, TermBudget,
+};
 use std::sync::Arc;
 
 fn close(a: &Tensor, b: &Tensor, tol: f32) -> Result<(), String> {
@@ -105,7 +108,7 @@ fn monitor_calibrated_budgets_are_monotone_across_tiers() {
     let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
     let mut rng = Rng::seed(0xCAFE);
     for _ in 0..3 {
-        mon.observe(&Tensor::randn(&[16, 64], 1.0, &mut rng), &cfg);
+        mon.observe(&Tensor::randn(&[16, 64], 1.0, &mut rng), &cfg).unwrap();
     }
     let ctl = TermController::new(QosConfig::new(8));
     ctl.calibrate(&mon);
@@ -236,7 +239,7 @@ fn property_no_tier_starves_under_a_sustained_flood() {
 
 #[test]
 fn replication_mode_budget_flows_tier_to_gemm_grid() {
-    // Tier → TermBudget end to end in replication mode: the same
+    // Tier → BudgetPlan end to end in replication mode: the same
     // layer-sync QuantModel serves Exact bit-identically to the direct
     // forward while a BestEffort request executes measurably fewer
     // (i, j) GEMM terms inside the worker.
@@ -247,7 +250,7 @@ fn replication_mode_budget_flows_tier_to_gemm_grid() {
     let q = quantize_model(&m, LayerPolicy::new(4, 4));
     let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
     let direct = q.forward(&x);
-    let (_, full_stats) = q.forward_with(&x, &TermBudget::full());
+    let (_, full_stats) = q.forward_with(&x, &BudgetPlan::full());
 
     let qw = q.clone();
     let pool = WorkerPool::new(
@@ -298,7 +301,7 @@ fn tcp_mixed_tiers_end_to_end() {
     let mut mon = ExpansionMonitor::new();
     let ecfg = ExpandConfig::symmetric(BitSpec::int(4), terms);
     for _ in 0..3 {
-        mon.observe(&Tensor::randn(&[8, 16], 1.0, &mut rng), &ecfg);
+        mon.observe(&Tensor::randn(&[8, 16], 1.0, &mut rng), &ecfg).unwrap();
     }
     let ctl = Arc::new(TermController::new(QosConfig::new(terms)));
     ctl.calibrate(&mon);
@@ -325,4 +328,127 @@ fn tcp_mixed_tiers_end_to_end() {
     assert!(be_terms <= exact_terms, "{be_terms} > {exact_terms}");
     assert_eq!(coord.metrics.failed(), 0);
     handle.stop();
+}
+
+#[test]
+fn property_planned_forward_error_monotone_in_ceiling() {
+    // Theorem 1's prefix argument end to end: greedy allocations at
+    // growing ceilings are nested (the upgrade order is
+    // ceiling-independent), so every layer's executed grid at ceiling
+    // c2 > c1 is a superset of its grid at c1 — the budgeted forward's
+    // max error vs the full forward must be monotone non-increasing in
+    // the plan's total grid ceiling, up to the wiggle nonlinearities
+    // can add between adjacent layerwise-better approximations.
+    let mut rng = Rng::seed(0x9999);
+    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    let mut m = zoo::mini_resnet_a(4, 0xABC);
+    let _ = m.forward_train(&probe);
+    let q = quantize_model(&m, LayerPolicy::new(4, 4));
+    let mut mon = ExpansionMonitor::new();
+    q.observe_layers(&probe, &mut mon).unwrap();
+    let profiles = q.grid_profiles(&mon);
+    let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
+    let full = q.forward(&x);
+    let scale = full.max_abs().max(1e-6);
+    let floor = BudgetPlanner::floor_cost(&profiles);
+    let max = profiles.iter().filter(|p| !p.exempt).map(|p| p.w_terms * p.a_terms).sum::<usize>();
+    assert!(max > floor, "need room between floor and saturation");
+    // every interior upgrade costs w_terms = 2, so stepping by 2 visits
+    // every distinct plan; always include the saturating ceiling
+    let mut ceilings: Vec<usize> = (floor..=max).step_by(2).collect();
+    if ceilings.last() != Some(&max) {
+        ceilings.push(max);
+    }
+    let mut errs: Vec<(usize, f32)> = Vec::new();
+    let mut prev_spend = 0usize;
+    for ceiling in ceilings {
+        let plan = BudgetPlanner::new(ceiling).plan(&profiles);
+        let (y, stats) = q.forward_with(&x, &plan);
+        // nested plans ⇒ executed grids only grow (spend scales with
+        // conv batch rows, so compare spend to spend, not to ceiling)
+        assert!(stats.grid_terms >= prev_spend, "spend shrank as the ceiling grew");
+        prev_spend = stats.grid_terms;
+        errs.push((ceiling, full.sub(&y).max_abs() / scale));
+    }
+    // endpoint: a plan that covers every layer's grid reproduces the
+    // full forward bit-for-bit (shared natural-order path)
+    let sat_layers: Vec<TermBudget> = profiles
+        .iter()
+        .map(|p| {
+            if p.exempt {
+                TermBudget::full()
+            } else {
+                TermBudget::new(p.w_terms, p.a_terms)
+            }
+        })
+        .collect();
+    let sat = BudgetPlan::per_layer(sat_layers, TermBudget::full());
+    let (y_sat, _) = q.forward_with(&x, &sat);
+    assert_eq!(y_sat.data(), full.data(), "saturated plan must be bit-identical");
+    assert!(errs.last().unwrap().1 <= 1e-3, "max-ceiling plan must track the full forward");
+    // monotone non-increasing along the nested ceilings, with slack for
+    // the nonlinear wiggle (layerwise-better ⇒ output-better only up to
+    // ReLU/pool interactions; gross violations mean the plan is ignored)
+    for w in errs.windows(2) {
+        let ((c1, e1), (c2, e2)) = (w[0], w[1]);
+        assert!(
+            e2 <= e1 + 0.05 + 0.05 * e1,
+            "ceiling {c2} err {e2} regressed past ceiling {c1} err {e1}: {errs:?}"
+        );
+    }
+    // and the trend is real: the floor allocation is measurably worse
+    // than the saturated one
+    assert!(errs[0].1 > errs.last().unwrap().1, "no error range across ceilings: {errs:?}");
+}
+
+#[test]
+fn planned_tier_serving_flows_calibration_to_grid_metrics() {
+    // calibrate → calibrate_layers → plan_for → QuantModelWorker: a
+    // planned non-Exact tier spends fewer grid terms than Exact, the
+    // planned ceiling lands in the metrics, and Exact stays
+    // bit-identical under per-layer calibration.
+    let mut rng = Rng::seed(0x51AB);
+    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    let mut m = zoo::mini_resnet_a(4, 0xCAB);
+    let _ = m.forward_train(&probe);
+    let q = quantize_model(&m, LayerPolicy::new(4, 4));
+    let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng);
+    let direct = q.forward(&x);
+
+    // per-layer calibration from the quantized model itself
+    let mut mon = ExpansionMonitor::new();
+    q.observe_layers(&probe, &mut mon).unwrap();
+    let profiles = q.grid_profiles(&mon);
+    let ctl = Arc::new(TermController::new(QosConfig::new(1)));
+    ctl.calibrate_layers(profiles);
+    let snap = ctl.snapshot();
+    assert!(snap.plan_ceilings[Tier::Throughput.idx()].is_some(), "calibration armed plans");
+
+    let qw = q.clone();
+    let pool = WorkerPool::new(
+        1,
+        Arc::new(move |_| {
+            Box::new(QuantModelWorker { model: qw.clone(), sample_dims: Some(vec![1, 16, 16]) })
+                as Box<dyn BasisWorker>
+        }),
+    );
+    let coord = Coordinator::new(
+        BatcherConfig::uniform(4, 200, 16),
+        ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+    );
+    let flat = x.reshape(&[2, 256]);
+    let exact = coord.infer_tier(flat.clone(), Tier::Exact).unwrap();
+    assert_eq!(exact.logits.data(), direct.data(), "Exact immune to plan calibration");
+    let thr = coord.infer_tier(flat, Tier::Throughput).unwrap();
+    assert!(
+        thr.grid_terms < exact.grid_terms,
+        "planned tier must execute fewer GEMMs: {} !< {}",
+        thr.grid_terms,
+        exact.grid_terms
+    );
+    assert!(thr.grid_terms > 0);
+    // the planned ceiling is observable per tier, and only there
+    assert!(coord.metrics.tier_mean_planned_grid_terms(Tier::Throughput) > 0.0);
+    assert_eq!(coord.metrics.tier_mean_planned_grid_terms(Tier::Exact), 0.0);
+    coord.shutdown();
 }

@@ -70,6 +70,17 @@ ABSOLUTE_GATES = [
         "BestEffort executes at most half the full grid's INT GEMMs (deterministic)",
         lambda v: v >= 2.0,
     ),
+    # Planned-vs-uniform contract (deterministic: seeded model + probes,
+    # no timing): the sensitivity-planned allocation must track the full
+    # forward at least as closely as the uniform budget at an equal grid
+    # ceiling. Small slack (0.95) because the greedy planner optimizes
+    # the per-layer residual sum, a proxy for output max-diff.
+    (
+        "BENCH_budget.json",
+        "planned.improvement",
+        "planned allocation is no worse than uniform at equal grid spend",
+        lambda v: v >= 0.95,
+    ),
 ]
 
 # (file, dotted path, predicate description, check) — absolute floors on
@@ -100,6 +111,36 @@ BASELINE_GATES = [
     ("BENCH_budget.json", "besteffort_speedup", "count", 0.8),
     ("BENCH_budget.json", "full_forward_ms", "latency", 2.0),
 ]
+
+
+def dotted_paths(doc, prefix=""):
+    """All dotted key paths through nested dicts (lists are leaves)."""
+    paths = set()
+    if isinstance(doc, dict):
+        for key, value in doc.items():
+            path = f"{prefix}.{key}" if prefix else key
+            paths.add(path)
+            paths |= dotted_paths(value, path)
+    return paths
+
+
+def check_schema_drift(baseline_dir, current_dir, fname, failures):
+    """A committed baseline whose keys the current bench no longer emits
+    is stale — fail loudly naming the file instead of silently skipping
+    its gates (the old behavior: a schema change quietly disarmed every
+    baseline gate for that file)."""
+    try:
+        base = json.loads((baseline_dir / fname).read_text())
+        cur = json.loads((current_dir / fname).read_text())
+    except (OSError, json.JSONDecodeError):
+        return  # missing/unparseable files are reported by the gates
+    stale = sorted(dotted_paths(base) - dotted_paths(cur))
+    if stale:
+        failures.append(
+            f"{baseline_dir / fname}: baseline schema drift — keys {stale} are no "
+            "longer emitted by the current bench; the committed baseline is stale, "
+            "re-record it via the record-baseline workflow"
+        )
 
 
 def main():
@@ -141,6 +182,10 @@ def main():
             "baseline gates (see benchmarks/baseline/README.md to record one)"
         )
     else:
+        # stale-baseline detection before any gate runs: schema drift in a
+        # committed baseline must fail, not silently disarm its gates
+        for fname in sorted(p.name for p in baseline_dir.glob("BENCH_*.json")):
+            check_schema_drift(baseline_dir, current_dir, fname, failures)
         for fname, path, desc, check in MEASURED_FLOOR_GATES:
             base_doc = load(baseline_dir, fname)
             cur_doc = load(current_dir, fname)
