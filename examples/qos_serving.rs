@@ -244,8 +244,8 @@ fn main() {
         );
     }
     println!(
-        "controller after spike: pressure {} (degrade events {}, restore events {})",
-        peak_pressure.pressure, peak_pressure.degrade_events, peak_pressure.restore_events
+        "controller after spike: per-tier pressure {:?} (degrade events {}, restore events {})",
+        peak_pressure.pressures, peak_pressure.degrade_events, peak_pressure.restore_events
     );
 
     // drain: light traffic restores full precision
@@ -258,10 +258,10 @@ fn main() {
     }
     let drained = ctl2.snapshot();
     println!(
-        "after drain: pressure {} → budgets {:?} (full precision restored: {})",
-        drained.pressure,
+        "after drain: per-tier pressure {:?} → budgets {:?} (full precision restored: {})",
+        drained.pressures,
         drained.budgets,
-        drained.pressure == 0
+        drained.pressures.iter().all(|&p| p == 0)
     );
     qos_handle.stop();
 

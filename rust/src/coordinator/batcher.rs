@@ -153,8 +153,21 @@ impl FormedBatch {
         self.tier_depths.iter().sum()
     }
 
+    /// The batch's OWN tier queue occupancy (depth / cap) at formation
+    /// — the admission-pressure signal fed to the QoS controller's
+    /// per-tier loop. Feeding the hottest queue across tiers here
+    /// (see [`FormedBatch::max_occupancy`]) is exactly the cross-tier
+    /// coupling bug the per-tier controller exists to prevent: a
+    /// Throughput flood must not register as pressure on a Balanced
+    /// batch's decision.
+    pub fn tier_occupancy(&self) -> f64 {
+        let i = self.tier().idx();
+        self.tier_depths[i] as f64 / self.tier_caps[i].max(1) as f64
+    }
+
     /// Hottest per-tier occupancy (depth / cap) across the queues —
-    /// the admission-pressure signal fed to the QoS controller.
+    /// aggregate observability only; the pressure signal is
+    /// [`FormedBatch::tier_occupancy`].
     pub fn max_occupancy(&self) -> f64 {
         self.tier_depths
             .iter()
@@ -926,6 +939,27 @@ mod tests {
         assert!(exact >= 12, "weights ignored: {exact}/18 exact in {order:?}");
         assert!(best_effort >= 1, "low-weight tier starved: {order:?}");
         b.shutdown();
+    }
+
+    #[test]
+    fn formed_batch_occupancy_is_per_tier() {
+        let (reply, _rx) = mpsc::channel();
+        let batch = FormedBatch {
+            x: Tensor::zeros(&[1, 1]),
+            parts: vec![BatchPart {
+                id: 0,
+                rows: 1,
+                reply,
+                enqueued_at: Instant::now(),
+                tier: Tier::Balanced,
+            }],
+            // Throughput's queue is saturated; Balanced's is nearly idle
+            tier_depths: [12, 2, 16, 0],
+            tier_caps: [16; NUM_TIERS],
+        };
+        // the batch's own tier is the pressure signal, not the hottest
+        assert!((batch.tier_occupancy() - 2.0 / 16.0).abs() < 1e-12);
+        assert!((batch.max_occupancy() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -187,6 +187,17 @@ impl Metrics {
         crate::util::stats::Summary::of(&self.tier_latencies[tier.idx()].lock().unwrap())
     }
 
+    /// p99 request latency at `tier` over the whole reservoir (seconds;
+    /// 0 when the tier served nothing) — the long-horizon view of the
+    /// observable the per-tier SLO loop targets. The controller's own
+    /// windowed digest
+    /// ([`TermController::tier_p99`](crate::qos::TermController::tier_p99))
+    /// sees the same latencies but forgets each window once a pressure
+    /// decision consumes it.
+    pub fn tier_p99(&self, tier: Tier) -> f64 {
+        self.tier_latency_summary(tier).p99
+    }
+
     /// Worst estimated precision loss (max-residual) served at `tier`;
     /// 0 when the controller never reported an estimate.
     pub fn tier_est_loss(&self, tier: Tier) -> f64 {
@@ -242,5 +253,8 @@ mod tests {
         assert_eq!(m.tier_est_loss(Tier::Exact), 0.0);
         let s = m.tier_latency_summary(Tier::Throughput);
         assert_eq!(s.n, 2);
+        // the SLO loop's observable: per-tier p99 over the reservoir
+        assert!((m.tier_p99(Tier::Throughput) - s.p99).abs() < 1e-12);
+        assert_eq!(m.tier_p99(Tier::BestEffort), 0.0);
     }
 }

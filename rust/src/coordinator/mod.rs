@@ -25,7 +25,7 @@ pub use metrics::Metrics;
 pub use pool::{BasisWorker, BudgetedRun, WorkerPool};
 pub use scheduler::ExpansionScheduler;
 
-use crate::qos::Tier;
+use crate::qos::{TermController, Tier};
 use crate::tensor::Tensor;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -83,6 +83,11 @@ impl Response {
 pub struct Coordinator {
     batcher: Batcher,
     pub metrics: Arc<Metrics>,
+    /// QoS controller attached to the scheduler, if any — an
+    /// observability handle so the serving layer (TCP front-end,
+    /// examples, benches) can surface per-tier pressure next to
+    /// shed/queue stats. `None` when serving without a control plane.
+    pub qos: Option<Arc<TermController>>,
 }
 
 impl Coordinator {
@@ -90,8 +95,9 @@ impl Coordinator {
     pub fn new(cfg: BatcherConfig, scheduler: ExpansionScheduler) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
+        let qos = scheduler.controller();
         let batcher = Batcher::start(cfg, move |batch| scheduler.process(batch, &m2));
-        Coordinator { batcher, metrics }
+        Coordinator { batcher, metrics, qos }
     }
 
     /// Submit a request at [`Tier::Exact`] (non-blocking; sheds when the

@@ -7,8 +7,16 @@
 //! workers of the pool (⊎ prefix sums are themselves group elements, so
 //! the prefix is a valid lower-precision model) and feeds the
 //! controller exactly ONE [`observe_batch`](TermController::observe_batch)
-//! decision per formed batch (hottest per-tier queue occupancy + batch
-//! service time), and runs every worker under the tier's
+//! decision per formed batch — for the batch's OWN tier: its own queue
+//! occupancy ([`FormedBatch::tier_occupancy`], not the cross-tier
+//! hottest queue), its service time, and its tier's windowed
+//! request-latency p99 (each reply's latency is pushed into the
+//! controller's per-tier digest next to
+//! [`Metrics::record_completed_tier`], then the window is consumed by
+//! the decision). Failed batches feed occupancy relief only — their
+//! service time and latencies never enter the EWMA or p99 digest, so
+//! an erroring backend cannot masquerade as load. The scheduler runs
+//! every worker under the tier's
 //! [`BudgetPlan`] ([`TermController::plan_for`]) so plan-aware
 //! replication workers truncate each layer's Eq. 3 grid to its
 //! sensitivity-allocated entry. In *anytime* mode the prefix
@@ -85,12 +93,22 @@ impl ExpansionScheduler {
         self
     }
 
+    /// The attached QoS controller, if any — the serving layer keeps a
+    /// handle so per-tier pressure is observable next to shed/queue
+    /// stats ([`Coordinator::qos`](crate::coordinator::Coordinator)).
+    pub fn controller(&self) -> Option<Arc<TermController>> {
+        self.controller.clone()
+    }
+
     /// Process one formed batch end to end.
     pub fn process(&self, batch: FormedBatch, metrics: &Metrics) {
         let t0 = std::time::Instant::now();
         let tier = batch.tier();
-        // the admission-pressure signal, captured before parts move out
-        let occupancy = batch.max_occupancy();
+        // the admission-pressure signal, captured before parts move
+        // out: the batch's OWN tier queue — using the hottest queue
+        // across tiers here is how a Throughput flood used to degrade
+        // Balanced (the cross-tier coupling bug)
+        let occupancy = batch.tier_occupancy();
         let budget = match &self.controller {
             Some(ctl) => ctl.budget_for(tier).min(self.pool.len()).max(1),
             None => self.pool.len(),
@@ -134,6 +152,11 @@ impl ExpansionScheduler {
                     // metrics immediately after receiving the reply
                     let latency = p.enqueued_at.elapsed().as_secs_f64();
                     metrics.record_completed_tier(p.tier, latency, terms_used, est_loss);
+                    if let Some(ctl) = &self.controller {
+                        // the controller's windowed p99 digest sees
+                        // exactly the latencies the metrics see
+                        ctl.record_latency(p.tier, latency);
+                    }
                     let _ = p.reply.send(Response {
                         id: p.id,
                         logits: Tensor::from_vec(&[p.rows, classes], data),
@@ -146,9 +169,12 @@ impl ExpansionScheduler {
                 }
                 let service = t0.elapsed().as_secs_f64();
                 metrics.record_batch(batch.x.dims()[0], service);
-                // exactly one pressure decision per formed batch
+                // exactly one pressure decision per formed batch, for
+                // the batch's own tier: consume the tier's latency
+                // window and fold in this batch's service time
                 if let Some(ctl) = &self.controller {
-                    ctl.observe_batch(occupancy, service);
+                    let p99 = ctl.take_tier_p99(tier);
+                    ctl.observe_batch(tier, occupancy, Some(service), p99);
                 }
             }
             Err(e) => {
@@ -162,7 +188,13 @@ impl ExpansionScheduler {
                     let _ = p.reply.send(Response::failure(p.id, p.tier, latency, msg.clone()));
                 }
                 if let Some(ctl) = &self.controller {
-                    ctl.observe_batch(occupancy, t0.elapsed().as_secs_f64());
+                    // a failed forward still relieves the tier's queue
+                    // signal, but its service time stays out of the
+                    // EWMA (and nothing entered the p99 digest): errors
+                    // are fast, counting them would read as headroom
+                    // and errors must not masquerade as load either way
+                    let p99 = ctl.take_tier_p99(tier);
+                    ctl.observe_batch(tier, occupancy, None, p99);
                 }
             }
         }
@@ -439,6 +471,49 @@ mod tests {
         let be = coord.infer_tier(x, Tier::BestEffort).unwrap();
         assert!((be.logits.data()[0] - 12.0).abs() < 1e-5);
         coord.shutdown();
+    }
+
+    #[test]
+    fn failed_batches_never_pollute_the_pressure_signal() {
+        use crate::coordinator::{BatcherConfig, Coordinator};
+        struct Failing;
+        impl BasisWorker for Failing {
+            fn run(&mut self, _x: &Tensor) -> anyhow::Result<Tensor> {
+                anyhow::bail!("injected basis failure")
+            }
+        }
+        // a hair-trigger service target: ONE polluting service sample
+        // from the error path would step pressure immediately
+        let qcfg = QosConfig::new(1).with_service_target(1e-12);
+        let ctl = Arc::new(TermController::new(qcfg));
+        let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Failing) as Box<dyn BasisWorker>));
+        let coord = Coordinator::new(
+            BatcherConfig::uniform(2, 100, 8),
+            ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+        );
+        // pre-heat Balanced so the error path's occupancy RELIEF is
+        // observable too (failures drain queues; that part must count)
+        ctl.observe_batch(Tier::Balanced, 0.95, None, None);
+        assert_eq!(ctl.tier_pressure(Tier::Balanced), 1);
+        for _ in 0..3 {
+            assert!(coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::Balanced).is_err());
+        }
+        // shutdown joins the forming thread, so every batch's pressure
+        // decision has landed before the asserts
+        coord.shutdown();
+        assert_eq!(
+            ctl.tier_service_ewma(Tier::Balanced),
+            None,
+            "a failed forward's service time leaked into the EWMA"
+        );
+        let p99 = ctl.tier_p99(Tier::Balanced);
+        assert_eq!(p99, None, "failed replies must not enter the digest");
+        assert_eq!(
+            ctl.tier_pressure(Tier::Balanced),
+            0,
+            "failed batches at an empty queue must relieve, never heat"
+        );
+        assert_eq!(ctl.snapshot().tier_degrade_events[Tier::Balanced.idx()], 1);
     }
 
     #[test]

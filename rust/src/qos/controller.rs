@@ -4,14 +4,34 @@
 //! Calibration uses [`ExpansionMonitor`] convergence data (§5.3): a
 //! tier's base budget is the smallest term count whose observed
 //! max-residual is below the tier tolerance. At serve time the
-//! controller takes **one decision per formed batch**
-//! ([`TermController::observe_batch`]): the hottest per-tier queue
-//! occupancy (each tier's depth over its own cap, from the per-tier
-//! batcher queues) and the batch service-time EWMA feed a single
-//! pressure step — up, down, or hold. Each pressure step removes one
-//! term from every non-Exact tier, bounded below by the tier's floor.
-//! When the queues drain, pressure falls and full precision is
-//! restored — precision degrades, availability does not.
+//! controller runs **one pressure loop per tier**: each formed batch
+//! feeds exactly one [`TermController::observe_batch`] decision for
+//! *its own* tier — that tier's queue occupancy (its depth over its
+//! own cap, from the per-tier batcher queues), that tier's batch
+//! service-time EWMA, and that tier's windowed request-latency p99
+//! checked against the tier's SLO target
+//! ([`Tier::slo_target`], overridable via
+//! [`QosConfig::with_slo_target`]). A tier steps pressure up only when
+//! **its own** p99 breaks **its own** SLO or its own queue runs hot,
+//! and each step removes precision from that tier alone, bounded below
+//! by the tier's floor. When the tier's queue drains and its latency
+//! cools, its pressure falls and full precision is restored —
+//! precision degrades per tier, availability does not, and a
+//! Throughput flood can never move Balanced's served precision (the
+//! pre-PR-5 loop fed one global scalar from the *hottest* queue across
+//! all tiers, so it could).
+//!
+//! The p99 signal comes from a small lock-free ring digest per tier
+//! inside the controller ([`TermController::record_latency`]), seeded
+//! by the scheduler with exactly the latencies
+//! [`Metrics::record_completed_tier`](crate::coordinator::Metrics::record_completed_tier)
+//! sees (elided for tiers whose SLO is disabled — they never read the
+//! window); each decision consumes its tier's window
+//! ([`TermController::take_tier_p99`]), so a window spans the
+//! latencies completed since the tier's previous decision. Failed
+//! batches feed occupancy relief only — their service time and
+//! latencies stay out of the EWMA and digest, so errors cannot
+//! masquerade as load.
 //!
 //! With per-layer calibration attached
 //! ([`TermController::calibrate_layers`]), each tier maps to a
@@ -21,8 +41,10 @@
 //! layers by marginal max-diff gain, pressure shrinks the *ceiling*
 //! (one uniform activation-term-equivalent per step) and replans, and
 //! Exact is immune by construction ([`BudgetPlan::full`] always).
+//! Plans stay memoized per (tier, that tier's effective ceiling).
 
 use super::tier::{Tier, NUM_TIERS};
+use crate::util::stats::percentile;
 use crate::xint::budget::{BudgetPlan, TermBudget};
 use crate::xint::monitor::ExpansionMonitor;
 use crate::xint::planner::{BudgetPlanner, LayerGridProfile};
@@ -34,14 +56,18 @@ use std::sync::Mutex;
 pub struct QosConfig {
     /// total basis terms available (the worker-pool size)
     pub total_terms: usize,
-    /// per-tier queue occupancy above which pressure rises (the hottest
-    /// tier's depth/cap; one step per formed batch)
+    /// per-tier queue occupancy above which that tier's pressure rises
+    /// (the observed batch's own depth/cap; one decision per batch)
     pub high_watermark: f64,
-    /// per-tier queue occupancy below which pressure falls
+    /// per-tier queue occupancy below which that tier's pressure falls
     pub low_watermark: f64,
     /// batch service time (seconds) above which pressure also rises;
-    /// 0.0 disables the latency signal
+    /// 0.0 disables the service-time signal
     pub service_target_s: f64,
+    /// per-tier p99 request-latency SLO target in seconds (0.0 = that
+    /// tier has no latency SLO), indexed by [`Tier::idx`]; defaults to
+    /// the [`Tier::slo_target`] ladder
+    pub slo_targets: [f64; NUM_TIERS],
     /// enable anytime reduction: stop the prefix sum early when the
     /// marginal term's contribution falls below the batch tolerance,
     /// and carry each tier's §5.3 scale floor
@@ -57,6 +83,7 @@ impl QosConfig {
             high_watermark: 0.75,
             low_watermark: 0.25,
             service_target_s: 0.0,
+            slo_targets: Tier::slo_targets(),
             anytime: false,
         }
     }
@@ -69,6 +96,75 @@ impl QosConfig {
     pub fn with_service_target(mut self, target_s: f64) -> QosConfig {
         self.service_target_s = target_s;
         self
+    }
+
+    /// Override one tier's p99 SLO target (seconds; 0.0 disables the
+    /// latency SLO for that tier).
+    pub fn with_slo_target(mut self, tier: Tier, p99_s: f64) -> QosConfig {
+        self.slo_targets[tier.idx()] = p99_s;
+        self
+    }
+}
+
+/// Ring capacity of each tier's latency digest: bounds both memory and
+/// the cost of one p99 read. A decision window rarely exceeds one
+/// batch's worth of replies, so 256 slots lose nothing in practice.
+const DIGEST_CAP: usize = 256;
+
+/// Lock-free ring of recent request latencies for one tier (f64 bits
+/// in atomics). Writers `fetch_add` a cursor and store into the slot;
+/// the reader snapshots the filled prefix. The DECISION path is
+/// single-writer single-consumer (the batcher's forming thread records
+/// and consumes), so its windows are exact; a concurrent observability
+/// read ([`TermController::tier_p99`] from a snapshot) may transiently
+/// see up to one claimed-but-unwritten slot (reading the previous
+/// window's value or the 0.0 init), and a reset racing a writer can
+/// strand one sample — bounded staleness, harmless for a load signal.
+#[derive(Debug)]
+struct LatencyDigest {
+    slots: [AtomicU64; DIGEST_CAP],
+    /// samples pushed since the last window reset (ring-wraps over
+    /// `slots`; reads clamp to the capacity)
+    pushed: AtomicUsize,
+}
+
+impl LatencyDigest {
+    fn new() -> LatencyDigest {
+        LatencyDigest {
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+            pushed: AtomicUsize::new(0),
+        }
+    }
+
+    fn record(&self, latency_s: f64) {
+        let i = self.pushed.fetch_add(1, Ordering::Relaxed) % DIGEST_CAP;
+        self.slots[i].store(latency_s.to_bits(), Ordering::Relaxed);
+    }
+
+    fn p99(&self) -> Option<f64> {
+        let n = self.pushed.load(Ordering::Relaxed).min(DIGEST_CAP);
+        if n == 0 {
+            return None;
+        }
+        let xs: Vec<f64> =
+            (0..n).map(|i| f64::from_bits(self.slots[i].load(Ordering::Relaxed))).collect();
+        Some(percentile(&xs, 99.0))
+    }
+
+    fn reset(&self) {
+        self.pushed.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The EWMA blend step. NaN bits are the "no sample yet" sentinel —
+/// a genuine ~0 s service sample is a real initialization, not "unset"
+/// (the previous `prev == 0.0` sentinel let one fast batch reset the
+/// whole filter).
+fn blend_ewma(prev: f64, sample: f64) -> f64 {
+    if prev.is_nan() {
+        sample
+    } else {
+        0.8 * prev + 0.2 * sample
     }
 }
 
@@ -91,16 +187,17 @@ struct PlanCalibration {
     /// one-term step)
     pressure_step: [usize; NUM_TIERS],
     /// memoized plans keyed by (tier idx, effective ceiling): the
-    /// greedy allocation is deterministic and pressure takes at most
-    /// `total_terms` discrete values, so this stays tiny and the
-    /// per-batch hot path is a hash lookup, not a replan
+    /// greedy allocation is deterministic and each tier's pressure
+    /// takes at most its capped range of discrete values, so this
+    /// stays tiny and the per-batch hot path is a hash lookup
     plan_cache: std::collections::HashMap<(usize, usize), BudgetPlan>,
 }
 
 /// Point-in-time view of the controller (observability/reporting).
 #[derive(Clone, Debug)]
 pub struct QosSnapshot {
-    pub pressure: usize,
+    /// per-tier pressure level, indexed by [`Tier::idx`]
+    pub pressures: [usize; NUM_TIERS],
     /// effective budget per tier, indexed by [`Tier::idx`]
     pub budgets: [usize; NUM_TIERS],
     /// effective layer-granularity budget per tier (replication mode,
@@ -109,6 +206,12 @@ pub struct QosSnapshot {
     /// per-tier planned grid ceiling (`None` before per-layer
     /// calibration and for untruncated tiers)
     pub plan_ceilings: [Option<usize>; NUM_TIERS],
+    /// per-tier windowed request-latency p99 (`None` = empty window)
+    pub tier_p99: [Option<f64>; NUM_TIERS],
+    /// per-tier degrade/restore step counts
+    pub tier_degrade_events: [u64; NUM_TIERS],
+    pub tier_restore_events: [u64; NUM_TIERS],
+    /// totals across tiers
     pub degrade_events: u64,
     pub restore_events: u64,
 }
@@ -127,18 +230,27 @@ pub struct TermController {
     /// calibrated base *layer* term cap per tier (replication mode's
     /// per-axis Eq. 3 grid bound; `usize::MAX` = untruncated)
     layer_base: [AtomicUsize; NUM_TIERS],
-    /// current pressure level: terms removed from non-Exact tiers
-    pressure: AtomicUsize,
-    degrade_events: AtomicU64,
-    restore_events: AtomicU64,
+    /// current pressure per tier: degradation steps applied to that
+    /// tier alone (Exact's entry is pinned at 0 by its cap)
+    pressure: [AtomicUsize; NUM_TIERS],
+    /// per-tier pressure ceiling: enough steps to take every degradable
+    /// axis (pool prefix, uniform layer budget, plan ceiling) to its
+    /// floor, and no more — deeper pressure would only delay recovery
+    max_pressure: [AtomicUsize; NUM_TIERS],
+    degrade_events: [AtomicU64; NUM_TIERS],
+    restore_events: [AtomicU64; NUM_TIERS],
     /// observed max-residual per term count (monitor copy), for
     /// estimated-precision-loss reporting; empty before calibration
     convergence: Mutex<Vec<f32>>,
     /// per-layer sensitivity calibration; `None` until
     /// [`TermController::calibrate_layers`] runs
     plan_cal: Mutex<Option<PlanCalibration>>,
-    /// EWMA of batch service time (seconds, stored as f64 bits)
-    service_ewma: AtomicU64,
+    /// per-tier EWMA of batch service time (seconds as f64 bits; NaN
+    /// bits = no sample yet), updated by CAS so concurrent observers
+    /// never drop each other's samples
+    service_ewma: [AtomicU64; NUM_TIERS],
+    /// per-tier windowed latency digests feeding the p99-vs-SLO signal
+    digests: [LatencyDigest; NUM_TIERS],
 }
 
 impl TermController {
@@ -150,17 +262,21 @@ impl TermController {
         });
         let layer_base =
             std::array::from_fn(|i| AtomicUsize::new(Tier::ALL[i].default_layer_terms()));
-        TermController {
+        let c = TermController {
             cfg,
             base,
             layer_base,
-            pressure: AtomicUsize::new(0),
-            degrade_events: AtomicU64::new(0),
-            restore_events: AtomicU64::new(0),
+            pressure: std::array::from_fn(|_| AtomicUsize::new(0)),
+            max_pressure: std::array::from_fn(|_| AtomicUsize::new(0)),
+            degrade_events: std::array::from_fn(|_| AtomicU64::new(0)),
+            restore_events: std::array::from_fn(|_| AtomicU64::new(0)),
             convergence: Mutex::new(Vec::new()),
             plan_cal: Mutex::new(None),
-            service_ewma: AtomicU64::new(0f64.to_bits()),
-        }
+            service_ewma: std::array::from_fn(|_| AtomicU64::new(f64::NAN.to_bits())),
+            digests: std::array::from_fn(|_| LatencyDigest::new()),
+        };
+        c.refresh_max_pressure();
+        c
     }
 
     pub fn config(&self) -> &QosConfig {
@@ -188,6 +304,8 @@ impl TermController {
         }
         let mut conv = self.convergence.lock().unwrap();
         *conv = monitor.max_diff().to_vec();
+        drop(conv);
+        self.refresh_max_pressure();
     }
 
     /// Attach per-layer sensitivity calibration: each tier's plan
@@ -243,15 +361,61 @@ impl TermController {
             pressure_step,
             plan_cache: std::collections::HashMap::new(),
         });
+        drop(cal);
+        self.refresh_max_pressure();
     }
 
-    /// Effective term budget for `tier` right now: base minus pressure,
-    /// clamped to the tier floor. Exact is immune by construction
-    /// (`floor_terms(total) == total`).
+    /// Recompute each tier's pressure ceiling from the current
+    /// calibration: exactly enough steps to take the pool-prefix
+    /// budget, the uniform layer budget, and (when armed) the plan
+    /// ceiling to their floors. Capping here keeps recovery prompt —
+    /// every drain decision removes one step, so a flood can never
+    /// bank more pressure than its tier's budgets can express. (The
+    /// pre-PR-5 cap of `total_terms - 1` also pinned replication pools
+    /// of one worker at zero pressure, so plan ceilings could never
+    /// degrade end-to-end.)
+    fn refresh_max_pressure(&self) {
+        let cal = self.plan_cal.lock().unwrap();
+        for tier in Tier::ALL {
+            let i = tier.idx();
+            if tier == Tier::Exact {
+                self.max_pressure[i].store(0, Ordering::Relaxed);
+                continue;
+            }
+            let base = self.base[i].load(Ordering::Relaxed);
+            let floor = tier.floor_terms(self.cfg.total_terms).min(base);
+            let mut cap = base.saturating_sub(floor);
+            let lb = self.layer_base[i].load(Ordering::Relaxed);
+            if lb != usize::MAX {
+                cap = cap.max(lb.saturating_sub(tier.layer_floor_terms().min(lb)));
+            }
+            if let Some(c) = cal.as_ref() {
+                let (b, f) = (c.base_ceiling[i], c.floor_ceiling[i]);
+                if b != usize::MAX {
+                    cap = cap.max(b.saturating_sub(f).div_ceil(c.pressure_step[i].max(1)));
+                }
+            }
+            self.max_pressure[i].store(cap, Ordering::Relaxed);
+            // recalibration can shrink a tier's span below its banked
+            // pressure; clamp so recovery stays within the new span
+            // (budgets already floor-clamp, this keeps the drain short),
+            // and book the clamp as restores so the degrade/restore
+            // accounting observability readers rely on stays balanced
+            let clamped = self.pressure[i]
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| (p > cap).then_some(cap));
+            if let Ok(p) = clamped {
+                self.restore_events[i].fetch_add((p - cap) as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Effective term budget for `tier` right now: base minus the
+    /// tier's own pressure, clamped to the tier floor. Exact is immune
+    /// by construction (`floor_terms(total) == total`).
     pub fn budget_for(&self, tier: Tier) -> usize {
         let base = self.base[tier.idx()].load(Ordering::Relaxed);
         let floor = tier.floor_terms(self.cfg.total_terms).min(base);
-        let p = self.pressure.load(Ordering::Relaxed);
+        let p = self.pressure[tier.idx()].load(Ordering::Relaxed);
         base.saturating_sub(p).clamp(floor.max(1), self.cfg.total_terms)
     }
 
@@ -260,15 +424,16 @@ impl TermController {
     /// and the uniform fallback under [`TermController::plan_for`].
     /// The weight axis keeps the calibrated cap (weight planes are
     /// pre-expanded; truncating them saves GEMMs, not expansion work);
-    /// the activation axis additionally degrades with pressure, bounded
-    /// by [`Tier::layer_floor_terms`]. Exact is immune by construction.
+    /// the activation axis additionally degrades with the tier's own
+    /// pressure, bounded by [`Tier::layer_floor_terms`]. Exact is
+    /// immune by construction.
     pub fn layer_budget_for(&self, tier: Tier) -> TermBudget {
         let base = self.layer_base[tier.idx()].load(Ordering::Relaxed);
         if base == usize::MAX {
             return TermBudget::full();
         }
         let floor = tier.layer_floor_terms().min(base).max(1);
-        let p = self.pressure.load(Ordering::Relaxed);
+        let p = self.pressure[tier.idx()].load(Ordering::Relaxed);
         TermBudget::new(base, base.saturating_sub(p).max(floor))
     }
 
@@ -278,13 +443,13 @@ impl TermController {
     /// * Exact: always [`BudgetPlan::full`] (immune to calibration and
     ///   pressure alike).
     /// * With per-layer calibration: the tier's base grid ceiling,
-    ///   shrunk by one uniform activation-term-equivalent per pressure
-    ///   step (never below the tier's floor ceiling), allocated across
-    ///   layers by the greedy sensitivity planner — pressure
-    ///   degradation shrinks the *total*, the planner decides *where*.
-    ///   Plans are memoized per (tier, effective ceiling), so the
-    ///   per-batch cost is a hash lookup once each pressure level has
-    ///   been seen.
+    ///   shrunk by one uniform activation-term-equivalent per step of
+    ///   the tier's own pressure (never below the tier's floor
+    ///   ceiling), allocated across layers by the greedy sensitivity
+    ///   planner — pressure degradation shrinks the *total*, the
+    ///   planner decides *where*. Plans are memoized per (tier,
+    ///   effective ceiling), so the per-batch cost is a hash lookup
+    ///   once each of the tier's pressure levels has been seen.
     /// * Without per-layer calibration: the uniform plan over
     ///   [`TermController::layer_budget_for`] (PR 3 behavior).
     pub fn plan_for(&self, tier: Tier) -> BudgetPlan {
@@ -308,7 +473,7 @@ impl TermController {
         if base == usize::MAX {
             return BudgetPlan::full();
         }
-        let p = self.pressure.load(Ordering::Relaxed);
+        let p = self.pressure[i].load(Ordering::Relaxed);
         let floor = c.floor_ceiling[i].min(base);
         let total = base.saturating_sub(p.saturating_mul(c.pressure_step[i])).max(floor);
         if let Some(plan) = c.plan_cache.get(&(i, total)) {
@@ -331,66 +496,150 @@ impl TermController {
         }
     }
 
-    /// Feed one formed batch's signals and take at most ONE pressure
-    /// step — the one-step-per-batch contract (the PR 1 scheduler fed
-    /// queue depth and service time separately, so pressure could ramp
-    /// two steps per batch). `occupancy` is the hottest per-tier queue
-    /// occupancy at formation (see
-    /// [`FormedBatch::max_occupancy`](crate::coordinator::batcher::FormedBatch::max_occupancy));
-    /// `service_s` is the batch's service time, folded into the EWMA.
-    /// A hot signal on either axis raises pressure; lowering requires
-    /// the queue cold AND (when a target is set) the EWMA cold too.
-    ///
-    /// Hottest-tier semantics are deliberate: a single saturated tier
-    /// queue holds pressure up until it drains, because degrading
-    /// non-Exact budgets is exactly the lever that raises throughput
-    /// and drains it. A tier saturated at steady state means offered
-    /// load exceeds capacity — degraded precision (never below tier
-    /// floors) is the intended trade, per-tier admission control caps
-    /// the damage to that tier's queue, and pressure falls as soon as
-    /// the hot queue empties.
-    pub fn observe_batch(&self, occupancy: f64, service_s: f64) {
-        let prev = f64::from_bits(self.service_ewma.load(Ordering::Relaxed));
-        let ewma = if prev == 0.0 { service_s } else { 0.8 * prev + 0.2 * service_s };
-        self.service_ewma.store(ewma.to_bits(), Ordering::Relaxed);
-        let target = self.cfg.service_target_s;
-        let svc_hot = target > 0.0 && ewma > target;
-        let svc_cold = target <= 0.0 || ewma < 0.5 * target;
-        if occupancy > self.cfg.high_watermark || svc_hot {
-            self.raise_pressure();
-        } else if occupancy < self.cfg.low_watermark && svc_cold {
-            self.lower_pressure();
+    /// Push one completed request's latency into `tier`'s window digest
+    /// — call next to
+    /// [`Metrics::record_completed_tier`](crate::coordinator::Metrics::record_completed_tier)
+    /// so the SLO loop and the metrics see the same latencies. A tier
+    /// with no latency SLO never reads its window, so its writes are
+    /// elided entirely (no per-reply digest traffic for `Exact` or for
+    /// occupancy-only deployments).
+    pub fn record_latency(&self, tier: Tier, latency_s: f64) {
+        if self.cfg.slo_targets[tier.idx()] > 0.0 {
+            self.digests[tier.idx()].record(latency_s);
         }
     }
 
-    fn raise_pressure(&self) {
-        // cap: the deepest cut still leaves every tier at its floor
-        let max_p = self.cfg.total_terms.saturating_sub(1);
-        let p = self.pressure.load(Ordering::Relaxed);
+    /// Windowed p99 of `tier`'s request latencies since the tier's last
+    /// consumed window (`None` when the window is empty). Peek only —
+    /// decisions use [`TermController::take_tier_p99`].
+    pub fn tier_p99(&self, tier: Tier) -> Option<f64> {
+        self.digests[tier.idx()].p99()
+    }
+
+    /// [`TermController::tier_p99`] plus a window reset: the
+    /// per-decision read. Consuming the window makes each
+    /// [`TermController::observe_batch`] decision see only the
+    /// latencies completed since the tier's previous decision, so a
+    /// drained tier's next light batch immediately reads cold instead
+    /// of dragging flood-era samples along.
+    pub fn take_tier_p99(&self, tier: Tier) -> Option<f64> {
+        let d = &self.digests[tier.idx()];
+        // a tier with no latency SLO never reads its window: skip the
+        // per-batch quantile sort on the hot path, just roll the
+        // window forward (observe_batch abstains on None either way)
+        let armed = self.cfg.slo_targets[tier.idx()] > 0.0;
+        let p = if armed { d.p99() } else { None };
+        d.reset();
+        p
+    }
+
+    /// Per-tier batch service-time EWMA (seconds); `None` before the
+    /// tier's first successful batch.
+    pub fn tier_service_ewma(&self, tier: Tier) -> Option<f64> {
+        let v = f64::from_bits(self.service_ewma[tier.idx()].load(Ordering::Relaxed));
+        if v.is_nan() { None } else { Some(v) }
+    }
+
+    /// Feed one formed batch's signals and take at most ONE pressure
+    /// step **for that batch's tier** — the one-step-per-batch contract
+    /// per tier. `occupancy` is the batch's own tier queue occupancy at
+    /// formation
+    /// ([`FormedBatch::tier_occupancy`](crate::coordinator::batcher::FormedBatch::tier_occupancy)
+    /// — NOT the hottest queue across tiers, which is exactly the
+    /// cross-tier coupling this loop exists to prevent); `service_s` is
+    /// the batch's service time, folded into the tier's EWMA by CAS
+    /// (`None` for failed batches: they relieve the queue signal but
+    /// must not pollute the service estimate); `tier_p99` is the tier's
+    /// windowed request-latency p99 (from
+    /// [`TermController::take_tier_p99`]; `None` abstains).
+    ///
+    /// A hot signal on any axis — own queue over the high watermark,
+    /// service EWMA over the global target, own p99 over the tier's
+    /// SLO — raises the tier's pressure; lowering requires the tier's
+    /// queue cold AND its service EWMA cold (when a target is set) AND
+    /// its p99 under half its SLO (when one is set and the window is
+    /// non-empty).
+    ///
+    /// Own-tier saturation semantics are deliberate: a tier saturated
+    /// at steady state means its offered load exceeds capacity —
+    /// degraded precision (never below the tier's floor) is the
+    /// intended trade for *that tier*, per-tier admission control caps
+    /// the damage to that tier's queue, and its pressure falls as soon
+    /// as its own queue empties and its own latency cools.
+    pub fn observe_batch(
+        &self,
+        tier: Tier,
+        occupancy: f64,
+        service_s: Option<f64>,
+        tier_p99: Option<f64>,
+    ) {
+        let i = tier.idx();
+        let ewma = match service_s {
+            Some(s) => {
+                // CAS blend: the load→blend→store sequence this
+                // replaces dropped concurrent updates
+                let prev_bits = self.service_ewma[i]
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                        Some(blend_ewma(f64::from_bits(bits), s).to_bits())
+                    })
+                    .unwrap_or_else(|bits| bits);
+                blend_ewma(f64::from_bits(prev_bits), s)
+            }
+            None => f64::from_bits(self.service_ewma[i].load(Ordering::Relaxed)),
+        };
+        let target = self.cfg.service_target_s;
+        let svc_hot = target > 0.0 && ewma > target;
+        // an uninitialized EWMA (NaN) is cold: no evidence of heat
+        let svc_cold = target <= 0.0 || ewma.is_nan() || ewma < 0.5 * target;
+        let slo = self.cfg.slo_targets[i];
+        let (p99_hot, p99_cold) = match tier_p99 {
+            Some(p) if slo > 0.0 => (p > slo, p < 0.5 * slo),
+            // no SLO for this tier, or an empty window: the latency
+            // axis abstains — neither raises nor blocks restoration
+            _ => (false, true),
+        };
+        if occupancy > self.cfg.high_watermark || svc_hot || p99_hot {
+            self.raise_pressure(tier);
+        } else if occupancy < self.cfg.low_watermark && svc_cold && p99_cold {
+            self.lower_pressure(tier);
+        }
+    }
+
+    fn raise_pressure(&self, tier: Tier) {
+        let i = tier.idx();
+        let max_p = self.max_pressure[i].load(Ordering::Relaxed);
+        let p = self.pressure[i].load(Ordering::Relaxed);
         if p < max_p
-            && self
-                .pressure
+            && self.pressure[i]
                 .compare_exchange(p, p + 1, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
         {
-            self.degrade_events.fetch_add(1, Ordering::Relaxed);
+            self.degrade_events[i].fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    fn lower_pressure(&self) {
-        let p = self.pressure.load(Ordering::Relaxed);
+    fn lower_pressure(&self, tier: Tier) {
+        let i = tier.idx();
+        let p = self.pressure[i].load(Ordering::Relaxed);
         if p > 0
-            && self
-                .pressure
+            && self.pressure[i]
                 .compare_exchange(p, p - 1, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
         {
-            self.restore_events.fetch_add(1, Ordering::Relaxed);
+            self.restore_events[i].fetch_add(1, Ordering::Relaxed);
         }
     }
 
+    /// One tier's current pressure (degradation steps applied to that
+    /// tier alone).
+    pub fn tier_pressure(&self, tier: Tier) -> usize {
+        self.pressure[tier.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Hottest per-tier pressure — aggregate observability; control is
+    /// per tier (see [`TermController::tier_pressure`]).
     pub fn pressure(&self) -> usize {
-        self.pressure.load(Ordering::Relaxed)
+        self.pressure.iter().map(|p| p.load(Ordering::Relaxed)).max().unwrap_or(0)
     }
 
     /// Estimated max-residual at `terms` from the calibration data;
@@ -422,13 +671,20 @@ impl TermController {
     }
 
     pub fn snapshot(&self) -> QosSnapshot {
+        let tier_degrade_events: [u64; NUM_TIERS] =
+            std::array::from_fn(|i| self.degrade_events[i].load(Ordering::Relaxed));
+        let tier_restore_events: [u64; NUM_TIERS] =
+            std::array::from_fn(|i| self.restore_events[i].load(Ordering::Relaxed));
         QosSnapshot {
-            pressure: self.pressure(),
+            pressures: std::array::from_fn(|i| self.tier_pressure(Tier::ALL[i])),
             budgets: std::array::from_fn(|i| self.budget_for(Tier::ALL[i])),
             layer_budgets: std::array::from_fn(|i| self.layer_budget_for(Tier::ALL[i])),
             plan_ceilings: std::array::from_fn(|i| self.plan_for(Tier::ALL[i]).total_grid_terms()),
-            degrade_events: self.degrade_events.load(Ordering::Relaxed),
-            restore_events: self.restore_events.load(Ordering::Relaxed),
+            tier_p99: std::array::from_fn(|i| self.tier_p99(Tier::ALL[i])),
+            degrade_events: tier_degrade_events.iter().sum(),
+            restore_events: tier_restore_events.iter().sum(),
+            tier_degrade_events,
+            tier_restore_events,
         }
     }
 }
@@ -438,6 +694,7 @@ mod tests {
     use super::*;
     use crate::tensor::{Rng, Tensor};
     use crate::xint::{BitSpec, ExpandConfig};
+    use std::sync::Arc;
 
     #[test]
     fn uncalibrated_budgets_follow_tier_defaults() {
@@ -475,18 +732,25 @@ mod tests {
         let be = c.layer_budget_for(Tier::BestEffort);
         assert_eq!((be.w_terms, be.a_terms), (1, 1));
         let bal = c.layer_budget_for(Tier::Balanced);
+        let thr = c.layer_budget_for(Tier::Throughput);
         assert!(bal.a_terms >= be.a_terms);
-        // pressure degrades the activation axis down to the layer floor
+        // Balanced's own pressure degrades ITS activation axis down to
+        // its layer floor — and no other tier's
         for _ in 0..10 {
-            c.observe_batch(0.95, 0.0);
+            c.observe_batch(Tier::Balanced, 0.95, None, None);
         }
         assert_eq!(c.layer_budget_for(Tier::Exact), TermBudget::full(), "exact immune");
         let bal_hot = c.layer_budget_for(Tier::Balanced);
         assert_eq!(bal_hot.a_terms, Tier::Balanced.layer_floor_terms());
         assert_eq!(bal_hot.w_terms, bal.w_terms, "weight axis is pressure-free");
+        assert_eq!(
+            c.layer_budget_for(Tier::Throughput),
+            thr,
+            "a Balanced flood must not move Throughput's layer budget"
+        );
         // drain restores
         for _ in 0..20 {
-            c.observe_batch(0.0, 0.0);
+            c.observe_batch(Tier::Balanced, 0.0, None, None);
         }
         assert_eq!(c.layer_budget_for(Tier::Balanced), bal);
         // snapshot carries the layer ladder
@@ -586,16 +850,22 @@ mod tests {
         let c = TermController::new(QosConfig::new(8));
         c.calibrate_layers(test_profiles());
         let cold = c.plan_for(Tier::Balanced).total_grid_terms().unwrap();
+        let thr_cold = c.plan_for(Tier::Throughput).total_grid_terms().unwrap();
         for _ in 0..3 {
-            c.observe_batch(0.95, 0.0);
+            c.observe_batch(Tier::Balanced, 0.95, None, None);
         }
         let hot = c.plan_for(Tier::Balanced).total_grid_terms().unwrap();
         assert!(hot < cold, "pressure must shrink the ceiling: {hot} !< {cold}");
         assert_eq!(c.plan_for(Tier::Exact), BudgetPlan::full(), "exact immune");
+        assert_eq!(
+            c.plan_for(Tier::Throughput).total_grid_terms(),
+            Some(thr_cold),
+            "a Balanced flood must not shrink Throughput's ceiling"
+        );
         // the floor holds under arbitrary pressure: every plannable
         // layer still gets at least the tier's layer floor
         for _ in 0..100 {
-            c.observe_batch(1.0, 0.0);
+            c.observe_batch(Tier::Balanced, 1.0, None, None);
         }
         let floored = c.plan_for(Tier::Balanced);
         let floor_ceiling =
@@ -606,9 +876,27 @@ mod tests {
         }
         // drain restores the cold ceiling
         for _ in 0..200 {
-            c.observe_batch(0.0, 0.0);
+            c.observe_batch(Tier::Balanced, 0.0, None, None);
         }
         assert_eq!(c.plan_for(Tier::Balanced).total_grid_terms(), Some(cold));
+    }
+
+    #[test]
+    fn replication_pools_of_one_can_still_ramp_pressure() {
+        // the pool-prefix cap of total_terms - 1 used to pin a
+        // single-worker replication pool at zero pressure, so plan
+        // ceilings could never degrade end-to-end; the per-tier cap
+        // now covers every degradable axis
+        let c = TermController::new(QosConfig::new(1));
+        c.calibrate_layers(test_profiles());
+        let cold = c.plan_for(Tier::Throughput).total_grid_terms().unwrap();
+        c.observe_batch(Tier::Throughput, 0.95, None, None);
+        assert_eq!(c.tier_pressure(Tier::Throughput), 1);
+        let hot = c.plan_for(Tier::Throughput).total_grid_terms().unwrap();
+        assert!(hot < cold, "{hot} !< {cold}");
+        assert_eq!(c.plan_for(Tier::Exact), BudgetPlan::full());
+        c.observe_batch(Tier::Throughput, 0.0, None, None);
+        assert_eq!(c.tier_pressure(Tier::Throughput), 0);
     }
 
     #[test]
@@ -656,81 +944,258 @@ mod tests {
     }
 
     #[test]
-    fn pressure_degrades_and_restores_non_exact_tiers() {
+    fn pressure_degrades_and_restores_only_the_observed_tier() {
         let c = TermController::new(QosConfig::new(8));
         let before = c.budget_for(Tier::Balanced);
-        // sustained overload: pressure ramps one step per batch
+        let thr_before = c.budget_for(Tier::Throughput);
+        // sustained Balanced overload: ITS pressure ramps one step per
+        // batch, saturating at the tier's own degradation span
         for _ in 0..4 {
-            c.observe_batch(0.9, 0.0);
+            c.observe_batch(Tier::Balanced, 0.9, None, None);
         }
-        assert_eq!(c.pressure(), 4);
+        assert!(c.tier_pressure(Tier::Balanced) >= 1);
         assert_eq!(c.budget_for(Tier::Exact), 8, "exact is immune");
         let degraded = c.budget_for(Tier::Balanced);
         assert!(degraded < before, "{degraded} !< {before}");
         assert!(degraded >= Tier::Balanced.floor_terms(8));
+        // the flood is confined: no other tier moved
+        assert_eq!(c.budget_for(Tier::Throughput), thr_before);
+        assert_eq!(c.tier_pressure(Tier::Throughput), 0);
+        assert_eq!(c.tier_pressure(Tier::BestEffort), 0);
         // drain: pressure falls, budget restored
         for _ in 0..8 {
-            c.observe_batch(0.0, 0.0);
+            c.observe_batch(Tier::Balanced, 0.0, None, None);
         }
-        assert_eq!(c.pressure(), 0);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0);
+        assert_eq!(c.pressure(), 0, "aggregate view agrees once every tier is cold");
         assert_eq!(c.budget_for(Tier::Balanced), before);
         let s = c.snapshot();
-        assert!(s.degrade_events >= 4 && s.restore_events >= 4);
+        let bi = Tier::Balanced.idx();
+        assert!(s.tier_degrade_events[bi] >= 1 && s.tier_restore_events[bi] >= 1);
+        assert_eq!(s.tier_degrade_events[Tier::Throughput.idx()], 0);
+        assert_eq!(s.degrade_events, s.tier_degrade_events.iter().sum::<u64>());
     }
 
     #[test]
     fn pressure_never_breaks_tier_floors() {
         let c = TermController::new(QosConfig::new(4));
-        for _ in 0..100 {
-            c.observe_batch(1.0, 0.0);
+        for tier in Tier::ALL {
+            for _ in 0..100 {
+                c.observe_batch(tier, 1.0, None, None);
+            }
         }
         assert_eq!(c.budget_for(Tier::Exact), 4);
         assert_eq!(c.budget_for(Tier::Balanced), Tier::Balanced.floor_terms(4));
         assert_eq!(c.budget_for(Tier::Throughput), 1);
         assert_eq!(c.budget_for(Tier::BestEffort), 1);
+        assert_eq!(c.tier_pressure(Tier::Exact), 0, "exact never banks pressure");
     }
 
     #[test]
-    fn service_time_signal_raises_pressure() {
+    fn service_time_signal_raises_pressure_per_tier() {
         let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
         for _ in 0..3 {
-            c.observe_batch(0.0, 0.050);
+            c.observe_batch(Tier::Balanced, 0.0, Some(0.050), None);
         }
-        assert!(c.pressure() > 0);
+        assert!(c.tier_pressure(Tier::Balanced) > 0);
+        assert_eq!(c.tier_pressure(Tier::Throughput), 0, "EWMAs are per tier");
         for _ in 0..20 {
-            c.observe_batch(0.0, 0.001);
+            c.observe_batch(Tier::Balanced, 0.0, Some(0.001), None);
         }
-        assert_eq!(c.pressure(), 0);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0);
     }
 
     #[test]
-    fn one_step_per_batch_even_with_both_signals_hot() {
-        // queue hot AND service hot in one observation must move ONE
-        // step, not two (the PR 1 double-stepping bug)
+    fn one_step_per_batch_even_with_all_signals_hot() {
+        // queue hot AND service hot AND p99 hot in one observation must
+        // move ONE step, not three (the PR 1 double-stepping bug's
+        // per-tier descendant)
         let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
-        c.observe_batch(0.95, 0.100);
-        assert_eq!(c.pressure(), 1, "both-hot batch must step pressure exactly once");
+        c.observe_batch(Tier::Balanced, 0.95, Some(0.100), Some(10.0));
+        assert_eq!(c.tier_pressure(Tier::Balanced), 1, "all-hot batch steps exactly once");
         // cold queue but hot service EWMA: still one step up, not a
         // raise+lower wash
-        c.observe_batch(0.0, 0.100);
-        assert_eq!(c.pressure(), 2);
+        c.observe_batch(Tier::Balanced, 0.0, Some(0.100), None);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 2);
     }
 
     #[test]
-    fn lowering_requires_both_axes_cold_when_target_set() {
+    fn lowering_requires_every_axis_cold_and_cap_bounds_the_ramp() {
         let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
-        for _ in 0..3 {
-            c.observe_batch(0.9, 0.050);
+        for _ in 0..5 {
+            c.observe_batch(Tier::Balanced, 0.9, Some(0.050), None);
         }
-        assert_eq!(c.pressure(), 3);
+        // Balanced (uncalibrated, total 8) can only express 2 steps of
+        // degradation (base 4 → floor 2): pressure saturates there so
+        // recovery is never more than 2 cold decisions away
+        let p = c.tier_pressure(Tier::Balanced);
+        assert_eq!(p, 2, "pressure must cap at the tier's degradation span");
+        let s = c.snapshot();
+        assert_eq!(s.tier_degrade_events[Tier::Balanced.idx()], 2, "capped steps are not events");
         // queue drained but the service EWMA is still hot: hold, don't
         // restore precision into an overloaded pool
-        c.observe_batch(0.0, 0.050);
-        assert_eq!(c.pressure(), 4, "hot service keeps raising even at empty queue");
+        c.observe_batch(Tier::Balanced, 0.0, Some(0.050), None);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 2);
+        // a hot windowed p99 alone also blocks restoration
+        c.observe_batch(Tier::Balanced, 0.0, Some(0.0001), Some(10.0));
+        assert!(c.tier_pressure(Tier::Balanced) >= 2);
         for _ in 0..40 {
-            c.observe_batch(0.0, 0.0001);
+            c.observe_batch(Tier::Balanced, 0.0, Some(0.0001), Some(0.0001));
         }
-        assert_eq!(c.pressure(), 0);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0);
+    }
+
+    #[test]
+    fn slo_pressure_is_per_tier_and_hysteretic() {
+        let c = TermController::new(QosConfig::new(8).with_slo_target(Tier::Throughput, 0.010));
+        // own-tier p99 over its own target → one step up
+        c.observe_batch(Tier::Throughput, 0.0, None, Some(0.050));
+        assert_eq!(c.tier_pressure(Tier::Throughput), 1);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0, "the SLO breach is confined");
+        // inside the hysteresis band (half target .. target): hold
+        c.observe_batch(Tier::Throughput, 0.0, None, Some(0.007));
+        assert_eq!(c.tier_pressure(Tier::Throughput), 1);
+        // an empty window abstains — a cold queue alone restores
+        c.observe_batch(Tier::Throughput, 0.0, None, None);
+        assert_eq!(c.tier_pressure(Tier::Throughput), 0);
+        // below half target restores too
+        c.observe_batch(Tier::Throughput, 0.0, None, Some(0.050));
+        c.observe_batch(Tier::Throughput, 0.0, None, Some(0.004));
+        assert_eq!(c.tier_pressure(Tier::Throughput), 0);
+        // a tier with no SLO (Exact's default) never latency-steps
+        c.observe_batch(Tier::Exact, 0.0, None, Some(10.0));
+        assert_eq!(c.tier_pressure(Tier::Exact), 0);
+    }
+
+    #[test]
+    fn latency_digest_windows_p99_per_tier() {
+        let c = TermController::new(QosConfig::new(4));
+        assert_eq!(c.tier_p99(Tier::Balanced), None);
+        for i in 1..=100u32 {
+            c.record_latency(Tier::Balanced, f64::from(i) * 1e-3);
+        }
+        let p = c.tier_p99(Tier::Balanced).unwrap();
+        assert!((p - 0.09901).abs() < 1e-6, "{p}");
+        // other tiers' windows are independent
+        assert_eq!(c.tier_p99(Tier::Throughput), None);
+        // the take-variant consumes the window (one window per decision)
+        assert!(c.take_tier_p99(Tier::Balanced).is_some());
+        assert_eq!(c.tier_p99(Tier::Balanced), None);
+        // ring wrap: only the freshest DIGEST_CAP samples define the
+        // quantile once the window overflows
+        for _ in 0..500 {
+            c.record_latency(Tier::Balanced, 1.0);
+        }
+        for _ in 0..256 {
+            c.record_latency(Tier::Balanced, 0.001);
+        }
+        assert!(c.take_tier_p99(Tier::Balanced).unwrap() < 0.01);
+    }
+
+    #[test]
+    fn service_ewma_blends_per_tier_with_nan_init_sentinel() {
+        let c = TermController::new(QosConfig::new(8).with_service_target(0.010));
+        assert_eq!(c.tier_service_ewma(Tier::Balanced), None);
+        // a genuine ~0 s first sample INITIALIZES the filter (the old
+        // `prev == 0.0` sentinel treated it as "unset", so the next
+        // sample replaced the filter instead of blending in)
+        c.observe_batch(Tier::Balanced, 0.5, Some(0.0), None);
+        assert_eq!(c.tier_service_ewma(Tier::Balanced), Some(0.0));
+        c.observe_batch(Tier::Balanced, 0.5, Some(0.012), None);
+        let e = c.tier_service_ewma(Tier::Balanced).unwrap();
+        assert!((e - 0.0024).abs() < 1e-12, "blend, not reset: {e}");
+        // the blended EWMA sits under the target → no pressure; the
+        // reset bug would have jumped to 0.012 > target and stepped
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0);
+        // EWMAs are per tier
+        assert_eq!(c.tier_service_ewma(Tier::Throughput), None);
+        // contrast: an uninitialized filter adopts the first sample whole
+        let c2 = TermController::new(QosConfig::new(8).with_service_target(0.010));
+        c2.observe_batch(Tier::Balanced, 0.5, Some(0.012), None);
+        assert_eq!(c2.tier_service_ewma(Tier::Balanced), Some(0.012));
+        assert_eq!(c2.tier_pressure(Tier::Balanced), 1);
+    }
+
+    #[test]
+    fn recalibration_clamps_banked_pressure_to_the_new_span() {
+        let c = TermController::new(QosConfig::new(8));
+        for _ in 0..5 {
+            c.observe_batch(Tier::Balanced, 0.95, None, None);
+        }
+        assert_eq!(c.tier_pressure(Tier::Balanced), 2, "uncalibrated span is 2");
+        // a stream that converges at one term collapses every tier's
+        // degradation span to zero — banked pressure must not outlive
+        // the span it was drawn against, or recovery takes longer than
+        // the documented <= span cold decisions
+        let mut mon = ExpansionMonitor::new();
+        let mut rng = Rng::seed(77);
+        let cfg = ExpandConfig::symmetric(BitSpec::int(4), 8);
+        mon.observe(&Tensor::randn(&[8, 8], 1e-7, &mut rng), &cfg).unwrap();
+        c.calibrate(&mon);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0, "pressure clamped to the new span");
+        assert_eq!(c.budget_for(Tier::Balanced), 1, "calibrated base applies immediately");
+        // the clamp is booked as restores: degrade - restore == pressure
+        let s = c.snapshot();
+        let bi = Tier::Balanced.idx();
+        assert_eq!(s.tier_degrade_events[bi], s.tier_restore_events[bi]);
+    }
+
+    #[test]
+    fn failed_batch_signals_relieve_but_never_heat() {
+        // any real service sample would trip this hair-trigger target
+        let c = TermController::new(QosConfig::new(8).with_service_target(1e-12));
+        // a failed batch (service None) at a hot queue still raises —
+        // occupancy is a real signal regardless of outcome
+        c.observe_batch(Tier::Balanced, 0.95, None, None);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 1);
+        assert_eq!(c.tier_service_ewma(Tier::Balanced), None, "failures stay out of the EWMA");
+        // and a failed batch at a cold queue still relieves
+        c.observe_batch(Tier::Balanced, 0.0, None, None);
+        assert_eq!(c.tier_pressure(Tier::Balanced), 0);
+    }
+
+    #[test]
+    fn concurrent_observations_keep_pressure_accounting_exact() {
+        // the load→blend→store EWMA dropped concurrent updates; the CAS
+        // rewrite folds every sample, and degrade/restore events are
+        // counted only on successful pressure CASes, so the invariant
+        // degrade - restore == pressure holds under any interleaving
+        let c = Arc::new(TermController::new(QosConfig::new(8).with_service_target(0.5)));
+        let hot: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        c.observe_batch(Tier::Balanced, 1.0, Some(1.0), None);
+                    }
+                })
+            })
+            .collect();
+        for h in hot {
+            h.join().unwrap();
+        }
+        let i = Tier::Balanced.idx();
+        // identical samples: the blend's fixed point is the sample
+        assert_eq!(c.tier_service_ewma(Tier::Balanced), Some(1.0));
+        let s = c.snapshot();
+        assert!(s.pressures[i] >= 1);
+        assert_eq!(s.tier_degrade_events[i] - s.tier_restore_events[i], s.pressures[i] as u64);
+        let cold: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        c.observe_batch(Tier::Balanced, 0.0, Some(0.0), None);
+                    }
+                })
+            })
+            .collect();
+        for h in cold {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.pressures[i], 0);
+        assert_eq!(s.tier_degrade_events[i], s.tier_restore_events[i]);
     }
 
     #[test]

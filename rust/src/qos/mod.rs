@@ -11,14 +11,22 @@
 //! * [`tier`] — the request-facing [`Tier`] ladder (`Exact` /
 //!   `Balanced` / `Throughput` / `BestEffort`), carried through
 //!   [`coordinator::Request`](crate::coordinator::Request) and the TCP
-//!   protocol's tier field.
+//!   protocol's tier field, each rung carrying both a precision
+//!   tolerance and a p99 latency SLO target ([`Tier::slo_target`]).
 //! * [`controller`] — the [`TermController`]: calibrates per-tier term
 //!   budgets from [`ExpansionMonitor`](crate::xint::ExpansionMonitor)
 //!   convergence data and dynamically lowers budgets under pressure,
-//!   taking exactly one step per formed batch
-//!   ([`TermController::observe_batch`]) from the hottest per-tier
-//!   queue occupancy plus the batch service-time EWMA, restoring full
-//!   precision as load drains. Each tier maps to TWO budgets: the
+//!   running **one independent pressure loop per tier**: each formed
+//!   batch takes exactly one step for *its own* tier
+//!   ([`TermController::observe_batch`]) from that tier's own queue
+//!   occupancy, its own batch service-time EWMA, and its own windowed
+//!   request-latency p99 (a lock-free ring digest per tier, fed by the
+//!   scheduler alongside the metrics) checked against *its own* SLO
+//!   target — so degradation is confined to the violating tier and a
+//!   Throughput flood cannot move Balanced's served precision. Failed
+//!   batches relieve the queue signal but never enter the service/p99
+//!   estimates. Pressure falls, per tier, as that tier's queue drains
+//!   and its latency cools. Each tier maps to TWO budgets: the
 //!   pool-prefix budget (model granularity — how many basis workers
 //!   reduce) and a per-layer [`BudgetPlan`](crate::xint::BudgetPlan)
 //!   ([`TermController::plan_for`]) that plan-aware replication workers

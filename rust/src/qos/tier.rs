@@ -6,6 +6,12 @@
 //! may lower the budget further under load. Because the expansion is a
 //! *series*, every prefix of the basis pool is itself a valid model —
 //! tiers select how far along the series a request rides.
+//!
+//! Each tier also carries its own latency contract
+//! ([`Tier::slo_target`]): the controller runs one pressure loop *per
+//! tier*, stepping a tier down only when **its own** windowed p99
+//! breaks **its own** SLO target or its own queue runs hot — a flood
+//! in one tier can never degrade another tier's precision.
 
 /// Number of tiers (array sizing for per-tier metrics/budgets).
 pub const NUM_TIERS: usize = 4;
@@ -106,6 +112,30 @@ impl Tier {
             Tier::Throughput => 1,
             Tier::BestEffort => 1,
         }
+    }
+
+    /// Default p99 request-latency SLO target (seconds) driving this
+    /// tier's pressure loop; `None` = no latency SLO. The ladder runs
+    /// *opposite* to the precision ladder: precision-strict tiers buy
+    /// accuracy with latency (`Exact` promises none at all), while
+    /// `Throughput` — the tail-latency product — carries the tightest
+    /// target. `BestEffort` promises only "eventually". Overridable per
+    /// deployment via
+    /// [`QosConfig::with_slo_target`](super::QosConfig::with_slo_target).
+    pub fn slo_target(self) -> Option<f64> {
+        match self {
+            Tier::Exact => None,
+            Tier::Balanced => Some(0.100),
+            Tier::Throughput => Some(0.025),
+            Tier::BestEffort => Some(0.500),
+        }
+    }
+
+    /// All SLO targets in seconds, `0.0` where a tier has none — the
+    /// array form [`QosConfig`](super::QosConfig) carries, indexed by
+    /// [`Tier::idx`].
+    pub fn slo_targets() -> [f64; NUM_TIERS] {
+        std::array::from_fn(|i| Tier::ALL[i].slo_target().unwrap_or(0.0))
     }
 
     /// §5.3 *relative* scale-product threshold for the in-grid anytime
@@ -216,6 +246,25 @@ mod tests {
         assert!(floors.windows(2).all(|w| w[0] <= w[1]), "{floors:?}");
         for t in [Tier::Balanced, Tier::Throughput, Tier::BestEffort] {
             assert_eq!(t.grid_scale_floor(), t.tolerance().unwrap());
+        }
+    }
+
+    #[test]
+    fn slo_ladder_exact_free_throughput_tightest() {
+        assert_eq!(Tier::Exact.slo_target(), None, "exact promises precision, not latency");
+        let targets: Vec<f64> = Tier::ALL.iter().filter_map(|t| t.slo_target()).collect();
+        assert!(targets.iter().all(|&t| t > 0.0), "{targets:?}");
+        let tightest = targets.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(
+            Tier::Throughput.slo_target(),
+            Some(tightest),
+            "the tail-latency tier must carry the tightest SLO"
+        );
+        // array form: 0.0 encodes "no SLO", everything else matches
+        let arr = Tier::slo_targets();
+        assert_eq!(arr[Tier::Exact.idx()], 0.0);
+        for t in [Tier::Balanced, Tier::Throughput, Tier::BestEffort] {
+            assert_eq!(arr[t.idx()], t.slo_target().unwrap());
         }
     }
 

@@ -21,6 +21,21 @@ pub struct TierReport {
     /// requests refused at this tier's admission check
     pub shed: usize,
     pub latency: Summary,
+    /// mean basis terms reduced per completed reply — the served
+    /// precision, and the cross-tier isolation observable (a flood in
+    /// another tier must not move this)
+    pub mean_terms: f64,
+    /// mean INT GEMM grid terms per completed reply (0 for backends
+    /// that don't meter Eq. 3 grids)
+    pub mean_grid_terms: f64,
+}
+
+/// One completed reply as the loadgen saw it.
+struct Done {
+    tier: Tier,
+    latency_s: f64,
+    terms: usize,
+    grid_terms: usize,
 }
 
 /// Load-test outcome.
@@ -85,7 +100,7 @@ pub fn run_trace_mix(
     let offered = events.len();
     let mut shed_by = [0usize; NUM_TIERS];
     let failed = Arc::new(AtomicU64::new(0));
-    let latencies = Arc::new(std::sync::Mutex::new(Vec::<(Tier, f64)>::new()));
+    let done = Arc::new(std::sync::Mutex::new(Vec::<Done>::new()));
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut rng = Rng::seed(0xBEE);
@@ -109,15 +124,17 @@ pub fn run_trace_mix(
         let x = Tensor::randn(&[ev.batch, din], 1.0, &mut rng);
         match coord.submit_tier(x, tier) {
             Ok(rx) => {
-                let latencies = latencies.clone();
+                let done = done.clone();
                 let failed = failed.clone();
                 let sent = Instant::now();
                 pending.push(std::thread::spawn(move || match rx.recv() {
                     Ok(resp) if resp.error.is_none() => {
-                        latencies
-                            .lock()
-                            .unwrap()
-                            .push((tier, sent.elapsed().as_secs_f64()));
+                        done.lock().unwrap().push(Done {
+                            tier,
+                            latency_s: sent.elapsed().as_secs_f64(),
+                            terms: resp.terms,
+                            grid_terms: resp.grid_terms,
+                        });
                     }
                     Ok(_) | Err(_) => {
                         failed.fetch_add(1, Ordering::Relaxed);
@@ -140,19 +157,22 @@ pub fn run_trace_mix(
         let _ = h.join();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let lats = latencies.lock().unwrap().clone();
-    let all: Vec<f64> = lats.iter().map(|&(_, l)| l).collect();
+    let lats = done.lock().unwrap();
+    let all: Vec<f64> = lats.iter().map(|d| d.latency_s).collect();
     let per_tier = mix
         .iter()
         .map(|&(t, _)| t)
         .map(|tier| {
-            let tl: Vec<f64> =
-                lats.iter().filter(|&&(t, _)| t == tier).map(|&(_, l)| l).collect();
+            let slice: Vec<&Done> = lats.iter().filter(|d| d.tier == tier).collect();
+            let tl: Vec<f64> = slice.iter().map(|d| d.latency_s).collect();
+            let n = slice.len().max(1) as f64;
             TierReport {
                 tier,
-                completed: tl.len(),
+                completed: slice.len(),
                 shed: shed_by[tier.idx()],
                 latency: Summary::of(&tl),
+                mean_terms: slice.iter().map(|d| d.terms as f64).sum::<f64>() / n,
+                mean_grid_terms: slice.iter().map(|d| d.grid_terms as f64).sum::<f64>() / n,
             }
         })
         .collect();
@@ -218,6 +238,10 @@ mod tests {
         // both tiers should see a fair share of a 50/50 draw
         for t in &report.per_tier {
             assert!(t.completed > 0, "tier {} starved", t.tier);
+            // no controller: every reply reduced the full 2-worker pool,
+            // and the MLP-free echo workers meter no grid
+            assert!((t.mean_terms - 2.0).abs() < 1e-12, "{}: {}", t.tier, t.mean_terms);
+            assert_eq!(t.mean_grid_terms, 0.0);
         }
         assert_eq!(coord.metrics.tier_completed(Tier::Balanced), 0);
     }

@@ -111,7 +111,16 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
         let rx = match coord.submit_tier(x, tier) {
             Ok(rx) => rx,
             Err(SubmitError::Busy(full_tier)) => {
-                log::warn!("request shed: {full_tier} queue full");
+                // surface the refusing tier's OWN control state: under
+                // per-tier pressure a shed names exactly the tier whose
+                // queue (and whose precision ladder) is saturated
+                match &coord.qos {
+                    Some(ctl) => log::warn!(
+                        "request shed: {full_tier} queue full (tier pressure {})",
+                        ctl.tier_pressure(full_tier)
+                    ),
+                    None => log::warn!("request shed: {full_tier} queue full"),
+                }
                 if !write_shed_frame(&mut stream, full_tier) {
                     return;
                 }

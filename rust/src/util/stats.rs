@@ -18,12 +18,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `p ∈ [0, 100]`.
+///
+/// Total-order sort (`f64::total_cmp`): a NaN sample sorts above +∞
+/// instead of panicking the sort comparator — one NaN latency in a
+/// metrics reservoir must degrade that quantile, not crash a snapshot
+/// mid-serve.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -102,6 +107,25 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert!((s.p50 - 50.5).abs() < 1e-9);
         assert!((s.p99 - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn nan_inputs_never_panic_the_percentile() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked on the
+        // first NaN latency, taking the whole metrics snapshot with it
+        let xs = [1.0, f64::NAN, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert_eq!(p50, 2.0, "NaN sorts above +inf; the finite median is s[1]");
+        assert!(percentile(&xs, 0.0).is_finite());
+        // a quantile that lands ON the NaN reports NaN rather than lying
+        assert!(percentile(&xs, 100.0).is_nan());
+        // all-NaN input: still no panic
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
+        // Summary over a reservoir containing a NaN stays usable
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.p50.is_finite());
     }
 
     #[test]

@@ -134,13 +134,17 @@ impl BasisWorker for Sleepy {
 
 #[test]
 fn pressure_degrades_then_restores_under_load() {
-    // slow workers + burst traffic: the controller must pick up queue
-    // pressure, serve BestEffort with fewer terms, and restore later
-    let terms = 4;
+    // slow workers + burst traffic: the controller must pick up the
+    // flooded tier's own queue pressure, serve IT with fewer terms,
+    // and restore later — without the flood leaking into other tiers
+    let terms = 8;
     // low watermark threshold so the burst reliably crosses it even if
-    // the batcher drains a request or two while we are still submitting
+    // the batcher drains a request or two while we are still submitting;
+    // SLO targets off so queue occupancy (the channel under test) is
+    // the only pressure input regardless of CI host speed
     let mut qcfg = QosConfig::new(terms);
     qcfg.high_watermark = 0.5;
+    qcfg.slo_targets = [0.0; 4];
     let ctl = Arc::new(TermController::new(qcfg));
     let pool = WorkerPool::new(
         terms,
@@ -148,17 +152,28 @@ fn pressure_degrades_then_restores_under_load() {
             Box::new(Sleepy(std::time::Duration::from_millis(5))) as Box<dyn BasisWorker>
         }),
     );
-    let coord = Arc::new(Coordinator::new(
+    // plain (un-Arc'd) coordinator: everything here is single-threaded,
+    // and the consuming `shutdown(self)` cannot be called through Arc
+    let coord = Coordinator::new(
         BatcherConfig::uniform(1, 100, 16),
         ExpansionScheduler::new(pool).with_controller(ctl.clone()),
-    ));
-    // burst: fill most of the queue, then watch pressure rise
+    );
+    // Balanced burst: fill most of the tier's queue, watch ITS pressure
+    // rise (Balanced serves 4 of 8 terms unpressured, 2 at its floor)
+    let unpressured = ctl.budget_for(Tier::Balanced);
+    assert_eq!(unpressured, 4);
     let mut rxs = Vec::new();
     for _ in 0..15 {
-        if let Ok(rx) = coord.submit_tier(Tensor::zeros(&[1, 2]), Tier::BestEffort) {
+        if let Ok(rx) = coord.submit_tier(Tensor::zeros(&[1, 2]), Tier::Balanced) {
             rxs.push(rx);
         }
     }
+    // a Throughput request riding alongside mid-flood keeps its own
+    // unpressured default budget (2 of 8 — a FIXED expectation, so a
+    // regression back to global pressure fails here instead of moving
+    // both sides of the comparison together)
+    let rider = coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::Throughput).unwrap();
+    assert_eq!(rider.terms, 2, "flood leaked across tiers");
     let mut terms_seen = Vec::new();
     for rx in rxs {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap();
@@ -167,14 +182,18 @@ fn pressure_degrades_then_restores_under_load() {
     }
     assert!(ctl.snapshot().degrade_events > 0, "pressure never rose");
     assert!(
-        terms_seen.iter().any(|&t| t < terms),
+        terms_seen.iter().any(|&t| t < unpressured),
         "no degraded service under pressure: {terms_seen:?}"
     );
     // drain: light traffic at empty queue lowers pressure back to zero
     for _ in 0..20 {
-        let _ = coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::BestEffort);
+        let _ = coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::Balanced);
     }
     assert_eq!(ctl.pressure(), 0, "pressure must fall once the queue drains");
+    let s = ctl.snapshot();
+    assert_eq!(s.tier_degrade_events[Tier::Exact.idx()], 0);
+    assert_eq!(s.tier_degrade_events[Tier::Throughput.idx()], 0);
+    assert_eq!(s.tier_degrade_events[Tier::BestEffort.idx()], 0, "flood coupled across tiers");
     coord.shutdown();
 }
 
@@ -451,4 +470,143 @@ fn planned_tier_serving_flows_calibration_to_grid_metrics() {
     assert!(coord.metrics.tier_mean_planned_grid_terms(Tier::Throughput) > 0.0);
     assert_eq!(coord.metrics.tier_mean_planned_grid_terms(Tier::Exact), 0.0);
     coord.shutdown();
+}
+
+#[test]
+fn throughput_flood_leaves_balanced_and_exact_bit_identical() {
+    // the cross-tier coupling regression, end to end in replication
+    // mode: a sustained Throughput flood that violates ITS OWN SLO on
+    // every batch must ramp only Throughput's pressure — Balanced and
+    // Exact keep their planned ceilings, served grid spend, and output
+    // bits exactly as in the unloaded run.
+    let mut rng = Rng::seed(0x1501);
+    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    let mut m = zoo::mini_resnet_a(4, 0xFACE);
+    let _ = m.forward_train(&probe);
+    let q = quantize_model(&m, LayerPolicy::new(4, 4));
+    let mut mon = ExpansionMonitor::new();
+    q.observe_layers(&probe, &mut mon).unwrap();
+    let profiles = q.grid_profiles(&mon);
+    // a 1 ns Throughput SLO makes every served Throughput batch a
+    // deterministic SLO violation; Balanced/BestEffort latency SLOs are
+    // off, so the ONLY channel that could move them is the cross-tier
+    // coupling this test pins against (Exact has no SLO by contract)
+    let qcfg = QosConfig::new(1)
+        .with_slo_target(Tier::Throughput, 1e-9)
+        .with_slo_target(Tier::Balanced, 0.0)
+        .with_slo_target(Tier::BestEffort, 0.0);
+    let ctl = Arc::new(TermController::new(qcfg));
+    ctl.calibrate_layers(profiles);
+    let qw = q.clone();
+    let pool = WorkerPool::new(
+        1,
+        Arc::new(move |_| {
+            Box::new(QuantModelWorker { model: qw.clone(), sample_dims: Some(vec![1, 16, 16]) })
+                as Box<dyn BasisWorker>
+        }),
+    );
+    let coord = Coordinator::new(
+        BatcherConfig::uniform(4, 200, 64),
+        ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+    );
+    let x = Tensor::randn(&[2, 1, 16, 16], 1.0, &mut rng).reshape(&[2, 256]);
+
+    // unloaded reference service
+    let bal_cold = coord.infer_tier(x.clone(), Tier::Balanced).unwrap();
+    let exact_cold = coord.infer_tier(x.clone(), Tier::Exact).unwrap();
+    let cold = ctl.snapshot();
+
+    // sustained Throughput flood (the forming thread processes batches
+    // sequentially, so after request k returns, decisions 1..k-1 have
+    // landed — after 6, Throughput's pressure is deterministically up)
+    for _ in 0..6 {
+        let r = coord.infer_tier(x.clone(), Tier::Throughput).unwrap();
+        assert!(r.error.is_none());
+    }
+    assert!(ctl.tier_pressure(Tier::Throughput) >= 1, "flood never ramped its own tier");
+    let hot = ctl.snapshot();
+    let ti = Tier::Throughput.idx();
+    let bi = Tier::Balanced.idx();
+    let ei = Tier::Exact.idx();
+    assert!(
+        hot.plan_ceilings[ti].unwrap() < cold.plan_ceilings[ti].unwrap(),
+        "throughput's own ceiling must shrink: {:?} !< {:?}",
+        hot.plan_ceilings[ti],
+        cold.plan_ceilings[ti]
+    );
+
+    // the acceptance contract: Balanced/Exact are bit-for-bit unmoved
+    // while the flooding tier is degraded
+    assert_eq!(ctl.tier_pressure(Tier::Balanced), 0);
+    assert_eq!(ctl.tier_pressure(Tier::Exact), 0);
+    assert_eq!(hot.plan_ceilings[bi], cold.plan_ceilings[bi]);
+    assert_eq!(hot.plan_ceilings[ei], cold.plan_ceilings[ei]);
+    assert_eq!(hot.budgets[bi], cold.budgets[bi]);
+    let bal_hot = coord.infer_tier(x.clone(), Tier::Balanced).unwrap();
+    assert_eq!(
+        bal_hot.logits.data(),
+        bal_cold.logits.data(),
+        "balanced output moved under a throughput flood"
+    );
+    assert_eq!(bal_hot.terms, bal_cold.terms);
+    assert_eq!(bal_hot.grid_terms, bal_cold.grid_terms, "balanced grid spend moved");
+    let exact_hot = coord.infer_tier(x, Tier::Exact).unwrap();
+    assert_eq!(exact_hot.logits.data(), exact_cold.logits.data());
+    assert_eq!(exact_hot.grid_terms, exact_cold.grid_terms);
+    coord.shutdown();
+    let s = ctl.snapshot();
+    assert!(s.tier_degrade_events[ti] >= 1);
+    assert_eq!(s.tier_degrade_events[Tier::Balanced.idx()], 0);
+    assert_eq!(s.tier_degrade_events[Tier::Exact.idx()], 0);
+}
+
+#[test]
+fn flood_tier_pressure_ramps_and_recovers_without_touching_neighbors() {
+    // occupancy-channel twin of the SLO test above: a Throughput queue
+    // flood ramps Throughput's pressure, light post-flood traffic fully
+    // drains it, and no other tier ever steps
+    let terms = 4;
+    let mut qcfg = QosConfig::new(terms);
+    qcfg.high_watermark = 0.5;
+    // occupancy is the only channel under test — latency SLOs off so a
+    // slow CI host cannot add steps through the p99 path
+    qcfg.slo_targets = [0.0; 4];
+    let ctl = Arc::new(TermController::new(qcfg));
+    let pool = WorkerPool::new(
+        terms,
+        Arc::new(|_| {
+            Box::new(Sleepy(std::time::Duration::from_millis(4))) as Box<dyn BasisWorker>
+        }),
+    );
+    let coord = Coordinator::new(
+        BatcherConfig::uniform(1, 100, 16),
+        ExpansionScheduler::new(pool).with_controller(ctl.clone()),
+    );
+    let mut rxs = Vec::new();
+    for _ in 0..15 {
+        if let Ok(rx) = coord.submit_tier(Tensor::zeros(&[1, 2]), Tier::Throughput) {
+            rxs.push(rx);
+        }
+    }
+    // a Balanced rider mid-flood is served at its full unpressured
+    // budget (2 of 4 terms)
+    let bal = coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::Balanced).unwrap();
+    assert_eq!(bal.terms, 2, "balanced rider degraded by a throughput flood");
+    for rx in rxs {
+        rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap();
+    }
+    // drain: light Throughput traffic at an empty queue
+    for _ in 0..12 {
+        let _ = coord.infer_tier(Tensor::zeros(&[1, 2]), Tier::Throughput);
+    }
+    coord.shutdown();
+    let s = ctl.snapshot();
+    let ti = Tier::Throughput.idx();
+    assert!(s.tier_degrade_events[ti] > 0, "flood never ramped its own tier");
+    assert!(s.tier_restore_events[ti] > 0, "drain never restored");
+    assert_eq!(s.pressures[ti], 0, "pressure must fully recover on drain");
+    for t in [Tier::Exact, Tier::Balanced, Tier::BestEffort] {
+        assert_eq!(s.tier_degrade_events[t.idx()], 0, "{t} coupled to a throughput flood");
+        assert_eq!(s.pressures[t.idx()], 0);
+    }
 }

@@ -52,6 +52,49 @@ ABSOLUTE_GATES = [
         "Exact p99 under a Throughput flood avoids the head-of-line cliff (WDRR)",
         lambda v: v <= 5.0,
     ),
+    # Per-tier pressure isolation (PR 5): the flood-isolation scenario
+    # runs the Throughput flood WITH a controller attached. The served
+    # Balanced precision is a deterministic quantity (every reply serves
+    # the tier's calibrated budget unless ITS OWN loop steps, and its
+    # queue can never cross the watermark at the bench's offered load),
+    # so the delta gates at exactly zero. The p99 ratio gate mirrors the
+    # wdrr 5x noise allowance above.
+    (
+        "BENCH_qos.json",
+        "isolation.balanced_terms_delta",
+        "a Throughput flood leaves Balanced's served terms bit-for-bit unmoved",
+        lambda v: v == 0,
+    ),
+    (
+        "BENCH_qos.json",
+        "isolation.balanced_grid_delta",
+        "a Throughput flood leaves Balanced's served grid spend unmoved",
+        lambda v: v == 0,
+    ),
+    (
+        "BENCH_qos.json",
+        "isolation.balanced_degrade_events",
+        "the flood never steps the bystander tier's own pressure",
+        lambda v: v == 0,
+    ),
+    (
+        "BENCH_qos.json",
+        "isolation.thpt_degrade_events",
+        "the flooded tier's own pressure ramps while its queue saturates",
+        lambda v: v >= 1,
+    ),
+    (
+        "BENCH_qos.json",
+        "isolation.thpt_drained_pressure",
+        "the flooded tier's pressure fully recovers once its queue drains",
+        lambda v: v == 0,
+    ),
+    (
+        "BENCH_qos.json",
+        "isolation.balanced_p99_ratio",
+        "Balanced p99 under a Throughput flood stays within noise of unloaded (<= 5x)",
+        lambda v: v <= 5.0,
+    ),
     # Term-budget contract (perf_budget): bit-identity and the grid-term
     # cut are deterministic, so they gate absolutely on every run. The
     # 1.5x wall-clock floor lives in MEASURED_FLOOR_GATES below: it arms
