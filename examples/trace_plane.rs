@@ -1,0 +1,94 @@
+//! Trace-plane demo — request-scoped spans and the metrics exposition
+//! over the TCP wire.
+//!
+//! Starts the serving coordinator with the flight recorder armed,
+//! drives mixed-tier traffic from concurrent clients, then pulls both
+//! export surfaces through their control frames: the Prometheus-style
+//! text exposition (written to `exposition.txt`) and the Chrome-trace
+//! JSON dump of the recorder (written to `trace.json` — open it in
+//! Perfetto, ui.perfetto.dev, or chrome://tracing). CI lints the
+//! exposition with `scripts/check_exposition.py` and uploads the trace
+//! as a sample artifact.
+//!
+//!     cargo run --release --example trace_plane [-- OUTDIR]
+
+use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
+use fp_xint::obs::TraceRecorder;
+use fp_xint::qos::{QosConfig, TermController, Tier};
+use fp_xint::serve::server::{client_infer_traced, client_metrics, client_trace_json, serve_tcp};
+use fp_xint::serve::workers::{mlp_basis_factory_with, BiasPlacement, MlpWeights};
+use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::util::logger;
+use fp_xint::xint::{BitSpec, ExpandConfig, ExpansionMonitor};
+use std::sync::Arc;
+
+const TERMS: usize = 8;
+const BITS: u32 = 4;
+const DIN: usize = 256;
+
+fn main() {
+    logger::init(false);
+    let outdir = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    let mut rng = Rng::seed(77);
+    let w = MlpWeights {
+        w1: Tensor::randn(&[128, DIN], 0.3, &mut rng),
+        b1: Tensor::randn(&[128], 0.1, &mut rng),
+        w2: Tensor::randn(&[10, 128], 0.3, &mut rng),
+        b2: Tensor::randn(&[10], 0.1, &mut rng),
+    };
+    let mut mon = ExpansionMonitor::new();
+    let ecfg = ExpandConfig::symmetric(BitSpec::int(BITS), TERMS);
+    for _ in 0..4 {
+        mon.observe(&Tensor::randn(&[32, DIN], 1.0, &mut rng), &ecfg).expect("monitor");
+    }
+    let ctl = Arc::new(TermController::new(QosConfig::new(TERMS)));
+    ctl.calibrate(&mon);
+    let rec = Arc::new(TraceRecorder::default());
+    let pool =
+        WorkerPool::new(TERMS, mlp_basis_factory_with(&w, BITS, TERMS, BiasPlacement::FirstTerm));
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig::uniform(16, 500, 256),
+        ExpansionScheduler::new(pool).with_controller(ctl).with_recorder(rec),
+    ));
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).expect("bind");
+    let addr = handle.addr;
+
+    // mixed-tier traffic: 4 concurrent clients × 25 requests, server
+    // assigning trace ids (wire id 0) and echoing them back
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed(900 + c);
+                for i in 0..25usize {
+                    let tier = Tier::ALL[(c as usize + i) % Tier::ALL.len()];
+                    let x = Tensor::randn(&[8, DIN], 1.0, &mut rng);
+                    let (_, id) = client_infer_traced(addr, &x, tier, 0).expect("request");
+                    assert_ne!(id, 0, "server must assign a trace id");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let metrics = client_metrics(addr).expect("metrics scrape");
+    let trace = client_trace_json(addr).expect("trace dump");
+    handle.stop();
+
+    let expo_path = format!("{outdir}/exposition.txt");
+    let trace_path = format!("{outdir}/trace.json");
+    std::fs::write(&expo_path, &metrics).expect("write exposition");
+    std::fs::write(&trace_path, &trace).expect("write trace");
+
+    println!("per-tier completed series:");
+    for line in metrics.lines().filter(|l| l.starts_with("fpxint_requests_completed_total{")) {
+        println!("  {line}");
+    }
+    println!(
+        "wrote {expo_path} ({} bytes) and {trace_path} ({} bytes)",
+        metrics.len(),
+        trace.len()
+    );
+    println!("open {trace_path} in Perfetto (ui.perfetto.dev) or chrome://tracing");
+}

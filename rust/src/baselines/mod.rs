@@ -193,16 +193,18 @@ mod tests {
     /// Shared trained fixture — training once for the whole test binary
     /// keeps the baseline test suite fast.
     pub(crate) fn trained_small() -> (Model, Tensor) {
-        static FIXTURE: once_cell::sync::Lazy<(Model, Tensor)> = once_cell::sync::Lazy::new(|| {
-            let data = SynthImg::new(4, 1, 12, 0.15, 21);
-            let mut m = zoo::mini_resnet_a(4, 22);
-            let cfg =
-                crate::train::TrainConfig { steps: 80, batch: 24, lr: 0.05, log_every: 1000 };
-            crate::train::train_classifier(&mut m, &data, &cfg);
-            let calib = data.batch(32, 3).x;
-            (m, calib)
-        });
-        FIXTURE.clone()
+        static FIXTURE: std::sync::OnceLock<(Model, Tensor)> = std::sync::OnceLock::new();
+        FIXTURE
+            .get_or_init(|| {
+                let data = SynthImg::new(4, 1, 12, 0.15, 21);
+                let mut m = zoo::mini_resnet_a(4, 22);
+                let cfg =
+                    crate::train::TrainConfig { steps: 80, batch: 24, lr: 0.05, log_every: 1000 };
+                crate::train::train_classifier(&mut m, &data, &cfg);
+                let calib = data.batch(32, 3).x;
+                (m, calib)
+            })
+            .clone()
     }
 
     #[test]

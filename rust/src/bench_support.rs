@@ -145,9 +145,9 @@ pub fn pct(v: f64) -> String {
 /// for orientation; absolute values are not expected to match (different
 /// substrate), the *shape* is (see EXPERIMENTS.md).
 pub fn shape_note() {
-    println!(
-        "\nnote: absolute numbers come from the synthetic substrate (DESIGN.md §2);\n\
-         compare SHAPE against the paper — who wins, by roughly what factor,\n\
-         where methods collapse. Paper values are recorded in EXPERIMENTS.md.\n"
+    log::info!(
+        "note: absolute numbers come from the synthetic substrate (DESIGN.md §2); \
+         compare SHAPE against the paper — who wins, by roughly what factor, \
+         where methods collapse. Paper values are recorded in EXPERIMENTS.md."
     );
 }

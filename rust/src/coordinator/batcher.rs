@@ -123,6 +123,8 @@ pub enum SubmitError {
 /// One request's slot within a formed batch.
 pub struct BatchPart {
     pub id: u64,
+    /// the request's trace correlation id (spans + response echo)
+    pub trace_id: u64,
     /// number of sample rows this request contributes
     pub rows: usize,
     pub reply: mpsc::Sender<Response>,
@@ -136,6 +138,9 @@ pub struct FormedBatch {
     /// concatenated samples (Σnᵢ, din)
     pub x: Tensor,
     pub parts: Vec<BatchPart>,
+    /// when the batch was cut from the queue — closes each part's
+    /// queue-wait span and opens the batch-formation span
+    pub formed_at: Instant,
     /// per-tier queue depths (requests still waiting) at formation time
     pub tier_depths: [usize; NUM_TIERS],
     /// the batcher's configured per-tier queue capacities
@@ -420,6 +425,7 @@ impl Batcher {
                         take.push(g.q[tier.idx()].pop_front().expect("front checked"));
                     }
                     let tier_depths = g.depths();
+                    let formed_at = Instant::now();
                     drop(g);
                     // charge the rows actually served; going negative is
                     // the debt mechanism that keeps shares weighted when
@@ -433,6 +439,7 @@ impl Batcher {
                         data.extend_from_slice(req.x.data());
                         parts.push(BatchPart {
                             id: req.id,
+                            trace_id: req.trace_id,
                             rows: req.x.dims()[0],
                             reply: req.reply,
                             enqueued_at: at,
@@ -442,6 +449,7 @@ impl Batcher {
                     process(FormedBatch {
                         x: Tensor::from_vec(&[rows, din], data),
                         parts,
+                        formed_at,
                         tier_depths,
                         tier_caps: cfg.queue_caps,
                     });
@@ -464,6 +472,17 @@ impl Batcher {
         x: Tensor,
         tier: Tier,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit_traced(x, tier, 0)
+    }
+
+    /// [`Batcher::submit`] carrying the request's trace id into the
+    /// formed batch (and so into every span and the response echo).
+    pub fn submit_traced(
+        &self,
+        x: Tensor,
+        tier: Tier,
+        trace_id: u64,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -475,7 +494,7 @@ impl Batcher {
             self.sheds[tier.idx()].fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Busy(tier));
         }
-        g.q[tier.idx()].push_back((Request { id, x, tier, reply }, Instant::now()));
+        g.q[tier.idx()].push_back((Request { id, trace_id, x, tier, reply }, Instant::now()));
         drop(g);
         self.shared.cv.notify_all();
         Ok(rx)
@@ -548,6 +567,7 @@ mod tests {
                 row += p.rows;
                 let _ = p.reply.send(Response {
                     id: p.id,
+                    trace_id: p.trace_id,
                     logits: Tensor::from_vec(&[p.rows, din], data),
                     latency_s: p.enqueued_at.elapsed().as_secs_f64(),
                     tier: p.tier,
@@ -563,6 +583,7 @@ mod tests {
         for p in batch.parts {
             let _ = p.reply.send(Response {
                 id: p.id,
+                trace_id: p.trace_id,
                 logits: Tensor::zeros(&[p.rows, 1]),
                 latency_s: p.enqueued_at.elapsed().as_secs_f64(),
                 tier: p.tier,
@@ -948,11 +969,13 @@ mod tests {
             x: Tensor::zeros(&[1, 1]),
             parts: vec![BatchPart {
                 id: 0,
+                trace_id: 0,
                 rows: 1,
                 reply,
                 enqueued_at: Instant::now(),
                 tier: Tier::Balanced,
             }],
+            formed_at: Instant::now(),
             // Throughput's queue is saturated; Balanced's is nearly idle
             tier_depths: [12, 2, 16, 0],
             tier_caps: [16; NUM_TIERS],

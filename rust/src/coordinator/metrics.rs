@@ -2,11 +2,12 @@
 //! and per QoS tier (latency, terms served, estimated precision loss).
 
 use crate::qos::{Tier, NUM_TIERS};
+use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Coordinator-wide metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     completed: AtomicU64,
     failed: AtomicU64,
@@ -18,6 +19,8 @@ pub struct Metrics {
     batch_times: Mutex<Vec<f64>>,
     /// per-tier counters, indexed by [`Tier::idx`]
     tier_completed: [AtomicU64; NUM_TIERS],
+    /// per-tier failed requests (batch-execution errors)
+    tier_failed: [AtomicU64; NUM_TIERS],
     /// per-tier sum of terms reduced (mean = /completed)
     tier_terms: [AtomicU64; NUM_TIERS],
     /// per-tier sum of INT GEMM grid terms executed by budget-aware
@@ -37,6 +40,10 @@ pub struct Metrics {
     tier_planned_batches: [AtomicU64; NUM_TIERS],
     /// per-tier latency reservoirs
     tier_latencies: [Mutex<Vec<f64>>; NUM_TIERS],
+    /// per-tier fixed-bucket latency histograms — unlike the reservoir
+    /// (bounded, first-come) these never saturate and export directly
+    /// as Prometheus `le` buckets
+    tier_hist: [Mutex<Histogram>; NUM_TIERS],
     /// per-tier worst estimated precision loss (max-residual estimate
     /// from the controller's calibration; NAN-free, 0 when unknown)
     tier_loss: Mutex<[f64; NUM_TIERS]>,
@@ -44,9 +51,32 @@ pub struct Metrics {
 
 const RESERVOIR_CAP: usize = 100_000;
 
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        Metrics {
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            latencies: Mutex::default(),
+            batch_times: Mutex::default(),
+            tier_completed: Default::default(),
+            tier_failed: Default::default(),
+            tier_terms: Default::default(),
+            tier_grid_terms: Default::default(),
+            tier_grid_batches: Default::default(),
+            tier_planned_grid: Default::default(),
+            tier_planned_batches: Default::default(),
+            tier_latencies: Default::default(),
+            tier_hist: std::array::from_fn(|_| Mutex::new(Histogram::latency_seconds())),
+            tier_loss: Mutex::new([0.0; NUM_TIERS]),
+        }
     }
 
     pub fn record_completed(&self, latency_s: f64) {
@@ -75,6 +105,7 @@ impl Metrics {
             tl.push(latency_s);
         }
         drop(tl);
+        self.tier_hist[i].lock().unwrap().observe(latency_s);
         if let Some(loss) = est_loss {
             let mut worst = self.tier_loss.lock().unwrap();
             worst[i] = worst[i].max(loss as f64);
@@ -83,6 +114,13 @@ impl Metrics {
 
     pub fn record_failed(&self, n: usize) {
         self.failed.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// [`Metrics::record_failed`] with tier attribution, so the
+    /// exposition can break failures out per tier.
+    pub fn record_failed_tier(&self, tier: Tier, n: usize) {
+        self.record_failed(n);
+        self.tier_failed[tier.idx()].fetch_add(n as u64, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, samples: usize, service_s: f64) {
@@ -128,6 +166,16 @@ impl Metrics {
     /// Completed requests served at `tier`.
     pub fn tier_completed(&self, tier: Tier) -> u64 {
         self.tier_completed[tier.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Failed requests attributed to `tier`.
+    pub fn tier_failed(&self, tier: Tier) -> u64 {
+        self.tier_failed[tier.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the `tier` latency histogram (seconds, `le` buckets).
+    pub fn tier_latency_histogram(&self, tier: Tier) -> Histogram {
+        self.tier_hist[tier.idx()].lock().unwrap().clone()
     }
 
     /// Mean basis terms reduced per request at `tier` (0 when none).
@@ -256,5 +304,23 @@ mod tests {
         // the SLO loop's observable: per-tier p99 over the reservoir
         assert!((m.tier_p99(Tier::Throughput) - s.p99).abs() < 1e-12);
         assert_eq!(m.tier_p99(Tier::BestEffort), 0.0);
+    }
+
+    #[test]
+    fn histograms_and_failed_tiers_track_exposition_inputs() {
+        let m = Metrics::new();
+        m.record_completed_tier(Tier::Exact, 0.0004, 8, None);
+        m.record_completed_tier(Tier::Exact, 0.02, 8, None);
+        m.record_failed_tier(Tier::BestEffort, 3);
+        let h = m.tier_latency_histogram(Tier::Exact);
+        assert_eq!(h.count(), 2);
+        assert!((h.sum() - 0.0204).abs() < 1e-9);
+        // both observations fall inside the finite latency ladder
+        assert_eq!(*h.bucket_counts().last().unwrap(), 0);
+        assert_eq!(m.tier_latency_histogram(Tier::Balanced).count(), 0);
+        // tier failure attribution also feeds the aggregate counter
+        assert_eq!(m.tier_failed(Tier::BestEffort), 3);
+        assert_eq!(m.tier_failed(Tier::Exact), 0);
+        assert_eq!(m.failed(), 3);
     }
 }

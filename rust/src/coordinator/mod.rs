@@ -25,15 +25,20 @@ pub use metrics::Metrics;
 pub use pool::{BasisWorker, BudgetedRun, WorkerPool};
 pub use scheduler::ExpansionScheduler;
 
+use crate::obs::{chrome_trace_json, ExpositionBuilder, SpanKind, TraceRecorder};
 use crate::qos::{TermController, Tier};
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 /// One inference request: a (n, din) batch of samples, its service
-/// tier, and a reply slot.
+/// tier, a trace correlation id, and a reply slot.
 pub struct Request {
     pub id: u64,
+    /// request-scoped trace id threaded through every pipeline span and
+    /// echoed in the [`Response`] (and the TCP frame)
+    pub trace_id: u64,
     pub x: Tensor,
     pub tier: Tier,
     pub reply: mpsc::Sender<Response>,
@@ -46,6 +51,9 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// the request's trace correlation id, echoed back so callers can
+    /// join their reply onto the flight recorder's spans
+    pub trace_id: u64,
     pub logits: Tensor,
     /// end-to-end latency attributed by the coordinator
     pub latency_s: f64,
@@ -66,9 +74,10 @@ pub struct Response {
 
 impl Response {
     /// A failed reply: empty logits, explicit error message.
-    pub fn failure(id: u64, tier: Tier, latency_s: f64, msg: String) -> Response {
+    pub fn failure(id: u64, trace_id: u64, tier: Tier, latency_s: f64, msg: String) -> Response {
         Response {
             id,
+            trace_id,
             logits: Tensor::zeros(&[0, 0]),
             latency_s,
             tier,
@@ -88,6 +97,14 @@ pub struct Coordinator {
     /// examples, benches) can surface per-tier pressure next to
     /// shed/queue stats. `None` when serving without a control plane.
     pub qos: Option<Arc<TermController>>,
+    /// Flight recorder attached to the scheduler
+    /// ([`ExpansionScheduler::with_recorder`]), if any — the serving
+    /// layer dumps it as a Chrome trace and counts its drops in the
+    /// metrics exposition. `None` = tracing off, zero overhead.
+    pub recorder: Option<Arc<TraceRecorder>>,
+    /// trace ids handed out when the caller didn't bring one (0 is
+    /// reserved as "assign for me", so the counter starts at 1)
+    next_trace: AtomicU64,
 }
 
 impl Coordinator {
@@ -96,14 +113,21 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
         let qos = scheduler.controller();
+        let recorder = scheduler.recorder();
         let batcher = Batcher::start(cfg, move |batch| scheduler.process(batch, &m2));
-        Coordinator { batcher, metrics, qos }
+        Coordinator { batcher, metrics, qos, recorder, next_trace: AtomicU64::new(1) }
+    }
+
+    /// A fresh coordinator-assigned trace id (never 0 — the wire
+    /// protocol reserves 0 for "server assigns").
+    pub fn fresh_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Submit a request at [`Tier::Exact`] (non-blocking; sheds when the
     /// queue is full).
     pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        self.batcher.submit(x, Tier::Exact)
+        self.submit_tier(x, Tier::Exact)
     }
 
     /// Submit a request at an explicit service tier.
@@ -112,7 +136,29 @@ impl Coordinator {
         x: Tensor,
         tier: Tier,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        self.batcher.submit(x, tier)
+        let trace_id = self.fresh_trace_id();
+        self.submit_tier_traced(x, tier, trace_id)
+    }
+
+    /// [`Coordinator::submit_tier`] under a caller-supplied trace id
+    /// (must be nonzero). Records the admission span — error-flagged on
+    /// a shed, so even rejected requests leave a closed trace.
+    pub fn submit_tier_traced(
+        &self,
+        x: Tensor,
+        tier: Tier,
+        trace_id: u64,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let rec = match &self.recorder {
+            None => return self.batcher.submit_traced(x, tier, trace_id),
+            Some(rec) => rec,
+        };
+        let t0 = rec.now_ns();
+        let depth = self.batcher.tier_depth(tier) as u64;
+        let res = self.batcher.submit_traced(x, tier, trace_id);
+        let shed = res.is_err();
+        rec.record_span(trace_id, SpanKind::Admission, tier, shed, t0, rec.now_ns(), [depth, 0, 0]);
+        res
     }
 
     /// Submit and wait for the reply; a batch failure surfaces as `Err`.
@@ -146,6 +192,149 @@ impl Coordinator {
     /// Requests shed at one tier's admission check since start.
     pub fn tier_shed(&self, tier: Tier) -> u64 {
         self.batcher.shed_count(tier)
+    }
+
+    /// Render the Prometheus-style text exposition of the serving
+    /// plane: per-tier request/failure/shed counters, queue depths,
+    /// latency histograms, term/grid/est-loss gauges, the QoS
+    /// controller's pressure and degrade/restore counters (when
+    /// attached), and flight-recorder volume (when tracing is on).
+    pub fn exposition(&self) -> String {
+        let m = &self.metrics;
+        let mut b = ExpositionBuilder::new();
+        let per_tier = |b: &mut ExpositionBuilder,
+                        name: &str,
+                        kind: &str,
+                        help: &str,
+                        value: &dyn Fn(Tier) -> f64| {
+            b.family(name, kind, help);
+            for t in Tier::ALL {
+                b.series(name, &[("tier", t.name())], value(t));
+            }
+        };
+        per_tier(
+            &mut b,
+            "fpxint_requests_completed_total",
+            "counter",
+            "completed requests per tier",
+            &|t| m.tier_completed(t) as f64,
+        );
+        per_tier(
+            &mut b,
+            "fpxint_requests_failed_total",
+            "counter",
+            "failed requests per tier (batch-execution errors)",
+            &|t| m.tier_failed(t) as f64,
+        );
+        per_tier(
+            &mut b,
+            "fpxint_requests_shed_total",
+            "counter",
+            "requests shed at admission per tier (queue full)",
+            &|t| self.tier_shed(t) as f64,
+        );
+        per_tier(
+            &mut b,
+            "fpxint_queue_depth",
+            "gauge",
+            "requests accepted but not yet batched, per tier",
+            &|t| self.tier_depth(t) as f64,
+        );
+        b.family(
+            "fpxint_request_latency_seconds",
+            "histogram",
+            "end-to-end request latency per tier (seconds)",
+        );
+        for t in Tier::ALL {
+            b.histogram(
+                "fpxint_request_latency_seconds",
+                &[("tier", t.name())],
+                &m.tier_latency_histogram(t),
+            );
+        }
+        per_tier(
+            &mut b,
+            "fpxint_mean_terms",
+            "gauge",
+            "mean basis terms reduced per request, per tier",
+            &|t| m.tier_mean_terms(t),
+        );
+        per_tier(
+            &mut b,
+            "fpxint_mean_grid_terms",
+            "gauge",
+            "mean executed Eq.3 grid terms per batch forward, per tier",
+            &|t| m.tier_mean_grid_terms(t),
+        );
+        per_tier(
+            &mut b,
+            "fpxint_mean_planned_grid_terms",
+            "gauge",
+            "mean planned grid ceiling per plan-carrying batch, per tier",
+            &|t| m.tier_mean_planned_grid_terms(t),
+        );
+        per_tier(
+            &mut b,
+            "fpxint_est_loss",
+            "gauge",
+            "worst estimated precision loss served, per tier",
+            &|t| m.tier_est_loss(t),
+        );
+        b.family("fpxint_batches_total", "counter", "formed batches executed");
+        b.series("fpxint_batches_total", &[], m.batches() as f64);
+        b.family("fpxint_mean_batch_size", "gauge", "mean sample rows per formed batch");
+        b.series("fpxint_mean_batch_size", &[], m.mean_batch_size());
+        if let Some(ctl) = &self.qos {
+            let snap = ctl.snapshot();
+            per_tier(&mut b, "fpxint_tier_pressure", "gauge", "QoS pressure level per tier", &|t| {
+                snap.pressures[t.idx()] as f64
+            });
+            per_tier(
+                &mut b,
+                "fpxint_tier_budget_terms",
+                "gauge",
+                "effective basis-term budget per tier",
+                &|t| snap.budgets[t.idx()] as f64,
+            );
+            per_tier(
+                &mut b,
+                "fpxint_degrade_events_total",
+                "counter",
+                "pressure degrade steps per tier",
+                &|t| snap.tier_degrade_events[t.idx()] as f64,
+            );
+            per_tier(
+                &mut b,
+                "fpxint_restore_events_total",
+                "counter",
+                "pressure restore steps per tier",
+                &|t| snap.tier_restore_events[t.idx()] as f64,
+            );
+        }
+        if let Some(rec) = &self.recorder {
+            b.family(
+                "fpxint_trace_events_recorded_total",
+                "counter",
+                "spans written to the flight recorder",
+            );
+            b.series("fpxint_trace_events_recorded_total", &[], rec.recorded() as f64);
+            b.family(
+                "fpxint_trace_events_dropped_total",
+                "counter",
+                "spans overwritten by ring wrap before export",
+            );
+            b.series("fpxint_trace_events_dropped_total", &[], rec.dropped() as f64);
+        }
+        b.finish()
+    }
+
+    /// Dump the flight recorder as Chrome-trace-event JSON (open in
+    /// Perfetto / `chrome://tracing`). `[]` when tracing is off.
+    pub fn trace_json(&self) -> String {
+        match &self.recorder {
+            Some(rec) => chrome_trace_json(&rec.events()).render(),
+            None => "[]".to_string(),
+        }
     }
 
     /// Drain and stop.

@@ -8,8 +8,10 @@
 //! with the batch's [`BudgetPlan`] (shared by `Arc`: one plan per batch,
 //! not one clone per worker).
 
+use crate::obs::{SpanKind, TraceRecorder};
+use crate::qos::Tier;
 use crate::tensor::Tensor;
-use crate::xint::budget::BudgetPlan;
+use crate::xint::budget::{BudgetPlan, LayerTrace};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -22,6 +24,21 @@ pub struct BudgetedRun {
     pub y: Tensor,
     /// INT GEMM `(i, j)` terms executed inside the worker
     pub grid_terms: usize,
+    /// per-layer execution record (empty when the backend doesn't
+    /// meter its grid) — the trace plane turns these into `layer_grid`
+    /// spans nested inside the worker's span
+    pub layer_traces: Vec<LayerTrace>,
+}
+
+/// Trace context attached to a dispatched job. Worker spans are
+/// recorded once per request trace id, so every request in the batch
+/// gets a complete span chain even though the execution is shared.
+#[derive(Clone)]
+pub struct SpanCtx {
+    pub recorder: Arc<TraceRecorder>,
+    /// trace ids of every request in the batch being executed
+    pub trace_ids: Arc<Vec<u64>>,
+    pub tier: Tier,
 }
 
 /// Reply channel of one dispatched job (worker index + its result).
@@ -41,7 +58,7 @@ pub trait BasisWorker {
     /// (`QuantModelWorker`) override it and index the plan per layer.
     fn run_budgeted(&mut self, x: &Tensor, plan: &BudgetPlan) -> anyhow::Result<BudgetedRun> {
         let _ = plan;
-        Ok(BudgetedRun { y: self.run(x)?, grid_terms: 0 })
+        Ok(BudgetedRun { y: self.run(x)?, grid_terms: 0, layer_traces: Vec::new() })
     }
 }
 
@@ -55,8 +72,39 @@ enum Job {
         x: Arc<Tensor>,
         plan: Arc<BudgetPlan>,
         out: mpsc::Sender<(usize, anyhow::Result<BudgetedRun>)>,
+        ctx: Option<SpanCtx>,
     },
     Stop,
+}
+
+/// Record the worker-side spans for one finished job: a `worker_term`
+/// span per request trace id (error-flagged when the run failed), with
+/// the worker's per-layer grid records nested inside it as `layer_grid`
+/// spans (offsets re-anchored to the worker span's start, clamped so
+/// children never outlive the parent).
+fn record_worker_spans(ctx: &SpanCtx, i: usize, t0: u64, res: &anyhow::Result<BudgetedRun>) {
+    let t1 = ctx.recorder.now_ns();
+    let (err, grid, traces): (bool, u64, &[LayerTrace]) = match res {
+        Ok(run) => (false, run.grid_terms as u64, &run.layer_traces),
+        Err(_) => (true, 0, &[]),
+    };
+    for &id in ctx.trace_ids.iter() {
+        ctx.recorder
+            .record_span(id, SpanKind::WorkerTerm, ctx.tier, err, t0, t1, [i as u64, grid, 0]);
+        for lt in traces {
+            let s = (t0 + lt.t_start_ns).min(t1);
+            let e = (t0 + lt.t_end_ns).min(t1);
+            ctx.recorder.record_span(
+                id,
+                SpanKind::LayerGrid,
+                ctx.tier,
+                false,
+                s,
+                e,
+                [lt.index as u64, lt.grid_terms as u64, lt.planned_grid as u64],
+            );
+        }
+    }
 }
 
 /// Fixed pool of basis workers.
@@ -80,8 +128,12 @@ impl WorkerPool {
                         let mut worker = factory(i);
                         while let Ok(job) = rx.recv() {
                             match job {
-                                Job::Broadcast { x, plan, out } => {
+                                Job::Broadcast { x, plan, out, ctx } => {
+                                    let t0 = ctx.as_ref().map(|c| c.recorder.now_ns());
                                     let res = worker.run_budgeted(&x, &plan);
+                                    if let (Some(c), Some(t0)) = (&ctx, t0) {
+                                        record_worker_spans(c, i, t0, &res);
+                                    }
                                     // receiver may be gone on shutdown
                                     let _ = out.send((i, res));
                                 }
@@ -130,13 +182,31 @@ impl WorkerPool {
         n: usize,
         plan: Arc<BudgetPlan>,
     ) -> anyhow::Result<Vec<BudgetedRun>> {
+        self.broadcast_runs_traced(x, n, plan, None)
+    }
+
+    /// [`WorkerPool::broadcast_runs`] with an optional [`SpanCtx`]: each
+    /// worker records a `worker_term` span (plus nested `layer_grid`
+    /// spans) for every trace id in the batch.
+    pub fn broadcast_runs_traced(
+        &self,
+        x: Tensor,
+        n: usize,
+        plan: Arc<BudgetPlan>,
+        ctx: Option<SpanCtx>,
+    ) -> anyhow::Result<Vec<BudgetedRun>> {
         anyhow::ensure!(n >= 1, "broadcast needs at least one worker");
         anyhow::ensure!(n <= self.senders.len(), "prefix {n} exceeds pool {}", self.senders.len());
         let x = Arc::new(x);
         let (tx, rx) = mpsc::channel();
         for s in &self.senders[..n] {
-            s.send(Job::Broadcast { x: x.clone(), plan: plan.clone(), out: tx.clone() })
-                .map_err(|_| anyhow::anyhow!("worker thread died"))?;
+            s.send(Job::Broadcast {
+                x: x.clone(),
+                plan: plan.clone(),
+                out: tx.clone(),
+                ctx: ctx.clone(),
+            })
+            .map_err(|_| anyhow::anyhow!("worker thread died"))?;
         }
         drop(tx);
         let mut outs: Vec<Option<BudgetedRun>> = Vec::new();
@@ -159,6 +229,17 @@ impl WorkerPool {
         x: Arc<Tensor>,
         plan: Arc<BudgetPlan>,
     ) -> anyhow::Result<RunReceiver> {
+        self.dispatch_one_traced(i, x, plan, None)
+    }
+
+    /// [`WorkerPool::dispatch_one`] with an optional [`SpanCtx`].
+    pub fn dispatch_one_traced(
+        &self,
+        i: usize,
+        x: Arc<Tensor>,
+        plan: Arc<BudgetPlan>,
+        ctx: Option<SpanCtx>,
+    ) -> anyhow::Result<RunReceiver> {
         anyhow::ensure!(
             i < self.senders.len(),
             "worker {i} out of range (pool of {})",
@@ -166,7 +247,7 @@ impl WorkerPool {
         );
         let (tx, rx) = mpsc::channel();
         self.senders[i]
-            .send(Job::Broadcast { x, plan, out: tx })
+            .send(Job::Broadcast { x, plan, out: tx, ctx })
             .map_err(|_| anyhow::anyhow!("worker thread died"))?;
         Ok(rx)
     }
@@ -257,7 +338,11 @@ mod tests {
                 plan: &BudgetPlan,
             ) -> anyhow::Result<BudgetedRun> {
                 // report layer 0's (clamped) activation cap as "spend"
-                Ok(BudgetedRun { y: x.clone(), grid_terms: plan.budget_for(0).a_terms.min(100) })
+                Ok(BudgetedRun {
+                    y: x.clone(),
+                    grid_terms: plan.budget_for(0).a_terms.min(100),
+                    layer_traces: Vec::new(),
+                })
             }
         }
         let pool =
@@ -286,6 +371,35 @@ mod tests {
         assert_eq!(runs[0].y.data(), &[1.0]);
         pool.shutdown();
         plain.shutdown();
+    }
+
+    #[test]
+    fn traced_broadcast_records_worker_spans_per_trace_id() {
+        let pool = WorkerPool::new(
+            2,
+            Arc::new(|i| Box::new(AddConst(i as f32)) as Box<dyn BasisWorker>),
+        );
+        let recorder = Arc::new(TraceRecorder::new(64));
+        let ctx = SpanCtx {
+            recorder: recorder.clone(),
+            trace_ids: Arc::new(vec![7, 8]),
+            tier: Tier::Balanced,
+        };
+        let runs = pool
+            .broadcast_runs_traced(Tensor::vec1(&[1.0]), 2, Arc::new(BudgetPlan::full()), Some(ctx))
+            .unwrap();
+        assert_eq!(runs.len(), 2);
+        let events = recorder.events();
+        // 2 workers × 2 trace ids; AddConst has no layer grid to meter
+        assert_eq!(events.len(), 4);
+        for id in [7u64, 8] {
+            let spans: Vec<_> = events.iter().filter(|e| e.trace_id == id).collect();
+            assert_eq!(spans.len(), 2, "trace {id}");
+            assert!(spans.iter().all(|e| e.span == SpanKind::WorkerTerm && !e.error));
+            assert!(spans.iter().all(|e| e.tier == Tier::Balanced));
+            assert!(spans.iter().all(|e| e.t_end_ns >= e.t_start_ns));
+        }
+        pool.shutdown();
     }
 
     #[test]

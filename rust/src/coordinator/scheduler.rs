@@ -31,8 +31,9 @@
 
 use super::batcher::FormedBatch;
 use super::metrics::Metrics;
-use super::pool::WorkerPool;
+use super::pool::{SpanCtx, WorkerPool};
 use super::Response;
+use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::{TermController, NUM_TIERS};
 use crate::tensor::Tensor;
 use crate::xint::abelian::abelian_reduce;
@@ -57,11 +58,19 @@ pub struct ExpansionScheduler {
     tier_gains: Option<[f32; NUM_TIERS]>,
     /// QoS control plane; absent = every batch runs the full pool
     controller: Option<Arc<TermController>>,
+    /// flight recorder; absent = tracing off, no span cost anywhere
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl ExpansionScheduler {
     pub fn new(pool: WorkerPool) -> ExpansionScheduler {
-        ExpansionScheduler { pool, gains: None, tier_gains: None, controller: None }
+        ExpansionScheduler {
+            pool,
+            gains: None,
+            tier_gains: None,
+            controller: None,
+            recorder: None,
+        }
     }
 
     /// Apply per-basis output gains before reduction (the AbelianMul
@@ -100,6 +109,21 @@ impl ExpansionScheduler {
         self.controller.clone()
     }
 
+    /// Attach a flight recorder: every batch then records queue-wait,
+    /// batch-formation, schedule, per-worker term, per-layer grid and
+    /// reduce spans for each request it carries
+    /// ([`Coordinator::new`](crate::coordinator::Coordinator) picks the
+    /// handle up the same way it picks up the controller).
+    pub fn with_recorder(mut self, recorder: Arc<TraceRecorder>) -> ExpansionScheduler {
+        self.recorder = Some(recorder);
+        self
+    }
+
+    /// The attached flight recorder, if any.
+    pub fn recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.recorder.clone()
+    }
+
     /// Process one formed batch end to end.
     pub fn process(&self, batch: FormedBatch, metrics: &Metrics) {
         let t0 = std::time::Instant::now();
@@ -126,7 +150,49 @@ impl ExpansionScheduler {
             .as_ref()
             .filter(|ctl| ctl.config().anytime)
             .and_then(|ctl| ctl.batch_tolerance([tier]));
-        let result = self.reduce_prefix(batch.x.clone(), budget, plan, anytime_tol);
+        // queue-wait, batch-formation and schedule spans — one per
+        // request, recorded BEFORE execution so even a failing batch
+        // leaves every request with a closed chain up to the reduction
+        if let Some(rec) = &self.recorder {
+            let formed = rec.ns_of(batch.formed_at);
+            let picked = rec.ns_of(t0);
+            let sched_end = rec.now_ns();
+            let depth = batch.tier_depths[tier.idx()] as u64;
+            let rows = batch.x.dims()[0] as u64;
+            let parts = batch.parts.len() as u64;
+            let planned = planned_grid.unwrap_or(0) as u64;
+            for p in &batch.parts {
+                let enq = rec.ns_of(p.enqueued_at);
+                let id = p.trace_id;
+                let wait = [depth, 0, 0];
+                rec.record_span(id, SpanKind::QueueWait, tier, false, enq, formed, wait);
+                let form = [rows, parts, 0];
+                rec.record_span(id, SpanKind::BatchForm, tier, false, formed, picked, form);
+                let sched = [budget as u64, planned, 0];
+                rec.record_span(id, SpanKind::Schedule, tier, false, picked, sched_end, sched);
+            }
+        }
+        let ctx = self.recorder.as_ref().map(|rec| SpanCtx {
+            recorder: rec.clone(),
+            trace_ids: Arc::new(batch.parts.iter().map(|p| p.trace_id).collect()),
+            tier,
+        });
+        let reduce_t0 = self.recorder.as_ref().map(|rec| rec.now_ns());
+        let result = self.reduce_prefix(batch.x.clone(), budget, plan, anytime_tol, ctx);
+        // the reduce span closes for every request, error-flagged when
+        // the batch failed — traces never show half-open timelines
+        if let Some(rec) = &self.recorder {
+            let t_end = rec.now_ns();
+            let t_start = reduce_t0.unwrap_or(t_end);
+            let (err, terms, grid) = match &result {
+                Ok(r) => (false, r.terms as u64, r.grid_terms as u64),
+                Err(_) => (true, 0, 0),
+            };
+            let detail = [terms, grid, 0];
+            for p in &batch.parts {
+                rec.record_span(p.trace_id, SpanKind::Reduce, tier, err, t_start, t_end, detail);
+            }
+        }
         match result {
             Ok(reduced) => {
                 let terms_used = reduced.terms;
@@ -159,6 +225,7 @@ impl ExpansionScheduler {
                     }
                     let _ = p.reply.send(Response {
                         id: p.id,
+                        trace_id: p.trace_id,
                         logits: Tensor::from_vec(&[p.rows, classes], data),
                         latency_s: latency,
                         tier: p.tier,
@@ -180,12 +247,16 @@ impl ExpansionScheduler {
             Err(e) => {
                 let msg = format!("{e:#}");
                 log::error!("batch failed: {msg}");
-                metrics.record_failed(batch.parts.len());
+                // tier-attributed failure counts: the exposition breaks
+                // failures out per tier, not just in aggregate
+                metrics.record_failed_tier(tier, batch.parts.len());
                 // explicit error replies: TCP clients get an error frame
                 // instead of hanging until RecvError
                 for p in batch.parts {
                     let latency = p.enqueued_at.elapsed().as_secs_f64();
-                    let _ = p.reply.send(Response::failure(p.id, p.tier, latency, msg.clone()));
+                    let _ = p
+                        .reply
+                        .send(Response::failure(p.id, p.trace_id, p.tier, latency, msg.clone()));
                 }
                 if let Some(ctl) = &self.controller {
                     // a failed forward still relieves the tier's queue
@@ -203,12 +274,12 @@ impl ExpansionScheduler {
     /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree
     /// over the full pool.
     pub fn forward(&self, x: Tensor) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, self.pool.len(), Arc::new(BudgetPlan::full()), None)?.y)
+        Ok(self.reduce_prefix(x, self.pool.len(), Arc::new(BudgetPlan::full()), None, None)?.y)
     }
 
     /// Truncated forward: reduce only the first `n` basis outputs.
     pub fn forward_truncated(&self, x: Tensor, n: usize) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), None)?.y)
+        Ok(self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), None, None)?.y)
     }
 
     /// Anytime forward over the first `n` workers: stream terms in
@@ -222,7 +293,7 @@ impl ExpansionScheduler {
         n: usize,
         tol: f32,
     ) -> anyhow::Result<(Tensor, usize)> {
-        let r = self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), Some(tol))?;
+        let r = self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), Some(tol), None)?;
         Ok((r.y, r.terms))
     }
 
@@ -242,10 +313,11 @@ impl ExpansionScheduler {
         n: usize,
         plan: Arc<BudgetPlan>,
         tol: Option<f32>,
+        ctx: Option<SpanCtx>,
     ) -> anyhow::Result<Reduced> {
         match tol {
             None => {
-                let runs = self.pool.broadcast_runs(x, n, plan)?;
+                let runs = self.pool.broadcast_runs_traced(x, n, plan, ctx)?;
                 let mut grid_terms = 0usize;
                 let outs: Vec<Tensor> = runs
                     .into_iter()
@@ -281,8 +353,15 @@ impl ExpansionScheduler {
                     res
                 };
                 // term 0 is always consumed and sets the stop threshold;
-                // its lookahead (term 1) is dispatched before we block
-                let head = self.pool.dispatch_one(0, x.clone(), plan.clone())?;
+                // its lookahead (term 1) is dispatched before we block.
+                // Only the head dispatch carries the span context: a
+                // speculative lookahead abandoned by the early stop
+                // would record a worker span that outlives the reduce
+                // span and breaks nesting, so streamed-anytime traces
+                // carry one worker span (the always-consumed head term)
+                // and leave full term/grid accounting to the reduce
+                // span's detail
+                let head = self.pool.dispatch_one_traced(0, x.clone(), plan.clone(), ctx)?;
                 let mut pending = if n > 1 {
                     Some(self.pool.dispatch_one(1, x.clone(), plan.clone())?)
                 } else {

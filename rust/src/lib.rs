@@ -26,6 +26,7 @@ pub mod bench_support;
 pub mod coordinator;
 pub mod datasets;
 pub mod models;
+pub mod obs;
 pub mod qos;
 pub mod runtime;
 pub mod serve;

@@ -5,6 +5,9 @@
 //!   serve     — start the TCP serving coordinator over basis workers
 //!   eval      — FP vs xINT vs baseline accuracy on the synthetic val set
 //!   info      — artifact manifest + environment report
+//!   metrics   — scrape a running server's metrics exposition (--addr)
+//!   trace     — dump a running server's flight recorder as Chrome-trace
+//!               JSON (--addr, --out; open the file in Perfetto)
 
 use fp_xint::baselines::{self, PtqMethod};
 use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
@@ -26,14 +29,17 @@ fn main() {
         Some("serve") => cmd_serve(args),
         Some("eval") => cmd_eval(args),
         Some("info") => cmd_info(),
+        Some("metrics") => cmd_metrics(args),
+        Some("trace") => cmd_trace(args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
                 "fp-xint {} — low-bit series expansion PTQ\n\
-                 usage: fp-xint <quantize|serve|eval|info> [--bits N] [--w-terms K] \n\
-                 [--a-terms T] [--model NAME] [--steps N] [--port P] [--verbose]",
+                 usage: fp-xint <quantize|serve|eval|info|metrics|trace> [--bits N] \n\
+                 [--w-terms K] [--a-terms T] [--model NAME] [--steps N] [--port P] \n\
+                 [--addr HOST:PORT] [--out FILE] [--verbose]",
                 fp_xint::VERSION
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -121,9 +127,12 @@ fn cmd_serve(mut args: Args) {
     model.fold_bn();
     let weights = mlp_weights_of(&model);
     let pool = WorkerPool::new(terms, serve::workers::mlp_basis_factory(&weights, bits, terms));
+    // flight recorder on by default: spans feed the `metrics` / `trace`
+    // subcommands and the TCP control frames
+    let recorder = Arc::new(fp_xint::obs::TraceRecorder::default());
     let coord = Arc::new(Coordinator::new(
         BatcherConfig::default(),
-        ExpansionScheduler::new(pool),
+        ExpansionScheduler::new(pool).with_recorder(recorder),
     ));
     let handle =
         serve::serve_tcp(&format!("127.0.0.1:{port}"), coord.clone()).expect("bind server");
@@ -158,6 +167,45 @@ fn mlp_weights_of(model: &fp_xint::models::Model) -> MlpWeights {
         w2: linears[1].w.clone(),
         b2: linears[1].b.clone().unwrap_or_else(|| Tensor::zeros(&[linears[1].w.dims()[0]])),
     }
+}
+
+fn parse_addr(args: &mut Args) -> std::net::SocketAddr {
+    let addr = args.get("addr", "127.0.0.1:7878");
+    match addr.parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --addr {addr:?}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_metrics(mut args: Args) {
+    let addr = parse_addr(&mut args);
+    match serve::client_metrics(addr) {
+        Ok(text) => print!("{text}"),
+        Err(e) => {
+            eprintln!("metrics scrape from {addr} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_trace(mut args: Args) {
+    let addr = parse_addr(&mut args);
+    let out = args.get("out", "trace.json");
+    let json = match serve::client_trace_json(addr) {
+        Ok(json) => json,
+        Err(e) => {
+            eprintln!("trace dump from {addr} failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out} ({} bytes) — open in Perfetto or chrome://tracing", json.len());
 }
 
 fn cmd_info() {

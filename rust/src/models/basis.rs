@@ -143,19 +143,23 @@ mod tests {
     use crate::datasets::SynthImg;
     use crate::models::zoo;
     use crate::train::TrainConfig;
-    use once_cell::sync::Lazy;
+    use std::sync::OnceLock;
 
-    static FIX: Lazy<(Model, SynthImg)> = Lazy::new(|| {
-        let data = SynthImg::new(4, 1, 12, 0.2, 301);
-        let mut m = zoo::mini_resnet_a(4, 302);
-        let cfg = TrainConfig { steps: 100, batch: 24, lr: 0.05, log_every: 1000 };
-        crate::train::train_classifier(&mut m, &data, &cfg);
-        (m, data)
-    });
+    static FIX: OnceLock<(Model, SynthImg)> = OnceLock::new();
+
+    fn fixture() -> &'static (Model, SynthImg) {
+        FIX.get_or_init(|| {
+            let data = SynthImg::new(4, 1, 12, 0.2, 301);
+            let mut m = zoo::mini_resnet_a(4, 302);
+            let cfg = TrainConfig { steps: 100, batch: 24, lr: 0.05, log_every: 1000 };
+            crate::train::train_classifier(&mut m, &data, &cfg);
+            (m, data)
+        })
+    }
 
     #[test]
     fn slices_are_isomorphic_and_low_bit() {
-        let (m, data) = &*FIX;
+        let (m, data) = fixture();
         let mut slices = basis_slices(m, 8, 3);
         assert_eq!(slices.len(), 3);
         let probe = data.batch(8, 3).x;
@@ -172,7 +176,7 @@ mod tests {
     fn weight_sum_over_slices_reconstructs_folded_weights() {
         // Σᵢ W_i == folded FP weights within the Theorem-1 bound —
         // the weight-side half of Theorem 2 is exact
-        let (m, _) = &*FIX;
+        let (m, _) = fixture();
         let terms = 3;
         let slices = basis_slices(m, 8, terms);
         let mut folded = m.clone();
@@ -198,7 +202,7 @@ mod tests {
 
     #[test]
     fn reduced_slices_track_fp_and_improve_with_terms() {
-        let (m, data) = &*FIX;
+        let (m, data) = fixture();
         let probe = data.batch(32, 3).x;
         let val = data.batch(128, 2);
         let mut folded = m.clone();
@@ -232,7 +236,7 @@ mod tests {
     fn interchange_gap_is_measurable_and_bounded() {
         // quantify the Theorem-2 gap: reduced-slices output vs the
         // layer-sync quantized model output
-        let (m, data) = &*FIX;
+        let (m, data) = fixture();
         let probe = data.batch(16, 3).x;
         let mut slices = basis_slices(m, 8, 3);
         calibrate_slices(&mut slices, &probe, 8);

@@ -15,11 +15,12 @@
 
 use super::graph::{Layer, Model};
 use crate::tensor::Tensor;
-use crate::xint::budget::{BudgetPlan, ForwardStats};
+use crate::xint::budget::{BudgetPlan, ForwardStats, LayerTrace, TermBudget};
 use crate::xint::layer::{LayerPolicy, XintConv2d, XintLinear};
 use crate::xint::monitor::{ConfigMismatch, ExpansionMonitor};
 use crate::xint::planner::LayerGridProfile;
 use crate::xint::quantizer::{channel_range, Clip, Range, Symmetry};
+use std::time::{Duration, Instant};
 
 /// A quantized mirror of [`Model`]: same topology, expanded conv/linear.
 #[derive(Clone, Debug)]
@@ -40,6 +41,35 @@ pub enum QuantLayer {
 pub struct QuantModel {
     pub name: String,
     pub layers: Vec<QuantLayer>,
+}
+
+/// Collector for a traced forward: per-layer [`LayerTrace`] entries
+/// stamped with ns offsets from the forward's start.
+struct LayerSink {
+    t0: Instant,
+    entries: Vec<LayerTrace>,
+}
+
+impl LayerSink {
+    fn push(&mut self, index: usize, executed: usize, planned: usize, started: Duration) {
+        self.entries.push(LayerTrace {
+            index,
+            grid_terms: executed,
+            // a resolved policy can only widen past the raw plan entry
+            // (§5.1 exemption), never report less than what ran
+            planned_grid: planned.max(executed),
+            t_start_ns: started.as_nanos() as u64,
+            t_end_ns: self.t0.elapsed().as_nanos() as u64,
+        });
+    }
+}
+
+/// GEMMs a budget permits against a concrete `k × t` grid: the clamped
+/// axis rectangle, further capped by the budget's total grid cap.
+fn planned_grid(k: usize, t: usize, budget: &TermBudget) -> usize {
+    let (w, a) = budget.clamp_to(k, t);
+    let grid = w * a;
+    budget.grid_terms.map_or(grid, |g| g.min(grid))
 }
 
 impl QuantLayer {
@@ -71,19 +101,51 @@ impl QuantLayer {
         idx: &mut usize,
         stats: &mut ForwardStats,
     ) -> Tensor {
+        self.forward_impl(x, plan, idx, stats, None)
+    }
+
+    fn forward_impl(
+        &self,
+        x: &Tensor,
+        plan: &BudgetPlan,
+        idx: &mut usize,
+        stats: &mut ForwardStats,
+        mut sink: Option<&mut LayerSink>,
+    ) -> Tensor {
         match self {
             QuantLayer::Conv(c) => {
-                let budget = plan.budget_for(*idx);
+                let pos = *idx;
+                let budget = plan.budget_for(pos);
                 *idx += 1;
+                let started = sink.as_ref().map(|s| s.t0.elapsed());
                 let (y, executed) = c.forward_with(x, &budget);
                 stats.record_layer(executed);
+                if let (Some(s), Some(t_start)) = (sink, started) {
+                    let exempt = c.policy.is_exempt() || c.uses_fp_fallback();
+                    let planned = if exempt {
+                        executed
+                    } else {
+                        planned_grid(c.weight.terms(), c.policy.a_terms, &budget)
+                    };
+                    s.push(pos, executed, planned, t_start);
+                }
                 y
             }
             QuantLayer::Linear(l) => {
-                let budget = plan.budget_for(*idx);
+                let pos = *idx;
+                let budget = plan.budget_for(pos);
                 *idx += 1;
+                let started = sink.as_ref().map(|s| s.t0.elapsed());
                 let (y, executed) = l.forward_with(x, &budget);
                 stats.record_layer(executed);
+                if let (Some(s), Some(t_start)) = (sink, started) {
+                    let planned = if l.policy.is_exempt() {
+                        executed
+                    } else {
+                        planned_grid(l.weight.terms(), l.policy.a_terms, &budget)
+                    };
+                    s.push(pos, executed, planned, t_start);
+                }
                 y
             }
             QuantLayer::ReLU => x.relu(),
@@ -97,11 +159,11 @@ impl QuantLayer {
             QuantLayer::Residual(main, short) => {
                 let mut h = x.clone();
                 for l in main {
-                    h = l.forward_with(&h, plan, idx, stats);
+                    h = l.forward_impl(&h, plan, idx, stats, sink.as_deref_mut());
                 }
                 let mut s = x.clone();
                 for l in short {
-                    s = l.forward_with(&s, plan, idx, stats);
+                    s = l.forward_impl(&s, plan, idx, stats, sink.as_deref_mut());
                 }
                 h.add(&s)
             }
@@ -111,7 +173,7 @@ impl QuantLayer {
                     .map(|b| {
                         let mut h = x.clone();
                         for l in b {
-                            h = l.forward_with(&h, plan, idx, stats);
+                            h = l.forward_impl(&h, plan, idx, stats, sink.as_deref_mut());
                         }
                         h
                     })
@@ -157,6 +219,28 @@ impl QuantModel {
             h = l.forward_with(&h, plan, &mut idx, &mut stats);
         }
         (h, stats)
+    }
+
+    /// [`QuantModel::forward_with`] plus one [`LayerTrace`] per
+    /// quantizable layer (depth-first order, matching the plan index):
+    /// executed vs planned grid terms and ns offsets from this call's
+    /// start, so the trace plane can nest per-layer grid spans inside
+    /// the basis worker's span. Numerically identical to the untraced
+    /// forward — tracing only timestamps, it never changes the grid
+    /// walk.
+    pub fn forward_traced(
+        &self,
+        x: &Tensor,
+        plan: &BudgetPlan,
+    ) -> (Tensor, ForwardStats, Vec<LayerTrace>) {
+        let mut stats = ForwardStats::default();
+        let mut idx = 0usize;
+        let mut sink = LayerSink { t0: Instant::now(), entries: Vec::new() };
+        let mut h = x.clone();
+        for l in &self.layers {
+            h = l.forward_impl(&h, plan, &mut idx, &mut stats, Some(&mut sink));
+        }
+        (h, stats, sink.entries)
     }
 
     pub fn storage_bytes(&self) -> usize {
@@ -607,6 +691,52 @@ mod tests {
         let (y, stats) = q.forward_with(&probe(), &plan);
         assert!(y.data().iter().all(|v| v.is_finite()));
         assert!(stats.grid_terms > 0);
+    }
+
+    #[test]
+    fn traced_forward_matches_untraced_and_accounts_every_layer() {
+        let mut m = zoo::mini_resnet_a(10, 23);
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(4, 4));
+        let x = probe();
+        for plan in [
+            BudgetPlan::full(),
+            BudgetPlan::uniform(TermBudget::new(1, 2)),
+            BudgetPlan::uniform(TermBudget::new(2, 4).with_scale_floor(1e-2)),
+        ] {
+            let (y, stats) = q.forward_with(&x, &plan);
+            let (yt, stats_t, traces) = q.forward_traced(&x, &plan);
+            assert_eq!(y.data(), yt.data(), "tracing must not change the forward");
+            assert_eq!(stats, stats_t);
+            assert_eq!(traces.len(), stats.layers, "one trace per quantizable layer");
+            // depth-first positions, in order, summing to the total
+            for (i, t) in traces.iter().enumerate() {
+                assert_eq!(t.index, i);
+                assert!(t.planned_grid >= t.grid_terms);
+                assert!(t.t_end_ns >= t.t_start_ns);
+            }
+            let sum: usize = traces.iter().map(|t| t.grid_terms).sum();
+            assert_eq!(sum, stats.grid_terms, "layer spans must sum to the total grid spend");
+        }
+    }
+
+    #[test]
+    fn traced_forward_reports_floor_stop_depth() {
+        let mut m = zoo::mini_resnet_a(10, 24);
+        let _ = m.forward_train(&probe());
+        let q = quantize_model(&m, LayerPolicy::new(4, 4));
+        // a full plan stops nowhere
+        let (_, _, full) = q.forward_traced(&probe(), &BudgetPlan::full());
+        assert!(full.iter().all(|t| !t.floor_stopped()));
+        assert!(full.iter().all(|t| t.planned_grid == t.grid_terms));
+        // an aggressive §5.3 floor must stop at least one interior
+        // layer's grid short of its planned rectangle
+        let plan = BudgetPlan::uniform(TermBudget::new(2, 4).with_scale_floor(0.5));
+        let (_, _, floored) = q.forward_traced(&probe(), &plan);
+        assert!(
+            floored.iter().any(|t| t.floor_stopped()),
+            "a 0.5 relative floor must truncate some layer: {floored:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Chrome-trace-event export: turn a flight-recorder snapshot into the
+//! JSON array format `chrome://tracing` and Perfetto's legacy importer
+//! open directly (`ui.perfetto.dev` → *Open trace file*).
+//!
+//! Every [`TraceEvent`] becomes one *complete* event (`"ph": "X"`) with
+//! microsecond `ts`/`dur`, `pid` fixed at 1 and `tid` set to the
+//! `trace_id` — so each request renders as its own track and the span
+//! chain (request → decode → queue wait → … → reply) nests visually on
+//! that track. Span details are exported as named `args` (labels from
+//! [`SpanKind::detail_names`]) next to the tier and error flag, putting
+//! the precision axis (grid terms, planned grid, budget) on the same
+//! timeline as the latency axis.
+
+use super::recorder::TraceEvent;
+use crate::util::json::Json;
+
+/// Build the Chrome-trace JSON array for a snapshot of events.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    Json::Arr(events.iter().map(event_json).collect())
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut args = vec![
+        ("tier".to_string(), Json::str(ev.tier.name())),
+        ("error".to_string(), Json::Bool(ev.error)),
+    ];
+    for (name, value) in ev.span.detail_names().iter().zip(ev.detail.iter()) {
+        if !name.is_empty() {
+            args.push((name.to_string(), Json::num(*value as f64)));
+        }
+    }
+    Json::Obj(
+        [
+            ("name".to_string(), Json::str(ev.span.name())),
+            ("cat".to_string(), Json::str("fpxint")),
+            ("ph".to_string(), Json::str("X")),
+            ("ts".to_string(), Json::num(ev.t_start_ns as f64 / 1_000.0)),
+            (
+                "dur".to_string(),
+                Json::num(ev.t_end_ns.saturating_sub(ev.t_start_ns) as f64 / 1_000.0),
+            ),
+            ("pid".to_string(), Json::num(1.0)),
+            ("tid".to_string(), Json::num(ev.trace_id as f64)),
+            ("args".to_string(), Json::Obj(args.into_iter().collect())),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::SpanKind;
+    use crate::qos::Tier;
+
+    #[test]
+    fn renders_valid_chrome_trace() {
+        let events = vec![
+            TraceEvent {
+                trace_id: 42,
+                span: SpanKind::Request,
+                tier: Tier::Exact,
+                error: false,
+                t_start_ns: 1_000,
+                t_end_ns: 9_000,
+                detail: [4, 8, 96],
+            },
+            TraceEvent {
+                trace_id: 42,
+                span: SpanKind::WorkerTerm,
+                tier: Tier::Exact,
+                error: true,
+                t_start_ns: 2_000,
+                t_end_ns: 3_500,
+                detail: [3, 12, 0],
+            },
+        ];
+        let text = chrome_trace_json(&events).render();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let root = &arr[0];
+        assert_eq!(root.get("name").unwrap().as_str(), Some("request"));
+        assert_eq!(root.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(root.get("ts").unwrap().as_num(), Some(1.0));
+        assert_eq!(root.get("dur").unwrap().as_num(), Some(8.0));
+        assert_eq!(root.get("tid").unwrap().as_usize(), Some(42));
+        let args = root.get("args").unwrap();
+        assert_eq!(args.get("tier").unwrap().as_str(), Some("exact"));
+        assert_eq!(args.get("error"), Some(&Json::Bool(false)));
+        assert_eq!(args.get("rows").unwrap().as_usize(), Some(4));
+        assert_eq!(args.get("grid_terms").unwrap().as_usize(), Some(96));
+        let worker = &arr[1];
+        assert_eq!(worker.get("args").unwrap().get("worker").unwrap().as_usize(), Some(3));
+        assert_eq!(worker.get("args").unwrap().get("error"), Some(&Json::Bool(true)));
+        // unused detail slots are not exported
+        assert!(worker.get("args").unwrap().get("planned_grid").is_none());
+    }
+}

@@ -1,0 +1,154 @@
+//! Prometheus-style text exposition (text format 0.0.4): a small
+//! builder that enforces the format invariants the scrape linter checks
+//! — exactly one `# TYPE` per family, no duplicate series, plain
+//! parseable float values — so every exporter in the crate produces
+//! scrape-clean output by construction.
+
+use crate::util::stats::Histogram;
+use std::collections::BTreeSet;
+
+/// Accumulates one exposition document.
+#[derive(Default)]
+pub struct ExpositionBuilder {
+    out: String,
+    families: BTreeSet<String>,
+    series: BTreeSet<String>,
+}
+
+impl ExpositionBuilder {
+    pub fn new() -> ExpositionBuilder {
+        ExpositionBuilder::default()
+    }
+
+    /// Open a metric family: one `# HELP` + `# TYPE` header. Declaring
+    /// the same family twice is a caller bug (debug-asserted, ignored
+    /// in release so a scrape never dies on it).
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        if !self.families.insert(name.to_string()) {
+            debug_assert!(false, "duplicate metric family {name}");
+            return;
+        }
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one series line. Duplicate (name, labels) pairs are a
+    /// caller bug (debug-asserted, dropped in release).
+    pub fn series(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        let labels = render_labels(labels);
+        if !self.series.insert(format!("{name}{labels}")) {
+            debug_assert!(false, "duplicate series {name}{labels}");
+            return;
+        }
+        self.out.push_str(&format!("{name}{labels} {}\n", render_value(value)));
+    }
+
+    /// Emit the `_bucket`/`_sum`/`_count` series of a histogram family
+    /// (declare the family itself with `family(name, "histogram", …)`
+    /// first). Buckets are cumulative, closing with `le="+Inf"`.
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], hist: &Histogram) {
+        let bucket = format!("{name}_bucket");
+        let mut cumulative = 0u64;
+        for (bound, count) in hist.bounds().iter().zip(hist.bucket_counts()) {
+            cumulative += count;
+            let le = format!("{bound}");
+            let mut labels_le: Vec<(&str, &str)> = labels.to_vec();
+            labels_le.push(("le", &le));
+            self.series(&bucket, &labels_le, cumulative as f64);
+        }
+        let mut labels_inf: Vec<(&str, &str)> = labels.to_vec();
+        labels_inf.push(("le", "+Inf"));
+        self.series(&bucket, &labels_inf, hist.count() as f64);
+        self.series(&format!("{name}_sum"), labels, hist.sum());
+        self.series(&format!("{name}_count"), labels, hist.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn render_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_well_formed_exposition() {
+        let mut b = ExpositionBuilder::new();
+        b.family("fpxint_requests_total", "counter", "completed requests");
+        b.series("fpxint_requests_total", &[("tier", "exact")], 12.0);
+        b.series("fpxint_requests_total", &[("tier", "balanced")], 3.5);
+        b.family("fpxint_queue_depth", "gauge", "queued requests");
+        b.series("fpxint_queue_depth", &[], 0.0);
+        let text = b.finish();
+        assert_eq!(text.matches("# TYPE fpxint_requests_total").count(), 1);
+        assert!(text.contains("fpxint_requests_total{tier=\"exact\"} 12\n"));
+        assert!(text.contains("fpxint_requests_total{tier=\"balanced\"} 3.5\n"));
+        assert!(text.contains("fpxint_queue_depth 0\n"));
+    }
+
+    #[test]
+    fn histogram_series_are_cumulative_and_close_with_inf() {
+        let mut h = Histogram::new(vec![0.01, 0.1, 1.0]);
+        for v in [0.005, 0.005, 0.05, 0.5, 5.0] {
+            h.observe(v);
+        }
+        let mut b = ExpositionBuilder::new();
+        b.family("fpxint_latency_seconds", "histogram", "request latency");
+        b.histogram("fpxint_latency_seconds", &[("tier", "exact")], &h);
+        let text = b.finish();
+        assert!(text.contains("fpxint_latency_seconds_bucket{tier=\"exact\",le=\"0.01\"} 2\n"));
+        assert!(text.contains("fpxint_latency_seconds_bucket{tier=\"exact\",le=\"0.1\"} 3\n"));
+        assert!(text.contains("fpxint_latency_seconds_bucket{tier=\"exact\",le=\"1\"} 4\n"));
+        assert!(text.contains("fpxint_latency_seconds_bucket{tier=\"exact\",le=\"+Inf\"} 5\n"));
+        assert!(text.contains("fpxint_latency_seconds_count{tier=\"exact\"} 5\n"));
+    }
+
+    #[test]
+    fn duplicate_series_are_dropped_not_duplicated() {
+        // release behavior: the duplicate line never reaches the output
+        if cfg!(debug_assertions) {
+            return; // debug builds assert instead
+        }
+        let mut b = ExpositionBuilder::new();
+        b.family("m", "gauge", "x");
+        b.series("m", &[], 1.0);
+        b.series("m", &[], 2.0);
+        let text = b.finish();
+        assert_eq!(text.matches("\nm ").count(), 1);
+        assert!(text.contains("m 1\n"));
+        assert!(!text.contains("m 2\n"));
+    }
+
+    #[test]
+    fn special_values_render_parseably() {
+        assert_eq!(render_value(f64::NAN), "NaN");
+        assert_eq!(render_value(f64::INFINITY), "+Inf");
+        assert_eq!(render_value(1.25), "1.25");
+        assert_eq!(escape_label("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

@@ -1,0 +1,36 @@
+//! Observability plane: request-scoped tracing + metrics exposition.
+//!
+//! The FP=xINT serving stack trades *precision* for latency at runtime
+//! — tier budgets, per-layer [`BudgetPlan`](crate::xint::BudgetPlan)s,
+//! §5.3 anytime stops, per-tier pressure loops — so "why was this
+//! request served with 9 grid terms at 80 ms" is a per-request
+//! question. This module answers it:
+//!
+//! * [`recorder`] — the [`TraceRecorder`] flight-recorder ring: every
+//!   pipeline stage from TCP accept to per-layer grid execution records
+//!   a closed span keyed by the request's `trace_id` (threaded through
+//!   the wire protocol and echoed in the response). Lock-free,
+//!   bounded, drop-oldest; cheap enough to leave on in production.
+//! * [`export`] — Chrome-trace-event/Perfetto JSON dump of the ring
+//!   ([`chrome_trace_json`]), fetched over the serve protocol's trace
+//!   control frame or the `trace` CLI subcommand.
+//! * [`exposition`] — the [`ExpositionBuilder`] for Prometheus text
+//!   exposition (per-tier latency histograms, queue depths, sheds,
+//!   pressure, degrade/restore events, grid-term means, est-loss),
+//!   served by the metrics control frame / `metrics` CLI subcommand.
+//!
+//! Wiring: construct a recorder, hand it to
+//! `ExpansionScheduler::with_recorder` (the
+//! [`Coordinator`](crate::coordinator::Coordinator) picks it up from
+//! the scheduler, exactly like the QoS controller), and serve — every
+//! request now leaves a well-nested span chain
+//! `request → decode/admission/queue_wait/batch_form/schedule/
+//! worker_term/layer_grid/reduce/reply` in the ring.
+
+pub mod export;
+pub mod exposition;
+pub mod recorder;
+
+pub use export::chrome_trace_json;
+pub use exposition::ExpositionBuilder;
+pub use recorder::{SpanKind, TraceEvent, TraceRecorder, DEFAULT_CAPACITY};

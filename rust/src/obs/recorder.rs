@@ -1,0 +1,405 @@
+//! Lock-free flight recorder: a bounded ring of closed span events.
+//!
+//! The recorder is the hot-path half of the trace plane: every pipeline
+//! stage (accept/decode, admission, queue wait, batch formation,
+//! schedule, per-worker term execution, reduction, reply, per-layer
+//! grid) records one **closed** span — `(trace_id, kind, tier,
+//! t_start_ns, t_end_ns, detail)` — into a fixed-size ring with a
+//! single `fetch_add` cursor. Writers never block, never allocate, and
+//! never contend on a lock; when the ring wraps, the oldest events are
+//! overwritten (drop-oldest, [`TraceRecorder::dropped`] counts the
+//! loss). Timestamps are nanoseconds on a monotonic clock anchored at
+//! the recorder's construction ([`TraceRecorder::now_ns`] /
+//! [`TraceRecorder::ns_of`]), so spans from every thread share one
+//! timeline.
+//!
+//! Each slot is a seqlock: the writer flips the slot's sequence word
+//! odd, stores the fields, then flips it even; the reader
+//! ([`TraceRecorder::events`]) rejects slots whose sequence is odd or
+//! changed mid-read. All fields are relaxed atomics — a torn read is
+//! impossible to observe as anything but a rejected slot under the
+//! sequence check, and there is no `unsafe` anywhere. (Two writers can
+//! race one slot only after the cursor laps the whole ring between a
+//! reader's two sequence loads — with the default 64 Ki slots that is a
+//! diagnostic-quality non-event, not a soundness hazard.)
+
+use crate::qos::Tier;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Default ring capacity (events). At ~10 events per request this holds
+/// the last several thousand requests.
+pub const DEFAULT_CAPACITY: usize = 64 * 1024;
+
+/// Pipeline stage a span covers. The numbering is stable (it is packed
+/// into ring slots and exported); append, never reorder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// root span: TCP accept of the request header → reply flushed
+    Request = 0,
+    /// header + payload read and tensor decode
+    Decode = 1,
+    /// admission control (queue-cap check); `error` flags a shed
+    Admission = 2,
+    /// per-tier queue residence: enqueue → batch formation
+    QueueWait = 3,
+    /// batch formation → scheduler pickup
+    BatchForm = 4,
+    /// scheduler dispatch: budget/plan resolution before reduction
+    Schedule = 5,
+    /// one basis worker executing its term (detail: worker index, grid
+    /// terms executed)
+    WorkerTerm = 6,
+    /// the ⊎ prefix reduction across worker outputs
+    Reduce = 7,
+    /// response encode + socket write
+    Reply = 8,
+    /// one quantized layer's Eq. 3 grid execution (detail: layer
+    /// position, executed grid terms, planned grid terms)
+    LayerGrid = 9,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 10] = [
+        SpanKind::Request,
+        SpanKind::Decode,
+        SpanKind::Admission,
+        SpanKind::QueueWait,
+        SpanKind::BatchForm,
+        SpanKind::Schedule,
+        SpanKind::WorkerTerm,
+        SpanKind::Reduce,
+        SpanKind::Reply,
+        SpanKind::LayerGrid,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(v as usize).copied()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Decode => "decode",
+            SpanKind::Admission => "admission",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::Schedule => "schedule",
+            SpanKind::WorkerTerm => "worker_term",
+            SpanKind::Reduce => "reduce",
+            SpanKind::Reply => "reply",
+            SpanKind::LayerGrid => "layer_grid",
+        }
+    }
+
+    /// Labels for the three detail slots (empty = unused), so exports
+    /// can name arguments instead of dumping raw integers.
+    pub fn detail_names(&self) -> [&'static str; 3] {
+        match self {
+            SpanKind::Request => ["rows", "terms", "grid_terms"],
+            SpanKind::Decode => ["rows", "cols", ""],
+            SpanKind::Admission => ["queue_depth", "", ""],
+            SpanKind::QueueWait => ["queue_depth", "", ""],
+            SpanKind::BatchForm => ["batch_rows", "parts", ""],
+            SpanKind::Schedule => ["budget_terms", "planned_grid", ""],
+            SpanKind::WorkerTerm => ["worker", "grid_terms", ""],
+            SpanKind::Reduce => ["terms", "grid_terms", ""],
+            SpanKind::Reply => ["bytes", "", ""],
+            SpanKind::LayerGrid => ["layer", "grid_terms", "planned_grid"],
+        }
+    }
+}
+
+impl std::fmt::Display for SpanKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One closed span, as read back out of the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// request-scoped correlation id (echoed in the TCP response)
+    pub trace_id: u64,
+    pub span: SpanKind,
+    pub tier: Tier,
+    /// true when the stage failed (shed, batch error, …) — error-path
+    /// requests still close every span, they just carry this flag
+    pub error: bool,
+    /// nanoseconds since the recorder epoch
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    /// span-specific payload, labeled by [`SpanKind::detail_names`]
+    pub detail: [u64; 3],
+}
+
+fn pack_meta(span: SpanKind, tier: Tier, error: bool) -> u64 {
+    (span as u64) | ((tier.idx() as u64) << 8) | ((error as u64) << 16)
+}
+
+fn unpack_meta(meta: u64) -> Option<(SpanKind, Tier, bool)> {
+    let span = SpanKind::from_u8((meta & 0xff) as u8)?;
+    let tier = Tier::from_u32(((meta >> 8) & 0xff) as u32)?;
+    Some((span, tier, (meta >> 16) & 1 == 1))
+}
+
+#[derive(Default)]
+struct Slot {
+    /// seqlock word: 0 = never written, odd = write in progress,
+    /// even = stable (the writer stores `2n+1` then `2n+2` for cursor
+    /// position `n`, so every write changes the value)
+    seq: AtomicU64,
+    trace_id: AtomicU64,
+    t_start: AtomicU64,
+    t_end: AtomicU64,
+    meta: AtomicU64,
+    d0: AtomicU64,
+    d1: AtomicU64,
+    d2: AtomicU64,
+}
+
+/// The flight recorder. Cheap to share (`Arc`), cheap to write (one
+/// `fetch_add` + eight relaxed stores), bounded in memory.
+pub struct TraceRecorder {
+    epoch: Instant,
+    slots: Vec<Slot>,
+    cursor: AtomicU64,
+}
+
+impl TraceRecorder {
+    /// A recorder holding the last `capacity` events (min 1).
+    pub fn new(capacity: usize) -> TraceRecorder {
+        let capacity = capacity.max(1);
+        TraceRecorder {
+            epoch: Instant::now(),
+            slots: std::iter::repeat_with(Slot::default).take(capacity).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Nanoseconds since the recorder epoch, now.
+    pub fn now_ns(&self) -> u64 {
+        self.ns_of(Instant::now())
+    }
+
+    /// Nanoseconds since the recorder epoch for an [`Instant`] captured
+    /// elsewhere (0 for instants before the epoch).
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch).map(|d| d.as_nanos() as u64).unwrap_or(0)
+    }
+
+    /// Record one closed span. Never blocks; overwrites the oldest
+    /// event when the ring is full.
+    pub fn record(&self, ev: TraceEvent) {
+        let n = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * n + 1, Ordering::Release);
+        slot.trace_id.store(ev.trace_id, Ordering::Relaxed);
+        slot.t_start.store(ev.t_start_ns, Ordering::Relaxed);
+        slot.t_end.store(ev.t_end_ns, Ordering::Relaxed);
+        slot.meta.store(pack_meta(ev.span, ev.tier, ev.error), Ordering::Relaxed);
+        slot.d0.store(ev.detail[0], Ordering::Relaxed);
+        slot.d1.store(ev.detail[1], Ordering::Relaxed);
+        slot.d2.store(ev.detail[2], Ordering::Relaxed);
+        slot.seq.store(2 * n + 2, Ordering::Release);
+    }
+
+    /// Convenience wrapper over [`TraceRecorder::record`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_span(
+        &self,
+        trace_id: u64,
+        span: SpanKind,
+        tier: Tier,
+        error: bool,
+        t_start_ns: u64,
+        t_end_ns: u64,
+        detail: [u64; 3],
+    ) {
+        self.record(TraceEvent { trace_id, span, tier, error, t_start_ns, t_end_ns, detail });
+    }
+
+    /// Total events ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring wraparound (drop-oldest).
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Snapshot the ring: every stable event, ordered by start time
+    /// (ties: longer span first, so parents precede their children).
+    /// Slots being written concurrently are skipped, not torn.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // never written, or write in progress
+            }
+            let trace_id = slot.trace_id.load(Ordering::Acquire);
+            let t_start_ns = slot.t_start.load(Ordering::Acquire);
+            let t_end_ns = slot.t_end.load(Ordering::Acquire);
+            let meta = slot.meta.load(Ordering::Acquire);
+            let detail = [
+                slot.d0.load(Ordering::Acquire),
+                slot.d1.load(Ordering::Acquire),
+                slot.d2.load(Ordering::Acquire),
+            ];
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue; // overwritten mid-read
+            }
+            if let Some((span, tier, error)) = unpack_meta(meta) {
+                out.push(TraceEvent { trace_id, span, tier, error, t_start_ns, t_end_ns, detail });
+            }
+        }
+        out.sort_by(|a, b| a.t_start_ns.cmp(&b.t_start_ns).then(b.t_end_ns.cmp(&a.t_end_ns)));
+        out
+    }
+
+    /// Snapshot of one request's spans, in the same order as
+    /// [`TraceRecorder::events`].
+    pub fn events_for(&self, trace_id: u64) -> Vec<TraceEvent> {
+        let mut evs = self.events();
+        evs.retain(|e| e.trace_id == trace_id);
+        evs
+    }
+}
+
+impl Default for TraceRecorder {
+    fn default() -> TraceRecorder {
+        TraceRecorder::new(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ev(trace_id: u64, span: SpanKind, t0: u64, t1: u64) -> TraceEvent {
+        TraceEvent {
+            trace_id,
+            span,
+            tier: Tier::Balanced,
+            error: false,
+            t_start_ns: t0,
+            t_end_ns: t1,
+            detail: [1, 2, 3],
+        }
+    }
+
+    #[test]
+    fn roundtrips_events() {
+        let rec = TraceRecorder::new(8);
+        rec.record(ev(7, SpanKind::Request, 100, 900));
+        rec.record(ev(7, SpanKind::Decode, 100, 200));
+        let evs = rec.events();
+        assert_eq!(evs.len(), 2);
+        // equal starts: the longer (parent) span sorts first
+        assert_eq!(evs[0].span, SpanKind::Request);
+        assert_eq!(evs[1].span, SpanKind::Decode);
+        assert_eq!(evs[0].trace_id, 7);
+        assert_eq!(evs[0].detail, [1, 2, 3]);
+        assert_eq!(evs[0].tier, Tier::Balanced);
+        assert!(!evs[0].error);
+        assert_eq!(rec.dropped(), 0);
+        assert_eq!(rec.events_for(7).len(), 2);
+        assert!(rec.events_for(8).is_empty());
+    }
+
+    #[test]
+    fn ring_drops_oldest() {
+        let rec = TraceRecorder::new(4);
+        for i in 0..10u64 {
+            rec.record(ev(i, SpanKind::Reply, i * 10, i * 10 + 5));
+        }
+        let evs = rec.events();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(rec.recorded(), 10);
+        assert_eq!(rec.dropped(), 6);
+        // the survivors are the newest four
+        let ids: Vec<u64> = evs.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn error_flag_and_tier_roundtrip() {
+        let rec = TraceRecorder::new(4);
+        for (i, &tier) in Tier::ALL.iter().enumerate() {
+            rec.record(TraceEvent {
+                trace_id: i as u64,
+                span: SpanKind::Admission,
+                tier,
+                error: i % 2 == 1,
+                t_start_ns: i as u64,
+                t_end_ns: i as u64 + 1,
+                detail: [0; 3],
+            });
+        }
+        let evs = rec.events();
+        assert_eq!(evs.len(), 4);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.tier, Tier::ALL[i]);
+            assert_eq!(e.error, i % 2 == 1);
+        }
+    }
+
+    #[test]
+    fn timestamps_are_monotonic() {
+        let rec = TraceRecorder::new(4);
+        let a = rec.now_ns();
+        let b = rec.now_ns();
+        assert!(b >= a);
+        let t = Instant::now();
+        assert!(rec.ns_of(t) >= a);
+        // an instant before the epoch clamps to zero instead of panicking
+        if let Some(past) = t.checked_sub(std::time::Duration::from_secs(3600)) {
+            assert_eq!(TraceRecorder::new(1).ns_of(past), 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_never_corrupt_the_ring() {
+        let rec = Arc::new(TraceRecorder::new(64));
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let rec = Arc::clone(&rec);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    rec.record(ev(w * 10_000 + i, SpanKind::WorkerTerm, i, i + 1));
+                }
+            }));
+        }
+        let _ = rec.events(); // read while writers are racing
+        for h in handles {
+            h.join().unwrap();
+        }
+        let evs = rec.events();
+        assert!(evs.len() <= 64);
+        assert_eq!(rec.recorded(), 4000);
+        // every surviving event is one that was actually written
+        for e in &evs {
+            assert_eq!(e.span, SpanKind::WorkerTerm);
+            assert_eq!(e.t_end_ns, e.t_start_ns + 1);
+            assert!(e.trace_id % 10_000 < 1000);
+        }
+    }
+
+    #[test]
+    fn span_kind_table_is_consistent() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+            assert!(!k.name().is_empty());
+            assert_eq!(k.to_string(), k.name());
+        }
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+    }
+}

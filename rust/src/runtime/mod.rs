@@ -124,7 +124,7 @@ mod tests {
     #[test]
     fn fp_mlp_artifact_matches_native_forward() {
         if !artifacts_ready() {
-            eprintln!("skipping: run `make artifacts` first");
+            log::warn!("skipping: run `make artifacts` first");
             return;
         }
         let mut rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
@@ -151,7 +151,7 @@ mod tests {
     #[test]
     fn quantize_artifact_matches_native_fake_quant() {
         if !artifacts_ready() {
-            eprintln!("skipping: run `make artifacts` first");
+            log::warn!("skipping: run `make artifacts` first");
             return;
         }
         let mut rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();
@@ -171,7 +171,7 @@ mod tests {
     #[test]
     fn executable_cache_hits() {
         if !artifacts_ready() {
-            eprintln!("skipping: run `make artifacts` first");
+            log::warn!("skipping: run `make artifacts` first");
             return;
         }
         let mut rt = Runtime::cpu(Runtime::default_artifact_dir()).unwrap();

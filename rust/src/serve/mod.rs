@@ -8,7 +8,10 @@ pub mod server;
 pub mod workers;
 
 pub use loadgen::{run_trace, run_trace_mix, LoadReport, TierReport};
-pub use server::{client_infer, client_infer_tier, serve_tcp, TcpServerHandle};
+pub use server::{
+    client_infer, client_infer_tier, client_infer_traced, client_metrics, client_trace_json,
+    serve_tcp, TcpServerHandle,
+};
 pub use workers::{
     mlp_basis_factory, mlp_basis_factory_with, BiasPlacement, MlpWeights, PjrtMlpWorker,
     QuantModelWorker,

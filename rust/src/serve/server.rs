@@ -1,24 +1,37 @@
 //! TCP front-end speaking a minimal binary protocol:
 //!
-//! request : [u32 n][u32 d][u32 tier][n·d × f32 LE]
-//! response: [u32 n][u32 c][n·c × f32 LE]
-//!           [0][0][u32 tier]             shed: that tier's bounded queue
-//!                                        was full (per-tier admission
-//!                                        control; `tier` is the [`Tier`]
-//!                                        wire encoding of the queue that
-//!                                        refused the request)
-//!           [0][1][u32 len][len × u8]    batch failure (UTF-8 message)
-//!           [0][2]                       malformed request (bad header
-//!                                        or unknown tier); the
-//!                                        connection is closed
+//! request : [u32 n][u32 d][u32 tier][u64 trace_id][n·d × f32 LE]
+//! response: [u32 n][u32 c][u64 trace_id][n·c × f32 LE]
+//!           [0][0][u64 trace_id][u32 tier]  shed: that tier's bounded
+//!                                           queue was full (per-tier
+//!                                           admission control; `tier` is
+//!                                           the [`Tier`] wire encoding
+//!                                           of the queue that refused
+//!                                           the request)
+//!           [0][1][u64 trace_id][u32 len][len × u8]
+//!                                           batch failure (UTF-8 message)
+//!           [0][2][u64 trace_id]            malformed request (bad header
+//!                                           or unknown tier; `trace_id`
+//!                                           is 0 when the header never
+//!                                           parsed far enough to carry
+//!                                           one); the connection is
+//!                                           closed
+//! control : [u32::MAX][u32 code]  →  [u32 len][len × u8]
+//!           code 1 = Prometheus-style metrics exposition (text)
+//!           code 2 = flight-recorder dump as Chrome-trace JSON
 //!
 //! `tier` is the QoS service tier ([`Tier`] wire encoding): it selects
 //! how many basis terms of the series the coordinator reduces for this
-//! request, and which bounded queue admits it. The server is a thin
-//! shim over the in-process [`Coordinator`]; one OS thread per
-//! connection (std only — tokio is unavailable offline).
+//! request, and which bounded queue admits it. `trace_id` correlates the
+//! reply with the flight recorder's spans: 0 asks the server to assign a
+//! fresh id (echoed in the response header), any other value is threaded
+//! through verbatim. Malformed requests close the connection before a
+//! trace id exists, so they are the one error path without a span. The
+//! server is a thin shim over the in-process [`Coordinator`]; one OS
+//! thread per connection (std only — tokio is unavailable offline).
 
 use crate::coordinator::{Coordinator, SubmitError};
+use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::Tier;
 use crate::tensor::Tensor;
 use std::io::{Read, Write};
@@ -33,6 +46,14 @@ pub const CODE_SHED: u32 = 0;
 pub const CODE_BATCH_FAILED: u32 = 1;
 /// Error code: malformed request header or unknown tier (no payload).
 pub const CODE_MALFORMED: u32 = 2;
+
+/// `n` sentinel marking a control frame; the `d` word carries the
+/// control code and no tensor payload follows.
+pub const CONTROL_SENTINEL: u32 = u32::MAX;
+/// Control code: reply with the Prometheus-style metrics exposition.
+pub const CTRL_METRICS: u32 = 1;
+/// Control code: reply with the flight recorder's Chrome-trace JSON.
+pub const CTRL_TRACE: u32 = 2;
 
 /// Handle to a running TCP server.
 pub struct TcpServerHandle {
@@ -58,47 +79,102 @@ fn read_exact_u32(s: &mut TcpStream) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-fn write_error_frame(stream: &mut TcpStream, code: u32, payload: &[u8]) -> bool {
-    let mut out = Vec::with_capacity(8 + payload.len());
+fn read_exact_u64(s: &mut TcpStream) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_error_frame(stream: &mut TcpStream, code: u32, trace_id: u64, payload: &[u8]) -> bool {
+    let mut out = Vec::with_capacity(16 + payload.len());
     out.extend_from_slice(&0u32.to_le_bytes());
     out.extend_from_slice(&code.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
     out.extend_from_slice(payload);
     stream.write_all(&out).is_ok()
 }
 
-fn write_shed_frame(stream: &mut TcpStream, tier: Tier) -> bool {
-    write_error_frame(stream, CODE_SHED, &tier.as_u32().to_le_bytes())
+fn write_shed_frame(stream: &mut TcpStream, trace_id: u64, tier: Tier) -> bool {
+    write_error_frame(stream, CODE_SHED, trace_id, &tier.as_u32().to_le_bytes())
 }
 
-fn write_failure_frame(stream: &mut TcpStream, msg: &str) -> bool {
+fn write_failure_frame(stream: &mut TcpStream, trace_id: u64, msg: &str) -> bool {
     let bytes = msg.as_bytes();
     let mut payload = Vec::with_capacity(4 + bytes.len());
     payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     payload.extend_from_slice(bytes);
-    write_error_frame(stream, CODE_BATCH_FAILED, &payload)
+    write_error_frame(stream, CODE_BATCH_FAILED, trace_id, &payload)
+}
+
+/// Close the request-root span: every exit path of a parsed request —
+/// success, shed, batch failure — leaves a `Request` span so error
+/// traces are as complete as served ones.
+fn record_request(
+    rec: &Option<Arc<TraceRecorder>>,
+    trace_id: u64,
+    tier: Tier,
+    error: bool,
+    t0: u64,
+    detail: [u64; 3],
+) {
+    if let Some(rec) = rec {
+        rec.record_span(trace_id, SpanKind::Request, tier, error, t0, rec.now_ns(), detail);
+    }
 }
 
 fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
+    let rec = coord.recorder.clone();
     loop {
         let n = match read_exact_u32(&mut stream) {
-            Ok(v) => v as usize,
+            Ok(v) => v,
             Err(_) => return, // client closed
         };
+        // the request-root span opens at the first header byte of this
+        // frame, so it encloses decode, admission and reply
+        let t_req = rec.as_ref().map_or(0, |r| r.now_ns());
         let d = match read_exact_u32(&mut stream) {
-            Ok(v) => v as usize,
+            Ok(v) => v,
             Err(_) => return,
         };
+        if n == CONTROL_SENTINEL {
+            // control frames carry no tensor, so they are matched
+            // before the n·d size guard
+            let body = match d {
+                CTRL_METRICS => coord.exposition(),
+                CTRL_TRACE => coord.trace_json(),
+                _ => {
+                    let _ = write_error_frame(&mut stream, CODE_MALFORMED, 0, &[]);
+                    return;
+                }
+            };
+            let bytes = body.as_bytes();
+            let mut out = Vec::with_capacity(4 + bytes.len());
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(bytes);
+            if stream.write_all(&out).is_err() {
+                return;
+            }
+            continue;
+        }
+        let (n, d) = (n as usize, d as usize);
         if n == 0 || d == 0 || n * d > 16 * 1024 * 1024 {
-            let _ = write_error_frame(&mut stream, CODE_MALFORMED, &[]);
+            let _ = write_error_frame(&mut stream, CODE_MALFORMED, 0, &[]);
             return;
         }
         let tier = match read_exact_u32(&mut stream).ok().and_then(Tier::from_u32) {
             Some(t) => t,
             None => {
-                let _ = write_error_frame(&mut stream, CODE_MALFORMED, &[]);
+                let _ = write_error_frame(&mut stream, CODE_MALFORMED, 0, &[]);
                 return;
             }
         };
+        let wire_id = match read_exact_u64(&mut stream) {
+            Ok(v) => v,
+            Err(_) => return,
+        };
+        // 0 asks the server to assign; the reply header echoes the id
+        let trace_id = if wire_id == 0 { coord.fresh_trace_id() } else { wire_id };
+        let t_dec = rec.as_ref().map_or(0, |r| r.now_ns());
         let mut buf = vec![0u8; n * d * 4];
         if stream.read_exact(&mut buf).is_err() {
             return;
@@ -108,7 +184,11 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         let x = Tensor::from_vec(&[n, d], data);
-        let rx = match coord.submit_tier(x, tier) {
+        if let Some(r) = &rec {
+            let detail = [n as u64, d as u64, 0];
+            r.record_span(trace_id, SpanKind::Decode, tier, false, t_dec, r.now_ns(), detail);
+        }
+        let rx = match coord.submit_tier_traced(x, tier, trace_id) {
             Ok(rx) => rx,
             Err(SubmitError::Busy(full_tier)) => {
                 // surface the refusing tier's OWN control state: under
@@ -121,45 +201,61 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
                     ),
                     None => log::warn!("request shed: {full_tier} queue full"),
                 }
-                if !write_shed_frame(&mut stream, full_tier) {
+                let sent = write_shed_frame(&mut stream, trace_id, full_tier);
+                record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
+                if !sent {
                     return;
                 }
                 continue;
             }
             Err(SubmitError::Closed) => {
-                if !write_failure_frame(&mut stream, "coordinator stopped") {
+                let sent = write_failure_frame(&mut stream, trace_id, "coordinator stopped");
+                record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
+                if !sent {
                     return;
                 }
                 continue;
             }
         };
-        let reply = match rx.recv() {
-            Ok(resp) => match resp.error {
-                None => resp.logits,
-                Some(msg) => {
-                    log::warn!("request failed: {msg}");
-                    if !write_failure_frame(&mut stream, &msg) {
-                        return;
-                    }
-                    continue;
-                }
-            },
+        let resp = match rx.recv() {
+            Ok(resp) => resp,
             Err(_) => {
                 // batcher died mid-request; tell the client explicitly
-                if !write_failure_frame(&mut stream, "coordinator stopped") {
+                let sent = write_failure_frame(&mut stream, trace_id, "coordinator stopped");
+                record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
+                if !sent {
                     return;
                 }
                 continue;
             }
         };
+        if let Some(msg) = &resp.error {
+            log::warn!("request failed: {msg}");
+            let sent = write_failure_frame(&mut stream, trace_id, msg);
+            record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
+            if !sent {
+                return;
+            }
+            continue;
+        }
+        let reply = &resp.logits;
+        let t_rep = rec.as_ref().map_or(0, |r| r.now_ns());
         let (rn, rc) = (reply.dims()[0] as u32, reply.dims()[1] as u32);
-        let mut out = Vec::with_capacity(8 + reply.numel() * 4);
+        let mut out = Vec::with_capacity(16 + reply.numel() * 4);
         out.extend_from_slice(&rn.to_le_bytes());
         out.extend_from_slice(&rc.to_le_bytes());
+        out.extend_from_slice(&resp.trace_id.to_le_bytes());
         for &v in reply.data() {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        if stream.write_all(&out).is_err() {
+        let sent = stream.write_all(&out).is_ok();
+        if let Some(r) = &rec {
+            let detail = [out.len() as u64, 0, 0];
+            r.record_span(trace_id, SpanKind::Reply, tier, !sent, t_rep, r.now_ns(), detail);
+        }
+        let detail = [n as u64, resp.terms as u64, resp.grid_terms as u64];
+        record_request(&rec, trace_id, tier, !sent, t_req, detail);
+        if !sent {
             return;
         }
     }
@@ -202,18 +298,34 @@ pub fn client_infer_tier(
     x: &Tensor,
     tier: Tier,
 ) -> anyhow::Result<Tensor> {
+    Ok(client_infer_traced(addr, x, tier, 0)?.0)
+}
+
+/// Blocking client call carrying an explicit trace id (0 asks the
+/// server to assign one). Returns the reply and the trace id echoed in
+/// the response header — the key for joining this request onto the
+/// flight recorder's spans (`trace` control frame or CLI subcommand).
+pub fn client_infer_traced(
+    addr: std::net::SocketAddr,
+    x: &Tensor,
+    tier: Tier,
+    trace_id: u64,
+) -> anyhow::Result<(Tensor, u64)> {
     let mut s = TcpStream::connect(addr)?;
     let (n, d) = (x.dims()[0] as u32, x.dims()[1] as u32);
-    let mut msg = Vec::with_capacity(12 + x.numel() * 4);
+    let mut msg = Vec::with_capacity(20 + x.numel() * 4);
     msg.extend_from_slice(&n.to_le_bytes());
     msg.extend_from_slice(&d.to_le_bytes());
     msg.extend_from_slice(&tier.as_u32().to_le_bytes());
+    msg.extend_from_slice(&trace_id.to_le_bytes());
     for &v in x.data() {
         msg.extend_from_slice(&v.to_le_bytes());
     }
     s.write_all(&msg)?;
     let rn = read_exact_u32(&mut s)? as usize;
     let rc = read_exact_u32(&mut s)? as usize;
+    // success and error frames both carry the trace id at bytes 8..16
+    let echoed = read_exact_u64(&mut s)?;
     if rn == 0 {
         match rc as u32 {
             CODE_SHED => {
@@ -240,7 +352,29 @@ pub fn client_infer_tier(
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    Ok(Tensor::from_vec(&[rn, rc], data))
+    Ok((Tensor::from_vec(&[rn, rc], data), echoed))
+}
+
+fn client_control(addr: std::net::SocketAddr, code: u32) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(&CONTROL_SENTINEL.to_le_bytes())?;
+    s.write_all(&code.to_le_bytes())?;
+    let len = read_exact_u32(&mut s)? as usize;
+    let mut buf = vec![0u8; len];
+    s.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+/// Fetch the server's Prometheus-style metrics exposition over the
+/// metrics control frame.
+pub fn client_metrics(addr: std::net::SocketAddr) -> anyhow::Result<String> {
+    client_control(addr, CTRL_METRICS)
+}
+
+/// Fetch the flight recorder's Chrome-trace JSON over the trace control
+/// frame (`[]` when the server runs without a recorder).
+pub fn client_trace_json(addr: std::net::SocketAddr) -> anyhow::Result<String> {
+    client_control(addr, CTRL_TRACE)
 }
 
 #[cfg(test)]
@@ -264,6 +398,15 @@ mod tests {
         Arc::new(Coordinator::new(
             BatcherConfig::uniform(8, 200, 64),
             ExpansionScheduler::new(pool),
+        ))
+    }
+
+    fn traced_coordinator(rec: Arc<TraceRecorder>) -> Arc<Coordinator> {
+        let pool =
+            WorkerPool::new(1, Arc::new(|_| Box::new(Double) as Box<dyn BasisWorker>));
+        Arc::new(Coordinator::new(
+            BatcherConfig::uniform(8, 200, 64),
+            ExpansionScheduler::new(pool).with_recorder(rec),
         ))
     }
 
@@ -416,6 +559,62 @@ mod tests {
         let err = client_infer(handle.addr, &x).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("boom"), "error frame must carry the cause: {msg}");
+        handle.stop();
+    }
+
+    #[test]
+    fn trace_id_echoed_and_request_spans_recorded() {
+        let rec = Arc::new(TraceRecorder::default());
+        let coord = traced_coordinator(rec.clone());
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let x = Tensor::zeros(&[2, 3]);
+        let (y, id) = client_infer_traced(handle.addr, &x, Tier::Balanced, 42).unwrap();
+        assert_eq!(y.dims(), &[2, 3]);
+        assert_eq!(id, 42, "caller-supplied trace id must echo back");
+        let (_, assigned) = client_infer_traced(handle.addr, &x, Tier::Exact, 0).unwrap();
+        assert_ne!(assigned, 0, "trace id 0 asks the server to assign one");
+        // the Request/Reply spans land just after the reply bytes, so
+        // poll briefly for the connection thread to record them
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let evs = rec.events_for(42);
+            let has = |k: SpanKind| evs.iter().any(|e| e.span == k && !e.error);
+            if has(SpanKind::Request)
+                && has(SpanKind::Decode)
+                && has(SpanKind::Admission)
+                && has(SpanKind::Reply)
+            {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "spans missing: {evs:?}");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn control_frames_expose_metrics_and_trace() {
+        let rec = Arc::new(TraceRecorder::default());
+        let coord = traced_coordinator(rec);
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let x = Tensor::zeros(&[1, 3]);
+        let _ = client_infer_tier(handle.addr, &x, Tier::Throughput).unwrap();
+        let metrics = client_metrics(handle.addr).unwrap();
+        assert!(
+            metrics.contains("# TYPE fpxint_requests_completed_total counter"),
+            "missing completed-counter family:\n{metrics}"
+        );
+        assert!(
+            metrics.contains("fpxint_request_latency_seconds_bucket"),
+            "missing latency histogram:\n{metrics}"
+        );
+        assert!(
+            metrics.contains("fpxint_trace_events_recorded_total"),
+            "missing recorder series:\n{metrics}"
+        );
+        let trace = client_trace_json(handle.addr).unwrap();
+        assert!(trace.trim_start().starts_with('['), "not a JSON array:\n{trace}");
+        assert!(trace.contains("\"ph\""), "no trace events emitted:\n{trace}");
         handle.stop();
     }
 }

@@ -64,8 +64,9 @@ impl BasisWorker for QuantModelWorker {
     /// layers stay exact) and reports the INT GEMMs actually executed.
     fn run_budgeted(&mut self, x: &Tensor, plan: &BudgetPlan) -> anyhow::Result<BudgetedRun> {
         let x = self.shaped(x);
-        let (y, stats) = self.model.forward_with(&x, plan);
-        Ok(BudgetedRun { y, grid_terms: stats.grid_terms })
+        let (y, stats, layer_traces) = self.model.forward_traced(&x, plan);
+        debug_assert_eq!(stats.layers, layer_traces.len());
+        Ok(BudgetedRun { y, grid_terms: stats.grid_terms, layer_traces })
     }
 }
 

@@ -1,9 +1,10 @@
 //! Tiny `log`-facade backend: leveled, timestamped stderr logging.
 
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 struct StderrLogger {
     level: LevelFilter,
@@ -18,7 +19,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -35,6 +36,7 @@ impl log::Log for StderrLogger {
 /// Install the logger once; `verbose` raises the filter to Debug.
 /// Safe to call repeatedly (subsequent calls are no-ops).
 pub fn init(verbose: bool) {
+    let _ = START.get_or_init(Instant::now); // anchor t=0 at first init
     let level = if verbose { LevelFilter::Debug } else { LevelFilter::Info };
     let logger = Box::leak(Box::new(StderrLogger { level }));
     if log::set_logger(logger).is_ok() {

@@ -13,6 +13,6 @@ pub mod timer;
 
 pub use cli::Args;
 pub use config::Config;
-pub use stats::{mean, percentile, stddev, Summary};
+pub use stats::{mean, percentile, stddev, Histogram, Summary};
 pub use table::Table;
 pub use timer::BenchTimer;

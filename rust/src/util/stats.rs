@@ -79,6 +79,124 @@ impl std::fmt::Display for Summary {
     }
 }
 
+/// Fixed-bucket histogram for metrics exposition.
+///
+/// Where [`Summary`] keeps a raw reservoir (exact quantiles, unbounded
+/// precision, but unscrapeable), a `Histogram` is the export-friendly
+/// form: a fixed ascending ladder of bucket upper bounds plus an
+/// implicit `+Inf` overflow bucket, mergeable across shards and
+/// renderable as Prometheus `_bucket`/`_sum`/`_count` series. Quantiles
+/// are estimates (linear interpolation inside the covering bucket), so
+/// accuracy is set by the bucket ladder, not the sample count.
+///
+/// NaN observations follow the PR 5 `total_cmp` convention — a NaN
+/// latency must degrade the metric, never poison it: NaN lands in the
+/// overflow bucket and is counted, but is excluded from `sum` so the
+/// mean of the finite mass stays finite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// ascending, finite bucket upper bounds (`le` values)
+    bounds: Vec<f64>,
+    /// per-bucket counts; `counts[bounds.len()]` is the `+Inf` bucket
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// A histogram over the given ascending finite upper bounds.
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly ascending"
+        );
+        let counts = vec![0; bounds.len() + 1];
+        Histogram { bounds, counts, sum: 0.0, count: 0 }
+    }
+
+    /// The default request-latency ladder (seconds): log-ish 1/2.5/5
+    /// steps from 100 µs to 30 s, matching the tier SLO range
+    /// (25 ms / 100 ms / 500 ms targets all land mid-ladder).
+    pub fn latency_seconds() -> Histogram {
+        Histogram::new(vec![
+            0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+            1.0, 2.5, 5.0, 10.0, 30.0,
+        ])
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_nan() {
+            // counted (the observation happened) but excluded from the
+            // sum and binned as overflow — degrade, don't poison
+            let last = self.counts.len() - 1;
+            self.counts[last] += 1;
+            return;
+        }
+        self.sum += v;
+        let idx = self.bounds.partition_point(|b| v > *b);
+        self.counts[idx] += 1;
+    }
+
+    /// Fold another histogram (same bounds) into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "can only merge histograms with equal bounds");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Non-cumulative per-bucket counts (last entry = `+Inf` bucket).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total observations (including NaN).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of the finite observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Estimated quantile, `q ∈ [0, 1]`: linear interpolation inside
+    /// the bucket covering rank `q·count` (Prometheus
+    /// `histogram_quantile` semantics). Mass in the `+Inf` bucket
+    /// reports the largest finite bound — an explicit floor, not a
+    /// fabricated value. 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cumulative = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let before = cumulative as f64;
+            cumulative += c;
+            if (cumulative as f64) < target || c == 0 {
+                continue;
+            }
+            if i == self.bounds.len() {
+                return self.bounds[self.bounds.len() - 1];
+            }
+            let lower = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+            let frac = ((target - before) / c as f64).clamp(0.0, 1.0);
+            return lower + frac * (self.bounds[i] - lower);
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +253,97 @@ mod tests {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.min, 0.0);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_le_inclusive() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 9.0] {
+            h.observe(v);
+        }
+        // a value ON a bound lands in that bound's bucket (le semantics)
+        assert_eq!(h.bucket_counts(), &[2, 2, 2, 1]);
+        assert_eq!(h.count(), 7);
+        assert!((h.sum() - 21.0).abs() < 1e-12);
+        assert_eq!(h.bounds(), &[1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn histogram_merge_adds_mass() {
+        let mut a = Histogram::new(vec![1.0, 10.0]);
+        let mut b = Histogram::new(vec![1.0, 10.0]);
+        a.observe(0.5);
+        a.observe(5.0);
+        b.observe(5.0);
+        b.observe(50.0);
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), &[1, 2, 1]);
+        assert_eq!(a.count(), 4);
+        assert!((a.sum() - 60.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal bounds")]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        let mut a = Histogram::new(vec![1.0]);
+        a.merge(&Histogram::new(vec![2.0]));
+    }
+
+    #[test]
+    fn histogram_quantiles_track_exact_percentiles() {
+        // fine linear ladder over [0, 1): estimate error is bounded by
+        // one bucket width, so compare against the exact reservoir
+        // percentile within a few bucket widths
+        let bounds: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        let mut h = Histogram::new(bounds);
+        let mut rng_state = 0x243F_6A88_85A3_08D3u64; // deterministic LCG
+        let mut xs = Vec::new();
+        for _ in 0..5000 {
+            rng_state = rng_state.wrapping_mul(6364136223846793005);
+            rng_state = rng_state.wrapping_add(1442695040888963407);
+            let v = (rng_state >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+            h.observe(v);
+            xs.push(v);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let est = h.quantile(p / 100.0);
+            assert!((est - exact).abs() < 0.03, "p{p}: histogram {est} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn histogram_nan_degrades_without_poisoning() {
+        // same contract as the percentile total_cmp fix: one NaN
+        // latency must not corrupt the whole export
+        let mut h = Histogram::latency_seconds();
+        h.observe(0.01);
+        h.observe(f64::NAN);
+        h.observe(0.02);
+        assert_eq!(h.count(), 3);
+        assert!(h.sum().is_finite());
+        assert!((h.sum() - 0.03).abs() < 1e-12);
+        // NaN is visible as overflow mass, not silently dropped
+        assert_eq!(*h.bucket_counts().last().unwrap(), 1);
+        assert!(h.quantile(0.5).is_finite());
+    }
+
+    #[test]
+    fn histogram_quantile_edges() {
+        let mut h = Histogram::new(vec![1.0, 2.0]);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        h.observe(0.5);
+        assert!(h.quantile(0.0) >= 0.0 && h.quantile(0.0) <= 1.0);
+        assert!(h.quantile(1.0) <= 1.0, "single in-range sample stays in its bucket");
+        // overflow mass floors at the largest finite bound
+        let mut o = Histogram::new(vec![1.0, 2.0]);
+        o.observe(100.0);
+        assert_eq!(o.quantile(0.99), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn histogram_rejects_unsorted_bounds() {
+        let _ = Histogram::new(vec![2.0, 1.0]);
     }
 }

@@ -272,6 +272,35 @@ impl ForwardStats {
     }
 }
 
+/// Per-layer record from a traced budgeted forward
+/// (`QuantModel::forward_traced`): what one layer's Eq. 3 grid actually
+/// executed vs what its resolved plan entry allowed, with nanosecond
+/// offsets from the traced forward's start so the trace plane can place
+/// each layer inside its worker span. The §5.3 stop depth is
+/// `grid_terms` out of `planned_grid` ([`LayerTrace::floor_stopped`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayerTrace {
+    /// depth-first quantizable-layer position (the plan index)
+    pub index: usize,
+    /// `(i, j)` INT GEMMs this layer executed
+    pub grid_terms: usize,
+    /// GEMMs the resolved budget permitted (§5.1-exempt and FP-fallback
+    /// layers ignore the plan, so they report `planned_grid ==
+    /// grid_terms`)
+    pub planned_grid: usize,
+    /// ns offsets from the traced forward's start
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+}
+
+impl LayerTrace {
+    /// True when the §5.3 in-grid scale floor stopped the sorted grid
+    /// walk before the planned cap.
+    pub fn floor_stopped(&self) -> bool {
+        self.grid_terms < self.planned_grid
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

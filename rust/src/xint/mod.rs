@@ -38,7 +38,7 @@ pub mod quantizer;
 
 pub use abelian::{abelian_reduce, AbelianMul, LinearModel};
 pub use auto::{quantize_model_auto, AutoConfig};
-pub use budget::{BudgetPlan, ForwardStats, TermBudget};
+pub use budget::{BudgetPlan, ForwardStats, LayerTrace, TermBudget};
 pub use expansion::{ExpandConfig, SeriesExpansion, SparseTensor};
 pub use gemm::{int_gemm_a_bt, xint_linear_forward, xint_linear_forward_budgeted, ExpandedWeight};
 pub use layer::{LayerPolicy, XintConv2d, XintLinear};

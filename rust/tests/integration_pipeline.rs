@@ -8,7 +8,7 @@ use fp_xint::datasets::{accuracy, SynthImg};
 use fp_xint::models::{quantized, zoo};
 use fp_xint::train::{train_classifier, TrainConfig};
 use fp_xint::xint::layer::LayerPolicy;
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 struct Fixture {
     model: fp_xint::models::Model,
@@ -16,33 +16,37 @@ struct Fixture {
     fp_acc: f64,
 }
 
-static FIX: Lazy<Fixture> = Lazy::new(|| {
-    let data = SynthImg::new(6, 1, 14, 0.2, 77);
-    let mut model = zoo::mini_resnet_a(6, 78);
-    let cfg = TrainConfig { steps: 250, batch: 32, lr: 0.05, log_every: 1_000 };
-    let rep = train_classifier(&mut model, &data, &cfg);
-    Fixture { model, data, fp_acc: rep.final_val_acc }
-});
+static FIX_CELL: OnceLock<Fixture> = OnceLock::new();
+
+fn fix() -> &'static Fixture {
+    FIX_CELL.get_or_init(|| {
+        let data = SynthImg::new(6, 1, 14, 0.2, 77);
+        let mut model = zoo::mini_resnet_a(6, 78);
+        let cfg = TrainConfig { steps: 250, batch: 32, lr: 0.05, log_every: 1_000 };
+        let rep = train_classifier(&mut model, &data, &cfg);
+        Fixture { model, data, fp_acc: rep.final_val_acc }
+    })
+}
 
 fn ours_acc(w: u32, a: u32, k: usize, t: usize) -> f64 {
-    let val = FIX.data.batch(384, 2);
-    let q = quantized::quantize_model(&FIX.model, LayerPolicy::new(w, a).with_terms(k, t));
+    let val = fix().data.batch(384, 2);
+    let q = quantized::quantize_model(&fix().model, LayerPolicy::new(w, a).with_terms(k, t));
     accuracy(&q.forward(&val.x), &val.y)
 }
 
 #[test]
 fn fp_model_is_good_enough_to_quantize() {
-    assert!(FIX.fp_acc > 0.7, "fixture underfit: {:.2}", FIX.fp_acc);
+    assert!(fix().fp_acc > 0.7, "fixture underfit: {:.2}", fix().fp_acc);
 }
 
 #[test]
 fn w4a4_series_within_two_points_of_fp() {
     let acc = ours_acc(4, 4, 2, 4);
     assert!(
-        acc >= FIX.fp_acc - 0.02,
+        acc >= fix().fp_acc - 0.02,
         "W4A4 {:.3} vs FP {:.3}",
         acc,
-        FIX.fp_acc
+        fix().fp_acc
     );
 }
 
@@ -56,20 +60,20 @@ fn series_recovers_what_single_term_loses_at_2bit() {
     );
     // and series W2A2 stays within 10 points of FP while single-term
     // typically collapses on this fixture
-    assert!(series >= FIX.fp_acc - 0.10, "series W2A2 {series:.3} vs FP {:.3}", FIX.fp_acc);
+    assert!(series >= fix().fp_acc - 0.10, "series W2A2 {series:.3} vs FP {:.3}", fix().fp_acc);
 }
 
 #[test]
 fn ours_beats_every_baseline_at_w2a2() {
-    let val = FIX.data.batch(384, 2);
-    let calib = FIX.data.batch(32, 3).x;
+    let val = fix().data.batch(384, 2);
+    let calib = fix().data.batch(32, 3).x;
     let ours = ours_acc(2, 2, 2, 4);
     for method in [
         &baselines::Rtn as &dyn PtqMethod,
         &baselines::Aciq,
         &baselines::MseClip,
     ] {
-        let q = method.quantize(&FIX.model, 2, 2, &calib);
+        let q = method.quantize(&fix().model, 2, 2, &calib);
         let b = accuracy(&q.forward(&val.x), &val.y);
         assert!(
             ours >= b,
@@ -89,16 +93,16 @@ fn accuracy_monotone_in_bits_for_single_term() {
 
 #[test]
 fn quantization_is_deterministic() {
-    let q1 = quantized::quantize_model(&FIX.model, LayerPolicy::new(4, 4));
-    let q2 = quantized::quantize_model(&FIX.model, LayerPolicy::new(4, 4));
-    let probe = FIX.data.batch(16, 5).x;
+    let q1 = quantized::quantize_model(&fix().model, LayerPolicy::new(4, 4));
+    let q2 = quantized::quantize_model(&fix().model, LayerPolicy::new(4, 4));
+    let probe = fix().data.batch(16, 5).x;
     assert_eq!(q1.forward(&probe), q2.forward(&probe));
 }
 
 #[test]
 fn storage_ordering_w2_lt_w4_lt_w4k2() {
     let s = |w: u32, k: usize| {
-        quantized::quantize_model(&FIX.model, LayerPolicy::new(w, 4).with_terms(k, 1))
+        quantized::quantize_model(&fix().model, LayerPolicy::new(w, 4).with_terms(k, 1))
             .storage_bytes()
     };
     assert!(s(2, 1) < s(4, 1));

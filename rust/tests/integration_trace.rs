@@ -1,0 +1,206 @@
+//! End-to-end trace-plane test: drive mixed-tier traffic through the
+//! real TCP server with the flight recorder armed, then assert every
+//! completed request left a complete, well-nested span chain whose
+//! trace id matches the response header and whose per-layer grid spans
+//! sum to exactly the response's executed grid terms — and that the
+//! exported dump parses as Chrome-trace JSON.
+
+use fp_xint::coordinator::{
+    BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
+};
+use fp_xint::models::quantized::quantize_model;
+use fp_xint::models::zoo;
+use fp_xint::obs::{SpanKind, TraceEvent, TraceRecorder};
+use fp_xint::qos::{QosConfig, TermController, Tier};
+use fp_xint::serve::server::{client_infer_traced, client_metrics, client_trace_json, serve_tcp};
+use fp_xint::serve::workers::QuantModelWorker;
+use fp_xint::tensor::{Rng, Tensor};
+use fp_xint::util::json::Json;
+use fp_xint::xint::layer::LayerPolicy;
+use std::sync::Arc;
+
+fn span(evs: &[TraceEvent], kind: SpanKind) -> Vec<&TraceEvent> {
+    evs.iter().filter(|e| e.span == kind).collect()
+}
+
+#[test]
+fn tcp_trace_chains_are_complete_and_well_nested() {
+    let mut rng = Rng::seed(0x7ACE);
+    let probe = Tensor::randn(&[4, 1, 16, 16], 1.0, &mut rng);
+    let mut m = zoo::mini_resnet_a(4, 0x51);
+    let _ = m.forward_train(&probe); // settle BN stats
+    let q = quantize_model(&m, LayerPolicy::new(4, 4));
+    let pool = WorkerPool::new(
+        1,
+        Arc::new(move |_| {
+            Box::new(QuantModelWorker { model: q.clone(), sample_dims: Some(vec![1, 16, 16]) })
+                as Box<dyn BasisWorker>
+        }),
+    );
+    // non-anytime controller: no speculative lookaheads, so the traced
+    // per-layer grid spans account for the full executed grid
+    let ctl = Arc::new(TermController::new(QosConfig::new(1)));
+    let rec = Arc::new(TraceRecorder::default());
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig::uniform(4, 200, 16),
+        ExpansionScheduler::new(pool).with_controller(ctl).with_recorder(rec.clone()),
+    ));
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+
+    let mut ids = Vec::new();
+    for (i, &tier) in Tier::ALL.iter().cycle().take(12).enumerate() {
+        let x = Tensor::randn(&[2, 256], 1.0, &mut rng);
+        let id = 100 + i as u64;
+        let (y, echoed) = client_infer_traced(handle.addr, &x, tier, id).unwrap();
+        assert_eq!(y.dims(), &[2, 4]);
+        assert_eq!(echoed, id, "response must echo the request's trace id");
+        ids.push(id);
+    }
+
+    // the request-root span lands just after the reply bytes; wait for
+    // every connection thread to flush it
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let evs = rec.events();
+        let done = ids
+            .iter()
+            .all(|&id| evs.iter().any(|e| e.trace_id == id && e.span == SpanKind::Request));
+        if done {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "request-root spans missing");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    for &id in &ids {
+        let evs = rec.events_for(id);
+        let req = {
+            let roots = span(&evs, SpanKind::Request);
+            assert_eq!(roots.len(), 1, "trace {id}: want exactly one request-root span");
+            *roots[0]
+        };
+        assert!(!req.error, "trace {id}: completed request flagged as error");
+        for kind in [
+            SpanKind::Decode,
+            SpanKind::Admission,
+            SpanKind::QueueWait,
+            SpanKind::BatchForm,
+            SpanKind::Schedule,
+            SpanKind::WorkerTerm,
+            SpanKind::Reduce,
+            SpanKind::Reply,
+            SpanKind::LayerGrid,
+        ] {
+            assert!(!span(&evs, kind).is_empty(), "trace {id}: missing {kind:?} span");
+        }
+        // well-nested: every span closes, and sits inside the root
+        for e in &evs {
+            assert!(e.t_start_ns <= e.t_end_ns, "trace {id}: inverted span {e:?}");
+            if e.span != SpanKind::Request {
+                assert!(
+                    e.t_start_ns >= req.t_start_ns && e.t_end_ns <= req.t_end_ns,
+                    "trace {id}: {:?} escapes the request span",
+                    e.span
+                );
+            }
+        }
+        // pipeline phases start in order
+        let start_of = |k: SpanKind| span(&evs, k)[0].t_start_ns;
+        assert!(start_of(SpanKind::QueueWait) <= start_of(SpanKind::BatchForm), "trace {id}");
+        assert!(start_of(SpanKind::BatchForm) <= start_of(SpanKind::Schedule), "trace {id}");
+        assert!(start_of(SpanKind::Schedule) <= start_of(SpanKind::Reduce), "trace {id}");
+        // worker terms nest inside the reduction, layer grids inside a
+        // worker term
+        let reduce = span(&evs, SpanKind::Reduce)[0];
+        let workers = span(&evs, SpanKind::WorkerTerm);
+        for w in &workers {
+            assert!(
+                w.t_start_ns >= reduce.t_start_ns && w.t_end_ns <= reduce.t_end_ns,
+                "trace {id}: worker span escapes the reduce span"
+            );
+        }
+        for lg in span(&evs, SpanKind::LayerGrid) {
+            assert!(
+                workers.iter().any(|w| lg.t_start_ns >= w.t_start_ns && lg.t_end_ns <= w.t_end_ns),
+                "trace {id}: layer-grid span outside every worker span"
+            );
+        }
+        // the per-layer grid spans account for exactly the grid terms
+        // echoed in the response (request-root detail slot 2)
+        let layer_sum: u64 = span(&evs, SpanKind::LayerGrid).iter().map(|e| e.detail[1]).sum();
+        assert!(layer_sum > 0, "trace {id}: no grid work traced");
+        assert_eq!(layer_sum, req.detail[2], "trace {id}: layer grid sum != response grid terms");
+    }
+
+    // the exported dump is a Chrome-trace JSON array of complete events
+    let text = client_trace_json(handle.addr).unwrap();
+    let parsed = Json::parse(&text).expect("trace dump must parse as JSON");
+    let arr = parsed.as_arr().expect("chrome trace is a JSON array");
+    assert!(arr.len() >= ids.len() * 9, "dump too small: {} events", arr.len());
+    for ev in arr {
+        assert_eq!(ev.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert!(ev.get("ts").and_then(|v| v.as_num()).is_some());
+        assert!(ev.get("dur").and_then(|v| v.as_num()).is_some());
+        assert!(ev.get("tid").and_then(|v| v.as_usize()).is_some());
+    }
+
+    // the scrape endpoint agrees with the traffic served
+    let metrics = client_metrics(handle.addr).unwrap();
+    assert!(
+        metrics.contains("fpxint_requests_completed_total{tier=\"exact\"} 3"),
+        "completed counter missing:\n{metrics}"
+    );
+    handle.stop();
+}
+
+#[test]
+fn shed_requests_leave_error_flagged_spans_and_are_counted() {
+    struct Slow;
+    impl BasisWorker for Slow {
+        fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            Ok(x.clone())
+        }
+    }
+    let pool = WorkerPool::new(1, Arc::new(|_| Box::new(Slow) as Box<dyn BasisWorker>));
+    let rec = Arc::new(TraceRecorder::default());
+    let coord = Arc::new(Coordinator::new(
+        BatcherConfig::uniform(1, 10, 2),
+        ExpansionScheduler::new(pool).with_recorder(rec.clone()),
+    ));
+    let handle = serve_tcp("127.0.0.1:0", coord.clone()).unwrap();
+    // fill the Throughput queue in-process so the TCP request sheds
+    let mut keep = Vec::new();
+    loop {
+        match coord.submit_tier(Tensor::zeros(&[1, 2]), Tier::Throughput) {
+            Ok(rx) => keep.push(rx),
+            Err(_) => break,
+        }
+        assert!(keep.len() < 64, "queue never filled");
+    }
+    let shed = client_infer_traced(handle.addr, &Tensor::zeros(&[1, 2]), Tier::Throughput, 777);
+    assert!(shed.is_err(), "saturated tier must shed");
+    // the rejected request still leaves a CLOSED, error-flagged chain
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let evs = rec.events_for(777);
+        let has = |k: SpanKind| evs.iter().any(|e| e.span == k && e.error);
+        if has(SpanKind::Admission) && has(SpanKind::Request) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "error spans missing: {evs:?}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    // and the shed is counted in the exposition
+    let metrics = client_metrics(handle.addr).unwrap();
+    let line = metrics
+        .lines()
+        .find(|l| l.starts_with("fpxint_requests_shed_total{tier=\"throughput\"}"))
+        .expect("shed series missing");
+    let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+    assert!(v >= 1.0, "shed not counted: {line}");
+    for rx in keep {
+        let _ = rx.recv_timeout(std::time::Duration::from_secs(20));
+    }
+    handle.stop();
+}

@@ -8,24 +8,28 @@ use fp_xint::models::tinybert::{quantized_copy, BertHead, TinyBert};
 use fp_xint::models::TinyLm;
 use fp_xint::train::{train_bert, train_lm, TrainConfig};
 use fp_xint::xint::layer::LayerPolicy;
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 const SEQ: usize = 20;
 
-static BERT: Lazy<(TinyBert, EntailTask)> = Lazy::new(|| {
-    let task = EntailTask::new(SEQ, 15);
-    let mut m = TinyBert::new(32, 24, 48, 2, SEQ, BertHead::Cls { classes: 3 }, 16);
-    let cfg = TrainConfig { steps: 600, batch: 32, lr: 0.04, log_every: 1_000 };
-    train_bert(
-        &mut m,
-        |step| {
-            let b = task.batch(32, 500 + step as u64);
-            (b.iter().map(|e| e.tokens.clone()).collect(), b.iter().map(|e| e.label).collect())
-        },
-        &cfg,
-    );
-    (m, task)
-});
+static BERT: OnceLock<(TinyBert, EntailTask)> = OnceLock::new();
+
+fn bert() -> &'static (TinyBert, EntailTask) {
+    BERT.get_or_init(|| {
+        let task = EntailTask::new(SEQ, 15);
+        let mut m = TinyBert::new(32, 24, 48, 2, SEQ, BertHead::Cls { classes: 3 }, 16);
+        let cfg = TrainConfig { steps: 600, batch: 32, lr: 0.04, log_every: 1_000 };
+        train_bert(
+            &mut m,
+            |step| {
+                let b = task.batch(32, 500 + step as u64);
+                (b.iter().map(|e| e.tokens.clone()).collect(), b.iter().map(|e| e.label).collect())
+            },
+            &cfg,
+        );
+        (m, task)
+    })
+}
 
 fn entail_acc(m: &TinyBert, task: &EntailTask) -> f64 {
     let b = task.batch(200, 2);
@@ -36,14 +40,14 @@ fn entail_acc(m: &TinyBert, task: &EntailTask) -> f64 {
 
 #[test]
 fn bert_learns_entailment_above_chance() {
-    let (m, task) = &*BERT;
+    let (m, task) = bert();
     let acc = entail_acc(m, task);
     assert!(acc > 0.55, "entail acc {acc:.3} (chance 0.33)");
 }
 
 #[test]
 fn bert_w8_quantization_preserves_accuracy() {
-    let (m, task) = &*BERT;
+    let (m, task) = bert();
     let fp = entail_acc(m, task);
     let mut q = quantized_copy(m, &LayerPolicy::new(8, 8).with_terms(2, 1));
     q.act_quant = Some((8, 1));
@@ -53,7 +57,7 @@ fn bert_w8_quantization_preserves_accuracy() {
 
 #[test]
 fn bert_series_beats_single_term_at_w4a4() {
-    let (m, task) = &*BERT;
+    let (m, task) = bert();
     let mut naive = quantized_copy(m, &LayerPolicy::new(4, 4).with_terms(1, 1));
     naive.act_quant = Some((4, 1));
     let mut ours = quantized_copy(m, &LayerPolicy::new(4, 4).with_terms(2, 1));

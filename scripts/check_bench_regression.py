@@ -95,6 +95,18 @@ ABSOLUTE_GATES = [
         "Balanced p99 under a Throughput flood stays within noise of unloaded (<= 5x)",
         lambda v: v <= 5.0,
     ),
+    # Trace-plane contract (PR 6): the flight recorder sits on the hot
+    # path of every request, so its overhead gates absolutely. The bench
+    # interleaves recorder-off/on rounds and compares min-over-rounds
+    # Exact p99, which cancels runner drift; 1.10 allows residual noise
+    # while catching any real per-span cost (a lock or allocation on the
+    # span path measures well past 10%).
+    (
+        "BENCH_qos.json",
+        "tracing.exact_p99_inflation",
+        "flight-recorder spans keep Exact p99 within 10% of the untraced run",
+        lambda v: v <= 1.10,
+    ),
     # Term-budget contract (perf_budget): bit-identity and the grid-term
     # cut are deterministic, so they gate absolutely on every run. The
     # 1.5x wall-clock floor lives in MEASURED_FLOOR_GATES below: it arms

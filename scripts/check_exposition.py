@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Lint the serving plane's Prometheus-style text exposition.
+
+Checks, per scrape file:
+
+1. Exactly one ``# TYPE`` (and at most one ``# HELP``) per metric
+   family; histogram children (``_bucket``/``_sum``/``_count``) fold
+   into their base family.
+2. No duplicate series (same metric name + same label set).
+3. Every value parses as a float (``NaN``/``+Inf``/``-Inf`` included).
+4. Every series belongs to a family that declared a ``# TYPE``.
+5. Histogram sanity: per label set, ``le`` buckets are cumulative
+   (non-decreasing) and the ``+Inf`` bucket equals ``_count``.
+
+Usage: check_exposition.py <exposition.txt>
+"""
+
+import re
+import sys
+
+HISTOGRAM_SUFFIXES = ("_bucket", "_sum", "_count")
+SERIES_RE = re.compile(r"^([A-Za-z_:][A-Za-z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+LE_RE = re.compile(r'le="([^"]*)"')
+
+
+def base_family(name, histogram_families):
+    for suffix in HISTOGRAM_SUFFIXES:
+        stem = name[: -len(suffix)] if name.endswith(suffix) else None
+        if stem and stem in histogram_families:
+            return stem
+    return name
+
+
+def strip_le(labels):
+    """Label set without the ``le`` pair — the histogram series key."""
+    inner = labels[1:-1] if labels else ""
+    pairs = [p for p in inner.split(",") if p and not p.startswith("le=")]
+    return ",".join(pairs)
+
+
+def lint(text):
+    failures = []
+    types = {}
+    helps = set()
+    series_seen = set()
+    histogram_families = set()
+    # (family, labels-without-le) -> {"buckets": [(le, value)], "count": float}
+    histograms = {}
+    n_series = 0
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                failures.append(f"line {lineno}: malformed TYPE line: {line!r}")
+                continue
+            fam, kind = parts[2], parts[3]
+            if fam in types:
+                failures.append(f"line {lineno}: duplicate # TYPE for family {fam}")
+            types[fam] = kind
+            if kind == "histogram":
+                histogram_families.add(fam)
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            if len(parts) < 4:
+                failures.append(f"line {lineno}: malformed HELP line: {line!r}")
+                continue
+            fam = parts[2]
+            if fam in helps:
+                failures.append(f"line {lineno}: duplicate # HELP for family {fam}")
+            helps.add(fam)
+            continue
+        if line.startswith("#"):
+            continue
+
+        m = SERIES_RE.match(line)
+        if not m:
+            failures.append(f"line {lineno}: unparseable series line: {line!r}")
+            continue
+        name, labels, raw = m.group(1), m.group(2) or "", m.group(3)
+        n_series += 1
+        key = (name, labels)
+        if key in series_seen:
+            failures.append(f"line {lineno}: duplicate series {name}{labels}")
+        series_seen.add(key)
+        fam = base_family(name, histogram_families)
+        if fam not in types:
+            failures.append(f"line {lineno}: series {name} has no # TYPE (family {fam})")
+        try:
+            value = float(raw)
+        except ValueError:
+            failures.append(f"line {lineno}: unparseable value {raw!r} for {name}")
+            continue
+        if fam in histogram_families:
+            hist = histograms.setdefault((fam, strip_le(labels)), {"buckets": [], "count": None})
+            if name.endswith("_bucket"):
+                le = LE_RE.search(labels)
+                if le is None:
+                    failures.append(f"line {lineno}: bucket series without le label: {line!r}")
+                else:
+                    hist["buckets"].append((le.group(1), value))
+            elif name.endswith("_count"):
+                hist["count"] = value
+
+    for (fam, labels), hist in sorted(histograms.items()):
+        where = f"{fam}{{{labels}}}"
+        values = [v for _, v in hist["buckets"]]
+        if any(later < earlier for earlier, later in zip(values, values[1:])):
+            failures.append(f"{where}: bucket counts are not cumulative: {values}")
+        inf = [v for le, v in hist["buckets"] if le == "+Inf"]
+        if not inf:
+            failures.append(f"{where}: no le=\"+Inf\" bucket")
+        elif hist["count"] is not None and inf[0] != hist["count"]:
+            failures.append(f"{where}: +Inf bucket {inf[0]} != _count {hist['count']}")
+
+    if n_series == 0:
+        failures.append("no series found — empty or unreadable exposition")
+    return failures, len(types), n_series
+
+
+def main(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+    except OSError as e:
+        print(f"cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    failures, n_families, n_series = lint(text)
+    if failures:
+        print(f"exposition lint FAILED for {path}:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"exposition lint passed: {n_families} families, {n_series} series")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print("usage: check_exposition.py <exposition.txt>", file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1]))
