@@ -31,11 +31,10 @@
 use super::{Request, Response};
 use crate::qos::{Tier, NUM_TIERS};
 use crate::tensor::Tensor;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::thread::JoinHandle;
+use crate::util::sync::{mpsc, thread, Arc, Condvar, Mutex, MutexGuard};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Tier-selection policy for the forming loop.
@@ -351,7 +350,7 @@ impl Batcher {
             cv: Condvar::new(),
         });
         let shared2 = shared.clone();
-        let handle = std::thread::Builder::new()
+        let handle = thread::Builder::new()
             .name("batcher".into())
             .spawn(move || {
                 let _close_on_exit = CloseOnExit(shared2.clone());
@@ -485,12 +484,16 @@ impl Batcher {
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
         let (reply, rx) = mpsc::channel();
+        // ordering: Relaxed — id allocation only needs uniqueness (RMW
+        // atomicity); the request itself travels under the queue mutex.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut g = lock(&self.shared);
         if g.closed {
             return Err(SubmitError::Closed);
         }
         if g.q[tier.idx()].len() >= self.cfg.queue_caps[tier.idx()] {
+            // ordering: Relaxed — a statistics counter; readers need a
+            // count, not an edge.
             self.sheds[tier.idx()].fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Busy(tier));
         }
@@ -512,6 +515,7 @@ impl Batcher {
 
     /// Requests shed at `tier`'s admission check since start.
     pub fn shed_count(&self, tier: Tier) -> u64 {
+        // ordering: Relaxed — statistics read of a lone counter.
         self.sheds[tier.idx()].load(Ordering::Relaxed)
     }
 
@@ -528,7 +532,7 @@ impl Batcher {
             // is the contract that makes accepted replies durable; a
             // backend that can block forever must enforce its own
             // timeout, since std gives no timed join
-            if std::thread::panicking() {
+            if thread::panicking() {
                 drop(h);
             } else {
                 let _ = h.join();
@@ -992,5 +996,56 @@ mod tests {
         b.stop();
         let err = b.submit(Tensor::zeros(&[1, 1]), Tier::Exact).err();
         assert_eq!(err, Some(SubmitError::Closed));
+    }
+}
+
+/// Loom model for the shutdown/drop drain contract. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_model_`
+/// (see CONCURRENCY.md).
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::util::sync::thread as model_thread;
+
+    /// Submitters race `shutdown()`: every submit the batcher *accepts*
+    /// must have its reply delivered by the time `shutdown` returns
+    /// (the forming loop drains non-empty queues before exiting, and
+    /// the join makes that drain visible). `try_recv` keeps the model
+    /// free of scheduler-invisible blocking; `max_wait_us = 0` makes
+    /// the accumulation window elapse immediately so the real deadline
+    /// loop exits without timed waits.
+    #[test]
+    fn loom_model_shutdown_drains_accepted_submits() {
+        loom::model_iters(256, || {
+            let b = Arc::new(Batcher::start(BatcherConfig::uniform(4, 0, 4), |batch| {
+                for p in batch.parts {
+                    let _ = p.reply.send(Response {
+                        id: p.id,
+                        trace_id: p.trace_id,
+                        logits: Tensor::zeros(&[p.rows, 1]),
+                        latency_s: 0.0,
+                        tier: p.tier,
+                        terms: 0,
+                        grid_terms: 0,
+                        error: None,
+                    });
+                }
+            }));
+            let subs: Vec<_> = (0..2u64)
+                .map(|k| {
+                    let b = Arc::clone(&b);
+                    model_thread::spawn(move || {
+                        let x = Tensor::from_vec(&[1, 1], vec![k as f32]);
+                        b.submit(x, Tier::Exact).ok()
+                    })
+                })
+                .collect();
+            let rxs: Vec<_> = subs.into_iter().map(|h| h.join().unwrap()).collect();
+            let b = Arc::try_unwrap(b).ok().expect("submitters released their handles");
+            b.shutdown();
+            for rx in rxs.into_iter().flatten() {
+                rx.try_recv().expect("accepted submit lost its reply across shutdown");
+            }
+        });
     }
 }

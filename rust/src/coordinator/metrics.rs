@@ -3,8 +3,14 @@
 
 use crate::qos::{Tier, NUM_TIERS};
 use crate::util::stats::Histogram;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
+
+// ordering: every atomic in this module is Relaxed by design — they are
+// monotonic statistics counters read individually for reporting. No
+// reader dereferences memory published under a counter, and exposition
+// snapshots are allowed to be mutually out-of-date by a few events.
+// Per-site comments below restate this where the lint wants them local.
 
 /// Coordinator-wide metrics.
 #[derive(Debug)]
@@ -91,6 +97,7 @@ impl Metrics {
         terms: usize,
         est_loss: Option<f32>,
     ) {
+        // ordering: Relaxed — statistics counter (module note).
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut l = self.latencies.lock().unwrap();
         if l.len() < RESERVOIR_CAP {
@@ -98,6 +105,7 @@ impl Metrics {
         }
         drop(l);
         let i = tier.idx();
+        // ordering: Relaxed — statistics counters (module note).
         self.tier_completed[i].fetch_add(1, Ordering::Relaxed);
         self.tier_terms[i].fetch_add(terms as u64, Ordering::Relaxed);
         let mut tl = self.tier_latencies[i].lock().unwrap();
@@ -113,6 +121,7 @@ impl Metrics {
     }
 
     pub fn record_failed(&self, n: usize) {
+        // ordering: Relaxed — statistics counter (module note).
         self.failed.fetch_add(n as u64, Ordering::Relaxed);
     }
 
@@ -120,10 +129,12 @@ impl Metrics {
     /// exposition can break failures out per tier.
     pub fn record_failed_tier(&self, tier: Tier, n: usize) {
         self.record_failed(n);
+        // ordering: Relaxed — statistics counter (module note).
         self.tier_failed[tier.idx()].fetch_add(n as u64, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, samples: usize, service_s: f64) {
+        // ordering: Relaxed — statistics counters (module note).
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.samples.fetch_add(samples as u64, Ordering::Relaxed);
         let mut b = self.batch_times.lock().unwrap();
@@ -133,19 +144,24 @@ impl Metrics {
     }
 
     pub fn completed(&self) -> u64 {
+        // ordering: Relaxed — statistics read (module note).
         self.completed.load(Ordering::Relaxed)
     }
 
     pub fn failed(&self) -> u64 {
+        // ordering: Relaxed — statistics read (module note).
         self.failed.load(Ordering::Relaxed)
     }
 
     pub fn batches(&self) -> u64 {
+        // ordering: Relaxed — statistics read (module note).
         self.batches.load(Ordering::Relaxed)
     }
 
     /// Mean samples per formed batch (batching effectiveness).
     pub fn mean_batch_size(&self) -> f64 {
+        // ordering: Relaxed — statistics reads; the two counters may be
+        // one event apart mid-race, fine for a mean (module note).
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
             0.0
@@ -165,11 +181,13 @@ impl Metrics {
 
     /// Completed requests served at `tier`.
     pub fn tier_completed(&self, tier: Tier) -> u64 {
+        // ordering: Relaxed — statistics read (module note).
         self.tier_completed[tier.idx()].load(Ordering::Relaxed)
     }
 
     /// Failed requests attributed to `tier`.
     pub fn tier_failed(&self, tier: Tier) -> u64 {
+        // ordering: Relaxed — statistics read (module note).
         self.tier_failed[tier.idx()].load(Ordering::Relaxed)
     }
 
@@ -184,6 +202,7 @@ impl Metrics {
         if n == 0 {
             0.0
         } else {
+            // ordering: Relaxed — statistics read (module note).
             self.tier_terms[tier.idx()].load(Ordering::Relaxed) as f64 / n as f64
         }
     }
@@ -195,6 +214,7 @@ impl Metrics {
     /// uniform plans).
     pub fn record_batch_grid(&self, tier: Tier, grid_terms: usize, planned: Option<usize>) {
         let i = tier.idx();
+        // ordering: Relaxed — statistics counters (module note).
         self.tier_grid_terms[i].fetch_add(grid_terms as u64, Ordering::Relaxed);
         self.tier_grid_batches[i].fetch_add(1, Ordering::Relaxed);
         if let Some(p) = planned {
@@ -208,6 +228,7 @@ impl Metrics {
     /// backends). Note: conv grid spend scales with the rows in a
     /// batch, so compare tiers under similar batch shapes.
     pub fn tier_mean_grid_terms(&self, tier: Tier) -> f64 {
+        // ordering: Relaxed — statistics reads (module note).
         let n = self.tier_grid_batches[tier.idx()].load(Ordering::Relaxed);
         if n == 0 {
             0.0
@@ -222,6 +243,7 @@ impl Metrics {
     /// [`Metrics::tier_mean_grid_terms`]: executed spend scales with
     /// prefix workers and conv image rows, the ceiling does not.
     pub fn tier_mean_planned_grid_terms(&self, tier: Tier) -> f64 {
+        // ordering: Relaxed — statistics reads (module note).
         let n = self.tier_planned_batches[tier.idx()].load(Ordering::Relaxed);
         if n == 0 {
             0.0

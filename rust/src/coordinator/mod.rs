@@ -28,9 +28,8 @@ pub use scheduler::ExpansionScheduler;
 use crate::obs::{chrome_trace_json, ExpositionBuilder, SpanKind, TraceRecorder};
 use crate::qos::{TermController, Tier};
 use crate::tensor::Tensor;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{mpsc, Arc};
 
 /// One inference request: a (n, din) batch of samples, its service
 /// tier, a trace correlation id, and a reply slot.
@@ -121,6 +120,8 @@ impl Coordinator {
     /// A fresh coordinator-assigned trace id (never 0 — the wire
     /// protocol reserves 0 for "server assigns").
     pub fn fresh_trace_id(&self) -> u64 {
+        // ordering: Relaxed — id allocation only needs RMW uniqueness;
+        // nothing is published under the counter.
         self.next_trace.fetch_add(1, Ordering::Relaxed)
     }
 

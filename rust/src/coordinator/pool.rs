@@ -11,10 +11,9 @@
 use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::Tier;
 use crate::tensor::Tensor;
+use crate::util::sync::thread::JoinHandle;
+use crate::util::sync::{mpsc, thread, Arc};
 use crate::xint::budget::{BudgetPlan, LayerTrace};
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::thread::JoinHandle;
 
 /// One worker invocation's result: the partial output plus what the
 /// worker actually spent on it (0 when the backend has no Eq. 3 grid
@@ -122,7 +121,7 @@ impl WorkerPool {
             let (tx, rx) = mpsc::channel::<Job>();
             let factory = factory.clone();
             handles.push(
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("basis-worker-{i}"))
                     .spawn(move || {
                         let mut worker = factory(i);

@@ -36,9 +36,9 @@ use super::Response;
 use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::{TermController, NUM_TIERS};
 use crate::tensor::Tensor;
+use crate::util::sync::Arc;
 use crate::xint::abelian::abelian_reduce;
 use crate::xint::budget::BudgetPlan;
-use std::sync::Arc;
 
 /// One reduced batch: the output, the basis terms reduced, and the INT
 /// GEMM grid terms budget-aware workers reported executing.

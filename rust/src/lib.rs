@@ -21,6 +21,12 @@
 //!   wrapper, and benchmark harnesses that regenerate every table and
 //!   figure of the paper (see DESIGN.md §5).
 
+// The whole crate is safe Rust; the last `unsafe` block (a raw-pointer
+// field walk in `models::tinybert`) was replaced by a destructuring
+// visitor. Concurrency correctness is carried by types + the loom models
+// (CONCURRENCY.md), not by unsafe cleverness — keep it that way.
+#![deny(unsafe_code)]
+
 pub mod baselines;
 pub mod bench_support;
 pub mod coordinator;

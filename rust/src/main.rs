@@ -16,9 +16,9 @@ use fp_xint::models::{quantized, zoo};
 use fp_xint::serve::{self, workers::MlpWeights};
 use fp_xint::tensor::Tensor;
 use fp_xint::train::{trained_model_cached, TrainConfig};
+use fp_xint::util::sync::{thread, Arc};
 use fp_xint::util::{cli::Args, logger, Table};
 use fp_xint::xint::layer::LayerPolicy;
-use std::sync::Arc;
 
 fn main() {
     let mut args = Args::from_env();
@@ -138,7 +138,7 @@ fn cmd_serve(mut args: Args) {
         serve::serve_tcp(&format!("127.0.0.1:{port}"), coord.clone()).expect("bind server");
     println!("serving xINT basis models on {} (Ctrl-C to stop)", handle.addr);
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
+        thread::sleep(std::time::Duration::from_secs(5));
         let s = coord.metrics.latency_summary();
         log::info!(
             "completed {} failed {} mean batch {:.1} p50 {:.2}ms",

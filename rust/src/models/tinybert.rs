@@ -311,22 +311,22 @@ impl EncoderBlock {
     }
 
     pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &Tensor)) {
-        let pairs: [(*mut Tensor, *const Tensor); 6] = [
-            (&mut self.wq, &self.gq),
-            (&mut self.wk, &self.gk),
-            (&mut self.wv, &self.gv),
-            (&mut self.wo, &self.go),
-            (&mut self.w1, &self.g1),
-            (&mut self.w2, &self.g2),
-        ];
-        for (p, g) in pairs {
-            // SAFETY: p and g are distinct fields of self
-            unsafe { f(&mut *p, &*g) };
+        // Destructuring splits the borrow per field, so each (param,
+        // grad) pair can be lent out disjointly — no raw pointers, no
+        // per-visit gradient clones.
+        let EncoderBlock { wq, wk, wv, wo, w1, w2, ln1, ln2, gq, gk, gv, go, g1, g2, cache: _ } =
+            self;
+        f(wq, gq);
+        f(wk, gk);
+        f(wv, gv);
+        f(wo, go);
+        f(w1, g1);
+        f(w2, g2);
+        for ln in [ln1, ln2] {
+            let LayerNorm { gamma, beta, ggamma, gbeta, .. } = ln;
+            f(gamma, ggamma);
+            f(beta, gbeta);
         }
-        f(&mut self.ln1.gamma, &self.ln1.ggamma.clone());
-        f(&mut self.ln1.beta, &self.ln1.gbeta.clone());
-        f(&mut self.ln2.gamma, &self.ln2.ggamma.clone());
-        f(&mut self.ln2.beta, &self.ln2.gbeta.clone());
     }
 
     /// Replace each weight matrix by its series-expanded reconstruction

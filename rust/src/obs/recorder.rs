@@ -16,15 +16,28 @@
 //! Each slot is a seqlock: the writer flips the slot's sequence word
 //! odd, stores the fields, then flips it even; the reader
 //! ([`TraceRecorder::events`]) rejects slots whose sequence is odd or
-//! changed mid-read. All fields are relaxed atomics — a torn read is
-//! impossible to observe as anything but a rejected slot under the
-//! sequence check, and there is no `unsafe` anywhere. (Two writers can
-//! race one slot only after the cursor laps the whole ring between a
-//! reader's two sequence loads — with the default 64 Ki slots that is a
-//! diagnostic-quality non-event, not a soundness hazard.)
+//! changed mid-read. The memory orderings are what make that sequence
+//! check sound: field values are published with `Release` stores and
+//! read with `Acquire` loads, so a reader that observed any field of a
+//! newer write has also synchronized with that write's odd sequence
+//! flip and must fail its recheck. (An earlier revision stored the
+//! fields `Relaxed` and claimed a torn read was "impossible to observe"
+//! — the loom models below refute that: a relaxed field store may
+//! become visible before the odd flip, letting both sequence checks
+//! pass around a mixed-write snapshot. See
+//! `loom_model_all_relaxed_seqlock_is_torn` and CONCURRENCY.md.) There
+//! is no `unsafe` anywhere. Slot ownership is single-writer: the cursor
+//! RMW hands each `record()` call a distinct slot, and two calls share
+//! one only if the cursor laps the *entire ring* while the first is
+//! still mid-write. A reader spanning two laps still rejects — per-slot
+//! sequence values strictly increase, so its recheck cannot see the
+//! first value again — but two *writers* interleaved inside one slot
+//! could leave it even-and-mixed, so capacity must stay far above
+//! writer concurrency (the default 64 Ki slots vs. a handful of worker
+//! threads; CONCURRENCY.md states the bound).
 
 use crate::qos::Tier;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Default ring capacity (events). At ~10 events per request this holds
@@ -196,16 +209,32 @@ impl TraceRecorder {
     /// Record one closed span. Never blocks; overwrites the oldest
     /// event when the ring is full.
     pub fn record(&self, ev: TraceEvent) {
+        // ordering: Relaxed — the cursor RMW only claims a slot index
+        // (atomicity is what matters); publication of the slot contents
+        // is carried entirely by the seqlock protocol below.
         let n = self.cursor.fetch_add(1, Ordering::Relaxed);
         let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        // ordering: Release — the odd flip opens the write window; it
+        // must be visible no later than any field store below.
         slot.seq.store(2 * n + 1, Ordering::Release);
-        slot.trace_id.store(ev.trace_id, Ordering::Relaxed);
-        slot.t_start.store(ev.t_start_ns, Ordering::Relaxed);
-        slot.t_end.store(ev.t_end_ns, Ordering::Relaxed);
-        slot.meta.store(pack_meta(ev.span, ev.tier, ev.error), Ordering::Relaxed);
-        slot.d0.store(ev.detail[0], Ordering::Relaxed);
-        slot.d1.store(ev.detail[1], Ordering::Relaxed);
-        slot.d2.store(ev.detail[2], Ordering::Relaxed);
+        // Each field store publishes the odd flip along with the value,
+        // so a reader whose Acquire load observes any field of this
+        // write also observes `2n + 1` (or later) in its sequence
+        // recheck and rejects the snapshot. With Relaxed field stores
+        // the recheck is fiction: a field store may become visible
+        // before the odd flip (the loom model
+        // `loom_model_all_relaxed_seqlock_is_torn` finds exactly that
+        // interleaving).
+        // ordering: Release — all seven field stores, per the above.
+        slot.trace_id.store(ev.trace_id, Ordering::Release);
+        slot.t_start.store(ev.t_start_ns, Ordering::Release);
+        slot.t_end.store(ev.t_end_ns, Ordering::Release);
+        slot.meta.store(pack_meta(ev.span, ev.tier, ev.error), Ordering::Release);
+        slot.d0.store(ev.detail[0], Ordering::Release);
+        slot.d1.store(ev.detail[1], Ordering::Release);
+        slot.d2.store(ev.detail[2], Ordering::Release);
+        // ordering: Release — the even flip closes the window and
+        // publishes every field store above to readers that observe it.
         slot.seq.store(2 * n + 2, Ordering::Release);
     }
 
@@ -226,6 +255,8 @@ impl TraceRecorder {
 
     /// Total events ever recorded.
     pub fn recorded(&self) -> u64 {
+        // ordering: Relaxed — a monotonic statistic; no slot payload is
+        // read on the strength of this value.
         self.cursor.load(Ordering::Relaxed)
     }
 
@@ -240,10 +271,19 @@ impl TraceRecorder {
     pub fn events(&self) -> Vec<TraceEvent> {
         let mut out = Vec::with_capacity(self.slots.len());
         for slot in &self.slots {
+            // ordering: Acquire — pairs with the writer's Release even
+            // flip: observing `2n + 2` makes that write's field stores
+            // visible to the loads below.
             let s1 = slot.seq.load(Ordering::Acquire);
             if s1 == 0 || s1 % 2 == 1 {
                 continue; // never written, or write in progress
             }
+            // Pairs with the writer's Release field stores: observing
+            // any field of a write newer than `s1` also makes that
+            // write's odd flip visible, so the recheck below must fail.
+            // That pairing is what turns the sequence recheck into an
+            // actual proof of an untorn snapshot.
+            // ordering: Acquire — all seven field loads, per the above.
             let trace_id = slot.trace_id.load(Ordering::Acquire);
             let t_start_ns = slot.t_start.load(Ordering::Acquire);
             let t_end_ns = slot.t_end.load(Ordering::Acquire);
@@ -253,6 +293,9 @@ impl TraceRecorder {
                 slot.d1.load(Ordering::Acquire),
                 slot.d2.load(Ordering::Acquire),
             ];
+            // ordering: Acquire — the recheck; per-slot sequence values
+            // strictly increase, so seeing `s1` again proves no writer
+            // opened the slot while the fields were being read.
             if slot.seq.load(Ordering::Acquire) != s1 {
                 continue; // overwritten mid-read
             }
@@ -367,6 +410,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 4 writers x 1000 events is minutes under miri
     fn concurrent_writers_never_corrupt_the_ring() {
         let rec = Arc::new(TraceRecorder::new(64));
         let mut handles = Vec::new();
@@ -401,5 +445,151 @@ mod tests {
             assert_eq!(k.to_string(), k.name());
         }
         assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+    }
+}
+
+/// Loom models for the seqlock ring. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_model_`
+/// (see CONCURRENCY.md). Events are redundancy-encoded — every field is
+/// derived from `trace_id` — so a snapshot mixing two writes is
+/// detectable no matter which fields tore.
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::util::sync::atomic::{AtomicU64, Ordering};
+    use crate::util::sync::{thread, Arc};
+
+    fn encoded(id: u64) -> TraceEvent {
+        TraceEvent {
+            trace_id: id,
+            span: SpanKind::WorkerTerm,
+            tier: Tier::Balanced,
+            error: false,
+            t_start_ns: id,
+            t_end_ns: id + 1,
+            detail: [id, id, id],
+        }
+    }
+
+    fn assert_untorn(e: &TraceEvent) {
+        assert!(e.trace_id >= 1, "phantom event surfaced: {e:?}");
+        assert_eq!(e.t_start_ns, e.trace_id, "torn snapshot accepted: {e:?}");
+        assert_eq!(e.t_end_ns, e.trace_id + 1, "torn snapshot accepted: {e:?}");
+        assert_eq!(e.detail, [e.trace_id; 3], "torn snapshot accepted: {e:?}");
+        assert_eq!(e.span, SpanKind::WorkerTerm);
+        assert_eq!(e.tier, Tier::Balanced);
+    }
+
+    /// Writer-vs-reader: two writers fill distinct slots (capacity ==
+    /// writer count keeps slot ownership single-writer, matching the
+    /// design envelope) while the reader snapshots mid-race. The reader
+    /// must only ever surface whole events, and after the writers join,
+    /// nothing may be lost or double-counted.
+    #[test]
+    fn loom_model_seqlock_rejects_torn_reads() {
+        loom::model(|| {
+            let rec = Arc::new(TraceRecorder::new(2));
+            let writers: Vec<_> = (1..=2u64)
+                .map(|id| {
+                    let rec = Arc::clone(&rec);
+                    thread::spawn(move || rec.record(encoded(id)))
+                })
+                .collect();
+            // Snapshot while the writers race: partial writes must be
+            // skipped, never surfaced torn.
+            for e in rec.events() {
+                assert_untorn(&e);
+            }
+            for h in writers {
+                h.join().unwrap();
+            }
+            // Quiescent: both events are stable, whole, and accounted.
+            let evs = rec.events();
+            assert_eq!(evs.len(), 2, "stable slots lost after writers joined");
+            for e in &evs {
+                assert_untorn(e);
+            }
+            assert_eq!(rec.recorded(), 2);
+            assert_eq!(rec.dropped(), 0, "dropped() miscounted");
+        });
+    }
+
+    /// Ring wraparound under a concurrent reader: a quiescent write in
+    /// slot 0 is lapped by a racing writer while the reader snapshots.
+    /// The reader may surface the stale event whole or skip the slot —
+    /// never a mix — and `dropped()`/`recorded()` are exact afterwards.
+    #[test]
+    fn loom_model_dropped_counter_is_exact() {
+        loom::model(|| {
+            let rec = Arc::new(TraceRecorder::new(2));
+            // Lands in slot 0 before the race starts (spawn orders it).
+            rec.record(encoded(1));
+            let writers: Vec<_> = (2..=3u64)
+                .map(|id| {
+                    let rec = Arc::clone(&rec);
+                    thread::spawn(move || rec.record(encoded(id)))
+                })
+                .collect();
+            // ordering: (test) Relaxed via recorded() — a monotonic
+            // statistic; it may lag claims but never overcount.
+            let mid = rec.recorded();
+            assert!((1..=3).contains(&mid), "recorded() miscounted mid-race: {mid}");
+            for e in rec.events() {
+                assert_untorn(&e);
+            }
+            for h in writers {
+                h.join().unwrap();
+            }
+            assert_eq!(rec.recorded(), 3);
+            assert_eq!(rec.dropped(), 1, "dropped() undercounted");
+            let evs = rec.events();
+            let mut ids: Vec<u64> = evs.iter().map(|e| e.trace_id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![2, 3], "lap must evict exactly the oldest event");
+            for e in &evs {
+                assert_untorn(e);
+            }
+        });
+    }
+
+    /// Detection power: the recorder's *previous* protocol — Relaxed
+    /// field stores inside Release sequence flips — must be caught by
+    /// the checker. Release on the sequence word alone does not stop a
+    /// later relaxed field store from becoming visible before its own
+    /// odd flip, so a reader holding a stale even sequence can pass both
+    /// checks around a lapped, mixed snapshot. The model finds that
+    /// interleaving; `record()` now stores fields with Release, which
+    /// the two models above verify.
+    #[test]
+    #[should_panic(expected = "torn")]
+    fn loom_model_all_relaxed_seqlock_is_torn() {
+        loom::model(|| {
+            let seq = Arc::new(AtomicU64::new(0));
+            let data = Arc::new(AtomicU64::new(0));
+            // Write A completes before the reader starts looking.
+            seq.store(1, Ordering::Release);
+            data.store(41, Ordering::Relaxed);
+            seq.store(2, Ordering::Release);
+            // Writer B laps the slot with the same (broken) protocol.
+            let w = {
+                let seq = Arc::clone(&seq);
+                let data = Arc::clone(&data);
+                thread::spawn(move || {
+                    seq.store(3, Ordering::Release);
+                    data.store(43, Ordering::Relaxed); // the original sin
+                    seq.store(4, Ordering::Release);
+                })
+            };
+            let s1 = seq.load(Ordering::Acquire);
+            let v = data.load(Ordering::Acquire);
+            let s2 = seq.load(Ordering::Acquire);
+            if s1 == 2 && s2 == 2 {
+                // Under the broken protocol the reader can observe B's
+                // field value while both sequence checks still read A's
+                // even value — a torn snapshot accepted as stable.
+                assert_eq!(v, 41, "torn read accepted by relaxed-field seqlock");
+            }
+            w.join().unwrap();
+        });
     }
 }

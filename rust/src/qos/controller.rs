@@ -45,11 +45,11 @@
 
 use super::tier::{Tier, NUM_TIERS};
 use crate::util::stats::percentile;
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::Mutex;
 use crate::xint::budget::{BudgetPlan, TermBudget};
 use crate::xint::monitor::ExpansionMonitor;
 use crate::xint::planner::{BudgetPlanner, LayerGridProfile};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Controller tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -137,21 +137,34 @@ impl LatencyDigest {
     }
 
     fn record(&self, latency_s: f64) {
+        // ordering: Relaxed — the cursor RMW only claims a slot; no
+        // reader dereferences anything on the strength of the counter,
+        // and each slot holds a self-contained f64 (a stale or
+        // concurrently-updated sample shifts a load estimate by one
+        // data point, documented above as bounded staleness).
         let i = self.pushed.fetch_add(1, Ordering::Relaxed) % DIGEST_CAP;
         self.slots[i].store(latency_s.to_bits(), Ordering::Relaxed);
     }
 
     fn p99(&self) -> Option<f64> {
+        // ordering: Relaxed — the decision path is single-threaded
+        // (record and consume happen on the batcher's forming thread,
+        // which sequences its own accesses); concurrent observability
+        // readers tolerate one stale slot by contract.
         let n = self.pushed.load(Ordering::Relaxed).min(DIGEST_CAP);
         if n == 0 {
             return None;
         }
+        // ordering: Relaxed — slot loads, same contract as above.
         let xs: Vec<f64> =
             (0..n).map(|i| f64::from_bits(self.slots[i].load(Ordering::Relaxed))).collect();
         Some(percentile(&xs, 99.0))
     }
 
     fn reset(&self) {
+        // ordering: Relaxed — rolls the window for the same
+        // single-consumer decision path; a racing writer strands at
+        // most one sample (bounded staleness, per the type docs).
         self.pushed.store(0, Ordering::Relaxed);
     }
 }
@@ -299,6 +312,10 @@ impl TermController {
                     (n.unwrap_or(total).min(total), n.unwrap_or(usize::MAX))
                 }
             };
+            // ordering: Relaxed — each base is an independent scalar;
+            // hot-path readers compose whatever mix of old/new bases
+            // they observe with floors applied per read, so no
+            // publication edge is needed.
             self.base[tier.idx()].store(budget.max(1), Ordering::Relaxed);
             self.layer_base[tier.idx()].store(layer.max(1), Ordering::Relaxed);
         }
@@ -322,6 +339,8 @@ impl TermController {
         let mut pressure_step = [1usize; NUM_TIERS];
         let mut capped: [Vec<LayerGridProfile>; NUM_TIERS] = std::array::from_fn(|_| Vec::new());
         for tier in Tier::ALL {
+            // ordering: Relaxed — reads a calibration scalar; see
+            // `calibrate` for why no publication edge is needed.
             let cap = self.layer_base[tier.idx()].load(Ordering::Relaxed);
             if tier == Tier::Exact || cap == usize::MAX {
                 continue;
@@ -378,13 +397,21 @@ impl TermController {
         let cal = self.plan_cal.lock().unwrap();
         for tier in Tier::ALL {
             let i = tier.idx();
+            // ordering: Relaxed (whole loop) — every atomic here is an
+            // independent control scalar: caps and bases are read to
+            // derive a new cap, and readers of `max_pressure` clamp per
+            // read, so a momentarily stale mix only delays one pressure
+            // step. The CAS below needs atomicity (no lost clamp), not
+            // ordering.
             if tier == Tier::Exact {
                 self.max_pressure[i].store(0, Ordering::Relaxed);
                 continue;
             }
+            // ordering: Relaxed — per the loop-head note.
             let base = self.base[i].load(Ordering::Relaxed);
             let floor = tier.floor_terms(self.cfg.total_terms).min(base);
             let mut cap = base.saturating_sub(floor);
+            // ordering: Relaxed — per the loop-head note.
             let lb = self.layer_base[i].load(Ordering::Relaxed);
             if lb != usize::MAX {
                 cap = cap.max(lb.saturating_sub(tier.layer_floor_terms().min(lb)));
@@ -395,12 +422,16 @@ impl TermController {
                     cap = cap.max(b.saturating_sub(f).div_ceil(c.pressure_step[i].max(1)));
                 }
             }
-            self.max_pressure[i].store(cap, Ordering::Relaxed);
-            // recalibration can shrink a tier's span below its banked
+            // Cap and clamp are independent control scalars (see the
+            // loop-head note); the fetch_update needs atomicity so no
+            // concurrent step loses the clamp, not an ordering edge.
+            // Recalibration can shrink a tier's span below its banked
             // pressure; clamp so recovery stays within the new span
-            // (budgets already floor-clamp, this keeps the drain short),
-            // and book the clamp as restores so the degrade/restore
-            // accounting observability readers rely on stays balanced
+            // (budgets already floor-clamp, this keeps the drain
+            // short), and book the clamp as restores so the
+            // degrade/restore accounting stays balanced.
+            // ordering: Relaxed — store, fetch_update, and counter.
+            self.max_pressure[i].store(cap, Ordering::Relaxed);
             let clamped = self.pressure[i]
                 .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| (p > cap).then_some(cap));
             if let Ok(p) = clamped {
@@ -413,6 +444,9 @@ impl TermController {
     /// tier's own pressure, clamped to the tier floor. Exact is immune
     /// by construction (`floor_terms(total) == total`).
     pub fn budget_for(&self, tier: Tier) -> usize {
+        // ordering: Relaxed — base and pressure are independent control
+        // scalars; any observed mix yields a valid budget because the
+        // floor/cap clamp is applied per read. Scheduler hot path.
         let base = self.base[tier.idx()].load(Ordering::Relaxed);
         let floor = tier.floor_terms(self.cfg.total_terms).min(base);
         let p = self.pressure[tier.idx()].load(Ordering::Relaxed);
@@ -428,6 +462,8 @@ impl TermController {
     /// pressure, bounded by [`Tier::layer_floor_terms`]. Exact is
     /// immune by construction.
     pub fn layer_budget_for(&self, tier: Tier) -> TermBudget {
+        // ordering: Relaxed — same contract as `budget_for`: per-read
+        // clamping makes any mix of base/pressure values valid.
         let base = self.layer_base[tier.idx()].load(Ordering::Relaxed);
         if base == usize::MAX {
             return TermBudget::full();
@@ -473,6 +509,8 @@ impl TermController {
         if base == usize::MAX {
             return BudgetPlan::full();
         }
+        // ordering: Relaxed — pressure is a lone control scalar; the
+        // ceiling clamp below keeps any observed value valid.
         let p = self.pressure[i].load(Ordering::Relaxed);
         let floor = c.floor_ceiling[i].min(base);
         let total = base.saturating_sub(p.saturating_mul(c.pressure_step[i])).max(floor);
@@ -536,6 +574,8 @@ impl TermController {
     /// Per-tier batch service-time EWMA (seconds); `None` before the
     /// tier's first successful batch.
     pub fn tier_service_ewma(&self, tier: Tier) -> Option<f64> {
+        // ordering: Relaxed — a self-contained f64 snapshot (the NaN
+        // sentinel travels inside the same word as the value).
         let v = f64::from_bits(self.service_ewma[tier.idx()].load(Ordering::Relaxed));
         if v.is_nan() { None } else { Some(v) }
     }
@@ -577,7 +617,10 @@ impl TermController {
         let ewma = match service_s {
             Some(s) => {
                 // CAS blend: the load→blend→store sequence this
-                // replaces dropped concurrent updates
+                // replaces dropped concurrent updates.
+                // ordering: Relaxed — the RMW's atomicity is the whole
+                // contract (no lost sample); the word is self-contained
+                // (value + NaN sentinel), so no edge is published.
                 let prev_bits = self.service_ewma[i]
                     .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
                         Some(blend_ewma(f64::from_bits(bits), s).to_bits())
@@ -585,6 +628,7 @@ impl TermController {
                     .unwrap_or_else(|bits| bits);
                 blend_ewma(f64::from_bits(prev_bits), s)
             }
+            // ordering: Relaxed — self-contained snapshot, as above.
             None => f64::from_bits(self.service_ewma[i].load(Ordering::Relaxed)),
         };
         let target = self.cfg.service_target_s;
@@ -607,6 +651,10 @@ impl TermController {
 
     fn raise_pressure(&self, tier: Tier) {
         let i = tier.idx();
+        // ordering: Relaxed — the CAS guarantees exactly-one-step per
+        // observed level (a racing step makes this one a no-op, which
+        // is the one-step-per-batch contract); event counters are
+        // statistics. No payload is published under the pressure word.
         let max_p = self.max_pressure[i].load(Ordering::Relaxed);
         let p = self.pressure[i].load(Ordering::Relaxed);
         if p < max_p
@@ -614,12 +662,15 @@ impl TermController {
                 .compare_exchange(p, p + 1, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
         {
+            // ordering: Relaxed — event counter, a statistic.
             self.degrade_events[i].fetch_add(1, Ordering::Relaxed);
         }
     }
 
     fn lower_pressure(&self, tier: Tier) {
         let i = tier.idx();
+        // ordering: Relaxed — mirror of `raise_pressure`: CAS for the
+        // step contract, counters are statistics.
         let p = self.pressure[i].load(Ordering::Relaxed);
         if p > 0
             && self.pressure[i]
@@ -633,12 +684,14 @@ impl TermController {
     /// One tier's current pressure (degradation steps applied to that
     /// tier alone).
     pub fn tier_pressure(&self, tier: Tier) -> usize {
+        // ordering: Relaxed — observability read of a lone scalar.
         self.pressure[tier.idx()].load(Ordering::Relaxed)
     }
 
     /// Hottest per-tier pressure — aggregate observability; control is
     /// per tier (see [`TermController::tier_pressure`]).
     pub fn pressure(&self) -> usize {
+        // ordering: Relaxed — observability read of lone scalars.
         self.pressure.iter().map(|p| p.load(Ordering::Relaxed)).max().unwrap_or(0)
     }
 
@@ -671,6 +724,8 @@ impl TermController {
     }
 
     pub fn snapshot(&self) -> QosSnapshot {
+        // ordering: Relaxed — an observability snapshot; each counter
+        // is independently meaningful and tear-free on its own.
         let tier_degrade_events: [u64; NUM_TIERS] =
             std::array::from_fn(|i| self.degrade_events[i].load(Ordering::Relaxed));
         let tier_restore_events: [u64; NUM_TIERS] =
@@ -1205,5 +1260,95 @@ mod tests {
         let t = c.batch_tolerance([Tier::Throughput, Tier::Balanced]).unwrap();
         assert_eq!(t, Tier::Balanced.tolerance().unwrap());
         assert_eq!(c.batch_tolerance([]), None);
+    }
+}
+
+/// Loom models for the controller's lock-free signal paths. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_model_`
+/// (see CONCURRENCY.md).
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::util::sync::{thread, Arc};
+
+    /// Two concurrent `observe_batch` calls fold their service samples
+    /// into one tier's EWMA. The CAS `fetch_update` must not lose
+    /// either sample: the final filter state is exactly one of the two
+    /// serialized blend orders, never a lone sample (the lost-update
+    /// outcome of the load→blend→store sequence the CAS replaced) and
+    /// never a torn mix. Occupancy 0.5 sits between the default
+    /// watermarks and no SLO/service target is set, so the pressure
+    /// loop abstains and the EWMA is the whole story.
+    #[test]
+    fn loom_model_ewma_cas_never_loses_a_sample() {
+        loom::model(|| {
+            let ctl = Arc::new(TermController::new(QosConfig::new(8)));
+            let tier = Tier::Throughput;
+            let handles: Vec<_> = [1.0f64, 3.0]
+                .into_iter()
+                .map(|s| {
+                    let ctl = Arc::clone(&ctl);
+                    thread::spawn(move || ctl.observe_batch(tier, 0.5, Some(s), None))
+                })
+                .collect();
+            // Concurrent observability read: NaN sentinel (None) or a
+            // legal intermediate — never a half-written word.
+            if let Some(v) = ctl.tier_service_ewma(tier) {
+                let legal = [
+                    blend_ewma(f64::NAN, 1.0),
+                    blend_ewma(f64::NAN, 3.0),
+                    blend_ewma(blend_ewma(f64::NAN, 1.0), 3.0),
+                    blend_ewma(blend_ewma(f64::NAN, 3.0), 1.0),
+                ];
+                assert!(legal.contains(&v), "mid-race EWMA is not a serialized state: {v}");
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            let got = ctl.tier_service_ewma(tier).expect("EWMA initialized after two samples");
+            let a = blend_ewma(blend_ewma(f64::NAN, 1.0), 3.0);
+            let b = blend_ewma(blend_ewma(f64::NAN, 3.0), 1.0);
+            assert!(got == a || got == b, "lost EWMA update: got {got}, want {a} or {b}");
+            // Neutral signals: the pressure loop must not have stepped.
+            assert_eq!(ctl.tier_pressure(tier), 0);
+            let s = ctl.snapshot();
+            assert_eq!(s.tier_degrade_events[tier.idx()], 0);
+            assert_eq!(s.tier_restore_events[tier.idx()], 0);
+        });
+    }
+
+    /// `record_latency` vs `take_tier_p99`: the window consume is
+    /// atomic. A racing reader may see the sample once, may strand it
+    /// (reset overwriting a just-claimed slot — the documented bounded
+    /// staleness), and may transiently read a claimed-but-unwritten
+    /// slot as 0.0 — but the sample is never surfaced twice and no
+    /// phantom value ever appears.
+    #[test]
+    fn loom_model_digest_window_consume_is_atomic() {
+        loom::model(|| {
+            let tier = Tier::Balanced;
+            let cfg = QosConfig::new(8).with_slo_target(tier, 1.0);
+            let ctl = Arc::new(TermController::new(cfg));
+            let w = {
+                let ctl = Arc::clone(&ctl);
+                thread::spawn(move || ctl.record_latency(tier, 5.0))
+            };
+            let take1 = ctl.take_tier_p99(tier);
+            if let Some(v) = take1 {
+                assert!(v == 0.0 || v == 5.0, "phantom latency surfaced mid-race: {v}");
+            }
+            w.join().unwrap();
+            let take2 = ctl.take_tier_p99(tier);
+            if let Some(v) = take2 {
+                assert_eq!(v, 5.0, "phantom latency after quiescence");
+            }
+            assert!(
+                !(take1 == Some(5.0) && take2 == Some(5.0)),
+                "one sample surfaced in two windows"
+            );
+            if take1.is_some() {
+                assert!(take2.is_none(), "consumed window resurfaced: {take2:?}");
+            }
+        });
     }
 }

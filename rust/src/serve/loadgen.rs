@@ -9,8 +9,8 @@ use crate::datasets::trace::RequestTrace;
 use crate::qos::{Tier, NUM_TIERS};
 use crate::tensor::{Rng, Tensor};
 use crate::util::stats::Summary;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{thread, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Per-tier slice of a load-test outcome.
@@ -100,7 +100,7 @@ pub fn run_trace_mix(
     let offered = events.len();
     let mut shed_by = [0usize; NUM_TIERS];
     let failed = Arc::new(AtomicU64::new(0));
-    let done = Arc::new(std::sync::Mutex::new(Vec::<Done>::new()));
+    let done = Arc::new(Mutex::new(Vec::<Done>::new()));
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut rng = Rng::seed(0xBEE);
@@ -108,7 +108,7 @@ pub fn run_trace_mix(
         let target = Duration::from_secs_f64(ev.at * time_scale);
         let elapsed = t0.elapsed();
         if target > elapsed {
-            std::thread::sleep(target - elapsed);
+            thread::sleep(target - elapsed);
         }
         // weighted tier draw
         let mut pick = rng.f32() as f64 * total_w;
@@ -127,7 +127,7 @@ pub fn run_trace_mix(
                 let done = done.clone();
                 let failed = failed.clone();
                 let sent = Instant::now();
-                pending.push(std::thread::spawn(move || match rx.recv() {
+                pending.push(thread::spawn(move || match rx.recv() {
                     Ok(resp) if resp.error.is_none() => {
                         done.lock().unwrap().push(Done {
                             tier,
@@ -137,6 +137,8 @@ pub fn run_trace_mix(
                         });
                     }
                     Ok(_) | Err(_) => {
+                        // ordering: Relaxed — plain event counter; the
+                        // joins below publish it before the final load.
                         failed.fetch_add(1, Ordering::Relaxed);
                     }
                 }));
@@ -149,6 +151,7 @@ pub fn run_trace_mix(
                 shed_by[t.idx()] += 1;
             }
             Err(SubmitError::Closed) => {
+                // ordering: Relaxed — same counter, same-thread bump.
                 failed.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -180,6 +183,8 @@ pub fn run_trace_mix(
         offered,
         completed: all.len(),
         shed: shed_by.iter().sum(),
+        // ordering: Relaxed — all writers were joined above, so this
+        // load observes every increment without extra synchronization.
         failed: failed.load(Ordering::Relaxed) as usize,
         wall_s: wall,
         throughput_rps: all.len() as f64 / wall.max(1e-9),

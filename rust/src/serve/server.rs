@@ -34,10 +34,10 @@ use crate::coordinator::{Coordinator, SubmitError};
 use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::Tier;
 use crate::tensor::Tensor;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{thread, Arc};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 
 /// Error code in the `[0][code]` response header: per-tier shed frame
 /// (payload = the refusing tier's wire encoding).
@@ -59,11 +59,14 @@ pub const CTRL_TRACE: u32 = 2;
 pub struct TcpServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    accept_thread: Option<thread::JoinHandle<()>>,
 }
 
 impl TcpServerHandle {
     pub fn stop(mut self) {
+        // ordering: SeqCst — lone on/off stop flag; not part of any
+        // multi-location protocol, so the strongest ordering costs
+        // nothing here and keeps the shutdown path trivially correct.
         self.stop.store(true, Ordering::SeqCst);
         // poke the accept loop
         let _ = TcpStream::connect(self.addr);
@@ -267,15 +270,17 @@ pub fn serve_tcp(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<TcpServe
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
-    let accept_thread = std::thread::Builder::new().name("tcp-accept".into()).spawn(move || {
+    let accept_thread = thread::Builder::new().name("tcp-accept".into()).spawn(move || {
         for conn in listener.incoming() {
+            // ordering: SeqCst — pairs with the SeqCst store in
+            // `TcpServerHandle::stop`; see the rationale there.
             if stop2.load(Ordering::SeqCst) {
                 break;
             }
             match conn {
                 Ok(stream) => {
                     let coord = coord.clone();
-                    let _ = std::thread::Builder::new()
+                    let _ = thread::Builder::new()
                         .name("tcp-conn".into())
                         .spawn(move || handle_conn(stream, coord));
                 }

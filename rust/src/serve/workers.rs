@@ -15,11 +15,11 @@
 use crate::coordinator::pool::{BasisWorker, BudgetedRun, WorkerFactory};
 use crate::models::quantized::QuantModel;
 use crate::tensor::Tensor;
+use crate::util::sync::Arc;
 use crate::xint::budget::BudgetPlan;
 use crate::xint::expansion::{ExpandConfig, SeriesExpansion};
 use crate::xint::quantizer::{channel_range, fake_quant, Clip, Symmetry};
 use crate::xint::BitSpec;
-use std::sync::Arc;
 
 /// The plain FP MLP weights exported to workers.
 #[derive(Clone, Debug)]

@@ -1,6 +1,7 @@
 //! Cross-cutting substrates built from scratch (no clap/serde/criterion
 //! offline): CLI parsing, config files, logging, statistics, ASCII table
-//! rendering, a micro property-testing harness, and a bench timer.
+//! rendering, a micro property-testing harness, a bench timer, and the
+//! `sync` shim every concurrent module must use (see `CONCURRENCY.md`).
 
 pub mod cli;
 pub mod config;
@@ -8,6 +9,7 @@ pub mod json;
 pub mod logger;
 pub mod prop;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod timer;
 

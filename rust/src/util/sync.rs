@@ -1,0 +1,32 @@
+//! Synchronization shim: the one place this crate imports atomics and
+//! threads from.
+//!
+//! Normal builds re-export `std::sync` / `std::thread` unchanged — zero
+//! cost. Under `RUSTFLAGS="--cfg loom"` the same names resolve to the
+//! vendored loom model checker's versions (`rust/vendor/loom`), so the
+//! `loom_model_*` tests can explore thread interleavings and weak-memory
+//! behaviors of the real production types. Everything concurrent in this
+//! crate goes through here; `scripts/check_invariants.py` enforces that
+//! no other non-test module imports `std::sync::atomic` or `std::thread`
+//! directly (rule `sync-shim`), because a single unshimmed atomic would
+//! silently escape every loom model.
+//!
+//! `Arc`, `mpsc`, and `OnceLock` are plain `std` types under both cfgs
+//! (the vendored checker serializes real OS threads, so `std`'s versions
+//! are already correct inside models); `Mutex`, `Condvar`, `atomic::*`,
+//! and `thread` are the model-aware ones. Loom models must not call
+//! blocking APIs the scheduler cannot see (`mpsc::Receiver::recv`,
+//! `JoinHandle::join` is fine — the shim's version is scheduler-aware);
+//! see `CONCURRENCY.md` for how to write and run models.
+
+#[cfg(not(loom))]
+pub use std::sync::{atomic, mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::{atomic, mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+#[cfg(loom)]
+pub use loom::thread;

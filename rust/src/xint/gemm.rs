@@ -14,7 +14,7 @@
 use super::budget::TermBudget;
 use super::expansion::{ExpandConfig, SeriesExpansion};
 use crate::tensor::{IntTensor, Tensor};
-use std::sync::OnceLock;
+use crate::util::sync::OnceLock;
 
 /// A weight matrix `(out, in)` pre-expanded at load time (PTQ happens once;
 /// only activations are expanded on the request path).

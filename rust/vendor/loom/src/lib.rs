@@ -1,0 +1,54 @@
+//! Vendored miniature [loom](https://github.com/tokio-rs/loom)-style model
+//! checker, API-compatible with the subset of loom that `fp_xint`'s
+//! `util::sync` shim re-exports. The container this repo builds in has no
+//! network registry access, so instead of the real loom we vendor a small
+//! checker with the same contract:
+//!
+//! - [`model`] runs a closure many times (default 512 iterations, override
+//!   with `LOOM_MAX_ITERS`), each under a different seeded schedule.
+//! - Inside a model, `loom::thread::spawn` threads are real OS threads
+//!   serialized by a token-passing scheduler: exactly one model thread runs
+//!   at a time, and every atomic / mutex / condvar operation is a scheduling
+//!   point where the token may move (bounded by `LOOM_MAX_PREEMPTIONS`,
+//!   default 4 forced preemptions per execution; voluntary blocking and
+//!   `yield_now` are always scheduling edges and never count).
+//! - Weak memory is simulated for atomics: each location keeps its full
+//!   store history with a vector-clock snapshot per store, and a load may
+//!   return any store not ruled out by per-thread coherence (a thread never
+//!   re-reads an older store than one it already read) or happens-before
+//!   (stores whose clock is `<=` the reader's clock put a floor on how stale
+//!   the read may be). An `Acquire` load that observes a `Release` store
+//!   joins the reader's clock with the writer's. Read-modify-writes always
+//!   read the newest store and publish with release semantics — a sound
+//!   strengthening that cannot hide plain load/store reordering bugs.
+//! - `SeqCst` is approximated as Release+Acquire. This can miss bugs that
+//!   depend on the absence of a single total order across locations, but it
+//!   admits no false positives, and none of the modeled protocols rely on
+//!   `SeqCst`-only reasoning.
+//!
+//! Outside [`model`], every vendored primitive behaves exactly like its
+//! `std::sync` / `std::thread` counterpart, so the whole `fp_xint` test
+//! suite still compiles and runs correctly under `--cfg loom`.
+//!
+//! A failing interleaving panics with the iteration index; iterations are
+//! deterministic given the same `LOOM_MAX_ITERS` / `LOOM_MAX_PREEMPTIONS`,
+//! so a failure reproduces by re-running the same test.
+
+#![forbid(unsafe_code)]
+
+mod rt;
+pub mod sync;
+pub mod thread;
+
+/// Run `f` under the model checker for `LOOM_MAX_ITERS` (default 512)
+/// seeded schedules. Panics (with the iteration index) on the first
+/// schedule in which `f` panics, deadlocks, or leaks an unjoined thread.
+pub fn model<F: Fn()>(f: F) {
+    rt::run_model(rt::iters_from_env(), &f);
+}
+
+/// [`model`] with an explicit iteration count, for expensive models that
+/// need a smaller budget than the global default.
+pub fn model_iters<F: Fn()>(iters: usize, f: F) {
+    rt::run_model(iters, &f);
+}

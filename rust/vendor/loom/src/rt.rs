@@ -1,0 +1,623 @@
+//! Execution runtime: token-passing scheduler + vector-clock weak memory.
+//!
+//! One model runs at a time (`MODEL_LOCK` serializes `loom::model` calls
+//! across test threads). Inside a model, registered threads are real OS
+//! threads but only the thread holding the token (`State::current`) may
+//! run; every vendored primitive operation funnels through a scheduling
+//! point where the token can move. Blocking (mutex contention, condvar
+//! waits, joins) is explicit in `Tstate`, which makes deadlock detection a
+//! simple "no runnable thread" check.
+//!
+//! Registration of atomics / mutexes / condvars is lazy: each object holds
+//! an epoch-tagged id cell, so objects created in a previous iteration (or
+//! outside any model) are re-registered cleanly instead of dangling.
+//!
+//! On any failure (panic in a model thread, deadlock, leaked thread) the
+//! `panicked` flag flips the whole runtime into pass-through mode: every
+//! blocked thread is woken, scheduling stops, and primitives degrade to
+//! their plain `std` behavior so the iteration can drain and the failure
+//! can be reported from `run_model` instead of hanging the test binary.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::AtomicU64 as IdCell;
+use std::sync::atomic::Ordering as StdOrdering;
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+const EPOCH_SHIFT: u32 = 32;
+const IDX_MASK: u64 = (1 << EPOCH_SHIFT) - 1;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Block {
+    Mutex(usize),
+    Cond(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Tstate {
+    Runnable,
+    Blocked(Block),
+    Finished,
+}
+
+/// One entry in an atomic location's modification order.
+struct StoreRec {
+    val: u64,
+    clock: Vec<u64>,
+    release: bool,
+}
+
+struct Location {
+    stores: Vec<StoreRec>,
+    /// Per-thread coherence floor: index of the newest store each thread
+    /// has already observed (a thread may never read older than this).
+    floor: Vec<usize>,
+}
+
+struct State {
+    active: bool,
+    epoch: u64,
+    current: usize,
+    threads: Vec<Tstate>,
+    clocks: Vec<Vec<u64>>,
+    locations: Vec<Location>,
+    sync_objects: usize,
+    rng: u64,
+    preemptions_left: usize,
+    panicked: Option<String>,
+}
+
+impl State {
+    const fn new() -> State {
+        State {
+            active: false,
+            epoch: 0,
+            current: 0,
+            threads: Vec::new(),
+            clocks: Vec::new(),
+            locations: Vec::new(),
+            sync_objects: 0,
+            rng: 0,
+            preemptions_left: 0,
+            panicked: None,
+        }
+    }
+
+    /// SplitMix64: deterministic per-iteration schedule randomness.
+    fn next_u64(&mut self) -> u64 {
+        self.rng = self.rng.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+struct Rt {
+    m: Mutex<State>,
+    cv: Condvar,
+}
+
+fn rt() -> &'static Rt {
+    static RT: OnceLock<Rt> = OnceLock::new();
+    RT.get_or_init(|| Rt { m: Mutex::new(State::new()), cv: Condvar::new() })
+}
+
+static MODEL_LOCK: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// (epoch, tid) of the model execution this OS thread belongs to.
+    static TID: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+}
+
+fn tls() -> Option<(u64, usize)> {
+    TID.with(|t| t.get())
+}
+
+/// Cheap hint (no lock): is this OS thread a registered model thread?
+pub(crate) fn in_model() -> bool {
+    tls().is_some()
+}
+
+/// Definitive check under the runtime lock: the calling thread belongs to
+/// the *current, live, non-failed* model execution.
+fn ctx(st: &State) -> Option<usize> {
+    let (epoch, tid) = tls()?;
+    if st.active && epoch == st.epoch && st.panicked.is_none() {
+        Some(tid)
+    } else {
+        None
+    }
+}
+
+fn lock_state() -> MutexGuard<'static, State> {
+    rt().m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn clock_get(c: &[u64], i: usize) -> u64 {
+    c.get(i).copied().unwrap_or(0)
+}
+
+fn clock_le(a: &[u64], b: &[u64]) -> bool {
+    (0..a.len().max(b.len())).all(|i| clock_get(a, i) <= clock_get(b, i))
+}
+
+fn clock_join(dst: &mut Vec<u64>, src: &[u64]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (i, v) in src.iter().enumerate() {
+        if *v > dst[i] {
+            dst[i] = *v;
+        }
+    }
+}
+
+/// Tick `me`'s own component and return a snapshot of its clock.
+fn tick(st: &mut State, me: usize) -> Vec<u64> {
+    if st.clocks[me].len() <= me {
+        st.clocks[me].resize(me + 1, 0);
+    }
+    st.clocks[me][me] += 1;
+    st.clocks[me].clone()
+}
+
+/// Hand the token to a random runnable thread; records a deadlock (all
+/// live threads blocked) in `panicked` instead of hanging.
+fn pick_next(st: &mut State) {
+    let runnable: Vec<usize> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t, Tstate::Runnable))
+        .map(|(i, _)| i)
+        .collect();
+    if runnable.is_empty() {
+        let any_blocked = st.threads.iter().any(|t| matches!(t, Tstate::Blocked(_)));
+        if any_blocked && st.panicked.is_none() {
+            st.panicked = Some(format!(
+                "deadlock: every live model thread is blocked ({:?})",
+                st.threads
+            ));
+        }
+        return;
+    }
+    let r = st.next_u64() as usize;
+    st.current = runnable[r % runnable.len()];
+}
+
+fn wait_token(mut st: MutexGuard<'static, State>, epoch: u64, me: usize) {
+    while st.active && st.panicked.is_none() && st.epoch == epoch && st.current != me {
+        st = rt().cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// A scheduling point: with probability 1/2 (while the preemption budget
+/// lasts) hand the token to another runnable thread and wait to get it
+/// back. `voluntary` points (yield/sleep) always offer the token and do
+/// not consume the budget.
+fn switch_point(voluntary: bool) {
+    if tls().is_none() {
+        return;
+    }
+    let mut st = lock_state();
+    let Some(me) = ctx(&st) else { return };
+    let epoch = st.epoch;
+    let others: Vec<usize> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|(i, t)| *i != me && matches!(t, Tstate::Runnable))
+        .map(|(i, _)| i)
+        .collect();
+    if others.is_empty() {
+        return;
+    }
+    let take = if voluntary {
+        true
+    } else if st.preemptions_left == 0 {
+        false
+    } else {
+        st.next_u64() % 2 == 0
+    };
+    if !take {
+        return;
+    }
+    if !voluntary {
+        st.preemptions_left -= 1;
+    }
+    let r = st.next_u64() as usize;
+    st.current = others[r % others.len()];
+    rt().cv.notify_all();
+    wait_token(st, epoch, me);
+}
+
+pub(crate) fn sched_point() {
+    switch_point(false);
+}
+
+pub(crate) fn yield_point() {
+    if tls().is_some() {
+        switch_point(true);
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+/// Block the calling thread on `why` until some other thread unblocks it
+/// and the scheduler hands it the token. Returns false in pass-through
+/// mode (no model scheduling happened; the caller must fall back to plain
+/// `std` behavior).
+fn block_current(why: Block) -> bool {
+    let mut st = lock_state();
+    let Some(me) = ctx(&st) else { return false };
+    let epoch = st.epoch;
+    st.threads[me] = Tstate::Blocked(why);
+    pick_next(&mut st);
+    rt().cv.notify_all();
+    while st.active
+        && st.panicked.is_none()
+        && st.epoch == epoch
+        && !(st.current == me && matches!(st.threads[me], Tstate::Runnable))
+    {
+        st = rt().cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    // On a pass-through exit (failure elsewhere) make sure we are not left
+    // marked blocked, so the all-finished accounting still converges.
+    if matches!(st.threads[me], Tstate::Blocked(_)) {
+        st.threads[me] = Tstate::Runnable;
+    }
+    true
+}
+
+/// Resolve an object's epoch-tagged id cell, registering it on first use
+/// within the current iteration.
+fn resolve_id(
+    st: &mut State,
+    cell: &IdCell,
+    mut register: impl FnMut(&mut State) -> usize,
+) -> usize {
+    let packed = cell.load(StdOrdering::Relaxed);
+    if packed >> EPOCH_SHIFT == st.epoch {
+        return (packed & IDX_MASK) as usize;
+    }
+    let idx = register(st);
+    cell.store((st.epoch << EPOCH_SHIFT) | idx as u64, StdOrdering::Relaxed);
+    idx
+}
+
+fn resolve_sync_id(st: &mut State, cell: &IdCell) -> usize {
+    resolve_id(st, cell, |st| {
+        st.sync_objects += 1;
+        st.sync_objects - 1
+    })
+}
+
+fn resolve_loc(st: &mut State, cell: &IdCell, init: u64) -> usize {
+    resolve_id(st, cell, |st| {
+        st.locations.push(Location {
+            // The initial value: an all-zero clock is `<=` every thread's
+            // clock, so it is always visible, and marking it release makes
+            // acquiring it a no-op join.
+            stores: vec![StoreRec { val: init, clock: Vec::new(), release: true }],
+            floor: Vec::new(),
+        });
+        st.locations.len() - 1
+    })
+}
+
+// ---- sync primitives -------------------------------------------------
+
+pub(crate) fn block_on_mutex(cell: &IdCell) -> bool {
+    let why = {
+        let mut st = lock_state();
+        if ctx(&st).is_none() {
+            return false;
+        }
+        Block::Mutex(resolve_sync_id(&mut st, cell))
+    };
+    block_current(why)
+}
+
+pub(crate) fn mutex_released(cell: &IdCell) {
+    let mut st = lock_state();
+    let Some((epoch, _)) = tls() else { return };
+    // Wake waiters even when `panicked` is set: they exit to pass-through.
+    if !st.active || st.epoch != epoch {
+        return;
+    }
+    let id = resolve_sync_id(&mut st, cell);
+    for t in st.threads.iter_mut() {
+        if *t == Tstate::Blocked(Block::Mutex(id)) {
+            *t = Tstate::Runnable;
+        }
+    }
+    rt().cv.notify_all();
+}
+
+pub(crate) fn cond_block(cell: &IdCell) -> bool {
+    let why = {
+        let mut st = lock_state();
+        if ctx(&st).is_none() {
+            return false;
+        }
+        Block::Cond(resolve_sync_id(&mut st, cell))
+    };
+    block_current(why)
+}
+
+pub(crate) fn cond_notify(cell: &IdCell, all: bool) {
+    let mut st = lock_state();
+    let Some((epoch, _)) = tls() else { return };
+    if !st.active || st.epoch != epoch {
+        return;
+    }
+    let id = resolve_sync_id(&mut st, cell);
+    let mut woken = 0usize;
+    for t in st.threads.iter_mut() {
+        if *t == Tstate::Blocked(Block::Cond(id)) {
+            *t = Tstate::Runnable;
+            woken += 1;
+            if !all && woken == 1 {
+                break;
+            }
+        }
+    }
+    if woken > 0 {
+        rt().cv.notify_all();
+    }
+}
+
+// ---- atomics ---------------------------------------------------------
+
+/// Model-checked atomic load. `None` means pass-through (caller should
+/// use its real fallback atomic).
+pub(crate) fn atomic_load(cell: &IdCell, init: u64, acquire: bool) -> Option<u64> {
+    tls()?;
+    sched_point();
+    let mut st = lock_state();
+    let me = ctx(&st)?;
+    let loc_i = resolve_loc(&mut st, cell, init);
+    let r = st.next_u64() as usize;
+    let my_clock = st.clocks[me].clone();
+    let (val, join_clock) = {
+        let loc = &mut st.locations[loc_i];
+        if loc.floor.len() <= me {
+            loc.floor.resize(me + 1, 0);
+        }
+        let hi = loc.stores.len() - 1;
+        // Visibility floor: the newest store already ordered before us by
+        // happens-before; anything older would be an incoherent read.
+        let mut lo = loc.floor[me];
+        for i in (lo..=hi).rev() {
+            if clock_le(&loc.stores[i].clock, &my_clock) {
+                lo = lo.max(i);
+                break;
+            }
+        }
+        let idx = if hi > lo { lo + r % (hi - lo + 1) } else { lo };
+        loc.floor[me] = idx;
+        let s = &loc.stores[idx];
+        let join = if acquire && s.release { Some(s.clock.clone()) } else { None };
+        (s.val, join)
+    };
+    if let Some(c) = join_clock {
+        clock_join(&mut st.clocks[me], &c);
+    }
+    Some(val)
+}
+
+pub(crate) fn atomic_store(cell: &IdCell, init: u64, val: u64, release: bool) -> Option<()> {
+    tls()?;
+    sched_point();
+    let mut st = lock_state();
+    let me = ctx(&st)?;
+    let loc_i = resolve_loc(&mut st, cell, init);
+    let snap = tick(&mut st, me);
+    let loc = &mut st.locations[loc_i];
+    loc.stores.push(StoreRec { val, clock: snap, release });
+    if loc.floor.len() <= me {
+        loc.floor.resize(me + 1, 0);
+    }
+    loc.floor[me] = loc.stores.len() - 1;
+    Some(())
+}
+
+/// Model-checked read-modify-write: reads the newest store (joining its
+/// clock — RMWs are modeled acquire+release) and, if `f` returns a new
+/// value, appends it to the modification order. `Ok((prev, new))` /
+/// `Err(prev)` mirror `fetch_update`'s contract.
+pub(crate) fn atomic_rmw(
+    cell: &IdCell,
+    init: u64,
+    f: &mut dyn FnMut(u64) -> Option<u64>,
+) -> Option<Result<(u64, u64), u64>> {
+    tls()?;
+    sched_point();
+    let mut st = lock_state();
+    let me = ctx(&st)?;
+    let loc_i = resolve_loc(&mut st, cell, init);
+    let (prev, join_clock) = {
+        let s = st.locations[loc_i].stores.last().expect("location has an initial store");
+        let join = if s.release { Some(s.clock.clone()) } else { None };
+        (s.val, join)
+    };
+    if let Some(c) = join_clock {
+        clock_join(&mut st.clocks[me], &c);
+    }
+    match f(prev) {
+        Some(new) => {
+            let snap = tick(&mut st, me);
+            let loc = &mut st.locations[loc_i];
+            loc.stores.push(StoreRec { val: new, clock: snap, release: true });
+            if loc.floor.len() <= me {
+                loc.floor.resize(me + 1, 0);
+            }
+            loc.floor[me] = loc.stores.len() - 1;
+            Some(Ok((prev, new)))
+        }
+        None => Some(Err(prev)),
+    }
+}
+
+// ---- thread lifecycle ------------------------------------------------
+
+/// Register a child thread from the (token-holding) parent. Returns the
+/// child's (epoch, tid), or `None` in pass-through mode.
+pub(crate) fn register_thread() -> Option<(u64, usize)> {
+    let mut st = lock_state();
+    let parent = ctx(&st)?;
+    let epoch = st.epoch;
+    let tid = st.threads.len();
+    st.threads.push(Tstate::Runnable);
+    // Spawn edge: the child starts with (a copy of) the parent's clock.
+    let mut child_clock = tick(&mut st, parent);
+    if child_clock.len() <= tid {
+        child_clock.resize(tid + 1, 0);
+    }
+    child_clock[tid] += 1;
+    st.clocks.push(child_clock);
+    Some((epoch, tid))
+}
+
+pub(crate) fn attach(epoch: u64, tid: usize) {
+    TID.with(|t| t.set(Some((epoch, tid))));
+}
+
+pub(crate) fn detach() {
+    TID.with(|t| t.set(None));
+}
+
+/// A freshly spawned model thread parks here until first scheduled.
+pub(crate) fn wait_first_token(epoch: u64, tid: usize) {
+    let st = lock_state();
+    wait_token(st, epoch, tid);
+}
+
+pub(crate) fn thread_finished(epoch: u64, tid: usize, panic_msg: Option<String>) {
+    let mut st = lock_state();
+    if st.epoch != epoch {
+        return;
+    }
+    st.threads[tid] = Tstate::Finished;
+    if let Some(msg) = panic_msg {
+        if st.panicked.is_none() {
+            st.panicked = Some(msg);
+        }
+    }
+    for t in st.threads.iter_mut() {
+        if *t == Tstate::Blocked(Block::Join(tid)) {
+            *t = Tstate::Runnable;
+        }
+    }
+    if st.active && st.current == tid {
+        pick_next(&mut st);
+    }
+    rt().cv.notify_all();
+}
+
+/// Model-aware join: blocks (scheduler-visible) until `child` finishes,
+/// then joins its clock (join edge). Returns false in pass-through mode;
+/// either way the caller still performs the real `JoinHandle::join`.
+pub(crate) fn join_thread(epoch: u64, child: usize) -> bool {
+    loop {
+        {
+            let mut st = lock_state();
+            let Some(me) = ctx(&st) else { return false };
+            if st.epoch != epoch {
+                return false;
+            }
+            if matches!(st.threads[child], Tstate::Finished) {
+                let c = st.clocks[child].clone();
+                clock_join(&mut st.clocks[me], &c);
+                return true;
+            }
+        }
+        if !block_current(Block::Join(child)) {
+            return false;
+        }
+    }
+}
+
+// ---- model driver ----------------------------------------------------
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub(crate) fn iters_from_env() -> usize {
+    env_usize("LOOM_MAX_ITERS", 512).max(1)
+}
+
+pub(crate) fn run_model(iters: usize, f: &dyn Fn()) {
+    let _serial = MODEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(tls().is_none(), "nested loom::model is not supported");
+    let max_preemptions = env_usize("LOOM_MAX_PREEMPTIONS", 4);
+    for iter in 0..iters {
+        run_one(iter as u64, max_preemptions, f);
+    }
+}
+
+fn run_one(iter: u64, max_preemptions: usize, f: &dyn Fn()) {
+    let epoch = {
+        let mut st = lock_state();
+        st.epoch += 1;
+        st.active = true;
+        st.current = 0;
+        st.threads = vec![Tstate::Runnable];
+        st.clocks = vec![vec![0]];
+        st.locations.clear();
+        st.sync_objects = 0;
+        st.rng = 0x0d2c_e0ed ^ iter.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        st.preemptions_left = max_preemptions;
+        st.panicked = None;
+        st.epoch
+    };
+    attach(epoch, 0);
+    let out = catch_unwind(AssertUnwindSafe(f));
+    // Main is done: hand the token over and wait for every spawned thread
+    // to finish (models are expected to join their threads; the timeout
+    // turns a leak into a loud failure instead of a hang).
+    let (leaked, failure) = {
+        let mut st = lock_state();
+        st.threads[0] = Tstate::Finished;
+        if out.is_err() && st.panicked.is_none() {
+            st.panicked = Some(String::from("model main thread panicked"));
+        }
+        if st.current == 0 {
+            pick_next(&mut st);
+        }
+        rt().cv.notify_all();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let leaked = loop {
+            if st.threads.iter().all(|t| matches!(t, Tstate::Finished)) {
+                break false;
+            }
+            if Instant::now() >= deadline {
+                break true;
+            }
+            rt().cv.notify_all();
+            let (g, _) = rt()
+                .cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        };
+        st.active = false;
+        let failure = st.panicked.clone();
+        rt().cv.notify_all();
+        (leaked, failure)
+    };
+    detach();
+    if let Err(e) = out {
+        resume_unwind(e);
+    }
+    if leaked {
+        panic!("loom: model iteration {iter} leaked threads after main returned");
+    }
+    if let Some(msg) = failure {
+        panic!("loom: model failed at iteration {iter}: {msg}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Model-checked atomics.
+//!
+//! Inside a model, every operation routes through the runtime's
+//! per-location store history (weak-memory simulation: a load may observe
+//! any coherent, happens-before-consistent store, not just the newest).
+//! Outside a model, each type degrades to its plain `std` counterpart via
+//! the embedded fallback atomic, which the model path also mirrors so
+//! `Debug` and pass-through reads always see the newest value.
+
+pub use std::sync::atomic::Ordering;
+
+use std::fmt;
+use std::sync::atomic::AtomicBool as StdAtomicBool;
+use std::sync::atomic::AtomicU32 as StdAtomicU32;
+use std::sync::atomic::AtomicU64 as StdAtomicU64;
+use std::sync::atomic::AtomicUsize as StdAtomicUsize;
+
+use crate::rt;
+
+fn is_acquire(o: Ordering) -> bool {
+    matches!(o, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn is_release(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn u64_ident(v: u64) -> u64 {
+    v
+}
+
+fn usize_into(v: usize) -> u64 {
+    v as u64
+}
+
+fn usize_from(v: u64) -> usize {
+    v as usize
+}
+
+fn u32_into(v: u32) -> u64 {
+    u64::from(v)
+}
+
+fn u32_from(v: u64) -> u32 {
+    v as u32
+}
+
+fn bool_into(v: bool) -> u64 {
+    u64::from(v)
+}
+
+fn bool_from(v: u64) -> bool {
+    v != 0
+}
+
+/// Shared surface: construction, load/store, swap, CAS, `fetch_update`,
+/// and the bit ops valid for every atomic type (incl. `AtomicBool`).
+macro_rules! model_atomic_core {
+    ($name:ident, $prim:ty, $std:ty, $into:path, $from:path) => {
+        pub struct $name {
+            id: StdAtomicU64,
+            v: $std,
+        }
+
+        impl $name {
+            pub fn new(v: $prim) -> $name {
+                $name { id: StdAtomicU64::new(0), v: <$std>::new(v) }
+            }
+
+            fn init(&self) -> u64 {
+                $into(self.v.load(Ordering::SeqCst))
+            }
+
+            /// Model-path RMW with fallback mirroring; `None` = not in a
+            /// model (caller must use the fallback atomic).
+            fn rmw(
+                &self,
+                f: &mut dyn FnMut($prim) -> Option<$prim>,
+            ) -> Option<Result<$prim, $prim>> {
+                let out = rt::atomic_rmw(&self.id, self.init(), &mut |cur| {
+                    f($from(cur)).map($into)
+                })?;
+                Some(match out {
+                    Ok((prev, new)) => {
+                        self.v.store($from(new), Ordering::SeqCst);
+                        Ok($from(prev))
+                    }
+                    Err(prev) => Err($from(prev)),
+                })
+            }
+
+            pub fn load(&self, order: Ordering) -> $prim {
+                match rt::atomic_load(&self.id, self.init(), is_acquire(order)) {
+                    Some(v) => $from(v),
+                    None => self.v.load(order),
+                }
+            }
+
+            pub fn store(&self, val: $prim, order: Ordering) {
+                match rt::atomic_store(&self.id, self.init(), $into(val), is_release(order)) {
+                    Some(()) => self.v.store(val, Ordering::SeqCst),
+                    None => self.v.store(val, order),
+                }
+            }
+
+            pub fn swap(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |_| Some(val)) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("swap rmw cannot fail"),
+                    None => self.v.swap(val, order),
+                }
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                match self.rmw(&mut |cur| if cur == current { Some(new) } else { None }) {
+                    Some(r) => r,
+                    None => self.v.compare_exchange(current, new, success, failure),
+                }
+            }
+
+            pub fn compare_exchange_weak(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                // The model never fails spuriously (a sound strengthening).
+                self.compare_exchange(current, new, success, failure)
+            }
+
+            pub fn fetch_update<F>(
+                &self,
+                set_order: Ordering,
+                fetch_order: Ordering,
+                mut f: F,
+            ) -> Result<$prim, $prim>
+            where
+                F: FnMut($prim) -> Option<$prim>,
+            {
+                match self.rmw(&mut f) {
+                    Some(r) => r,
+                    None => self.v.fetch_update(set_order, fetch_order, f),
+                }
+            }
+
+            pub fn fetch_or(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |cur| Some(cur | val)) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("fetch_or rmw cannot fail"),
+                    None => self.v.fetch_or(val, order),
+                }
+            }
+
+            pub fn fetch_and(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |cur| Some(cur & val)) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("fetch_and rmw cannot fail"),
+                    None => self.v.fetch_and(val, order),
+                }
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> $name {
+                $name::new(<$prim>::default())
+            }
+        }
+
+        impl From<$prim> for $name {
+            fn from(v: $prim) -> $name {
+                $name::new(v)
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                fmt::Debug::fmt(&self.v.load(Ordering::SeqCst), f)
+            }
+        }
+    };
+}
+
+/// Arithmetic ops, valid for the integer atomics only.
+macro_rules! model_atomic_arith {
+    ($name:ident, $prim:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |cur| Some(cur.wrapping_add(val))) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("fetch_add rmw cannot fail"),
+                    None => self.v.fetch_add(val, order),
+                }
+            }
+
+            pub fn fetch_sub(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |cur| Some(cur.wrapping_sub(val))) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("fetch_sub rmw cannot fail"),
+                    None => self.v.fetch_sub(val, order),
+                }
+            }
+
+            pub fn fetch_max(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |cur| Some(cur.max(val))) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("fetch_max rmw cannot fail"),
+                    None => self.v.fetch_max(val, order),
+                }
+            }
+
+            pub fn fetch_min(&self, val: $prim, order: Ordering) -> $prim {
+                match self.rmw(&mut |cur| Some(cur.min(val))) {
+                    Some(Ok(prev)) => prev,
+                    Some(Err(_)) => unreachable!("fetch_min rmw cannot fail"),
+                    None => self.v.fetch_min(val, order),
+                }
+            }
+        }
+    };
+}
+
+model_atomic_core!(AtomicU64, u64, StdAtomicU64, u64_ident, u64_ident);
+model_atomic_core!(AtomicUsize, usize, StdAtomicUsize, usize_into, usize_from);
+model_atomic_core!(AtomicU32, u32, StdAtomicU32, u32_into, u32_from);
+model_atomic_core!(AtomicBool, bool, StdAtomicBool, bool_into, bool_from);
+
+model_atomic_arith!(AtomicU64, u64);
+model_atomic_arith!(AtomicUsize, usize);
+model_atomic_arith!(AtomicU32, u32);

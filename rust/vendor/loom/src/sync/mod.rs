@@ -1,0 +1,245 @@
+//! `std::sync`-shaped primitives, model-aware inside `loom::model`.
+//!
+//! `Mutex` and `Condvar` wrap their `std` counterparts; inside a model
+//! every acquire / wait / notify goes through the runtime so blocking is
+//! visible to the scheduler (and deadlocks are detected instead of hung).
+//! `Condvar::wait_timeout` inside a model returns an immediate spurious
+//! timeout (legal per its contract) after a release + scheduling point,
+//! so timed waits cannot stall the single-token scheduler.
+//!
+//! `Arc`, `mpsc`, and `OnceLock` are plain `std` re-exports: the runtime
+//! serializes model threads onto real OS threads, so `std`'s own versions
+//! are already correct — only *blocking* (`mpsc::Receiver::recv` etc.)
+//! would be invisible to the scheduler. Models must use `try_recv`.
+
+pub mod atomic;
+
+pub use std::sync::{mpsc, Arc, LockResult, OnceLock, PoisonError, TryLockError, Weak};
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::AtomicU64 as IdCell;
+use std::sync::Condvar as StdCondvar;
+use std::sync::Mutex as StdMutex;
+use std::sync::MutexGuard as StdMutexGuard;
+use std::time::{Duration, Instant};
+
+use crate::rt;
+
+pub struct Mutex<T> {
+    id: IdCell,
+    inner: StdMutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+fn wrap_lock<'a, T>(
+    lock: &'a Mutex<T>,
+    r: LockResult<StdMutexGuard<'a, T>>,
+) -> LockResult<MutexGuard<'a, T>> {
+    match r {
+        Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+        Err(p) => Err(PoisonError::new(MutexGuard { lock, inner: Some(p.into_inner()) })),
+    }
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex { id: IdCell::new(0), inner: StdMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if !rt::in_model() {
+            return wrap_lock(self, self.inner.lock());
+        }
+        let mut teardown: Option<Instant> = None;
+        loop {
+            rt::sched_point();
+            match self.inner.try_lock() {
+                Ok(g) => return Ok(MutexGuard { lock: self, inner: Some(g) }),
+                Err(TryLockError::Poisoned(p)) => {
+                    let g = MutexGuard { lock: self, inner: Some(p.into_inner()) };
+                    return Err(PoisonError::new(g));
+                }
+                Err(TryLockError::WouldBlock) => {
+                    if rt::block_on_mutex(&self.id) {
+                        continue;
+                    }
+                    // Pass-through (model tearing down after a failure):
+                    // the holder now runs freely and will release soon,
+                    // unless the failure was a genuine lock cycle — bound
+                    // the spin so that still fails loudly.
+                    let t0 = *teardown.get_or_insert_with(Instant::now);
+                    if t0.elapsed() > Duration::from_secs(5) {
+                        panic!("loom: lock unavailable during model teardown");
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        match self.inner.into_inner() {
+            Ok(t) => Ok(t),
+            Err(p) => Err(PoisonError::new(p.into_inner())),
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        match self.inner.get_mut() {
+            Ok(t) => Ok(t),
+            Err(p) => Err(PoisonError::new(p.into_inner())),
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T> From<T> for Mutex<T> {
+    fn from(t: T) -> Mutex<T> {
+        Mutex::new(t)
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let g = self.inner.take();
+        if g.is_some() {
+            // Release the real lock first, then wake model waiters.
+            drop(g);
+            rt::mutex_released(&self.lock.id);
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+pub struct Condvar {
+    id: IdCell,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { id: IdCell::new(0), inner: StdCondvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        if rt::in_model() {
+            // The waiter holds the scheduler token from the release until
+            // it is marked blocked, so a notify cannot slip in between:
+            // no lost wakeups.
+            drop(guard.inner.take());
+            rt::mutex_released(&lock.id);
+            drop(guard);
+            rt::cond_block(&self.id);
+            lock.lock()
+        } else {
+            let std_g = guard.inner.take().expect("guard accessed after release");
+            drop(guard);
+            wrap_lock(lock, self.inner.wait(std_g))
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let lock = guard.lock;
+        if rt::in_model() {
+            // Modeled as an immediate (legal) spurious timeout, with a
+            // real release + scheduling point so contenders can take the
+            // lock in between.
+            drop(guard.inner.take());
+            rt::mutex_released(&lock.id);
+            drop(guard);
+            rt::yield_point();
+            let timed = WaitTimeoutResult { timed_out: true };
+            match lock.lock() {
+                Ok(g) => Ok((g, timed)),
+                Err(p) => Err(PoisonError::new((p.into_inner(), timed))),
+            }
+        } else {
+            let std_g = guard.inner.take().expect("guard accessed after release");
+            drop(guard);
+            match self.inner.wait_timeout(std_g, dur) {
+                Ok((g, w)) => {
+                    let out = MutexGuard { lock, inner: Some(g) };
+                    Ok((out, WaitTimeoutResult { timed_out: w.timed_out() }))
+                }
+                Err(p) => {
+                    let (g, w) = p.into_inner();
+                    let out = MutexGuard { lock, inner: Some(g) };
+                    Err(PoisonError::new((out, WaitTimeoutResult { timed_out: w.timed_out() })))
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        rt::cond_notify(&self.id, false);
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        rt::cond_notify(&self.id, true);
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("Condvar { .. }")
+    }
+}

@@ -1,0 +1,148 @@
+//! Model-aware threads: inside `loom::model`, spawned threads register
+//! with the scheduler and run token-serialized; outside, everything
+//! delegates straight to `std::thread`.
+
+use std::fmt;
+use std::io;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use crate::rt;
+
+pub use std::thread::Result;
+
+pub struct JoinHandle<T> {
+    inner: std::thread::JoinHandle<T>,
+    model: Option<(u64, usize)>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some((epoch, tid)) = self.model {
+            // Scheduler-visible wait (join edge for the vector clocks);
+            // the real join below then completes without blocking long.
+            rt::join_thread(epoch, tid);
+        }
+        self.inner.join()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.inner.is_finished()
+    }
+
+    pub fn thread(&self) -> &std::thread::Thread {
+        self.inner.thread()
+    }
+}
+
+impl<T> fmt::Debug for JoinHandle<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("JoinHandle { .. }")
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Builder {
+    name: Option<String>,
+    stack_size: Option<usize>,
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder::default()
+    }
+
+    pub fn name(mut self, name: String) -> Builder {
+        self.name = Some(name);
+        self
+    }
+
+    pub fn stack_size(mut self, size: usize) -> Builder {
+        self.stack_size = Some(size);
+        self
+    }
+
+    pub fn spawn<F, T>(self, f: F) -> io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let mut b = std::thread::Builder::new();
+        if let Some(n) = self.name {
+            b = b.name(n);
+        }
+        if let Some(s) = self.stack_size {
+            b = b.stack_size(s);
+        }
+        match rt::register_thread() {
+            Some((epoch, tid)) => {
+                let spawned = b.spawn(move || {
+                    rt::attach(epoch, tid);
+                    rt::wait_first_token(epoch, tid);
+                    let out = catch_unwind(AssertUnwindSafe(f));
+                    rt::thread_finished(epoch, tid, panic_message(&out));
+                    rt::detach();
+                    match out {
+                        Ok(v) => v,
+                        Err(e) => resume_unwind(e),
+                    }
+                });
+                match spawned {
+                    Ok(inner) => Ok(JoinHandle { inner, model: Some((epoch, tid)) }),
+                    Err(e) => {
+                        // Never ran: retire the registration so the model
+                        // does not wait for a thread that cannot finish.
+                        rt::thread_finished(epoch, tid, None);
+                        Err(e)
+                    }
+                }
+            }
+            None => {
+                let inner = b.spawn(f)?;
+                Ok(JoinHandle { inner, model: None })
+            }
+        }
+    }
+}
+
+fn panic_message<T>(out: &std::thread::Result<T>) -> Option<String> {
+    let e = out.as_ref().err()?;
+    if let Some(s) = e.downcast_ref::<&str>() {
+        Some((*s).to_string())
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        Some(s.clone())
+    } else {
+        Some(String::from("model thread panicked"))
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    Builder::new().spawn(f).expect("failed to spawn thread")
+}
+
+pub fn yield_now() {
+    rt::yield_point();
+}
+
+/// Inside a model the duration is ignored: sleeping is modeled as a
+/// voluntary scheduling point (any interleaving a real sleep could expose
+/// is reachable that way, without slowing the model down).
+pub fn sleep(dur: Duration) {
+    if rt::in_model() {
+        rt::yield_point();
+    } else {
+        std::thread::sleep(dur);
+    }
+}
+
+pub fn panicking() -> bool {
+    std::thread::panicking()
+}
+
+pub fn current() -> std::thread::Thread {
+    std::thread::current()
+}
