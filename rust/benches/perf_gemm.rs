@@ -1,15 +1,22 @@
 //! Perf — the expanded GEMM hot path (§5.2 speed discussion + §Perf).
 //!
 //! Measures: FP32 GEMM vs the integer expanded GEMM (i32 accumulation)
-//! at matched arithmetic, the k·t cost scaling of Eq. 3, the rank-1
-//! M_nsy fast path vs dense, and (when artifacts exist) the PJRT-compiled
-//! Pallas xint_gemm kernel.
+//! at matched arithmetic, the k·t cost scaling of Eq. 3, the packed
+//! SIMD / row-parallel grid kernel vs the scalar grid (the tentpole —
+//! emits `BENCH_gemm.json` with the CI-gated speedups), the rank-1
+//! M_nsy fast path vs dense, and (when artifacts exist) the
+//! PJRT-compiled Pallas xint_gemm kernel.
 //!
 //!     cargo bench --bench perf_gemm
 
+use std::sync::Arc;
+
+use fp_xint::bench_support::write_bench_json;
 use fp_xint::tensor::{matmul_a_bt, IntTensor, Rng, Tensor};
+use fp_xint::util::json::Json;
 use fp_xint::util::{logger, BenchTimer, Table};
-use fp_xint::xint::gemm::{int_gemm_a_bt, xint_linear_forward, ExpandedWeight};
+use fp_xint::xint::gemm::{int_gemm_a_bt, int_gemm_scaled_into, xint_linear_forward, ExpandedWeight};
+use fp_xint::xint::kernel::{self, GridRun, KernelPool, PackedPlane};
 use fp_xint::xint::{BitSpec, ExpandConfig};
 
 fn gflops(m: usize, n: usize, k: usize, secs: f64) -> f64 {
@@ -71,6 +78,115 @@ fn main() {
         ]);
     }
     t2.print();
+
+    // --- packed SIMD + row-parallel grid kernel vs the scalar grid
+    // (tentpole). k=2 weight × t=3 activation planes — the serving-shaped
+    // grid. Weights pack outside the timed region (load-time in serving);
+    // activations pack inside it (once per layer call, amortized over all
+    // six grid cells), so "packed" charges the real request-path cost.
+    let kern = kernel::active_kernel();
+    let lanes = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let pool = KernelPool::new(lanes.saturating_sub(1));
+    let pairs: Vec<(usize, usize)> =
+        (0..2usize).flat_map(|i| (0..3usize).map(move |j| (i, j))).collect();
+    let mut t4 = Table::new(
+        &format!("perf — Eq. 3 grid kernel (k=2, t=3, int4 planes, {} lanes)", lanes),
+        &["shape (m×n×k)", "scalar (ms)", "packed (ms)", "parallel (ms)", "packed", "parallel"],
+    );
+    let mut bit_identical = true;
+    let mut shapes_json: Vec<Json> = Vec::new();
+    let mut largest = Json::Null;
+    for &(m, n, k) in &[(64usize, 64usize, 256usize), (128, 128, 512), (256, 256, 1024)] {
+        let w_int: Vec<IntTensor> = (0..2)
+            .map(|_| {
+                IntTensor::from_vec(&[n, k], (0..n * k).map(|_| rng.below(15) as i32 - 7).collect())
+            })
+            .collect();
+        let a_int: Vec<IntTensor> = (0..3)
+            .map(|_| {
+                IntTensor::from_vec(&[m, k], (0..m * k).map(|_| rng.below(15) as i32 - 7).collect())
+            })
+            .collect();
+        let w_scales: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..n).map(|_| rng.uniform(0.01, 1.0)).collect()).collect();
+        let a_scales: Vec<f32> = (0..3).map(|_| rng.uniform(0.01, 1.0)).collect();
+        // baseline: the pre-packing kernel — six scalar int GEMMs
+        let scalar = timer.run(|| {
+            let mut y = vec![0.0f32; m * n];
+            for &(i, j) in &pairs {
+                int_gemm_scaled_into(&a_int[j], &w_int[i], &w_scales[i], a_scales[j], &mut y);
+            }
+            y
+        });
+        let wp: Vec<Arc<PackedPlane>> =
+            w_int.iter().map(|p| Arc::new(PackedPlane::pack(p).unwrap())).collect();
+        let ws: Vec<Arc<Vec<f32>>> = w_scales.iter().map(|s| Arc::new(s.clone())).collect();
+        let mk_run = || {
+            let ap: Vec<Arc<PackedPlane>> =
+                a_int.iter().map(|p| Arc::new(PackedPlane::pack(p).unwrap())).collect();
+            GridRun::new(wp.clone(), ws.clone(), ap, a_scales.clone(), pairs.clone())
+        };
+        let packed = timer.run(|| {
+            let run = mk_run();
+            let mut y = vec![0.0f32; m * n];
+            kernel::execute(&run, kern, &mut y);
+            y
+        });
+        let parallel = timer.run(|| {
+            let run = Arc::new(mk_run());
+            let mut y = vec![0.0f32; m * n];
+            kernel::execute_parallel_with(&pool, &run, kern, &mut y);
+            y
+        });
+        // pin all three routes bit-identical before trusting the timings
+        let mut y_ref = vec![0.0f32; m * n];
+        for &(i, j) in &pairs {
+            int_gemm_scaled_into(&a_int[j], &w_int[i], &w_scales[i], a_scales[j], &mut y_ref);
+        }
+        let run = Arc::new(mk_run());
+        let mut y_packed = vec![0.0f32; m * n];
+        kernel::execute(&run, kern, &mut y_packed);
+        let mut y_par = vec![0.0f32; m * n];
+        kernel::execute_parallel_with(&pool, &run, kern, &mut y_par);
+        if y_packed != y_ref || y_par != y_ref {
+            bit_identical = false;
+            log::error!("kernel output diverged from scalar at {m}x{n}x{k}");
+        }
+        let shape = format!("{m}×{n}×{k}");
+        let (s_ms, p_ms, r_ms) = (scalar.min * 1e3, packed.min * 1e3, parallel.min * 1e3);
+        t4.row_str(&[
+            &shape,
+            &format!("{s_ms:.3}"),
+            &format!("{p_ms:.3}"),
+            &format!("{r_ms:.3}"),
+            &format!("{:.2}×", s_ms / p_ms),
+            &format!("{:.2}×", s_ms / r_ms),
+        ]);
+        let entry = Json::obj([
+            ("shape", Json::str(&shape)),
+            ("scalar_ms", Json::num(s_ms)),
+            ("packed_ms", Json::num(p_ms)),
+            ("parallel_ms", Json::num(r_ms)),
+            ("packed_speedup", Json::num(s_ms / p_ms)),
+            ("parallel_speedup", Json::num(s_ms / r_ms)),
+        ]);
+        largest = entry.clone();
+        shapes_json.push(entry);
+    }
+    t4.print();
+    let json = Json::obj([
+        ("bench", Json::str("gemm_kernels")),
+        ("kernel", Json::str(kern.name())),
+        ("lanes", Json::num(lanes as f64)),
+        ("bit_identical", Json::num(if bit_identical { 1.0 } else { 0.0 })),
+        ("largest", largest),
+        ("shapes", Json::Arr(shapes_json)),
+    ]);
+    match write_bench_json("gemm", &json) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => log::error!("BENCH_gemm.json write failed: {e}"),
+    }
+    pool.shutdown();
 
     // --- rank-1 M_nsy path vs dense multiplication (the §4 O(n²) claim)
     let mut t3 = Table::new(

@@ -115,6 +115,11 @@ pub struct WorkerPool {
 impl WorkerPool {
     pub fn new(n: usize, factory: WorkerFactory) -> WorkerPool {
         assert!(n > 0, "pool needs at least one worker");
+        // compose the two parallelism levels: with n basis workers each
+        // running layer grids concurrently, cap the intra-op kernel
+        // lanes at available_parallelism / n so kernel row-blocking
+        // doesn't oversubscribe the cores the pool already claimed
+        crate::xint::kernel::set_interop_workers(n);
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {

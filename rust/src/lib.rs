@@ -21,9 +21,11 @@
 //!   wrapper, and benchmark harnesses that regenerate every table and
 //!   figure of the paper (see DESIGN.md §5).
 
-// The whole crate is safe Rust; the last `unsafe` block (a raw-pointer
-// field walk in `models::tinybert`) was replaced by a destructuring
-// visitor. Concurrency correctness is carried by types + the loom models
+// The crate is safe Rust with ONE sanctioned island: the AVX2
+// intrinsics in `xint::kernel::micro` (module-scoped `allow`, safe
+// wrappers re-check CPU features, bit-identity pinned by property
+// tests against the scalar kernel). Everything else stays safe;
+// concurrency correctness is carried by types + the loom models
 // (CONCURRENCY.md), not by unsafe cleverness — keep it that way.
 #![deny(unsafe_code)]
 

@@ -13,8 +13,9 @@
 
 use super::budget::TermBudget;
 use super::expansion::{ExpandConfig, SeriesExpansion};
+use super::kernel::{self, GridRun, PackedPlane};
 use crate::tensor::{IntTensor, Tensor};
-use crate::util::sync::OnceLock;
+use crate::util::sync::{Arc, OnceLock};
 
 /// A weight matrix `(out, in)` pre-expanded at load time (PTQ happens once;
 /// only activations are expanded on the request path).
@@ -26,6 +27,14 @@ pub struct ExpandedWeight {
     /// per-plane row sums `Σ_k W̃_i[o,k]` — precomputed for the rank-1
     /// activation-bias (`A_nsy`) terms, O(out) per use instead of O(out·in)
     pub plane_row_sums: Vec<Vec<i64>>,
+    /// basis planes packed to i8 once at load; `None` for a plane with
+    /// a value outside the [`kernel::PACK_MAX_ABS`] envelope (an X = 8
+    /// saturating plane), which routes its grid cells to the scalar
+    /// kernel
+    pub packed: Vec<Option<Arc<PackedPlane>>>,
+    /// per-plane scale vectors behind `Arc` so a row-parallel kernel
+    /// run can share them without cloning per layer call
+    pub scale_arcs: Vec<Arc<Vec<f32>>>,
     /// dense FP reconstruction of the *sparse* part only (usually empty)
     pub sparse_dense: Option<Tensor>,
     /// dense FP reconstruction of the whole expansion (incl. bias),
@@ -51,8 +60,21 @@ impl ExpandedWeight {
             })
             .collect();
         let sparse_dense = if exp.sparse.nnz() > 0 { Some(exp.sparse.to_dense()) } else { None };
+        // tentpole: weight planes pack to i8 once here at load time —
+        // the request path only packs activations
+        let packed = exp.planes.iter().map(|p| PackedPlane::pack(p).map(Arc::new)).collect();
+        let scale_arcs = exp.scales.iter().map(|s| Arc::new(s.clone())).collect();
         let recon = OnceLock::new();
-        ExpandedWeight { exp, out_dim, in_dim, plane_row_sums, sparse_dense, recon }
+        ExpandedWeight {
+            exp,
+            out_dim,
+            in_dim,
+            plane_row_sums,
+            packed,
+            scale_arcs,
+            sparse_dense,
+            recon,
+        }
     }
 
     /// Number of INT weight terms `k`.
@@ -66,10 +88,21 @@ impl ExpandedWeight {
     }
 }
 
+/// The single INT-dot envelope every integer kernel in this crate
+/// shares: basis-plane values must satisfy `|v| ≤ INT_DOT_MAX_ABS`
+/// (= 2^11, i.e. planes up to X = 12, whose inclusive symmetric
+/// half-range is exactly 2^11). Then a product is ≤ 2^22 and a
+/// 256-element partial sums to ≤ 2^30 < `i32::MAX`, so the chunked
+/// i32 accumulation in [`int_dot`] is exact. The i8 fast path narrows
+/// this further ([`kernel::PACK_MAX_ABS`] cites this constant as its
+/// outer bound); planes inside this envelope but outside that one
+/// take the scalar path here.
+pub const INT_DOT_MAX_ABS: i32 = 1 << 11;
+
 /// Integer GEMM `C = A × Bᵀ` with i32 accumulation: A `(m,k)`, B `(n,k)`.
 ///
-/// Values are INT(X) planes so every product fits comfortably in i32 for
-/// X ≤ 12; the inner loop folds 256-element i32 partials into an i64
+/// Values are INT(X) planes inside the [`INT_DOT_MAX_ABS`] envelope
+/// (X ≤ 12); the inner loop folds 256-element i32 partials into an i64
 /// accumulator, so any inner dimension `k` is overflow-safe.
 pub fn int_gemm_a_bt(a: &IntTensor, b: &IntTensor) -> Vec<i64> {
     let (m, k) = (a.dims()[0], a.dims()[1]);
@@ -92,13 +125,14 @@ pub fn int_gemm_a_bt(a: &IntTensor, b: &IntTensor) -> Vec<i64> {
 /// autovectorizes (§Perf iteration 1: replaced a per-element `% 256` fold,
 /// which defeated vectorization and ran ≈0.7× of f32 at large shapes).
 ///
-/// Safety of the i32 partials: |v| ≤ 2^11 ⇒ product ≤ 2^22 and a
-/// 256-chunk sums to ≤ 2^30 < i32::MAX. Basis planes use X ≤ 8 in
-/// practice; debug builds assert the envelope.
+/// Exactness rests on the [`INT_DOT_MAX_ABS`] envelope (stated and
+/// bounded there); debug builds assert it on both operands. Basis
+/// planes use X ≤ 8 in practice, well inside it.
 #[inline]
 pub fn int_dot(a: &[i32], b: &[i32]) -> i64 {
     debug_assert_eq!(a.len(), b.len());
-    debug_assert!(a.iter().all(|&v| v.abs() <= 1 << 11));
+    debug_assert!(a.iter().all(|&v| v.abs() <= INT_DOT_MAX_ABS));
+    debug_assert!(b.iter().all(|&v| v.abs() <= INT_DOT_MAX_ABS));
     const CHUNK: usize = 256;
     let mut acc: i64 = 0;
     let mut ai = a.chunks_exact(CHUNK);
@@ -219,39 +253,45 @@ pub fn xint_linear_forward_pre_budgeted(
     let (w_cap, a_cap) = budget.clamp_to(k, t);
     let mut y = Tensor::zeros(&[batch, out_dim]);
     let yd = y.data_mut();
-    let mut executed = 0usize;
 
-    // --- INT × INT terms (the k·t low-bit GEMMs of Figure 2's red grid)
-    // §Perf iteration 2: fused scale application inside the GEMM — one
-    // pass per (i, j) pair, no i64 intermediate, no scale re-derivation.
-    if budget.covers(k, t) {
-        for (i, wplane) in w.exp.planes.iter().enumerate() {
-            for (j, aplane) in a_exp.planes.iter().enumerate() {
-                let s_aj = a_exp.scales[j][0];
-                if s_aj == 0.0 {
-                    continue;
+    // tentpole: pack the activation planes to i8 once per layer call —
+    // reused by every weight term of the grid below, and the row-sum
+    // metadata feeds the rank-1 bias_w path further down. A plane
+    // outside the i8 envelope stays `None` (scalar path).
+    let a_packed: Vec<Option<Arc<PackedPlane>>> =
+        a_exp.planes.iter().take(a_cap).map(|p| PackedPlane::pack(p).map(Arc::new)).collect();
+
+    // --- INT × INT terms (the k·t low-bit GEMMs of Figure 2's red grid).
+    // Resolve the (i, j) execution list first — membership and order
+    // are exactly the scalar decision logic — then run it through the
+    // packed SIMD/row-parallel kernel (or the scalar reference kernel
+    // when a plane doesn't pack); both are bit-identical.
+    let pairs: Vec<(usize, usize)> = if budget.covers(k, t) {
+        let mut v = Vec::with_capacity(k * t);
+        for i in 0..k {
+            for j in 0..t {
+                if a_exp.scales[j][0] != 0.0 {
+                    v.push((i, j));
                 }
-                int_gemm_scaled_into(aplane, wplane, &w.exp.scales[i], s_aj, yd);
-                executed += 1;
             }
         }
+        v
     } else {
         // largest-contribution-first: order the capped grid by the scale
         // product (max over weight channels), so any executed prefix is
         // the best approximation available at that GEMM count
-        let mut pairs: Vec<(usize, usize, f32)> = Vec::with_capacity(w_cap * a_cap);
+        let mut scored: Vec<(usize, usize, f32)> = Vec::with_capacity(w_cap * a_cap);
         for i in 0..w_cap {
             let s_wi = w.exp.scales[i].iter().fold(0.0f32, |m, &v| m.max(v));
             for j in 0..a_cap {
-                pairs.push((i, j, s_wi * a_exp.scales[j][0]));
+                scored.push((i, j, s_wi * a_exp.scales[j][0]));
             }
         }
-        // descending product; tie-break on (i+j, i) so equal-scale
-        // diagonals execute in a deterministic order
-        pairs.sort_by(|a, b| {
-            b.2.partial_cmp(&a.2)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then_with(|| (a.0 + a.1, a.0).cmp(&(b.0 + b.1, b.0)))
+        // descending product (total_cmp: a NaN product must not scramble
+        // the largest-first prefix); tie-break on (i+j, i) so
+        // equal-scale diagonals execute in a deterministic order
+        scored.sort_by(|a, b| {
+            b.2.total_cmp(&a.2).then_with(|| (a.0 + a.1, a.0).cmp(&(b.0 + b.1, b.0)))
         });
         let grid_cap = budget.grid_terms.unwrap_or(usize::MAX);
         // §5.3 in-grid anytime stop: the sorted order makes the scale
@@ -262,22 +302,19 @@ pub fn xint_linear_forward_pre_budgeted(
         // is geometrically smaller still. The leading pair always
         // executes: a zero-pair forward would be garbage, not a coarser
         // approximation (the ≥ 1 floor of the budget contract).
-        let leading = pairs.first().map(|p| p.2).unwrap_or(0.0);
+        let leading = scored.first().map(|p| p.2).unwrap_or(0.0);
         let threshold = budget.scale_floor * leading;
-        for &(i, j, p) in pairs.iter().filter(|p| p.2 != 0.0).take(grid_cap) {
-            if executed > 0 && p < threshold {
+        let mut sel = Vec::new();
+        for &(i, j, p) in scored.iter().filter(|p| p.2 != 0.0).take(grid_cap) {
+            if !sel.is_empty() && p < threshold {
                 break;
             }
-            int_gemm_scaled_into(
-                &a_exp.planes[j],
-                &w.exp.planes[i],
-                &w.exp.scales[i],
-                a_exp.scales[j][0],
-                yd,
-            );
-            executed += 1;
+            sel.push((i, j));
         }
-    }
+        sel
+    };
+    let executed = pairs.len();
+    run_int_grid(&pairs, a_exp, &a_packed, w, yd);
 
     // --- activation zero-point × INT weight planes: bias_a · rowsum(W̃_i)
     let bias_a = a_exp.bias[0];
@@ -317,10 +354,24 @@ pub fn xint_linear_forward_pre_budgeted(
             if s_aj == 0.0 {
                 continue;
             }
-            for (b, acc) in arow_sums.iter_mut().enumerate() {
-                let rs: i64 =
-                    aplane.data()[b * in_dim..(b + 1) * in_dim].iter().map(|&v| v as i64).sum();
-                *acc += s_aj * rs as f32;
+            // satellite: the packed plane already carries exact per-row
+            // sums — O(batch) reads instead of an O(batch·in_dim)
+            // re-reduction per request; unpackable planes recompute
+            match a_packed.get(j).and_then(|p| p.as_deref()) {
+                Some(p) => {
+                    for (acc, &rs) in arow_sums.iter_mut().zip(p.row_sums()) {
+                        *acc += s_aj * rs as f32;
+                    }
+                }
+                None => {
+                    for (b, acc) in arow_sums.iter_mut().enumerate() {
+                        let rs: i64 = aplane.data()[b * in_dim..(b + 1) * in_dim]
+                            .iter()
+                            .map(|&v| v as i64)
+                            .sum();
+                        *acc += s_aj * rs as f32;
+                    }
+                }
             }
         }
         for (&idx, &v) in a_exp.sparse.indices.iter().zip(&a_exp.sparse.values) {
@@ -376,6 +427,50 @@ pub fn xint_linear_forward_pre_budgeted(
     }
 
     (y, executed)
+}
+
+/// Execute a resolved `(wi, aj)` pair list into `y`. When every plane
+/// the list touches packed to i8, the whole grid runs through the
+/// packed SIMD / row-parallel kernel ([`kernel::execute_grid`]);
+/// otherwise the scalar reference loop runs the identical pair order.
+/// Both routes are bit-identical (pinned by the kernel property tests),
+/// so the choice is invisible to callers.
+fn run_int_grid(
+    pairs: &[(usize, usize)],
+    a_exp: &SeriesExpansion,
+    a_packed: &[Option<Arc<PackedPlane>>],
+    w: &ExpandedWeight,
+    y: &mut [f32],
+) {
+    if pairs.is_empty() {
+        return;
+    }
+    let w_need = pairs.iter().map(|&(i, _)| i).max().map_or(0, |v| v + 1);
+    let a_need = pairs.iter().map(|&(_, j)| j).max().map_or(0, |v| v + 1);
+    let wp: Option<Vec<Arc<PackedPlane>>> = w.packed[..w_need].iter().cloned().collect();
+    let ap: Option<Vec<Arc<PackedPlane>>> = a_packed[..a_need].iter().cloned().collect();
+    if let (Some(wp), Some(ap)) = (wp, ap) {
+        let run = GridRun::new(
+            wp,
+            w.scale_arcs[..w_need].to_vec(),
+            ap,
+            (0..a_need).map(|j| a_exp.scales[j][0]).collect(),
+            pairs.to_vec(),
+        );
+        kernel::execute_grid(&Arc::new(run), y);
+    } else {
+        // a plane exceeded the i8 envelope (X = 8 saturating value):
+        // the exact scalar kernel handles the whole list
+        for &(i, j) in pairs {
+            int_gemm_scaled_into(
+                &a_exp.planes[j],
+                &w.exp.planes[i],
+                &w.exp.scales[i],
+                a_exp.scales[j][0],
+                y,
+            );
+        }
+    }
 }
 
 /// Reference: dequantize both expansions densely and multiply in FP —

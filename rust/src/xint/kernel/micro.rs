@@ -1,0 +1,317 @@
+//! i8 dot micro-kernels and runtime dispatch (tentpole step 2).
+//!
+//! Two implementations of the same exact-integer dot, selected once per
+//! process by feature detection:
+//!
+//! * **avx2** — `_mm256_maddubs_epi16` widening (i8×i8 → i16 pairs →
+//!   i32 lanes → i64), 32 MACs per instruction. `maddubs` wants an
+//!   unsigned left operand, so the kernel uses the standard identity
+//!   `a·b = |a| · sign_a(b)`; the [`super::pack::PACK_MAX_ABS`] = 127
+//!   envelope guarantees the i16 pair sums stay below `2^15` (no
+//!   saturation) and that `sign` never wraps, so the result is the
+//!   exact integer dot — bit-identical to the scalar path.
+//! * **portable** — chunked i32 accumulation with i64 folding, the
+//!   same shape as `xint::gemm::int_dot` but over i8 operands; LLVM
+//!   autovectorizes it on any target. This is the only path on
+//!   non-x86_64 builds and under `FP_XINT_FORCE_PORTABLE`.
+//!
+//! Both paths fold partial sums into i64 often enough that no i32 lane
+//! can overflow (bound stated at [`FOLD_CHUNKS`]), so every kernel
+//! returns the mathematically exact dot and the grid output is pinned
+//! bit-identical across scalar / portable / AVX2 (tested by
+//! `property_packed_grid_bit_identical_to_scalar`).
+
+use crate::util::sync::OnceLock;
+
+/// Which micro-kernel executes the inner dot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// AVX2 `maddubs` widening path (x86_64 with runtime-detected AVX2).
+    Avx2,
+    /// Scalar-unrolled i8 path (any target; forced by
+    /// `FP_XINT_FORCE_PORTABLE=1`).
+    Portable,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Avx2 => "avx2",
+            Kernel::Portable => "portable",
+        }
+    }
+}
+
+/// The kernel the dispatcher selected for this process: AVX2 when the
+/// CPU reports it, unless `FP_XINT_FORCE_PORTABLE` is set to anything
+/// but `0`/empty (the CI fallback leg runs the whole tier-1 suite this
+/// way). Detected once, cached for the process lifetime.
+pub fn active_kernel() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+fn detect() -> Kernel {
+    if let Ok(v) = std::env::var("FP_XINT_FORCE_PORTABLE") {
+        if !v.is_empty() && v != "0" {
+            return Kernel::Portable;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+    }
+    Kernel::Portable
+}
+
+/// Exact i8 dot through the selected kernel.
+#[inline]
+pub fn dot_i8(kernel: Kernel, a: &[i8], b: &[i8]) -> i64 {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::dot(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        Kernel::Avx2 => dot_i8_portable(a, b),
+        Kernel::Portable => dot_i8_portable(a, b),
+    }
+}
+
+/// Four exact i8 dots sharing the `a` operand (register blocking: the
+/// AVX2 path loads and `abs`es each 32-byte `a` chunk once for all four
+/// `b` rows — the grid executor walks output columns in strides of 4).
+#[inline]
+pub fn dot4_i8(kernel: Kernel, a: &[i8], b: [&[i8]; 4]) -> [i64; 4] {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::dot4(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        Kernel::Avx2 => dot4_portable(a, b),
+        Kernel::Portable => dot4_portable(a, b),
+    }
+}
+
+/// How many 32-element chunks accumulate into i32 lanes before folding
+/// to i64. Each chunk adds at most `2 · 127² < 2^15` per lane, so 4096
+/// chunks stay below `2^27` — far from i32 overflow. (The portable
+/// path folds every 256 elements, mirroring `int_dot`.)
+const FOLD_CHUNKS: usize = 4096;
+
+/// Scalar-unrolled fallback: chunked i32 partials folded into i64,
+/// exactly the `int_dot` recipe narrowed to i8 operands. `|v| ≤ 127`
+/// bounds a 256-element partial to `256 · 127² < 2^23 < i32::MAX`.
+pub fn dot_i8_portable(a: &[i8], b: &[i8]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    const CHUNK: usize = 256;
+    let mut acc: i64 = 0;
+    let mut ai = a.chunks_exact(CHUNK);
+    let mut bi = b.chunks_exact(CHUNK);
+    for (ca, cb) in (&mut ai).zip(&mut bi) {
+        let mut partial: i32 = 0;
+        for (&x, &y) in ca.iter().zip(cb) {
+            partial += x as i32 * y as i32;
+        }
+        acc += partial as i64;
+    }
+    let mut partial: i32 = 0;
+    for (&x, &y) in ai.remainder().iter().zip(bi.remainder()) {
+        partial += x as i32 * y as i32;
+    }
+    acc + partial as i64
+}
+
+fn dot4_portable(a: &[i8], b: [&[i8]; 4]) -> [i64; 4] {
+    [
+        dot_i8_portable(a, b[0]),
+        dot_i8_portable(a, b[1]),
+        dot_i8_portable(a, b[2]),
+        dot_i8_portable(a, b[3]),
+    ]
+}
+
+/// The one sanctioned `unsafe` island in the crate (see the lib-level
+/// `deny(unsafe_code)` note): raw AVX2 intrinsics behind runtime
+/// feature detection. The public functions here are *safe*: they
+/// re-check `is_x86_feature_detected!` (a cached atomic load) before
+/// entering the `target_feature` functions, so even a hand-constructed
+/// [`Kernel::Avx2`] on a non-AVX2 host degrades to the portable path
+/// instead of hitting an illegal instruction.
+#[cfg(target_arch = "x86_64")]
+#[allow(unsafe_code)]
+mod avx2 {
+    use core::arch::x86_64::{
+        __m256i, _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
+        _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_setzero_si256, _mm256_sign_epi8,
+        _mm256_storeu_si256,
+    };
+
+    use super::FOLD_CHUNKS;
+
+    pub fn dot(a: &[i8], b: &[i8]) -> i64 {
+        assert_eq!(a.len(), b.len());
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just verified; slices are equal
+            // length and loadu/storeu tolerate any alignment.
+            unsafe { dot_avx2(a, b) }
+        } else {
+            super::dot_i8_portable(a, b)
+        }
+    }
+
+    pub fn dot4(a: &[i8], b: [&[i8]; 4]) -> [i64; 4] {
+        for r in &b {
+            assert_eq!(a.len(), r.len());
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just verified; slices are equal
+            // length and loadu/storeu tolerate any alignment.
+            unsafe { dot4_avx2(a, b) }
+        } else {
+            super::dot4_portable(a, b)
+        }
+    }
+
+    /// Sum the eight i32 lanes into i64.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_i32x8(v: __m256i) -> i64 {
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes.iter().map(|&x| x as i64).sum()
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_avx2(a: &[i8], b: &[i8]) -> i64 {
+        let n = a.len();
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = _mm256_setzero_si256();
+        let mut total: i64 = 0;
+        let mut folds = 0usize;
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            // a·b = |a| · sign_a(b); |v| ≤ 127 ⇒ pair sums < 2^15, so
+            // maddubs cannot saturate and sign cannot wrap — exact.
+            let pairs = _mm256_maddubs_epi16(_mm256_abs_epi8(va), _mm256_sign_epi8(vb, va));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(pairs, ones));
+            i += 32;
+            folds += 1;
+            if folds == FOLD_CHUNKS {
+                total += hsum_i32x8(acc);
+                acc = _mm256_setzero_si256();
+                folds = 0;
+            }
+        }
+        total += hsum_i32x8(acc);
+        for (&x, &y) in a[i..].iter().zip(&b[i..]) {
+            total += x as i64 * y as i64;
+        }
+        total
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support and that all five slices
+    /// have equal length.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_avx2(a: &[i8], b: [&[i8]; 4]) -> [i64; 4] {
+        let n = a.len();
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let mut total = [0i64; 4];
+        let mut folds = 0usize;
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let abs_a = _mm256_abs_epi8(va);
+            for (r, acc_r) in acc.iter_mut().enumerate() {
+                let vb = _mm256_loadu_si256(b[r].as_ptr().add(i) as *const __m256i);
+                let pairs = _mm256_maddubs_epi16(abs_a, _mm256_sign_epi8(vb, va));
+                *acc_r = _mm256_add_epi32(*acc_r, _mm256_madd_epi16(pairs, ones));
+            }
+            i += 32;
+            folds += 1;
+            if folds == FOLD_CHUNKS {
+                for (t, acc_r) in total.iter_mut().zip(&mut acc) {
+                    *t += hsum_i32x8(*acc_r);
+                    *acc_r = _mm256_setzero_si256();
+                }
+                folds = 0;
+            }
+        }
+        for r in 0..4 {
+            total[r] += hsum_i32x8(acc[r]);
+            for (&x, &y) in a[i..].iter().zip(&b[r][i..]) {
+                total[r] += x as i64 * y as i64;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn reference(a: &[i8], b: &[i8]) -> i64 {
+        a.iter().zip(b).map(|(&x, &y)| x as i64 * y as i64).sum()
+    }
+
+    fn rand_row(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn dots_exact_across_lengths_and_kernels() {
+        let mut rng = Rng::seed(72);
+        // lengths straddling the 32-lane width, the 256 fold chunk, and
+        // the degenerate 0/1 cases
+        for n in [0usize, 1, 7, 31, 32, 33, 64, 100, 255, 256, 257, 1000] {
+            let a = rand_row(&mut rng, n);
+            let b = rand_row(&mut rng, n);
+            let want = reference(&a, &b);
+            for kernel in [Kernel::Portable, active_kernel()] {
+                assert_eq!(dot_i8(kernel, &a, &b), want, "n={n} {kernel:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot4_matches_four_dots() {
+        let mut rng = Rng::seed(73);
+        for n in [1usize, 33, 100, 257] {
+            let a = rand_row(&mut rng, n);
+            let rows: Vec<Vec<i8>> = (0..4).map(|_| rand_row(&mut rng, n)).collect();
+            let want: Vec<i64> = rows.iter().map(|r| reference(&a, r)).collect();
+            for kernel in [Kernel::Portable, active_kernel()] {
+                let got = dot4_i8(kernel, &a, [&rows[0], &rows[1], &rows[2], &rows[3]]);
+                assert_eq!(got.to_vec(), want, "n={n} {kernel:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_envelope_values_stay_exact() {
+        // ±127 everywhere is the worst case for the maddubs pair sums
+        // (2·127² = 32258, just under i16::MAX) and for lane growth
+        let n = 8192;
+        let a = vec![127i8; n];
+        let mut b = vec![-127i8; n];
+        // alternate signs so sign_a(b) exercises both directions
+        for (i, v) in b.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 127;
+            }
+        }
+        let want = reference(&a, &b);
+        for kernel in [Kernel::Portable, active_kernel()] {
+            assert_eq!(dot_i8(kernel, &a, &b), want, "{kernel:?}");
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Packed SIMD + row-parallel INT GEMM kernels for the Eq. 3 grid.
+//!
+//! The serving hot path executes `k·t` integer GEMMs per layer (the
+//! red grid of Figure 2). This module is the INT8-unit stand-in the
+//! paper assumes on its A800, built in three layers:
+//!
+//! * [`pack`] — basis planes narrowed to row-major `i8` once (weights
+//!   at load, activations once per layer call) and reused across every
+//!   grid cell, with per-row sums as metadata for the rank-1 `bias_w`
+//!   path.
+//! * [`micro`] — the inner dot: AVX2 `maddubs` widening (32 MACs per
+//!   instruction) behind runtime feature detection, with a portable
+//!   scalar-unrolled fallback (`FP_XINT_FORCE_PORTABLE=1` forces it).
+//! * [`parallel`] — a persistent worker set splitting output-row
+//!   blocks across lanes via a single `fetch_add` claim cursor
+//!   (protocol pinned by `loom_model_kernel_block_claim_exactly_once`).
+//!
+//! Everything is exact integer arithmetic and the float scale is
+//! applied with the same expression in the same per-element pair order
+//! as the scalar `int_gemm_scaled_into`, so all three tiers — scalar,
+//! portable, AVX2, sequential or row-parallel — produce bit-identical
+//! output. `xint::gemm` falls back to the scalar kernel whenever a
+//! plane exceeds the [`PACK_MAX_ABS`] i8 envelope.
+
+pub mod micro;
+pub mod pack;
+pub mod parallel;
+
+pub use micro::{active_kernel, dot4_i8, dot_i8, dot_i8_portable, Kernel};
+pub use pack::{PackedPlane, PACK_MAX_ABS};
+pub use parallel::{execute_parallel_with, set_interop_workers, shared, KernelPool};
+
+use crate::util::sync::Arc;
+
+/// Column-block width of the cache-blocked executor: 64 weight rows of
+/// `k ≤ 4096` i8 values stay L2-resident while an activation row
+/// streams across them.
+const NC: usize = 64;
+
+/// Grids below this many MACs run sequentially — the parallel dispatch
+/// round-trip (~tens of µs) needs real work to amortize.
+const PAR_MIN_MACS: usize = 1 << 22;
+
+/// One layer call's resolved Eq. 3 grid over packed planes: the
+/// `(wi, aj)` pair list in execution order plus the shared inputs,
+/// immutable so lanes can share it by `Arc`.
+pub struct GridRun {
+    /// batch rows
+    pub m: usize,
+    /// output channels
+    pub n: usize,
+    /// inner (dot) dimension
+    pub k: usize,
+    w_planes: Vec<Arc<PackedPlane>>,
+    w_scales: Vec<Arc<Vec<f32>>>,
+    a_planes: Vec<Arc<PackedPlane>>,
+    a_scales: Vec<f32>,
+    pairs: Vec<(usize, usize)>,
+}
+
+impl GridRun {
+    /// Assemble a run. `pairs` index `(w_planes, a_planes)`; weight
+    /// planes are `(n, k)`, activation planes `(m, k)`; `w_scales[i]`
+    /// is per-channel (len `n`) or a single broadcast scale.
+    pub fn new(
+        w_planes: Vec<Arc<PackedPlane>>,
+        w_scales: Vec<Arc<Vec<f32>>>,
+        a_planes: Vec<Arc<PackedPlane>>,
+        a_scales: Vec<f32>,
+        pairs: Vec<(usize, usize)>,
+    ) -> GridRun {
+        assert!(!w_planes.is_empty() && !a_planes.is_empty(), "empty grid");
+        let (n, k) = (w_planes[0].rows(), w_planes[0].k());
+        let m = a_planes[0].rows();
+        for p in &w_planes {
+            assert_eq!((p.rows(), p.k()), (n, k), "weight plane shape mismatch");
+        }
+        for p in &a_planes {
+            assert_eq!((p.rows(), p.k()), (m, k), "activation plane shape mismatch");
+        }
+        assert_eq!(w_scales.len(), w_planes.len());
+        assert_eq!(a_scales.len(), a_planes.len());
+        for &(wi, aj) in &pairs {
+            assert!(wi < w_planes.len() && aj < a_planes.len(), "pair out of range");
+        }
+        GridRun { m, n, k, w_planes, w_scales, a_planes, a_scales, pairs }
+    }
+
+    /// Grid cells this run executes.
+    pub fn pairs_len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Total MACs across the pair list.
+    pub fn macs(&self) -> usize {
+        self.pairs.len() * self.m * self.n * self.k
+    }
+}
+
+/// Accumulate rows `[r0, r1)` of the grid into `y` (length
+/// `(r1-r0)·n`, rows re-based to `r0`). The pair loop is outermost, so
+/// each output element receives its `(wi, aj)` contributions in pair
+/// order — the bit-identity anchor shared by the sequential and
+/// row-parallel drivers and by the scalar reference.
+fn execute_rows(run: &GridRun, kernel: Kernel, r0: usize, r1: usize, y: &mut [f32]) {
+    let n = run.n;
+    debug_assert_eq!(y.len(), (r1 - r0) * n);
+    for &(wi, aj) in &run.pairs {
+        let s_a = run.a_scales[aj];
+        let ws: &[f32] = &run.w_scales[wi];
+        let per_ch = ws.len() > 1;
+        let wp = &run.w_planes[wi];
+        let ap = &run.a_planes[aj];
+        let mut jb = 0usize;
+        while jb < n {
+            let jend = (jb + NC).min(n);
+            for i in r0..r1 {
+                let arow = ap.row(i);
+                let yrow = &mut y[(i - r0) * n..(i - r0 + 1) * n];
+                let mut j = jb;
+                while j + 4 <= jend {
+                    let d = dot4_i8(
+                        kernel,
+                        arow,
+                        [wp.row(j), wp.row(j + 1), wp.row(j + 2), wp.row(j + 3)],
+                    );
+                    for (u, &dv) in d.iter().enumerate() {
+                        let s_w = if per_ch { ws[j + u] } else { ws[0] };
+                        yrow[j + u] += s_a * s_w * dv as f32;
+                    }
+                    j += 4;
+                }
+                while j < jend {
+                    let s_w = if per_ch { ws[j] } else { ws[0] };
+                    yrow[j] += s_a * s_w * dot_i8(kernel, arow, wp.row(j)) as f32;
+                    j += 1;
+                }
+            }
+            jb = jend;
+        }
+    }
+}
+
+/// Sequentially accumulate the whole grid into `y` (length `m·n`).
+pub fn execute(run: &GridRun, kernel: Kernel, y: &mut [f32]) {
+    assert_eq!(y.len(), run.m * run.n);
+    execute_rows(run, kernel, 0, run.m, y);
+}
+
+/// The production entry point: dispatch the active kernel and go
+/// row-parallel through the shared pool when the grid is deep enough
+/// to amortize it; small grids run inline.
+pub fn execute_grid(run: &Arc<GridRun>, y: &mut [f32]) {
+    let kernel = active_kernel();
+    if run.m >= 2 * parallel::MIN_BLOCK_ROWS && run.macs() >= PAR_MIN_MACS {
+        execute_parallel_with(shared(), run, kernel, y);
+    } else {
+        execute(run, kernel, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{IntTensor, Rng};
+    use crate::util::prop::{forall, no_shrink, PropConfig};
+    use crate::xint::gemm::int_gemm_scaled_into;
+
+    /// Random plane with values in `[-max_abs, max_abs]`.
+    fn rand_plane(rng: &mut Rng, rows: usize, k: usize, max_abs: i32) -> IntTensor {
+        let span = (2 * max_abs + 1) as usize;
+        let vals = (0..rows * k).map(|_| rng.below(span) as i32 - max_abs).collect();
+        IntTensor::from_vec(&[rows, k], vals)
+    }
+
+    /// The satellite property: packed grids — portable and active
+    /// kernel, m=1 / n=1 / k off the 32-lane width, bits 3/4/8 — are
+    /// bit-identical to the scalar `int_gemm_scaled_into` loop over
+    /// the same pair order.
+    #[test]
+    fn property_packed_grid_bit_identical_to_scalar() {
+        forall(
+            PropConfig { cases: 40, seed: 0x9E11E7, max_shrink: 0 },
+            |r| {
+                let m = 1 + r.below(5);
+                let n = 1 + r.below(9);
+                let k = 1 + r.below(70);
+                let bits = [3u32, 4, 8][r.below(3)];
+                let per_ch = r.below(2) == 1;
+                let mut rng = r.fork(9);
+                // 8-bit planes cap at 127 here (±128 refuses to pack —
+                // covered by the envelope regression tests)
+                let max_abs = (1i32 << (bits - 1)).min(127);
+                let w_int: Vec<IntTensor> =
+                    (0..2).map(|_| rand_plane(&mut rng, n, k, max_abs)).collect();
+                let a_int: Vec<IntTensor> =
+                    (0..2).map(|_| rand_plane(&mut rng, m, k, max_abs)).collect();
+                let w_scales: Vec<Vec<f32>> = (0..2)
+                    .map(|_| {
+                        let len = if per_ch { n } else { 1 };
+                        (0..len).map(|_| rng.uniform(0.001, 2.0)).collect()
+                    })
+                    .collect();
+                let a_scales: Vec<f32> = (0..2).map(|_| rng.uniform(0.001, 2.0)).collect();
+                (w_int, a_int, w_scales, a_scales, (m, n))
+            },
+            no_shrink,
+            |(w_int, a_int, w_scales, a_scales, (m, n))| {
+                let pairs = vec![(0usize, 0usize), (0, 1), (1, 0), (1, 1)];
+                let mut y_ref = vec![0.0f32; m * n];
+                for &(wi, aj) in &pairs {
+                    int_gemm_scaled_into(
+                        &a_int[aj],
+                        &w_int[wi],
+                        &w_scales[wi],
+                        a_scales[aj],
+                        &mut y_ref,
+                    );
+                }
+                let run = GridRun::new(
+                    w_int.iter().map(|p| Arc::new(PackedPlane::pack(p).unwrap())).collect(),
+                    w_scales.iter().map(|s| Arc::new(s.clone())).collect(),
+                    a_int.iter().map(|p| Arc::new(PackedPlane::pack(p).unwrap())).collect(),
+                    a_scales.clone(),
+                    pairs,
+                );
+                for kernel in [Kernel::Portable, active_kernel()] {
+                    let mut y = vec![0.0f32; m * n];
+                    execute(&run, kernel, &mut y);
+                    if y != y_ref {
+                        return Err(format!("{kernel:?} diverged from scalar"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// `execute_grid` (auto dispatch, shared pool) stays bit-identical
+    /// on a grid deep enough to cross the parallel threshold.
+    #[test]
+    fn execute_grid_parallel_threshold_bit_identical() {
+        let mut rng = Rng::seed(76);
+        let (m, n, k) = (64usize, 64usize, 256usize);
+        let w_int: Vec<IntTensor> = (0..2).map(|_| rand_plane(&mut rng, n, k, 7)).collect();
+        let a_int: Vec<IntTensor> = (0..3).map(|_| rand_plane(&mut rng, m, k, 7)).collect();
+        let w_scales: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..n).map(|_| rng.uniform(0.01, 1.0)).collect()).collect();
+        let a_scales: Vec<f32> = (0..3).map(|_| rng.uniform(0.01, 1.0)).collect();
+        let mut pairs = Vec::new();
+        for i in 0..2 {
+            for j in 0..3 {
+                pairs.push((i, j));
+            }
+        }
+        let mut y_ref = vec![0.0f32; m * n];
+        for &(wi, aj) in &pairs {
+            int_gemm_scaled_into(&a_int[aj], &w_int[wi], &w_scales[wi], a_scales[aj], &mut y_ref);
+        }
+        let run = Arc::new(GridRun::new(
+            w_int.iter().map(|p| Arc::new(PackedPlane::pack(p).unwrap())).collect(),
+            w_scales.iter().map(|s| Arc::new(s.clone())).collect(),
+            a_int.iter().map(|p| Arc::new(PackedPlane::pack(p).unwrap())).collect(),
+            a_scales,
+            pairs,
+        ));
+        assert!(run.macs() >= PAR_MIN_MACS, "test must cross the parallel threshold");
+        let mut y = vec![0.0f32; m * n];
+        execute_grid(&run, &mut y);
+        assert_eq!(y, y_ref);
+    }
+}

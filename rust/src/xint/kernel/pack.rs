@@ -1,0 +1,129 @@
+//! i8 plane packing (tentpole step 1: pack once, reuse across the grid).
+//!
+//! A [`PackedPlane`] is a basis plane narrowed from the `IntTensor`'s
+//! `i32` storage to row-major `i8`, plus per-row value sums. Weight
+//! planes pack once at `ExpandedWeight::new` (load time); activation
+//! planes pack once per layer call and are then reused by every weight
+//! term of the Eq. 3 grid — the packing cost amortizes over `k` GEMMs,
+//! and the i8 rows quarter the memory traffic of the scalar kernel.
+
+use crate::tensor::IntTensor;
+use crate::xint::gemm::INT_DOT_MAX_ABS;
+
+/// i8-pack eligibility envelope: every plane value must satisfy
+/// `|v| ≤ PACK_MAX_ABS` (= 127). This is strictly tighter than the
+/// i8 range on purpose: the AVX2 micro-kernel computes `a·b` as
+/// `|a| · sign_a(b)` (`maddubs` identity), and `sign_a(-128)` wraps —
+/// so magnitude is capped at 127 on both operands, which also bounds the
+/// `maddubs` pair sums to `2·127² < 2^15` (no i16 saturation). Planes
+/// with X ≤ 7 always fit (`half = 64`); X = 8 planes fit unless a
+/// saturating value hits ±128, in which case [`PackedPlane::pack`]
+/// returns `None` and the grid runs on the exact scalar kernel
+/// instead. Wider planes (up to X = 12) stay inside the shared
+/// [`INT_DOT_MAX_ABS`] envelope and always have the scalar path.
+pub const PACK_MAX_ABS: i32 = 127;
+
+/// One basis plane packed to row-major `i8` with row-sum metadata.
+#[derive(Clone, Debug)]
+pub struct PackedPlane {
+    rows: usize,
+    k: usize,
+    data: Vec<i8>,
+    /// `Σ_c plane[r, c]` per row — the rank-1 `bias_w` path reads these
+    /// instead of recomputing O(rows·k) sums per request.
+    row_sums: Vec<i64>,
+}
+
+impl PackedPlane {
+    /// Pack a rank-2 plane, or `None` if any value falls outside the
+    /// [`PACK_MAX_ABS`] envelope (the caller then keeps the scalar
+    /// kernel, which is exact up to [`INT_DOT_MAX_ABS`]).
+    pub fn pack(plane: &IntTensor) -> Option<PackedPlane> {
+        let dims = plane.dims();
+        assert_eq!(dims.len(), 2, "PackedPlane wants a rank-2 plane");
+        let (rows, k) = (dims[0], dims[1]);
+        assert!(k > 0, "PackedPlane wants a nonzero inner dim");
+        let mut data = Vec::with_capacity(rows * k);
+        let mut row_sums = Vec::with_capacity(rows);
+        for src in plane.data().chunks_exact(k) {
+            let mut sum = 0i64;
+            for &v in src {
+                debug_assert!(
+                    v.abs() <= INT_DOT_MAX_ABS,
+                    "plane value {v} outside the INT-dot envelope"
+                );
+                if v.abs() > PACK_MAX_ABS {
+                    return None;
+                }
+                data.push(v as i8);
+                sum += v as i64;
+            }
+            row_sums.push(sum);
+        }
+        Some(PackedPlane { rows, k, data, row_sums })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Inner (dot) dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Row `r` as a contiguous i8 slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Per-row value sums (exact i64, same values the scalar `bias_w`
+    /// path derives per request).
+    pub fn row_sums(&self) -> &[i64] {
+        &self.row_sums
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn pack_roundtrips_values_and_row_sums() {
+        let mut rng = Rng::seed(71);
+        let (rows, k) = (5, 37);
+        let vals: Vec<i32> = (0..rows * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let plane = IntTensor::from_vec(&[rows, k], vals.clone());
+        let p = PackedPlane::pack(&plane).expect("within envelope");
+        assert_eq!((p.rows(), p.k()), (rows, k));
+        for r in 0..rows {
+            for c in 0..k {
+                assert_eq!(p.row(r)[c] as i32, vals[r * k + c]);
+            }
+            let want: i64 = vals[r * k..(r + 1) * k].iter().map(|&v| v as i64).sum();
+            assert_eq!(p.row_sums()[r], want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn envelope_overflow_refuses_to_pack() {
+        // X = 8 saturating planes contain ±128 — exactly one value out
+        // of envelope must already force the scalar fallback (the
+        // maddubs sign trick would wrap on ±128)
+        for bad in [128, -128, 2047] {
+            let mut vals = vec![1i32; 64];
+            vals[17] = bad;
+            assert!(
+                PackedPlane::pack(&IntTensor::from_vec(&[2, 32], vals)).is_none(),
+                "value {bad} must not pack"
+            );
+        }
+        // ±127 is the inclusive edge and must pack
+        let edge = IntTensor::from_vec(&[2, 32], vec![127i32; 64]);
+        assert!(PackedPlane::pack(&edge).is_some());
+        let edge_neg = IntTensor::from_vec(&[2, 32], vec![-127i32; 64]);
+        assert!(PackedPlane::pack(&edge_neg).is_some());
+    }
+}

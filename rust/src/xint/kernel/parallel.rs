@@ -1,0 +1,362 @@
+//! Row-parallel grid driver (tentpole step 3): a small persistent
+//! worker set splits one grid run over disjoint output-row blocks.
+//!
+//! ## Block-handoff protocol (see CONCURRENCY.md)
+//!
+//! One [`GridJob`] per layer call carries a single `AtomicUsize` claim
+//! cursor. Every lane — the pool workers *and* the requesting thread —
+//! loops `fetch_add(1)` on the cursor and executes the row block it was
+//! handed until the cursor passes `nblocks`. Blocks are disjoint row
+//! ranges, each accumulated from zero in lane-local storage (workers)
+//! or straight into `y` (the requester), so no two lanes ever write the
+//! same output element; worker results travel back over an `mpsc`
+//! channel whose send/recv pair carries the happens-before edge for the
+//! block payload. The cursor itself therefore needs only RMW atomicity
+//! (`Relaxed`), and `loom_model_kernel_block_claim_exactly_once` pins
+//! that every block is claimed exactly once with none skipped.
+//!
+//! The requesting thread claiming alongside the pool is the progress
+//! guarantee: if every pool worker is busy with other requests' jobs,
+//! the requester simply computes all blocks itself — the pool can slow
+//! a call down to sequential speed, never wedge it. A vanished worker
+//! degrades the same way: unreceived blocks are recomputed inline.
+//!
+//! ## Sizing (composes with the per-request pool)
+//!
+//! Per-call lane count = `min(pool lanes, width cap, m / MIN_BLOCK_ROWS)`.
+//! The width cap defaults to unlimited and is lowered by
+//! [`set_interop_workers`] when a `coordinator::WorkerPool` spawns:
+//! `available_parallelism / request_workers`, so request-level and
+//! row-level parallelism multiply out to the machine's core count
+//! instead of oversubscribing it. `FP_XINT_KERNEL_THREADS` overrides
+//! the shared pool's lane target (the requester counts as one lane).
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{mpsc, thread, Arc, OnceLock};
+
+use super::micro::Kernel;
+use super::GridRun;
+
+/// Smallest row block worth handing to a lane; below `2 ×` this the
+/// executor stays sequential.
+pub const MIN_BLOCK_ROWS: usize = 4;
+
+/// Target claim granularity: enough blocks per lane that an uneven
+/// finish rebalances, few enough that claim/send overhead stays noise.
+const BLOCKS_PER_LANE: usize = 2;
+
+/// One dispatched grid run: shared immutable inputs plus the claim
+/// cursor the lanes race on.
+struct GridJob {
+    run: Arc<GridRun>,
+    kernel: Kernel,
+    next: AtomicUsize,
+    nblocks: usize,
+    block_rows: usize,
+}
+
+impl GridJob {
+    fn rows(&self, b: usize) -> (usize, usize) {
+        let r0 = b * self.block_rows;
+        (r0, (r0 + self.block_rows).min(self.run.m))
+    }
+}
+
+struct RunTask {
+    job: Arc<GridJob>,
+    out: mpsc::Sender<(usize, Vec<f32>)>,
+}
+
+enum Task {
+    Run(RunTask),
+    Stop,
+}
+
+/// Persistent row-block workers (`xint-kernel-{i}` threads). One shared
+/// process-wide instance serves every layer call (see [`shared`]);
+/// tests and benches build private pools.
+pub struct KernelPool {
+    senders: Vec<mpsc::Sender<Task>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl KernelPool {
+    /// Spawn `workers` pool threads (the requesting thread is always an
+    /// additional lane, so `workers = lanes - 1`).
+    pub fn new(workers: usize) -> KernelPool {
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<Task>();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("xint-kernel-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn kernel worker"),
+            );
+            senders.push(tx);
+        }
+        KernelPool { senders, handles }
+    }
+
+    /// Pool worker count (lanes are this + 1).
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Stop and join the workers — for tests and benches; the shared
+    /// pool lives for the process.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(Task::Stop);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &mpsc::Receiver<Task>) {
+    while let Ok(task) = rx.recv() {
+        match task {
+            Task::Run(t) => {
+                let n = t.job.run.n;
+                claim_blocks(&t.job.next, t.job.nblocks, |b| {
+                    let (r0, r1) = t.job.rows(b);
+                    let mut block = vec![0.0f32; (r1 - r0) * n];
+                    super::execute_rows(&t.job.run, t.job.kernel, r0, r1, &mut block);
+                    // the requester may have recomputed and left already
+                    let _ = t.out.send((b, block));
+                });
+            }
+            Task::Stop => break,
+        }
+    }
+}
+
+/// Race claims off the cursor, running `f(block)` for each claim; stops
+/// once the cursor passes `nblocks`. Returns how many blocks this lane
+/// executed. Shared verbatim by the pool workers, the requesting
+/// thread, and the loom model.
+fn claim_blocks(next: &AtomicUsize, nblocks: usize, mut f: impl FnMut(usize)) -> usize {
+    let mut claimed = 0usize;
+    loop {
+        // ordering: Relaxed — the claim cursor only needs RMW atomicity
+        // (fetch_add hands out each block index exactly once); block
+        // payloads are published through the result channel, whose
+        // send/recv pair provides the happens-before edge.
+        let b = next.fetch_add(1, Ordering::Relaxed);
+        if b >= nblocks {
+            return claimed;
+        }
+        f(b);
+        claimed += 1;
+    }
+}
+
+fn width_cap() -> &'static AtomicUsize {
+    static CAP: OnceLock<AtomicUsize> = OnceLock::new();
+    CAP.get_or_init(|| AtomicUsize::new(usize::MAX))
+}
+
+/// Lower the kernel's per-call lane cap so `request_workers` concurrent
+/// layer calls times `cap` row lanes fills — and does not oversubscribe
+/// — the machine. Called by `coordinator::WorkerPool::new`; the latest
+/// pool's geometry wins.
+pub fn set_interop_workers(request_workers: usize) {
+    let avail = thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let cap = (avail / request_workers.max(1)).max(1);
+    // ordering: Relaxed — a sizing hint read at dispatch time; no data
+    // is published through this value.
+    width_cap().store(cap, Ordering::Relaxed);
+}
+
+fn lanes_for(pool: &KernelPool, m: usize) -> usize {
+    // ordering: Relaxed — sizing hint only (see set_interop_workers).
+    let cap = width_cap().load(Ordering::Relaxed);
+    (pool.workers() + 1).min(cap).min(m / MIN_BLOCK_ROWS).max(1)
+}
+
+/// The process-wide pool, spawned on first use: lane target from
+/// `FP_XINT_KERNEL_THREADS`, else `available_parallelism`.
+pub fn shared() -> &'static KernelPool {
+    static SHARED: OnceLock<KernelPool> = OnceLock::new();
+    SHARED.get_or_init(|| KernelPool::new(default_lanes().saturating_sub(1)))
+}
+
+fn default_lanes() -> usize {
+    if let Ok(v) = std::env::var("FP_XINT_KERNEL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+/// Execute `run` into `y` with row blocks split across `pool` plus the
+/// calling thread. Bit-identical to [`super::execute`]: blocks are
+/// row-disjoint and each accumulates its pairs in the same sequential
+/// order, and a worker block starting from zeros then copied equals the
+/// in-place accumulation onto the zeroed `y`.
+pub fn execute_parallel_with(pool: &KernelPool, run: &Arc<GridRun>, kernel: Kernel, y: &mut [f32]) {
+    let (m, n) = (run.m, run.n);
+    assert_eq!(y.len(), m * n);
+    let lanes = lanes_for(pool, m);
+    if lanes <= 1 {
+        super::execute(run, kernel, y);
+        return;
+    }
+    let block_rows = m.div_ceil(lanes * BLOCKS_PER_LANE).max(MIN_BLOCK_ROWS);
+    let nblocks = m.div_ceil(block_rows);
+    if nblocks <= 1 {
+        super::execute(run, kernel, y);
+        return;
+    }
+    let job = Arc::new(GridJob {
+        run: Arc::clone(run),
+        kernel,
+        next: AtomicUsize::new(0),
+        nblocks,
+        block_rows,
+    });
+    let (tx, rx) = mpsc::channel();
+    let mut dispatched = 0usize;
+    for s in pool.senders.iter().take(lanes - 1) {
+        if s.send(Task::Run(RunTask { job: Arc::clone(&job), out: tx.clone() })).is_ok() {
+            dispatched += 1;
+        }
+    }
+    drop(tx);
+    let mut done = vec![false; nblocks];
+    let mut remaining = nblocks;
+    // the requesting thread is a full lane: it claims off the same
+    // cursor and writes its blocks straight into `y` (no copy), which
+    // also guarantees progress when every pool worker is busy elsewhere
+    claim_blocks(&job.next, nblocks, |b| {
+        let (r0, r1) = job.rows(b);
+        super::execute_rows(run, kernel, r0, r1, &mut y[r0 * n..r1 * n]);
+        done[b] = true;
+        remaining -= 1;
+    });
+    if dispatched > 0 {
+        while remaining > 0 {
+            match rx.recv() {
+                Ok((b, block)) => {
+                    if !done[b] {
+                        let (r0, r1) = job.rows(b);
+                        y[r0 * n..r1 * n].copy_from_slice(&block);
+                        done[b] = true;
+                        remaining -= 1;
+                    }
+                }
+                // every dispatched worker finished or died; fall through
+                Err(_) => break,
+            }
+        }
+    }
+    // a block claimed by a worker that died before sending is
+    // recomputed inline — correctness never depends on the pool
+    for b in 0..nblocks {
+        if !done[b] {
+            let (r0, r1) = job.rows(b);
+            super::execute_rows(run, kernel, r0, r1, &mut y[r0 * n..r1 * n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{IntTensor, Rng};
+    use crate::xint::kernel::{execute, PackedPlane};
+
+    fn rand_packed(rng: &mut Rng, rows: usize, k: usize) -> Arc<PackedPlane> {
+        let vals: Vec<i32> = (0..rows * k).map(|_| rng.below(255) as i32 - 127).collect();
+        Arc::new(PackedPlane::pack(&IntTensor::from_vec(&[rows, k], vals)).unwrap())
+    }
+
+    fn rand_run(rng: &mut Rng, m: usize, n: usize, k: usize) -> Arc<GridRun> {
+        let w_planes: Vec<_> = (0..2).map(|_| rand_packed(rng, n, k)).collect();
+        let a_planes: Vec<_> = (0..2).map(|_| rand_packed(rng, m, k)).collect();
+        let w_scales: Vec<Arc<Vec<f32>>> = (0..2)
+            .map(|_| Arc::new((0..n).map(|_| rng.uniform(0.01, 1.0)).collect()))
+            .collect();
+        let a_scales: Vec<f32> = (0..2).map(|_| rng.uniform(0.01, 1.0)).collect();
+        let pairs = vec![(0, 0), (0, 1), (1, 0), (1, 1)];
+        Arc::new(GridRun::new(w_planes, w_scales, a_planes, a_scales, pairs))
+    }
+
+    #[test]
+    fn parallel_blocks_bit_identical_to_sequential() {
+        let mut rng = Rng::seed(74);
+        let pool = KernelPool::new(3);
+        for &(m, n, k) in &[(64usize, 16usize, 50usize), (33, 7, 100), (9, 3, 20)] {
+            let run = rand_run(&mut rng, m, n, k);
+            for kernel in [Kernel::Portable, super::super::active_kernel()] {
+                let mut y_seq = vec![0.0f32; m * n];
+                execute(&run, kernel, &mut y_seq);
+                let mut y_par = vec![0.0f32; m * n];
+                execute_parallel_with(&pool, &run, kernel, &mut y_par);
+                assert_eq!(y_seq, y_par, "m={m} n={n} k={k} {kernel:?}");
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_worker_pool_degrades_to_sequential() {
+        let mut rng = Rng::seed(75);
+        let run = rand_run(&mut rng, 32, 8, 40);
+        let pool = KernelPool::new(0);
+        let mut y_seq = vec![0.0f32; 32 * 8];
+        execute(&run, Kernel::Portable, &mut y_seq);
+        let mut y_par = vec![0.0f32; 32 * 8];
+        execute_parallel_with(&pool, &run, Kernel::Portable, &mut y_par);
+        assert_eq!(y_seq, y_par);
+        pool.shutdown();
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::claim_blocks;
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::{thread, Arc};
+
+    /// The row-block handoff protocol: lanes race `fetch_add` claims
+    /// off one cursor. Across all interleavings every block must be
+    /// executed exactly once (no double execution — blocks write
+    /// disjoint but *owned* output rows) and none skipped (a missed
+    /// block would silently zero its output rows).
+    #[test]
+    fn loom_model_kernel_block_claim_exactly_once() {
+        loom::model(|| {
+            const BLOCKS: usize = 3;
+            let next = Arc::new(AtomicUsize::new(0));
+            let hits: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..BLOCKS).map(|_| AtomicUsize::new(0)).collect());
+            let worker = {
+                let next = Arc::clone(&next);
+                let hits = Arc::clone(&hits);
+                thread::spawn(move || {
+                    claim_blocks(&next, BLOCKS, |b| {
+                        // ordering: Relaxed — counts are read after join
+                        hits[b].fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+            };
+            // the requesting thread is itself a lane, exactly as in
+            // execute_parallel_with
+            let main_claimed = claim_blocks(&next, BLOCKS, |b| {
+                // ordering: Relaxed — counts are read after join
+                hits[b].fetch_add(1, Ordering::Relaxed);
+            });
+            let worker_claimed = worker.join().unwrap();
+            assert_eq!(main_claimed + worker_claimed, BLOCKS, "blocks lost or duplicated");
+            for (b, h) in hits.iter().enumerate() {
+                // ordering: Relaxed — join ordered every writer before us
+                assert_eq!(h.load(Ordering::Relaxed), 1, "block {b} not executed exactly once");
+            }
+        });
+    }
+}

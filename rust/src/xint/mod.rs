@@ -8,6 +8,11 @@
 //!   form; per-tensor or per-channel.
 //! * [`gemm`] — Eq. 3: the expanded low-bit GEMM with i32 accumulation,
 //!   rank-1 `M_nsy` fast path and sparse `M_sa` path.
+//! * [`kernel`] — the packed execution tier under [`gemm`]: basis planes
+//!   narrowed to i8 once and reused across the grid, an AVX2 `maddubs`
+//!   micro-kernel behind runtime dispatch (the portable fallback is
+//!   bit-identical), and row-block parallelism over a persistent
+//!   worker set.
 //! * [`layer`] — Eq. 4: expanded linear / conv layers with the paper's
 //!   deployment policy (per-channel weights, 8-bit first/last layer,
 //!   weight-term upper bound from the §4 total-differential criterion).
@@ -30,6 +35,7 @@ pub mod auto;
 pub mod budget;
 pub mod expansion;
 pub mod gemm;
+pub mod kernel;
 pub mod layer;
 pub mod mixed;
 pub mod monitor;
@@ -41,6 +47,7 @@ pub use auto::{quantize_model_auto, AutoConfig};
 pub use budget::{BudgetPlan, ForwardStats, LayerTrace, TermBudget};
 pub use expansion::{ExpandConfig, SeriesExpansion, SparseTensor};
 pub use gemm::{int_gemm_a_bt, xint_linear_forward, xint_linear_forward_budgeted, ExpandedWeight};
+pub use kernel::{active_kernel, Kernel, KernelPool, PackedPlane};
 pub use layer::{LayerPolicy, XintConv2d, XintLinear};
 pub use mixed::{greedy_allocate, model_size_bytes, MixedPlan, MixedPlanner};
 pub use monitor::{ConfigMismatch, ExpansionMonitor, LayerSeries};

@@ -13,6 +13,8 @@
 
 use fp_xint::obs::{SpanKind, TraceEvent, TraceRecorder};
 use fp_xint::qos::{QosConfig, TermController, Tier};
+use fp_xint::tensor::{IntTensor, Rng};
+use fp_xint::xint::kernel::{self, GridRun, Kernel, KernelPool, PackedPlane};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -132,6 +134,59 @@ fn latency_digest_is_exact_under_contention() {
     // take must then see an empty window (no sample is surfaced twice).
     let _ = ctl.take_tier_p99(Tier::Balanced);
     assert_eq!(ctl.take_tier_p99(Tier::Balanced), None, "window consumed twice");
+}
+
+/// Concurrent grid runs race one kernel pool: several driver threads
+/// hammer `execute_parallel_with` on the same workers, so the block
+/// claim cursor, the task channels, and the result handoff all see real
+/// cross-job contention. Every run must still come back bit-identical
+/// to the sequential execution — a lost or doubled block shows up as a
+/// wrong row, an unsynchronized payload as a TSan report.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn kernel_pool_grid_runs_exact_under_contention() {
+    const DRIVERS: usize = 3;
+    const PER_DRIVER: usize = 20;
+    let (m, n, k) = (48usize, 16usize, 64usize);
+    let mut rng = Rng::seed(90);
+    let plane = |rng: &mut Rng, rows: usize| {
+        let vals: Vec<i32> = (0..rows * k).map(|_| rng.below(255) as i32 - 127).collect();
+        Arc::new(PackedPlane::pack(&IntTensor::from_vec(&[rows, k], vals)).unwrap())
+    };
+    let w_planes: Vec<_> = (0..2).map(|_| plane(&mut rng, n)).collect();
+    let a_planes: Vec<_> = (0..2).map(|_| plane(&mut rng, m)).collect();
+    let w_scales: Vec<Arc<Vec<f32>>> =
+        (0..2).map(|_| Arc::new((0..n).map(|_| rng.uniform(0.01, 1.0)).collect())).collect();
+    let a_scales: Vec<f32> = (0..2).map(|_| rng.uniform(0.01, 1.0)).collect();
+    let run = Arc::new(GridRun::new(
+        w_planes,
+        w_scales,
+        a_planes,
+        a_scales,
+        vec![(0, 0), (0, 1), (1, 0), (1, 1)],
+    ));
+    let mut y_seq = vec![0.0f32; m * n];
+    kernel::execute(&run, Kernel::Portable, &mut y_seq);
+    let y_seq = Arc::new(y_seq);
+
+    let pool = Arc::new(KernelPool::new(3));
+    let drivers: Vec<_> = (0..DRIVERS)
+        .map(|_| {
+            let pool = Arc::clone(&pool);
+            let run = Arc::clone(&run);
+            let y_seq = Arc::clone(&y_seq);
+            std::thread::spawn(move || {
+                for it in 0..PER_DRIVER {
+                    let mut y = vec![0.0f32; run.m * run.n];
+                    kernel::execute_parallel_with(&pool, &run, Kernel::Portable, &mut y);
+                    assert_eq!(y, *y_seq, "iteration {it} diverged");
+                }
+            })
+        })
+        .collect();
+    for h in drivers {
+        h.join().unwrap();
+    }
 }
 
 /// Concurrent `observe_batch` EWMA updates: the CAS loop must not lose

@@ -143,6 +143,12 @@ pub fn panicking() -> bool {
     std::thread::panicking()
 }
 
+/// Host parallelism is model-independent — delegate to std (sizing
+/// decisions are data, not synchronization; nothing to explore).
+pub fn available_parallelism() -> io::Result<std::num::NonZeroUsize> {
+    std::thread::available_parallelism()
+}
+
 pub fn current() -> std::thread::Thread {
     std::thread::current()
 }

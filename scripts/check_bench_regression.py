@@ -136,6 +136,32 @@ ABSOLUTE_GATES = [
         "planned allocation is no worse than uniform at equal grid spend",
         lambda v: v >= 0.95,
     ),
+    # Packed-kernel contract (perf_gemm): bit-identity between the
+    # scalar grid and the packed SIMD / row-parallel kernel is
+    # deterministic and gates absolutely. The speedups are ratios of two
+    # min-of-iterations timings in the same process, so runner drift
+    # cancels; the ISSUE targets (>= 5x single-thread from i8 packing +
+    # maddubs, >= 8x with row-parallel lanes on the 4-vCPU runner class)
+    # gate at the largest bench shape (256x256x1024, k*t = 6 GEMMs),
+    # where the kernel's advantage is fully amortized.
+    (
+        "BENCH_gemm.json",
+        "bit_identical",
+        "packed SIMD and row-parallel kernels are bit-identical to the scalar grid",
+        lambda v: v == 1,
+    ),
+    (
+        "BENCH_gemm.json",
+        "largest.packed_speedup",
+        "packed single-thread kernel >= 5x over the scalar grid at the largest shape",
+        lambda v: v >= 5.0,
+    ),
+    (
+        "BENCH_gemm.json",
+        "largest.parallel_speedup",
+        "row-parallel kernel >= 8x over the scalar grid at the largest shape",
+        lambda v: v >= 8.0,
+    ),
 ]
 
 # (file, dotted path, predicate description, check) — absolute floors on
@@ -165,6 +191,10 @@ BASELINE_GATES = [
     # forward may not cliff
     ("BENCH_budget.json", "besteffort_speedup", "count", 0.8),
     ("BENCH_budget.json", "full_forward_ms", "latency", 2.0),
+    # packed-kernel trend: the wall-clock of the packed path may not
+    # cliff, and the parallel advantage may not collapse
+    ("BENCH_gemm.json", "largest.packed_ms", "latency", 2.0),
+    ("BENCH_gemm.json", "largest.parallel_speedup", "count", 0.8),
 ]
 
 
