@@ -28,7 +28,7 @@
 //! per-tier shed counts that surface as per-tier `CODE_SHED` frames in
 //! the TCP protocol.
 
-use super::{Request, Response};
+use super::{RefineSink, ReplySink, Request, Response};
 use crate::qos::{Tier, NUM_TIERS};
 use crate::tensor::Tensor;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
@@ -126,7 +126,9 @@ pub struct BatchPart {
     pub trace_id: u64,
     /// number of sample rows this request contributes
     pub rows: usize,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: ReplySink,
+    /// progressive-refinement sink for streamed (protocol v3) requests
+    pub refine: Option<RefineSink>,
     pub enqueued_at: Instant,
     pub tier: Tier,
 }
@@ -441,6 +443,7 @@ impl Batcher {
                             trace_id: req.trace_id,
                             rows: req.x.dims()[0],
                             reply: req.reply,
+                            refine: req.refine,
                             enqueued_at: at,
                             tier: req.tier,
                         });
@@ -482,8 +485,23 @@ impl Batcher {
         tier: Tier,
         trace_id: u64,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
         let (reply, rx) = mpsc::channel();
+        self.submit_with_sink(x, tier, trace_id, ReplySink::Channel(reply), None)?;
+        Ok(rx)
+    }
+
+    /// Sink-carrying submission (the reactor front-end): the reply goes
+    /// through `sink` instead of a fresh channel, and a streamed
+    /// request's refinement hooks ride along into the formed batch.
+    pub fn submit_with_sink(
+        &self,
+        x: Tensor,
+        tier: Tier,
+        trace_id: u64,
+        sink: ReplySink,
+        refine: Option<RefineSink>,
+    ) -> Result<(), SubmitError> {
+        assert_eq!(x.shape().rank(), 2, "requests are (n, din)");
         // ordering: Relaxed — id allocation only needs uniqueness (RMW
         // atomicity); the request itself travels under the queue mutex.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -497,10 +515,21 @@ impl Batcher {
             self.sheds[tier.idx()].fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Busy(tier));
         }
-        g.q[tier.idx()].push_back((Request { id, trace_id, x, tier, reply }, Instant::now()));
+        let req = Request { id, trace_id, x, tier, reply: sink, refine };
+        g.q[tier.idx()].push_back((req, Instant::now()));
         drop(g);
         self.shared.cv.notify_all();
-        Ok(rx)
+        Ok(())
+    }
+
+    /// Count an externally decided shed — the reactor sheds at a slow
+    /// reader's own tier on write backpressure, before the request ever
+    /// reaches the admission check — so the per-tier shed statistics
+    /// cover every `CODE_SHED` frame on the wire.
+    pub fn record_shed(&self, tier: Tier) {
+        // ordering: Relaxed — a statistics counter; readers need a
+        // count, not an edge.
+        self.sheds[tier.idx()].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Requests accepted but not yet formed into a batch, across tiers.
@@ -569,7 +598,7 @@ mod tests {
                 let din = batch.x.dims()[1];
                 let data = batch.x.data()[row * din..(row + p.rows) * din].to_vec();
                 row += p.rows;
-                let _ = p.reply.send(Response {
+                p.reply.send(Response {
                     id: p.id,
                     trace_id: p.trace_id,
                     logits: Tensor::from_vec(&[p.rows, din], data),
@@ -585,7 +614,7 @@ mod tests {
 
     fn zero_reply(batch: FormedBatch) {
         for p in batch.parts {
-            let _ = p.reply.send(Response {
+            p.reply.send(Response {
                 id: p.id,
                 trace_id: p.trace_id,
                 logits: Tensor::zeros(&[p.rows, 1]),
@@ -975,7 +1004,8 @@ mod tests {
                 id: 0,
                 trace_id: 0,
                 rows: 1,
-                reply,
+                reply: ReplySink::Channel(reply),
+                refine: None,
                 enqueued_at: Instant::now(),
                 tier: Tier::Balanced,
             }],
@@ -1019,7 +1049,7 @@ mod loom_models {
         loom::model_iters(256, || {
             let b = Arc::new(Batcher::start(BatcherConfig::uniform(4, 0, 4), |batch| {
                 for p in batch.parts {
-                    let _ = p.reply.send(Response {
+                    p.reply.send(Response {
                         id: p.id,
                         trace_id: p.trace_id,
                         logits: Tensor::zeros(&[p.rows, 1]),

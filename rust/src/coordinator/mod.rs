@@ -28,8 +28,67 @@ pub use scheduler::ExpansionScheduler;
 use crate::obs::{chrome_trace_json, ExpositionBuilder, SpanKind, TraceRecorder};
 use crate::qos::{TermController, Tier};
 use crate::tensor::Tensor;
-use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::util::sync::{mpsc, Arc};
+
+/// Where a [`Response`] is delivered. Blocking callers hold the
+/// receiving end of a channel; the reactor front-end registers a
+/// callback instead (it cannot block a thread per request), which runs
+/// on the batcher's forming thread and must therefore only enqueue and
+/// wake — never block.
+pub enum ReplySink {
+    Channel(mpsc::Sender<Response>),
+    Callback(Arc<dyn Fn(Response) + Send + Sync>),
+}
+
+impl ReplySink {
+    /// Deliver the reply. A dropped channel receiver is not an error —
+    /// the caller gave up waiting, matching mpsc semantics.
+    pub fn send(&self, r: Response) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplySink::Callback(f) => f(r),
+        }
+    }
+}
+
+/// One progressive-refinement emission: the gained contribution of a
+/// single consumed series term, sliced to one request's rows. The ⊎-sum
+/// of a request's frames (in emission order) is bit-identical to the
+/// logits of its final [`Response`], because both are produced by the
+/// same sequential left-fold reduction.
+pub struct StreamFrame {
+    pub trace_id: u64,
+    /// cumulative terms reduced once this frame is applied
+    pub terms: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+    /// true for the first (truncated-prefix) frame of a stream
+    pub first: bool,
+}
+
+/// Progressive-refinement hooks a streamed request carries through the
+/// batcher into the scheduler's anytime reduction.
+#[derive(Clone)]
+pub struct RefineSink {
+    /// called once per consumed term with that request's slice; runs on
+    /// the batcher thread, so it must only enqueue and wake
+    pub emit: Arc<dyn Fn(StreamFrame) + Send + Sync>,
+    /// client-cancel flag (set by the reactor on a cancel frame)
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl RefineSink {
+    pub fn cancelled(&self) -> bool {
+        // ordering: Relaxed — lone advisory stop flag polled by the
+        // refinement loop; nothing is published through it, so
+        // atomicity alone is the contract.
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
 
 /// One inference request: a (n, din) batch of samples, its service
 /// tier, a trace correlation id, and a reply slot.
@@ -40,7 +99,9 @@ pub struct Request {
     pub trace_id: u64,
     pub x: Tensor,
     pub tier: Tier,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: ReplySink,
+    /// progressive-refinement sink for streamed (protocol v3) requests
+    pub refine: Option<RefineSink>,
 }
 
 /// The reply: logits for the request's samples, plus how the request
@@ -160,6 +221,38 @@ impl Coordinator {
         let shed = res.is_err();
         rec.record_span(trace_id, SpanKind::Admission, tier, shed, t0, rec.now_ns(), [depth, 0, 0]);
         res
+    }
+
+    /// Callback submission for the reactor front-end: the reply is
+    /// delivered through `sink` (and refinement frames through
+    /// `refine`, for streamed requests) instead of a channel, so no
+    /// thread blocks per in-flight request. Records the admission span
+    /// exactly like [`Coordinator::submit_tier_traced`].
+    pub fn submit_tier_callback(
+        &self,
+        x: Tensor,
+        tier: Tier,
+        trace_id: u64,
+        sink: ReplySink,
+        refine: Option<RefineSink>,
+    ) -> Result<(), SubmitError> {
+        let rec = match &self.recorder {
+            None => return self.batcher.submit_with_sink(x, tier, trace_id, sink, refine),
+            Some(rec) => rec,
+        };
+        let t0 = rec.now_ns();
+        let depth = self.batcher.tier_depth(tier) as u64;
+        let res = self.batcher.submit_with_sink(x, tier, trace_id, sink, refine);
+        let shed = res.is_err();
+        rec.record_span(trace_id, SpanKind::Admission, tier, shed, t0, rec.now_ns(), [depth, 0, 0]);
+        res
+    }
+
+    /// Count a shed decided outside the batcher's own admission check —
+    /// the reactor's write-backpressure shed — in `tier`'s statistics,
+    /// so the exposition reflects every `CODE_SHED` frame on the wire.
+    pub fn record_shed(&self, tier: Tier) {
+        self.batcher.record_shed(tier);
     }
 
     /// Submit and wait for the reply; a batch failure surfaces as `Err`.

@@ -32,7 +32,7 @@
 use super::batcher::FormedBatch;
 use super::metrics::Metrics;
 use super::pool::{SpanCtx, WorkerPool};
-use super::Response;
+use super::{RefineSink, Response, StreamFrame};
 use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::{TermController, NUM_TIERS};
 use crate::tensor::Tensor;
@@ -46,6 +46,17 @@ struct Reduced {
     y: Tensor,
     terms: usize,
     grid_terms: usize,
+}
+
+/// Hooks threaded into the sequential anytime reduction by a batch
+/// carrying progressive-refinement sinks.
+struct StreamHooks<'a> {
+    /// fired once per consumed term with the cumulative term count and
+    /// the gained term tensor (the head term doubles as the prefix
+    /// frame; every emitted term is already reduced into the answer)
+    on_term: &'a dyn Fn(usize, &Tensor),
+    /// polled at each loop head: true aborts further refinement
+    cancelled: &'a dyn Fn() -> bool,
 }
 
 pub struct ExpansionScheduler {
@@ -150,6 +161,57 @@ impl ExpansionScheduler {
             .as_ref()
             .filter(|ctl| ctl.config().anytime)
             .and_then(|ctl| ctl.batch_tolerance([tier]));
+        let out_gain = match &self.tier_gains {
+            Some(g) => g[tier.idx()],
+            None => 1.0,
+        };
+        // streamed parts: (row offset, rows, trace id, sink), captured
+        // before `batch.parts` moves into the reply scatter
+        let mut streams: Vec<(usize, usize, u64, RefineSink)> = Vec::new();
+        {
+            let mut row = 0usize;
+            for p in &batch.parts {
+                if let Some(s) = &p.refine {
+                    streams.push((row, p.rows, p.trace_id, s.clone()));
+                }
+                row += p.rows;
+            }
+        }
+        let all_streamed = !streams.is_empty() && streams.len() == batch.parts.len();
+        let frames_emitted: Vec<std::cell::Cell<usize>> =
+            streams.iter().map(|_| std::cell::Cell::new(0)).collect();
+        let tol = if streams.is_empty() {
+            anytime_tol
+        } else {
+            // a refine-carrying batch must ride the sequential fold —
+            // the tree reduction's grouping differs bitwise from the
+            // frame stream's left fold — and tol = 0.0 never trips the
+            // early stop, so streaming without an anytime controller
+            // still consumes the full tier budget
+            Some(anytime_tol.unwrap_or(0.0))
+        };
+        let on_term = |terms_after: usize, term: &Tensor| {
+            let cols = term.dims()[1];
+            for (k, (row, rows, trace_id, sink)) in streams.iter().enumerate() {
+                if sink.cancelled() {
+                    continue;
+                }
+                let data = term.data()[row * cols..(row + rows) * cols].to_vec();
+                frames_emitted[k].set(frames_emitted[k].get() + 1);
+                (sink.emit)(StreamFrame {
+                    trace_id: *trace_id,
+                    terms: terms_after,
+                    rows: *rows,
+                    cols,
+                    data,
+                    first: terms_after == 1,
+                });
+            }
+        };
+        // refinement stops early on cancel only when EVERY part of the
+        // batch asked for it: co-batched requests still deserve their
+        // full term budget
+        let cancelled = || all_streamed && streams.iter().all(|(_, _, _, s)| s.cancelled());
         // queue-wait, batch-formation and schedule spans — one per
         // request, recorded BEFORE execution so even a failing batch
         // leaves every request with a closed chain up to the reduction
@@ -178,7 +240,12 @@ impl ExpansionScheduler {
             tier,
         });
         let reduce_t0 = self.recorder.as_ref().map(|rec| rec.now_ns());
-        let result = self.reduce_prefix(batch.x.clone(), budget, plan, anytime_tol, ctx);
+        let hooks = if streams.is_empty() {
+            None
+        } else {
+            Some(StreamHooks { on_term: &on_term, cancelled: &cancelled })
+        };
+        let result = self.reduce_prefix(batch.x.clone(), budget, plan, tol, out_gain, ctx, hooks);
         // the reduce span closes for every request, error-flagged when
         // the batch failed — traces never show half-open timelines
         if let Some(rec) = &self.recorder {
@@ -192,14 +259,17 @@ impl ExpansionScheduler {
             for p in &batch.parts {
                 rec.record_span(p.trace_id, SpanKind::Reduce, tier, err, t_start, t_end, detail);
             }
+            // one refine span per streamed part: terms consumed and
+            // frames actually emitted to that part's sink
+            for (k, (_, _, trace_id, _)) in streams.iter().enumerate() {
+                let detail = [terms, frames_emitted[k].get() as u64, 0];
+                rec.record_span(*trace_id, SpanKind::Refine, tier, err, t_start, t_end, detail);
+            }
         }
         match result {
             Ok(reduced) => {
                 let terms_used = reduced.terms;
-                let logits = match &self.tier_gains {
-                    Some(g) if g[tier.idx()] != 1.0 => reduced.y.scale(g[tier.idx()]),
-                    _ => reduced.y,
-                };
+                let logits = reduced.y;
                 let est_loss = self
                     .controller
                     .as_ref()
@@ -223,7 +293,7 @@ impl ExpansionScheduler {
                         // exactly the latencies the metrics see
                         ctl.record_latency(p.tier, latency);
                     }
-                    let _ = p.reply.send(Response {
+                    p.reply.send(Response {
                         id: p.id,
                         trace_id: p.trace_id,
                         logits: Tensor::from_vec(&[p.rows, classes], data),
@@ -254,8 +324,7 @@ impl ExpansionScheduler {
                 // instead of hanging until RecvError
                 for p in batch.parts {
                     let latency = p.enqueued_at.elapsed().as_secs_f64();
-                    let _ = p
-                        .reply
+                    p.reply
                         .send(Response::failure(p.id, p.trace_id, p.tier, latency, msg.clone()));
                 }
                 if let Some(ctl) = &self.controller {
@@ -274,12 +343,13 @@ impl ExpansionScheduler {
     /// The core forward: broadcast → (gain ∘ output) → AbelianAdd tree
     /// over the full pool.
     pub fn forward(&self, x: Tensor) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, self.pool.len(), Arc::new(BudgetPlan::full()), None, None)?.y)
+        let n = self.pool.len();
+        Ok(self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), None, 1.0, None, None)?.y)
     }
 
     /// Truncated forward: reduce only the first `n` basis outputs.
     pub fn forward_truncated(&self, x: Tensor, n: usize) -> anyhow::Result<Tensor> {
-        Ok(self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), None, None)?.y)
+        Ok(self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), None, 1.0, None, None)?.y)
     }
 
     /// Anytime forward over the first `n` workers: stream terms in
@@ -293,7 +363,8 @@ impl ExpansionScheduler {
         n: usize,
         tol: f32,
     ) -> anyhow::Result<(Tensor, usize)> {
-        let r = self.reduce_prefix(x, n, Arc::new(BudgetPlan::full()), Some(tol), None)?;
+        let plan = Arc::new(BudgetPlan::full());
+        let r = self.reduce_prefix(x, n, plan, Some(tol), 1.0, None, None)?;
         Ok((r.y, r.terms))
     }
 
@@ -307,13 +378,21 @@ impl ExpansionScheduler {
     /// a hit recovers the dispatch/compute overlap the strictly serial
     /// stream gave up (PR 2 dispatched one term at a time, fully
     /// serializing term latency when the stop never triggered).
+    /// `out_gain` is the tier's output scalar. On the tree path it is
+    /// applied once to the reduced output (bit-identical to the old
+    /// post-reduction scale). On the streamed path it is applied
+    /// per-term *inside* the fold, so the emitted refinement frames
+    /// ⊎-sum bit-identically to the final reply.
+    #[allow(clippy::too_many_arguments)]
     fn reduce_prefix(
         &self,
         x: Tensor,
         n: usize,
         plan: Arc<BudgetPlan>,
         tol: Option<f32>,
+        out_gain: f32,
         ctx: Option<SpanCtx>,
+        hooks: Option<StreamHooks<'_>>,
     ) -> anyhow::Result<Reduced> {
         match tol {
             None => {
@@ -333,6 +412,7 @@ impl ExpansionScheduler {
                 let terms = outs.len();
                 let y = abelian_reduce(outs)
                     .ok_or_else(|| anyhow::anyhow!("empty worker pool"))?;
+                let y = if out_gain != 1.0 { y.scale(out_gain) } else { y };
                 Ok(Reduced { y, terms, grid_terms })
             }
             Some(tol) => {
@@ -343,9 +423,16 @@ impl ExpansionScheduler {
                     self.pool.len()
                 );
                 let x = Arc::new(x);
-                let gained = |y: Tensor, i: usize| match &self.gains {
-                    Some(g) => y.scale(g[i]),
-                    None => y,
+                let gained = |y: Tensor, i: usize| {
+                    let y = match &self.gains {
+                        Some(g) => y.scale(g[i]),
+                        None => y,
+                    };
+                    if out_gain != 1.0 {
+                        y.scale(out_gain)
+                    } else {
+                        y
+                    }
                 };
                 let recv_run = |rx: super::pool::RunReceiver| {
                     let (_, res) =
@@ -370,11 +457,23 @@ impl ExpansionScheduler {
                 let run = recv_run(head)?;
                 let mut grid_terms = run.grid_terms;
                 let mut acc = gained(run.y, 0);
+                // the head term IS the immediate truncated-prefix answer
+                if let Some(h) = &hooks {
+                    (h.on_term)(1, &acc);
+                }
                 // relative threshold: tolerance × leading-term magnitude,
                 // invariant to the input's scale
                 let threshold = tol * acc.max_abs();
                 let mut terms = 1usize;
                 for i in 1..n {
+                    // a client cancel stops refinement between terms;
+                    // the in-flight lookahead is the bounded waste,
+                    // exactly as for the tolerance early-stop below
+                    if let Some(h) = &hooks {
+                        if (h.cancelled)() {
+                            break;
+                        }
+                    }
                     // one-term lookahead: exactly one dispatch in flight
                     // beyond the term currently being inspected
                     let lookahead = if i + 1 < n {
@@ -399,6 +498,12 @@ impl ExpansionScheduler {
                     }
                     acc = acc.add(&term);
                     terms += 1;
+                    // emit AFTER the threshold check and the add: a
+                    // frame always represents a term that is reduced
+                    // into the final answer
+                    if let Some(h) = &hooks {
+                        (h.on_term)(terms, &term);
+                    }
                     match lookahead {
                         Some(rx) => pending = Some(rx),
                         None => break,

@@ -21,11 +21,13 @@
 //!   wrapper, and benchmark harnesses that regenerate every table and
 //!   figure of the paper (see DESIGN.md §5).
 
-// The crate is safe Rust with ONE sanctioned island: the AVX2
-// intrinsics in `xint::kernel::micro` (module-scoped `allow`, safe
+// The crate is safe Rust with TWO sanctioned islands (module-scoped
+// `allow`s): the AVX2 intrinsics in `xint::kernel::micro` (safe
 // wrappers re-check CPU features, bit-identity pinned by property
-// tests against the scalar kernel). Everything else stays safe;
-// concurrency correctness is carried by types + the loom models
+// tests against the scalar kernel) and the four epoll syscall wrappers
+// in `serve::reactor::sys` (no pointer lifetime subtleties — the
+// kernel copies every struct during the call). Everything else stays
+// safe; concurrency correctness is carried by types + the loom models
 // (CONCURRENCY.md), not by unsafe cleverness — keep it that way.
 #![deny(unsafe_code)]
 

@@ -71,10 +71,16 @@ pub enum SpanKind {
     /// one quantized layer's Eq. 3 grid execution (detail: layer
     /// position, executed grid terms, planned grid terms)
     LayerGrid = 9,
+    /// reactor accept: listener readable → connection registered
+    Accept = 10,
+    /// reply frame queued on the connection → last byte flushed
+    Write = 11,
+    /// progressive refinement: reduction start → last delta emitted
+    Refine = 12,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 10] = [
+    pub const ALL: [SpanKind; 13] = [
         SpanKind::Request,
         SpanKind::Decode,
         SpanKind::Admission,
@@ -85,6 +91,9 @@ impl SpanKind {
         SpanKind::Reduce,
         SpanKind::Reply,
         SpanKind::LayerGrid,
+        SpanKind::Accept,
+        SpanKind::Write,
+        SpanKind::Refine,
     ];
 
     pub fn from_u8(v: u8) -> Option<SpanKind> {
@@ -103,6 +112,9 @@ impl SpanKind {
             SpanKind::Reduce => "reduce",
             SpanKind::Reply => "reply",
             SpanKind::LayerGrid => "layer_grid",
+            SpanKind::Accept => "accept",
+            SpanKind::Write => "write",
+            SpanKind::Refine => "refine",
         }
     }
 
@@ -120,6 +132,9 @@ impl SpanKind {
             SpanKind::Reduce => ["terms", "grid_terms", ""],
             SpanKind::Reply => ["bytes", "", ""],
             SpanKind::LayerGrid => ["layer", "grid_terms", "planned_grid"],
+            SpanKind::Accept => ["token", "", ""],
+            SpanKind::Write => ["bytes", "queued_frames", ""],
+            SpanKind::Refine => ["terms", "frames", ""],
         }
     }
 }

@@ -1,0 +1,320 @@
+//! Per-connection state machine for the reactor: an incremental
+//! [`FrameDecoder`] on the read side, a queue of partially written
+//! frames on the write side, and the in-flight request table that
+//! matches completions (and cancels) back to their `trace_id`. All IO
+//! here is nonblocking `read`/`write` — short reads and short writes
+//! are the normal case, never an error.
+//!
+//! The type is generic over the stream so the state machine is testable
+//! against scripted in-memory streams; the reactor instantiates it with
+//! `TcpStream`.
+
+use crate::qos::Tier;
+use crate::serve::protocol::{Frame, FrameDecoder};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+
+/// Write-backlog high-water mark: a connection whose unflushed reply
+/// bytes exceed this sheds new requests at their own tier instead of
+/// buffering without bound for a reader slower than its request rate.
+pub const HIGH_WATER_BYTES: usize = 256 * 1024;
+
+/// One queued (possibly partially written) outbound frame.
+struct OutFrame {
+    bytes: Vec<u8>,
+    off: usize,
+    trace_id: u64,
+    /// recorder timestamp when the frame was queued — the start of the
+    /// Write span closed when the last byte is flushed
+    t_queued: u64,
+}
+
+/// A fully flushed frame, reported so the reactor can close its Write
+/// span.
+pub struct Flushed {
+    pub trace_id: u64,
+    pub t_queued: u64,
+    pub bytes: usize,
+}
+
+/// Book-keeping for one in-flight request on this connection.
+pub struct Inflight {
+    /// recorder timestamp of the request's first header byte
+    pub t_req: u64,
+    pub tier: Tier,
+    pub rows: usize,
+    pub streamed: bool,
+    /// cancel flag shared with the scheduler's refinement loop
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+/// Per-connection reactor state.
+pub struct Conn<S> {
+    pub stream: S,
+    pub decoder: FrameDecoder,
+    out: VecDeque<OutFrame>,
+    out_bytes: usize,
+    inflight: HashMap<u64, Inflight>,
+    /// set when the connection should close once the write queue drains
+    pub closing: bool,
+}
+
+impl<S: Read + Write> Conn<S> {
+    pub fn new(stream: S) -> Self {
+        Conn {
+            stream,
+            decoder: FrameDecoder::new(),
+            out: VecDeque::new(),
+            out_bytes: 0,
+            inflight: HashMap::new(),
+            closing: false,
+        }
+    }
+
+    /// Drain the socket until it would block, feeding the decoder.
+    /// Returns the decoded frames and whether the peer closed (EOF).
+    pub fn on_readable(&mut self, scratch: &mut [u8]) -> std::io::Result<(Vec<Frame>, bool)> {
+        let mut frames = Vec::new();
+        let mut eof = false;
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(k) => {
+                    self.decoder.feed(&scratch[..k]);
+                    while let Some(f) = self.decoder.next_frame() {
+                        frames.push(f);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok((frames, eof))
+    }
+
+    /// Queue an encoded frame for writing.
+    pub fn queue_frame(&mut self, bytes: Vec<u8>, trace_id: u64, t_queued: u64) {
+        self.out_bytes += bytes.len();
+        self.out.push_back(OutFrame { bytes, off: 0, trace_id, t_queued });
+    }
+
+    /// Flush queued frames until the socket would block. Returns the
+    /// frames whose last byte went out (so their Write spans can close).
+    pub fn on_writable(&mut self) -> std::io::Result<Vec<Flushed>> {
+        let mut done = Vec::new();
+        while let Some(front) = self.out.front_mut() {
+            match self.stream.write(&front.bytes[front.off..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(k) => {
+                    front.off += k;
+                    self.out_bytes -= k;
+                    if front.off == front.bytes.len() {
+                        if let Some(f) = self.out.pop_front() {
+                            done.push(Flushed {
+                                trace_id: f.trace_id,
+                                t_queued: f.t_queued,
+                                bytes: f.bytes.len(),
+                            });
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(done)
+    }
+
+    /// Unflushed outbound bytes.
+    pub fn write_backlog(&self) -> usize {
+        self.out_bytes
+    }
+
+    /// True when the write backlog says this reader is too slow for
+    /// another reply to be queued — new requests shed at their own tier.
+    pub fn over_high_water(&self) -> bool {
+        self.out_bytes > HIGH_WATER_BYTES
+    }
+
+    pub fn wants_write(&self) -> bool {
+        !self.out.is_empty()
+    }
+
+    /// Outbound frames still queued (fully or partially unwritten).
+    pub fn queued_frames(&self) -> usize {
+        self.out.len()
+    }
+
+    /// True once the connection is fully drained and flagged closing.
+    pub fn drained_for_close(&self) -> bool {
+        self.closing && self.out.is_empty()
+    }
+
+    pub fn register_inflight(&mut self, trace_id: u64, inf: Inflight) {
+        self.inflight.insert(trace_id, inf);
+    }
+
+    pub fn take_inflight(&mut self, trace_id: u64) -> Option<Inflight> {
+        self.inflight.remove(&trace_id)
+    }
+
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Flip the cancel flag of an in-flight streamed request; unknown
+    /// ids (already completed, or never submitted) are ignored.
+    pub fn cancel_inflight(&mut self, trace_id: u64) {
+        if let Some(inf) = self.inflight.get(&trace_id) {
+            if let Some(c) = &inf.cancel {
+                // ordering: Relaxed — lone advisory stop flag polled by
+                // the scheduler's refinement loop; nothing is published
+                // through it, so atomicity alone is the contract.
+                c.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::{encode_request, encode_response};
+    use crate::tensor::Tensor;
+
+    /// Scripted stream: reads pop from `input` chunks, writes accept at
+    /// most `write_cap` bytes then claim WouldBlock.
+    struct Scripted {
+        input: VecDeque<Vec<u8>>,
+        written: Vec<u8>,
+        write_cap: usize,
+        eof_after_input: bool,
+    }
+
+    impl Read for Scripted {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.input.pop_front() {
+                Some(chunk) => {
+                    let k = chunk.len().min(buf.len());
+                    buf[..k].copy_from_slice(&chunk[..k]);
+                    if k < chunk.len() {
+                        self.input.push_front(chunk[k..].to_vec());
+                    }
+                    Ok(k)
+                }
+                None if self.eof_after_input => Ok(0),
+                None => Err(ErrorKind::WouldBlock.into()),
+            }
+        }
+    }
+
+    impl Write for Scripted {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.write_cap == 0 {
+                return Err(ErrorKind::WouldBlock.into());
+            }
+            let k = buf.len().min(self.write_cap);
+            self.written.extend_from_slice(&buf[..k]);
+            self.write_cap -= k;
+            Ok(k)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn scripted(chunks: Vec<Vec<u8>>, write_cap: usize) -> Conn<Scripted> {
+        Conn::new(Scripted {
+            input: chunks.into(),
+            written: Vec::new(),
+            write_cap,
+            eof_after_input: false,
+        })
+    }
+
+    #[test]
+    fn pipelined_frames_in_one_segment_all_decode() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 1));
+        seg.extend_from_slice(&encode_request(&x, Tier::BestEffort, false, 2));
+        let mut conn = scripted(vec![seg], 0);
+        let mut scratch = [0u8; 4096];
+        let (frames, eof) = conn.on_readable(&mut scratch).unwrap();
+        assert!(!eof);
+        assert_eq!(frames.len(), 2);
+    }
+
+    #[test]
+    fn partial_writes_resume_and_report_flushed_frames() {
+        let y = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let frame = encode_response(7, &y);
+        let total = frame.len();
+        let mut conn = scripted(vec![], 5);
+        conn.queue_frame(frame, 7, 100);
+        // first pass: 5 bytes fit, frame stays queued
+        assert!(conn.on_writable().unwrap().is_empty());
+        assert!(conn.wants_write());
+        assert_eq!(conn.write_backlog(), total - 5);
+        // let the rest through
+        conn.stream.write_cap = usize::MAX;
+        let done = conn.on_writable().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].trace_id, 7);
+        assert_eq!(done[0].t_queued, 100);
+        assert_eq!(done[0].bytes, total);
+        assert_eq!(conn.write_backlog(), 0);
+        assert!(!conn.wants_write());
+    }
+
+    #[test]
+    fn high_water_trips_and_recovers() {
+        let mut conn = scripted(vec![], 0);
+        conn.queue_frame(vec![0u8; HIGH_WATER_BYTES + 1], 1, 0);
+        assert!(conn.over_high_water());
+        conn.stream.write_cap = usize::MAX;
+        conn.on_writable().unwrap();
+        assert!(!conn.over_high_water());
+    }
+
+    #[test]
+    fn cancel_flips_only_the_named_inflight() {
+        let mut conn = scripted(vec![], 0);
+        let c1 = Arc::new(AtomicBool::new(false));
+        let c2 = Arc::new(AtomicBool::new(false));
+        conn.register_inflight(
+            1,
+            Inflight {
+                t_req: 0,
+                tier: Tier::BestEffort,
+                rows: 1,
+                streamed: true,
+                cancel: Some(c1.clone()),
+            },
+        );
+        conn.register_inflight(
+            2,
+            Inflight {
+                t_req: 0,
+                tier: Tier::BestEffort,
+                rows: 1,
+                streamed: true,
+                cancel: Some(c2.clone()),
+            },
+        );
+        conn.cancel_inflight(1);
+        conn.cancel_inflight(99); // unknown id is a no-op
+        // ordering: Relaxed — test-side read of the advisory flag.
+        assert!(c1.load(Ordering::Relaxed));
+        assert!(!c2.load(Ordering::Relaxed));
+        assert!(conn.take_inflight(1).is_some());
+        assert_eq!(conn.inflight_count(), 1);
+    }
+}

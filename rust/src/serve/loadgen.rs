@@ -1,16 +1,33 @@
-//! Trace-driven load generator: replays a [`RequestTrace`] against the
-//! in-process coordinator and reports latency/throughput — the harness
-//! behind the §5.2 serving-speed claims. Supports mixed-tier traffic
-//! (weighted tier draw per request) with per-tier latency reporting,
-//! the workload shape the QoS benches sweep.
+//! Trace-driven load generators — the harness behind the §5.2
+//! serving-speed claims.
+//!
+//! Two arrival models:
+//! - **Closed loop** ([`run_trace`]/[`run_trace_mix`]): replays a
+//!   [`RequestTrace`] against the in-process coordinator, one waiting
+//!   thread per in-flight request. Supports mixed-tier traffic
+//!   (weighted tier draw per request) with per-tier latency reporting,
+//!   the workload shape the QoS benches sweep.
+//! - **Open loop** ([`run_open_loop`]): a fixed-rate Poisson schedule
+//!   over thousands of nonblocking TCP connections driven by one
+//!   [`Poller`] — the connection-scale harness for the reactor server.
+//!   Latency is measured from each request's *scheduled* send time, so
+//!   a stalled server inflates the tail instead of silently slowing the
+//!   arrival process (no coordinated omission).
 
 use crate::coordinator::{Coordinator, SubmitError};
 use crate::datasets::trace::RequestTrace;
 use crate::qos::{Tier, NUM_TIERS};
+use crate::serve::protocol::{
+    encode_request, CODE_BATCH_FAILED, CODE_SHED, STREAM_END, STREAM_SENTINEL,
+};
+use crate::serve::reactor::{raw_fd, Event, Poller};
 use crate::tensor::{Rng, Tensor};
 use crate::util::stats::Summary;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::{thread, Arc, Mutex};
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 /// Per-tier slice of a load-test outcome.
@@ -193,6 +210,384 @@ pub fn run_trace_mix(
     }
 }
 
+// ---------------------------------------------------------------------
+// Open-loop TCP load: fixed-rate Poisson arrivals over many
+// nonblocking connections, one poller, no coordinated omission.
+
+/// Configuration for [`run_open_loop`].
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    /// open TCP connections, driven round-robin by the arrival process
+    pub connections: usize,
+    /// aggregate request arrival rate (Poisson) across all connections
+    pub rate_rps: f64,
+    /// seconds of arrivals to schedule
+    pub duration_s: f64,
+    pub tier: Tier,
+    /// set the tier word's STREAM_FLAG (progressive refinement)
+    pub stream: bool,
+    /// request feature width (`x` is `[1, din]`)
+    pub din: usize,
+    pub seed: u64,
+    /// extra seconds to wait for in-flight replies after the last send
+    pub drain_s: f64,
+}
+
+/// Outcome of an open-loop run. Latencies are measured from each
+/// request's *scheduled* send time to the frame named below.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    pub connections: usize,
+    pub offered: usize,
+    /// requests whose final frame (classic reply or stream end) arrived
+    pub completed: usize,
+    pub shed: usize,
+    pub failed: usize,
+    /// still in flight when the drain window closed (or their
+    /// connection died)
+    pub timed_out: usize,
+    pub wall_s: f64,
+    /// scheduled send → final frame
+    pub full_latency: Summary,
+    /// scheduled send → first frame (the prefix, for streamed replies;
+    /// identical to `full_latency` for classic single-frame replies)
+    pub first_frame_latency: Summary,
+}
+
+impl std::fmt::Display for OpenLoopReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "conns {} offered {} completed {} shed {} failed {} timed_out {} wall {:.2}s \
+             full p99 {:.2}ms first p99 {:.2}ms",
+            self.connections,
+            self.offered,
+            self.completed,
+            self.shed,
+            self.failed,
+            self.timed_out,
+            self.wall_s,
+            self.full_latency.p99 * 1e3,
+            self.first_frame_latency.p99 * 1e3
+        )
+    }
+}
+
+/// One server→client frame boundary, as the open-loop reader needs it:
+/// ids and byte extents only, payloads skipped.
+enum RespEvent {
+    Reply { trace_id: u64 },
+    Shed { trace_id: u64 },
+    Failed { trace_id: u64 },
+    Malformed { trace_id: u64 },
+    StreamData { trace_id: u64 },
+    StreamEnd { trace_id: u64 },
+}
+
+/// Incremental response-frame splitter (client side of protocol v3).
+#[derive(Default)]
+struct RespDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl RespDecoder {
+    fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn have(&self, n: usize) -> bool {
+        self.buf.len() - self.pos >= n
+    }
+
+    fn u32_at(&self, off: usize) -> u32 {
+        let p = self.pos + off;
+        u32::from_le_bytes([self.buf[p], self.buf[p + 1], self.buf[p + 2], self.buf[p + 3]])
+    }
+
+    fn u64_at(&self, off: usize) -> u64 {
+        let p = self.pos + off;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[p..p + 8]);
+        u64::from_le_bytes(b)
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 64 * 1024 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    fn next_event(&mut self) -> Option<RespEvent> {
+        if !self.have(16) {
+            return None;
+        }
+        let w0 = self.u32_at(0);
+        if w0 == STREAM_SENTINEL {
+            let kind = self.u32_at(4);
+            let trace_id = self.u64_at(8);
+            if kind == STREAM_END {
+                if !self.have(20) {
+                    return None;
+                }
+                self.consume(20);
+                return Some(RespEvent::StreamEnd { trace_id });
+            }
+            if !self.have(28) {
+                return None;
+            }
+            let body = (self.u32_at(16) as usize) * (self.u32_at(20) as usize) * 4;
+            if !self.have(28 + body) {
+                return None;
+            }
+            self.consume(28 + body);
+            return Some(RespEvent::StreamData { trace_id });
+        }
+        let trace_id = self.u64_at(8);
+        if w0 == 0 {
+            return match self.u32_at(4) {
+                CODE_SHED => {
+                    if !self.have(20) {
+                        return None;
+                    }
+                    self.consume(20);
+                    Some(RespEvent::Shed { trace_id })
+                }
+                CODE_BATCH_FAILED => {
+                    if !self.have(20) {
+                        return None;
+                    }
+                    let len = self.u32_at(16) as usize;
+                    if !self.have(20 + len) {
+                        return None;
+                    }
+                    self.consume(20 + len);
+                    Some(RespEvent::Failed { trace_id })
+                }
+                _ => {
+                    self.consume(16);
+                    Some(RespEvent::Malformed { trace_id })
+                }
+            };
+        }
+        let body = (w0 as usize) * (self.u32_at(4) as usize) * 4;
+        if !self.have(16 + body) {
+            return None;
+        }
+        self.consume(16 + body);
+        Some(RespEvent::Reply { trace_id })
+    }
+}
+
+struct OlConn {
+    s: TcpStream,
+    dec: RespDecoder,
+    out: Vec<u8>,
+    out_off: usize,
+    wants_write: bool,
+    dead: bool,
+}
+
+/// Flush a connection's pending request bytes until the socket blocks,
+/// then fix up its poller write interest.
+fn ol_flush(c: &mut OlConn, poller: &mut Poller, token: u64) {
+    use std::io::Write;
+    while c.out_off < c.out.len() && !c.dead {
+        match c.s.write(&c.out[c.out_off..]) {
+            Ok(0) => c.dead = true,
+            Ok(k) => c.out_off += k,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => c.dead = true,
+        }
+    }
+    if c.out_off >= c.out.len() {
+        c.out.clear();
+        c.out_off = 0;
+    } else if c.out_off >= 64 * 1024 {
+        c.out.drain(..c.out_off);
+        c.out_off = 0;
+    }
+    let want_w = !c.out.is_empty() && !c.dead;
+    if want_w != c.wants_write && poller.reregister(raw_fd(&c.s), token, true, want_w).is_ok() {
+        c.wants_write = want_w;
+    }
+}
+
+/// Drain a connection's socket into its frame splitter.
+fn ol_read(c: &mut OlConn, scratch: &mut [u8]) {
+    use std::io::Read;
+    loop {
+        match c.s.read(scratch) {
+            Ok(0) => {
+                c.dead = true;
+                break;
+            }
+            Ok(k) => c.dec.feed(&scratch[..k]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+struct PendingReq {
+    sched: Instant,
+    first_seen: bool,
+}
+
+/// Drive a fixed-rate Poisson request schedule against a TCP server
+/// over `cfg.connections` nonblocking connections on one poller (the
+/// open-loop, coordinated-omission-free arrival model).
+pub fn run_open_loop(
+    addr: std::net::SocketAddr,
+    cfg: &OpenLoopConfig,
+) -> anyhow::Result<OpenLoopReport> {
+    anyhow::ensure!(cfg.connections > 0, "open loop needs at least one connection");
+    let mut rng = Rng::seed(cfg.seed);
+    // pre-generated arrival schedule: exponential inter-arrival gaps
+    let mut sched = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let u = (1.0 - rng.f32() as f64).max(1e-9);
+        t += -u.ln() / cfg.rate_rps.max(1e-9);
+        if t >= cfg.duration_s {
+            break;
+        }
+        sched.push(t);
+    }
+    let offered = sched.len();
+    // one request template; each send patches its own trace id into
+    // bytes 12..20 of the header
+    let x = Tensor::randn(&[1, cfg.din], 1.0, &mut rng);
+    let template = encode_request(&x, cfg.tier, cfg.stream, 0);
+
+    let mut poller = Poller::new()?;
+    let mut conns: Vec<OlConn> = Vec::with_capacity(cfg.connections);
+    for i in 0..cfg.connections {
+        let s = TcpStream::connect(addr)?;
+        s.set_nonblocking(true)?;
+        let _ = s.set_nodelay(true);
+        poller.register(raw_fd(&s), i as u64, true, false)?;
+        conns.push(OlConn {
+            s,
+            dec: RespDecoder::default(),
+            out: Vec::new(),
+            out_off: 0,
+            wants_write: false,
+            dead: false,
+        });
+    }
+
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs_f64(cfg.duration_s + cfg.drain_s.max(0.0));
+    let mut next = 0usize;
+    let mut trace_id = 1u64;
+    let mut inflight: HashMap<u64, PendingReq> = HashMap::new();
+    let mut firsts: Vec<f64> = Vec::new();
+    let mut fulls: Vec<f64> = Vec::new();
+    let (mut completed, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    let mut events: Vec<Event> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    loop {
+        let now = Instant::now();
+        if now >= deadline || (next >= sched.len() && inflight.is_empty()) {
+            break;
+        }
+        // queue every due send at its SCHEDULED time: latency starts
+        // here, not at the (possibly backlogged) socket write
+        while next < sched.len() {
+            let due = t0 + Duration::from_secs_f64(sched[next]);
+            if Instant::now() < due {
+                break;
+            }
+            let k = next % conns.len();
+            let start = conns[k].out.len();
+            conns[k].out.extend_from_slice(&template);
+            conns[k].out[start + 12..start + 20].copy_from_slice(&trace_id.to_le_bytes());
+            inflight.insert(trace_id, PendingReq { sched: due, first_seen: false });
+            trace_id += 1;
+            next += 1;
+            ol_flush(&mut conns[k], &mut poller, k as u64);
+        }
+        let timeout_ms = if next < sched.len() {
+            let due = t0 + Duration::from_secs_f64(sched[next]);
+            due.saturating_duration_since(Instant::now()).as_millis().min(10) as i32
+        } else {
+            10
+        };
+        poller.poll(&mut events, timeout_ms)?;
+        for ev in &events {
+            let k = ev.token as usize;
+            let Some(c) = conns.get_mut(k) else { continue };
+            if c.dead {
+                continue;
+            }
+            if ev.writable {
+                ol_flush(c, &mut poller, ev.token);
+            }
+            if ev.readable {
+                ol_read(c, &mut scratch);
+                let t_now = Instant::now();
+                while let Some(e) = c.dec.next_event() {
+                    match e {
+                        RespEvent::Reply { trace_id } | RespEvent::StreamEnd { trace_id } => {
+                            if let Some(p) = inflight.remove(&trace_id) {
+                                let l = t_now.saturating_duration_since(p.sched).as_secs_f64();
+                                if !p.first_seen {
+                                    firsts.push(l);
+                                }
+                                fulls.push(l);
+                                completed += 1;
+                            }
+                        }
+                        RespEvent::StreamData { trace_id } => {
+                            if let Some(p) = inflight.get_mut(&trace_id) {
+                                if !p.first_seen {
+                                    p.first_seen = true;
+                                    let l =
+                                        t_now.saturating_duration_since(p.sched).as_secs_f64();
+                                    firsts.push(l);
+                                }
+                            }
+                        }
+                        RespEvent::Shed { trace_id } => {
+                            if inflight.remove(&trace_id).is_some() {
+                                shed += 1;
+                            }
+                        }
+                        RespEvent::Failed { trace_id } | RespEvent::Malformed { trace_id } => {
+                            if inflight.remove(&trace_id).is_some() {
+                                failed += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(OpenLoopReport {
+        connections: cfg.connections,
+        offered,
+        completed,
+        shed,
+        failed,
+        timed_out: inflight.len() + (offered - next),
+        wall_s,
+        full_latency: Summary::of(&fulls),
+        first_frame_latency: Summary::of(&firsts),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,5 +644,72 @@ mod tests {
             assert_eq!(t.mean_grid_terms, 0.0);
         }
         assert_eq!(coord.metrics.tier_completed(Tier::Balanced), 0);
+    }
+
+    #[test]
+    fn open_loop_accounts_every_offered_request() {
+        let coord = fast_coordinator();
+        let handle = crate::serve::server::serve_tcp("127.0.0.1:0", coord).unwrap();
+        let cfg = OpenLoopConfig {
+            connections: 32,
+            rate_rps: 400.0,
+            duration_s: 0.3,
+            tier: Tier::Exact,
+            stream: false,
+            din: 8,
+            seed: 7,
+            drain_s: 5.0,
+        };
+        let report = run_open_loop(handle.addr, &cfg).unwrap();
+        handle.stop();
+        assert!(report.offered > 20, "schedule too small: {}", report.offered);
+        assert!(report.completed > 0);
+        assert_eq!(
+            report.completed + report.shed + report.failed + report.timed_out,
+            report.offered
+        );
+        // classic single-frame replies: the first frame IS the reply
+        assert_eq!(report.first_frame_latency.p50, report.full_latency.p50);
+        assert_eq!(report.first_frame_latency.p99, report.full_latency.p99);
+    }
+
+    #[test]
+    fn open_loop_streamed_first_frame_leads_the_full_reply() {
+        struct Staggered(u64);
+        impl BasisWorker for Staggered {
+            fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+                thread::sleep(Duration::from_millis(self.0));
+                Ok(x.clone())
+            }
+        }
+        // sequential-fold refinement: term 1 lands after ~20ms, the end
+        // frame only after both workers (~60ms) — a visible gap
+        let pool = WorkerPool::new(
+            2,
+            Arc::new(|i| Box::new(Staggered(20 * (i as u64 + 1))) as Box<dyn BasisWorker>),
+        );
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig::uniform(16, 300, 128),
+            ExpansionScheduler::new(pool),
+        ));
+        let handle = crate::serve::server::serve_tcp("127.0.0.1:0", coord).unwrap();
+        let cfg = OpenLoopConfig {
+            connections: 4,
+            rate_rps: 30.0,
+            duration_s: 0.3,
+            tier: Tier::BestEffort,
+            stream: true,
+            din: 8,
+            seed: 11,
+            drain_s: 10.0,
+        };
+        let report = run_open_loop(handle.addr, &cfg).unwrap();
+        handle.stop();
+        assert!(report.completed > 0, "no streamed request completed: {report}");
+        assert_eq!(report.timed_out, 0, "streamed replies stranded: {report}");
+        assert!(
+            report.first_frame_latency.p50 < report.full_latency.p50,
+            "prefix frame should lead the end frame: {report}"
+        );
     }
 }

@@ -1,13 +1,22 @@
 //! Serving front-end: model-backed basis workers (native and PJRT), a
-//! TCP server speaking a small binary protocol (with a per-request QoS
-//! tier field), and a trace-driven load generator for the
-//! latency/throughput benches (mixed-tier traffic supported).
+//! nonblocking epoll-reactor TCP server speaking protocol v3 (per-tier
+//! QoS, pipelining, progressive-refinement streaming), and trace-driven
+//! load generators — closed-loop (one blocking client per connection)
+//! and open-loop (fixed-rate arrivals over thousands of nonblocking
+//! connections) — for the latency/throughput benches.
 
+pub mod conn;
 pub mod loadgen;
+pub mod protocol;
+pub mod reactor;
 pub mod server;
 pub mod workers;
 
-pub use loadgen::{run_trace, run_trace_mix, LoadReport, TierReport};
+pub use loadgen::{
+    run_open_loop, run_trace, run_trace_mix, LoadReport, OpenLoopConfig, OpenLoopReport,
+    TierReport,
+};
+pub use protocol::{client_infer_stream, StreamClient, StreamEvent, StreamReply};
 pub use server::{
     client_infer, client_infer_tier, client_infer_traced, client_metrics, client_trace_json,
     serve_tcp, TcpServerHandle,

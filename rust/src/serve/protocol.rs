@@ -1,0 +1,738 @@
+//! Wire protocol v3 codec: the single home for frame layouts, the
+//! incremental [`FrameDecoder`] the reactor feeds from nonblocking
+//! reads, encoders for every server→client frame, and the blocking
+//! convenience clients (tests, CLI, loadgen). This file is the one
+//! place in `src/` allowed to issue blocking `std::net` reads/writes
+//! (`check_invariants.py`, rule `blocking-io`) — the serving plane
+//! itself is nonblocking and goes through the decoder/encoders only.
+//!
+//! All integers are little-endian. Client → server frames:
+//!
+//! request : `[u32 n][u32 d][u32 tier][u64 trace_id][n·d × f32]`
+//!           the tier word's high bit ([`STREAM_FLAG`]) asks for
+//!           progressive refinement (honored for Throughput/BestEffort;
+//!           other tiers answer with a single classic frame)
+//! control : `[u32::MAX][u32 code]` — code 1 metrics, 2 trace JSON
+//! cancel  : `[u32::MAX-1][u32 0][u64 trace_id]` — stop refining
+//!
+//! Server → client frames:
+//!
+//! success : `[u32 n][u32 c][u64 trace_id][n·c × f32]`
+//! error   : `[0][u32 code][u64 trace_id][payload]` — code 0 shed
+//!           (payload `u32` tier), 1 batch failure (payload
+//!           `[u32 len][len utf8]`), 2 malformed (no payload)
+//! control : `[u32 len][len × u8]`
+//! stream  : `[u32::MAX-1][u32 kind][u64 trace_id]` then, for kind 0
+//!           (prefix) and 1 (delta): `[u32 rows][u32 cols][u32 terms]`
+//!           `[rows·cols × f32]`; for kind 2 (end): `[u32 terms]`.
+//!           The ⊎-fold of the prefix and every delta, in arrival
+//!           order, is bit-identical to the non-streamed reply at the
+//!           same term count ([`StreamReply::reconstruct`]).
+
+use crate::qos::Tier;
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Error code in the `[0][code]` response header: per-tier shed frame
+/// (payload = the refusing tier's wire encoding).
+pub const CODE_SHED: u32 = 0;
+/// Error code: batch failure (payload = length-prefixed UTF-8 message).
+pub const CODE_BATCH_FAILED: u32 = 1;
+/// Error code: malformed request header or unknown tier (no payload).
+pub const CODE_MALFORMED: u32 = 2;
+
+/// `n` sentinel marking a control frame; the `d` word carries the
+/// control code and no tensor payload follows.
+pub const CONTROL_SENTINEL: u32 = u32::MAX;
+/// Control code: reply with the Prometheus-style metrics exposition.
+pub const CTRL_METRICS: u32 = 1;
+/// Control code: reply with the flight recorder's Chrome-trace JSON.
+pub const CTRL_TRACE: u32 = 2;
+
+/// First word of stream (server→client) and cancel (client→server)
+/// frames. Distinct from real row counts: `n` is capped far below it by
+/// [`MAX_ELEMS`].
+pub const STREAM_SENTINEL: u32 = u32::MAX - 1;
+/// High bit of the request tier word: ask for progressive refinement.
+pub const STREAM_FLAG: u32 = 0x8000_0000;
+/// Stream frame kind: first truncated-prefix result.
+pub const STREAM_PREFIX: u32 = 0;
+/// Stream frame kind: one later basis term, to be ⊎-added to the prefix.
+pub const STREAM_DELTA: u32 = 1;
+/// Stream frame kind: refinement finished (payload = total terms).
+pub const STREAM_END: u32 = 2;
+
+/// Upper bound on `n·d` for a request tensor — also what keeps real row
+/// counts clear of the two sentinels above.
+pub const MAX_ELEMS: u64 = 16 * 1024 * 1024;
+
+/// One decoded client→server frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Request {
+        n: usize,
+        d: usize,
+        tier: Tier,
+        /// the tier word carried [`STREAM_FLAG`]
+        stream: bool,
+        trace_id: u64,
+        data: Vec<f32>,
+    },
+    Control {
+        code: u32,
+    },
+    Cancel {
+        trace_id: u64,
+    },
+    /// Header parsed far enough to be rejected. `fatal` closes the
+    /// connection (oversized `n·d`: the payload length itself is not
+    /// trustworthy); non-fatal rejects echo the frame's `trace_id` and
+    /// the connection keeps serving later pipelined frames.
+    Malformed {
+        trace_id: u64,
+        fatal: bool,
+    },
+}
+
+/// Incremental decoder: feed it whatever bytes the socket had, pull
+/// complete frames out. Tolerates any split boundary, including one
+/// byte at a time (property-pinned below).
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+    /// unread payload bytes of a request already rejected (unknown
+    /// tier): swallowed so the connection survives the error
+    skip: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append freshly read bytes to the decode buffer.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet decodable into a complete frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u32_at(&self, off: usize) -> u32 {
+        let b = &self.buf[self.pos + off..self.pos + off + 4];
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    fn u64_at(&self, off: usize) -> u64 {
+        let b = &self.buf[self.pos + off..self.pos + off + 8];
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        // compact once everything is consumed, or when the dead prefix
+        // grows past a page — keeps the buffer from creeping under a
+        // long-lived pipelined connection
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Decode the next complete frame if the buffer holds one.
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        if self.skip > 0 {
+            let eat = self.skip.min(self.pending());
+            self.consume(eat);
+            self.skip -= eat;
+            if self.skip > 0 {
+                return None;
+            }
+        }
+        if self.pending() < 4 {
+            return None;
+        }
+        let w0 = self.u32_at(0);
+        if w0 == CONTROL_SENTINEL {
+            if self.pending() < 8 {
+                return None;
+            }
+            let code = self.u32_at(4);
+            self.consume(8);
+            return Some(Frame::Control { code });
+        }
+        if w0 == STREAM_SENTINEL {
+            if self.pending() < 16 {
+                return None;
+            }
+            let trace_id = self.u64_at(8);
+            self.consume(16);
+            return Some(Frame::Cancel { trace_id });
+        }
+        if self.pending() < 20 {
+            return None;
+        }
+        // always parse the full header first so every reject below can
+        // echo the request's trace id (frame and error span correlate)
+        let n = w0 as u64;
+        let d = self.u32_at(4) as u64;
+        let tier_word = self.u32_at(8);
+        let trace_id = self.u64_at(12);
+        if n == 0 || d == 0 {
+            self.consume(20);
+            return Some(Frame::Malformed { trace_id, fatal: false });
+        }
+        if n * d > MAX_ELEMS {
+            self.consume(20);
+            return Some(Frame::Malformed { trace_id, fatal: true });
+        }
+        let stream = tier_word & STREAM_FLAG != 0;
+        let tier = match Tier::from_u32(tier_word & !STREAM_FLAG) {
+            Some(t) => t,
+            None => {
+                self.consume(20);
+                self.skip = (n * d * 4) as usize;
+                return Some(Frame::Malformed { trace_id, fatal: false });
+            }
+        };
+        let payload = (n * d * 4) as usize;
+        if self.pending() < 20 + payload {
+            return None;
+        }
+        let data: Vec<f32> = self.buf[self.pos + 20..self.pos + 20 + payload]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        self.consume(20 + payload);
+        Some(Frame::Request { n: n as usize, d: d as usize, tier, stream, trace_id, data })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Encoders (server → client, plus the client-side request/cancel).
+
+/// Encode a request frame; `stream` sets [`STREAM_FLAG`] on the tier.
+pub fn encode_request(x: &Tensor, tier: Tier, stream: bool, trace_id: u64) -> Vec<u8> {
+    let (n, d) = (x.dims()[0] as u32, x.dims()[1] as u32);
+    let tw = tier.as_u32() | if stream { STREAM_FLAG } else { 0 };
+    let mut out = Vec::with_capacity(20 + x.numel() * 4);
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(&d.to_le_bytes());
+    out.extend_from_slice(&tw.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    for &v in x.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a success reply from raw rows (the reactor replies from row
+/// slices without building a tensor).
+pub fn encode_response_rows(trace_id: u64, rows: usize, cols: usize, data: &[f32]) -> Vec<u8> {
+    debug_assert_eq!(rows * cols, data.len());
+    let mut out = Vec::with_capacity(16 + data.len() * 4);
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(cols as u32).to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    for &v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a success reply.
+pub fn encode_response(trace_id: u64, y: &Tensor) -> Vec<u8> {
+    encode_response_rows(trace_id, y.dims()[0], y.dims()[1], y.data())
+}
+
+/// Encode an error frame with a code-specific payload.
+pub fn encode_error(code: u32, trace_id: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + payload.len());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&code.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode a shed frame naming the refusing tier's queue.
+pub fn encode_shed(trace_id: u64, tier: Tier) -> Vec<u8> {
+    encode_error(CODE_SHED, trace_id, &tier.as_u32().to_le_bytes())
+}
+
+/// Encode a batch-failure frame carrying the cause.
+pub fn encode_failure(trace_id: u64, msg: &str) -> Vec<u8> {
+    let bytes = msg.as_bytes();
+    let mut payload = Vec::with_capacity(4 + bytes.len());
+    payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    payload.extend_from_slice(bytes);
+    encode_error(CODE_BATCH_FAILED, trace_id, &payload)
+}
+
+/// Encode a control request frame.
+pub fn encode_control(code: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    out.extend_from_slice(&CONTROL_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&code.to_le_bytes());
+    out
+}
+
+/// Encode a control reply (length-prefixed body).
+pub fn encode_control_reply(body: &str) -> Vec<u8> {
+    let bytes = body.as_bytes();
+    let mut out = Vec::with_capacity(4 + bytes.len());
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Encode a cancel frame for an in-flight streamed request.
+pub fn encode_cancel(trace_id: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(&STREAM_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out
+}
+
+/// Encode a stream prefix/delta frame from raw rows.
+pub fn encode_stream_data(
+    kind: u32,
+    trace_id: u64,
+    terms: usize,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> Vec<u8> {
+    debug_assert_eq!(rows * cols, data.len());
+    let mut out = Vec::with_capacity(28 + data.len() * 4);
+    out.extend_from_slice(&STREAM_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(cols as u32).to_le_bytes());
+    out.extend_from_slice(&(terms as u32).to_le_bytes());
+    for &v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a stream end frame (total terms the reply reduced).
+pub fn encode_stream_end(trace_id: u64, terms: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(20);
+    out.extend_from_slice(&STREAM_SENTINEL.to_le_bytes());
+    out.extend_from_slice(&STREAM_END.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out.extend_from_slice(&(terms as u32).to_le_bytes());
+    out
+}
+
+// ---------------------------------------------------------------------
+// Blocking clients (tests, CLI, loadgen's closed loop).
+
+/// Read one little-endian `u32` (blocking).
+pub fn read_u32<R: Read>(s: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read one little-endian `u64` (blocking).
+pub fn read_u64<R: Read>(s: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(s: &mut R, count: usize) -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; count * 4];
+    s.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Turn a received error frame (header already consumed) into an error.
+fn read_error_frame<R: Read>(s: &mut R, code: u32) -> anyhow::Error {
+    match code {
+        CODE_SHED => match read_u32(s) {
+            Ok(wire) => {
+                let queue = Tier::from_u32(wire)
+                    .map(|t| t.name().to_string())
+                    .unwrap_or_else(|| format!("#{wire}"));
+                anyhow::anyhow!("server shed the request: {queue} queue full")
+            }
+            Err(e) => anyhow::anyhow!("truncated shed frame: {e}"),
+        },
+        CODE_BATCH_FAILED => {
+            let msg = read_u32(s)
+                .and_then(|len| {
+                    let mut buf = vec![0u8; (len as usize).min(4096)];
+                    s.read_exact(&mut buf)?;
+                    Ok(String::from_utf8_lossy(&buf).into_owned())
+                })
+                .unwrap_or_else(|e| format!("<truncated failure frame: {e}>"));
+            anyhow::anyhow!("server error: {msg}")
+        }
+        CODE_MALFORMED => anyhow::anyhow!("server rejected the request as malformed"),
+        other => anyhow::anyhow!("unknown error frame code {other}"),
+    }
+}
+
+fn read_reply(s: &mut TcpStream) -> anyhow::Result<(Tensor, u64)> {
+    let rn = read_u32(s)? as usize;
+    let rc = read_u32(s)? as usize;
+    // success and error frames both carry the trace id at bytes 8..16
+    let echoed = read_u64(s)?;
+    if rn == 0 {
+        return Err(read_error_frame(s, rc as u32));
+    }
+    anyhow::ensure!(rc > 0, "empty response frame");
+    let data = read_f32s(s, rn * rc)?;
+    Ok((Tensor::from_vec(&[rn, rc], data), echoed))
+}
+
+/// Blocking client call at [`Tier::Exact`] (used by tests/loadgen).
+pub fn client_infer(addr: std::net::SocketAddr, x: &Tensor) -> anyhow::Result<Tensor> {
+    client_infer_tier(addr, x, Tier::Exact)
+}
+
+/// Blocking client call at an explicit service tier.
+pub fn client_infer_tier(
+    addr: std::net::SocketAddr,
+    x: &Tensor,
+    tier: Tier,
+) -> anyhow::Result<Tensor> {
+    Ok(client_infer_traced(addr, x, tier, 0)?.0)
+}
+
+/// Blocking client call carrying an explicit trace id (0 asks the
+/// server to assign one). Returns the reply and the trace id echoed in
+/// the response header — the key for joining this request onto the
+/// flight recorder's spans (`trace` control frame or CLI subcommand).
+pub fn client_infer_traced(
+    addr: std::net::SocketAddr,
+    x: &Tensor,
+    tier: Tier,
+    trace_id: u64,
+) -> anyhow::Result<(Tensor, u64)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(&encode_request(x, tier, false, trace_id))?;
+    read_reply(&mut s)
+}
+
+fn client_control(addr: std::net::SocketAddr, code: u32) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(&encode_control(code))?;
+    let len = read_u32(&mut s)? as usize;
+    let mut buf = vec![0u8; len];
+    s.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+/// Fetch the server's Prometheus-style metrics exposition over the
+/// metrics control frame.
+pub fn client_metrics(addr: std::net::SocketAddr) -> anyhow::Result<String> {
+    client_control(addr, CTRL_METRICS)
+}
+
+/// Fetch the flight recorder's Chrome-trace JSON over the trace control
+/// frame (`[]` when the server runs without a recorder).
+pub fn client_trace_json(addr: std::net::SocketAddr) -> anyhow::Result<String> {
+    client_control(addr, CTRL_TRACE)
+}
+
+/// One server frame as seen by a streaming client.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// Immediate truncated-prefix result (`terms` terms folded so far).
+    Prefix { terms: usize, y: Tensor },
+    /// One later basis term: ⊎-add onto the running reconstruction.
+    Delta { terms: usize, y: Tensor },
+    /// Refinement finished after `terms` total terms.
+    End { terms: usize },
+    /// The server declined to stream (tier not eligible) and sent one
+    /// classic reply frame.
+    Final { y: Tensor },
+}
+
+/// Blocking client for a progressive-refinement request.
+pub struct StreamClient {
+    s: TcpStream,
+    /// trace id echoed by the server (updated on the first frame when
+    /// the request asked the server to assign one)
+    pub trace_id: u64,
+}
+
+impl StreamClient {
+    /// Open a connection and send one streamed request.
+    pub fn start(
+        addr: std::net::SocketAddr,
+        x: &Tensor,
+        tier: Tier,
+        trace_id: u64,
+    ) -> anyhow::Result<Self> {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(&encode_request(x, tier, true, trace_id))?;
+        Ok(StreamClient { s, trace_id })
+    }
+
+    /// Read the next server frame on this stream (blocking).
+    pub fn recv(&mut self) -> anyhow::Result<StreamEvent> {
+        let w0 = read_u32(&mut self.s)?;
+        if w0 == STREAM_SENTINEL {
+            let kind = read_u32(&mut self.s)?;
+            self.trace_id = read_u64(&mut self.s)?;
+            if kind == STREAM_END {
+                let terms = read_u32(&mut self.s)? as usize;
+                return Ok(StreamEvent::End { terms });
+            }
+            let rows = read_u32(&mut self.s)? as usize;
+            let cols = read_u32(&mut self.s)? as usize;
+            let terms = read_u32(&mut self.s)? as usize;
+            let y = Tensor::from_vec(&[rows, cols], read_f32s(&mut self.s, rows * cols)?);
+            return Ok(match kind {
+                STREAM_PREFIX => StreamEvent::Prefix { terms, y },
+                _ => StreamEvent::Delta { terms, y },
+            });
+        }
+        let rc = read_u32(&mut self.s)? as usize;
+        self.trace_id = read_u64(&mut self.s)?;
+        if w0 == 0 {
+            return Err(read_error_frame(&mut self.s, rc as u32));
+        }
+        anyhow::ensure!(rc > 0, "empty response frame");
+        let y = Tensor::from_vec(&[w0 as usize, rc], read_f32s(&mut self.s, w0 as usize * rc)?);
+        Ok(StreamEvent::Final { y })
+    }
+
+    /// Ask the server to stop refining this request; frames already in
+    /// flight (and the end frame) still arrive.
+    pub fn cancel(&mut self) -> anyhow::Result<()> {
+        self.s.write_all(&encode_cancel(self.trace_id))?;
+        Ok(())
+    }
+}
+
+/// A fully collected streamed reply.
+#[derive(Debug, Clone)]
+pub struct StreamReply {
+    /// false when the server declined to stream: `prefix` is then the
+    /// complete classic reply and `terms_total` is 0 (unreported)
+    pub streamed: bool,
+    pub prefix: Tensor,
+    pub deltas: Vec<Tensor>,
+    pub terms_total: usize,
+    pub trace_id: u64,
+}
+
+impl StreamReply {
+    /// Fold the prefix and deltas in arrival order — the same left fold
+    /// the scheduler used, so the result is bit-identical to the
+    /// non-streamed reply at the same term count.
+    pub fn reconstruct(&self) -> Tensor {
+        let mut acc = self.prefix.clone();
+        for d in &self.deltas {
+            acc = acc.add(d);
+        }
+        acc
+    }
+}
+
+/// Send one streamed request and collect every frame until the end.
+pub fn client_infer_stream(
+    addr: std::net::SocketAddr,
+    x: &Tensor,
+    tier: Tier,
+    trace_id: u64,
+) -> anyhow::Result<StreamReply> {
+    let mut c = StreamClient::start(addr, x, tier, trace_id)?;
+    let mut prefix: Option<Tensor> = None;
+    let mut deltas = Vec::new();
+    loop {
+        match c.recv()? {
+            StreamEvent::Prefix { y, .. } => prefix = Some(y),
+            StreamEvent::Delta { y, .. } => deltas.push(y),
+            StreamEvent::End { terms } => {
+                let prefix =
+                    prefix.ok_or_else(|| anyhow::anyhow!("stream ended without a prefix"))?;
+                return Ok(StreamReply {
+                    streamed: true,
+                    prefix,
+                    deltas,
+                    terms_total: terms,
+                    trace_id: c.trace_id,
+                });
+            }
+            StreamEvent::Final { y } => {
+                return Ok(StreamReply {
+                    streamed: false,
+                    prefix: y,
+                    deltas,
+                    terms_total: 0,
+                    trace_id: c.trace_id,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    /// A mixed wire session: requests (plain + streamed), a control
+    /// frame, a cancel, a zero-dim reject, and an unknown-tier reject
+    /// whose payload must be swallowed.
+    fn sample_session() -> (Vec<u8>, Vec<Frame>) {
+        let mut rng = Rng::seed(0xC0DEC);
+        let mut bytes = Vec::new();
+        let mut expect = Vec::new();
+
+        let x1 = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        bytes.extend_from_slice(&encode_request(&x1, Tier::Exact, false, 7));
+        expect.push(Frame::Request {
+            n: 2,
+            d: 3,
+            tier: Tier::Exact,
+            stream: false,
+            trace_id: 7,
+            data: x1.data().to_vec(),
+        });
+
+        bytes.extend_from_slice(&encode_control(CTRL_METRICS));
+        expect.push(Frame::Control { code: CTRL_METRICS });
+
+        let x2 = Tensor::randn(&[1, 5], 1.0, &mut rng);
+        bytes.extend_from_slice(&encode_request(&x2, Tier::BestEffort, true, 9));
+        expect.push(Frame::Request {
+            n: 1,
+            d: 5,
+            tier: Tier::BestEffort,
+            stream: true,
+            trace_id: 9,
+            data: x2.data().to_vec(),
+        });
+
+        bytes.extend_from_slice(&encode_cancel(9));
+        expect.push(Frame::Cancel { trace_id: 9 });
+
+        // zero-dim header: rejected with its trace id, no payload
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&21u64.to_le_bytes());
+        expect.push(Frame::Malformed { trace_id: 21, fatal: false });
+
+        // unknown tier 99 with a 2·3 payload the decoder must skip
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&22u64.to_le_bytes());
+        for i in 0..6 {
+            bytes.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        expect.push(Frame::Malformed { trace_id: 22, fatal: false });
+
+        // a valid request after the skipped payload proves survival
+        let x3 = Tensor::randn(&[3, 2], 1.0, &mut rng);
+        bytes.extend_from_slice(&encode_request(&x3, Tier::Throughput, false, 23));
+        expect.push(Frame::Request {
+            n: 3,
+            d: 2,
+            tier: Tier::Throughput,
+            stream: false,
+            trace_id: 23,
+            data: x3.data().to_vec(),
+        });
+
+        (bytes, expect)
+    }
+
+    fn drain(dec: &mut FrameDecoder) -> Vec<Frame> {
+        let mut out = Vec::new();
+        while let Some(f) = dec.next_frame() {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn decoder_matches_one_shot_decode() {
+        let (bytes, expect) = sample_session();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        assert_eq!(drain(&mut dec), expect);
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn decoder_handles_byte_at_a_time() {
+        let (bytes, expect) = sample_session();
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for b in &bytes {
+            dec.feed(std::slice::from_ref(b));
+            got.extend(drain(&mut dec));
+        }
+        assert_eq!(got, expect);
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn decoder_handles_arbitrary_split_boundaries() {
+        let (bytes, expect) = sample_session();
+        let mut rng = Rng::seed(0x5117);
+        for it in 0..200 {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut off = 0;
+            while off < bytes.len() {
+                let take = 1 + rng.below(64).min(bytes.len() - off - 1);
+                dec.feed(&bytes[off..off + take]);
+                off += take;
+                got.extend(drain(&mut dec));
+            }
+            assert_eq!(got, expect, "iteration {it} diverged");
+            assert_eq!(dec.pending(), 0, "iteration {it} left bytes behind");
+        }
+    }
+
+    #[test]
+    fn oversized_header_is_fatal() {
+        let mut dec = FrameDecoder::new();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(u32::MAX - 2).to_le_bytes());
+        bytes.extend_from_slice(&(u32::MAX - 2).to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        dec.feed(&bytes);
+        assert_eq!(dec.next_frame(), Some(Frame::Malformed { trace_id: 5, fatal: true }));
+    }
+
+    #[test]
+    fn streamed_reply_reconstructs_by_left_fold() {
+        let prefix = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let d1 = Tensor::from_vec(&[1, 2], vec![0.5, 0.25]);
+        let d2 = Tensor::from_vec(&[1, 2], vec![0.125, 0.0625]);
+        let reply = StreamReply {
+            streamed: true,
+            prefix: prefix.clone(),
+            deltas: vec![d1.clone(), d2.clone()],
+            terms_total: 3,
+            trace_id: 1,
+        };
+        let want = prefix.add(&d1).add(&d2);
+        assert_eq!(reply.reconstruct().data(), want.data());
+    }
+}

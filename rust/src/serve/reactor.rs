@@ -1,0 +1,513 @@
+//! Reactor substrate for the nonblocking serving plane: a minimal
+//! readiness poller (epoll on Linux via a sanctioned FFI island, a
+//! timeout-driven fallback elsewhere), a cross-thread wake pipe, and
+//! the [`WakeLatch`]/[`WakeQueue`] handoff that carries scheduler
+//! completions into the reactor thread without locks on the wake path.
+//!
+//! Ownership model: the reactor thread owns ALL connection state.
+//! Scheduler-side completion sinks only push onto a [`WakeQueue`] and
+//! (when the latch says so) write one byte to the [`Waker`] pipe; the
+//! reactor drains the pipe, re-opens the wake window, and drains the
+//! queue. The latch protocol is loom-modeled below
+//! (`loom_model_wake_latch_never_strands_a_completion`) and stressed
+//! under TSan in `tests/stress_sync.rs`; see CONCURRENCY.md.
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Mutex;
+use std::collections::VecDeque;
+
+/// Coalescing wake flag between completion producers and the reactor.
+///
+/// Producer: push your item, then call [`notify`](WakeLatch::notify) —
+/// a `true` return means you must emit a wake signal (the pipe byte);
+/// `false` means a signal is already in flight and covers your push.
+/// Consumer: after consuming a wake signal, call
+/// [`begin_drain`](WakeLatch::begin_drain) BEFORE draining the queue,
+/// so a producer racing the drain either lands in it or wins a fresh
+/// `notify` and emits the next signal. The buggy order (drain, then
+/// clear) strands exactly the completion the loom model pins.
+pub struct WakeLatch(AtomicBool);
+
+impl WakeLatch {
+    pub fn new() -> Self {
+        WakeLatch(AtomicBool::new(false))
+    }
+
+    /// Producer side. Returns true when the caller must emit a wake
+    /// signal.
+    pub fn notify(&self) -> bool {
+        // ordering: AcqRel — the Release half orders the caller's queue
+        // push before this latch write, so the consumer's begin_drain
+        // RMW (which reads the newest store) acquires it; the Acquire
+        // half symmetrically picks up the consumer's window flip.
+        !self.0.swap(true, Ordering::AcqRel)
+    }
+
+    /// Consumer side: open the next wake window. MUST run before the
+    /// queue drain it guards.
+    pub fn begin_drain(&self) {
+        // ordering: AcqRel — deliberately an RMW, not a plain store: an
+        // RMW reads the newest store in modification order, so it
+        // synchronizes with the Release swap of every producer that
+        // latched before this drain — including one whose notify()
+        // returned false and therefore emitted no wake byte — making
+        // that producer's queue push visible to the drain that follows.
+        // A plain store would create no edge to that producer.
+        let _ = self.0.swap(false, Ordering::AcqRel);
+    }
+}
+
+impl Default for WakeLatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Multi-producer completion queue with a coalesced wake contract.
+pub struct WakeQueue<T> {
+    q: Mutex<VecDeque<T>>,
+    latch: WakeLatch,
+}
+
+impl<T> WakeQueue<T> {
+    pub fn new() -> Self {
+        WakeQueue { q: Mutex::new(VecDeque::new()), latch: WakeLatch::new() }
+    }
+
+    /// Push one item. Returns true when the caller must emit a wake
+    /// signal ([`Waker::signal`]).
+    pub fn push(&self, item: T) -> bool {
+        // a poisoned queue still holds coherent completions (pushes are
+        // single appends); recover rather than cascade the panic
+        self.q.lock().unwrap_or_else(|p| p.into_inner()).push_back(item);
+        self.latch.notify()
+    }
+
+    /// Consumer side: open the next wake window, then take everything
+    /// queued. Runs on the reactor thread after the pipe is drained.
+    pub fn drain(&self) -> Vec<T> {
+        self.latch.begin_drain();
+        let mut q = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        q.drain(..).collect()
+    }
+}
+
+impl<T> Default for WakeQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Producer half of the wake pipe (one byte per granted `notify`).
+pub struct Waker {
+    #[cfg(unix)]
+    tx: std::os::unix::net::UnixStream,
+}
+
+/// Reactor half of the wake pipe: register its fd for readability and
+/// [`clear`](WakeReceiver::clear) it on wakeup.
+pub struct WakeReceiver {
+    #[cfg(unix)]
+    rx: std::os::unix::net::UnixStream,
+}
+
+impl Waker {
+    pub fn pair() -> std::io::Result<(Waker, WakeReceiver)> {
+        #[cfg(unix)]
+        {
+            let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+            tx.set_nonblocking(true)?;
+            rx.set_nonblocking(true)?;
+            Ok((Waker { tx }, WakeReceiver { rx }))
+        }
+        #[cfg(not(unix))]
+        {
+            // no pipe: the fallback poller's timeout bounds wake latency
+            Ok((Waker {}, WakeReceiver {}))
+        }
+    }
+
+    /// Emit one wake byte. Call only when [`WakeQueue::push`] returned
+    /// true (or to force a reactor wakeup, e.g. on shutdown).
+    pub fn signal(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            // `impl Write for &UnixStream` lets many producer threads
+            // write without a lock; a full pipe is fine — WouldBlock
+            // means a byte is already in flight.
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+}
+
+impl WakeReceiver {
+    /// The fd to register for readability (-1 on non-unix targets,
+    /// where the fallback poller's timeout stands in for the pipe).
+    pub fn raw_fd(&self) -> i32 {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            self.rx.as_raw_fd()
+        }
+        #[cfg(not(unix))]
+        {
+            -1
+        }
+    }
+
+    /// Drain pending wake bytes. Run before [`WakeQueue::drain`].
+    pub fn clear(&mut self) {
+        #[cfg(unix)]
+        {
+            use std::io::Read;
+            let mut buf = [0u8; 64];
+            while matches!(self.rx.read(&mut buf), Ok(k) if k > 0) {}
+        }
+    }
+}
+
+/// One readiness event from [`Poller::poll`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Minimal epoll FFI. The crate denies `unsafe_code`; this module is
+/// the second sanctioned island (after `xint::kernel::micro`): four
+/// syscall wrappers, linked through std's own libc dependency, with no
+/// pointer lifetime subtleties — the kernel copies every struct we
+/// pass during the call.
+#[cfg(target_os = "linux")]
+#[allow(unsafe_code)]
+mod sys {
+    pub const EPOLL_CLOEXEC: i32 = 0x8_0000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+
+    /// x86_64 layout: 12 bytes, packed (the kernel ABI's struct).
+    /// Packed fields must be copied out, never referenced.
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Epoll {
+        fd: i32,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Epoll {
+        pub fn new(capacity: usize) -> std::io::Result<Epoll> {
+            // SAFETY: plain syscall, no pointers.
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Epoll { fd, buf: vec![EpollEvent { events: 0, data: 0 }; capacity.max(64)] })
+        }
+
+        pub fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> std::io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            // SAFETY: `ev` is live for the duration of the call; the
+            // kernel copies it and keeps no reference.
+            let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(
+            &mut self,
+            out: &mut Vec<super::Event>,
+            timeout_ms: i32,
+        ) -> std::io::Result<()> {
+            out.clear();
+            // SAFETY: `buf` is a live writable array of `buf.len()`
+            // events for the duration of the call.
+            let n = unsafe {
+                epoll_wait(self.fd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+            };
+            if n < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in self.buf.iter().take(n as usize) {
+                // copy fields out of the packed struct before use
+                let (es, token) = (ev.events, ev.data);
+                out.push(super::Event {
+                    token,
+                    readable: es & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: es & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            // SAFETY: the fd is owned by this struct and closed once.
+            unsafe { close(self.fd) };
+        }
+    }
+}
+
+/// Readiness poller: level-triggered epoll on Linux.
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    ep: sys::Epoll,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> std::io::Result<Poller> {
+        Ok(Poller { ep: sys::Epoll::new(1024)? })
+    }
+
+    fn interest(read: bool, write: bool) -> u32 {
+        let mut ev = 0;
+        if read {
+            ev |= sys::EPOLLIN;
+        }
+        if write {
+            ev |= sys::EPOLLOUT;
+        }
+        ev
+    }
+
+    pub fn register(
+        &mut self,
+        fd: i32,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> std::io::Result<()> {
+        self.ep.ctl(sys::EPOLL_CTL_ADD, fd, Self::interest(read, write), token)
+    }
+
+    pub fn reregister(
+        &mut self,
+        fd: i32,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> std::io::Result<()> {
+        self.ep.ctl(sys::EPOLL_CTL_MOD, fd, Self::interest(read, write), token)
+    }
+
+    pub fn deregister(&mut self, fd: i32, token: u64) -> std::io::Result<()> {
+        self.ep.ctl(sys::EPOLL_CTL_DEL, fd, 0, token)
+    }
+
+    /// Wait for readiness; `timeout_ms < 0` blocks indefinitely.
+    pub fn poll(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> std::io::Result<()> {
+        self.ep.wait(out, timeout_ms)
+    }
+}
+
+/// Fallback poller for non-Linux targets: registration is by token
+/// only; `poll` sleeps briefly and reports every registered token ready
+/// at its registered interest. Spurious readiness composes with the
+/// level-triggered, WouldBlock-tolerant connection state machines —
+/// correctness is preserved, efficiency is Linux-only.
+#[cfg(not(target_os = "linux"))]
+pub struct Poller {
+    interests: std::collections::HashMap<u64, (bool, bool)>,
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub fn new() -> std::io::Result<Poller> {
+        Ok(Poller { interests: std::collections::HashMap::new() })
+    }
+
+    pub fn register(
+        &mut self,
+        _fd: i32,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> std::io::Result<()> {
+        self.interests.insert(token, (read, write));
+        Ok(())
+    }
+
+    pub fn reregister(
+        &mut self,
+        _fd: i32,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> std::io::Result<()> {
+        self.interests.insert(token, (read, write));
+        Ok(())
+    }
+
+    pub fn deregister(&mut self, _fd: i32, token: u64) -> std::io::Result<()> {
+        self.interests.remove(&token);
+        Ok(())
+    }
+
+    pub fn poll(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> std::io::Result<()> {
+        out.clear();
+        let cap_ms = if self.interests.is_empty() { 10 } else { 1 };
+        let sleep_ms = if timeout_ms < 0 { cap_ms } else { (timeout_ms as u64).min(cap_ms) };
+        crate::util::sync::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+        for (&token, &(read, write)) in &self.interests {
+            out.push(Event { token, readable: read, writable: write });
+        }
+        Ok(())
+    }
+}
+
+/// The fd of a socket-like object for poller registration (-1 off-unix,
+/// where the fallback poller ignores fds anyway).
+#[cfg(unix)]
+pub fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn raw_fd<T>(_t: &T) -> i32 {
+    -1
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latch_coalesces_until_drained() {
+        let l = WakeLatch::new();
+        assert!(l.notify(), "first notify wins the wake");
+        assert!(!l.notify(), "second notify coalesces");
+        l.begin_drain();
+        assert!(l.notify(), "post-drain notify wins again");
+    }
+
+    #[test]
+    fn wake_queue_drains_everything_pushed() {
+        let q = WakeQueue::new();
+        assert!(q.push(1u32), "first push asks for a signal");
+        assert!(!q.push(2), "second push coalesces");
+        assert_eq!(q.drain(), vec![1, 2]);
+        assert!(q.drain().is_empty());
+        assert!(q.push(3), "drained window re-arms the signal");
+    }
+
+    #[test]
+    fn waker_pipe_roundtrip() {
+        let (waker, mut rx) = Waker::pair().unwrap();
+        waker.signal();
+        waker.signal();
+        rx.clear(); // must not block with bytes pending or after drain
+        rx.clear();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn poller_sees_wake_pipe_readability() {
+        let (waker, rx) = Waker::pair().unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(rx.raw_fd(), 7, true, false).unwrap();
+        let mut evs = Vec::new();
+        p.poll(&mut evs, 0).unwrap();
+        assert!(evs.is_empty(), "no readiness before the signal");
+        waker.signal();
+        p.poll(&mut evs, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.readable));
+    }
+}
+
+/// Loom model for the wake-latch handoff. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_model_`
+/// (see CONCURRENCY.md).
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::util::sync::atomic::AtomicUsize;
+    use crate::util::sync::{thread, Arc};
+
+    /// Two producers race the consumer through the latch protocol. A
+    /// wake "byte" is modeled as a Release increment the consumer
+    /// acquires before each drain pass; after the producers join, each
+    /// unconsumed byte buys exactly one more drain — the reactor's
+    /// epoll loop does the same. Every pushed completion must surface.
+    /// Reversing `begin_drain` and the queue take (drain-then-clear)
+    /// strands a completion pushed between them whose `notify` lost,
+    /// and this model finds that interleaving.
+    #[test]
+    fn loom_model_wake_latch_never_strands_a_completion() {
+        loom::model(|| {
+            let q = Arc::new(WakeQueue::new());
+            let wakes = Arc::new(AtomicUsize::new(0));
+            let producers: Vec<_> = (0..2u64)
+                .map(|p| {
+                    let q = Arc::clone(&q);
+                    let wakes = Arc::clone(&wakes);
+                    thread::spawn(move || {
+                        if q.push(p) {
+                            // ordering: Release — models the wake-pipe
+                            // byte the consumer acquires before its
+                            // drain pass.
+                            wakes.fetch_add(1, Ordering::Release);
+                        }
+                    })
+                })
+                .collect();
+            let consumer = {
+                let q = Arc::clone(&q);
+                let wakes = Arc::clone(&wakes);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let mut seen = 0usize;
+                    for _ in 0..3 {
+                        // ordering: Acquire — pairs with the producer's
+                        // Release byte; a seen byte licenses one drain.
+                        let w = wakes.load(Ordering::Acquire);
+                        if w > seen {
+                            seen = w;
+                            got.append(&mut q.drain());
+                        }
+                        thread::yield_now();
+                    }
+                    (got, seen)
+                })
+            };
+            for h in producers {
+                h.join().expect("producer panicked");
+            }
+            let (mut got, mut seen) = consumer.join().expect("consumer panicked");
+            // ordering: Acquire — final settle: observe every byte
+            // emitted before the joins completed.
+            let w = wakes.load(Ordering::Acquire);
+            while seen < w {
+                seen += 1;
+                got.append(&mut q.drain());
+            }
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1], "completion stranded without a wake signal");
+        });
+    }
+}

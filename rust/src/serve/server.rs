@@ -1,65 +1,72 @@
-//! TCP front-end speaking a minimal binary protocol:
+//! Nonblocking TCP front-end: a single-threaded epoll reactor serving
+//! protocol v3 (see [`crate::serve::protocol`] for the wire format and
+//! the blocking clients).
 //!
-//! request : [u32 n][u32 d][u32 tier][u64 trace_id][n·d × f32 LE]
-//! response: [u32 n][u32 c][u64 trace_id][n·c × f32 LE]
-//!           [0][0][u64 trace_id][u32 tier]  shed: that tier's bounded
-//!                                           queue was full (per-tier
-//!                                           admission control; `tier` is
-//!                                           the [`Tier`] wire encoding
-//!                                           of the queue that refused
-//!                                           the request)
-//!           [0][1][u64 trace_id][u32 len][len × u8]
-//!                                           batch failure (UTF-8 message)
-//!           [0][2][u64 trace_id]            malformed request (bad header
-//!                                           or unknown tier; `trace_id`
-//!                                           is 0 when the header never
-//!                                           parsed far enough to carry
-//!                                           one); the connection is
-//!                                           closed
-//! control : [u32::MAX][u32 code]  →  [u32 len][len × u8]
-//!           code 1 = Prometheus-style metrics exposition (text)
-//!           code 2 = flight-recorder dump as Chrome-trace JSON
+//! One `tcp-reactor` thread owns every connection: nonblocking accept,
+//! per-connection incremental frame decode
+//! ([`FrameDecoder`](crate::serve::protocol::FrameDecoder) inside
+//! [`Conn`]), request pipelining (any number of requests in flight per
+//! connection, replies matched by `trace_id`), and progressive
+//! refinement streaming for `Throughput`/`BestEffort` requests that set
+//! the tier word's [`STREAM_FLAG`](crate::serve::protocol::STREAM_FLAG)
+//! — an immediate truncated-prefix frame, then one ⊎ delta frame per
+//! later basis term until the tier budget is consumed or the client
+//! cancels.
 //!
-//! `tier` is the QoS service tier ([`Tier`] wire encoding): it selects
-//! how many basis terms of the series the coordinator reduces for this
-//! request, and which bounded queue admits it. `trace_id` correlates the
-//! reply with the flight recorder's spans: 0 asks the server to assign a
-//! fresh id (echoed in the response header), any other value is threaded
-//! through verbatim. Malformed requests close the connection before a
-//! trace id exists, so they are the one error path without a span. The
-//! server is a thin shim over the in-process [`Coordinator`]; one OS
-//! thread per connection (std only — tokio is unavailable offline).
+//! Replies are produced on the batcher thread and carried back by a
+//! [`WakeQueue`] + wake-pipe handoff (loom-modeled in
+//! [`crate::serve::reactor`]): the scheduler-side sinks only push a
+//! [`Completion`] and poke the pipe; the reactor encodes and writes all
+//! bytes itself, so connection state needs no locks. Write backpressure
+//! is wired into admission control: a connection whose unflushed reply
+//! backlog exceeds [`HIGH_WATER_BYTES`](crate::serve::conn::HIGH_WATER_BYTES)
+//! sheds new requests at their own tier (`CODE_SHED`, counted in that
+//! tier's shed statistics) instead of buffering without bound for a
+//! slow reader.
+//!
+//! Error paths are connection-preserving where the frame boundary is
+//! still trustworthy: malformed requests (zero dims, unknown tier) echo
+//! the parsed `trace_id` in their `CODE_MALFORMED` frame and its error
+//! span, and later pipelined frames on the same connection still serve.
+//! Only an oversized `n·d` header (the payload length itself is a lie)
+//! and unknown control codes close the connection.
 
-use crate::coordinator::{Coordinator, SubmitError};
+use crate::coordinator::{Coordinator, RefineSink, ReplySink, Response, StreamFrame, SubmitError};
 use crate::obs::{SpanKind, TraceRecorder};
 use crate::qos::Tier;
+use crate::serve::conn::{Conn, Inflight};
+use crate::serve::protocol::{
+    encode_control_reply, encode_error, encode_failure, encode_response, encode_shed,
+    encode_stream_data, encode_stream_end, Frame, STREAM_DELTA, STREAM_PREFIX,
+};
+use crate::serve::reactor::{raw_fd, Event, Poller, WakeQueue, WakeReceiver, Waker};
 use crate::tensor::Tensor;
 use crate::util::sync::atomic::{AtomicBool, Ordering};
 use crate::util::sync::{thread, Arc};
-use std::io::{Read, Write};
+use std::io::ErrorKind;
 use std::net::{TcpListener, TcpStream};
 
-/// Error code in the `[0][code]` response header: per-tier shed frame
-/// (payload = the refusing tier's wire encoding).
-pub const CODE_SHED: u32 = 0;
-/// Error code: batch failure (payload = length-prefixed UTF-8 message).
-pub const CODE_BATCH_FAILED: u32 = 1;
-/// Error code: malformed request header or unknown tier (no payload).
-pub const CODE_MALFORMED: u32 = 2;
+pub use crate::serve::protocol::{
+    client_infer, client_infer_tier, client_infer_traced, client_metrics, client_trace_json,
+    CODE_BATCH_FAILED, CODE_MALFORMED, CODE_SHED, CONTROL_SENTINEL, CTRL_METRICS, CTRL_TRACE,
+};
 
-/// `n` sentinel marking a control frame; the `d` word carries the
-/// control code and no tensor payload follows.
-pub const CONTROL_SENTINEL: u32 = u32::MAX;
-/// Control code: reply with the Prometheus-style metrics exposition.
-pub const CTRL_METRICS: u32 = 1;
-/// Control code: reply with the flight recorder's Chrome-trace JSON.
-pub const CTRL_TRACE: u32 = 2;
+/// Poller token of the TCP listener.
+const LISTENER_TOKEN: u64 = 0;
+/// Poller token of the wake pipe's read end.
+const WAKER_TOKEN: u64 = 1;
+/// Connection slot `s` registers as token `TOKEN_BASE + s`.
+const TOKEN_BASE: u64 = 2;
+/// Poll timeout: a safety net under the wake pipe, bounding shutdown
+/// latency even if a wake signal is lost to a platform quirk.
+const POLL_TIMEOUT_MS: i32 = 500;
 
 /// Handle to a running TCP server.
 pub struct TcpServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<thread::JoinHandle<()>>,
+    waker: Arc<Waker>,
+    reactor_thread: Option<thread::JoinHandle<()>>,
 }
 
 impl TcpServerHandle {
@@ -68,318 +75,434 @@ impl TcpServerHandle {
         // multi-location protocol, so the strongest ordering costs
         // nothing here and keeps the shutdown path trivially correct.
         self.stop.store(true, Ordering::SeqCst);
-        // poke the accept loop
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_thread.take() {
+        // poke the reactor out of its poll
+        self.waker.signal();
+        if let Some(h) = self.reactor_thread.take() {
             let _ = h.join();
         }
     }
 }
 
-fn read_exact_u32(s: &mut TcpStream) -> std::io::Result<u32> {
-    let mut b = [0u8; 4];
-    s.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// One scheduler-side result carried into the reactor thread. `token` +
+/// `generation` name the connection the request arrived on; a stale
+/// generation (slot reused after a close) drops the completion instead
+/// of misdelivering it.
+enum Completion {
+    Reply { token: u64, generation: u64, resp: Response },
+    Stream { token: u64, generation: u64, frame: StreamFrame },
 }
 
-fn read_exact_u64(s: &mut TcpStream) -> std::io::Result<u64> {
-    let mut b = [0u8; 8];
-    s.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+struct ConnEntry {
+    conn: Conn<TcpStream>,
+    generation: u64,
+    /// (read, write) interest currently registered with the poller
+    interest: (bool, bool),
 }
 
-fn write_error_frame(stream: &mut TcpStream, code: u32, trace_id: u64, payload: &[u8]) -> bool {
-    let mut out = Vec::with_capacity(16 + payload.len());
-    out.extend_from_slice(&0u32.to_le_bytes());
-    out.extend_from_slice(&code.to_le_bytes());
-    out.extend_from_slice(&trace_id.to_le_bytes());
-    out.extend_from_slice(payload);
-    stream.write_all(&out).is_ok()
+struct Reactor {
+    listener: TcpListener,
+    poller: Poller,
+    wake_rx: WakeReceiver,
+    completions: Arc<WakeQueue<Completion>>,
+    waker: Arc<Waker>,
+    conns: Vec<Option<ConnEntry>>,
+    free: Vec<usize>,
+    next_gen: u64,
+    coord: Arc<Coordinator>,
+    rec: Option<Arc<TraceRecorder>>,
+    stop: Arc<AtomicBool>,
 }
 
-fn write_shed_frame(stream: &mut TcpStream, trace_id: u64, tier: Tier) -> bool {
-    write_error_frame(stream, CODE_SHED, trace_id, &tier.as_u32().to_le_bytes())
-}
-
-fn write_failure_frame(stream: &mut TcpStream, trace_id: u64, msg: &str) -> bool {
-    let bytes = msg.as_bytes();
-    let mut payload = Vec::with_capacity(4 + bytes.len());
-    payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-    payload.extend_from_slice(bytes);
-    write_error_frame(stream, CODE_BATCH_FAILED, trace_id, &payload)
-}
-
-/// Close the request-root span: every exit path of a parsed request —
-/// success, shed, batch failure — leaves a `Request` span so error
-/// traces are as complete as served ones.
-fn record_request(
-    rec: &Option<Arc<TraceRecorder>>,
-    trace_id: u64,
-    tier: Tier,
-    error: bool,
-    t0: u64,
-    detail: [u64; 3],
-) {
-    if let Some(rec) = rec {
-        rec.record_span(trace_id, SpanKind::Request, tier, error, t0, rec.now_ns(), detail);
+impl Reactor {
+    fn now(&self) -> u64 {
+        self.rec.as_ref().map_or(0, |r| r.now_ns())
     }
-}
 
-fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) {
-    let rec = coord.recorder.clone();
-    loop {
-        let n = match read_exact_u32(&mut stream) {
-            Ok(v) => v,
-            Err(_) => return, // client closed
-        };
-        // the request-root span opens at the first header byte of this
-        // frame, so it encloses decode, admission and reply
-        let t_req = rec.as_ref().map_or(0, |r| r.now_ns());
-        let d = match read_exact_u32(&mut stream) {
-            Ok(v) => v,
-            Err(_) => return,
-        };
-        if n == CONTROL_SENTINEL {
-            // control frames carry no tensor, so they are matched
-            // before the n·d size guard
-            let body = match d {
-                CTRL_METRICS => coord.exposition(),
-                CTRL_TRACE => coord.trace_json(),
-                _ => {
-                    let _ = write_error_frame(&mut stream, CODE_MALFORMED, 0, &[]);
-                    return;
+    /// Close the request-root span: every exit path of a parsed request
+    /// — success, shed, batch failure — leaves a `Request` span so
+    /// error traces are as complete as served ones.
+    fn record_request(&self, trace_id: u64, tier: Tier, error: bool, t0: u64, detail: [u64; 3]) {
+        if let Some(rec) = &self.rec {
+            rec.record_span(trace_id, SpanKind::Request, tier, error, t0, rec.now_ns(), detail);
+        }
+    }
+
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut scratch = vec![0u8; 64 * 1024];
+        loop {
+            // ordering: SeqCst — pairs with the SeqCst store in
+            // `TcpServerHandle::stop`; see the rationale there.
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Err(e) = self.poller.poll(&mut events, POLL_TIMEOUT_MS) {
+                log::warn!("reactor poll error: {e}");
+                continue;
+            }
+            for ev in &events {
+                match ev.token {
+                    LISTENER_TOKEN => self.accept_ready(),
+                    WAKER_TOKEN => {} // cleared and drained below
+                    token => self.conn_event(token, ev.readable, ev.writable, &mut scratch),
                 }
-            };
-            let bytes = body.as_bytes();
-            let mut out = Vec::with_capacity(4 + bytes.len());
-            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-            out.extend_from_slice(bytes);
-            if stream.write_all(&out).is_err() {
-                return;
             }
-            continue;
-        }
-        let (n, d) = (n as usize, d as usize);
-        if n == 0 || d == 0 || n * d > 16 * 1024 * 1024 {
-            let _ = write_error_frame(&mut stream, CODE_MALFORMED, 0, &[]);
-            return;
-        }
-        let tier = match read_exact_u32(&mut stream).ok().and_then(Tier::from_u32) {
-            Some(t) => t,
-            None => {
-                let _ = write_error_frame(&mut stream, CODE_MALFORMED, 0, &[]);
-                return;
+            // wake-latch protocol: drain the pipe, then the queue (the
+            // queue's drain re-opens the wake window first). Draining
+            // every pass also covers the fallback poller's timeouts.
+            self.wake_rx.clear();
+            for c in self.completions.drain() {
+                self.complete(c);
             }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let t0 = self.now();
+                    if let Err(e) = stream.set_nonblocking(true) {
+                        log::warn!("set_nonblocking failed: {e}");
+                        continue;
+                    }
+                    let slot = match self.free.pop() {
+                        Some(s) => s,
+                        None => {
+                            self.conns.push(None);
+                            self.conns.len() - 1
+                        }
+                    };
+                    let token = TOKEN_BASE + slot as u64;
+                    if let Err(e) = self.poller.register(raw_fd(&stream), token, true, false) {
+                        log::warn!("poller register failed: {e}");
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.next_gen += 1;
+                    self.conns[slot] = Some(ConnEntry {
+                        conn: Conn::new(stream),
+                        generation: self.next_gen,
+                        interest: (true, false),
+                    });
+                    if let Some(r) = &self.rec {
+                        let d = [token, 0, 0];
+                        r.record_span(0, SpanKind::Accept, Tier::Exact, false, t0, r.now_ns(), d);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, readable: bool, writable: bool, scratch: &mut [u8]) {
+        let slot = (token - TOKEN_BASE) as usize;
+        let Some(mut entry) = self.conns.get_mut(slot).and_then(|o| o.take()) else {
+            return; // stale event for a slot already torn down
         };
-        let wire_id = match read_exact_u64(&mut stream) {
-            Ok(v) => v,
-            Err(_) => return,
-        };
+        let mut dead = false;
+        if writable && entry.conn.wants_write() {
+            dead = !self.flush(&mut entry);
+        }
+        if readable && !dead {
+            match entry.conn.on_readable(scratch) {
+                Ok((frames, eof)) => {
+                    for f in frames {
+                        self.handle_frame(&mut entry, token, f);
+                    }
+                    if eof {
+                        entry.conn.closing = true;
+                    }
+                }
+                Err(e) => {
+                    log::debug!("connection read error: {e}");
+                    dead = true;
+                }
+            }
+        }
+        if !dead && entry.conn.wants_write() {
+            dead = !self.flush(&mut entry);
+        }
+        if dead || entry.conn.drained_for_close() {
+            self.teardown(slot, token, entry);
+        } else {
+            self.update_interest(token, &mut entry);
+            self.conns[slot] = Some(entry);
+        }
+    }
+
+    /// Flush queued frames until the socket blocks; close each flushed
+    /// frame's Write span. Returns false when the connection died.
+    fn flush(&self, entry: &mut ConnEntry) -> bool {
+        match entry.conn.on_writable() {
+            Ok(done) => {
+                if let Some(r) = &self.rec {
+                    let t_end = r.now_ns();
+                    let left = entry.conn.queued_frames() as u64;
+                    for f in done {
+                        let d = [f.bytes as u64, left, 0];
+                        let k = SpanKind::Write;
+                        r.record_span(f.trace_id, k, Tier::Exact, false, f.t_queued, t_end, d);
+                    }
+                }
+                true
+            }
+            Err(e) => {
+                log::debug!("connection write error: {e}");
+                false
+            }
+        }
+    }
+
+    fn update_interest(&mut self, token: u64, entry: &mut ConnEntry) {
+        let want = (true, entry.conn.wants_write());
+        let fd = raw_fd(&entry.conn.stream);
+        if want != entry.interest && self.poller.reregister(fd, token, want.0, want.1).is_ok() {
+            entry.interest = want;
+        }
+    }
+
+    fn teardown(&mut self, slot: usize, token: u64, entry: ConnEntry) {
+        let _ = self.poller.deregister(raw_fd(&entry.conn.stream), token);
+        self.free.push(slot);
+        drop(entry);
+    }
+
+    fn handle_frame(&self, entry: &mut ConnEntry, token: u64, frame: Frame) {
+        let t_req = self.now();
+        match frame {
+            Frame::Control { code } => {
+                let body = match code {
+                    CTRL_METRICS => self.coord.exposition(),
+                    CTRL_TRACE => self.coord.trace_json(),
+                    _ => {
+                        entry.conn.queue_frame(encode_error(CODE_MALFORMED, 0, &[]), 0, t_req);
+                        entry.conn.closing = true;
+                        return;
+                    }
+                };
+                entry.conn.queue_frame(encode_control_reply(&body), 0, t_req);
+            }
+            Frame::Cancel { trace_id } => entry.conn.cancel_inflight(trace_id),
+            Frame::Malformed { trace_id, fatal } => {
+                // the parsed trace id is echoed in both the frame and
+                // its error span, so the client's correlation key still
+                // joins onto the flight recorder
+                if let Some(r) = &self.rec {
+                    let d = [0, 0, 0];
+                    let k = SpanKind::Decode;
+                    r.record_span(trace_id, k, Tier::Exact, true, t_req, r.now_ns(), d);
+                }
+                let out = encode_error(CODE_MALFORMED, trace_id, &[]);
+                entry.conn.queue_frame(out, trace_id, t_req);
+                if fatal {
+                    entry.conn.closing = true;
+                }
+            }
+            Frame::Request { n, d, tier, stream, trace_id, data } => {
+                self.handle_request(entry, token, t_req, (n, d), tier, stream, trace_id, data);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_request(
+        &self,
+        entry: &mut ConnEntry,
+        token: u64,
+        t_req: u64,
+        dims: (usize, usize),
+        tier: Tier,
+        stream: bool,
+        wire_id: u64,
+        data: Vec<f32>,
+    ) {
+        let (n, d) = dims;
         // 0 asks the server to assign; the reply header echoes the id
-        let trace_id = if wire_id == 0 { coord.fresh_trace_id() } else { wire_id };
-        let t_dec = rec.as_ref().map_or(0, |r| r.now_ns());
-        let mut buf = vec![0u8; n * d * 4];
-        if stream.read_exact(&mut buf).is_err() {
+        let trace_id = if wire_id == 0 { self.coord.fresh_trace_id() } else { wire_id };
+        if entry.conn.over_high_water() {
+            // write backpressure feeds admission control: a reader too
+            // slow for its own request rate sheds at its own tier
+            self.coord.record_shed(tier);
+            log::warn!(
+                "request shed: write backlog {}B over high water ({tier})",
+                entry.conn.write_backlog()
+            );
+            entry.conn.queue_frame(encode_shed(trace_id, tier), trace_id, t_req);
+            self.record_request(trace_id, tier, true, t_req, [n as u64, 0, 0]);
             return;
         }
-        let data: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let t_dec = self.now();
         let x = Tensor::from_vec(&[n, d], data);
-        if let Some(r) = &rec {
+        if let Some(r) = &self.rec {
             let detail = [n as u64, d as u64, 0];
             r.record_span(trace_id, SpanKind::Decode, tier, false, t_dec, r.now_ns(), detail);
         }
-        let rx = match coord.submit_tier_traced(x, tier, trace_id) {
-            Ok(rx) => rx,
+        // streaming is honored only for the tiers whose contract is
+        // progressive (`Throughput`/`BestEffort`); others reply with one
+        // classic frame even when the flag is set
+        let streamed = stream && matches!(tier, Tier::Throughput | Tier::BestEffort);
+        let generation = entry.generation;
+        let q = self.completions.clone();
+        let w = self.waker.clone();
+        let sink = ReplySink::Callback(Arc::new(move |resp: Response| {
+            if q.push(Completion::Reply { token, generation, resp }) {
+                w.signal();
+            }
+        }));
+        let mut cancel_flag = None;
+        let refine = if streamed {
+            let cancel = Arc::new(AtomicBool::new(false));
+            cancel_flag = Some(cancel.clone());
+            let q = self.completions.clone();
+            let w = self.waker.clone();
+            Some(RefineSink {
+                emit: Arc::new(move |frame: StreamFrame| {
+                    if q.push(Completion::Stream { token, generation, frame }) {
+                        w.signal();
+                    }
+                }),
+                cancel,
+            })
+        } else {
+            None
+        };
+        let inf = Inflight { t_req, tier, rows: n, streamed, cancel: cancel_flag };
+        entry.conn.register_inflight(trace_id, inf);
+        match self.coord.submit_tier_callback(x, tier, trace_id, sink, refine) {
+            Ok(()) => {}
             Err(SubmitError::Busy(full_tier)) => {
+                entry.conn.take_inflight(trace_id);
                 // surface the refusing tier's OWN control state: under
                 // per-tier pressure a shed names exactly the tier whose
                 // queue (and whose precision ladder) is saturated
-                match &coord.qos {
+                match &self.coord.qos {
                     Some(ctl) => log::warn!(
                         "request shed: {full_tier} queue full (tier pressure {})",
                         ctl.tier_pressure(full_tier)
                     ),
                     None => log::warn!("request shed: {full_tier} queue full"),
                 }
-                let sent = write_shed_frame(&mut stream, trace_id, full_tier);
-                record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
-                if !sent {
-                    return;
-                }
-                continue;
+                entry.conn.queue_frame(encode_shed(trace_id, full_tier), trace_id, t_req);
+                self.record_request(trace_id, tier, true, t_req, [n as u64, 0, 0]);
             }
             Err(SubmitError::Closed) => {
-                let sent = write_failure_frame(&mut stream, trace_id, "coordinator stopped");
-                record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
-                if !sent {
-                    return;
-                }
-                continue;
+                entry.conn.take_inflight(trace_id);
+                let out = encode_failure(trace_id, "coordinator stopped");
+                entry.conn.queue_frame(out, trace_id, t_req);
+                self.record_request(trace_id, tier, true, t_req, [n as u64, 0, 0]);
             }
+        }
+    }
+
+    fn complete(&mut self, c: Completion) {
+        let (token, generation) = match &c {
+            Completion::Reply { token, generation, .. } => (*token, *generation),
+            Completion::Stream { token, generation, .. } => (*token, *generation),
         };
-        let resp = match rx.recv() {
-            Ok(resp) => resp,
-            Err(_) => {
-                // batcher died mid-request; tell the client explicitly
-                let sent = write_failure_frame(&mut stream, trace_id, "coordinator stopped");
-                record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
-                if !sent {
-                    return;
-                }
-                continue;
-            }
+        let slot = match token.checked_sub(TOKEN_BASE) {
+            Some(s) => s as usize,
+            None => return,
         };
-        if let Some(msg) = &resp.error {
-            log::warn!("request failed: {msg}");
-            let sent = write_failure_frame(&mut stream, trace_id, msg);
-            record_request(&rec, trace_id, tier, true, t_req, [n as u64, 0, 0]);
-            if !sent {
-                return;
-            }
-            continue;
-        }
-        let reply = &resp.logits;
-        let t_rep = rec.as_ref().map_or(0, |r| r.now_ns());
-        let (rn, rc) = (reply.dims()[0] as u32, reply.dims()[1] as u32);
-        let mut out = Vec::with_capacity(16 + reply.numel() * 4);
-        out.extend_from_slice(&rn.to_le_bytes());
-        out.extend_from_slice(&rc.to_le_bytes());
-        out.extend_from_slice(&resp.trace_id.to_le_bytes());
-        for &v in reply.data() {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        let sent = stream.write_all(&out).is_ok();
-        if let Some(r) = &rec {
-            let detail = [out.len() as u64, 0, 0];
-            r.record_span(trace_id, SpanKind::Reply, tier, !sent, t_rep, r.now_ns(), detail);
-        }
-        let detail = [n as u64, resp.terms as u64, resp.grid_terms as u64];
-        record_request(&rec, trace_id, tier, !sent, t_req, detail);
-        if !sent {
+        let Some(mut entry) = self.conns.get_mut(slot).and_then(|o| o.take()) else {
+            return; // connection closed before its completion arrived
+        };
+        if entry.generation != generation {
+            self.conns[slot] = Some(entry); // slot reused: stale result
             return;
         }
+        match c {
+            Completion::Stream { frame, .. } => {
+                let t0 = self.now();
+                let kind = if frame.first { STREAM_PREFIX } else { STREAM_DELTA };
+                let out = encode_stream_data(
+                    kind,
+                    frame.trace_id,
+                    frame.terms,
+                    frame.rows,
+                    frame.cols,
+                    &frame.data,
+                );
+                entry.conn.queue_frame(out, frame.trace_id, t0);
+            }
+            Completion::Reply { resp, .. } => {
+                if let Some(inf) = entry.conn.take_inflight(resp.trace_id) {
+                    self.finish_request(&mut entry, inf, resp);
+                }
+            }
+        }
+        let alive = if entry.conn.wants_write() { self.flush(&mut entry) } else { true };
+        if !alive || entry.conn.drained_for_close() {
+            self.teardown(slot, token, entry);
+        } else {
+            self.update_interest(token, &mut entry);
+            self.conns[slot] = Some(entry);
+        }
+    }
+
+    /// Encode the final reply for a completed request: a failure frame,
+    /// a stream-end frame (streamed requests: the prefix/delta frames
+    /// already went out), or a classic single response frame.
+    fn finish_request(&self, entry: &mut ConnEntry, inf: Inflight, resp: Response) {
+        let trace_id = resp.trace_id;
+        if let Some(msg) = &resp.error {
+            log::warn!("request failed: {msg}");
+            let t0 = self.now();
+            entry.conn.queue_frame(encode_failure(trace_id, msg), trace_id, t0);
+            self.record_request(trace_id, inf.tier, true, inf.t_req, [inf.rows as u64, 0, 0]);
+            return;
+        }
+        let t_rep = self.now();
+        let out = if inf.streamed {
+            encode_stream_end(trace_id, resp.terms)
+        } else {
+            encode_response(trace_id, &resp.logits)
+        };
+        let out_len = out.len() as u64;
+        entry.conn.queue_frame(out, trace_id, t_rep);
+        if let Some(r) = &self.rec {
+            let d = [out_len, 0, 0];
+            r.record_span(trace_id, SpanKind::Reply, inf.tier, false, t_rep, r.now_ns(), d);
+        }
+        let detail = [inf.rows as u64, resp.terms as u64, resp.grid_terms as u64];
+        self.record_request(trace_id, inf.tier, false, inf.t_req, detail);
     }
 }
 
 /// Start serving on `addr` ("127.0.0.1:0" for an ephemeral port).
 pub fn serve_tcp(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<TcpServerHandle> {
     let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
     let local = listener.local_addr()?;
+    let mut poller = Poller::new()?;
+    poller.register(raw_fd(&listener), LISTENER_TOKEN, true, false)?;
+    let (waker, wake_rx) = Waker::pair()?;
+    poller.register(wake_rx.raw_fd(), WAKER_TOKEN, true, false)?;
+    let waker = Arc::new(waker);
     let stop = Arc::new(AtomicBool::new(false));
-    let stop2 = stop.clone();
-    let accept_thread = thread::Builder::new().name("tcp-accept".into()).spawn(move || {
-        for conn in listener.incoming() {
-            // ordering: SeqCst — pairs with the SeqCst store in
-            // `TcpServerHandle::stop`; see the rationale there.
-            if stop2.load(Ordering::SeqCst) {
-                break;
-            }
-            match conn {
-                Ok(stream) => {
-                    let coord = coord.clone();
-                    let _ = thread::Builder::new()
-                        .name("tcp-conn".into())
-                        .spawn(move || handle_conn(stream, coord));
-                }
-                Err(e) => log::warn!("accept error: {e}"),
-            }
-        }
-    })?;
-    log::info!("serving on {local}");
-    Ok(TcpServerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
-}
-
-/// Blocking client call at [`Tier::Exact`] (used by tests/loadgen).
-pub fn client_infer(addr: std::net::SocketAddr, x: &Tensor) -> anyhow::Result<Tensor> {
-    client_infer_tier(addr, x, Tier::Exact)
-}
-
-/// Blocking client call at an explicit service tier.
-pub fn client_infer_tier(
-    addr: std::net::SocketAddr,
-    x: &Tensor,
-    tier: Tier,
-) -> anyhow::Result<Tensor> {
-    Ok(client_infer_traced(addr, x, tier, 0)?.0)
-}
-
-/// Blocking client call carrying an explicit trace id (0 asks the
-/// server to assign one). Returns the reply and the trace id echoed in
-/// the response header — the key for joining this request onto the
-/// flight recorder's spans (`trace` control frame or CLI subcommand).
-pub fn client_infer_traced(
-    addr: std::net::SocketAddr,
-    x: &Tensor,
-    tier: Tier,
-    trace_id: u64,
-) -> anyhow::Result<(Tensor, u64)> {
-    let mut s = TcpStream::connect(addr)?;
-    let (n, d) = (x.dims()[0] as u32, x.dims()[1] as u32);
-    let mut msg = Vec::with_capacity(20 + x.numel() * 4);
-    msg.extend_from_slice(&n.to_le_bytes());
-    msg.extend_from_slice(&d.to_le_bytes());
-    msg.extend_from_slice(&tier.as_u32().to_le_bytes());
-    msg.extend_from_slice(&trace_id.to_le_bytes());
-    for &v in x.data() {
-        msg.extend_from_slice(&v.to_le_bytes());
-    }
-    s.write_all(&msg)?;
-    let rn = read_exact_u32(&mut s)? as usize;
-    let rc = read_exact_u32(&mut s)? as usize;
-    // success and error frames both carry the trace id at bytes 8..16
-    let echoed = read_exact_u64(&mut s)?;
-    if rn == 0 {
-        match rc as u32 {
-            CODE_SHED => {
-                let wire = read_exact_u32(&mut s)?;
-                let queue = Tier::from_u32(wire)
-                    .map(|t| t.name().to_string())
-                    .unwrap_or_else(|| format!("#{wire}"));
-                anyhow::bail!("server shed the request: {queue} queue full");
-            }
-            CODE_BATCH_FAILED => {
-                let len = read_exact_u32(&mut s)? as usize;
-                let mut buf = vec![0u8; len.min(4096)];
-                s.read_exact(&mut buf)?;
-                anyhow::bail!("server error: {}", String::from_utf8_lossy(&buf));
-            }
-            CODE_MALFORMED => anyhow::bail!("server rejected the request as malformed"),
-            other => anyhow::bail!("unknown error frame code {other}"),
-        }
-    }
-    anyhow::ensure!(rc > 0, "empty response frame");
-    let mut buf = vec![0u8; rn * rc * 4];
-    s.read_exact(&mut buf)?;
-    let data: Vec<f32> = buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    Ok((Tensor::from_vec(&[rn, rc], data), echoed))
-}
-
-fn client_control(addr: std::net::SocketAddr, code: u32) -> anyhow::Result<String> {
-    let mut s = TcpStream::connect(addr)?;
-    s.write_all(&CONTROL_SENTINEL.to_le_bytes())?;
-    s.write_all(&code.to_le_bytes())?;
-    let len = read_exact_u32(&mut s)? as usize;
-    let mut buf = vec![0u8; len];
-    s.read_exact(&mut buf)?;
-    Ok(String::from_utf8(buf)?)
-}
-
-/// Fetch the server's Prometheus-style metrics exposition over the
-/// metrics control frame.
-pub fn client_metrics(addr: std::net::SocketAddr) -> anyhow::Result<String> {
-    client_control(addr, CTRL_METRICS)
-}
-
-/// Fetch the flight recorder's Chrome-trace JSON over the trace control
-/// frame (`[]` when the server runs without a recorder).
-pub fn client_trace_json(addr: std::net::SocketAddr) -> anyhow::Result<String> {
-    client_control(addr, CTRL_TRACE)
+    let rec = coord.recorder.clone();
+    let mut reactor = Reactor {
+        listener,
+        poller,
+        wake_rx,
+        completions: Arc::new(WakeQueue::new()),
+        waker: waker.clone(),
+        conns: Vec::new(),
+        free: Vec::new(),
+        next_gen: 0,
+        coord,
+        rec,
+        stop: stop.clone(),
+    };
+    let reactor_thread =
+        thread::Builder::new().name("tcp-reactor".into()).spawn(move || reactor.run())?;
+    log::info!("serving on {local} (reactor)");
+    Ok(TcpServerHandle { addr: local, stop, waker, reactor_thread: Some(reactor_thread) })
 }
 
 #[cfg(test)]
@@ -388,7 +511,11 @@ mod tests {
     use crate::coordinator::{
         BasisWorker, BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool,
     };
+    use crate::serve::protocol::{
+        client_infer_stream, encode_request, read_u32, read_u64, StreamClient, StreamEvent,
+    };
     use crate::tensor::Rng;
+    use std::io::{Read, Write};
 
     struct Double;
     impl BasisWorker for Double {
@@ -415,11 +542,59 @@ mod tests {
         ))
     }
 
-    fn frame_code(reply: &[u8; 8]) -> (u32, u32) {
-        (
-            u32::from_le_bytes(reply[0..4].try_into().unwrap()),
-            u32::from_le_bytes(reply[4..8].try_into().unwrap()),
-        )
+    /// Worker `i` contributes term `x·(i+1)`: distinct per-term values
+    /// make prefix/delta attribution visible in streamed replies.
+    fn gain_coordinator(n: usize) -> Arc<Coordinator> {
+        struct Gain(f32);
+        impl BasisWorker for Gain {
+            fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+                Ok(x.scale(self.0))
+            }
+        }
+        let pool = WorkerPool::new(
+            n,
+            Arc::new(|i| Box::new(Gain((i + 1) as f32)) as Box<dyn BasisWorker>),
+        );
+        Arc::new(Coordinator::new(
+            BatcherConfig::uniform(8, 200, 64),
+            ExpansionScheduler::new(pool),
+        ))
+    }
+
+    fn read_head(s: &mut TcpStream) -> (u32, u32, u64) {
+        let a = read_u32(s).unwrap();
+        let b = read_u32(s).unwrap();
+        let id = read_u64(s).unwrap();
+        (a, b, id)
+    }
+
+    /// One server frame, order-agnostic (pipelined replies interleave).
+    enum Rf {
+        Ok { id: u64, data: Vec<f32> },
+        Err { code: u32, id: u64 },
+    }
+
+    fn read_frame(s: &mut TcpStream) -> Rf {
+        let (n, c, id) = read_head(s);
+        if n == 0 {
+            match c {
+                CODE_SHED => {
+                    let _ = read_u32(s).unwrap();
+                }
+                CODE_BATCH_FAILED => {
+                    let len = read_u32(s).unwrap() as usize;
+                    let mut buf = vec![0u8; len];
+                    s.read_exact(&mut buf).unwrap();
+                }
+                _ => {}
+            }
+            return Rf::Err { code: c, id };
+        }
+        let mut buf = vec![0u8; (n * c) as usize * 4];
+        s.read_exact(&mut buf).unwrap();
+        let data =
+            buf.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect();
+        Rf::Ok { id, data }
     }
 
     #[test]
@@ -474,39 +649,149 @@ mod tests {
     }
 
     #[test]
-    fn malformed_header_rejected() {
-        let coord = tiny_coordinator();
+    fn malformed_header_echoes_trace_id_and_conn_survives() {
+        let rec = Arc::new(TraceRecorder::default());
+        let coord = traced_coordinator(rec.clone());
         let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
         let mut s = TcpStream::connect(handle.addr).unwrap();
-        // n = 0 triggers the guard
-        s.write_all(&0u32.to_le_bytes()).unwrap();
-        s.write_all(&5u32.to_le_bytes()).unwrap();
-        let mut reply = [0u8; 8];
-        s.read_exact(&mut reply).unwrap();
-        assert_eq!(frame_code(&reply), (0, CODE_MALFORMED));
+        // n = 0 triggers the guard; the header still parses to trace 7
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        bad.extend_from_slice(&5u32.to_le_bytes());
+        bad.extend_from_slice(&Tier::Exact.as_u32().to_le_bytes());
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        s.write_all(&bad).unwrap();
+        let (z, code, id) = read_head(&mut s);
+        assert_eq!((z, code), (0, CODE_MALFORMED));
+        assert_eq!(id, 7, "parsed trace id must echo in the malformed frame");
+        // non-fatal reject: the same connection still serves
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, -2.0]);
+        s.write_all(&encode_request(&x, Tier::Exact, false, 8)).unwrap();
+        match read_frame(&mut s) {
+            Rf::Ok { id, data } => {
+                assert_eq!(id, 8);
+                assert_eq!(data, vec![2.0, -4.0]);
+            }
+            Rf::Err { code, id } => panic!("valid request rejected: code {code} id {id}"),
+        }
+        // the error span carries the parsed trace id too
+        let evs = rec.events_for(7);
+        assert!(
+            evs.iter().any(|e| e.span == SpanKind::Decode && e.error),
+            "malformed request must leave an error span under its trace id: {evs:?}"
+        );
         handle.stop();
     }
 
     #[test]
-    fn unknown_tier_rejected() {
+    fn unknown_tier_rejected_conn_survives() {
         let coord = tiny_coordinator();
         let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
         let mut s = TcpStream::connect(handle.addr).unwrap();
-        s.write_all(&1u32.to_le_bytes()).unwrap();
-        s.write_all(&1u32.to_le_bytes()).unwrap();
-        s.write_all(&99u32.to_le_bytes()).unwrap(); // no such tier
-        let mut reply = [0u8; 8];
-        s.read_exact(&mut reply).unwrap();
-        assert_eq!(frame_code(&reply), (0, CODE_MALFORMED));
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&99u32.to_le_bytes()); // no such tier
+        bad.extend_from_slice(&5u64.to_le_bytes());
+        bad.extend_from_slice(&1.0f32.to_le_bytes());
+        s.write_all(&bad).unwrap();
+        let (z, code, id) = read_head(&mut s);
+        assert_eq!((z, code), (0, CODE_MALFORMED));
+        assert_eq!(id, 5, "unknown-tier reject echoes the parsed trace id");
+        // the payload was swallowed, so the next frame still decodes
+        let x = Tensor::from_vec(&[1, 2], vec![3.0, 4.0]);
+        s.write_all(&encode_request(&x, Tier::Exact, false, 6)).unwrap();
+        match read_frame(&mut s) {
+            Rf::Ok { id, data } => {
+                assert_eq!(id, 6);
+                assert_eq!(data, vec![6.0, 8.0]);
+            }
+            Rf::Err { code, id } => panic!("valid request rejected: code {code} id {id}"),
+        }
         handle.stop();
     }
 
     #[test]
-    fn shed_frame_names_the_full_tier_queue() {
+    fn pipelined_requests_one_segment_all_replied() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        let xs: Vec<Tensor> = (0..3)
+            .map(|k| Tensor::from_vec(&[1, 2], vec![k as f32, k as f32 + 0.5]))
+            .collect();
+        let mut seg = Vec::new();
+        for (k, x) in xs.iter().enumerate() {
+            seg.extend_from_slice(&encode_request(x, Tier::Exact, false, 11 + k as u64));
+        }
+        s.write_all(&seg).unwrap();
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..3 {
+            match read_frame(&mut s) {
+                Rf::Ok { id, data } => {
+                    seen.insert(id, data);
+                }
+                Rf::Err { code, id } => panic!("pipelined request failed: code {code} id {id}"),
+            }
+        }
+        for (k, x) in xs.iter().enumerate() {
+            let want: Vec<f32> = x.data().iter().map(|v| v * 2.0).collect();
+            assert_eq!(seen.get(&(11 + k as u64)), Some(&want), "reply {k}");
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn pipelined_errors_interleaved_with_valid_requests() {
+        let coord = tiny_coordinator();
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        // one TCP segment: valid, malformed (n = 0), unknown tier, valid
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 21));
+        seg.extend_from_slice(&0u32.to_le_bytes());
+        seg.extend_from_slice(&1u32.to_le_bytes());
+        seg.extend_from_slice(&Tier::Exact.as_u32().to_le_bytes());
+        seg.extend_from_slice(&22u64.to_le_bytes());
+        seg.extend_from_slice(&1u32.to_le_bytes());
+        seg.extend_from_slice(&1u32.to_le_bytes());
+        seg.extend_from_slice(&99u32.to_le_bytes());
+        seg.extend_from_slice(&23u64.to_le_bytes());
+        seg.extend_from_slice(&9.0f32.to_le_bytes());
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 24));
+        s.write_all(&seg).unwrap();
+        let mut oks = std::collections::HashMap::new();
+        let mut errs = std::collections::HashMap::new();
+        for _ in 0..4 {
+            match read_frame(&mut s) {
+                Rf::Ok { id, data } => {
+                    oks.insert(id, data);
+                }
+                Rf::Err { code, id } => {
+                    errs.insert(id, code);
+                }
+            }
+        }
+        assert_eq!(errs.get(&22), Some(&CODE_MALFORMED));
+        assert_eq!(errs.get(&23), Some(&CODE_MALFORMED));
+        let want = vec![2.0f32, 4.0];
+        assert_eq!(oks.get(&21), Some(&want));
+        assert_eq!(oks.get(&24), Some(&want));
+        // non-fatal errors leave the connection serving
+        s.write_all(&encode_request(&x, Tier::Exact, false, 25)).unwrap();
+        match read_frame(&mut s) {
+            Rf::Ok { id, .. } => assert_eq!(id, 25),
+            Rf::Err { code, id } => panic!("follow-up rejected: code {code} id {id}"),
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn pipelined_shed_interleaved_with_valid_requests() {
         struct Slow;
         impl BasisWorker for Slow {
             fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
-                std::thread::sleep(std::time::Duration::from_millis(500));
+                std::thread::sleep(std::time::Duration::from_millis(300));
                 Ok(x.clone())
             }
         }
@@ -530,17 +815,81 @@ mod tests {
             }
         }
         assert!(saturated, "throughput queue must fill");
-        // a TCP request at the saturated tier gets a shed frame naming it
-        let err = client_infer_tier(handle.addr, &Tensor::zeros(&[1, 2]), Tier::Throughput)
-            .unwrap_err();
-        let msg = format!("{err:#}");
-        assert!(msg.contains("throughput queue full"), "shed reason missing tier: {msg}");
+        // one segment: Exact request, Throughput request (shed), Exact
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 31));
+        seg.extend_from_slice(&encode_request(&x, Tier::Throughput, false, 32));
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 33));
+        s.write_all(&seg).unwrap();
+        let mut oks = Vec::new();
+        let mut sheds = Vec::new();
+        for _ in 0..3 {
+            match read_frame(&mut s) {
+                Rf::Ok { id, data } => oks.push((id, data)),
+                Rf::Err { code, id } => {
+                    assert_eq!(code, CODE_SHED);
+                    sheds.push(id);
+                }
+            }
+        }
+        assert_eq!(sheds, vec![32], "only the saturated tier's request sheds");
+        let mut ok_ids: Vec<u64> = oks.iter().map(|(id, _)| *id).collect();
+        ok_ids.sort_unstable();
+        assert_eq!(ok_ids, vec![31, 33], "other tiers still serve (per-tier admission)");
         assert!(coord.tier_shed(Tier::Throughput) >= 1);
-        // other tiers are still admitted (per-tier admission control)
-        let y = client_infer_tier(handle.addr, &Tensor::zeros(&[1, 2]), Tier::Exact).unwrap();
-        assert_eq!(y.dims(), &[1, 2]);
         for rx in keep {
             let _ = rx.recv_timeout(std::time::Duration::from_secs(20));
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn pipelined_batch_failures_keep_the_connection_serving() {
+        struct Failing;
+        impl BasisWorker for Failing {
+            fn run(&mut self, _x: &Tensor) -> anyhow::Result<Tensor> {
+                anyhow::bail!("boom")
+            }
+        }
+        let pool =
+            WorkerPool::new(1, Arc::new(|_| Box::new(Failing) as Box<dyn BasisWorker>));
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig::uniform(4, 100, 16),
+            ExpansionScheduler::new(pool),
+        ));
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let x = Tensor::zeros(&[1, 2]);
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        // one segment: failing request, malformed, failing request
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 41));
+        seg.extend_from_slice(&0u32.to_le_bytes());
+        seg.extend_from_slice(&1u32.to_le_bytes());
+        seg.extend_from_slice(&Tier::Exact.as_u32().to_le_bytes());
+        seg.extend_from_slice(&42u64.to_le_bytes());
+        seg.extend_from_slice(&encode_request(&x, Tier::Exact, false, 43));
+        s.write_all(&seg).unwrap();
+        let mut errs = std::collections::HashMap::new();
+        for _ in 0..3 {
+            match read_frame(&mut s) {
+                Rf::Ok { id, .. } => panic!("request {id} must not succeed"),
+                Rf::Err { code, id } => {
+                    errs.insert(id, code);
+                }
+            }
+        }
+        assert_eq!(errs.get(&41), Some(&CODE_BATCH_FAILED));
+        assert_eq!(errs.get(&42), Some(&CODE_MALFORMED));
+        assert_eq!(errs.get(&43), Some(&CODE_BATCH_FAILED));
+        // batch failures are non-fatal to the connection
+        s.write_all(&encode_request(&x, Tier::Exact, false, 44)).unwrap();
+        match read_frame(&mut s) {
+            Rf::Err { code, id } => {
+                assert_eq!((code, id), (CODE_BATCH_FAILED, 44));
+            }
+            Rf::Ok { .. } => panic!("failing worker cannot succeed"),
         }
         handle.stop();
     }
@@ -568,6 +917,86 @@ mod tests {
     }
 
     #[test]
+    fn streamed_reply_reconstructs_bit_identical_to_classic_reply() {
+        // 2 workers: the tree reduction and the stream's left fold have
+        // the same grouping, so the ⊎-sum of prefix + deltas must be
+        // bit-identical to the non-streamed reply of the same request
+        let coord = gain_coordinator(2);
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut rng = Rng::seed(90);
+        let x = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let sr = client_infer_stream(handle.addr, &x, Tier::Throughput, 90).unwrap();
+        assert!(sr.streamed, "throughput tier must honor the stream flag");
+        assert_eq!(sr.terms_total, 2);
+        assert_eq!(sr.deltas.len(), 1, "one delta after the prefix");
+        // prefix is worker 0's term (x·1), the delta is worker 1's (x·2)
+        for (p, v) in sr.prefix.data().iter().zip(x.data()) {
+            assert_eq!(p.to_bits(), v.to_bits());
+        }
+        let y = client_infer_tier(handle.addr, &x, Tier::Throughput).unwrap();
+        let r = sr.reconstruct();
+        assert_eq!(r.dims(), y.dims());
+        for (a, b) in r.data().iter().zip(y.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "⊎-sum must be bit-identical");
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn exact_tier_ignores_stream_flag_single_frame_reply() {
+        let coord = gain_coordinator(2);
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let mut rng = Rng::seed(91);
+        let x = Tensor::randn(&[1, 4], 1.0, &mut rng);
+        let sr = client_infer_stream(handle.addr, &x, Tier::Exact, 91).unwrap();
+        assert!(!sr.streamed, "exact tier must decline to stream");
+        assert!(sr.deltas.is_empty());
+        let y = client_infer_tier(handle.addr, &x, Tier::Exact).unwrap();
+        for (a, b) in sr.prefix.data().iter().zip(y.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "single-frame reply must be bit-identical");
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn cancel_stops_refinement_before_the_budget() {
+        // worker i sleeps (i+1)·250 ms, so terms arrive staggered and
+        // the cancel lands well before the last term
+        struct Staggered(u64);
+        impl BasisWorker for Staggered {
+            fn run(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+                std::thread::sleep(std::time::Duration::from_millis(self.0));
+                Ok(x.clone())
+            }
+        }
+        let pool = WorkerPool::new(
+            4,
+            Arc::new(|i| Box::new(Staggered(250 * (i as u64 + 1))) as Box<dyn BasisWorker>),
+        );
+        let coord = Arc::new(Coordinator::new(
+            BatcherConfig::uniform(8, 200, 64),
+            ExpansionScheduler::new(pool),
+        ));
+        let handle = serve_tcp("127.0.0.1:0", coord).unwrap();
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let mut c = StreamClient::start(handle.addr, &x, Tier::BestEffort, 92).unwrap();
+        match c.recv().unwrap() {
+            StreamEvent::Prefix { terms, .. } => assert_eq!(terms, 1),
+            other => panic!("expected the prefix first, got {other:?}"),
+        }
+        c.cancel().unwrap();
+        let end_terms = loop {
+            match c.recv().unwrap() {
+                StreamEvent::Delta { .. } => {}
+                StreamEvent::End { terms } => break terms,
+                other => panic!("unexpected frame {other:?}"),
+            }
+        };
+        assert!(end_terms < 4, "cancel must stop refinement early (got {end_terms}/4 terms)");
+        handle.stop();
+    }
+
+    #[test]
     fn trace_id_echoed_and_request_spans_recorded() {
         let rec = Arc::new(TraceRecorder::default());
         let coord = traced_coordinator(rec.clone());
@@ -578,8 +1007,8 @@ mod tests {
         assert_eq!(id, 42, "caller-supplied trace id must echo back");
         let (_, assigned) = client_infer_traced(handle.addr, &x, Tier::Exact, 0).unwrap();
         assert_ne!(assigned, 0, "trace id 0 asks the server to assign one");
-        // the Request/Reply spans land just after the reply bytes, so
-        // poll briefly for the connection thread to record them
+        // the Request/Reply/Write spans land just after the reply bytes,
+        // so poll briefly for the reactor thread to record them
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
         loop {
             let evs = rec.events_for(42);
@@ -588,6 +1017,7 @@ mod tests {
                 && has(SpanKind::Decode)
                 && has(SpanKind::Admission)
                 && has(SpanKind::Reply)
+                && has(SpanKind::Write)
             {
                 break;
             }

@@ -189,6 +189,60 @@ fn kernel_pool_grid_runs_exact_under_contention() {
     }
 }
 
+/// Producer threads race the reactor's completion queue and wake latch
+/// through a real pipe-backed waker while a consumer drains in the
+/// clear-then-drain order the reactor thread uses. Every pushed
+/// completion must surface exactly once — a lost wake or a dropped item
+/// shows up as the deadline firing, a racy handoff as a TSan report.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn wake_queue_handoff_loses_nothing_under_contention() {
+    use fp_xint::serve::reactor::{WakeQueue, Waker};
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 5_000;
+    let (waker, mut rx) = Waker::pair().expect("waker pipe");
+    let waker = Arc::new(waker);
+    let q = Arc::new(WakeQueue::new());
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            let waker = Arc::clone(&waker);
+            std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    // push-then-signal, exactly the scheduler-side order
+                    if q.push(p * PER_PRODUCER + i) {
+                        waker.signal();
+                    }
+                }
+            })
+        })
+        .collect();
+    let total = (PRODUCERS * PER_PRODUCER) as usize;
+    let mut seen = vec![false; total];
+    let mut got = 0usize;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while got < total {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "handoff stranded {} completions",
+            total - got
+        );
+        // reactor order: drain the wake pipe BEFORE the queue, so a
+        // push racing this drain re-arms the latch and signals again
+        rx.clear();
+        for v in q.drain() {
+            let idx = v as usize;
+            assert!(!seen[idx], "completion {v} delivered twice");
+            seen[idx] = true;
+            got += 1;
+        }
+    }
+    for h in producers {
+        h.join().unwrap();
+    }
+    assert!(q.drain().is_empty(), "items appeared after all producers finished");
+}
+
 /// Concurrent `observe_batch` EWMA updates: the CAS loop must not lose
 /// or fabricate samples — the final EWMA is reachable by *some*
 /// serialization of the observed occupancies, all of which are 0.5

@@ -107,6 +107,34 @@ ABSOLUTE_GATES = [
         "flight-recorder spans keep Exact p99 within 10% of the untraced run",
         lambda v: v <= 1.10,
     ),
+    # Reactor serving plane (connscale): the epoll reactor replaced the
+    # thread-per-connection server, so its closed-loop latency gates
+    # against an in-bench thread-per-conn baseline — both sides are
+    # min-over-3-interleaved-rounds p99s in the same process, so runner
+    # drift cancels and 1.10 catches a real per-request reactor cost.
+    # The open-loop scenario must actually reach connection scale (the
+    # whole point of the rewrite), and streamed BestEffort first frames
+    # must land strictly ahead of the full reply at the tail — for every
+    # request first <= full by construction, so ratio >= 1.0 means
+    # progressive refinement degenerated into a single burst.
+    (
+        "BENCH_qos.json",
+        "connscale.open_loop_conns",
+        "the open-loop harness drives at least 10k concurrent connections",
+        lambda v: v >= 10_000,
+    ),
+    (
+        "BENCH_qos.json",
+        "connscale.exact_p99_ratio",
+        "reactor closed-loop Exact p99 within 10% of the thread-per-conn baseline",
+        lambda v: v <= 1.10,
+    ),
+    (
+        "BENCH_qos.json",
+        "connscale.be_first_frame_p99_ratio",
+        "streamed BestEffort first-frame p99 lands ahead of the full-reply p99",
+        lambda v: v < 1.0,
+    ),
     # Term-budget contract (perf_budget): bit-identity and the grid-term
     # cut are deterministic, so they gate absolutely on every run. The
     # 1.5x wall-clock floor lives in MEASURED_FLOOR_GATES below: it arms

@@ -20,6 +20,11 @@ convention — and rust/vendor/ are exempt) and enforces:
   spankind-append   the SpanKind numbering is wire format (packed into
                     ring slots and exported): pinned variants keep their
                     names and discriminants; new ones append.
+  blocking-io       socket-facing code (files referencing std::net) may
+                    not call .read_exact(/.write_all( outside the
+                    blocking-client module serve/protocol.rs — one
+                    blocking call on the reactor thread stalls every
+                    connection it owns.
 
 Exit 0 when clean; exit 1 with `file:line: [rule] message` per finding.
 `--self-test` runs every rule against known-good and known-bad samples
@@ -43,8 +48,13 @@ ORDERING_RE = re.compile(r"Ordering::(Relaxed|Acquire|Release|AcqRel|SeqCst)")
 ORDERING_COMMENT = "// ordering:"
 ORDERING_WINDOW = 8
 UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
+BLOCKING_IO_RE = re.compile(r"\.read_exact\(|\.write_all\(")
+NET_RE = re.compile(r"std::net")
 
 SYNC_SHIM_FILE = "util/sync.rs"
+# the one sanctioned home for blocking socket IO: the protocol module's
+# clients (tests, CLI, the closed-loop loadgen) block by design
+BLOCKING_IO_EXEMPT = "serve/protocol.rs"
 PRINTLN_ALLOWED = {"main.rs", "util/logger.rs"}
 RATCHET_DIRS = ("serve/", "coordinator/")
 
@@ -64,6 +74,9 @@ SPANKIND_PINNED = [
     ("Reduce", 7),
     ("Reply", 8),
     ("LayerGrid", 9),
+    ("Accept", 10),
+    ("Write", 11),
+    ("Refine", 12),
 ]
 SPANKIND_VARIANT_RE = re.compile(r"^\s*(\w+)\s*=\s*(\d+)\s*,")
 
@@ -141,6 +154,24 @@ def check_unwrap_ratchet(rel, lines, cut, baseline):
     return []
 
 
+def check_blocking_io(rel, lines, cut):
+    if rel == BLOCKING_IO_EXEMPT:
+        return []
+    body = lines[:cut]
+    if not any(NET_RE.search(line) for line in body if not is_comment(line)):
+        return []
+    out = []
+    for i, line in enumerate(body):
+        if is_comment(line):
+            continue
+        if BLOCKING_IO_RE.search(line):
+            out.append((i + 1, "blocking-io",
+                        "blocking read_exact/write_all in socket-facing code "
+                        "(the reactor is nonblocking; blocking clients live in "
+                        f"{BLOCKING_IO_EXEMPT})"))
+    return out
+
+
 def parse_spankind(lines):
     variants, in_enum = [], False
     for line in lines:
@@ -193,6 +224,7 @@ def scan(baseline):
             + check_println(rel, lines, cut)
             + check_ordering_comments(rel, lines, cut)
             + check_unwrap_ratchet(rel, lines, cut, baseline)
+            + check_blocking_io(rel, lines, cut)
             + (check_spankind(lines) if rel == SPANKIND_FILE else [])
         ):
             findings.append((f"rust/src/{rel}", lineno, rule, msg))
@@ -254,6 +286,19 @@ SPANKIND_APPENDED = (
 )
 SPANKIND_RENUMBERED = SPANKIND_OK.replace("Reduce = 7", "Reduce = 11")
 SPANKIND_RENAMED = SPANKIND_OK.replace("Decode = 1", "Parse = 1")
+BAD_BLOCKING = (
+    "use std::net::TcpStream;\n"
+    'fn f(s: &mut TcpStream) { s.write_all(b"x").unwrap(); }\n'
+)
+BLOCKING_NO_NET = (
+    "use std::fs::File;\n"
+    "fn f(mut f: File, buf: &mut [u8]) { let _ = f.read_exact(buf); }\n"
+)
+TEST_GATED_BLOCKING = (
+    "use std::net::TcpStream;\n"
+    "#[cfg(test)]\n"
+    'mod tests { fn f(s: &mut std::net::TcpStream) { s.write_all(b"x").unwrap(); } }\n'
+)
 
 
 def self_test():
@@ -291,6 +336,17 @@ def self_test():
         ("ratchet scoped to hot path",
          lambda ls: check_unwrap_ratchet("tensor/a.rs", ls, len(ls), {}),
          UNWRAPPY, []),
+        ("blocking io caught", lambda ls: check_blocking_io("serve/server.rs", ls, len(ls)),
+         BAD_BLOCKING, ["blocking-io"]),
+        ("protocol module exempt",
+         lambda ls: check_blocking_io(BLOCKING_IO_EXEMPT, ls, len(ls)),
+         BAD_BLOCKING, []),
+        ("non-socket files out of scope",
+         lambda ls: check_blocking_io("tensor/io.rs", ls, len(ls)),
+         BLOCKING_NO_NET, []),
+        ("test region blocking exempt",
+         lambda ls: check_blocking_io("serve/server.rs", ls, non_test_region(ls)),
+         TEST_GATED_BLOCKING, []),
         ("spankind snapshot passes", lambda ls: check_spankind(ls), SPANKIND_OK, []),
         ("spankind append allowed", lambda ls: check_spankind(ls), SPANKIND_APPENDED, []),
         ("spankind renumber caught", lambda ls: check_spankind(ls),
