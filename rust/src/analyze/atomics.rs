@@ -1,0 +1,271 @@
+//! Pass 2 — acquire/release pairing over the `util::sync` shim.
+//!
+//! PR 7's `// ordering:` proximity lint could see that an `Ordering`
+//! had a rationale comment, but not whether a Release store actually
+//! has a paired Acquire load — the exact seqlock tearing bug that PR
+//! fixed by hand. This pass collects every atomic operation site,
+//! keyed by the receiver's field name within a file, classifies
+//! publish (Release-or-stronger store/RMW) vs consume
+//! (Acquire-or-stronger load/RMW) orderings, and checks the pairing:
+//!
+//! * `unpaired-release` — a field is published with Release but never
+//!   read with Acquire (the barrier orders nothing).
+//! * `unpaired-acquire` — a field is read with Acquire but never
+//!   published (the read synchronizes with no store).
+//! * `relaxed-load-of-published` — a published field is also read
+//!   Relaxed somewhere: that load can observe torn/stale protocol
+//!   state (the PR 7 bug class).
+//! * `relaxed-store-to-published` — a published field is also written
+//!   Relaxed: readers pairing with the Release store may still miss
+//!   this write.
+//!
+//! Grouping is per `(file, field)` — every pairing in this crate is
+//! file-local (the recorder seqlock, the reactor wake latch, the
+//! server stop flag), and a cross-file pair would rightly demand a
+//! refactor or an explicit rule update here.
+//!
+//! The pass also owns the `// ordering:` rationale rule delegated
+//! from `scripts/check_invariants.py`: every `Ordering::{Relaxed,
+//! Acquire,Release,AcqRel,SeqCst}` token needs a `// ordering:`
+//! comment on its line or within the 8 lines above. Token-level
+//! matching means string literals and `cmp::Ordering` values never
+//! trip it.
+
+use super::lexer::{LexFile, TokKind};
+use super::{Finding, Level, SourceSet};
+use std::collections::BTreeMap;
+
+const PASS: &str = "atomics";
+
+/// Same window as the python rule this pass replaces.
+const ORDERING_WINDOW: u32 = 8;
+const ORDERING_COMMENT: &str = "// ordering:";
+
+const MEM_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Atomic receiver methods and whether they store, load, or both.
+const METHODS: [(&str, bool, bool); 14] = [
+    ("load", false, true),
+    ("store", true, false),
+    ("swap", true, true),
+    ("fetch_add", true, true),
+    ("fetch_sub", true, true),
+    ("fetch_and", true, true),
+    ("fetch_or", true, true),
+    ("fetch_xor", true, true),
+    ("fetch_nand", true, true),
+    ("fetch_min", true, true),
+    ("fetch_max", true, true),
+    ("fetch_update", true, true),
+    ("compare_exchange", true, true),
+    ("compare_exchange_weak", true, true),
+];
+
+#[derive(Clone, Debug)]
+struct Site {
+    line: u32,
+    /// ordering applied to the store side (RMW: success/set ordering)
+    store_ord: Option<String>,
+    /// strongest ordering visible to the load side
+    load_ord: Option<String>,
+}
+
+fn is_publish(ord: &str) -> bool {
+    matches!(ord, "Release" | "AcqRel" | "SeqCst")
+}
+
+fn is_consume(ord: &str) -> bool {
+    matches!(ord, "Acquire" | "AcqRel" | "SeqCst")
+}
+
+/// The receiver field name of a `.method(...)` call: walking backwards
+/// from the `.`, skip one balanced `[...]`/`(...)` group, then take
+/// the identifier (or tuple index) — `self.pressure[tier.idx()].load`
+/// keys as `pressure`, `width_cap().store` as `width_cap`,
+/// `self.0.swap` as `0`.
+fn receiver_key(f: &LexFile, dot: usize) -> Option<String> {
+    let mut i = dot.checked_sub(1)?;
+    loop {
+        let t = &f.toks[i];
+        if t.is("]") || t.is(")") {
+            // skip the balanced group backwards
+            let (open, close) = if t.is("]") { ("[", "]") } else { ("(", ")") };
+            let mut depth = 0usize;
+            loop {
+                if f.toks[i].is(close) {
+                    depth += 1;
+                } else if f.toks[i].is(open) {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                i = i.checked_sub(1)?;
+            }
+            i = i.checked_sub(1)?;
+            continue;
+        }
+        if t.kind == TokKind::Ident || t.kind == TokKind::Int {
+            return Some(t.text.clone());
+        }
+        return None;
+    }
+}
+
+/// Memory orderings named inside the token range (literal
+/// `Ordering::X` mentions, in order).
+fn orderings_in(f: &LexFile, lo: usize, hi: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i + 2 < hi {
+        if f.toks[i].is_ident("Ordering")
+            && f.toks[i + 1].is("::")
+            && MEM_ORDERINGS.contains(&f.toks[i + 2].text.as_str())
+        {
+            out.push(f.toks[i + 2].text.clone());
+            i += 3;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn collect_sites(f: &LexFile) -> BTreeMap<String, Vec<Site>> {
+    let mut groups: BTreeMap<String, Vec<Site>> = BTreeMap::new();
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let Some(&(_, stores, loads)) = METHODS.iter().find(|(m, _, _)| t.is_ident(m)) else {
+            continue;
+        };
+        // shape: `. method (` — a free fn like mem::swap(a, b) is not
+        // an atomic receiver call
+        if i == 0 || !f.toks[i - 1].is(".") || !f.toks.get(i + 1).is_some_and(|n| n.is("(")) {
+            continue;
+        }
+        let Some(close) = f.matching_group(i + 1) else { continue };
+        let ords = orderings_in(f, i + 2, close);
+        if ords.is_empty() {
+            continue; // not an atomic call (Vec::swap, HashMap::get ...)
+        }
+        let Some(key) = receiver_key(f, i - 1) else { continue };
+        let strongest_load = ords.iter().find(|o| is_consume(o)).or_else(|| ords.first()).cloned();
+        groups.entry(key).or_default().push(Site {
+            line: t.line,
+            store_ord: stores.then(|| ords[0].clone()),
+            load_ord: loads.then_some(strongest_load).flatten(),
+        });
+    }
+    groups
+}
+
+fn err(out: &mut Vec<Finding>, f: &LexFile, line: u32, rule: &'static str, message: String) {
+    out.push(Finding { file: f.rel.clone(), line, pass: PASS, rule, level: Level::Error, message });
+}
+
+fn check_pairing(out: &mut Vec<Finding>, f: &LexFile) {
+    for (key, sites) in collect_sites(f) {
+        let publishes: Vec<&Site> =
+            sites.iter().filter(|s| s.store_ord.as_deref().is_some_and(is_publish)).collect();
+        let consumes: Vec<&Site> =
+            sites.iter().filter(|s| s.load_ord.as_deref().is_some_and(is_consume)).collect();
+        let relaxed_loads: Vec<&Site> =
+            sites.iter().filter(|s| s.load_ord.as_deref() == Some("Relaxed")).collect();
+        let relaxed_stores: Vec<&Site> =
+            sites.iter().filter(|s| s.store_ord.as_deref() == Some("Relaxed")).collect();
+
+        if !publishes.is_empty() && consumes.is_empty() {
+            err(
+                out,
+                f,
+                publishes[0].line,
+                "unpaired-release",
+                format!(
+                    "field `{key}` is published with Release-or-stronger but has no \
+                     Acquire-side reader in this file — the release barrier pairs with nothing"
+                ),
+            );
+        }
+        if !consumes.is_empty() && publishes.is_empty() {
+            err(
+                out,
+                f,
+                consumes[0].line,
+                "unpaired-acquire",
+                format!(
+                    "field `{key}` is read with Acquire-or-stronger but never published with \
+                     Release-or-stronger in this file — the acquire synchronizes with no store"
+                ),
+            );
+        }
+        if !publishes.is_empty() {
+            for s in relaxed_loads {
+                err(
+                    out,
+                    f,
+                    s.line,
+                    "relaxed-load-of-published",
+                    format!(
+                        "Relaxed load of `{key}`, a field published with Release — this read \
+                         can observe torn protocol state (the PR 7 seqlock bug class)"
+                    ),
+                );
+            }
+            for s in relaxed_stores {
+                err(
+                    out,
+                    f,
+                    s.line,
+                    "relaxed-store-to-published",
+                    format!(
+                        "Relaxed store to `{key}`, a field also published with Release — \
+                         readers pairing with the Release store may miss this write"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// The delegated `// ordering:` rationale rule (was
+/// `check_invariants.py` rule `ordering-comment`).
+fn check_ordering_rationale(out: &mut Vec<Finding>, f: &LexFile) {
+    let mut i = 0usize;
+    while i + 2 < f.toks.len() {
+        if f.toks[i].is_ident("Ordering")
+            && f.toks[i + 1].is("::")
+            && MEM_ORDERINGS.contains(&f.toks[i + 2].text.as_str())
+        {
+            let line = f.toks[i + 2].line;
+            if !f.comment_near(line, ORDERING_WINDOW, ORDERING_COMMENT) {
+                err(
+                    out,
+                    f,
+                    line,
+                    "ordering-comment",
+                    format!(
+                        "memory-ordering choice Ordering::{} without a '{ORDERING_COMMENT}' \
+                         rationale within {ORDERING_WINDOW} lines",
+                        f.toks[i + 2].text
+                    ),
+                );
+            }
+            i += 3;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Run pass 2 over every file in the set.
+pub fn run(set: &SourceSet) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &set.files {
+        check_pairing(&mut out, f);
+        check_ordering_rationale(&mut out, f);
+    }
+    out
+}

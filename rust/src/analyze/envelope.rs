@@ -1,0 +1,323 @@
+//! Pass 1 — the integer-overflow envelope proof, machine-checked.
+//!
+//! The kernel plane's exactness rests on an arithmetic chain that
+//! lives in comments: `INT_DOT_MAX_ABS` bounds scalar plane values so
+//! a 256-element i32 partial cannot overflow; `PACK_MAX_ABS` bounds
+//! i8 plane values so `maddubs` pair sums cannot saturate i16 and
+//! `FOLD_CHUNKS` 32-element chunks cannot overflow an i32 lane before
+//! the i64 fold. This pass re-parses those constants and accumulator
+//! shapes from source and re-derives every inequality with i128
+//! arithmetic — widening a constant (or shrinking a fold cadence)
+//! without re-establishing the proof is a finding, not a comment
+//! drift.
+
+use super::lexer::{collect_consts, seq_count, seq_find, LexFile, Tok};
+use super::{missing_file, Finding, Level, SourceSet};
+
+const PASS: &str = "envelope";
+
+pub const GEMM_FILE: &str = "xint/gemm.rs";
+pub const PACK_FILE: &str = "xint/kernel/pack.rs";
+pub const MICRO_FILE: &str = "xint/kernel/micro.rs";
+
+/// What `maddubs` pairs: two adjacent i8 products per i16 lane.
+const MADDUBS_PAIR: i128 = 2;
+/// What `madd_epi16` folds: two i16 pair sums per i32 lane.
+const MADD_LANE_PAIRS: i128 = 2;
+
+struct Ctx {
+    findings: Vec<Finding>,
+}
+
+impl Ctx {
+    fn err(&mut self, file: &str, line: u32, rule: &'static str, message: String) {
+        self.findings.push(Finding {
+            file: file.to_string(),
+            line,
+            pass: PASS,
+            rule,
+            level: Level::Error,
+            message,
+        });
+    }
+}
+
+/// Look up a const parsed from `file`, or emit a finding.
+fn want_const(
+    ctx: &mut Ctx,
+    file: &LexFile,
+    consts: &std::collections::BTreeMap<String, (i128, u32)>,
+    name: &str,
+) -> Option<(i128, u32)> {
+    match consts.get(name) {
+        Some(&v) => Some(v),
+        None => {
+            ctx.err(
+                &file.rel,
+                0,
+                "const-parse",
+                format!("could not parse `const {name}` — the envelope proof needs its value"),
+            );
+            None
+        }
+    }
+}
+
+/// The `const CHUNK` inside a named fn body.
+fn fn_chunk(ctx: &mut Ctx, file: &LexFile, fn_name: &str) -> Option<(i128, u32)> {
+    let Some((lo, hi)) = file.fn_body(fn_name, 0) else {
+        ctx.err(
+            &file.rel,
+            0,
+            "fn-shape",
+            format!("fn {fn_name} not found — the envelope proof checks its accumulator shape"),
+        );
+        return None;
+    };
+    let body = &file.toks[lo..hi];
+    let parsed = seq_find(body, 0, &["const", "CHUNK"]).and_then(|at| {
+        let eq = seq_find(body, at, &["="])?;
+        let semi = seq_find(body, eq, &[";"])?;
+        super::lexer::eval_const(&body[eq + 1..semi], &|_| None).map(|v| (v, body[at].line))
+    });
+    if parsed.is_none() {
+        ctx.err(
+            &file.rel,
+            file.toks[lo].line,
+            "const-parse",
+            format!("fn {fn_name}: could not parse `const CHUNK` — the chunk bound needs it"),
+        );
+    }
+    parsed
+}
+
+/// Structural check: the fn folds an `i32` partial into an `i64`
+/// accumulator (the shape the chunk bound licenses).
+fn check_fold_shape(ctx: &mut Ctx, file: &LexFile, fn_name: &str) {
+    let Some((lo, hi)) = file.fn_body(fn_name, 0) else {
+        ctx.err(&file.rel, 0, "fn-shape", format!("fn {fn_name} not found"));
+        return;
+    };
+    let body = &file.toks[lo..hi];
+    let line = file.toks[lo].line;
+    if seq_find(body, 0, &["partial", ":", "i32"]).is_none() {
+        ctx.err(
+            &file.rel,
+            line,
+            "fn-shape",
+            format!(
+                "fn {fn_name}: expected an `i32` chunk partial (`partial: i32`) — the chunk \
+                 bound is proved against a 32-bit accumulator"
+            ),
+        );
+    }
+    if seq_find(body, 0, &["acc", ":", "i64"]).is_none() {
+        ctx.err(
+            &file.rel,
+            line,
+            "fn-shape",
+            format!(
+                "fn {fn_name}: expected the i64 fold accumulator (`acc: i64`) — without it the \
+                 per-chunk bound does not compose across chunks"
+            ),
+        );
+    }
+}
+
+/// Structural check: the fn gates both operands through the shared
+/// envelope helper (satellite of the same proof: one assertion site).
+fn check_envelope_gate(ctx: &mut Ctx, file: &LexFile, fn_name: &str, bound: &str) {
+    let Some((lo, hi)) = file.fn_body(fn_name, 0) else {
+        return; // fn-shape already reported
+    };
+    let body = &file.toks[lo..hi];
+    if seq_find(body, 0, &["debug_assert_envelope"]).is_none()
+        || seq_find(body, 0, &[bound]).is_none()
+    {
+        ctx.err(
+            &file.rel,
+            file.toks[lo].line,
+            "envelope-gate",
+            format!(
+                "fn {fn_name}: expected a `debug_assert_envelope(.., {bound}, ..)` gate — the \
+                 overflow proof assumes inputs were checked against this bound"
+            ),
+        );
+    }
+}
+
+/// AVX2 micro-kernel structure: the fold trigger and the i64 horizontal
+/// sum must both be present, or `FOLD_CHUNKS` bounds nothing.
+fn check_avx2_fold(ctx: &mut Ctx, file: &LexFile, fn_name: &str) {
+    let Some((lo, hi)) = file.fn_body(fn_name, 0) else {
+        ctx.err(&file.rel, 0, "fn-shape", format!("fn {fn_name} not found"));
+        return;
+    };
+    let body = &file.toks[lo..hi];
+    let line = file.toks[lo].line;
+    if seq_find(body, 0, &["folds", "==", "FOLD_CHUNKS"]).is_none() {
+        ctx.err(
+            &file.rel,
+            line,
+            "fold-cadence",
+            format!(
+                "fn {fn_name}: the `folds == FOLD_CHUNKS` i64 fold trigger is missing — i32 \
+                 lanes would grow unbounded"
+            ),
+        );
+    }
+    if seq_find(body, 0, &["hsum_i32x8"]).is_none() {
+        ctx.err(
+            &file.rel,
+            line,
+            "fold-cadence",
+            format!("fn {fn_name}: no `hsum_i32x8` fold into the i64 total"),
+        );
+    }
+}
+
+fn prove(ctx: &mut Ctx, ok: bool, file: &str, line: u32, rule: &'static str, claim: String) {
+    if !ok {
+        ctx.err(file, line, rule, claim);
+    }
+}
+
+/// Run pass 1 over the set.
+pub fn run(set: &SourceSet) -> Vec<Finding> {
+    let mut ctx = Ctx { findings: Vec::new() };
+
+    let (Some(gemm), Some(pack), Some(micro)) =
+        (set.get(GEMM_FILE), set.get(PACK_FILE), set.get(MICRO_FILE))
+    else {
+        for rel in [GEMM_FILE, PACK_FILE, MICRO_FILE] {
+            if set.get(rel).is_none() {
+                ctx.findings.push(missing_file(PASS, rel));
+            }
+        }
+        return ctx.findings;
+    };
+
+    let gemm_consts = collect_consts(gemm);
+    let pack_consts = collect_consts(pack);
+    let micro_consts = collect_consts(micro);
+
+    let int_dot = want_const(&mut ctx, gemm, &gemm_consts, "INT_DOT_MAX_ABS");
+    let pack_max = want_const(&mut ctx, pack, &pack_consts, "PACK_MAX_ABS");
+    let fold_chunks = want_const(&mut ctx, micro, &micro_consts, "FOLD_CHUNKS");
+    let gemm_chunk = fn_chunk(&mut ctx, gemm, "int_dot");
+    let micro_chunk = fn_chunk(&mut ctx, micro, "dot_i8_portable");
+
+    // --- the arithmetic chain, re-derived in i128 ---------------------
+    if let (Some((d, _)), Some((p, pl))) = (int_dot, pack_max) {
+        // maddubs computes a·b as |a| · sign_a(b); sign_epi8(-128)
+        // wraps, so both operands must stay within ±127
+        prove(
+            &mut ctx,
+            p <= 127,
+            PACK_FILE,
+            pl,
+            "pack-sign-wrap",
+            format!("PACK_MAX_ABS = {p} > 127: sign_epi8(±128) wraps, the maddubs identity breaks"),
+        );
+        // each maddubs i16 lane sums MADDUBS_PAIR products of |v| ≤ p
+        prove(
+            &mut ctx,
+            MADDUBS_PAIR * p * p < (1 << 15),
+            PACK_FILE,
+            pl,
+            "pack-i16-saturate",
+            format!(
+                "maddubs pair sum bound {MADDUBS_PAIR}·{p}² = {} ≥ 2^15: i16 lanes saturate and \
+                 the dot is no longer exact",
+                MADDUBS_PAIR * p * p
+            ),
+        );
+        // the i8 fast-path envelope must be strictly inside the scalar
+        // envelope (planes that fail packing fall back to the scalar
+        // kernel, which is only exact up to INT_DOT_MAX_ABS)
+        prove(
+            &mut ctx,
+            p < d,
+            PACK_FILE,
+            pl,
+            "pack-inside-scalar",
+            format!("PACK_MAX_ABS = {p} must be strictly tighter than INT_DOT_MAX_ABS = {d}"),
+        );
+    }
+    if let (Some((d, dl)), Some((c, _))) = (int_dot, gemm_chunk) {
+        // a CHUNK-element partial of |x·y| ≤ d² products in an i32
+        prove(
+            &mut ctx,
+            d * d * c <= i32::MAX as i128,
+            GEMM_FILE,
+            dl,
+            "scalar-chunk-overflow",
+            format!(
+                "int_dot partial bound INT_DOT_MAX_ABS²·CHUNK = {d}²·{c} = {} exceeds i32::MAX \
+                 ({}) — the chunked i32 accumulation can overflow",
+                d * d * c,
+                i32::MAX
+            ),
+        );
+    }
+    if let (Some((p, pl)), Some((c, _))) = (pack_max, micro_chunk) {
+        prove(
+            &mut ctx,
+            p * p * c <= i32::MAX as i128,
+            MICRO_FILE,
+            pl,
+            "portable-chunk-overflow",
+            format!(
+                "dot_i8_portable partial bound PACK_MAX_ABS²·CHUNK = {p}²·{c} = {} exceeds \
+                 i32::MAX — the portable fold cadence is too slow",
+                p * p * c
+            ),
+        );
+    }
+    if let (Some((p, _)), Some((f, fl))) = (pack_max, fold_chunks) {
+        // per 32-element chunk each i32 lane gains MADD_LANE_PAIRS pair
+        // sums, each ≤ MADDUBS_PAIR·p²; FOLD_CHUNKS chunks accumulate
+        // before the i64 fold
+        let per_chunk = MADD_LANE_PAIRS * MADDUBS_PAIR * p * p;
+        prove(
+            &mut ctx,
+            per_chunk * f <= i32::MAX as i128,
+            MICRO_FILE,
+            fl,
+            "avx2-fold-overflow",
+            format!(
+                "AVX2 lane bound {MADD_LANE_PAIRS}·{MADDUBS_PAIR}·PACK_MAX_ABS²·FOLD_CHUNKS = \
+                 {per_chunk}·{f} = {} exceeds i32::MAX ({}) — i32 lanes overflow before the i64 \
+                 fold",
+                per_chunk * f,
+                i32::MAX
+            ),
+        );
+    }
+
+    // --- structural shape of the proofs' subjects ---------------------
+    check_fold_shape(&mut ctx, gemm, "int_dot");
+    check_fold_shape(&mut ctx, micro, "dot_i8_portable");
+    check_envelope_gate(&mut ctx, gemm, "int_dot", "INT_DOT_MAX_ABS");
+    check_envelope_gate(&mut ctx, pack, "pack", "INT_DOT_MAX_ABS");
+    check_avx2_fold(&mut ctx, micro, "dot_avx2");
+    check_avx2_fold(&mut ctx, micro, "dot4_avx2");
+
+    // pack() must still reject values above PACK_MAX_ABS (the scalar
+    // fallback gate) — the return-None comparison has to survive
+    if let Some((lo, hi)) = pack.fn_body("pack", 0) {
+        let body: &[Tok] = &pack.toks[lo..hi];
+        if seq_count(body, &["PACK_MAX_ABS"]) == 0 {
+            ctx.err(
+                PACK_FILE,
+                pack.toks[lo].line,
+                "pack-reject-gate",
+                "PackedPlane::pack no longer compares against PACK_MAX_ABS — out-of-envelope \
+                 planes would be packed instead of falling back to the scalar kernel"
+                    .to_string(),
+            );
+        }
+    }
+
+    ctx.findings
+}

@@ -1,0 +1,562 @@
+//! Hand-rolled Rust-source lexer for the [`crate::analyze`] passes.
+//!
+//! Deliberately tiny (no external deps, matching the vendored-loom
+//! pattern): it produces a flat token stream plus a separate comment
+//! list, both carrying 1-based line numbers. Matching over *tokens*
+//! rather than raw lines is what lets the passes ignore string
+//! literals and comments — the analyzer's own embedded test corpus
+//! would otherwise trip every rule it checks.
+//!
+//! The stream is cut at the file's trailing test region (everything
+//! from the first `#[cfg(test)]` / `#[cfg(all(test, ...))]` line to
+//! EOF), the same convention `scripts/check_invariants.py` uses.
+
+/// Token class. Punctuation is mostly single-char; the only fused
+/// operators are the ones passes match on (`::`, `<<`, `==`, `..`,
+/// `->`, `=>`) so `1 << 11` and `Ordering::Relaxed` stay recognizable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Int,
+    Float,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Source text (for `Str` the raw literal including quotes).
+    pub text: String,
+    /// Parsed value for `Int` tokens (suffix and `_` stripped).
+    pub val: Option<i128>,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+}
+
+/// One `//` or `/* */` comment with its starting line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    /// Comment text including the delimiter (`// ...`).
+    pub text: String,
+}
+
+/// A lexed source file, already cut at the trailing test region.
+pub struct LexFile {
+    /// Path relative to the source root, `/`-separated.
+    pub rel: String,
+    /// Non-test tokens in source order.
+    pub toks: Vec<Tok>,
+    /// Non-test comments in source order.
+    pub comments: Vec<Comment>,
+    /// 1-based line where the test region starts (`u32::MAX` if none).
+    pub cut_line: u32,
+}
+
+impl LexFile {
+    pub fn new(rel: &str, text: &str) -> LexFile {
+        let cut_line = test_cut_line(text);
+        let (mut toks, mut comments) = lex(text);
+        toks.retain(|t| t.line < cut_line);
+        comments.retain(|c| c.line < cut_line);
+        LexFile { rel: rel.to_string(), toks, comments, cut_line }
+    }
+
+    /// Find the next occurrence of a token subsequence (each pattern
+    /// element matched against `Tok::text`) at or after `from`;
+    /// returns the index of the first matched token.
+    pub fn find_seq(&self, from: usize, pat: &[&str]) -> Option<usize> {
+        seq_find(&self.toks, from, pat)
+    }
+
+    /// Count non-overlapping occurrences of a token subsequence.
+    pub fn count_seq(&self, pat: &[&str]) -> usize {
+        seq_count(&self.toks, pat)
+    }
+
+    /// Token index range of the body (`{ ... }`, exclusive of the
+    /// braces) of the first `fn name` at or after `from`.
+    pub fn fn_body(&self, name: &str, from: usize) -> Option<(usize, usize)> {
+        let mut i = from;
+        loop {
+            let at = self.find_seq(i, &["fn", name])?;
+            // guard against a longer identifier prefix match is not
+            // needed (token equality is exact); find the opening brace
+            let open = (at + 2..self.toks.len()).find(|&k| {
+                self.toks[k].is("{") || self.toks[k].is(";")
+            })?;
+            if self.toks[open].is(";") {
+                // trait method declaration without a body — keep looking
+                i = at + 2;
+                continue;
+            }
+            return self.matching_brace(open).map(|close| (open + 1, close));
+        }
+    }
+
+    /// Index of the `}` matching the `{` at `open`.
+    pub fn matching_brace(&self, open: usize) -> Option<usize> {
+        let mut depth = 0usize;
+        for (k, t) in self.toks.iter().enumerate().skip(open) {
+            if t.is("{") {
+                depth += 1;
+            } else if t.is("}") {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+        }
+        None
+    }
+
+    /// Index of the `)`/`]` matching the opener at `open`.
+    pub fn matching_group(&self, open: usize) -> Option<usize> {
+        let (o, c) = match self.toks[open].text.as_str() {
+            "(" => ("(", ")"),
+            "[" => ("[", "]"),
+            "{" => ("{", "}"),
+            _ => return None,
+        };
+        let mut depth = 0usize;
+        for (k, t) in self.toks.iter().enumerate().skip(open) {
+            if t.is(o) {
+                depth += 1;
+            } else if t.is(c) {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+        }
+        None
+    }
+
+    /// True when a comment containing `needle` sits on `line` or within
+    /// the `window` lines before it.
+    pub fn comment_near(&self, line: u32, window: u32, needle: &str) -> bool {
+        let lo = line.saturating_sub(window);
+        self.comments
+            .iter()
+            .any(|c| c.line >= lo && c.line <= line && c.text.contains(needle))
+    }
+}
+
+/// Find a token subsequence in a slice (free-standing variant of
+/// [`LexFile::find_seq`] for fn-body slices).
+pub fn seq_find(toks: &[Tok], from: usize, pat: &[&str]) -> Option<usize> {
+    if pat.is_empty() || toks.len() < pat.len() {
+        return None;
+    }
+    (from..=toks.len() - pat.len())
+        .find(|&i| pat.iter().enumerate().all(|(j, p)| toks[i + j].is(p)))
+}
+
+/// Count non-overlapping subsequence occurrences in a slice.
+pub fn seq_count(toks: &[Tok], pat: &[&str]) -> usize {
+    let mut n = 0;
+    let mut i = 0;
+    while let Some(j) = seq_find(toks, i, pat) {
+        n += 1;
+        i = j + pat.len();
+    }
+    n
+}
+
+/// 1-based line where the trailing test region starts.
+fn test_cut_line(text: &str) -> u32 {
+    for (i, line) in text.lines().enumerate() {
+        if line.starts_with("#[cfg(test)]") || line.starts_with("#[cfg(all(test") {
+            return (i + 1) as u32;
+        }
+    }
+    u32::MAX
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex the full text into (tokens, comments).
+fn lex(text: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = text.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers doc comments)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        // block comment
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 1;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 1;
+                }
+                i += 1;
+            }
+            comments.push(Comment { line: start_line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        // string literal (plain, byte, raw)
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let start = i;
+            if c == 'b' {
+                i += 1;
+            }
+            i += 1; // opening quote
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: b[start..i.min(n)].iter().collect(),
+                val: None,
+                line,
+            });
+            continue;
+        }
+        if c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') {
+            // raw string r"..." / r#"..."# (or an ident starting with r)
+            let mut j = i + 1;
+            let mut hashes = 0;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let start = i;
+                let closer = format!("\"{}", "#".repeat(hashes));
+                let rest: String = b[j + 1..].iter().collect();
+                let end = rest.find(&closer).map(|p| j + 1 + p + closer.len()).unwrap_or(n);
+                line += b[i..end.min(n)].iter().filter(|&&ch| ch == '\n').count() as u32;
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: b[start..end.min(n)].iter().collect(),
+                    val: None,
+                    line,
+                });
+                i = end;
+                continue;
+            }
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let is_char = i + 1 < n
+                && (b[i + 1] == '\\' || (i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\''));
+            if is_char {
+                let start = i;
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '\'' {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: b[start..i.min(n)].iter().collect(),
+                    val: None,
+                    line,
+                });
+            } else {
+                let start = i;
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    val: None,
+                    line,
+                });
+            }
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                val: None,
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut is_float = false;
+            if c == '0' && i + 1 < n && (b[i + 1] == 'x' || b[i + 1] == 'b' || b[i + 1] == 'o') {
+                i += 2;
+                while i < n && (b[i].is_ascii_hexdigit() || b[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                    i += 1;
+                }
+                if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                    is_float = true;
+                    i += 1;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                        i += 1;
+                    }
+                }
+            }
+            // type suffix (i8/u32/usize/f64/e-notation exponent)
+            let digits_end = i;
+            while i < n && is_ident_cont(b[i]) {
+                if b[i] == 'e' || b[i] == 'E' || b[i] == 'f' {
+                    is_float = is_float || b[i] != 'f';
+                }
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            let digits: String = b[start..digits_end].iter().filter(|&&ch| ch != '_').collect();
+            let val = if is_float {
+                None
+            } else if let Some(hex) = digits.strip_prefix("0x") {
+                i128::from_str_radix(hex, 16).ok()
+            } else if let Some(bin) = digits.strip_prefix("0b") {
+                i128::from_str_radix(bin, 2).ok()
+            } else if let Some(oct) = digits.strip_prefix("0o") {
+                i128::from_str_radix(oct, 8).ok()
+            } else {
+                digits.parse::<i128>().ok()
+            };
+            let kind = if is_float { TokKind::Float } else { TokKind::Int };
+            toks.push(Tok { kind, text, val, line });
+            continue;
+        }
+        // punctuation: fuse only the operators the passes match on
+        let two: Option<&str> = if i + 1 < n {
+            match (c, b[i + 1]) {
+                (':', ':') => Some("::"),
+                ('<', '<') => Some("<<"),
+                ('=', '=') => Some("=="),
+                ('.', '.') => Some(".."),
+                ('-', '>') => Some("->"),
+                ('=', '>') => Some("=>"),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(op) = two {
+            toks.push(Tok { kind: TokKind::Punct, text: op.to_string(), val: None, line });
+            i += 2;
+        } else {
+            toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), val: None, line });
+            i += 1;
+        }
+    }
+    (toks, comments)
+}
+
+// ---------------------------------------------------------------------
+// Const-expression evaluation (enough for the envelope/protocol consts:
+// integer literals, `<<`, `* + -`, parens, and `u32::MAX`-style paths).
+
+/// Evaluate the token slice as an integer constant expression.
+/// `consts` resolves bare identifiers (earlier consts in the file).
+pub fn eval_const(toks: &[Tok], consts: &dyn Fn(&str) -> Option<i128>) -> Option<i128> {
+    let mut p = ExprParser { toks, i: 0, consts };
+    let v = p.shift()?;
+    if p.i == toks.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+struct ExprParser<'a> {
+    toks: &'a [Tok],
+    i: usize,
+    consts: &'a dyn Fn(&str) -> Option<i128>,
+}
+
+impl ExprParser<'_> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn eat(&mut self, text: &str) -> bool {
+        if self.peek().is_some_and(|t| t.is(text)) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    // precedence (loosest first): << | + - | * | unary
+    fn shift(&mut self) -> Option<i128> {
+        let mut v = self.add()?;
+        while self.eat("<<") {
+            let r = self.add()?;
+            v = v.checked_shl(u32::try_from(r).ok()?)?;
+        }
+        Some(v)
+    }
+
+    fn add(&mut self) -> Option<i128> {
+        let mut v = self.mul()?;
+        loop {
+            if self.eat("+") {
+                v = v.checked_add(self.mul()?)?;
+            } else if self.eat("-") {
+                v = v.checked_sub(self.mul()?)?;
+            } else {
+                return Some(v);
+            }
+        }
+    }
+
+    fn mul(&mut self) -> Option<i128> {
+        let mut v = self.unary()?;
+        while self.eat("*") {
+            v = v.checked_mul(self.unary()?)?;
+        }
+        Some(v)
+    }
+
+    fn unary(&mut self) -> Option<i128> {
+        if self.eat("-") {
+            return self.unary().map(|v| -v);
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Option<i128> {
+        let t = self.peek()?.clone();
+        if t.is("(") {
+            self.i += 1;
+            let v = self.shift()?;
+            if self.eat(")") {
+                return Some(v);
+            }
+            return None;
+        }
+        if t.kind == TokKind::Int {
+            self.i += 1;
+            return t.val;
+        }
+        if t.kind == TokKind::Ident {
+            // path constant: `u32::MAX` etc., or a bare local const
+            self.i += 1;
+            if self.eat("::") {
+                let field = self.peek()?.text.clone();
+                self.i += 1;
+                return match (t.text.as_str(), field.as_str()) {
+                    ("u8", "MAX") => Some(u8::MAX as i128),
+                    ("u16", "MAX") => Some(u16::MAX as i128),
+                    ("u32", "MAX") => Some(u32::MAX as i128),
+                    ("u64", "MAX") => Some(u64::MAX as i128),
+                    ("i8", "MAX") => Some(i8::MAX as i128),
+                    ("i16", "MAX") => Some(i16::MAX as i128),
+                    ("i32", "MAX") => Some(i32::MAX as i128),
+                    ("i64", "MAX") => Some(i64::MAX as i128),
+                    _ => None,
+                };
+            }
+            return (self.consts)(&t.text);
+        }
+        None
+    }
+}
+
+/// Collect every `const NAME: TY = EXPR;` in the file (top-level and
+/// inside fn bodies alike) into a name → (value, line) map, resolving
+/// earlier consts while evaluating later ones.
+pub fn collect_consts(f: &LexFile) -> std::collections::BTreeMap<String, (i128, u32)> {
+    let mut out = std::collections::BTreeMap::new();
+    let mut i = 0usize;
+    while let Some(at) = f.find_seq(i, &["const"]) {
+        i = at + 1;
+        let Some(name_tok) = f.toks.get(at + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            continue;
+        }
+        // skip the `: TYPE` annotation up to `=`
+        let Some(eq) =
+            (at + 2..f.toks.len().min(at + 12)).find(|&k| f.toks[k].is("=") && !f.toks[k].is("=="))
+        else {
+            continue;
+        };
+        let Some(semi) = (eq + 1..f.toks.len()).find(|&k| f.toks[k].is(";")) else {
+            continue;
+        };
+        let snapshot = out.clone();
+        let lookup = move |n: &str| snapshot.get(n).map(|&(v, _)| v);
+        if let Some(v) = eval_const(&f.toks[eq + 1..semi], &lookup) {
+            out.insert(name_tok.text.clone(), (v, name_tok.line));
+        }
+        i = semi;
+    }
+    out
+}

@@ -1,0 +1,266 @@
+//! Domain-aware static analysis over the crate's own sources
+//! (`fp-xint analyze`).
+//!
+//! The correctness story of the kernel/concurrency/serving planes
+//! rests on arguments a generic linter cannot check: the SIMD fold
+//! cadence is an arithmetic claim about `FOLD_CHUNKS`, the seqlock is
+//! a pairing claim about `Ordering`s, and the wire format is a byte
+//! layout duplicated across encoder, decoder, and clients. This module
+//! regenerates those proofs from source on every run (see ANALYSIS.md
+//! for the full rule catalogue):
+//!
+//! * [`envelope`] — **pass 1**: re-derives the integer-overflow
+//!   envelope chain (`INT_DOT_MAX_ABS` / `PACK_MAX_ABS` / chunk and
+//!   fold cadences vs accumulator widths) from the parsed constants,
+//!   so changing any of them without re-establishing the proof fails.
+//! * [`atomics`] — **pass 2**: groups atomic store/load sites by field
+//!   and checks publish/consume pairing (a Release store needs an
+//!   Acquire-side reader; a published field must not be read or
+//!   written Relaxed), plus the `// ordering:` rationale rule
+//!   delegated from `scripts/check_invariants.py`.
+//! * [`protocol`] — **pass 3**: pins the wire-protocol constants and
+//!   SpanKind numbering to an append-only registry and cross-checks
+//!   the frame byte offsets at every encode/decode site (codec,
+//!   blocking clients, loadgen's open-loop decoder).
+//! * [`unsafe_audit`] — **pass 4**: exactly the two sanctioned
+//!   `#[allow(unsafe_code)]` islands, every `unsafe` block within
+//!   reach of a `// SAFETY:` comment, every `unsafe fn` documented.
+//!
+//! All passes lex with [`lexer`] (tokens, not lines, so string
+//! literals and comments can't trip rules) and skip trailing
+//! `#[cfg(test)]` regions, the same convention the python lint uses.
+//! [`selftest::run`] feeds every pass an adversarial mutated corpus
+//! and asserts each seeded bug is caught.
+
+pub mod atomics;
+pub mod envelope;
+pub mod lexer;
+pub mod protocol;
+pub mod selftest;
+pub mod unsafe_audit;
+
+use crate::util::json::Json;
+use lexer::LexFile;
+use std::path::{Path, PathBuf};
+
+/// Finding severity. Errors always fail the run; warnings fail it
+/// under `--deny warnings` (the CI mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    Warning,
+    Error,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Warning => "warning",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One analyzer finding, keyed to a file/line and a stable rule name.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the source root (e.g. `xint/kernel/micro.rs`).
+    pub file: String,
+    /// 1-based line (0 for whole-file findings).
+    pub line: u32,
+    /// Pass that produced it (`envelope`, `atomics`, `protocol`,
+    /// `unsafe`).
+    pub pass: &'static str,
+    /// Stable rule identifier within the pass.
+    pub rule: &'static str,
+    pub level: Level,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render_line(&self) -> String {
+        format!(
+            "{}:{}: {}: [{}/{}] {}",
+            self.file,
+            self.line,
+            self.level.name(),
+            self.pass,
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// The lexed source tree a run analyzes. Loadable from disk (the real
+/// crate) or from in-memory strings (the adversarial self-test corpus).
+pub struct SourceSet {
+    /// Human-readable origin for the report header.
+    pub root: String,
+    pub files: Vec<LexFile>,
+}
+
+impl SourceSet {
+    /// Lex every `*.rs` under `root` (recursively, sorted for stable
+    /// output). `root` is the crate's `src/` directory.
+    pub fn load(root: &Path) -> std::io::Result<SourceSet> {
+        let mut paths = Vec::new();
+        collect_rs(root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = std::fs::read_to_string(p)?;
+            files.push(LexFile::new(&rel, &text));
+        }
+        Ok(SourceSet { root: root.display().to_string(), files })
+    }
+
+    /// Build a set from `(rel_path, source_text)` pairs (self-test).
+    pub fn from_strings(files: &[(&str, &str)]) -> SourceSet {
+        SourceSet {
+            root: "<in-memory corpus>".to_string(),
+            files: files.iter().map(|(rel, text)| LexFile::new(rel, text)).collect(),
+        }
+    }
+
+    pub fn get(&self, rel: &str) -> Option<&LexFile> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The crate's `src/` directory, from wherever the binary was invoked
+/// (repo root or `rust/`).
+pub fn default_src_root() -> Option<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// A finding for a file a pass requires but the set does not contain —
+/// moving or deleting a checked file must not silently disarm its pass.
+pub(crate) fn missing_file(pass: &'static str, rel: &str) -> Finding {
+    Finding {
+        file: rel.to_string(),
+        line: 0,
+        pass,
+        rule: "missing-file",
+        level: Level::Error,
+        message: format!(
+            "expected source file {rel} not found — if it moved, update the analyzer pass"
+        ),
+    }
+}
+
+/// Run all four passes and return the findings sorted by location.
+pub fn run_all(set: &SourceSet) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(envelope::run(set));
+    out.extend(atomics::run(set));
+    out.extend(protocol::run(set));
+    out.extend(unsafe_audit::run(set));
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Render the machine-readable report (schema documented in
+/// ANALYSIS.md).
+pub fn render_report(set: &SourceSet, findings: &[Finding]) -> String {
+    let errors = findings.iter().filter(|f| f.level == Level::Error).count();
+    let warnings = findings.len() - errors;
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj([
+                ("file", Json::str(&f.file)),
+                ("line", Json::num(f.line as f64)),
+                ("pass", Json::str(f.pass)),
+                ("rule", Json::str(f.rule)),
+                ("level", Json::str(f.level.name())),
+                ("message", Json::str(&f.message)),
+            ])
+        })
+        .collect();
+    Json::obj([
+        ("version", Json::num(1.0)),
+        ("root", Json::str(&set.root)),
+        ("findings", Json::Arr(items)),
+        (
+            "summary",
+            Json::obj([
+                ("errors", Json::num(errors as f64)),
+                ("warnings", Json::num(warnings as f64)),
+                ("files_scanned", Json::num(set.files.len() as f64)),
+            ]),
+        ),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn real_tree() -> SourceSet {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+        SourceSet::load(&root).expect("load crate sources")
+    }
+
+    /// The acceptance gate: the unmodified tree produces zero findings.
+    #[test]
+    fn analyzer_clean_on_own_tree() {
+        let set = real_tree();
+        let findings = run_all(&set);
+        let lines: Vec<String> = findings.iter().map(|f| f.render_line()).collect();
+        assert!(findings.is_empty(), "analyzer found issues in the clean tree:\n{lines:?}");
+    }
+
+    /// Every seeded corpus mutation is caught (mirrors
+    /// `check_invariants.py --self-test`).
+    #[test]
+    fn adversarial_self_test_passes() {
+        let report = selftest::run();
+        assert!(report.failed.is_empty(), "self-test failures: {:?}", report.failed);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let set = SourceSet::from_strings(&[("a.rs", "fn main() {}\n")]);
+        let findings = vec![Finding {
+            file: "a.rs".to_string(),
+            line: 3,
+            pass: "envelope",
+            rule: "demo",
+            level: Level::Warning,
+            message: "demo finding".to_string(),
+        }];
+        let text = render_report(&set, &findings);
+        let j = Json::parse(&text).expect("valid JSON");
+        let warnings = j.get("summary").and_then(|s| s.get("warnings")).and_then(Json::as_usize);
+        assert_eq!(warnings, Some(1));
+        let arr = j.get("findings").and_then(Json::as_arr).expect("findings array");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("demo"));
+    }
+}

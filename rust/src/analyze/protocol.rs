@@ -1,0 +1,508 @@
+//! Pass 3 — wire-protocol conformance.
+//!
+//! Protocol v3's byte layout is duplicated by design: the incremental
+//! `FrameDecoder` and the encoders live in `serve/protocol.rs`, the
+//! blocking clients re-read the same offsets, and loadgen's open-loop
+//! `RespDecoder` duplicates the response layout a third time. Nothing
+//! ties those copies together except review care — this pass pins them
+//! to each other and to an append-only code registry:
+//!
+//! * `registry-pin` / `registry-append` / `registry-collision` — the
+//!   `CODE_*` / `CTRL_*` / `STREAM_*` wire constants form an
+//!   append-only registry: a pinned constant must parse to exactly its
+//!   registered value, a new family member must be registered in
+//!   [`WIRE_PINNED`], and no two codes in a family may share a value.
+//! * `frame-offset` — decoder byte offsets (`u64_at(12)` is the
+//!   request trace id, `u64_at(8)` the cancel trace id, header sizes
+//!   8/16/20/28) in both the codec and loadgen's duplicate.
+//! * `encoder-layout` — every encoder emits its fields in the
+//!   documented frame order (extracted from the `to_le_bytes` call
+//!   sequence in its body).
+//! * `client-layout` — the blocking clients read words in frame order.
+//! * `spankind-append` — `SpanKind`'s packed wire numbering (delegated
+//!   from `scripts/check_invariants.py`): pinned variants never
+//!   renumber, appended ones take the next discriminant.
+//! * `layout-local` — no `to_le_bytes`/`from_le_bytes` anywhere else
+//!   in the serving plane: frame layouts live in the codec (loadgen's
+//!   decoder being the one sanctioned copy).
+
+use super::lexer::{collect_consts, seq_count, LexFile, Tok, TokKind};
+use super::{missing_file, Finding, Level, SourceSet};
+
+const PASS: &str = "protocol";
+
+pub const PROTOCOL_FILE: &str = "serve/protocol.rs";
+pub const LOADGEN_FILE: &str = "serve/loadgen.rs";
+pub const RECORDER_FILE: &str = "obs/recorder.rs";
+
+/// Registry prefixes that form wire-code families (collision scope).
+const FAMILIES: [&str; 3] = ["CODE_", "CTRL_", "STREAM_"];
+
+/// The append-only wire-constant registry. Renumbering any entry is a
+/// protocol break; appending a code means appending here too — that is
+/// the review gate, mirroring the python lint's SpanKind flow.
+const WIRE_PINNED: [(&str, i128); 12] = [
+    ("CODE_SHED", 0),
+    ("CODE_BATCH_FAILED", 1),
+    ("CODE_MALFORMED", 2),
+    ("CONTROL_SENTINEL", 4_294_967_295),
+    ("CTRL_METRICS", 1),
+    ("CTRL_TRACE", 2),
+    ("STREAM_SENTINEL", 4_294_967_294),
+    ("STREAM_FLAG", 0x8000_0000),
+    ("STREAM_PREFIX", 0),
+    ("STREAM_DELTA", 1),
+    ("STREAM_END", 2),
+    ("MAX_ELEMS", 16_777_216),
+];
+
+/// `SpanKind`'s packed wire numbering (delegated from
+/// `check_invariants.py`, which now keeps only the text-level
+/// ratchets). Discriminants are packed into ring slots and exported —
+/// append, never reorder.
+const SPANKIND_PINNED: [(&str, i128); 13] = [
+    ("Request", 0),
+    ("Decode", 1),
+    ("Admission", 2),
+    ("QueueWait", 3),
+    ("BatchForm", 4),
+    ("Schedule", 5),
+    ("WorkerTerm", 6),
+    ("Reduce", 7),
+    ("Reply", 8),
+    ("LayerGrid", 9),
+    ("Accept", 10),
+    ("Write", 11),
+    ("Refine", 12),
+];
+
+fn err(out: &mut Vec<Finding>, file: &str, line: u32, rule: &'static str, message: String) {
+    let file = file.to_string();
+    out.push(Finding { file, line, pass: PASS, rule, level: Level::Error, message });
+}
+
+/// A named fn body with its location, for offset pinning.
+struct Scope<'a> {
+    f: &'a LexFile,
+    body: &'a [Tok],
+    line: u32,
+    name: &'a str,
+}
+
+impl<'a> Scope<'a> {
+    fn new(f: &'a LexFile, name: &'a str) -> Option<Scope<'a>> {
+        let (lo, hi) = f.fn_body(name, 0)?;
+        Some(Scope { f, body: &f.toks[lo..hi], line: f.toks[lo].line, name })
+    }
+
+    /// Require `want` occurrences of the token pattern in the body
+    /// (`exact` pins the count, otherwise it is a floor).
+    fn pin(&self, out: &mut Vec<Finding>, pat: &[&str], want: usize, exact: bool, what: &str) {
+        let got = seq_count(self.body, pat);
+        let ok = if exact { got == want } else { got >= want };
+        if !ok {
+            let mode = if exact { "exactly" } else { "at least" };
+            err(
+                out,
+                &self.f.rel,
+                self.line,
+                "frame-offset",
+                format!(
+                    "fn {}: wanted {mode} {want} of `{}` ({what}), found {got} — the frame \
+                     byte layout drifted from the documented offsets",
+                    self.name,
+                    pat.join(" ")
+                ),
+            );
+        }
+    }
+}
+
+fn check_registry(out: &mut Vec<Finding>, proto: &LexFile) {
+    let consts = collect_consts(proto);
+    for &(name, want) in &WIRE_PINNED {
+        match consts.get(name) {
+            None => err(
+                out,
+                &proto.rel,
+                0,
+                "registry-pin",
+                format!("wire constant `{name}` is missing or unparsable — it is pinned at {want}"),
+            ),
+            Some(&(got, line)) if got != want => err(
+                out,
+                &proto.rel,
+                line,
+                "registry-pin",
+                format!(
+                    "wire constant `{name}` is pinned at {want}, found {got} — codes are \
+                     append-only and never renumbered"
+                ),
+            ),
+            Some(_) => {}
+        }
+    }
+    for (name, &(v, line)) in &consts {
+        if WIRE_PINNED.iter().any(|&(p, _)| p == name) {
+            continue;
+        }
+        if let Some(fam) = FAMILIES.iter().find(|p| name.starts_with(*p)) {
+            err(
+                out,
+                &proto.rel,
+                line,
+                "registry-append",
+                format!(
+                    "new `{fam}` wire constant `{name}` = {v} is not registered — append it to \
+                     WIRE_PINNED in analyze/protocol.rs after checking its family for collisions"
+                ),
+            );
+        }
+    }
+    for fam in FAMILIES {
+        let mut seen: Vec<(&str, i128)> = Vec::new();
+        for (name, &(v, line)) in &consts {
+            if !name.starts_with(fam) {
+                continue;
+            }
+            if let Some(&(other, _)) = seen.iter().find(|&&(_, ov)| ov == v) {
+                err(
+                    out,
+                    &proto.rel,
+                    line,
+                    "registry-collision",
+                    format!("`{name}` = {v} collides with `{other}` in the {fam} family"),
+                );
+            }
+            seen.push((name, v));
+        }
+    }
+}
+
+fn check_next_frame(out: &mut Vec<Finding>, proto: &LexFile) {
+    let Some(s) = Scope::new(proto, "next_frame") else {
+        let msg = "fn next_frame not found — the decoder moved; update the analyzer".to_string();
+        err(out, &proto.rel, 0, "frame-offset", msg);
+        return;
+    };
+    s.pin(out, &["u32_at", "(", "0", ")"], 1, false, "first header word");
+    s.pin(out, &["u32_at", "(", "4", ")"], 2, false, "control code / request d at byte 4");
+    s.pin(out, &["u32_at", "(", "8", ")"], 1, false, "request tier word at byte 8");
+    s.pin(out, &["u64_at", "(", "12", ")"], 1, true, "request trace_id at bytes 12..20");
+    s.pin(out, &["u64_at", "(", "8", ")"], 1, true, "cancel trace_id at bytes 8..16");
+    s.pin(out, &["pending", "(", ")", "<", "8"], 1, false, "control header is 8 bytes");
+    s.pin(out, &["pending", "(", ")", "<", "16"], 1, false, "cancel header is 16 bytes");
+    s.pin(out, &["pending", "(", ")", "<", "20"], 2, false, "request header is 20 bytes");
+    s.pin(out, &["consume", "(", "8", ")"], 1, false, "control frame consume");
+    s.pin(out, &["consume", "(", "16", ")"], 1, false, "cancel frame consume");
+    s.pin(out, &["consume", "(", "20"], 3, false, "request header consume");
+    s.pin(out, &["STREAM_FLAG"], 1, false, "stream bit masked out of the tier word");
+}
+
+fn check_loadgen(out: &mut Vec<Finding>, lg: &LexFile) {
+    let Some(s) = Scope::new(lg, "next_event") else {
+        let msg = "fn next_event not found — loadgen's decoder moved; update the analyzer";
+        err(out, &lg.rel, 0, "frame-offset", msg.to_string());
+        return;
+    };
+    s.pin(out, &["u32_at", "(", "0", ")"], 1, false, "first header word");
+    s.pin(out, &["u32_at", "(", "4", ")"], 3, false, "kind / code / cols word at byte 4");
+    s.pin(out, &["u64_at", "(", "8", ")"], 2, true, "trace_id at bytes 8..16 (stream + reply)");
+    s.pin(out, &["u32_at", "(", "16", ")"], 2, false, "stream rows / failure len at byte 16");
+    s.pin(out, &["u32_at", "(", "20", ")"], 1, false, "stream cols at byte 20");
+    s.pin(out, &["have", "(", "16", ")"], 1, false, "classic header is 16 bytes");
+    s.pin(out, &["have", "(", "28", ")"], 1, false, "stream data header is 28 bytes");
+    s.pin(out, &["consume", "(", "20", ")"], 2, false, "shed / stream-end consume");
+    if lg.count_seq(&["start", "+", "12", "..", "start", "+", "20"]) != 1 {
+        err(
+            out,
+            &lg.rel,
+            0,
+            "frame-offset",
+            "open-loop sender no longer stamps trace_id at request bytes 12..20".to_string(),
+        );
+    }
+}
+
+fn int_text(t: &Tok) -> String {
+    t.val.map(|v| v.to_string()).unwrap_or_else(|| t.text.clone())
+}
+
+/// Index of the `(` matching the `)` at `close`, scanning backwards.
+fn matching_open(body: &[Tok], close: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = close;
+    loop {
+        if body[j].is(")") {
+            depth += 1;
+        } else if body[j].is("(") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j = j.checked_sub(1)?;
+    }
+}
+
+/// The field a `.to_le_bytes()` call serializes, walking back from the
+/// token before the dot: through method-call chains (`tier.as_u32()` →
+/// `tier`), into one parenthesized cast group (`(rows as u32)` →
+/// `rows`), or the bare identifier / integer literal itself.
+fn le_source(body: &[Tok], start: usize) -> Option<String> {
+    let mut j = start;
+    loop {
+        let t = &body[j];
+        if t.is(")") {
+            let open = matching_open(body, j)?;
+            if open > 0 && body[open - 1].kind == TokKind::Ident {
+                // a call `name(..)`: keep walking its receiver chain
+                j = open - 1;
+                if j >= 2 && body[j - 1].is(".") {
+                    j -= 2;
+                    continue;
+                }
+                return Some(body[j].text.clone());
+            }
+            // a parenthesized expression: first ident/int inside
+            return body[open + 1..j].iter().find_map(|t| match t.kind {
+                TokKind::Ident => Some(t.text.clone()),
+                TokKind::Int => Some(int_text(t)),
+                _ => None,
+            });
+        }
+        return match t.kind {
+            TokKind::Ident => Some(t.text.clone()),
+            TokKind::Int => Some(int_text(t)),
+            _ => None,
+        };
+    }
+}
+
+/// Source-order list of fields serialized by `.to_le_bytes()` calls.
+fn le_fields(body: &[Tok]) -> Vec<String> {
+    let mut out = Vec::new();
+    for k in 0..body.len() {
+        if body[k].is_ident("to_le_bytes") && k >= 2 && body[k - 1].is(".") {
+            if let Some(src) = le_source(body, k - 2) {
+                out.push(src);
+            }
+        }
+    }
+    out
+}
+
+fn check_encoder(out: &mut Vec<Finding>, proto: &LexFile, name: &str, want: &[&str]) {
+    let Some(s) = Scope::new(proto, name) else {
+        err(out, &proto.rel, 0, "encoder-layout", format!("fn {name} not found"));
+        return;
+    };
+    let got = le_fields(s.body);
+    let got_refs: Vec<&str> = got.iter().map(String::as_str).collect();
+    if got_refs != want {
+        err(
+            out,
+            &proto.rel,
+            s.line,
+            "encoder-layout",
+            format!(
+                "fn {name}: `to_le_bytes` field order is [{}] but the documented frame order \
+                 is [{}] — encoder and frame doc drifted apart",
+                got.join(", "),
+                want.join(", ")
+            ),
+        );
+    }
+}
+
+fn check_encoders(out: &mut Vec<Finding>, proto: &LexFile) {
+    check_encoder(out, proto, "encode_request", &["n", "d", "tw", "trace_id", "v"]);
+    check_encoder(out, proto, "encode_response_rows", &["rows", "cols", "trace_id", "v"]);
+    check_encoder(out, proto, "encode_error", &["0", "code", "trace_id"]);
+    check_encoder(out, proto, "encode_failure", &["bytes"]);
+    check_encoder(out, proto, "encode_control", &["CONTROL_SENTINEL", "code"]);
+    check_encoder(out, proto, "encode_control_reply", &["bytes"]);
+    check_encoder(out, proto, "encode_cancel", &["STREAM_SENTINEL", "0", "trace_id"]);
+    check_encoder(
+        out,
+        proto,
+        "encode_stream_data",
+        &["STREAM_SENTINEL", "kind", "trace_id", "rows", "cols", "terms", "v"],
+    );
+    check_encoder(
+        out,
+        proto,
+        "encode_stream_end",
+        &["STREAM_SENTINEL", "STREAM_END", "trace_id", "terms"],
+    );
+    // the error-frame wrappers must delegate with their pinned code
+    for (name, code) in [("encode_shed", "CODE_SHED"), ("encode_failure", "CODE_BATCH_FAILED")] {
+        let Some(s) = Scope::new(proto, name) else {
+            err(out, &proto.rel, 0, "encoder-layout", format!("fn {name} not found"));
+            continue;
+        };
+        if seq_count(s.body, &["encode_error", "(", code]) == 0 {
+            err(
+                out,
+                &proto.rel,
+                s.line,
+                "encoder-layout",
+                format!("fn {name}: expected delegation to `encode_error({code}, ..)`"),
+            );
+        }
+    }
+}
+
+/// Blocking-read signature of a fn body: the `read_u32` / `read_u64` /
+/// `read_f32s` calls in source order, shortened to their word kinds.
+fn read_signature(body: &[Tok]) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    for t in body {
+        match t.text.as_str() {
+            "read_u32" => parts.push("u32"),
+            "read_u64" => parts.push("u64"),
+            "read_f32s" => parts.push("f32s"),
+            _ => {}
+        }
+    }
+    parts.join(" ")
+}
+
+fn check_client(out: &mut Vec<Finding>, proto: &LexFile, name: &str, want: &str) {
+    let Some(s) = Scope::new(proto, name) else {
+        err(out, &proto.rel, 0, "client-layout", format!("fn {name} not found"));
+        return;
+    };
+    let got = read_signature(s.body);
+    if got != want {
+        err(
+            out,
+            &proto.rel,
+            s.line,
+            "client-layout",
+            format!(
+                "fn {name}: blocking read sequence `{got}` does not match the frame layout \
+                 `{want}` — client and decoder drifted apart"
+            ),
+        );
+    }
+}
+
+fn check_clients(out: &mut Vec<Finding>, proto: &LexFile) {
+    check_client(out, proto, "read_reply", "u32 u32 u64 f32s");
+    check_client(out, proto, "recv", "u32 u32 u64 u32 u32 u32 u32 f32s u32 u64 f32s");
+}
+
+/// Parse `Name = <int>` variants of the enum whose `enum` keyword sits
+/// at token index `at`.
+fn enum_discriminants(f: &LexFile, at: usize) -> Option<Vec<(String, i128, u32)>> {
+    let open = (at + 2..f.toks.len()).find(|&k| f.toks[k].is("{"))?;
+    let close = f.matching_brace(open)?;
+    let mut vars = Vec::new();
+    let mut i = open + 1;
+    while i + 2 < close {
+        if f.toks[i].kind == TokKind::Ident
+            && f.toks[i + 1].is("=")
+            && f.toks[i + 2].kind == TokKind::Int
+        {
+            vars.push((f.toks[i].text.clone(), f.toks[i + 2].val.unwrap_or(-1), f.toks[i].line));
+            i += 3;
+        } else {
+            i += 1;
+        }
+    }
+    Some(vars)
+}
+
+fn check_spankind(out: &mut Vec<Finding>, rec: &LexFile) {
+    let Some(at) = rec.find_seq(0, &["enum", "SpanKind"]) else {
+        let msg = "enum SpanKind not found — the packed wire numbering is unchecked".to_string();
+        err(out, &rec.rel, 0, "spankind-append", msg);
+        return;
+    };
+    let Some(vars) = enum_discriminants(rec, at) else {
+        err(out, &rec.rel, 0, "spankind-append", "cannot parse SpanKind variants".to_string());
+        return;
+    };
+    for (idx, &(name, disc)) in SPANKIND_PINNED.iter().enumerate() {
+        match vars.get(idx) {
+            Some((got, gd, _)) if got == name && *gd == disc => {}
+            Some((got, gd, line)) => err(
+                out,
+                &rec.rel,
+                *line,
+                "spankind-append",
+                format!(
+                    "SpanKind[{idx}] is pinned as `{name} = {disc}`, found `{got} = {gd}` — \
+                     the packed wire numbering is append-only; never renumber or reorder"
+                ),
+            ),
+            None => err(
+                out,
+                &rec.rel,
+                0,
+                "spankind-append",
+                format!("pinned SpanKind variant `{name} = {disc}` is missing"),
+            ),
+        }
+    }
+    for (idx, (name, disc, line)) in vars.iter().enumerate().skip(SPANKIND_PINNED.len()) {
+        if *disc != idx as i128 {
+            err(
+                out,
+                &rec.rel,
+                *line,
+                "spankind-append",
+                format!(
+                    "appended SpanKind variant `{name}` must take the next discriminant \
+                     ({idx}), found {disc} — then pin it in analyze/protocol.rs"
+                ),
+            );
+        }
+    }
+}
+
+fn check_layout_local(out: &mut Vec<Finding>, set: &SourceSet) {
+    for f in &set.files {
+        if !f.rel.starts_with("serve/") || f.rel == PROTOCOL_FILE || f.rel == LOADGEN_FILE {
+            continue;
+        }
+        for t in &f.toks {
+            if t.is_ident("to_le_bytes") || t.is_ident("from_le_bytes") {
+                err(
+                    out,
+                    &f.rel,
+                    t.line,
+                    "layout-local",
+                    "byte-layout call in the serving plane outside serve/protocol.rs — frame \
+                     layouts live in the codec (loadgen's decoder is the one sanctioned copy)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Run pass 3 over the set.
+pub fn run(set: &SourceSet) -> Vec<Finding> {
+    let mut out = Vec::new();
+    match set.get(PROTOCOL_FILE) {
+        Some(proto) => {
+            check_registry(&mut out, proto);
+            check_next_frame(&mut out, proto);
+            check_encoders(&mut out, proto);
+            check_clients(&mut out, proto);
+        }
+        None => out.push(missing_file(PASS, PROTOCOL_FILE)),
+    }
+    match set.get(LOADGEN_FILE) {
+        Some(lg) => check_loadgen(&mut out, lg),
+        None => out.push(missing_file(PASS, LOADGEN_FILE)),
+    }
+    match set.get(RECORDER_FILE) {
+        Some(rec) => check_spankind(&mut out, rec),
+        None => out.push(missing_file(PASS, RECORDER_FILE)),
+    }
+    check_layout_local(&mut out, set);
+    out
+}

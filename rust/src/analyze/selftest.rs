@@ -1,0 +1,413 @@
+//! Adversarial self-test: seed each bug class the analyzer exists to
+//! catch into a copy of the real tree and assert the right rule fires.
+//!
+//! This is the analyzer's analogue of `check_invariants.py
+//! --self-test`: a checker whose rules silently stopped matching is
+//! worse than no checker, so every pass gets a corpus of mutations —
+//! a shrunk fold cadence, a weakened `Ordering`, a drifted wire
+//! offset, a new unsafe island, a renumbered frame code — built by
+//! string surgery on the actual sources (so corpus rot shows up as an
+//! anchor failure, not a vacuous pass). Case 0 is the clean tree
+//! itself: zero findings, the acceptance gate.
+//!
+//! Run via `fp-xint analyze --self-test` (CI does) or the
+//! `adversarial_self_test_passes` unit test.
+
+use super::{run_all, SourceSet};
+use std::path::{Path, PathBuf};
+
+/// Self-test outcome: how many checks ran and which failed.
+pub struct Report {
+    pub total: usize,
+    pub failed: Vec<String>,
+}
+
+enum Mutation {
+    /// Replace the first occurrence of `find` in `file`.
+    Replace { file: &'static str, find: &'static str, replace: &'static str },
+    /// Add a file that does not exist in the real tree.
+    AddFile { rel: &'static str, text: &'static str },
+}
+
+struct Case {
+    name: &'static str,
+    mutation: Mutation,
+    expect_file: &'static str,
+    expect_rule: &'static str,
+}
+
+const MICRO: &str = "xint/kernel/micro.rs";
+const GEMM: &str = "xint/gemm.rs";
+const PACK: &str = "xint/kernel/pack.rs";
+const RECORDER: &str = "obs/recorder.rs";
+const SERVER: &str = "serve/server.rs";
+const CONN: &str = "serve/conn.rs";
+const PROTOCOL: &str = "serve/protocol.rs";
+const LOADGEN: &str = "serve/loadgen.rs";
+
+static CASES: &[Case] = &[
+    // --- pass 1: envelope -------------------------------------------
+    Case {
+        name: "fold-cadence-shrunk",
+        mutation: Mutation::Replace {
+            file: MICRO,
+            find: "const FOLD_CHUNKS: usize = 4096;",
+            replace: "const FOLD_CHUNKS: usize = 65536;",
+        },
+        expect_file: MICRO,
+        expect_rule: "avx2-fold-overflow",
+    },
+    Case {
+        name: "scalar-envelope-widened",
+        mutation: Mutation::Replace {
+            file: GEMM,
+            find: "pub const INT_DOT_MAX_ABS: i32 = 1 << 11;",
+            replace: "pub const INT_DOT_MAX_ABS: i32 = 1 << 14;",
+        },
+        expect_file: GEMM,
+        expect_rule: "scalar-chunk-overflow",
+    },
+    Case {
+        name: "pack-envelope-widened",
+        mutation: Mutation::Replace {
+            file: PACK,
+            find: "pub const PACK_MAX_ABS: i32 = 127;",
+            replace: "pub const PACK_MAX_ABS: i32 = 181;",
+        },
+        expect_file: PACK,
+        expect_rule: "pack-i16-saturate",
+    },
+    Case {
+        name: "scalar-chunk-widened",
+        mutation: Mutation::Replace {
+            file: GEMM,
+            find: "const CHUNK: usize = 256;",
+            replace: "const CHUNK: usize = 1 << 20;",
+        },
+        expect_file: GEMM,
+        expect_rule: "scalar-chunk-overflow",
+    },
+    Case {
+        name: "fold-trigger-weakened",
+        mutation: Mutation::Replace {
+            file: MICRO,
+            find: "if folds == FOLD_CHUNKS {",
+            replace: "if folds >= FOLD_CHUNKS {",
+        },
+        expect_file: MICRO,
+        expect_rule: "fold-cadence",
+    },
+    Case {
+        name: "envelope-gate-dropped",
+        mutation: Mutation::Replace {
+            file: PACK,
+            find: "debug_assert_envelope(plane",
+            replace: "skip_envelope_gate(plane",
+        },
+        expect_file: PACK,
+        expect_rule: "envelope-gate",
+    },
+    // --- pass 2: atomics --------------------------------------------
+    Case {
+        name: "seqlock-publish-relaxed",
+        mutation: Mutation::Replace {
+            file: RECORDER,
+            find: "slot.seq.store(2 * n + 2, Ordering::Release);",
+            replace: "slot.seq.store(2 * n + 2, Ordering::Relaxed);",
+        },
+        expect_file: RECORDER,
+        expect_rule: "relaxed-store-to-published",
+    },
+    Case {
+        name: "seqlock-read-relaxed",
+        mutation: Mutation::Replace {
+            file: RECORDER,
+            find: "let s1 = slot.seq.load(Ordering::Acquire);",
+            replace: "let s1 = slot.seq.load(Ordering::Relaxed);",
+        },
+        expect_file: RECORDER,
+        expect_rule: "relaxed-load-of-published",
+    },
+    Case {
+        name: "stop-flag-reader-removed",
+        mutation: Mutation::Replace {
+            file: SERVER,
+            find: "if self.stop.load(Ordering::SeqCst) {",
+            replace: "if self.stop_requested() {",
+        },
+        expect_file: SERVER,
+        expect_rule: "unpaired-release",
+    },
+    Case {
+        name: "ordering-rationale-dropped",
+        mutation: Mutation::Replace {
+            file: CONN,
+            find: "// ordering: Relaxed — lone advisory stop flag polled by",
+            replace: "// note: Relaxed — lone advisory stop flag polled by",
+        },
+        expect_file: CONN,
+        expect_rule: "ordering-comment",
+    },
+    // --- pass 3: protocol -------------------------------------------
+    Case {
+        name: "request-trace-offset-drift",
+        mutation: Mutation::Replace {
+            file: PROTOCOL,
+            find: "let trace_id = self.u64_at(12);",
+            replace: "let trace_id = self.u64_at(13);",
+        },
+        expect_file: PROTOCOL,
+        expect_rule: "frame-offset",
+    },
+    Case {
+        name: "loadgen-trace-offset-drift",
+        mutation: Mutation::Replace {
+            file: LOADGEN,
+            find: "let trace_id = self.u64_at(8);",
+            replace: "let trace_id = self.u64_at(9);",
+        },
+        expect_file: LOADGEN,
+        expect_rule: "frame-offset",
+    },
+    Case {
+        name: "frame-code-renumbered",
+        mutation: Mutation::Replace {
+            file: PROTOCOL,
+            find: "pub const CODE_MALFORMED: u32 = 2;",
+            replace: "pub const CODE_MALFORMED: u32 = 3;",
+        },
+        expect_file: PROTOCOL,
+        expect_rule: "registry-pin",
+    },
+    Case {
+        name: "frame-code-unregistered",
+        mutation: Mutation::Replace {
+            file: PROTOCOL,
+            find: "pub const CODE_MALFORMED: u32 = 2;",
+            replace: "pub const CODE_MALFORMED: u32 = 2;\npub const CODE_RETRY: u32 = 7;",
+        },
+        expect_file: PROTOCOL,
+        expect_rule: "registry-append",
+    },
+    Case {
+        name: "encoder-fields-swapped",
+        mutation: Mutation::Replace {
+            file: PROTOCOL,
+            find: "    out.extend_from_slice(&tw.to_le_bytes());\n    \
+                   out.extend_from_slice(&trace_id.to_le_bytes());",
+            replace: "    out.extend_from_slice(&trace_id.to_le_bytes());\n    \
+                      out.extend_from_slice(&tw.to_le_bytes());",
+        },
+        expect_file: PROTOCOL,
+        expect_rule: "encoder-layout",
+    },
+    Case {
+        name: "client-skips-trace-word",
+        mutation: Mutation::Replace {
+            file: PROTOCOL,
+            find: "let echoed = read_u64(s)?;",
+            replace: "let echoed = 0u64;",
+        },
+        expect_file: PROTOCOL,
+        expect_rule: "client-layout",
+    },
+    Case {
+        name: "spankind-renumbered",
+        mutation: Mutation::Replace {
+            file: RECORDER,
+            find: "Reduce = 7,",
+            replace: "Reduce = 11,",
+        },
+        expect_file: RECORDER,
+        expect_rule: "spankind-append",
+    },
+    Case {
+        name: "layout-call-outside-codec",
+        mutation: Mutation::AddFile {
+            rel: "serve/raw.rs",
+            text: "pub fn stamp(out: &mut Vec<u8>, id: u64) {\n    \
+                   out.extend_from_slice(&id.to_le_bytes());\n}\n",
+        },
+        expect_file: "serve/raw.rs",
+        expect_rule: "layout-local",
+    },
+    // --- pass 4: unsafe ---------------------------------------------
+    Case {
+        name: "third-unsafe-island",
+        mutation: Mutation::AddFile {
+            rel: "util/fastmem.rs",
+            text: "#[allow(unsafe_code)]\npub mod fast {}\n",
+        },
+        expect_file: "util/fastmem.rs",
+        expect_rule: "unsanctioned-island",
+    },
+    Case {
+        name: "safety-comment-dropped",
+        mutation: Mutation::Replace {
+            file: MICRO,
+            find: "// SAFETY: AVX2 presence just verified; slices are equal",
+            replace: "// NB: AVX2 presence just verified; slices are equal",
+        },
+        expect_file: MICRO,
+        expect_rule: "missing-safety-comment",
+    },
+    Case {
+        name: "safety-doc-dropped",
+        mutation: Mutation::Replace {
+            file: MICRO,
+            find: "    /// # Safety\n    /// Caller must have verified AVX2 support.\n",
+            replace: "",
+        },
+        expect_file: MICRO,
+        expect_rule: "missing-safety-doc",
+    },
+    Case {
+        name: "crate-deny-dropped",
+        mutation: Mutation::Replace {
+            file: "lib.rs",
+            find: "#![deny(unsafe_code)]",
+            replace: "#![allow(unsafe_code)]",
+        },
+        expect_file: "lib.rs",
+        expect_rule: "deny-missing",
+    },
+];
+
+/// Pass-2 corpus that needs no mutation of the real tree: a Release
+/// publisher whose only reader is Relaxed (the PR 7 seqlock bug, in
+/// miniature) — both `unpaired-release` and `relaxed-load-of-published`
+/// must fire.
+const UNPAIRED_RELEASE_CORPUS: &str = r#"
+use crate::util::sync::atomic::{AtomicU32, Ordering};
+pub struct W {
+    seq: AtomicU32,
+}
+impl W {
+    pub fn publish(&self) {
+        // ordering: Release — publishes the slot to readers.
+        self.seq.store(1, Ordering::Release);
+    }
+    pub fn peek(&self) -> u32 {
+        // ordering: Relaxed — (seeded bug) reads the published slot.
+        self.seq.load(Ordering::Relaxed)
+    }
+}
+"#;
+
+/// Pass-2 corpus: an Acquire reader with no publisher anywhere.
+const UNPAIRED_ACQUIRE_CORPUS: &str = r#"
+use crate::util::sync::atomic::{AtomicU32, Ordering};
+pub struct W {
+    flag: AtomicU32,
+}
+impl W {
+    pub fn wait(&self) -> u32 {
+        // ordering: Acquire — pairs with a publisher that is gone.
+        self.flag.load(Ordering::Acquire)
+    }
+}
+"#;
+
+fn load_texts(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut paths = Vec::new();
+    super::collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        out.push((rel, std::fs::read_to_string(p)?));
+    }
+    Ok(out)
+}
+
+fn set_from(texts: &[(String, String)]) -> SourceSet {
+    let refs: Vec<(&str, &str)> = texts.iter().map(|(r, t)| (r.as_str(), t.as_str())).collect();
+    SourceSet::from_strings(&refs)
+}
+
+fn run_case(texts: &[(String, String)], case: &Case, failed: &mut Vec<String>) {
+    let mut mutated = texts.to_vec();
+    match &case.mutation {
+        Mutation::Replace { file, find, replace } => {
+            let Some(entry) = mutated.iter_mut().find(|(r, _)| r.as_str() == *file) else {
+                failed.push(format!("{}: corpus file {file} missing from the tree", case.name));
+                return;
+            };
+            if !entry.1.contains(find) {
+                failed.push(format!(
+                    "{}: mutation anchor not found in {file}: {find:?} — the corpus rotted; \
+                     update the self-test",
+                    case.name
+                ));
+                return;
+            }
+            entry.1 = entry.1.replacen(find, replace, 1);
+        }
+        Mutation::AddFile { rel, text } => mutated.push((rel.to_string(), text.to_string())),
+    }
+    let findings = run_all(&set_from(&mutated));
+    if !findings.iter().any(|f| f.file == case.expect_file && f.rule == case.expect_rule) {
+        let got: Vec<String> = findings.iter().map(|f| f.render_line()).collect();
+        failed.push(format!(
+            "{}: seeded bug not caught — expected a `{}` finding in {}, got {got:?}",
+            case.name, case.expect_rule, case.expect_file
+        ));
+    }
+}
+
+fn run_synthetic(failed: &mut Vec<String>, total: &mut usize) {
+    let set = SourceSet::from_strings(&[("sync/demo_release.rs", UNPAIRED_RELEASE_CORPUS)]);
+    let findings = super::atomics::run(&set);
+    for rule in ["unpaired-release", "relaxed-load-of-published"] {
+        *total += 1;
+        if !findings.iter().any(|f| f.rule == rule) {
+            failed.push(format!("synthetic release corpus: expected a `{rule}` finding"));
+        }
+    }
+    let set = SourceSet::from_strings(&[("sync/demo_acquire.rs", UNPAIRED_ACQUIRE_CORPUS)]);
+    let findings = super::atomics::run(&set);
+    *total += 1;
+    if !findings.iter().any(|f| f.rule == "unpaired-acquire") {
+        failed.push("synthetic acquire corpus: expected an `unpaired-acquire` finding".to_string());
+    }
+}
+
+/// Run the whole corpus against the real tree. Errors loading the tree
+/// are reported as failures, not panics, so `--self-test` exits 1 with
+/// a message instead of aborting.
+pub fn run() -> Report {
+    let mut failed = Vec::new();
+    let mut total = 0usize;
+
+    let root = super::default_src_root()
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+    let texts = match load_texts(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            failed.push(format!("cannot load crate sources under {}: {e}", root.display()));
+            return Report { total: 1, failed };
+        }
+    };
+
+    // case 0: the unmutated tree is clean (the acceptance gate)
+    total += 1;
+    let findings = run_all(&set_from(&texts));
+    if !findings.is_empty() {
+        let got: Vec<String> = findings.iter().map(|f| f.render_line()).collect();
+        failed.push(format!("clean tree: expected zero findings, got {got:?}"));
+    }
+
+    for case in CASES {
+        total += 1;
+        run_case(&texts, case, &mut failed);
+    }
+    run_synthetic(&mut failed, &mut total);
+
+    Report { total, failed }
+}

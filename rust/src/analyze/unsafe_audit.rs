@@ -1,0 +1,138 @@
+//! Pass 4 — the unsafe audit.
+//!
+//! `lib.rs` carries `#![deny(unsafe_code)]` with exactly two sanctioned
+//! `#[allow(unsafe_code)]` islands: the reactor's epoll FFI shim and
+//! the AVX2 micro-kernel. This pass machine-checks that story:
+//!
+//! * `deny-missing` — `lib.rs` must keep the crate-wide deny.
+//! * `unsanctioned-island` — an `#[allow(unsafe_code)]` (or any
+//!   `unsafe` token at all) outside [`SANCTIONED`] means a third
+//!   island appeared; add it here only after review.
+//! * `missing-safety-comment` — every `unsafe {` block needs a
+//!   `// SAFETY:` comment on its line or just above it.
+//! * `missing-safety-doc` — every `unsafe fn` needs a `# Safety`
+//!   section in its doc comment.
+
+use super::{missing_file, Finding, Level, SourceSet};
+
+const PASS: &str = "unsafe";
+
+/// The two sanctioned `#[allow(unsafe_code)]` modules. Growing this
+/// list is a deliberate review decision, same as the python lint's
+/// island registry before it.
+pub const SANCTIONED: [&str; 2] = ["serve/reactor.rs", "xint/kernel/micro.rs"];
+
+const LIB_FILE: &str = "lib.rs";
+const SAFETY_COMMENT: &str = "// SAFETY:";
+const SAFETY_DOC: &str = "# Safety";
+/// `// SAFETY:` must sit on the unsafe block's line or this close above.
+const COMMENT_WINDOW: u32 = 3;
+/// `# Safety` doc lines sit above the attribute stack, so wider reach.
+const DOC_WINDOW: u32 = 8;
+
+fn err(out: &mut Vec<Finding>, file: &str, line: u32, rule: &'static str, message: String) {
+    let file = file.to_string();
+    out.push(Finding { file, line, pass: PASS, rule, level: Level::Error, message });
+}
+
+/// Run pass 4 over the set.
+pub fn run(set: &SourceSet) -> Vec<Finding> {
+    let mut out = Vec::new();
+    match set.get(LIB_FILE) {
+        Some(lib) => {
+            if lib.find_seq(0, &["deny", "(", "unsafe_code"]).is_none() {
+                err(
+                    &mut out,
+                    &lib.rel,
+                    0,
+                    "deny-missing",
+                    "lib.rs no longer carries #![deny(unsafe_code)] — the two-island policy \
+                     rests on the crate-wide deny"
+                        .to_string(),
+                );
+            }
+        }
+        None => out.push(missing_file(PASS, LIB_FILE)),
+    }
+    for f in &set.files {
+        let sanctioned = SANCTIONED.contains(&f.rel.as_str());
+        // allow(unsafe_code) outside a sanctioned island
+        if !sanctioned && f.rel != LIB_FILE {
+            let mut from = 0usize;
+            while let Some(at) = f.find_seq(from, &["allow", "(", "unsafe_code"]) {
+                err(
+                    &mut out,
+                    &f.rel,
+                    f.toks[at].line,
+                    "unsanctioned-island",
+                    format!(
+                        "#[allow(unsafe_code)] outside the sanctioned islands ({}) — a new \
+                         island is a review decision; register it in analyze/unsafe_audit.rs",
+                        SANCTIONED.join(", ")
+                    ),
+                );
+                from = at + 3;
+            }
+        }
+        for (i, t) in f.toks.iter().enumerate() {
+            if !t.is_ident("unsafe") {
+                continue;
+            }
+            if !sanctioned {
+                err(
+                    &mut out,
+                    &f.rel,
+                    t.line,
+                    "unsanctioned-island",
+                    format!(
+                        "`unsafe` outside the sanctioned islands ({})",
+                        SANCTIONED.join(", ")
+                    ),
+                );
+                continue;
+            }
+            match f.toks.get(i + 1) {
+                Some(n) if n.is("{") => {
+                    if !f.comment_near(t.line, COMMENT_WINDOW, SAFETY_COMMENT) {
+                        err(
+                            &mut out,
+                            &f.rel,
+                            t.line,
+                            "missing-safety-comment",
+                            format!(
+                                "unsafe block without a `{SAFETY_COMMENT}` comment on the \
+                                 line or within {COMMENT_WINDOW} lines above"
+                            ),
+                        );
+                    }
+                }
+                Some(n) if n.is_ident("fn") => {
+                    if !f.comment_near(t.line, DOC_WINDOW, SAFETY_DOC) {
+                        err(
+                            &mut out,
+                            &f.rel,
+                            t.line,
+                            "missing-safety-doc",
+                            format!(
+                                "unsafe fn without a `{SAFETY_DOC}` doc section within \
+                                 {DOC_WINDOW} lines above"
+                            ),
+                        );
+                    }
+                }
+                _ => {
+                    err(
+                        &mut out,
+                        &f.rel,
+                        t.line,
+                        "unsafe-shape",
+                        "`unsafe` not followed by `{` or `fn` — unsafe trait/impl is not \
+                         used in this crate; extend the audit if that changes"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+    out
+}

@@ -31,6 +31,7 @@
 // (CONCURRENCY.md), not by unsafe cleverness — keep it that way.
 #![deny(unsafe_code)]
 
+pub mod analyze;
 pub mod baselines;
 pub mod bench_support;
 pub mod coordinator;

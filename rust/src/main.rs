@@ -8,6 +8,9 @@
 //!   metrics   — scrape a running server's metrics exposition (--addr)
 //!   trace     — dump a running server's flight recorder as Chrome-trace
 //!               JSON (--addr, --out; open the file in Perfetto)
+//!   analyze   — run the domain-aware static analyzer over the crate's
+//!               own sources (see ANALYSIS.md; --self-test, --deny
+//!               warnings, --src DIR, --out FILE)
 
 use fp_xint::baselines::{self, PtqMethod};
 use fp_xint::coordinator::{BatcherConfig, Coordinator, ExpansionScheduler, WorkerPool};
@@ -31,15 +34,16 @@ fn main() {
         Some("info") => cmd_info(),
         Some("metrics") => cmd_metrics(args),
         Some("trace") => cmd_trace(args),
+        Some("analyze") => cmd_analyze(args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
                 "fp-xint {} — low-bit series expansion PTQ\n\
-                 usage: fp-xint <quantize|serve|eval|info|metrics|trace> [--bits N] \n\
+                 usage: fp-xint <quantize|serve|eval|info|metrics|trace|analyze> [--bits N] \n\
                  [--w-terms K] [--a-terms T] [--model NAME] [--steps N] [--port P] \n\
-                 [--addr HOST:PORT] [--out FILE] [--verbose]",
+                 [--addr HOST:PORT] [--out FILE] [--deny warnings] [--self-test] [--verbose]",
                 fp_xint::VERSION
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -206,6 +210,61 @@ fn cmd_trace(mut args: Args) {
         std::process::exit(1);
     }
     println!("wrote {out} ({} bytes) — open in Perfetto or chrome://tracing", json.len());
+}
+
+fn cmd_analyze(mut args: Args) {
+    use fp_xint::analyze;
+    if args.flag("self-test") {
+        let report = analyze::selftest::run();
+        if report.failed.is_empty() {
+            println!("analyze self-test: {} checks passed", report.total);
+            return;
+        }
+        for f in &report.failed {
+            eprintln!("self-test failure: {f}");
+        }
+        eprintln!("analyze self-test: {}/{} checks failed", report.failed.len(), report.total);
+        std::process::exit(1);
+    }
+    let src = match args.get_opt("src") {
+        Some(s) => std::path::PathBuf::from(s),
+        None => match analyze::default_src_root() {
+            Some(p) => p,
+            None => {
+                eprintln!("cannot locate the crate sources; pass --src DIR");
+                std::process::exit(2);
+            }
+        },
+    };
+    let set = match analyze::SourceSet::load(&src) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot read sources under {}: {e}", src.display());
+            std::process::exit(2);
+        }
+    };
+    let findings = analyze::run_all(&set);
+    let report = analyze::render_report(&set, &findings);
+    // the JSON report always lands (stdout or --out) before any exit,
+    // so CI can archive it from failing runs too
+    match args.get_opt("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(&path, &report) {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+        None => println!("{report}"),
+    }
+    for f in &findings {
+        eprintln!("{}", f.render_line());
+    }
+    let errors = findings.iter().filter(|f| f.level == analyze::Level::Error).count();
+    let warnings = findings.len() - errors;
+    eprintln!("analyze: {} files, {errors} errors, {warnings} warnings", set.files.len());
+    if errors > 0 || (warnings > 0 && args.get("deny", "") == "warnings") {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_info() {

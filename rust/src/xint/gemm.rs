@@ -128,11 +128,22 @@ pub fn int_gemm_a_bt(a: &IntTensor, b: &IntTensor) -> Vec<i64> {
 /// Exactness rests on the [`INT_DOT_MAX_ABS`] envelope (stated and
 /// bounded there); debug builds assert it on both operands. Basis
 /// planes use X ≤ 8 in practice, well inside it.
+/// Debug-assert every value sits inside the ±`bound` envelope — the
+/// shared guard for [`int_dot`]'s operands and `PackedPlane::pack`'s
+/// input plane, so the two sites can't drift apart.
+#[inline]
+pub fn debug_assert_envelope(vals: &[i32], bound: i32, what: &str) {
+    debug_assert!(
+        vals.iter().all(|&v| v.abs() <= bound),
+        "{what}: value outside the ±{bound} envelope"
+    );
+}
+
 #[inline]
 pub fn int_dot(a: &[i32], b: &[i32]) -> i64 {
     debug_assert_eq!(a.len(), b.len());
-    debug_assert!(a.iter().all(|&v| v.abs() <= INT_DOT_MAX_ABS));
-    debug_assert!(b.iter().all(|&v| v.abs() <= INT_DOT_MAX_ABS));
+    debug_assert_envelope(a, INT_DOT_MAX_ABS, "int_dot lhs");
+    debug_assert_envelope(b, INT_DOT_MAX_ABS, "int_dot rhs");
     const CHUNK: usize = 256;
     let mut acc: i64 = 0;
     let mut ai = a.chunks_exact(CHUNK);
@@ -530,6 +541,20 @@ mod tests {
         let b = IntTensor::from_vec(&[1, k], vec![2047; k]);
         let c = int_gemm_a_bt(&a, &b);
         assert_eq!(c[0], 2047i64 * 2047 * k as i64);
+    }
+
+    #[test]
+    fn int_dot_exact_at_envelope_boundary() {
+        // |v| == INT_DOT_MAX_ABS with K crossing many 256-chunks: each
+        // i32 partial reaches its proven bound d²·CHUNK = 2^30 exactly
+        // (runs in release CI, where overflow would wrap silently)
+        let n = 256 * 64 + 17;
+        let a: Vec<i32> =
+            (0..n).map(|i| if i % 3 == 0 { -INT_DOT_MAX_ABS } else { INT_DOT_MAX_ABS }).collect();
+        let b: Vec<i32> =
+            (0..n).map(|i| if i % 5 == 0 { -INT_DOT_MAX_ABS } else { INT_DOT_MAX_ABS }).collect();
+        let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+        assert_eq!(int_dot(&a, &b), want);
     }
 
     /// The decomposed fast path must equal the dense dequantize-then-matmul

@@ -314,4 +314,32 @@ mod tests {
             assert_eq!(dot_i8(kernel, &a, &b), want, "{kernel:?}");
         }
     }
+
+    #[test]
+    fn fold_boundary_crossing_stays_exact() {
+        // straddle the i64 fold trigger at maximal magnitude: the first
+        // FOLD_CHUNKS 32-lane chunks grow the i32 lanes to the proven
+        // bound 4·127²·FOLD_CHUNKS, then 35 extra elements force a
+        // partial chunk after the fold (runs in release CI, so the
+        // overflow check is the arithmetic itself, not a debug_assert)
+        let n = 32 * FOLD_CHUNKS + 35;
+        let mut a = vec![127i8; n];
+        let mut b = vec![-127i8; n];
+        for (i, v) in a.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = -127;
+            }
+        }
+        for (i, v) in b.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v = 127;
+            }
+        }
+        let want = reference(&a, &b);
+        for kernel in [Kernel::Portable, active_kernel()] {
+            assert_eq!(dot_i8(kernel, &a, &b), want, "{kernel:?}");
+            let got = dot4_i8(kernel, &a, [&b, &b, &b, &b]);
+            assert_eq!(got.to_vec(), vec![want; 4], "dot4 {kernel:?}");
+        }
+    }
 }

@@ -8,7 +8,7 @@
 //! and the i8 rows quarter the memory traffic of the scalar kernel.
 
 use crate::tensor::IntTensor;
-use crate::xint::gemm::INT_DOT_MAX_ABS;
+use crate::xint::gemm::{debug_assert_envelope, INT_DOT_MAX_ABS};
 
 /// i8-pack eligibility envelope: every plane value must satisfy
 /// `|v| ≤ PACK_MAX_ABS` (= 127). This is strictly tighter than the
@@ -43,15 +43,12 @@ impl PackedPlane {
         assert_eq!(dims.len(), 2, "PackedPlane wants a rank-2 plane");
         let (rows, k) = (dims[0], dims[1]);
         assert!(k > 0, "PackedPlane wants a nonzero inner dim");
+        debug_assert_envelope(plane.data(), INT_DOT_MAX_ABS, "PackedPlane::pack");
         let mut data = Vec::with_capacity(rows * k);
         let mut row_sums = Vec::with_capacity(rows);
         for src in plane.data().chunks_exact(k) {
             let mut sum = 0i64;
             for &v in src {
-                debug_assert!(
-                    v.abs() <= INT_DOT_MAX_ABS,
-                    "plane value {v} outside the INT-dot envelope"
-                );
                 if v.abs() > PACK_MAX_ABS {
                     return None;
                 }
@@ -125,5 +122,21 @@ mod tests {
         assert!(PackedPlane::pack(&edge).is_some());
         let edge_neg = IntTensor::from_vec(&[2, 32], vec![-127i32; 64]);
         assert!(PackedPlane::pack(&edge_neg).is_some());
+    }
+
+    #[test]
+    fn boundary_plane_packs_exact_at_maximal_k() {
+        // |v| == PACK_MAX_ABS across a K far past one AVX2 fold cadence:
+        // the envelope's worst case for packing and the i64 row sums
+        let k = 200_000;
+        let vals: Vec<i32> =
+            (0..2 * k).map(|i| if i % 3 == 0 { -PACK_MAX_ABS } else { PACK_MAX_ABS }).collect();
+        let plane = IntTensor::from_vec(&[2, k], vals.clone());
+        let p = PackedPlane::pack(&plane).expect("edge values are inside the envelope");
+        for r in 0..2 {
+            let want: i64 = vals[r * k..(r + 1) * k].iter().map(|&v| v as i64).sum();
+            assert_eq!(p.row_sums()[r], want, "row {r}");
+            assert_eq!(p.row(r)[k - 1] as i32, vals[(r + 1) * k - 1]);
+        }
     }
 }

@@ -10,21 +10,21 @@ convention — and rust/vendor/ are exempt) and enforces:
                     silently escapes every loom model.
   no-println        println!/eprintln! only in the CLI (main.rs) and the
                     logger sink; library code logs through `log`.
-  ordering-comment  every Ordering::{Relaxed,Acquire,Release,AcqRel,
-                    SeqCst} choice carries a `// ordering:` rationale on
-                    the same line or within the 8 preceding lines.
   unwrap-ratchet    .unwrap()/.expect( counts on the serve/coordinator
                     hot path may only go down, never up, per file
                     (baseline: scripts/invariants_allowlist.json;
                     refresh a legitimate reduction with --write-baseline).
-  spankind-append   the SpanKind numbering is wire format (packed into
-                    ring slots and exported): pinned variants keep their
-                    names and discriminants; new ones append.
   blocking-io       socket-facing code (files referencing std::net) may
                     not call .read_exact(/.write_all( outside the
                     blocking-client module serve/protocol.rs — one
                     blocking call on the reactor thread stalls every
                     connection it owns.
+
+Two former rules moved to the token-level analyzer (`fp-xint analyze`,
+see ANALYSIS.md) and are NOT enforced here anymore: `ordering-comment`
+(now the atomics pass, which also checks acquire/release pairing the
+regex version never could) and `spankind-append` (now cross-checked
+against the wire-constant registry in the protocol pass).
 
 Exit 0 when clean; exit 1 with `file:line: [rule] message` per finding.
 `--self-test` runs every rule against known-good and known-bad samples
@@ -44,9 +44,6 @@ ALLOWLIST_PATH = Path(__file__).resolve().parent / "invariants_allowlist.json"
 TEST_CUT_RE = re.compile(r"^#\[cfg\(test\)\]|^#\[cfg\(all\(test")
 SYNC_RE = re.compile(r"std::sync::atomic|std::thread")
 PRINTLN_RE = re.compile(r"(?<![\w!])e?println!")
-ORDERING_RE = re.compile(r"Ordering::(Relaxed|Acquire|Release|AcqRel|SeqCst)")
-ORDERING_COMMENT = "// ordering:"
-ORDERING_WINDOW = 8
 UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
 BLOCKING_IO_RE = re.compile(r"\.read_exact\(|\.write_all\(")
 NET_RE = re.compile(r"std::net")
@@ -57,28 +54,6 @@ SYNC_SHIM_FILE = "util/sync.rs"
 BLOCKING_IO_EXEMPT = "serve/protocol.rs"
 PRINTLN_ALLOWED = {"main.rs", "util/logger.rs"}
 RATCHET_DIRS = ("serve/", "coordinator/")
-
-SPANKIND_FILE = "obs/recorder.rs"
-# The wire-stable prefix of the SpanKind numbering. Appending here (with
-# the next discriminant) when a variant is added IS the review gate —
-# renaming or renumbering an existing entry is the bug this rule exists
-# to catch.
-SPANKIND_PINNED = [
-    ("Request", 0),
-    ("Decode", 1),
-    ("Admission", 2),
-    ("QueueWait", 3),
-    ("BatchForm", 4),
-    ("Schedule", 5),
-    ("WorkerTerm", 6),
-    ("Reduce", 7),
-    ("Reply", 8),
-    ("LayerGrid", 9),
-    ("Accept", 10),
-    ("Write", 11),
-    ("Refine", 12),
-]
-SPANKIND_VARIANT_RE = re.compile(r"^\s*(\w+)\s*=\s*(\d+)\s*,")
 
 
 def non_test_region(lines):
@@ -121,19 +96,6 @@ def check_println(rel, lines, cut):
     return out
 
 
-def check_ordering_comments(rel, lines, cut):
-    out = []
-    for i, line in enumerate(lines[:cut]):
-        if is_comment(line) or not ORDERING_RE.search(line):
-            continue
-        window = lines[max(0, i - ORDERING_WINDOW):i + 1]
-        if not any(ORDERING_COMMENT in w for w in window):
-            out.append((i + 1, "ordering-comment",
-                        f"memory-ordering choice without a '{ORDERING_COMMENT}' "
-                        f"rationale within {ORDERING_WINDOW} lines"))
-    return out
-
-
 def unwrap_count(lines, cut):
     return sum(len(UNWRAP_RE.findall(line))
                for line in lines[:cut] if not is_comment(line))
@@ -172,47 +134,6 @@ def check_blocking_io(rel, lines, cut):
     return out
 
 
-def parse_spankind(lines):
-    variants, in_enum = [], False
-    for line in lines:
-        if re.match(r"^pub enum SpanKind\b", line):
-            in_enum = True
-            continue
-        if in_enum:
-            if line.startswith("}"):
-                break
-            m = SPANKIND_VARIANT_RE.match(line)
-            if m:
-                variants.append((m.group(1), int(m.group(2))))
-    return variants
-
-
-def check_spankind(lines):
-    variants = parse_spankind(lines)
-    if not variants:
-        return [(1, "spankind-append", "could not parse the SpanKind enum")]
-    out = []
-    for idx, (name, disc) in enumerate(SPANKIND_PINNED):
-        if idx >= len(variants):
-            out.append((1, "spankind-append",
-                        f"pinned variant {name} = {disc} was removed"))
-        elif variants[idx] != (name, disc):
-            out.append((1, "spankind-append",
-                        f"pinned variant {name} = {disc} became "
-                        f"{variants[idx][0]} = {variants[idx][1]} — the "
-                        f"numbering is wire format; append instead"))
-    for idx in range(len(SPANKIND_PINNED), len(variants)):
-        name, disc = variants[idx]
-        if disc != idx:
-            out.append((1, "spankind-append",
-                        f"appended variant {name} must take the next "
-                        f"discriminant {idx}, not {disc}"))
-        else:
-            print(f"note: SpanKind gained {name} = {disc}; pin it in "
-                  f"SPANKIND_PINNED of this script", file=sys.stderr)
-    return out
-
-
 def scan(baseline):
     findings = []
     for path in sorted(SRC.rglob("*.rs")):
@@ -222,10 +143,8 @@ def scan(baseline):
         for lineno, rule, msg in (
             check_sync_shim(rel, lines, cut)
             + check_println(rel, lines, cut)
-            + check_ordering_comments(rel, lines, cut)
             + check_unwrap_ratchet(rel, lines, cut, baseline)
             + check_blocking_io(rel, lines, cut)
-            + (check_spankind(lines) if rel == SPANKIND_FILE else [])
         ):
             findings.append((f"rust/src/{rel}", lineno, rule, msg))
     return findings
@@ -260,32 +179,7 @@ BAD_THREAD = "fn f() { std::thread::sleep(std::time::Duration::from_secs(1)); }\
 TEST_GATED_SYNC = "#[cfg(test)]\nmod tests {\n    use std::sync::atomic::AtomicU64;\n}\n"
 BAD_PRINTLN = 'fn f() { println!("x"); }\n'
 BAD_EPRINTLN = 'fn f() { eprintln!("x"); }\n'
-BAD_ORDERING = """\
-use crate::util::sync::atomic::{AtomicU64, Ordering};
-fn f(c: &AtomicU64) -> u64 {
-    c.load(Ordering::Acquire)
-}
-"""
-FAR_COMMENT_ORDERING = (
-    "// ordering: Acquire — too far away to count.\n"
-    + "\n" * 9
-    + "fn f(c: &AtomicU64) -> u64 { c.load(Ordering::Acquire) }\n"
-)
-CMP_ORDERING = "fn f(a: u32, b: u32) -> bool { a.cmp(&b) == std::cmp::Ordering::Equal }\n"
 UNWRAPPY = "fn f(x: Option<u32>) -> u32 { x.unwrap() + x.expect(\"y\") }\n"
-SPANKIND_OK = (
-    "pub enum SpanKind {\n"
-    + "".join(f"    {n} = {d},\n" for n, d in SPANKIND_PINNED)
-    + "}\n"
-)
-SPANKIND_APPENDED = (
-    "pub enum SpanKind {\n"
-    + "".join(f"    {n} = {d},\n" for n, d in SPANKIND_PINNED)
-    + f"    NewStage = {len(SPANKIND_PINNED)},\n"
-    + "}\n"
-)
-SPANKIND_RENUMBERED = SPANKIND_OK.replace("Reduce = 7", "Reduce = 11")
-SPANKIND_RENAMED = SPANKIND_OK.replace("Decode = 1", "Parse = 1")
 BAD_BLOCKING = (
     "use std::net::TcpStream;\n"
     'fn f(s: &mut TcpStream) { s.write_all(b"x").unwrap(); }\n'
@@ -304,8 +198,8 @@ TEST_GATED_BLOCKING = (
 def self_test():
     cases = [
         # (description, rule fn over split lines, expect finding rules)
-        ("clean atomic passes", lambda ls: check_sync_shim("a.rs", ls, len(ls))
-         + check_ordering_comments("a.rs", ls, len(ls)), GOOD_ATOMIC, []),
+        ("clean atomic passes", lambda ls: check_sync_shim("a.rs", ls, len(ls)),
+         GOOD_ATOMIC, []),
         ("std::sync::atomic caught", lambda ls: check_sync_shim("a.rs", ls, len(ls)),
          BAD_SYNC, ["sync-shim"]),
         ("std::thread caught", lambda ls: check_sync_shim("a.rs", ls, len(ls)),
@@ -320,13 +214,6 @@ def self_test():
          BAD_EPRINTLN, ["no-println"]),
         ("cli println allowed", lambda ls: check_println("main.rs", ls, len(ls)),
          BAD_PRINTLN, []),
-        ("bare Ordering caught", lambda ls: check_ordering_comments("a.rs", ls, len(ls)),
-         BAD_ORDERING, ["ordering-comment"]),
-        ("comment past window caught",
-         lambda ls: check_ordering_comments("a.rs", ls, len(ls)),
-         FAR_COMMENT_ORDERING, ["ordering-comment"]),
-        ("cmp::Ordering ignored", lambda ls: check_ordering_comments("a.rs", ls, len(ls)),
-         CMP_ORDERING, []),
         ("ratchet holds at baseline",
          lambda ls: check_unwrap_ratchet("serve/a.rs", ls, len(ls), {"serve/a.rs": 2}),
          UNWRAPPY, []),
@@ -347,12 +234,6 @@ def self_test():
         ("test region blocking exempt",
          lambda ls: check_blocking_io("serve/server.rs", ls, non_test_region(ls)),
          TEST_GATED_BLOCKING, []),
-        ("spankind snapshot passes", lambda ls: check_spankind(ls), SPANKIND_OK, []),
-        ("spankind append allowed", lambda ls: check_spankind(ls), SPANKIND_APPENDED, []),
-        ("spankind renumber caught", lambda ls: check_spankind(ls),
-         SPANKIND_RENUMBERED, ["spankind-append"]),
-        ("spankind rename caught", lambda ls: check_spankind(ls),
-         SPANKIND_RENAMED, ["spankind-append"]),
     ]
     failed = 0
     for desc, fn, text, expect in cases:
